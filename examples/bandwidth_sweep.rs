@@ -1,0 +1,80 @@
+//! Bandwidth sweep: time-to-accuracy across uplink rates.
+//!
+//! Sweeps the nominal uplink bandwidth over the LPWAN-to-LTE range of
+//! Table I and reports, for FedScalar vs FedAvg vs QSGD, the simulated
+//! wall-clock time (eq. 12) needed to reach a target test accuracy — the
+//! "wall-clock time-to-accuracy" gold-standard metric the paper's
+//! introduction argues for.
+//!
+//!     cargo run --release --example bandwidth_sweep
+//!     cargo run --release --example bandwidth_sweep -- --target 0.8 --rounds 800
+
+use fedscalar::algo::Method;
+use fedscalar::config::{DataSource, ExperimentConfig};
+use fedscalar::coordinator::engine::run_pure_rust;
+use fedscalar::error::Result;
+use fedscalar::rng::VDistribution;
+use fedscalar::util::cli::Args;
+use fedscalar::util::stats;
+
+fn main() -> Result<()> {
+    fedscalar::util::logger::init_from_env();
+    let a = Args::new("bandwidth_sweep", "time-to-accuracy across uplink rates")
+        .opt("target", "0.85", "target test accuracy")
+        .opt("rounds", "1000", "max rounds per run")
+        .opt("alpha", "0.01", "local stepsize")
+        .parse(std::env::args().skip(1))?;
+    let target = a.get_f64("target")?;
+
+    let bandwidths_kbps = [1.0, 10.0, 50.0, 100.0, 1000.0];
+    let methods = [
+        Method::FedScalar {
+            dist: VDistribution::Rademacher,
+            projections: 1,
+        },
+        Method::Qsgd { bits: 8 },
+        Method::FedAvg,
+    ];
+
+    println!(
+        "time to {:.0}% accuracy (simulated seconds, eq. 12; TDMA, N=20, lognormal fading)\n",
+        target * 100.0
+    );
+    print!("{:<14}", "bandwidth");
+    for m in &methods {
+        print!("{:>22}", m.name());
+    }
+    println!();
+
+    for &kbps in &bandwidths_kbps {
+        print!("{:<14}", format!("{kbps} kbps"));
+        for &method in &methods {
+            let mut cfg = ExperimentConfig::paper_section_iii();
+            cfg.data = DataSource::Synthetic; // artifact-free example
+            cfg.fed.rounds = a.get_usize("rounds")?;
+            cfg.fed.eval_every = 10;
+            cfg.fed.alpha = a.get_f64("alpha")? as f32;
+            cfg.fed.method = method;
+            cfg.network.channel.nominal_bps = kbps * 1000.0;
+            let h = run_pure_rust(&cfg, 0)?;
+            let t = stats::first_crossing(
+                &h.series(|r| r.cum_sim_seconds),
+                &h.series(|r| r.test_acc),
+                target,
+            );
+            match t {
+                Some(secs) => print!("{:>20.1} s", secs),
+                None => print!(
+                    "{:>22}",
+                    format!("never ({:.0}%)", h.final_accuracy() * 100.0)
+                ),
+            }
+        }
+        println!();
+    }
+    println!(
+        "\nFedScalar's 64-bit upload makes time-to-accuracy nearly bandwidth-\n\
+         independent; FedAvg and QSGD degrade with the uplink rate (Table I dynamics)."
+    );
+    Ok(())
+}

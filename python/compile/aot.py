@@ -1,0 +1,149 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+Run once by `make artifacts`; Python never runs on the round path. The Rust
+runtime (rust/src/runtime/) loads these with HloModuleProto::from_text_file,
+compiles them on the PJRT CPU client, and executes them for every federated
+round.
+
+HLO TEXT is the interchange format, NOT lowered.compile()/.serialize():
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Also dumps the synthetic Digits CSVs (shared bytes between Rust and the
+pytest suite) and a key=value manifest the Rust side validates against.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import fed, model
+
+# Shapes baked into the artifacts — the experiment configuration of the
+# paper's section III. The manifest records them; Rust refuses to run a
+# config that disagrees with the artifacts it loaded.
+NUM_AGENTS = 20       # N
+LOCAL_STEPS = 5       # S
+BATCH_SIZE = 32       # B
+EVAL_SIZE = 360       # 20% of 1800 synthetic Digits samples
+PARAM_DIM = model.PARAM_DIM  # d = 1990
+
+F32 = jnp.float32
+I32 = jnp.int32
+U32 = jnp.uint32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_points():
+    """name -> (fn, arg_specs). Argument ORDER is the Rust-side ABI."""
+    params = spec((PARAM_DIM,), F32)
+    xb = spec((LOCAL_STEPS, BATCH_SIZE, model.INPUT_DIM), F32)
+    yb = spec((LOCAL_STEPS, BATCH_SIZE), I32)
+    seed = spec((), U32)
+    alpha = spec((), F32)
+    rs = spec((NUM_AGENTS,), F32)
+    seeds = spec((NUM_AGENTS,), U32)
+    ex = spec((EVAL_SIZE, model.INPUT_DIM), F32)
+    ey = spec((EVAL_SIZE,), I32)
+
+    xbs = spec((NUM_AGENTS, LOCAL_STEPS, BATCH_SIZE, model.INPUT_DIM), F32)
+    ybs = spec((NUM_AGENTS, LOCAL_STEPS, BATCH_SIZE), I32)
+
+    eps = {}
+    for dist in fed.DISTRIBUTIONS:
+        eps[f"client_fedscalar_{dist}"] = (
+            functools.partial(fed.client_fedscalar, dist=dist),
+            (params, xb, yb, seed, alpha),
+        )
+        eps[f"client_fedscalar_batch_{dist}"] = (
+            functools.partial(fed.client_fedscalar_batch, dist=dist),
+            (params, xbs, ybs, seeds, alpha),
+        )
+        eps[f"server_reconstruct_{dist}"] = (
+            functools.partial(fed.server_reconstruct, dist=dist),
+            (rs, seeds),
+        )
+    eps["client_delta"] = (fed.client_delta, (params, xb, yb, alpha))
+    eps["eval"] = (fed.evaluate, (params, ex, ey))
+    return eps
+
+
+def build_artifacts(out_dir: str, verbose: bool = True) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+
+    # --- HLO artifacts ------------------------------------------------------
+    names = []
+    for name, (fn, specs) in entry_points().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        names.append(name)
+        if verbose:
+            print(f"  wrote {path} ({len(text)} chars)")
+
+    # --- dataset ------------------------------------------------------------
+    X, y = data_mod.make_digits()
+    xtr, ytr, xte, yte = data_mod.train_test_split(X, y)
+    assert xte.shape[0] == EVAL_SIZE, (xte.shape, EVAL_SIZE)
+    data_mod.dump_csv(os.path.join(out_dir, "digits_train.csv"), xtr, ytr)
+    data_mod.dump_csv(os.path.join(out_dir, "digits_test.csv"), xte, yte)
+    if verbose:
+        print(f"  wrote digits_train.csv ({xtr.shape[0]} rows), digits_test.csv ({xte.shape[0]} rows)")
+
+    # --- manifest (validated by rust runtime::artifacts) ---------------------
+    eval_note = "client_fedscalar_batch_* are optional fast-path entries (vmapped over N agents)"
+    manifest = [
+        f"param_dim={PARAM_DIM}",
+        f"num_agents={NUM_AGENTS}",
+        f"local_steps={LOCAL_STEPS}",
+        f"batch_size={BATCH_SIZE}",
+        f"eval_size={EVAL_SIZE}",
+        f"input_dim={model.INPUT_DIM}",
+        f"num_classes={model.NUM_CLASSES}",
+        f"entries={','.join(names)}",
+        f"note={eval_note}",
+    ]
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+    # stamp for Makefile freshness tracking
+    with open(os.path.join(out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+    if verbose:
+        print(f"  wrote manifest.txt + .stamp — {len(names)} HLO entry points")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    build_artifacts(args.out_dir, verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    main()

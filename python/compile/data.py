@@ -1,0 +1,192 @@
+"""Synthetic Digits-like dataset (substitute for sklearn.datasets.load_digits).
+
+The paper evaluates on sklearn's Digits: 8x8 grayscale images (64 features,
+pixel values 0..16), 10 classes, ~1800 samples. sklearn is not available in
+this environment, so we procedurally generate an equivalent corpus from ten
+hand-authored 8x8 glyph templates with per-sample intensity jitter, additive
+pixel noise, and +/-1 pixel translations. The generator is deterministic
+(numpy Generator with a fixed seed) and is dumped to CSV at artifact-build
+time so the Rust coordinator and the JAX test-suite consume byte-identical
+data. See DESIGN.md section 5 (Substitutions).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# 8x8 glyph templates, '#' = full intensity (16), '+' = half (8), '.' = off.
+# Drawn to mimic the low-res anti-aliased look of the original Digits scans.
+_GLYPHS = [
+    # 0
+    [".+###+..",
+     "+#...#+.",
+     "#+...+#.",
+     "#.....#.",
+     "#.....#.",
+     "#+...+#.",
+     "+#...#+.",
+     ".+###+.."],
+    # 1
+    ["...##...",
+     "..+##...",
+     ".+.##...",
+     "...##...",
+     "...##...",
+     "...##...",
+     "...##...",
+     ".+####+."],
+    # 2
+    [".+###+..",
+     "#+...#+.",
+     ".....##.",
+     "....+#..",
+     "...+#+..",
+     "..+#+...",
+     ".+#+....",
+     "+######."],
+    # 3
+    [".####+..",
+     "....+#+.",
+     ".....#+.",
+     "..+##+..",
+     ".....#+.",
+     ".....+#.",
+     "#+...+#.",
+     ".+###+.."],
+    # 4
+    ["....+#..",
+     "...+##..",
+     "..+#+#..",
+     ".+#.+#..",
+     "+#..+#..",
+     "########",
+     "....+#..",
+     "....+#.."],
+    # 5
+    ["+#####..",
+     "+#......",
+     "+#......",
+     "+####+..",
+     ".....#+.",
+     "......#.",
+     "+#...+#.",
+     ".+###+.."],
+    # 6
+    ["..+###..",
+     ".+#+....",
+     "+#......",
+     "+####+..",
+     "+#...#+.",
+     "#.....#.",
+     "+#...#+.",
+     ".+###+.."],
+    # 7
+    ["#######.",
+     ".....+#.",
+     "....+#..",
+     "....#+..",
+     "...+#...",
+     "...#+...",
+     "..+#....",
+     "..##...."],
+    # 8
+    [".+###+..",
+     "+#...#+.",
+     "+#...#+.",
+     ".+###+..",
+     "+#...#+.",
+     "#.....#.",
+     "+#...#+.",
+     ".+###+.."],
+    # 9
+    [".+###+..",
+     "+#...#+.",
+     "#.....#.",
+     "+#...##.",
+     ".+###+#.",
+     "......#.",
+     "....+#+.",
+     "..###+.."],
+]
+
+_CHAR_VAL = {".": 0.0, "+": 8.0, "#": 16.0}
+
+NUM_CLASSES = 10
+IMG_SIDE = 8
+NUM_FEATURES = IMG_SIDE * IMG_SIDE  # 64
+
+
+def glyph_templates() -> np.ndarray:
+    """Return the ten class templates as a float32 array [10, 8, 8] in 0..16."""
+    t = np.zeros((NUM_CLASSES, IMG_SIDE, IMG_SIDE), dtype=np.float32)
+    for c, rows in enumerate(_GLYPHS):
+        assert len(rows) == IMG_SIDE
+        for i, row in enumerate(rows):
+            assert len(row) == IMG_SIDE
+            for j, ch in enumerate(row):
+                t[c, i, j] = _CHAR_VAL[ch]
+    return t
+
+
+def make_digits(
+    n_per_class: int = 180,
+    seed: int = 0,
+    noise_std: float = 1.5,
+    intensity_jitter: float = 0.3,
+    max_shift: int = 1,
+):
+    """Generate the synthetic Digits corpus.
+
+    Returns (X, y): X float32 [n_per_class*10, 64] normalized to [0, 1]
+    (raw pixel range 0..16 divided by 16, like common Digits preprocessing),
+    y int32 [n]. Samples are interleaved by class then shuffled.
+    """
+    rng = np.random.default_rng(seed)
+    templates = glyph_templates()
+    n = n_per_class * NUM_CLASSES
+    X = np.zeros((n, IMG_SIDE, IMG_SIDE), dtype=np.float32)
+    y = np.zeros((n,), dtype=np.int32)
+    idx = 0
+    for c in range(NUM_CLASSES):
+        for _ in range(n_per_class):
+            img = templates[c].copy()
+            # per-sample global intensity jitter
+            img *= 1.0 + rng.uniform(-intensity_jitter, intensity_jitter)
+            # small translation
+            if max_shift > 0:
+                dx = rng.integers(-max_shift, max_shift + 1)
+                dy = rng.integers(-max_shift, max_shift + 1)
+                img = np.roll(np.roll(img, dy, axis=0), dx, axis=1)
+            # additive pixel noise
+            img += rng.normal(0.0, noise_std, size=img.shape)
+            img = np.clip(img, 0.0, 16.0)
+            X[idx] = img
+            y[idx] = c
+            idx += 1
+    perm = rng.permutation(n)
+    X = X[perm].reshape(n, NUM_FEATURES) / 16.0
+    y = y[perm]
+    return X.astype(np.float32), y.astype(np.int32)
+
+
+def train_test_split(X: np.ndarray, y: np.ndarray, test_frac: float = 0.2, seed: int = 1):
+    """Deterministic stratified split. Returns (Xtr, ytr, Xte, yte)."""
+    rng = np.random.default_rng(seed)
+    train_idx, test_idx = [], []
+    for c in range(NUM_CLASSES):
+        cls = np.where(y == c)[0]
+        cls = cls[rng.permutation(len(cls))]
+        n_test = int(round(len(cls) * test_frac))
+        test_idx.extend(cls[:n_test].tolist())
+        train_idx.extend(cls[n_test:].tolist())
+    train_idx = np.array(sorted(train_idx))
+    test_idx = np.array(sorted(test_idx))
+    return X[train_idx], y[train_idx], X[test_idx], y[test_idx]
+
+
+def dump_csv(path: str, X: np.ndarray, y: np.ndarray) -> None:
+    """Write rows of `f0,...,f63,label` with full float precision."""
+    with open(path, "w") as f:
+        for row, label in zip(X, y):
+            f.write(",".join(repr(float(v)) for v in row))
+            f.write(f",{int(label)}\n")

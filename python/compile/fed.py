@@ -1,0 +1,91 @@
+"""L2: FedScalar client/server stages and baseline entry points (Algorithm 1).
+
+Every function here is an AOT entry point lowered to HLO text by aot.py and
+executed from the Rust coordinator. The seed round-trip property — the client
+artifact and the server artifact regenerate the *bit-identical* random vector
+v from the same 32-bit seed — holds because both lower the same
+jax.random.{normal,rademacher}(PRNGKey(seed), (d,)) threefry computation.
+
+Distributions (paper section II-A): 'normal' is the baseline analysis case;
+'rademacher' reduces the aggregation variance by (2/N^2) sum_n ||delta_n||^2
+(Proposition 2.1) and is the recommended default.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .kernels.projection import projection, pad_to_block
+from .kernels.reconstruct import reconstruct
+
+DISTRIBUTIONS = ("normal", "rademacher")
+
+
+def sample_v(seed, dist: str, dim: int = model.PARAM_DIM) -> jnp.ndarray:
+    """The shared random vector v_{k,n} ~ N(0, I) or Rademacher^d.
+
+    `seed` may be a traced uint32 scalar — it is an HLO input, which is what
+    lets the server regenerate v from the client's uploaded seed alone.
+    """
+    key = jax.random.PRNGKey(seed)
+    if dist == "normal":
+        return jax.random.normal(key, (dim,), jnp.float32)
+    if dist == "rademacher":
+        return jax.random.rademacher(key, (dim,), jnp.float32)
+    raise ValueError(f"unknown distribution {dist!r}")
+
+
+def client_fedscalar(params, xb, yb, seed, alpha, *, dist: str):
+    """ClientStage (Algorithm 1 lines 15-24): S local SGD steps, then encode.
+
+    Inputs: params f32[d], xb f32[S,B,64], yb int32[S,B], seed uint32[],
+    alpha f32[]. Returns (r f32[], mean_loss f32[], delta_sq_norm f32[]).
+
+    The third output is ||delta||^2 — it costs nothing extra, never leaves
+    the simulation boundary (it is NOT part of the 2-scalar wire payload),
+    and lets the harness report Prop 2.1's variance-gap term exactly.
+    """
+    delta, loss = model.local_sgd(params, xb, yb, alpha)
+    v = sample_v(seed, dist)
+    r = projection(pad_to_block(delta), pad_to_block(v))
+    return r, loss, jnp.sum(delta * delta)
+
+
+def server_reconstruct(rs, seeds, *, dist: str):
+    """Server aggregation (Algorithm 1 lines 7-12).
+
+    rs: f32[N], seeds: uint32[N] -> ghat f32[d] = (1/N) sum_n r_n v(seed_n).
+    """
+    vs = jax.vmap(lambda s: sample_v(s, dist))(seeds)
+    n = rs.shape[0]
+    ghat_pad = reconstruct(rs, pad_to_block(vs))
+    return ghat_pad[: model.PARAM_DIM] / n
+
+
+def client_fedscalar_batch(params, xbs, ybs, seeds, alpha, *, dist: str):
+    """All N client stages in ONE lowered computation (vmap over agents).
+
+    §Perf L2/L3 optimization: collapses the coordinator's N per-round PJRT
+    dispatches into one. xbs: f32[N,S,B,64], ybs: int32[N,S,B],
+    seeds: uint32[N]. Returns (rs f32[N], losses f32[N], dsqs f32[N]).
+    The math is per-agent identical to `client_fedscalar`.
+    """
+    fn = lambda xb, yb, seed: client_fedscalar(params, xb, yb, seed, alpha, dist=dist)
+    return jax.vmap(fn)(xbs, ybs, seeds)
+
+
+def client_delta(params, xb, yb, alpha):
+    """Baseline client stage: same local SGD, but the full d-vector leaves.
+
+    Used by FedAvg (ships delta verbatim) and QSGD (quantizes delta in the
+    Rust coordinator, which owns the wire-format accounting).
+    Returns (delta f32[d], mean_loss f32[]).
+    """
+    return model.local_sgd(params, xb, yb, alpha)
+
+
+def evaluate(params, x, y):
+    """(loss, accuracy) on a fixed evaluation split."""
+    return model.evaluate(params, x, y)

@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: fused affine (+ReLU) layer for the Digits MLP.
+
+The local-SGD client stage runs S forward/backward passes per round; the
+dense work is three small matmuls per pass. Each layer is fused into a single
+VMEM-resident kernel (x @ w + b, optionally ReLU) — all three layers of the
+64->24->12->10 model fit comfortably in one block, so no grid is needed.
+
+Autodiff: pallas_call has no registered VJP, so model.py wraps these in
+jax.custom_vjp with a pure-jnp backward pass (the standard pattern).
+
+interpret=True is mandatory for CPU PJRT execution (see projection.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref):
+    o_ref[...] = x_ref[...] @ w_ref[...] + b_ref[...]
+
+
+def _linear_relu_kernel(x_ref, w_ref, b_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...] @ w_ref[...] + b_ref[...], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("relu",))
+def fused_linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *, relu: bool = False) -> jnp.ndarray:
+    """Fused x @ w + b (+ ReLU). x: [B, IN], w: [IN, OUT], b: [OUT] -> [B, OUT]."""
+    batch, d_in = x.shape
+    d_in2, d_out = w.shape
+    assert d_in == d_in2, f"inner-dim mismatch {d_in} vs {d_in2}"
+    assert b.shape == (d_out,)
+    kernel = _linear_relu_kernel if relu else _linear_kernel
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, d_out), x.dtype),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: blocked scalar projection r = <delta, v>.
+
+This is the client-side encoding hot-spot of FedScalar (Algorithm 1, line 22):
+the d-dimensional local update difference is collapsed to ONE scalar by an
+inner product with the seeded random vector v.
+
+TPU mapping (DESIGN.md section 6): delta and v are streamed through VMEM in
+lane-aligned blocks; a scalar accumulator lives across the 1-D grid. On real
+TPU hardware the v block would be generated in-register from the seed via
+pltpu.prng_random_bits so v never touches HBM — mirroring the paper's point
+that v is never transmitted. Under interpret=True (CPU PJRT) we pass v in;
+the block schedule is identical.
+
+interpret=True is mandatory here: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 128-lane alignment; 2048 = 16 blocks for the padded d=1990 model.
+DEFAULT_BLOCK = 128
+
+
+def _projection_kernel(d_ref, v_ref, o_ref):
+    """Grid step i: o += sum(delta_block * v_block)."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    part = jnp.sum(d_ref[...] * v_ref[...])
+    o_ref[...] += part.reshape(o_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def projection(delta: jnp.ndarray, v: jnp.ndarray, *, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Blocked inner product of two 1-D vectors of equal, block-divisible size.
+
+    Returns a scalar f32. Callers zero-pad to a multiple of `block`
+    (padding contributes nothing to the dot product).
+    """
+    (d,) = delta.shape
+    assert v.shape == (d,), f"shape mismatch {delta.shape} vs {v.shape}"
+    assert d % block == 0, f"d={d} not a multiple of block={block}; pad first"
+    grid = d // block
+    out = pl.pallas_call(
+        _projection_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(delta, v)
+    return out[0]
+
+
+def pad_to_block(x: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Zero-pad the trailing axis of a 1-D or 2-D array to a block multiple."""
+    d = x.shape[-1]
+    rem = (-d) % block
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, rem)]
+    return jnp.pad(x, pad)

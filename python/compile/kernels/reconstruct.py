@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: blocked reconstruction sum_n r_n * v_n.
+
+Server-side decoding hot-spot of FedScalar (Algorithm 1, lines 9-12): the
+received scalars r[N] are projected back onto the regenerated random vectors
+V[N, d] and summed. Expressed as the mat-vec r^T @ V, tiled along d.
+
+TPU mapping (DESIGN.md section 6): each grid step holds the full r vector
+resident in VMEM (N=20 is tiny) and streams one [N, block] tile of V,
+producing one [block] output tile — a [1,N]x[N,block] MXU matmul per step.
+On real hardware the V tile is regenerated in VMEM from the seeds.
+
+interpret=True is mandatory for CPU PJRT execution (see projection.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _reconstruct_kernel(r_ref, v_ref, o_ref):
+    """Grid step j: o_block = r @ V[:, block_j]."""
+    o_ref[...] = r_ref[...] @ v_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def reconstruct(r: jnp.ndarray, vs: jnp.ndarray, *, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Blocked r^T @ V for r: [N], V: [N, D] (D block-divisible) -> [D]."""
+    (n,) = r.shape
+    n2, d = vs.shape
+    assert n == n2, f"N mismatch {n} vs {n2}"
+    assert d % block == 0, f"d={d} not a multiple of block={block}; pad first"
+    grid = d // block
+    return pl.pallas_call(
+        _reconstruct_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda j: (0,)),
+            pl.BlockSpec((n, block), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(r, vs)

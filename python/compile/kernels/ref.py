@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground-truth implementations the pytest/hypothesis suite checks
+every kernel against (assert_allclose). They are also what the Rust
+PureRustBackend mirrors, so any disagreement between layers is caught here.
+"""
+
+import jax.numpy as jnp
+
+
+def projection_ref(delta: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Scalar projection r = <delta, v> (paper eq. (3))."""
+    return jnp.vdot(delta, v)
+
+
+def reconstruct_ref(r: jnp.ndarray, vs: jnp.ndarray) -> jnp.ndarray:
+    """Unnormalized reconstruction sum_n r_n v_n (paper eq. (4) before 1/N).
+
+    r: [N], vs: [N, D] -> [D]
+    """
+    return r @ vs
+
+
+def linear_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Affine layer x @ w + b."""
+    return x @ w + b
+
+
+def linear_relu_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Fused affine + ReLU."""
+    return jnp.maximum(x @ w + b, 0.0)

@@ -1,0 +1,172 @@
+"""L2: the Digits MLP forward/backward in JAX, built on the L1 Pallas kernels.
+
+Architecture (paper section III): 64 -> 24 (ReLU) -> 12 (ReLU) -> 10 logits,
+softmax cross-entropy loss; d = 1990 trainable parameters ("approximately
+2000" in the paper). Parameters live as ONE flat f32[d] vector — that is the
+object FedScalar projects, FedAvg ships, and QSGD quantizes, and it keeps the
+Rust-side state management to a single Vec<f32>.
+
+Flat layout (row-major): w1[64,24] b1[24] w2[24,12] b2[12] w3[12,10] b3[10].
+The Rust nn::mlp module mirrors this layout and math exactly; the integration
+suite asserts cross-backend agreement on deltas.
+
+The fused Pallas layers are wrapped in jax.custom_vjp (pallas_call has no
+VJP); the backward pass is standard pure-jnp backprop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_linear import fused_linear
+
+INPUT_DIM = 64
+HIDDEN1 = 24
+HIDDEN2 = 12
+NUM_CLASSES = 10
+
+LAYER_SHAPES = [
+    (INPUT_DIM, HIDDEN1),
+    (HIDDEN1,),
+    (HIDDEN1, HIDDEN2),
+    (HIDDEN2,),
+    (HIDDEN2, NUM_CLASSES),
+    (NUM_CLASSES,),
+]
+
+PARAM_DIM = sum(int(jnp.prod(jnp.array(s))) for s in LAYER_SHAPES)  # 1990
+
+
+def unflatten(params: jnp.ndarray):
+    """Split the flat f32[PARAM_DIM] vector into (w1,b1,w2,b2,w3,b3)."""
+    out = []
+    off = 0
+    for shape in LAYER_SHAPES:
+        size = 1
+        for s in shape:
+            size *= s
+        out.append(params[off : off + size].reshape(shape))
+        off += size
+    assert off == PARAM_DIM
+    return tuple(out)
+
+
+def flatten(tensors) -> jnp.ndarray:
+    """Inverse of unflatten."""
+    return jnp.concatenate([t.reshape(-1) for t in tensors])
+
+
+# --- fused layers with custom VJP ------------------------------------------
+
+
+@jax.custom_vjp
+def linear(x, w, b):
+    return fused_linear(x, w, b, relu=False)
+
+
+def _linear_fwd(x, w, b):
+    return linear(x, w, b), (x, w)
+
+
+def _linear_bwd(res, g):
+    x, w = res
+    return g @ w.T, x.T @ g, jnp.sum(g, axis=0)
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)
+
+
+@jax.custom_vjp
+def linear_relu(x, w, b):
+    return fused_linear(x, w, b, relu=True)
+
+
+def _linear_relu_fwd(x, w, b):
+    y = linear_relu(x, w, b)
+    return y, (x, w, y)
+
+
+def _linear_relu_bwd(res, g):
+    x, w, y = res
+    g = jnp.where(y > 0, g, 0.0)
+    return g @ w.T, x.T @ g, jnp.sum(g, axis=0)
+
+
+linear_relu.defvjp(_linear_relu_fwd, _linear_relu_bwd)
+
+
+# --- model ------------------------------------------------------------------
+
+
+def forward(params: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits for a batch. params: f32[1990], x: f32[B, 64] -> f32[B, 10]."""
+    w1, b1, w2, b2, w3, b3 = unflatten(params)
+    h1 = linear_relu(x, w1, b1)
+    h2 = linear_relu(h1, w2, b2)
+    return linear(h2, w3, b3)
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax-CE. logits: [B, C], labels: int [B]."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+def loss_fn(params: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return softmax_cross_entropy(forward(params, x), y)
+
+
+grad_fn = jax.grad(loss_fn)
+value_and_grad_fn = jax.value_and_grad(loss_fn)
+
+
+def local_sgd(params: jnp.ndarray, xb: jnp.ndarray, yb: jnp.ndarray, alpha) -> tuple:
+    """S plain SGD steps (Algorithm 1, ClientStage lines 18-21).
+
+    xb: f32[S, B, 64], yb: int32[S, B]. Returns (delta f32[1990], mean_loss).
+    delta = psi_S - psi_0 — the quantity FedScalar projects.
+    """
+
+    def step(p, batch):
+        bx, by = batch
+        loss, g = value_and_grad_fn(p, bx, by)
+        return p - alpha * g, loss
+
+    final, losses = jax.lax.scan(step, params, (xb, yb))
+    return final - params, jnp.mean(losses)
+
+
+def accuracy(params: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    preds = jnp.argmax(forward(params, x), axis=-1)
+    return jnp.mean((preds == y).astype(jnp.float32))
+
+
+def evaluate(params: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray):
+    """(loss, accuracy) on a fixed evaluation set."""
+    logits = forward(params, x)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    loss = jnp.mean(logz - picked)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+def init_params(seed: int = 0) -> jnp.ndarray:
+    """Glorot-uniform weights, zero biases, as one flat vector.
+
+    Mirrored bit-for-bit *in spirit* by rust nn::init (both use the same
+    limit sqrt(6/(fan_in+fan_out))); exact RNG streams differ, which is fine
+    because params are always passed across the boundary explicitly.
+    """
+    key = jax.random.PRNGKey(seed)
+    tensors = []
+    for shape in LAYER_SHAPES:
+        if len(shape) == 2:
+            key, sub = jax.random.split(key)
+            limit = (6.0 / (shape[0] + shape[1])) ** 0.5
+            tensors.append(jax.random.uniform(sub, shape, jnp.float32, -limit, limit))
+        else:
+            tensors.append(jnp.zeros(shape, jnp.float32))
+    return flatten(tensors)

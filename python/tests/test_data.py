@@ -1,0 +1,80 @@
+"""Synthetic Digits substrate: determinism, class balance, learnability."""
+
+import os
+
+import numpy as np
+
+from compile import data as data_mod
+
+
+def test_templates_shape_and_range():
+    t = data_mod.glyph_templates()
+    assert t.shape == (10, 8, 8)
+    assert t.min() >= 0 and t.max() <= 16
+    # every class template is distinct
+    flat = t.reshape(10, -1)
+    for i in range(10):
+        for j in range(i + 1, 10):
+            assert not np.array_equal(flat[i], flat[j]), (i, j)
+
+
+def test_make_digits_shapes_and_normalization():
+    X, y = data_mod.make_digits(n_per_class=20, seed=0)
+    assert X.shape == (200, 64)
+    assert y.shape == (200,)
+    assert X.dtype == np.float32 and y.dtype == np.int32
+    assert X.min() >= 0.0 and X.max() <= 1.0
+    counts = np.bincount(y, minlength=10)
+    assert (counts == 20).all()
+
+
+def test_make_digits_deterministic():
+    X1, y1 = data_mod.make_digits(n_per_class=10, seed=3)
+    X2, y2 = data_mod.make_digits(n_per_class=10, seed=3)
+    np.testing.assert_array_equal(X1, X2)
+    np.testing.assert_array_equal(y1, y2)
+    X3, _ = data_mod.make_digits(n_per_class=10, seed=4)
+    assert not np.array_equal(X1, X3)
+
+
+def test_split_stratified_and_disjoint():
+    X, y = data_mod.make_digits(n_per_class=50, seed=1)
+    xtr, ytr, xte, yte = data_mod.train_test_split(X, y, test_frac=0.2)
+    assert xtr.shape[0] == 400 and xte.shape[0] == 100
+    assert (np.bincount(yte, minlength=10) == 10).all()
+    # disjoint: no test row appears in train
+    tr_set = {tuple(r) for r in xtr.round(6)}
+    overlap = sum(tuple(r) in tr_set for r in xte.round(6))
+    assert overlap == 0
+
+
+def test_nearest_template_is_informative():
+    """Nearest shifted-template classification beats chance by a wide margin —
+    the corpus is learnable, as the paper's >90% accuracy curves require.
+    (Samples are randomly translated by +/-1 px, so the template bank holds
+    all 9 shifts of each glyph.)"""
+    X, y = data_mod.make_digits(n_per_class=30, seed=2)
+    t = data_mod.glyph_templates()
+    bank, labels = [], []
+    for c in range(10):
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                bank.append(np.roll(np.roll(t[c], dy, axis=0), dx, axis=1).reshape(64) / 16.0)
+                labels.append(c)
+    bank = np.stack(bank)
+    labels = np.array(labels)
+    preds = labels[np.argmin(((X[:, None, :] - bank[None]) ** 2).sum(-1), axis=1)]
+    acc = (preds == y).mean()
+    assert acc > 0.8, acc
+
+
+def test_dump_csv_roundtrip(tmp_path):
+    X, y = data_mod.make_digits(n_per_class=3, seed=5)
+    path = os.path.join(tmp_path, "d.csv")
+    data_mod.dump_csv(path, X, y)
+    rows = open(path).read().strip().split("\n")
+    assert len(rows) == 30
+    first = rows[0].split(",")
+    assert len(first) == 65
+    np.testing.assert_allclose(np.array(first[:64], np.float32), X[0], rtol=1e-6)
+    assert int(first[64]) == y[0]

@@ -1,0 +1,198 @@
+"""FedScalar client/server stages: seed round-trip, unbiasedness, variance.
+
+These tests validate the paper's core claims at the JAX layer:
+  - Lemma 2.1  E[<v, g> v] = g       (unbiased reconstruction)
+  - Lemma 2.2  E[||<v, g> v||^2] <= (d+4) ||g||^2   (Gaussian second moment)
+  - Prop. 2.1  Var_Gauss - Var_Rademacher = (2/N^2) sum ||delta||^2  (per-coord)
+  - the seed round-trip: client and server regenerate bit-identical v.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import fed, model
+
+
+def _params_and_batches(seed=0, s=2, b=8):
+    rng = np.random.default_rng(seed)
+    p = model.init_params(seed)
+    xb = jnp.asarray(rng.uniform(0, 1, size=(s, b, model.INPUT_DIM)).astype(np.float32))
+    yb = jnp.asarray(rng.integers(0, 10, size=(s, b)).astype(np.int32))
+    return p, xb, yb
+
+
+# --- seed round-trip ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("dist", fed.DISTRIBUTIONS)
+def test_seed_roundtrip_bit_identical(dist):
+    """sample_v in a 'client' jit and a 'server' vmapped jit agree exactly."""
+    seeds = jnp.asarray([0, 1, 42, 2**31, 2**32 - 1], jnp.uint32)
+    client_side = jax.jit(lambda s: fed.sample_v(s, dist))
+    server_side = jax.jit(jax.vmap(lambda s: fed.sample_v(s, dist)))
+    vs_server = np.asarray(server_side(seeds))
+    for i, s in enumerate(np.asarray(seeds)):
+        v_client = np.asarray(client_side(jnp.uint32(s)))
+        np.testing.assert_array_equal(v_client, vs_server[i])
+
+
+def test_distinct_seeds_distinct_vectors():
+    a = np.asarray(fed.sample_v(jnp.uint32(1), "normal"))
+    b = np.asarray(fed.sample_v(jnp.uint32(2), "normal"))
+    assert not np.array_equal(a, b)
+
+
+def test_rademacher_is_pm_one():
+    v = np.asarray(fed.sample_v(jnp.uint32(7), "rademacher"))
+    assert set(np.unique(v)).issubset({-1.0, 1.0})
+
+
+def test_sample_v_rejects_unknown_dist():
+    with pytest.raises(ValueError):
+        fed.sample_v(jnp.uint32(0), "uniform")
+
+
+# --- unbiasedness (Lemma 2.1) and second moment (Lemma 2.2) -------------------
+
+
+@pytest.mark.parametrize("dist", fed.DISTRIBUTIONS)
+def test_reconstruction_unbiased_monte_carlo(dist):
+    """E[<delta, v> v] ~= delta across many seeds."""
+    d = 64
+    rng = np.random.default_rng(0)
+    delta = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    m = 4000
+    fn = jax.jit(jax.vmap(lambda s: fed.sample_v(s, dist, dim=d)))
+    vs = fn(jnp.arange(m, dtype=jnp.uint32))
+    est = np.asarray(jnp.mean((vs @ delta)[:, None] * vs, axis=0))
+    err = np.linalg.norm(est - np.asarray(delta)) / np.linalg.norm(np.asarray(delta))
+    # MC error ~ sqrt(d/m); generous factor
+    assert err < 0.35, err
+
+
+def test_gaussian_second_moment_bound():
+    """E[||<v,g>v||^2] <= (d+4)||g||^2 (Lemma 2.2), checked by Monte Carlo."""
+    d = 32
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    m = 6000
+    vs = jax.vmap(lambda s: fed.sample_v(s, "normal", dim=d))(jnp.arange(m, dtype=jnp.uint32))
+    sq = np.asarray(jnp.sum(((vs @ g)[:, None] * vs) ** 2, axis=1))
+    bound = (d + 4) * float(jnp.sum(g * g))
+    assert sq.mean() <= bound * 1.05  # 5% MC slack
+
+
+def test_rademacher_projection_variance_below_gaussian():
+    """Empirical Var[r v] per coordinate: Rademacher < Gaussian (Prop 2.1).
+
+    Exact second moments (Isserlis / direct expansion), N = 1:
+      Gaussian:   E[x_i^2] = ||delta||^2 + 2 delta_i^2
+      Rademacher: E[x_i^2] = ||delta||^2
+    so the per-coordinate mean trace gap is exactly 2 ||delta||^2 / d —
+    Proposition 2.1 with N = 1.
+    """
+    d = 32
+    rng = np.random.default_rng(2)
+    delta = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    m = 40_000
+    seeds = jnp.arange(m, dtype=jnp.uint32)
+
+    def recon_e2(dist):
+        vs = jax.vmap(lambda s: fed.sample_v(s, dist, dim=d))(seeds)
+        recon = (vs @ delta)[:, None] * vs  # [m, d]
+        return float(jnp.mean(recon**2))
+
+    eg = recon_e2("normal")
+    er = recon_e2("rademacher")
+    assert er < eg, (er, eg)
+    gap = eg - er
+    want = 2.0 * float(jnp.sum(delta * delta)) / d
+    assert abs(gap - want) / want < 0.5, (gap, want)
+    # absolute levels match the exact formulas too
+    dsq = float(jnp.sum(delta * delta))
+    assert abs(er - dsq) / dsq < 0.05, (er, dsq)
+    want_g = dsq * (1.0 + 2.0 / d)
+    assert abs(eg - want_g) / want_g < 0.05, (eg, want_g)
+
+
+# --- client/server composition ------------------------------------------------
+
+
+@pytest.mark.parametrize("dist", fed.DISTRIBUTIONS)
+def test_client_fedscalar_equals_manual_composition(dist):
+    p, xb, yb = _params_and_batches(seed=3)
+    seed = jnp.uint32(123)
+    alpha = jnp.float32(0.01)
+    r, loss, dsq = fed.client_fedscalar(p, xb, yb, seed, alpha, dist=dist)
+    delta, loss2 = model.local_sgd(p, xb, yb, alpha)
+    v = fed.sample_v(seed, dist)
+    np.testing.assert_allclose(float(r), float(jnp.vdot(delta, v)), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(loss), float(loss2), rtol=1e-6)
+    np.testing.assert_allclose(float(dsq), float(jnp.sum(delta * delta)), rtol=1e-5)
+
+
+@pytest.mark.parametrize("dist", fed.DISTRIBUTIONS)
+def test_server_reconstruct_matches_manual(dist):
+    n = 5
+    rng = np.random.default_rng(4)
+    rs = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    seeds = jnp.asarray(rng.integers(0, 2**32, size=n, dtype=np.uint32))
+    ghat = fed.server_reconstruct(rs, seeds, dist=dist)
+    want = jnp.zeros((model.PARAM_DIM,), jnp.float32)
+    for i in range(n):
+        want = want + rs[i] * fed.sample_v(seeds[i], dist)
+    want = want / n
+    np.testing.assert_allclose(np.asarray(ghat), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_single_round_descends_in_expectation():
+    """The decoded update r*v, averaged over many seeds, points along delta.
+
+    cos(ghat, delta) concentrates around 1/sqrt(1 + d/m): for d = 1990 and
+    m = 8192 that is ~0.90; we assert a conservative 0.7. (local_sgd is run
+    once; the seed average only exercises the encode/decode pair, whose
+    composition with local_sgd is covered above.)
+    """
+    p, xb, yb = _params_and_batches(seed=5, s=3, b=16)
+    alpha = jnp.float32(0.02)
+    delta, _ = model.local_sgd(p, xb, yb, alpha)
+    m = 8192
+    seeds = jnp.arange(m, dtype=jnp.uint32)
+
+    def one(seed):
+        v = fed.sample_v(seed, "rademacher")
+        return jnp.vdot(delta, v) * v
+
+    ghat = jnp.mean(jax.vmap(one)(seeds), axis=0)
+    cos = float(jnp.vdot(ghat, delta) / (jnp.linalg.norm(ghat) * jnp.linalg.norm(delta)))
+    assert cos > 0.7, cos
+
+
+@pytest.mark.parametrize("dist", fed.DISTRIBUTIONS)
+def test_client_batch_matches_per_client_loop(dist):
+    """The vmapped fast-path artifact computes exactly the per-client stage."""
+    n = 3
+    rng = np.random.default_rng(8)
+    p = model.init_params(1)
+    xbs = jnp.asarray(rng.uniform(0, 1, size=(n, 2, 8, model.INPUT_DIM)).astype(np.float32))
+    ybs = jnp.asarray(rng.integers(0, 10, size=(n, 2, 8)).astype(np.int32))
+    seeds = jnp.asarray(rng.integers(0, 2**32, size=n, dtype=np.uint32))
+    alpha = jnp.float32(0.01)
+    rs_b, losses_b, dsqs_b = fed.client_fedscalar_batch(p, xbs, ybs, seeds, alpha, dist=dist)
+    for i in range(n):
+        r, loss, dsq = fed.client_fedscalar(p, xbs[i], ybs[i], seeds[i], alpha, dist=dist)
+        np.testing.assert_allclose(float(rs_b[i]), float(r), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(float(losses_b[i]), float(loss), rtol=1e-5)
+        np.testing.assert_allclose(float(dsqs_b[i]), float(dsq), rtol=1e-4)
+
+
+def test_client_delta_is_local_sgd():
+    p, xb, yb = _params_and_batches(seed=6)
+    d1, l1 = fed.client_delta(p, xb, yb, jnp.float32(0.01))
+    d2, l2 = model.local_sgd(p, xb, yb, jnp.float32(0.01))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    assert float(l1) == float(l2)

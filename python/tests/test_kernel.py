@@ -1,0 +1,155 @@
+"""L1 kernels vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes (and the projection/reconstruct block sizes) and
+asserts allclose against ref.py for every kernel. Anything that disagrees
+here would silently corrupt every federated round downstream.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_linear import fused_linear
+from compile.kernels.projection import projection, pad_to_block
+from compile.kernels.reconstruct import reconstruct
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# --- projection --------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=32),
+    block=st.sampled_from([8, 64, 128, 256]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_projection_matches_ref(blocks, block, seed):
+    rng = _rng(seed)
+    d = blocks * block
+    delta = rng.normal(size=d).astype(np.float32)
+    v = rng.normal(size=d).astype(np.float32)
+    got = projection(jnp.asarray(delta), jnp.asarray(v), block=block)
+    want = ref.projection_ref(jnp.asarray(delta), jnp.asarray(v))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-4)
+
+
+def test_projection_zero_vector():
+    d = 256
+    z = jnp.zeros((d,), jnp.float32)
+    v = jnp.ones((d,), jnp.float32)
+    assert float(projection(z, v)) == 0.0
+
+
+def test_projection_orthogonal():
+    # e_0 . e_1 = 0, e_0 . e_0 = 1
+    d = 128
+    e0 = jnp.zeros((d,)).at[0].set(1.0)
+    e1 = jnp.zeros((d,)).at[1].set(1.0)
+    assert float(projection(e0, e1)) == 0.0
+    assert float(projection(e0, e0)) == 1.0
+
+
+def test_projection_rejects_unpadded():
+    with pytest.raises(AssertionError):
+        projection(jnp.zeros((100,)), jnp.zeros((100,)), block=128)
+
+
+def test_pad_to_block_1d_and_2d():
+    x = jnp.ones((5,))
+    p = pad_to_block(x, 8)
+    assert p.shape == (8,)
+    assert float(jnp.sum(p)) == 5.0
+    x2 = jnp.ones((3, 5))
+    p2 = pad_to_block(x2, 8)
+    assert p2.shape == (3, 8)
+    # already aligned: returned unchanged
+    assert pad_to_block(jnp.ones((16,)), 8).shape == (16,)
+
+
+def test_projection_padding_is_transparent():
+    rng = _rng(7)
+    d = 1990
+    delta = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    got = projection(pad_to_block(delta), pad_to_block(v))
+    np.testing.assert_allclose(got, ref.projection_ref(delta, v), rtol=2e-5, atol=1e-4)
+
+
+# --- reconstruct --------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=24),
+    blocks=st.integers(min_value=1, max_value=8),
+    block=st.sampled_from([8, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_reconstruct_matches_ref(n, blocks, block, seed):
+    rng = _rng(seed)
+    d = blocks * block
+    r = rng.normal(size=n).astype(np.float32)
+    vs = rng.normal(size=(n, d)).astype(np.float32)
+    got = reconstruct(jnp.asarray(r), jnp.asarray(vs), block=block)
+    want = ref.reconstruct_ref(jnp.asarray(r), jnp.asarray(vs))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-4)
+
+
+def test_reconstruct_single_agent_is_scale():
+    rng = _rng(3)
+    v = rng.normal(size=(1, 256)).astype(np.float32)
+    r = np.array([2.5], np.float32)
+    got = np.asarray(reconstruct(jnp.asarray(r), jnp.asarray(v)))
+    np.testing.assert_allclose(got, 2.5 * v[0], rtol=1e-6)
+
+
+def test_reconstruct_linearity():
+    """reconstruct(a+b, V) == reconstruct(a, V) + reconstruct(b, V)."""
+    rng = _rng(11)
+    n, d = 6, 384
+    a = rng.normal(size=n).astype(np.float32)
+    b = rng.normal(size=n).astype(np.float32)
+    vs = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    lhs = reconstruct(jnp.asarray(a + b), vs)
+    rhs = reconstruct(jnp.asarray(a), vs) + reconstruct(jnp.asarray(b), vs)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+
+# --- fused linear --------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(min_value=1, max_value=48),
+    d_in=st.integers(min_value=1, max_value=64),
+    d_out=st.integers(min_value=1, max_value=32),
+    relu=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fused_linear_matches_ref(batch, d_in, d_out, relu, seed):
+    rng = _rng(seed)
+    x = rng.normal(size=(batch, d_in)).astype(np.float32)
+    w = rng.normal(size=(d_in, d_out)).astype(np.float32)
+    b = rng.normal(size=d_out).astype(np.float32)
+    got = fused_linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), relu=relu)
+    oracle = ref.linear_relu_ref if relu else ref.linear_ref
+    want = oracle(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5)
+
+
+def test_fused_linear_relu_clamps():
+    x = jnp.asarray([[-1.0, -2.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros((2,), jnp.float32)
+    out = np.asarray(fused_linear(x, w, b, relu=True))
+    assert (out >= 0).all()
+    np.testing.assert_allclose(out, [[0.0, 0.0]])

@@ -1,0 +1,146 @@
+"""L2 model: shapes, flat-layout round-trip, gradients vs a pure-jnp twin."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def _pure_forward(params, x):
+    """Reference forward with no Pallas anywhere (autodiffed by jax.grad)."""
+    w1, b1, w2, b2, w3, b3 = model.unflatten(params)
+    h1 = jnp.maximum(x @ w1 + b1, 0.0)
+    h2 = jnp.maximum(h1 @ w2 + b2, 0.0)
+    return h2 @ w3 + b3
+
+
+def _pure_loss(params, x, y):
+    return model.softmax_cross_entropy(_pure_forward(params, x), y)
+
+
+def _batch(seed, b=8):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 1, size=(b, model.INPUT_DIM)).astype(np.float32)
+    y = rng.integers(0, model.NUM_CLASSES, size=b).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def test_param_dim_is_1990():
+    assert model.PARAM_DIM == 1990  # paper: "approximately 2000"
+
+
+def test_flatten_unflatten_roundtrip():
+    p = model.init_params(0)
+    assert p.shape == (model.PARAM_DIM,)
+    again = model.flatten(model.unflatten(p))
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(again))
+
+
+def test_forward_shape_and_finite():
+    p = model.init_params(1)
+    x, _ = _batch(0, b=17)
+    logits = model.forward(p, x)
+    assert logits.shape == (17, model.NUM_CLASSES)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_forward_matches_pure_jnp(seed):
+    p = model.init_params(seed % 5)
+    x, _ = _batch(seed)
+    np.testing.assert_allclose(
+        model.forward(p, x), _pure_forward(p, x), rtol=2e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_grad_matches_pure_jnp(seed):
+    """custom_vjp through the Pallas layers == jax.grad of the jnp twin."""
+    p = model.init_params(seed % 3)
+    x, y = _batch(seed)
+    g_pallas = model.grad_fn(p, x, y)
+    g_pure = jax.grad(_pure_loss)(p, x, y)
+    np.testing.assert_allclose(g_pallas, g_pure, rtol=5e-4, atol=1e-5)
+
+
+def test_grad_numerical_spotcheck():
+    """Central-difference check on a few random coordinates."""
+    p = model.init_params(2)
+    x, y = _batch(42, b=4)
+    g = np.asarray(model.grad_fn(p, x, y))
+    rng = np.random.default_rng(0)
+    eps = 1e-3
+    for idx in rng.integers(0, model.PARAM_DIM, size=6):
+        e = np.zeros(model.PARAM_DIM, np.float32)
+        e[idx] = eps
+        hi = float(model.loss_fn(p + e, x, y))
+        lo = float(model.loss_fn(p - e, x, y))
+        fd = (hi - lo) / (2 * eps)
+        assert abs(fd - g[idx]) < 5e-3, (idx, fd, g[idx])
+
+
+def test_local_sgd_reduces_loss_and_returns_delta():
+    p = model.init_params(3)
+    rng = np.random.default_rng(1)
+    s, b = 5, 32
+    xb = jnp.asarray(rng.uniform(0, 1, size=(s, b, model.INPUT_DIM)).astype(np.float32))
+    yb = jnp.asarray(rng.integers(0, 10, size=(s, b)).astype(np.int32))
+    delta, loss = model.local_sgd(p, xb, yb, 0.05)
+    assert delta.shape == (model.PARAM_DIM,)
+    assert float(loss) > 0
+    # after applying delta, loss on the same batches should not be higher
+    before = float(model.loss_fn(p, xb[0], yb[0]))
+    after = float(model.loss_fn(p + delta, xb[0], yb[0]))
+    assert after < before
+
+
+def test_local_sgd_zero_lr_is_noop():
+    p = model.init_params(4)
+    rng = np.random.default_rng(2)
+    xb = jnp.asarray(rng.uniform(0, 1, size=(2, 4, model.INPUT_DIM)).astype(np.float32))
+    yb = jnp.asarray(rng.integers(0, 10, size=(2, 4)).astype(np.int32))
+    delta, _ = model.local_sgd(p, xb, yb, 0.0)
+    np.testing.assert_array_equal(np.asarray(delta), np.zeros(model.PARAM_DIM, np.float32))
+
+
+def test_local_sgd_matches_manual_loop():
+    p = model.init_params(5)
+    rng = np.random.default_rng(3)
+    s, b, alpha = 3, 8, 0.01
+    xb = rng.uniform(0, 1, size=(s, b, model.INPUT_DIM)).astype(np.float32)
+    yb = rng.integers(0, 10, size=(s, b)).astype(np.int32)
+    delta, _ = model.local_sgd(p, jnp.asarray(xb), jnp.asarray(yb), alpha)
+    q = p
+    for i in range(s):
+        q = q - alpha * model.grad_fn(q, jnp.asarray(xb[i]), jnp.asarray(yb[i]))
+    np.testing.assert_allclose(np.asarray(p + delta), np.asarray(q), rtol=1e-5, atol=1e-6)
+
+
+def test_evaluate_perfect_and_chance():
+    p = model.init_params(6)
+    x, y = _batch(9, b=64)
+    loss, acc = model.evaluate(p, x, y)
+    assert 0.0 <= float(acc) <= 1.0
+    assert float(loss) > 0.0
+
+
+def test_init_params_glorot_bounds():
+    p = np.asarray(model.init_params(7))
+    w1 = p[: 64 * 24]
+    limit = (6.0 / (64 + 24)) ** 0.5
+    assert (np.abs(w1) <= limit + 1e-6).all()
+    # biases are zero
+    b1 = p[64 * 24 : 64 * 24 + 24]
+    np.testing.assert_array_equal(b1, 0.0)
+
+
+def test_init_params_deterministic_and_seed_sensitive():
+    a = np.asarray(model.init_params(8))
+    b = np.asarray(model.init_params(8))
+    c = np.asarray(model.init_params(9))
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)

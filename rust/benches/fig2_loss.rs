@@ -1,0 +1,35 @@
+//! Bench: regenerate paper **Fig. 2** — training loss vs round for
+//! FedScalar-{Normal,Rademacher} vs FedAvg vs QSGD (Digits, N=20, S=5,
+//! B=32, alpha=0.003; K and run count via FEDSCALAR_BENCH_* env).
+//!
+//! Expected shape (paper): all four descend; Rademacher tracks at or below
+//! the Gaussian variant.
+
+use fedscalar::exp::bench_support::{print_series, run_paper_suite};
+
+fn main() {
+    let suite = run_paper_suite("fig2").expect("suite");
+    print_series(
+        "Fig 2: training loss vs round",
+        &suite,
+        "round",
+        |r| r.round as f64,
+        |r| r.train_loss,
+        12,
+    );
+    println!("\nfinal training loss:");
+    for (name, loss, _) in suite.summary_rows() {
+        println!("  {name:<28} {loss:.4}");
+    }
+    // shape check: every method's loss decreased
+    for (m, h) in &suite.per_method {
+        let first = h.records.first().unwrap().train_loss;
+        let last = h.records.last().unwrap().train_loss;
+        assert!(
+            last < first,
+            "{}: loss did not descend ({first} -> {last})",
+            m.name()
+        );
+    }
+    println!("\nshape check passed: all four methods descend (paper Fig 2)");
+}

@@ -1,0 +1,33 @@
+//! Bench: regenerate paper **Fig. 3** — test accuracy vs round for the
+//! four methods.
+//!
+//! Expected shape (paper): all four rise per ROUND at comparable rates
+//! (iteration efficiency is similar — the wins come on the system axes of
+//! Figs 4-6); FedScalar-Rademacher >= FedScalar-Normal.
+
+use fedscalar::exp::bench_support::{print_series, run_paper_suite};
+
+fn main() {
+    let suite = run_paper_suite("fig3").expect("suite");
+    print_series(
+        "Fig 3: test accuracy vs round",
+        &suite,
+        "round",
+        |r| r.round as f64,
+        |r| r.test_acc,
+        12,
+    );
+    println!("\nfinal test accuracy:");
+    for (name, _, acc) in suite.summary_rows() {
+        println!("  {name:<28} {:.2}%", acc * 100.0);
+    }
+    for (m, h) in &suite.per_method {
+        assert!(
+            h.final_accuracy() > 0.2,
+            "{} failed to learn: {}",
+            m.name(),
+            h.final_accuracy()
+        );
+    }
+    println!("\nshape check passed: all four methods learn (paper Fig 3)");
+}

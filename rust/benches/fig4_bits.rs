@@ -1,0 +1,62 @@
+//! Bench: regenerate paper **Fig. 4** — test accuracy vs cumulative uplink
+//! bits (log x-axis).
+//!
+//! Paper headline shape: FedScalar reaches >90% with ~1e5-1e6 bits while
+//! FedAvg/QSGD need ~1e8-1e9; at a 1e6-bit budget FedScalar is >90% and
+//! both baselines are near chance (FedAvg cannot even ship ONE full model
+//! per client within that budget: 20 x 1990 x 32 = 1.27e6 bits).
+
+use fedscalar::algo::Method;
+use fedscalar::exp::bench_support::{print_series, run_paper_suite};
+use fedscalar::rng::VDistribution;
+
+fn main() {
+    let suite = run_paper_suite("fig4").expect("suite");
+    print_series(
+        "Fig 4: accuracy vs cumulative uplink bits",
+        &suite,
+        "cum_bits",
+        |r| r.cum_bits,
+        |r| r.test_acc,
+        12,
+    );
+
+    println!("\naccuracy at communication budgets:");
+    println!("{:<28} {:>10} {:>10} {:>10}", "method", "1e6 bits", "1e8 bits", "1e9 bits");
+    for (m, h) in &suite.per_method {
+        let f = |b: f64| {
+            h.acc_at_bits(b)
+                .map(|a| format!("{:.1}%", a * 100.0))
+                .unwrap_or_else(|| "-".into())
+        };
+        println!("{:<28} {:>10} {:>10} {:>10}", m.name(), f(1e6), f(1e8), f(1e9));
+    }
+
+    println!("\nbits to reach 80% accuracy:");
+    for (name, bits) in suite.bits_to_accuracy(0.8) {
+        match bits {
+            Some(b) => println!("  {name:<28} {b:.3e} bits"),
+            None => println!("  {name:<28} not reached in this K"),
+        }
+    }
+
+    // shape check (paper's headline): at 1e6 bits FedScalar >> baselines
+    let fs = suite
+        .history(Method::FedScalar {
+            dist: VDistribution::Rademacher,
+            projections: 1,
+        })
+        .unwrap();
+    let fa = suite.history(Method::FedAvg).unwrap();
+    let fs_at = fs.acc_at_bits(1e6).unwrap_or(0.0);
+    let fa_at = fa.acc_at_bits(1e6).unwrap_or(0.0);
+    assert!(
+        fs_at > fa_at + 0.2,
+        "FedScalar@1e6bits={fs_at} should dominate FedAvg@1e6bits={fa_at}"
+    );
+    println!(
+        "\nshape check passed: @1e6 bits fedscalar={:.1}% vs fedavg={:.1}% (paper: >90% vs <10%)",
+        fs_at * 100.0,
+        fa_at * 100.0
+    );
+}

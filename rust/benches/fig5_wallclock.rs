@@ -1,0 +1,53 @@
+//! Bench: regenerate paper **Fig. 5** — test accuracy vs simulated
+//! wall-clock time (eq. 12: T = T_other + B/R, 0.1 Mbps lognormal uplink,
+//! TDMA).
+//!
+//! Paper headline shape: at t ~ 1250 s FedScalar ~84% while FedAvg ~18%
+//! and QSGD ~43% — FedScalar completes its K rounds almost immediately on
+//! the communication axis, the baselines are upload-bound.
+
+use fedscalar::algo::Method;
+use fedscalar::exp::bench_support::{print_series, run_paper_suite};
+use fedscalar::rng::VDistribution;
+
+fn main() {
+    let suite = run_paper_suite("fig5").expect("suite");
+    print_series(
+        "Fig 5: accuracy vs simulated wall-clock seconds",
+        &suite,
+        "sim_seconds",
+        |r| r.cum_sim_seconds,
+        |r| r.test_acc,
+        12,
+    );
+
+    println!("\naccuracy at the paper's t=1250 s readout:");
+    for (name, acc) in suite.acc_at(fedscalar::exp::figures::Axis::Seconds, 1250.0) {
+        match acc {
+            Some(a) => println!("  {name:<28} {:.2}%", a * 100.0),
+            None => println!("  {name:<28} (first eval after 1250 s)"),
+        }
+    }
+
+    let fs = suite
+        .history(Method::FedScalar {
+            dist: VDistribution::Rademacher,
+            projections: 1,
+        })
+        .unwrap();
+    let fa = suite.history(Method::FedAvg).unwrap();
+    let q = suite.history(Method::Qsgd { bits: 8 }).unwrap();
+    let at = |h: &fedscalar::metrics::RunHistory| h.acc_at_seconds(1250.0).unwrap_or(0.0);
+    let (a_fs, a_fa, a_q) = (at(fs), at(fa), at(q));
+    assert!(
+        a_fs > a_q && a_q >= a_fa - 0.05,
+        "ordering fedscalar({a_fs}) > qsgd({a_q}) >= fedavg({a_fa}) expected"
+    );
+    println!(
+        "\nshape check passed: @1250s fedscalar={:.1}% > qsgd={:.1}% >= fedavg={:.1}% \
+         (paper: 84.4% / 43.3% / 17.6%)",
+        a_fs * 100.0,
+        a_q * 100.0,
+        a_fa * 100.0
+    );
+}

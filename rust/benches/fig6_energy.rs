@@ -1,0 +1,54 @@
+//! Bench: regenerate paper **Fig. 6** — test accuracy vs communication
+//! energy (eq. 13: E = P_tx * B/R, P_tx = 2 W, log x-axis).
+//!
+//! Paper headline shape: around 50 J FedScalar ~91% while FedAvg ~7.8% and
+//! QSGD ~10.1% — the trends mirror Fig 4 because energy is proportional to
+//! transmitted bits at a given rate.
+
+use fedscalar::algo::Method;
+use fedscalar::exp::bench_support::{print_series, run_paper_suite};
+use fedscalar::exp::figures::Axis;
+use fedscalar::rng::VDistribution;
+
+fn main() {
+    let suite = run_paper_suite("fig6").expect("suite");
+    print_series(
+        "Fig 6: accuracy vs communication energy (joules)",
+        &suite,
+        "joules",
+        |r| r.cum_energy_joules,
+        |r| r.test_acc,
+        12,
+    );
+
+    println!("\naccuracy at energy budgets:");
+    println!("{:<28} {:>8} {:>8} {:>9}", "method", "5 J", "50 J", "500 J");
+    for (m, h) in &suite.per_method {
+        let f = |j: f64| {
+            h.acc_at_joules(j)
+                .map(|a| format!("{:.1}%", a * 100.0))
+                .unwrap_or_else(|| "-".into())
+        };
+        println!("{:<28} {:>8} {:>8} {:>9}", m.name(), f(5.0), f(50.0), f(500.0));
+    }
+    let _ = suite.acc_at(Axis::Joules, 50.0);
+
+    let fs = suite
+        .history(Method::FedScalar {
+            dist: VDistribution::Rademacher,
+            projections: 1,
+        })
+        .unwrap();
+    let fa = suite.history(Method::FedAvg).unwrap();
+    let fs50 = fs.acc_at_joules(50.0).unwrap_or(0.0);
+    let fa50 = fa.acc_at_joules(50.0).unwrap_or(0.0);
+    assert!(
+        fs50 > fa50 + 0.2,
+        "FedScalar@50J={fs50} should dominate FedAvg@50J={fa50}"
+    );
+    println!(
+        "\nshape check passed: @50J fedscalar={:.1}% vs fedavg={:.1}% (paper: 91.4% vs 7.8%)",
+        fs50 * 100.0,
+        fa50 * 100.0
+    );
+}

@@ -1,0 +1,152 @@
+//! Bench: L3 hot-path microbenchmarks — the per-round cost centers of the
+//! coordinator (client local stage, projection encode/decode, QSGD
+//! quantization, gemm kernels, batch gather) plus, when artifacts are
+//! present, the PJRT execute overhead of each HLO entry point.
+//!
+//! This is the profile the §Perf optimization pass iterates against; the
+//! before/after history lives in EXPERIMENTS.md §Perf.
+
+use fedscalar::algo::{LocalSgd, Projector, Quantizer};
+use fedscalar::data::synthetic::{generate, SyntheticConfig};
+use fedscalar::data::BatchSampler;
+use fedscalar::nn::{glorot_init, Mlp, ModelSpec};
+use fedscalar::rng::{fill_v, VDistribution, Xoshiro256};
+use fedscalar::runtime::{Backend, PureRustBackend, ScalarUpload, XlaBackend};
+use fedscalar::tensor;
+use fedscalar::util::bench::{header, Bench};
+use std::sync::Arc;
+
+fn main() {
+    let spec = ModelSpec::default();
+    let mlp = Mlp::new(spec.clone());
+    let d = mlp.param_dim();
+    let params = glorot_init(&spec, 0);
+    let mut rng = Xoshiro256::seed_from(1);
+    let (s_steps, batch) = (5usize, 32usize);
+    let xb: Vec<f32> = (0..s_steps * batch * 64).map(|_| rng.uniform_f32()).collect();
+    let yb: Vec<i32> = (0..s_steps * batch).map(|_| rng.below(10) as i32).collect();
+    let mut b = Bench::default();
+
+    header("L3 gemm kernels (the MLP's dense work)");
+    let w1 = &params[..64 * 24];
+    let x1 = &xb[..batch * 64];
+    let mut h1 = vec![0.0f32; batch * 24];
+    b.run("gemm_nn 32x64x24 (fwd layer1)", || {
+        tensor::gemm_nn(batch, 64, 24, x1, w1, &mut h1)
+    });
+    let g1 = vec![0.1f32; batch * 24];
+    let mut gw1 = vec![0.0f32; 64 * 24];
+    b.run("gemm_tn 32x64x24 (bwd dW1)", || {
+        gw1.fill(0.0);
+        tensor::gemm_tn_acc(batch, 64, 24, x1, &g1, &mut gw1)
+    });
+
+    header("client local stage (S=5 SGD steps, B=32)");
+    let mut sgd = LocalSgd::new(&mlp, s_steps, batch);
+    let mut delta = vec![0.0f32; d];
+    b.run("LocalSgd::run (pure-rust ClientStage)", || {
+        sgd.run(&mlp, &params, &xb, &yb, 0.003, &mut delta)
+    });
+
+    header("projection encode/decode at d=1990");
+    let mut proj = Projector::new(d, VDistribution::Rademacher);
+    b.run("fill_v rademacher", || {
+        let mut v = vec![0.0f32; d];
+        fill_v(42, VDistribution::Rademacher, &mut v);
+        v
+    });
+    b.run("encode (fill_v + dot)", || proj.encode(&delta, 42));
+    let mut ghat = vec![0.0f32; d];
+    b.run("decode_into (fill_v + axpy)", || {
+        proj.decode_into(&mut ghat, 42, &[0.7], 0.05)
+    });
+
+    header("QSGD 8-bit quantizer at d=1990");
+    let mut q = Quantizer::new(8, 0);
+    b.run("quantize", || q.quantize(&delta));
+    let packet = q.quantize(&delta);
+    let mut out = vec![0.0f32; d];
+    b.run("dequantize_into", || q.dequantize_into(&packet, &mut out));
+
+    header("batch gather (20 agents x S=5 x B=32)");
+    let data = Arc::new(generate(
+        &SyntheticConfig::default(),
+        0,
+    ));
+    let shard: Vec<usize> = (0..data.len() / 20).collect();
+    let mut sampler = BatchSampler::new(data, shard, 0);
+    let mut gx = vec![0.0f32; s_steps * batch * 64];
+    let mut gy = vec![0i32; s_steps * batch];
+    b.run("fill_local_batches", || {
+        sampler.fill_local_batches(s_steps, batch, &mut gx, &mut gy)
+    });
+
+    header("full pure-rust round (20 clients, fedscalar)");
+    let mut be = PureRustBackend::new(&spec);
+    be.set_shape(s_steps, batch);
+    b.run("20x client_fedscalar + reconstruct", || {
+        let mut ups = Vec::with_capacity(20);
+        for a in 0..20u32 {
+            ups.push(
+                be.client_fedscalar(&params, &xb, &yb, a, 0.003, VDistribution::Rademacher, 1)
+                    .unwrap(),
+            );
+        }
+        be.server_reconstruct(&ups, VDistribution::Rademacher).unwrap()
+    });
+
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        header("PJRT execute overhead (XLA backend, per entry point)");
+        let mut xla = XlaBackend::load("artifacts").expect("artifacts");
+        let mut bq = Bench::quick();
+        bq.run("xla client_fedscalar (1 call)", || {
+            xla.client_fedscalar(&params, &xb, &yb, 7, 0.003, VDistribution::Rademacher, 1)
+                .unwrap()
+        });
+        bq.run("xla client_delta (1 call)", || {
+            xla.client_delta(&params, &xb, &yb, 0.003).unwrap()
+        });
+        let ups: Vec<ScalarUpload> = (0..20)
+            .map(|i| ScalarUpload {
+                seed: i,
+                rs: vec![0.1],
+                loss: 0.0,
+                delta_sq: 0.0,
+            })
+            .collect();
+        bq.run("xla server_reconstruct (20 agents)", || {
+            xla.server_reconstruct(&ups, VDistribution::Rademacher).unwrap()
+        });
+        // §Perf: the vmapped batch artifact vs 20 individual dispatches
+        let mut xbs20 = Vec::with_capacity(20 * xb.len());
+        let mut ybs20 = Vec::with_capacity(20 * yb.len());
+        for _ in 0..20 {
+            xbs20.extend_from_slice(&xb);
+            ybs20.extend_from_slice(&yb);
+        }
+        let seeds20: Vec<u32> = (0..20).collect();
+        bq.run("xla 20x client_fedscalar (looped)", || {
+            seeds20
+                .iter()
+                .map(|&s| {
+                    xla.client_fedscalar(&params, &xb, &yb, s, 0.003, VDistribution::Rademacher, 1)
+                        .unwrap()
+                })
+                .count()
+        });
+        bq.run("xla client_fedscalar_batch (1 vmapped call)", || {
+            xla.client_fedscalar_batch(
+                &params,
+                &xbs20,
+                &ybs20,
+                &seeds20,
+                0.003,
+                VDistribution::Rademacher,
+                1,
+            )
+            .unwrap()
+        });
+    } else {
+        println!("\n(artifacts missing — skipping PJRT microbenches; run `make artifacts`)");
+    }
+}

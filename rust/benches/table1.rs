@@ -1,0 +1,40 @@
+//! Bench: regenerate paper **Table I** (total upload time, K=500, d=1000,
+//! N=20, four bandwidths x {concurrent, TDMA}, 1200 s budget) and verify
+//! every cell against the paper's numbers. Also times the closed-form
+//! computation itself.
+
+use fedscalar::exp::table1::{render, table1_rows, table1_rows_fedscalar};
+use fedscalar::util::bench::{header, Bench};
+
+fn main() {
+    header("Table I — total upload time (paper reproduction)");
+    let rows = table1_rows();
+    println!("{}", render(&rows, "FedAvg-style d-float upload (the paper's table)"));
+
+    // paper cells, exact: (upload/round, concurrent total, tdma total)
+    let expect = [
+        (32.0, 16_000.0, 320_000.0, true, true),
+        (3.2, 1_600.0, 32_000.0, true, true),
+        (0.64, 320.0, 6_400.0, false, true),
+        (0.32, 160.0, 3_200.0, false, true),
+    ];
+    for (r, e) in rows.iter().zip(expect) {
+        assert!((r.upload_per_round_s - e.0).abs() < 1e-9);
+        assert!((r.concurrent_total_s - e.1).abs() < 1e-6);
+        assert!((r.tdma_total_s - e.2).abs() < 1e-6);
+        assert_eq!(r.concurrent_violates, e.3);
+        assert_eq!(r.tdma_violates, e.4);
+    }
+    println!("all 4x2 cells + dagger pattern match the paper exactly\n");
+
+    println!(
+        "{}",
+        render(
+            &table1_rows_fedscalar(),
+            "Same scenario under FedScalar's 64-bit upload (never violates)"
+        )
+    );
+
+    let mut b = Bench::default();
+    b.run("table1 closed-form computation", || table1_rows());
+}

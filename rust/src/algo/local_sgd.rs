@@ -1,0 +1,150 @@
+//! ClientStage local optimizer (Algorithm 1, lines 15-21): S plain SGD
+//! steps from the broadcast parameters; returns delta = psi_S - psi_0.
+//!
+//! The PureRust backend runs this natively; the XLA backend executes the
+//! same loop lowered (lax.scan) inside the client HLO artifacts. Both
+//! consume identical [S, B, dim] batch buffers.
+
+use crate::nn::{Mlp, MlpScratch};
+use crate::tensor;
+
+/// Reusable local-SGD workspace.
+#[derive(Debug, Clone)]
+pub struct LocalSgd {
+    pub steps: usize,
+    pub batch: usize,
+    params: Vec<f32>,
+    grad: Vec<f32>,
+    scratch: MlpScratch,
+}
+
+impl LocalSgd {
+    pub fn new(mlp: &Mlp, steps: usize, batch: usize) -> Self {
+        LocalSgd {
+            steps,
+            batch,
+            params: vec![0.0; mlp.param_dim()],
+            grad: vec![0.0; mlp.param_dim()],
+            scratch: MlpScratch::new(&mlp.spec, batch),
+        }
+    }
+
+    /// Run S steps from `start` over the [S, B, dim]/[S, B] batch buffers.
+    /// Writes `delta` (psi_S - start) and returns the mean per-step loss
+    /// (the paper's Fig-2 "training loss" series averages this per round).
+    pub fn run(
+        &mut self,
+        mlp: &Mlp,
+        start: &[f32],
+        xb: &[f32],
+        yb: &[i32],
+        alpha: f32,
+        delta: &mut [f32],
+    ) -> f32 {
+        let d = mlp.param_dim();
+        let bd = self.batch * mlp.spec.input_dim;
+        assert_eq!(start.len(), d);
+        assert_eq!(delta.len(), d);
+        assert_eq!(xb.len(), self.steps * bd);
+        assert_eq!(yb.len(), self.steps * self.batch);
+        self.params.copy_from_slice(start);
+        let mut loss_sum = 0.0f32;
+        for s in 0..self.steps {
+            let x = &xb[s * bd..(s + 1) * bd];
+            let y = &yb[s * self.batch..(s + 1) * self.batch];
+            loss_sum += mlp.loss_and_grad(
+                &self.params,
+                x,
+                y,
+                self.batch,
+                &mut self.scratch,
+                &mut self.grad,
+            );
+            tensor::axpy(-alpha, &self.grad, &mut self.params);
+        }
+        tensor::sub(&self.params, start, delta);
+        loss_sum / self.steps as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{glorot_init, ModelSpec};
+    use crate::rng::Xoshiro256;
+
+    fn setup(steps: usize, batch: usize) -> (Mlp, Vec<f32>, Vec<f32>, Vec<i32>) {
+        let spec = ModelSpec::default();
+        let mlp = Mlp::new(spec.clone());
+        let params = glorot_init(&spec, 0);
+        let mut rng = Xoshiro256::seed_from(3);
+        let xb: Vec<f32> = (0..steps * batch * 64).map(|_| rng.uniform_f32()).collect();
+        let yb: Vec<i32> = (0..steps * batch).map(|_| rng.below(10) as i32).collect();
+        (mlp, params, xb, yb)
+    }
+
+    #[test]
+    fn zero_lr_zero_delta() {
+        let (mlp, params, xb, yb) = setup(3, 8);
+        let mut sgd = LocalSgd::new(&mlp, 3, 8);
+        let mut delta = vec![0.0; mlp.param_dim()];
+        let loss = sgd.run(&mlp, &params, &xb, &yb, 0.0, &mut delta);
+        assert!(loss > 0.0);
+        assert!(delta.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn matches_manual_unrolled_loop() {
+        let (mlp, params, xb, yb) = setup(4, 8);
+        let alpha = 0.01f32;
+        let mut sgd = LocalSgd::new(&mlp, 4, 8);
+        let mut delta = vec![0.0; mlp.param_dim()];
+        sgd.run(&mlp, &params, &xb, &yb, alpha, &mut delta);
+        // manual
+        let mut p = params.clone();
+        let mut grad = vec![0.0; mlp.param_dim()];
+        let mut scratch = MlpScratch::new(&mlp.spec, 8);
+        for s in 0..4 {
+            mlp.loss_and_grad(
+                &p,
+                &xb[s * 8 * 64..(s + 1) * 8 * 64],
+                &yb[s * 8..(s + 1) * 8],
+                8,
+                &mut scratch,
+                &mut grad,
+            );
+            tensor::axpy(-alpha, &grad, &mut p);
+        }
+        for i in 0..mlp.param_dim() {
+            assert!(
+                (params[i] + delta[i] - p[i]).abs() < 1e-6,
+                "i={i}"
+            );
+        }
+    }
+
+    #[test]
+    fn applying_delta_descends() {
+        let (mlp, params, xb, yb) = setup(5, 16);
+        let mut sgd = LocalSgd::new(&mlp, 5, 16);
+        let mut delta = vec![0.0; mlp.param_dim()];
+        sgd.run(&mlp, &params, &xb, &yb, 0.05, &mut delta);
+        let mut scratch = MlpScratch::new(&mlp.spec, 16);
+        let before = mlp.loss(&params, &xb[..16 * 64], &yb[..16], 16, &mut scratch);
+        let mut after_p = params.clone();
+        tensor::axpy(1.0, &delta, &mut after_p);
+        let after = mlp.loss(&after_p, &xb[..16 * 64], &yb[..16], 16, &mut scratch);
+        assert!(after < before, "before={before} after={after}");
+    }
+
+    #[test]
+    fn start_params_unmodified() {
+        let (mlp, params, xb, yb) = setup(2, 4);
+        let copy = params.clone();
+        let mut sgd = LocalSgd::new(&mlp, 2, 4);
+        let mut delta = vec![0.0; mlp.param_dim()];
+        sgd.run(&mlp, &params, &xb, &yb, 0.1, &mut delta);
+        assert_eq!(params, copy);
+        assert!(delta.iter().any(|&v| v != 0.0));
+    }
+}

@@ -1,0 +1,192 @@
+//! Strategy taxonomy + wire-format payload accounting.
+//!
+//! The uplink bit counts are the quantity every figure of the paper's
+//! evaluation turns on (Figs 4-6 x-axes, Table I rows): FedScalar uploads
+//! exactly two 32-bit scalars per agent per round regardless of d; FedAvg
+//! uploads d floats; QSGD uploads a norm + d 8-bit levels (+ sign packed in
+//! the level byte, as in the 8-bit QSGD configuration the paper benchmarks).
+
+use crate::rng::VDistribution;
+
+pub const BITS_PER_FLOAT: u64 = 32;
+pub const BITS_PER_SEED: u64 = 32;
+
+/// A federated optimization strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Algorithm 1. `projections` = m >= 1 independent random projections
+    /// per round (m = 1 is the paper's headline config; m > 1 is the §II
+    /// future-work extension trading upload for variance).
+    FedScalar {
+        dist: VDistribution,
+        projections: usize,
+    },
+    /// Classic FedAvg: the full d-dimensional update per agent per round.
+    FedAvg,
+    /// QSGD with `bits`-bit stochastic quantization (paper uses 8).
+    Qsgd { bits: u32 },
+}
+
+impl Method {
+    pub const PAPER_SET: [Method; 4] = [
+        Method::FedScalar {
+            dist: VDistribution::Normal,
+            projections: 1,
+        },
+        Method::FedScalar {
+            dist: VDistribution::Rademacher,
+            projections: 1,
+        },
+        Method::FedAvg,
+        Method::Qsgd { bits: 8 },
+    ];
+
+    /// Uplink payload in bits for ONE agent in ONE round, model dim `d`.
+    pub fn uplink_bits(&self, d: usize) -> u64 {
+        match self {
+            // m projected scalars + one seed (the m vectors derive from
+            // seed+j, so a single 32-bit seed suffices; m=1 reproduces the
+            // paper's "two scalars").
+            Method::FedScalar { projections, .. } => {
+                BITS_PER_SEED + (*projections as u64) * BITS_PER_FLOAT
+            }
+            Method::FedAvg => (d as u64) * BITS_PER_FLOAT,
+            // 32-bit norm + d levels at `bits` bits (sign folded into the
+            // level encoding)
+            Method::Qsgd { bits } => BITS_PER_FLOAT + (d as u64) * (*bits as u64),
+        }
+    }
+
+    /// Downlink payload (broadcast model) in bits — identical across
+    /// methods; the paper's analysis (and ours) focuses on the uplink
+    /// bottleneck.
+    pub fn downlink_bits(&self, d: usize) -> u64 {
+        (d as u64) * BITS_PER_FLOAT
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Method::FedScalar { dist, projections } => {
+                if *projections == 1 {
+                    format!("fedscalar-{}", dist.name())
+                } else {
+                    format!("fedscalar-{}-m{}", dist.name(), projections)
+                }
+            }
+            Method::FedAvg => "fedavg".to_string(),
+            Method::Qsgd { bits } => format!("qsgd{bits}"),
+        }
+    }
+
+    /// Parse `fedscalar-normal`, `fedscalar-rademacher[-m<k>]`, `fedavg`,
+    /// `qsgd<bits>` / `qsgd`.
+    pub fn parse(s: &str) -> Option<Method> {
+        let s = s.trim().to_ascii_lowercase();
+        if s == "fedavg" {
+            return Some(Method::FedAvg);
+        }
+        if let Some(rest) = s.strip_prefix("qsgd") {
+            let bits = if rest.is_empty() { 8 } else { rest.parse().ok()? };
+            if bits == 0 || bits > 32 {
+                return None;
+            }
+            return Some(Method::Qsgd { bits });
+        }
+        if let Some(rest) = s.strip_prefix("fedscalar-") {
+            let (dist_str, m) = match rest.split_once("-m") {
+                Some((d, m)) => (d, m.parse().ok()?),
+                None => (rest, 1usize),
+            };
+            if m == 0 {
+                return None;
+            }
+            let dist = VDistribution::parse(dist_str)?;
+            return Some(Method::FedScalar {
+                dist,
+                projections: m,
+            });
+        }
+        if s == "fedscalar" {
+            return Some(Method::FedScalar {
+                dist: VDistribution::Rademacher,
+                projections: 1,
+            });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fedscalar_upload_is_dimension_free() {
+        let m = Method::FedScalar {
+            dist: VDistribution::Normal,
+            projections: 1,
+        };
+        assert_eq!(m.uplink_bits(10), 64);
+        assert_eq!(m.uplink_bits(1990), 64); // two scalars, any d
+        assert_eq!(m.uplink_bits(1_000_000), 64);
+    }
+
+    #[test]
+    fn baseline_uploads_scale_with_d() {
+        assert_eq!(Method::FedAvg.uplink_bits(1990), 1990 * 32);
+        assert_eq!(Method::Qsgd { bits: 8 }.uplink_bits(1990), 32 + 1990 * 8);
+        // QSGD is ~4x smaller than FedAvg at 8 bits
+        let f = Method::FedAvg.uplink_bits(1990) as f64;
+        let q = Method::Qsgd { bits: 8 }.uplink_bits(1990) as f64;
+        assert!(f / q > 3.9 && f / q < 4.1);
+    }
+
+    #[test]
+    fn multi_projection_cost() {
+        let m = Method::FedScalar {
+            dist: VDistribution::Rademacher,
+            projections: 8,
+        };
+        assert_eq!(m.uplink_bits(1990), 32 + 8 * 32);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in [
+            Method::FedScalar {
+                dist: VDistribution::Normal,
+                projections: 1,
+            },
+            Method::FedScalar {
+                dist: VDistribution::Rademacher,
+                projections: 4,
+            },
+            Method::FedAvg,
+            Method::Qsgd { bits: 8 },
+            Method::Qsgd { bits: 4 },
+        ] {
+            assert_eq!(Method::parse(&m.name()), Some(m), "{}", m.name());
+        }
+        assert_eq!(
+            Method::parse("fedscalar"),
+            Some(Method::FedScalar {
+                dist: VDistribution::Rademacher,
+                projections: 1
+            })
+        );
+        assert_eq!(Method::parse("qsgd"), Some(Method::Qsgd { bits: 8 }));
+        assert_eq!(Method::parse("nonsense"), None);
+        assert_eq!(Method::parse("qsgd99"), None);
+        assert_eq!(Method::parse("fedscalar-normal-m0"), None);
+    }
+
+    #[test]
+    fn paper_set_has_four_methods() {
+        assert_eq!(Method::PAPER_SET.len(), 4);
+        let names: Vec<String> = Method::PAPER_SET.iter().map(|m| m.name()).collect();
+        assert!(names.contains(&"fedscalar-normal".to_string()));
+        assert!(names.contains(&"fedscalar-rademacher".to_string()));
+        assert!(names.contains(&"fedavg".to_string()));
+        assert!(names.contains(&"qsgd8".to_string()));
+    }
+}

@@ -1,0 +1,15 @@
+//! The paper's algorithms: FedScalar (Algorithm 1) with Normal/Rademacher
+//! projections and the multi-projection extension, plus the FedAvg and
+//! QSGD baselines it is evaluated against.
+
+pub mod local_sgd;
+pub mod method;
+pub mod projection;
+pub mod qsgd;
+pub mod svrg;
+
+pub use local_sgd::LocalSgd;
+pub use method::Method;
+pub use projection::{decode_into, encode, encode_multi, Projector};
+pub use qsgd::{QsgdPacket, Quantizer};
+pub use svrg::LocalSvrg;

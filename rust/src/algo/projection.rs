@@ -1,0 +1,251 @@
+//! Scalar encode/decode: the heart of FedScalar (paper eqs. (3)-(4)).
+//!
+//! * encode (client): `r_j = <delta, v(seed, j)>` — d multiplies, one scalar out.
+//! * decode (server): `ghat += weight * sum_j r_j * v(seed, j)` — regenerates
+//!   the same v from the same 32-bit seed, no d-dimensional transmission.
+//!
+//! This is the PureRust twin of the Pallas projection/reconstruct kernels;
+//! the XLA backend performs the identical operations inside the
+//! client/server HLO artifacts using threefry-seeded v.
+//!
+//! Multi-projection (m > 1, the paper's §II future-work extension): the m
+//! vectors derive from sub-seeds `subseed(seed, j)`, so the wire payload is
+//! still ONE seed plus m scalars.
+
+use crate::rng::{fill_v, SplitMix64, VDistribution};
+use crate::tensor;
+
+/// Derive the j-th projection sub-seed from the uploaded seed. j = 0 is the
+/// identity so single-projection FedScalar uses the wire seed directly.
+#[inline]
+pub fn subseed(seed: u32, j: usize) -> u32 {
+    if j == 0 {
+        seed
+    } else {
+        SplitMix64::derive(seed as u64, j as u64) as u32
+    }
+}
+
+/// Single projection: `r = <delta, v(seed)>`.
+pub fn encode(delta: &[f32], seed: u32, dist: VDistribution, v_scratch: &mut [f32]) -> f32 {
+    assert_eq!(delta.len(), v_scratch.len());
+    fill_v(seed, dist, v_scratch);
+    tensor::dot(delta, v_scratch)
+}
+
+/// m projections sharing one wire seed. `rs` must have length m.
+pub fn encode_multi(
+    delta: &[f32],
+    seed: u32,
+    dist: VDistribution,
+    v_scratch: &mut [f32],
+    rs: &mut [f32],
+) {
+    for (j, r) in rs.iter_mut().enumerate() {
+        *r = encode(delta, subseed(seed, j), dist, v_scratch);
+    }
+}
+
+/// Server-side reconstruction: `ghat += weight * sum_j rs[j] * v(seed, j)`.
+/// `weight` is typically `1 / (N * m)` (eq. (4) averaging plus the
+/// multi-projection mean).
+pub fn decode_into(
+    ghat: &mut [f32],
+    seed: u32,
+    rs: &[f32],
+    dist: VDistribution,
+    v_scratch: &mut [f32],
+    weight: f32,
+) {
+    assert_eq!(ghat.len(), v_scratch.len());
+    for (j, &r) in rs.iter().enumerate() {
+        fill_v(subseed(seed, j), dist, v_scratch);
+        tensor::axpy(weight * r, v_scratch, ghat);
+    }
+}
+
+/// Stateful helper bundling the scratch buffer (used by both the PureRust
+/// backend and the variance-ablation bench).
+#[derive(Debug, Clone)]
+pub struct Projector {
+    pub dist: VDistribution,
+    v: Vec<f32>,
+}
+
+impl Projector {
+    pub fn new(dim: usize, dist: VDistribution) -> Self {
+        Projector {
+            dist,
+            v: vec![0.0; dim],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.v.len()
+    }
+
+    pub fn encode(&mut self, delta: &[f32], seed: u32) -> f32 {
+        encode(delta, seed, self.dist, &mut self.v)
+    }
+
+    pub fn encode_multi(&mut self, delta: &[f32], seed: u32, rs: &mut [f32]) {
+        encode_multi(delta, seed, self.dist, &mut self.v, rs)
+    }
+
+    pub fn decode_into(&mut self, ghat: &mut [f32], seed: u32, rs: &[f32], weight: f32) {
+        decode_into(ghat, seed, rs, self.dist, &mut self.v, weight)
+    }
+
+    /// Reconstruct a single agent contribution `sum_j r_j v_j` into a fresh
+    /// vector (test/bench helper).
+    pub fn reconstruct(&mut self, seed: u32, rs: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.dim()];
+        self.decode_into(&mut out, seed, rs, 1.0);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::testkit;
+
+    #[test]
+    fn encode_decode_roundtrip_seed_consistency() {
+        // decode(encode(delta)) with one seed equals r * v elementwise
+        let d = 256;
+        let mut rng = Xoshiro256::seed_from(0);
+        let delta: Vec<f32> = (0..d).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        for dist in [VDistribution::Normal, VDistribution::Rademacher] {
+            let mut p = Projector::new(d, dist);
+            let r = p.encode(&delta, 42);
+            let recon = p.reconstruct(42, &[r]);
+            // recon = r * v; check <recon, v> = r * ||v||^2 by re-deriving v
+            let mut v = vec![0.0; d];
+            fill_v(42, dist, &mut v);
+            for i in 0..d {
+                assert!((recon[i] - r * v[i]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn unbiasedness_monte_carlo() {
+        // E[<delta, v> v] ~ delta (Lemma 2.1), both distributions
+        let d = 64;
+        let mut rng = Xoshiro256::seed_from(1);
+        let delta: Vec<f32> = (0..d).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        for dist in [VDistribution::Normal, VDistribution::Rademacher] {
+            let mut p = Projector::new(d, dist);
+            let mut est = vec![0.0f32; d];
+            let m = 6000;
+            for s in 0..m {
+                let r = p.encode(&delta, s);
+                p.decode_into(&mut est, s, &[r], 1.0 / m as f32);
+            }
+            let err: f32 = est
+                .iter()
+                .zip(&delta)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt();
+            let norm: f32 = tensor::norm_sq(&delta).sqrt();
+            assert!(err / norm < 0.35, "{dist:?}: rel err {}", err / norm);
+        }
+    }
+
+    #[test]
+    fn rademacher_second_moment_below_gaussian() {
+        // mean E[||r v||^2]: Rademacher = ||d||^2 exactly; Gaussian ~ (d+2)||d||^2 / d per coord
+        let d = 128;
+        let mut rng = Xoshiro256::seed_from(2);
+        let delta: Vec<f32> = (0..d).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let dsq = tensor::norm_sq(&delta) as f64;
+        let m = 3000;
+        let mut second = |dist: VDistribution| -> f64 {
+            let mut p = Projector::new(d, dist);
+            let mut acc = 0.0f64;
+            for s in 0..m {
+                let r = p.encode(&delta, s) as f64;
+                // ||r v||^2 = r^2 ||v||^2
+                let mut v = vec![0.0f32; d];
+                fill_v(s, dist, &mut v);
+                acc += r * r * tensor::norm_sq(&v) as f64;
+            }
+            acc / m as f64
+        };
+        let gauss = second(VDistribution::Normal);
+        let rad = second(VDistribution::Rademacher);
+        // Rademacher: ||v||^2 = d exactly, E[r^2] = ||delta||^2 -> d * dsq
+        assert!((rad / (d as f64 * dsq) - 1.0).abs() < 0.1, "rad={rad}");
+        assert!(rad < gauss, "rad={rad} gauss={gauss}");
+        // Lemma 2.2 upper bound for the Gaussian case
+        assert!(gauss <= (d as f64 + 4.0) * dsq * 1.1, "gauss={gauss}");
+    }
+
+    #[test]
+    fn subseed_zero_is_identity_and_children_distinct() {
+        assert_eq!(subseed(77, 0), 77);
+        let s1 = subseed(77, 1);
+        let s2 = subseed(77, 2);
+        assert_ne!(s1, 77);
+        assert_ne!(s1, s2);
+        // stable
+        assert_eq!(subseed(77, 1), s1);
+    }
+
+    #[test]
+    fn multi_projection_averages_to_lower_error() {
+        // reconstruction error shrinks ~1/sqrt(m) with m projections
+        let d = 512;
+        let mut rng = Xoshiro256::seed_from(3);
+        let delta: Vec<f32> = (0..d).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let trials = 40;
+        let mut err_for = |m: usize| -> f64 {
+            let mut p = Projector::new(d, VDistribution::Rademacher);
+            let mut total = 0.0f64;
+            for t in 0..trials {
+                let mut rs = vec![0.0f32; m];
+                p.encode_multi(&delta, t, &mut rs);
+                let mut est = vec![0.0f32; d];
+                p.decode_into(&mut est, t, &rs, 1.0 / m as f32);
+                let e: f32 = est
+                    .iter()
+                    .zip(&delta)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                total += (e as f64).sqrt();
+            }
+            total / trials as f64
+        };
+        let e1 = err_for(1);
+        let e16 = err_for(16);
+        assert!(
+            e16 < e1 / 2.5,
+            "expected ~4x shrink with m=16: e1={e1} e16={e16}"
+        );
+    }
+
+    #[test]
+    fn prop_projection_is_linear() {
+        testkit::forall("projection linearity", 50, |g| {
+            let d = g.usize_in(8, 200);
+            let a = g.normal_vec(d, 1.0);
+            let b = g.normal_vec(d, 1.0);
+            let seed = g.usize_in(0, 1 << 20) as u32;
+            let dist = *g.pick(&[VDistribution::Normal, VDistribution::Rademacher]);
+            let mut v = vec![0.0; d];
+            let ra = encode(&a, seed, dist, &mut v);
+            let rb = encode(&b, seed, dist, &mut v);
+            let sum: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+            let rsum = encode(&sum, seed, dist, &mut v);
+            let scale = 10.0 * d as f32 * f32::EPSILON * (1.0 + ra.abs() + rb.abs());
+            if (rsum - (ra + rb)).abs() <= scale.max(1e-3) {
+                Ok(())
+            } else {
+                Err(format!("rsum={rsum} ra+rb={}", ra + rb))
+            }
+        });
+    }
+}

@@ -1,0 +1,214 @@
+//! QSGD baseline (Alistarh et al. 2017): stochastic uniform quantization of
+//! the update vector to `2^bits - 1` levels, with the exact wire format the
+//! bit accounting in [`crate::algo::Method`] charges for (one f32 norm +
+//! one level byte per coordinate, sign folded into the level).
+//!
+//! Properties (tested below):
+//!   * unbiased: E[dequantize(quantize(x))] = x
+//!   * bounded:  |xhat_i - x_i| <= ||x|| / s   (s = number of positive levels)
+
+use crate::rng::Xoshiro256;
+use crate::tensor;
+
+/// A quantized update as it would travel on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QsgdPacket {
+    /// ||x||_2 (f32 on the wire).
+    pub norm: f32,
+    /// Signed level per coordinate in [-s, s]; fits in `bits` bits
+    /// (sign-magnitude: 1 sign bit + (bits-1) magnitude bits).
+    pub levels: Vec<i16>,
+    /// Quantization levels s = 2^(bits-1) - 1.
+    pub s: u16,
+    pub bits: u32,
+}
+
+impl QsgdPacket {
+    /// Wire size in bits: norm + d levels.
+    pub fn wire_bits(&self) -> u64 {
+        32 + (self.levels.len() as u64) * (self.bits as u64)
+    }
+}
+
+/// Stateful quantizer (owns the stochastic-rounding RNG).
+#[derive(Debug, Clone)]
+pub struct Quantizer {
+    pub bits: u32,
+    rng: Xoshiro256,
+}
+
+impl Quantizer {
+    pub fn new(bits: u32, seed: u64) -> Self {
+        assert!((2..=16).contains(&bits), "bits must be in 2..=16");
+        Quantizer {
+            bits,
+            rng: Xoshiro256::seed_from(seed ^ 0x9594_0000_0000_0004),
+        }
+    }
+
+    pub fn levels(&self) -> u16 {
+        (1u16 << (self.bits - 1)) - 1
+    }
+
+    /// Stochastically quantize `x`.
+    pub fn quantize(&mut self, x: &[f32]) -> QsgdPacket {
+        let s = self.levels();
+        let norm = tensor::norm_sq(x).sqrt();
+        let mut levels = Vec::with_capacity(x.len());
+        if norm == 0.0 {
+            levels.resize(x.len(), 0);
+            return QsgdPacket {
+                norm,
+                levels,
+                s,
+                bits: self.bits,
+            };
+        }
+        let scale = s as f32 / norm; // hoisted: one div, not d (§Perf)
+        for &xi in x {
+            let t = xi.abs() * scale; // in [0, s]
+            let floor = t.floor();
+            let frac = t - floor;
+            let up = (self.rng.uniform_f32() < frac) as i32;
+            let mag = (floor as i32 + up).min(s as i32);
+            let lvl = if xi < 0.0 { -mag } else { mag };
+            levels.push(lvl as i16);
+        }
+        QsgdPacket {
+            norm,
+            levels,
+            s,
+            bits: self.bits,
+        }
+    }
+
+    /// Dequantize into caller-owned buffer.
+    pub fn dequantize_into(&self, p: &QsgdPacket, out: &mut [f32]) {
+        assert_eq!(out.len(), p.levels.len());
+        let scale = p.norm / p.s as f32;
+        for (o, &l) in out.iter_mut().zip(&p.levels) {
+            *o = scale * l as f32;
+        }
+    }
+
+    pub fn dequantize(&self, p: &QsgdPacket) -> Vec<f32> {
+        let mut out = vec![0.0; p.levels.len()];
+        self.dequantize_into(p, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn zero_vector_roundtrip() {
+        let mut q = Quantizer::new(8, 0);
+        let p = q.quantize(&[0.0; 16]);
+        assert_eq!(p.norm, 0.0);
+        assert!(q.dequantize(&p).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn wire_bits_match_method_accounting() {
+        use crate::algo::Method;
+        let mut q = Quantizer::new(8, 0);
+        let x = vec![1.0f32; 1990];
+        let p = q.quantize(&x);
+        assert_eq!(p.wire_bits(), Method::Qsgd { bits: 8 }.uplink_bits(1990));
+    }
+
+    #[test]
+    fn levels_bounded_and_signed_correctly() {
+        let mut q = Quantizer::new(8, 1);
+        let x: Vec<f32> = (0..500).map(|i| ((i as f32) - 250.0) / 100.0).collect();
+        let p = q.quantize(&x);
+        let s = q.levels() as i16;
+        for (&xi, &l) in x.iter().zip(&p.levels) {
+            assert!(l.abs() <= s);
+            if xi > 0.0 {
+                assert!(l >= 0, "xi={xi} l={l}");
+            }
+            if xi < 0.0 {
+                assert!(l <= 0, "xi={xi} l={l}");
+            }
+        }
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let mut q = Quantizer::new(4, 2);
+        let x = vec![0.3f32, -0.7, 0.05, 0.0, 1.0, -0.01];
+        let trials = 20_000;
+        let mut acc = vec![0.0f64; x.len()];
+        for _ in 0..trials {
+            let p = q.quantize(&x);
+            for (a, v) in acc.iter_mut().zip(q.dequantize(&p)) {
+                *a += v as f64;
+            }
+        }
+        for (a, &xi) in acc.iter().zip(&x) {
+            let est = a / trials as f64;
+            assert!(
+                (est - xi as f64).abs() < 0.01,
+                "coord: est={est} true={xi}"
+            );
+        }
+    }
+
+    #[test]
+    fn per_coordinate_error_bound() {
+        // |xhat_i - x_i| <= norm / s  (one quantization bin)
+        testkit::forall("qsgd error bound", 60, |g| {
+            let d = g.usize_in(1, 300);
+            let x = g.normal_vec(d, 2.0);
+            let bits = *g.pick(&[2u32, 4, 8]);
+            let mut q = Quantizer::new(bits, 7);
+            let p = q.quantize(&x);
+            let xhat = q.dequantize(&p);
+            let bound = p.norm / p.s as f32 + 1e-5;
+            for i in 0..d {
+                let err = (xhat[i] - x[i]).abs();
+                if err > bound {
+                    return Err(format!(
+                        "bits={bits} i={i}: err={err} > bound={bound}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = crate::rng::Xoshiro256::seed_from(5);
+        let x: Vec<f32> = (0..2000).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let mse = |bits: u32| -> f64 {
+            let mut q = Quantizer::new(bits, 9);
+            let mut total = 0.0f64;
+            for _ in 0..20 {
+                let p = q.quantize(&x);
+                let xhat = q.dequantize(&p);
+                total += x
+                    .iter()
+                    .zip(&xhat)
+                    .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                    .sum::<f64>();
+            }
+            total
+        };
+        let e2 = mse(2);
+        let e4 = mse(4);
+        let e8 = mse(8);
+        assert!(e4 < e2 / 4.0, "e2={e2} e4={e4}");
+        assert!(e8 < e4 / 4.0, "e4={e4} e8={e8}");
+    }
+
+    #[test]
+    #[should_panic(expected = "bits")]
+    fn silly_bit_width_rejected() {
+        Quantizer::new(1, 0);
+    }
+}

@@ -1,0 +1,246 @@
+//! SVRG-style variance-reduced local updates (paper §II-A: "existing
+//! variance reduction methods such as SVRG or SAG can be incorporated
+//! inside FedScalar" — the paper defers this; we build it).
+//!
+//! At the start of the client stage the agent computes the full-shard
+//! gradient `mu = ∇f_n(ψ_0)`; each local step then uses the control-variate
+//! gradient `g_s = h(ψ_s; b) − h(ψ_0; b) + mu`, which is unbiased for ∇f_n(ψ_s) and has vanishing variance as ψ_s → ψ_0
+//! — directly shrinking the `O(S²)` local-variance term of Theorem 2.1 (and
+//! with it `‖δ‖²`, the Prop-2.1 gap term).
+
+use crate::nn::{Mlp, MlpScratch};
+use crate::tensor;
+
+/// Reusable SVRG local-stage workspace.
+#[derive(Debug, Clone)]
+pub struct LocalSvrg {
+    pub steps: usize,
+    pub batch: usize,
+    params: Vec<f32>,
+    grad: Vec<f32>,
+    grad_ref: Vec<f32>,
+    mu: Vec<f32>,
+    scratch: MlpScratch,
+}
+
+impl LocalSvrg {
+    pub fn new(mlp: &Mlp, steps: usize, batch: usize) -> Self {
+        let d = mlp.param_dim();
+        LocalSvrg {
+            steps,
+            batch,
+            params: vec![0.0; d],
+            grad: vec![0.0; d],
+            grad_ref: vec![0.0; d],
+            mu: vec![0.0; d],
+            scratch: MlpScratch::new(&mlp.spec, batch),
+        }
+    }
+
+    /// Full-shard gradient at `at`, computed in batch-sized chunks.
+    /// (shard_x, shard_y) is the agent's full local dataset.
+    fn full_gradient(&mut self, mlp: &Mlp, at: &[f32], shard_x: &[f32], shard_y: &[i32]) {
+        let n = shard_y.len();
+        let dim = mlp.spec.input_dim;
+        self.mu.fill(0.0);
+        let mut done = 0usize;
+        while done < n {
+            let b = self.batch.min(n - done);
+            let x = &shard_x[done * dim..(done + b) * dim];
+            let y = &shard_y[done..done + b];
+            mlp.loss_and_grad(at, x, y, b, &mut self.scratch, &mut self.grad);
+            // loss_and_grad returns the MEAN gradient over b rows; weight by b
+            tensor::axpy(b as f32, &self.grad, &mut self.mu);
+            done += b;
+        }
+        tensor::scale(1.0 / n as f32, &mut self.mu);
+    }
+
+    /// SVRG local stage: S steps from `start` over [S,B] batches, using the
+    /// full shard (shard_x, shard_y) for the reference gradient. Writes
+    /// `delta = ψ_S − start`; returns the mean per-step (batch) loss.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &mut self,
+        mlp: &Mlp,
+        start: &[f32],
+        shard_x: &[f32],
+        shard_y: &[i32],
+        xb: &[f32],
+        yb: &[i32],
+        alpha: f32,
+        delta: &mut [f32],
+    ) -> f32 {
+        let d = mlp.param_dim();
+        let bd = self.batch * mlp.spec.input_dim;
+        assert_eq!(start.len(), d);
+        assert_eq!(delta.len(), d);
+        assert_eq!(xb.len(), self.steps * bd);
+        assert_eq!(yb.len(), self.steps * self.batch);
+        self.full_gradient(mlp, start, shard_x, shard_y);
+        self.params.copy_from_slice(start);
+        let mut loss_sum = 0.0f32;
+        for s in 0..self.steps {
+            let x = &xb[s * bd..(s + 1) * bd];
+            let y = &yb[s * self.batch..(s + 1) * self.batch];
+            loss_sum += mlp.loss_and_grad(
+                &self.params,
+                x,
+                y,
+                self.batch,
+                &mut self.scratch,
+                &mut self.grad,
+            );
+            // same batch at the anchor point
+            mlp.loss_and_grad(start, x, y, self.batch, &mut self.scratch, &mut self.grad_ref);
+            // g = grad - grad_ref + mu ; p -= alpha * g
+            for i in 0..d {
+                self.params[i] -= alpha * (self.grad[i] - self.grad_ref[i] + self.mu[i]);
+            }
+        }
+        tensor::sub(&self.params, start, delta);
+        loss_sum / self.steps as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::LocalSgd;
+    use crate::nn::{glorot_init, ModelSpec};
+    use crate::rng::Xoshiro256;
+
+    fn setup() -> (Mlp, Vec<f32>, Vec<f32>, Vec<i32>) {
+        let spec = ModelSpec::default();
+        let mlp = Mlp::new(spec.clone());
+        let params = glorot_init(&spec, 0);
+        let mut rng = Xoshiro256::seed_from(5);
+        let n = 64;
+        let sx: Vec<f32> = (0..n * 64).map(|_| rng.uniform_f32()).collect();
+        let sy: Vec<i32> = (0..n).map(|_| rng.below(10) as i32).collect();
+        (mlp, params, sx, sy)
+    }
+
+    /// Draw [S,B] batches from the shard by index.
+    fn draw(
+        sx: &[f32],
+        sy: &[i32],
+        steps: usize,
+        batch: usize,
+        rng: &mut Xoshiro256,
+    ) -> (Vec<f32>, Vec<i32>) {
+        let n = sy.len();
+        let mut xb = Vec::with_capacity(steps * batch * 64);
+        let mut yb = Vec::with_capacity(steps * batch);
+        for _ in 0..steps * batch {
+            let i = rng.below(n);
+            xb.extend_from_slice(&sx[i * 64..(i + 1) * 64]);
+            yb.push(sy[i]);
+        }
+        (xb, yb)
+    }
+
+    #[test]
+    fn zero_lr_noop() {
+        let (mlp, params, sx, sy) = setup();
+        let mut svrg = LocalSvrg::new(&mlp, 3, 8);
+        let mut rng = Xoshiro256::seed_from(0);
+        let (xb, yb) = draw(&sx, &sy, 3, 8, &mut rng);
+        let mut delta = vec![0.0; mlp.param_dim()];
+        svrg.run(&mlp, &params, &sx, &sy, &xb, &yb, 0.0, &mut delta);
+        assert!(delta.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn full_batch_equals_plain_gradient_descent() {
+        // batch == shard: h(ψ;b) = ∇f(ψ), so the control variate collapses
+        // and SVRG == plain full-batch GD.
+        let (mlp, params, sx, sy) = setup();
+        let n = sy.len();
+        let steps = 3;
+        // batches = the whole shard repeated
+        let mut xb = Vec::new();
+        let mut yb = Vec::new();
+        for _ in 0..steps {
+            xb.extend_from_slice(&sx);
+            yb.extend_from_slice(&sy);
+        }
+        let mut svrg = LocalSvrg::new(&mlp, steps, n);
+        let mut sgd = LocalSgd::new(&mlp, steps, n);
+        let mut d1 = vec![0.0; mlp.param_dim()];
+        let mut d2 = vec![0.0; mlp.param_dim()];
+        svrg.run(&mlp, &params, &sx, &sy, &xb, &yb, 0.05, &mut d1);
+        sgd.run(&mlp, &params, &xb, &yb, 0.05, &mut d2);
+        for i in 0..d1.len() {
+            assert!((d1[i] - d2[i]).abs() < 1e-5, "i={i}: {} vs {}", d1[i], d2[i]);
+        }
+    }
+
+    #[test]
+    fn reduces_delta_variance_vs_plain_sgd() {
+        // across independent batch draws, Var[δ] (and hence the Thm-2.1
+        // variance terms) must shrink under SVRG
+        let (mlp, params, sx, sy) = setup();
+        let (steps, batch, alpha) = (5, 8, 0.05);
+        let trials = 24;
+        let spread = |svrg: bool| -> f64 {
+            let mut deltas: Vec<Vec<f32>> = Vec::new();
+            for t in 0..trials {
+                let mut rng = Xoshiro256::seed_from(100 + t);
+                let (xb, yb) = draw(&sx, &sy, steps, batch, &mut rng);
+                let mut delta = vec![0.0; mlp.param_dim()];
+                if svrg {
+                    let mut s = LocalSvrg::new(&mlp, steps, batch);
+                    s.run(&mlp, &params, &sx, &sy, &xb, &yb, alpha, &mut delta);
+                } else {
+                    let mut s = LocalSgd::new(&mlp, steps, batch);
+                    s.run(&mlp, &params, &xb, &yb, alpha, &mut delta);
+                }
+                deltas.push(delta);
+            }
+            // mean squared distance to the mean delta
+            let d = mlp.param_dim();
+            let mut mean = vec![0.0f64; d];
+            for dl in &deltas {
+                for (m, v) in mean.iter_mut().zip(dl) {
+                    *m += *v as f64;
+                }
+            }
+            for m in mean.iter_mut() {
+                *m /= trials as f64;
+            }
+            deltas
+                .iter()
+                .map(|dl| {
+                    dl.iter()
+                        .zip(&mean)
+                        .map(|(v, m)| (*v as f64 - m).powi(2))
+                        .sum::<f64>()
+                })
+                .sum::<f64>()
+                / trials as f64
+        };
+        let var_plain = spread(false);
+        let var_svrg = spread(true);
+        assert!(
+            var_svrg < var_plain * 0.8,
+            "svrg {var_svrg} should be well below plain {var_plain}"
+        );
+    }
+
+    #[test]
+    fn descends() {
+        let (mlp, params, sx, sy) = setup();
+        let mut rng = Xoshiro256::seed_from(9);
+        let (xb, yb) = draw(&sx, &sy, 5, 8, &mut rng);
+        let mut svrg = LocalSvrg::new(&mlp, 5, 8);
+        let mut delta = vec![0.0; mlp.param_dim()];
+        svrg.run(&mlp, &params, &sx, &sy, &xb, &yb, 0.05, &mut delta);
+        let mut scratch = MlpScratch::new(&mlp.spec, sy.len());
+        let before = mlp.loss(&params, &sx, &sy, sy.len(), &mut scratch);
+        let mut after_p = params.clone();
+        tensor::axpy(1.0, &delta, &mut after_p);
+        let after = mlp.loss(&after_p, &sx, &sy, sy.len(), &mut scratch);
+        assert!(after < before, "{after} vs {before}");
+    }
+}

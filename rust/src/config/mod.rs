@@ -1,0 +1,287 @@
+//! Typed experiment configuration + TOML loading + validation.
+//!
+//! [`ExperimentConfig::paper_section_iii`] is the paper's §III setup:
+//! N = 20 agents, K = 1500 rounds, S = 5 local steps, B = 32, α = 0.003,
+//! 0.1 Mbps lognormal uplink, P_tx = 2 W, Digits corpus, d = 1990.
+
+use crate::algo::Method;
+use crate::error::{Error, Result};
+use crate::netsim::{NetworkConfig, Schedule};
+use crate::nn::ModelSpec;
+use crate::rng::VDistribution;
+use crate::util::toml_lite::Document;
+use std::path::{Path, PathBuf};
+
+/// Federated optimization hyper-parameters (Algorithm 1 knobs).
+#[derive(Debug, Clone)]
+pub struct FedConfig {
+    pub num_agents: usize,
+    pub rounds: usize,
+    pub local_steps: usize,
+    pub batch_size: usize,
+    pub alpha: f32,
+    pub method: Method,
+    /// Evaluate every `eval_every` rounds (1 = every round).
+    pub eval_every: usize,
+    /// Fraction of agents activated per round (paper §I: the server
+    /// "broadcasts ... to a subset of clients"). 1.0 = full participation
+    /// (the §III experiment).
+    pub participation: f64,
+}
+
+impl Default for FedConfig {
+    fn default() -> Self {
+        FedConfig {
+            num_agents: 20,
+            rounds: 1500,
+            local_steps: 5,
+            batch_size: 32,
+            alpha: 0.003,
+            method: Method::FedScalar {
+                dist: VDistribution::Rademacher,
+                projections: 1,
+            },
+            eval_every: 10,
+            participation: 1.0,
+        }
+    }
+}
+
+/// Data source selection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DataSource {
+    /// Load `digits_{train,test}.csv` from the artifacts directory
+    /// (byte-shared with the JAX side).
+    ArtifactCsv,
+    /// Generate the native synthetic twin in-process.
+    Synthetic,
+}
+
+/// Top-level experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub fed: FedConfig,
+    pub model: ModelSpec,
+    pub network: NetworkConfig,
+    pub data: DataSource,
+    pub artifacts_dir: PathBuf,
+    /// Label-skew Dirichlet alpha; None = IID (the paper's setting).
+    pub dirichlet_alpha: Option<f64>,
+}
+
+impl ExperimentConfig {
+    /// The paper's §III experiment.
+    pub fn paper_section_iii() -> Self {
+        ExperimentConfig {
+            fed: FedConfig::default(),
+            model: ModelSpec::default(),
+            network: NetworkConfig::default(),
+            data: DataSource::ArtifactCsv,
+            artifacts_dir: PathBuf::from("artifacts"),
+            dirichlet_alpha: None,
+        }
+    }
+
+    /// A fast smoke config for tests/examples (small rounds, synthetic data).
+    pub fn smoke() -> Self {
+        let mut cfg = Self::paper_section_iii();
+        cfg.fed.rounds = 30;
+        cfg.fed.eval_every = 10;
+        cfg.data = DataSource::Synthetic;
+        cfg
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let f = &self.fed;
+        if f.num_agents == 0 {
+            return Err(Error::config("num_agents must be > 0"));
+        }
+        if f.rounds == 0 {
+            return Err(Error::config("rounds must be > 0"));
+        }
+        if f.local_steps == 0 {
+            return Err(Error::config("local_steps must be > 0"));
+        }
+        if f.batch_size == 0 {
+            return Err(Error::config("batch_size must be > 0"));
+        }
+        if !(f.alpha > 0.0) || !f.alpha.is_finite() {
+            return Err(Error::config(format!("alpha must be positive, got {}", f.alpha)));
+        }
+        if f.eval_every == 0 {
+            return Err(Error::config("eval_every must be > 0"));
+        }
+        if !(f.participation > 0.0 && f.participation <= 1.0) {
+            return Err(Error::config(format!(
+                "participation must be in (0, 1], got {}",
+                f.participation
+            )));
+        }
+        if let Method::FedScalar { projections, .. } = f.method {
+            if projections == 0 {
+                return Err(Error::config("projections must be >= 1"));
+            }
+        }
+        if self.network.channel.nominal_bps <= 0.0 {
+            return Err(Error::config("bandwidth must be positive"));
+        }
+        if self.network.channel.sigma < 0.0 {
+            return Err(Error::config("channel sigma must be >= 0"));
+        }
+        if self.network.p_tx_watts < 0.0 {
+            return Err(Error::config("p_tx must be >= 0"));
+        }
+        if let Some(a) = self.dirichlet_alpha {
+            if !(a > 0.0) {
+                return Err(Error::config("dirichlet alpha must be > 0"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file (any omitted key keeps the paper default).
+    pub fn from_toml_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = Document::parse(text)?;
+        let mut cfg = Self::paper_section_iii();
+
+        let geti = |sec: &str, key: &str, d: i64| -> i64 {
+            doc.get(sec, key).and_then(|v| v.as_int()).unwrap_or(d)
+        };
+        let getf = |sec: &str, key: &str, d: f64| -> f64 {
+            doc.get(sec, key).and_then(|v| v.as_float()).unwrap_or(d)
+        };
+
+        let f = &mut cfg.fed;
+        f.num_agents = geti("fed", "num_agents", f.num_agents as i64) as usize;
+        f.rounds = geti("fed", "rounds", f.rounds as i64) as usize;
+        f.local_steps = geti("fed", "local_steps", f.local_steps as i64) as usize;
+        f.batch_size = geti("fed", "batch_size", f.batch_size as i64) as usize;
+        f.alpha = getf("fed", "alpha", f.alpha as f64) as f32;
+        f.eval_every = geti("fed", "eval_every", f.eval_every as i64) as usize;
+        f.participation = getf("fed", "participation", f.participation);
+        if let Some(v) = doc.get("fed", "method") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::config("fed.method must be a string"))?;
+            f.method = Method::parse(s)
+                .ok_or_else(|| Error::config(format!("unknown method {s:?}")))?;
+        }
+
+        cfg.network.channel.nominal_bps =
+            getf("network", "bandwidth_bps", cfg.network.channel.nominal_bps);
+        cfg.network.channel.sigma = getf("network", "sigma", cfg.network.channel.sigma);
+        cfg.network.latency.t_other_frac =
+            getf("network", "t_other_frac", cfg.network.latency.t_other_frac);
+        cfg.network.p_tx_watts = getf("network", "p_tx_watts", cfg.network.p_tx_watts);
+        if let Some(v) = doc.get("network", "schedule") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::config("network.schedule must be a string"))?;
+            cfg.network.schedule = Schedule::parse(s)
+                .ok_or_else(|| Error::config(format!("unknown schedule {s:?}")))?;
+        }
+
+        if let Some(v) = doc.get("data", "source") {
+            cfg.data = match v.as_str() {
+                Some("artifacts") => DataSource::ArtifactCsv,
+                Some("synthetic") => DataSource::Synthetic,
+                other => {
+                    return Err(Error::config(format!(
+                        "data.source must be \"artifacts\" or \"synthetic\", got {other:?}"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = doc.get("data", "artifacts_dir") {
+            cfg.artifacts_dir = PathBuf::from(
+                v.as_str()
+                    .ok_or_else(|| Error::config("data.artifacts_dir must be a string"))?,
+            );
+        }
+        if let Some(v) = doc.get("data", "dirichlet_alpha") {
+            cfg.dirichlet_alpha = Some(
+                v.as_float()
+                    .ok_or_else(|| Error::config("data.dirichlet_alpha must be numeric"))?,
+            );
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_match_section_iii() {
+        let c = ExperimentConfig::paper_section_iii();
+        assert_eq!(c.fed.num_agents, 20);
+        assert_eq!(c.fed.rounds, 1500);
+        assert_eq!(c.fed.local_steps, 5);
+        assert_eq!(c.fed.batch_size, 32);
+        assert!((c.fed.alpha - 0.003).abs() < 1e-9);
+        assert_eq!(c.model.param_dim(), 1990);
+        assert_eq!(c.network.channel.nominal_bps, 100_000.0);
+        assert_eq!(c.network.p_tx_watts, 2.0);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+[fed]
+rounds = 10
+method = "fedavg"
+alpha = 0.01
+
+[network]
+bandwidth_bps = 1000
+schedule = "concurrent"
+
+[data]
+source = "synthetic"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.fed.rounds, 10);
+        assert_eq!(cfg.fed.method, Method::FedAvg);
+        assert!((cfg.fed.alpha - 0.01).abs() < 1e-9);
+        assert_eq!(cfg.network.channel.nominal_bps, 1000.0);
+        assert_eq!(cfg.network.schedule, Schedule::Concurrent);
+        assert_eq!(cfg.data, DataSource::Synthetic);
+        // untouched keys keep paper values
+        assert_eq!(cfg.fed.num_agents, 20);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        for bad in [
+            "[fed]\nrounds = 0\n",
+            "[fed]\nnum_agents = 0\n",
+            "[fed]\nalpha = -1.0\n",
+            "[fed]\nmethod = \"bogus\"\n",
+            "[network]\nbandwidth_bps = -5.0\n",
+            "[network]\nschedule = \"fdd\"\n",
+            "[data]\nsource = \"nope\"\n",
+            "[data]\ndirichlet_alpha = 0.0\n",
+        ] {
+            assert!(
+                ExperimentConfig::from_toml_str(bad).is_err(),
+                "accepted: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn smoke_config_valid() {
+        ExperimentConfig::smoke().validate().unwrap();
+    }
+}

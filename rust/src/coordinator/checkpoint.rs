@@ -1,0 +1,186 @@
+//! Training checkpoints: global model + round counters, binary on disk.
+//!
+//! Captures everything needed to resume the *optimization* (params, round
+//! index, cumulative communication/energy/time counters). RNG streams
+//! (batch samplers, channel fading, projection seeds) are re-derived from
+//! `run_seed` and the resume round is an epoch boundary for them — resumed
+//! runs are statistically equivalent but not bit-identical to uninterrupted
+//! ones, which is standard checkpoint semantics for FL simulators.
+
+use crate::error::{Error, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"FEDSCKPT";
+const VERSION: u32 = 1;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub run_seed: u64,
+    pub method: String,
+    /// Next round to execute.
+    pub round: u64,
+    pub params: Vec<f32>,
+    pub cum_bits: f64,
+    pub cum_sim_seconds: f64,
+    pub cum_energy_joules: f64,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&self.run_seed.to_le_bytes())?;
+        let m = self.method.as_bytes();
+        f.write_all(&(m.len() as u32).to_le_bytes())?;
+        f.write_all(m)?;
+        f.write_all(&self.round.to_le_bytes())?;
+        f.write_all(&self.cum_bits.to_le_bytes())?;
+        f.write_all(&self.cum_sim_seconds.to_le_bytes())?;
+        f.write_all(&self.cum_energy_joules.to_le_bytes())?;
+        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+        for v in &self.params {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        f.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path.as_ref())?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::invariant("not a fedscalar checkpoint"));
+        }
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            return Err(Error::invariant(format!(
+                "checkpoint version {version} != {VERSION}"
+            )));
+        }
+        let run_seed = read_u64(&mut f)?;
+        let mlen = read_u32(&mut f)? as usize;
+        if mlen > 256 {
+            return Err(Error::invariant("absurd method-name length"));
+        }
+        let mut mbuf = vec![0u8; mlen];
+        f.read_exact(&mut mbuf)?;
+        let method = String::from_utf8(mbuf)
+            .map_err(|_| Error::invariant("method name not utf-8"))?;
+        let round = read_u64(&mut f)?;
+        let cum_bits = read_f64(&mut f)?;
+        let cum_sim_seconds = read_f64(&mut f)?;
+        let cum_energy_joules = read_f64(&mut f)?;
+        let d = read_u64(&mut f)? as usize;
+        if d > 1 << 28 {
+            return Err(Error::invariant("absurd model dimension"));
+        }
+        let mut params = Vec::with_capacity(d);
+        let mut buf = [0u8; 4];
+        for _ in 0..d {
+            f.read_exact(&mut buf)?;
+            params.push(f32::from_le_bytes(buf));
+        }
+        // must be at EOF
+        let mut probe = [0u8; 1];
+        if f.read(&mut probe)? != 0 {
+            return Err(Error::invariant("trailing bytes in checkpoint"));
+        }
+        Ok(Checkpoint {
+            run_seed,
+            method,
+            round,
+            params,
+            cum_bits,
+            cum_sim_seconds,
+            cum_energy_joules,
+        })
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f64(f: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            run_seed: 42,
+            method: "fedscalar-rademacher".into(),
+            round: 750,
+            params: (0..1990).map(|i| (i as f32).sin()).collect(),
+            cum_bits: 9.6e5,
+            cum_sim_seconds: 488.0,
+            cum_energy_joules: 20.4,
+        }
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("fedscalar_ckpt_{tag}_{}.bin", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let ck = sample();
+        let p = tmp("rt");
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_and_truncation() {
+        let p = tmp("bad");
+        std::fs::write(&p, b"NOTACKPT").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        let ck = sample();
+        ck.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        // trailing garbage
+        let mut long = bytes.clone();
+        long.push(7);
+        std::fs::write(&p, &long).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn version_checked() {
+        let ck = sample();
+        let p = tmp("ver");
+        ck.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[8] = 99; // bump version
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

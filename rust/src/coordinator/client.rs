@@ -1,0 +1,109 @@
+//! Per-agent state: data shard, batch buffers, per-round seed stream.
+
+use crate::data::{BatchSampler, Dataset};
+use crate::rng::{SplitMix64, Xoshiro256};
+use std::sync::Arc;
+
+/// One federated agent as the coordinator sees it.
+pub struct ClientState {
+    pub id: usize,
+    sampler: BatchSampler,
+    seed_rng: Xoshiro256,
+    /// [S, B, dim] batch features buffer (reused across rounds).
+    pub xb: Vec<f32>,
+    /// [S, B] batch labels buffer.
+    pub yb: Vec<i32>,
+}
+
+impl ClientState {
+    pub fn new(
+        id: usize,
+        data: Arc<Dataset>,
+        shard: Vec<usize>,
+        steps: usize,
+        batch: usize,
+        run_seed: u64,
+    ) -> Self {
+        let dim = data.dim;
+        ClientState {
+            id,
+            sampler: BatchSampler::new(data, shard, SplitMix64::derive(run_seed, id as u64)),
+            seed_rng: Xoshiro256::seed_from(SplitMix64::derive(
+                run_seed ^ 0x5eed_0000_0000_0006,
+                id as u64,
+            )),
+            xb: vec![0.0; steps * batch * dim],
+            yb: vec![0; steps * batch],
+        }
+    }
+
+    /// Draw this round's S minibatches into the internal buffers.
+    pub fn fill_round_batches(&mut self, steps: usize, batch: usize) {
+        self.sampler
+            .fill_local_batches(steps, batch, &mut self.xb, &mut self.yb);
+    }
+
+    /// Fresh 32-bit projection seed ξ_{k,n} for this round. Uniqueness
+    /// across (round, agent) pairs is statistical (2^32 space), exactly as
+    /// in the paper's protocol where each agent draws its own seed.
+    pub fn next_projection_seed(&mut self) -> u32 {
+        self.seed_rng.next_u32()
+    }
+
+    pub fn shard_len(&self) -> usize {
+        self.sampler.shard_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+
+    fn data() -> Arc<Dataset> {
+        Arc::new(generate(
+            &SyntheticConfig {
+                n_per_class: 5,
+                ..Default::default()
+            },
+            0,
+        ))
+    }
+
+    #[test]
+    fn seeds_differ_across_agents_and_rounds() {
+        let ds = data();
+        let mut a = ClientState::new(0, ds.clone(), vec![0, 1], 2, 4, 42);
+        let mut b = ClientState::new(1, ds.clone(), vec![2, 3], 2, 4, 42);
+        let s1 = a.next_projection_seed();
+        let s2 = a.next_projection_seed();
+        let s3 = b.next_projection_seed();
+        assert_ne!(s1, s2);
+        assert_ne!(s1, s3);
+    }
+
+    #[test]
+    fn deterministic_per_run_seed() {
+        let ds = data();
+        let mut a1 = ClientState::new(0, ds.clone(), vec![0, 1, 2], 2, 4, 7);
+        let mut a2 = ClientState::new(0, ds.clone(), vec![0, 1, 2], 2, 4, 7);
+        a1.fill_round_batches(2, 4);
+        a2.fill_round_batches(2, 4);
+        assert_eq!(a1.xb, a2.xb);
+        assert_eq!(a1.yb, a2.yb);
+        assert_eq!(a1.next_projection_seed(), a2.next_projection_seed());
+        // different run seed -> different stream
+        let mut a3 = ClientState::new(0, ds, vec![0, 1, 2], 2, 4, 8);
+        a3.fill_round_batches(2, 4);
+        assert_ne!(a1.xb, a3.xb);
+    }
+
+    #[test]
+    fn buffers_sized_for_steps_batches() {
+        let ds = data();
+        let c = ClientState::new(0, ds, vec![0], 3, 8, 0);
+        assert_eq!(c.xb.len(), 3 * 8 * 64);
+        assert_eq!(c.yb.len(), 24);
+        assert_eq!(c.shard_len(), 1);
+    }
+}

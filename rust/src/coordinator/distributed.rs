@@ -1,0 +1,414 @@
+//! Distributed coordinator: leader thread + N agent worker threads
+//! exchanging *serialized wire frames* through byte-counted transports.
+//!
+//! This is the deployment-shaped variant of [`super::engine::Engine`]:
+//! each agent runs in its own OS thread with its own model replica and
+//! compute backend (PureRust — PJRT handles are not Send), receives the
+//! broadcast model as a [`super::wire::WireModel`] frame, runs the local
+//! stage, and sends back a [`super::wire::WireUplink`] frame. The leader
+//! decodes, aggregates, applies, and evaluates.
+//!
+//! Given the same config and run seed, FedScalar/FedAvg training metrics
+//! are bit-identical to the sequential engine (asserted by the
+//! integration suite): same shards, same batch streams, same seeds, same
+//! arithmetic — serialization is exact for f32. (QSGD differs only in the
+//! stochastic-rounding stream: per-worker quantizers draw independently.)
+
+use crate::algo::{Method, Quantizer};
+use crate::config::{DataSource, ExperimentConfig};
+use crate::coordinator::client::ClientState;
+use crate::coordinator::engine::load_data;
+use crate::coordinator::transport::{duplex, AgentEndpoint, LeaderEndpoint};
+use crate::coordinator::wire::{WireModel, WireUplink};
+use crate::error::{Error, Result};
+use crate::metrics::{RoundRecord, RunHistory};
+use crate::netsim::{energy_joules, latency, upload_seconds, Channel};
+use crate::nn::ModelSpec;
+use crate::rng::{SplitMix64, VDistribution};
+use crate::runtime::{Backend, PureRustBackend, ScalarUpload};
+use crate::tensor;
+use crate::{log_debug, log_info};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Orders from leader to workers (frames are models; control is in-proc).
+enum Control {
+    /// Run round k against the frame that follows on the downlink.
+    Round,
+    /// Shut down.
+    Stop,
+}
+
+struct WorkerHandle {
+    endpoint: LeaderEndpoint,
+    control: std::sync::mpsc::Sender<Control>,
+    /// Telemetry side-channel (NOT wire): per-round client loss.
+    telemetry: std::sync::mpsc::Receiver<f32>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// The distributed (threaded, frame-passing) federated engine.
+pub struct DistributedEngine {
+    cfg: ExperimentConfig,
+    workers: Vec<WorkerHandle>,
+    leader_backend: PureRustBackend,
+    quantizer: Quantizer,
+    test_x: Vec<f32>,
+    test_y: Vec<i32>,
+    params: Vec<f32>,
+    channel: Channel,
+    t_other_s: f64,
+    cum_bits: f64,
+    cum_sim_seconds: f64,
+    cum_energy_joules: f64,
+    history: RunHistory,
+}
+
+impl DistributedEngine {
+    pub fn from_config(cfg: &ExperimentConfig, run_seed: u64) -> Result<DistributedEngine> {
+        cfg.validate()?;
+        if cfg.fed.participation < 1.0 {
+            return Err(Error::config(
+                "distributed engine currently requires full participation",
+            ));
+        }
+        let (train, test) = load_data(cfg)?;
+        let train = Arc::new(train);
+        let partition = match cfg.dirichlet_alpha {
+            None => crate::data::iid_partition(train.len(), cfg.fed.num_agents, run_seed),
+            Some(a) => crate::data::dirichlet_partition(&train, cfg.fed.num_agents, a, run_seed),
+        };
+        if partition.min_shard() == 0 {
+            return Err(Error::config("a client received an empty shard"));
+        }
+
+        let mut leader_backend = PureRustBackend::new(&cfg.model);
+        leader_backend.set_shape(cfg.fed.local_steps, cfg.fed.batch_size);
+        let params = leader_backend.init_params(SplitMix64::derive(run_seed, 0xd0d0))?;
+
+        let mut workers = Vec::with_capacity(cfg.fed.num_agents);
+        for (id, shard) in partition.shards.iter().enumerate() {
+            workers.push(spawn_worker(
+                id,
+                cfg,
+                train.clone(),
+                shard.clone(),
+                run_seed,
+            ));
+        }
+
+        let t_other_s = latency::t_other_seconds(
+            &cfg.network.latency,
+            cfg.model.param_dim(),
+            cfg.fed.num_agents,
+            cfg.network.channel.nominal_bps,
+            cfg.network.schedule,
+        );
+        Ok(DistributedEngine {
+            history: RunHistory::new(cfg.fed.method.name()),
+            channel: Channel::new(cfg.network.channel.clone(), run_seed),
+            quantizer: Quantizer::new(8, SplitMix64::derive(run_seed, 0x9594)),
+            leader_backend,
+            test_x: test.x,
+            test_y: test.y,
+            params,
+            t_other_s,
+            cum_bits: 0.0,
+            cum_sim_seconds: 0.0,
+            cum_energy_joules: 0.0,
+            workers,
+            cfg: cfg.clone(),
+        })
+    }
+
+    /// Run all K rounds.
+    pub fn run(&mut self) -> Result<RunHistory> {
+        let rounds = self.cfg.fed.rounds;
+        log_info!(
+            "distributed run: method={} workers={} K={}",
+            self.cfg.fed.method.name(),
+            self.workers.len(),
+            rounds
+        );
+        for k in 0..rounds {
+            let eval = k % self.cfg.fed.eval_every == 0 || k + 1 == rounds;
+            self.run_round(k, eval)?;
+        }
+        self.shutdown();
+        Ok(self.history.clone())
+    }
+
+    fn run_round(&mut self, k: usize, eval: bool) -> Result<()> {
+        let host_t0 = Instant::now();
+        // broadcast the model frame + round order
+        let frame = WireModel {
+            round: k as u32,
+            params: self.params.clone(),
+        }
+        .encode();
+        for w in &self.workers {
+            w.control
+                .send(Control::Round)
+                .map_err(|_| Error::invariant("worker died"))?;
+            w.endpoint
+                .downlink
+                .send(frame.clone())
+                .map_err(Error::invariant)?;
+        }
+        // collect uplink frames (in worker order — determinism)
+        let mut uploads: Vec<WireUplink> = Vec::with_capacity(self.workers.len());
+        let mut losses = Vec::with_capacity(self.workers.len());
+        let mut per_agent_seconds = Vec::with_capacity(self.workers.len());
+        let mut round_bits = 0u64;
+        let mut round_energy = 0.0f64;
+        for w in &self.workers {
+            let bytes = w.endpoint.uplink.recv().map_err(Error::invariant)?;
+            // charge the netsim with the PAYLOAD bits (frame minus the
+            // 5-byte tag+count framing for scalar/dense; quantized framing
+            // analogous) so accounting matches the sequential engine.
+            let up = WireUplink::decode(&bytes)?;
+            let bits = payload_bits(&up);
+            let rate = self.channel.sample_rate_bps();
+            per_agent_seconds.push(upload_seconds(bits, rate));
+            round_energy += energy_joules(self.cfg.network.p_tx_watts, bits, rate);
+            round_bits += bits;
+            uploads.push(up);
+            losses.push(w.telemetry.recv().map_err(|_| Error::invariant("telemetry lost"))?);
+        }
+        let round_seconds = latency::round_wall_time(
+            &per_agent_seconds,
+            self.cfg.network.schedule,
+            self.t_other_s,
+        );
+        self.cum_bits += round_bits as f64;
+        self.cum_sim_seconds += round_seconds;
+        self.cum_energy_joules += round_energy;
+
+        // aggregate
+        self.apply_uploads(&uploads)?;
+        let train_loss = losses.iter().map(|l| *l as f64).sum::<f64>() / losses.len() as f64;
+
+        if eval {
+            let (test_loss, test_acc) =
+                self.leader_backend
+                    .evaluate(&self.params, &self.test_x, &self.test_y)?;
+            log_debug!("dist round {k}: loss={train_loss:.4} acc={test_acc:.4}");
+            self.history.push(RoundRecord {
+                round: k,
+                train_loss,
+                test_loss: test_loss as f64,
+                test_acc: test_acc as f64,
+                cum_bits: self.cum_bits,
+                cum_sim_seconds: self.cum_sim_seconds,
+                cum_energy_joules: self.cum_energy_joules,
+                host_ms: host_t0.elapsed().as_secs_f64() * 1e3,
+            });
+        }
+        Ok(())
+    }
+
+    fn apply_uploads(&mut self, uploads: &[WireUplink]) -> Result<()> {
+        let n = uploads.len();
+        match self.cfg.fed.method {
+            Method::FedScalar { dist, .. } => {
+                let ups: Vec<ScalarUpload> = uploads
+                    .iter()
+                    .map(|u| match u {
+                        WireUplink::Scalar { seed, rs } => Ok(ScalarUpload {
+                            seed: *seed,
+                            rs: rs.clone(),
+                            loss: 0.0,
+                            delta_sq: 0.0,
+                        }),
+                        _ => Err(Error::invariant("expected scalar uplink")),
+                    })
+                    .collect::<Result<_>>()?;
+                let ghat = self.leader_backend.server_reconstruct(&ups, dist)?;
+                tensor::axpy(1.0, &ghat, &mut self.params);
+            }
+            Method::FedAvg => {
+                let inv = 1.0 / n as f32;
+                for u in uploads {
+                    match u {
+                        WireUplink::Dense { delta } => {
+                            if delta.len() != self.params.len() {
+                                return Err(Error::shape("delta length"));
+                            }
+                            tensor::axpy(inv, delta, &mut self.params);
+                        }
+                        _ => return Err(Error::invariant("expected dense uplink")),
+                    }
+                }
+            }
+            Method::Qsgd { .. } => {
+                let inv = 1.0 / n as f32;
+                let mut scratch = vec![0.0f32; self.params.len()];
+                for u in uploads {
+                    match u {
+                        WireUplink::Quantized { norm, s, levels, .. } => {
+                            if levels.len() != self.params.len() {
+                                return Err(Error::shape("levels length"));
+                            }
+                            let scale = *norm / *s as f32;
+                            for (o, &l) in scratch.iter_mut().zip(levels) {
+                                *o = scale * l as f32;
+                            }
+                            tensor::axpy(inv, &scratch, &mut self.params);
+                        }
+                        _ => return Err(Error::invariant("expected quantized uplink")),
+                    }
+                }
+                let _ = &self.quantizer; // leader never quantizes; kept for symmetry
+            }
+        }
+        Ok(())
+    }
+
+    /// Current global model (for inspection / checkpointing).
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    /// Step one round manually (used by tests and the checkpoint resume).
+    pub fn step(&mut self, k: usize, eval: bool) -> Result<()> {
+        self.run_round(k, eval)
+    }
+
+    /// Total bytes that crossed the uplinks (frames, incl. framing).
+    pub fn uplink_frame_bytes(&self) -> u64 {
+        self.workers
+            .iter()
+            .map(|w| w.endpoint.up_stats.bytes())
+            .sum()
+    }
+
+    /// Total bytes broadcast on the downlinks.
+    pub fn downlink_frame_bytes(&self) -> u64 {
+        self.workers
+            .iter()
+            .map(|w| w.endpoint.down_stats.bytes())
+            .sum()
+    }
+
+    fn shutdown(&mut self) {
+        for w in &self.workers {
+            let _ = w.control.send(Control::Stop);
+        }
+        for w in self.workers.iter_mut() {
+            if let Some(h) = w.join.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for DistributedEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Uplink payload bits as charged to the network simulator (frame bytes
+/// minus constant framing, matching `Method::uplink_bits`).
+fn payload_bits(u: &WireUplink) -> u64 {
+    match u {
+        WireUplink::Scalar { rs, .. } => 32 + 32 * rs.len() as u64,
+        WireUplink::Dense { delta } => 32 * delta.len() as u64,
+        WireUplink::Quantized { bits, levels, .. } => 32 + (levels.len() as u64) * (*bits as u64),
+    }
+}
+
+fn spawn_worker(
+    id: usize,
+    cfg: &ExperimentConfig,
+    train: Arc<crate::data::Dataset>,
+    shard: Vec<usize>,
+    run_seed: u64,
+) -> WorkerHandle {
+    let (leader_ep, agent_ep) = duplex();
+    let (ctl_tx, ctl_rx) = std::sync::mpsc::channel::<Control>();
+    let (tel_tx, tel_rx) = std::sync::mpsc::channel::<f32>();
+    let method = cfg.fed.method;
+    let (steps, batch, alpha) = (cfg.fed.local_steps, cfg.fed.batch_size, cfg.fed.alpha);
+    let spec: ModelSpec = cfg.model.clone();
+    let qsgd_bits = match method {
+        Method::Qsgd { bits } => bits,
+        _ => 8,
+    };
+    let join = std::thread::spawn(move || {
+        worker_main(
+            id, agent_ep, ctl_rx, tel_tx, method, spec, train, shard, steps, batch, alpha,
+            qsgd_bits, run_seed,
+        );
+    });
+    WorkerHandle {
+        endpoint: leader_ep,
+        control: ctl_tx,
+        telemetry: tel_rx,
+        join: Some(join),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_main(
+    id: usize,
+    ep: AgentEndpoint,
+    ctl: std::sync::mpsc::Receiver<Control>,
+    telemetry: std::sync::mpsc::Sender<f32>,
+    method: Method,
+    spec: ModelSpec,
+    train: Arc<crate::data::Dataset>,
+    shard: Vec<usize>,
+    steps: usize,
+    batch: usize,
+    alpha: f32,
+    qsgd_bits: u32,
+    run_seed: u64,
+) {
+    let mut backend = PureRustBackend::new(&spec);
+    backend.set_shape(steps, batch);
+    let mut state = ClientState::new(id, train, shard, steps, batch, run_seed);
+    // per-worker quantizer stream (independent of other workers)
+    let mut quantizer = Quantizer::new(qsgd_bits, SplitMix64::derive(run_seed ^ 0x9594, id as u64));
+    while let Ok(Control::Round) = ctl.recv() {
+        let Ok(frame) = ep.downlink.recv() else { return };
+        let Ok(model) = WireModel::decode(&frame) else { return };
+        state.fill_round_batches(steps, batch);
+        let (wire, loss) = match method {
+            Method::FedScalar { dist, projections } => {
+                let seed = state.next_projection_seed();
+                let up = backend
+                    .client_fedscalar(
+                        &model.params,
+                        &state.xb,
+                        &state.yb,
+                        seed,
+                        alpha,
+                        dist,
+                        projections,
+                    )
+                    .expect("client stage");
+                let loss = up.loss;
+                (WireUplink::from_scalar(&up), loss)
+            }
+            Method::FedAvg => {
+                let (delta, loss) = backend
+                    .client_delta(&model.params, &state.xb, &state.yb, alpha)
+                    .expect("client stage");
+                (WireUplink::Dense { delta }, loss)
+            }
+            Method::Qsgd { .. } => {
+                let (delta, loss) = backend
+                    .client_delta(&model.params, &state.xb, &state.yb, alpha)
+                    .expect("client stage");
+                (WireUplink::from_qsgd(&quantizer.quantize(&delta)), loss)
+            }
+        };
+        if ep.uplink.send(wire.encode()).is_err() {
+            return;
+        }
+        if telemetry.send(loss).is_err() {
+            return;
+        }
+    }
+}

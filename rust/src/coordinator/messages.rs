@@ -1,0 +1,94 @@
+//! Wire-protocol message types and their *byte-exact* payload accounting.
+//!
+//! `Uplink::wire_bits()` is the single source of truth the engine charges
+//! the network simulator with; the tests pin it to
+//! `Method::uplink_bits(d)` so the figures' x-axes can never drift from
+//! the strategy definitions.
+
+use crate::algo::QsgdPacket;
+use crate::runtime::ScalarUpload;
+
+/// What one agent sends to the server in one round.
+#[derive(Debug, Clone)]
+pub enum Uplink {
+    /// FedScalar: m scalars + one 32-bit seed. The `loss`/`delta_sq`
+    /// fields of the inner upload are simulation telemetry, NOT wire.
+    Scalar(ScalarUpload),
+    /// FedAvg: the raw d-dimensional update.
+    Dense { delta: Vec<f32>, loss: f32 },
+    /// QSGD: quantized update packet.
+    Quantized { packet: QsgdPacket, loss: f32 },
+}
+
+impl Uplink {
+    /// Uplink payload in bits.
+    pub fn wire_bits(&self) -> u64 {
+        match self {
+            Uplink::Scalar(u) => 32 + 32 * u.rs.len() as u64,
+            Uplink::Dense { delta, .. } => 32 * delta.len() as u64,
+            Uplink::Quantized { packet, .. } => packet.wire_bits(),
+        }
+    }
+
+    /// The client-reported mean local loss (Fig 2 series input).
+    pub fn loss(&self) -> f32 {
+        match self {
+            Uplink::Scalar(u) => u.loss,
+            Uplink::Dense { loss, .. } => *loss,
+            Uplink::Quantized { loss, .. } => *loss,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{Method, Quantizer};
+    use crate::rng::VDistribution;
+
+    #[test]
+    fn scalar_wire_bits_match_method() {
+        for m in [1usize, 4, 16] {
+            let up = Uplink::Scalar(ScalarUpload {
+                seed: 1,
+                rs: vec![0.5; m],
+                loss: 9.9,        // telemetry only
+                delta_sq: 1234.0, // telemetry only
+            });
+            let method = Method::FedScalar {
+                dist: VDistribution::Rademacher,
+                projections: m,
+            };
+            assert_eq!(up.wire_bits(), method.uplink_bits(1990));
+            assert_eq!(up.wire_bits(), method.uplink_bits(1_000_000));
+        }
+    }
+
+    #[test]
+    fn dense_wire_bits_match_method() {
+        let up = Uplink::Dense {
+            delta: vec![0.0; 1990],
+            loss: 0.0,
+        };
+        assert_eq!(up.wire_bits(), Method::FedAvg.uplink_bits(1990));
+    }
+
+    #[test]
+    fn quantized_wire_bits_match_method() {
+        let mut q = Quantizer::new(8, 0);
+        let up = Uplink::Quantized {
+            packet: q.quantize(&vec![1.0f32; 1990]),
+            loss: 0.0,
+        };
+        assert_eq!(up.wire_bits(), Method::Qsgd { bits: 8 }.uplink_bits(1990));
+    }
+
+    #[test]
+    fn loss_passthrough() {
+        let up = Uplink::Dense {
+            delta: vec![],
+            loss: 2.5,
+        };
+        assert_eq!(up.loss(), 2.5);
+    }
+}

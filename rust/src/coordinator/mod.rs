@@ -1,0 +1,29 @@
+//! L3 coordinator: the federated round engine.
+//!
+//! One [`Engine`] owns the global model state, the per-agent samplers, the
+//! network simulator, and a compute [`crate::runtime::Backend`]; each
+//! `run()` produces the full per-round metric history that the experiment
+//! harness (and every figure bench) consumes.
+//!
+//! Structure:
+//! * [`messages`] — the wire-protocol types + byte-exact payload accounting
+//! * [`client`]  — per-agent state (shard sampler, batch buffers)
+//! * [`server`]  — aggregation rules per strategy
+//! * [`engine`]  — the round loop: broadcast -> local stage -> uplink ->
+//!   aggregate -> netsim accounting -> (periodic) evaluation
+
+pub mod checkpoint;
+pub mod client;
+pub mod distributed;
+pub mod engine;
+pub mod messages;
+pub mod server;
+pub mod transport;
+pub mod wire;
+
+pub use checkpoint::Checkpoint;
+pub use client::ClientState;
+pub use distributed::DistributedEngine;
+pub use engine::{Engine, RunOutput};
+pub use messages::Uplink;
+pub use wire::{WireModel, WireUplink};

@@ -1,0 +1,157 @@
+//! In-process transport: byte-counted duplex links between the leader and
+//! each agent worker.
+//!
+//! The distributed engine ships *serialized frames* (coordinator::wire)
+//! through these links, so its communication accounting is measured from
+//! actual transmitted bytes rather than computed from a formula — the
+//! formula ([`crate::algo::Method::uplink_bits`]) is then cross-checked
+//! against the measurement in the tests.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// Bytes-transferred counters for one direction of a link.
+#[derive(Debug, Default)]
+pub struct LinkStats {
+    pub frames: AtomicU64,
+    pub bytes: AtomicU64,
+}
+
+impl LinkStats {
+    pub fn record(&self, len: usize) {
+        self.frames.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(len as u64, Ordering::Relaxed);
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn frames(&self) -> u64 {
+        self.frames.load(Ordering::Relaxed)
+    }
+}
+
+/// Sending half of a byte-counted link.
+pub struct FrameSender {
+    tx: Sender<Vec<u8>>,
+    stats: Arc<LinkStats>,
+}
+
+impl FrameSender {
+    pub fn send(&self, frame: Vec<u8>) -> Result<(), &'static str> {
+        self.stats.record(frame.len());
+        self.tx.send(frame).map_err(|_| "peer hung up")
+    }
+}
+
+/// Receiving half.
+pub struct FrameReceiver {
+    rx: Receiver<Vec<u8>>,
+}
+
+impl FrameReceiver {
+    pub fn recv(&self) -> Result<Vec<u8>, &'static str> {
+        self.rx.recv().map_err(|_| "peer hung up")
+    }
+
+    pub fn try_recv(&self) -> Option<Vec<u8>> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// One directed, byte-counted channel.
+pub fn link() -> (FrameSender, FrameReceiver, Arc<LinkStats>) {
+    let (tx, rx) = channel();
+    let stats = Arc::new(LinkStats::default());
+    (
+        FrameSender {
+            tx,
+            stats: stats.clone(),
+        },
+        FrameReceiver { rx },
+        stats,
+    )
+}
+
+/// The leader's side of a full duplex connection to one agent.
+pub struct LeaderEndpoint {
+    pub downlink: FrameSender,
+    pub uplink: FrameReceiver,
+    pub down_stats: Arc<LinkStats>,
+    pub up_stats: Arc<LinkStats>,
+}
+
+/// The agent's side.
+pub struct AgentEndpoint {
+    pub downlink: FrameReceiver,
+    pub uplink: FrameSender,
+}
+
+/// Create a duplex leader<->agent connection.
+pub fn duplex() -> (LeaderEndpoint, AgentEndpoint) {
+    let (d_tx, d_rx, d_stats) = link();
+    let (u_tx, u_rx, u_stats) = link();
+    (
+        LeaderEndpoint {
+            downlink: d_tx,
+            uplink: u_rx,
+            down_stats: d_stats,
+            up_stats: u_stats,
+        },
+        AgentEndpoint {
+            downlink: d_rx,
+            uplink: u_tx,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_bytes_and_frames() {
+        let (tx, rx, stats) = link();
+        tx.send(vec![0u8; 13]).unwrap();
+        tx.send(vec![0u8; 7]).unwrap();
+        assert_eq!(rx.recv().unwrap().len(), 13);
+        assert_eq!(rx.recv().unwrap().len(), 7);
+        assert_eq!(stats.bytes(), 20);
+        assert_eq!(stats.frames(), 2);
+    }
+
+    #[test]
+    fn duplex_is_two_independent_links() {
+        let (leader, agent) = duplex();
+        leader.downlink.send(vec![1, 2, 3]).unwrap();
+        assert_eq!(agent.downlink.recv().unwrap(), vec![1, 2, 3]);
+        agent.uplink.send(vec![9]).unwrap();
+        assert_eq!(leader.uplink.recv().unwrap(), vec![9]);
+        assert_eq!(leader.down_stats.bytes(), 3);
+        assert_eq!(leader.up_stats.bytes(), 1);
+    }
+
+    #[test]
+    fn hangup_detected() {
+        let (tx, rx, _) = link();
+        drop(rx);
+        assert!(tx.send(vec![0]).is_err());
+        let (tx2, rx2, _) = link();
+        drop(tx2);
+        assert!(rx2.recv().is_err());
+    }
+
+    #[test]
+    fn cross_thread() {
+        let (leader, agent) = duplex();
+        let h = std::thread::spawn(move || {
+            let got = agent.downlink.recv().unwrap();
+            agent.uplink.send(got.iter().map(|b| b + 1).collect()).unwrap();
+        });
+        leader.downlink.send(vec![10, 20]).unwrap();
+        assert_eq!(leader.uplink.recv().unwrap(), vec![11, 21]);
+        h.join().unwrap();
+    }
+}

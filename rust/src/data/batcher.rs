@@ -1,0 +1,129 @@
+//! Per-agent minibatch sampler.
+//!
+//! Draws uniform-with-replacement minibatches from the agent's shard — the
+//! sampling model under which Assumption 2 (unbiased stochastic gradients)
+//! holds and the one the paper's batch-size-32 experiment uses. Fills the
+//! [S, B, dim] / [S, B] buffers consumed by both backends' client stages.
+
+use super::Dataset;
+use crate::rng::Xoshiro256;
+use std::sync::Arc;
+
+#[derive(Debug, Clone)]
+pub struct BatchSampler {
+    data: Arc<Dataset>,
+    shard: Vec<usize>,
+    rng: Xoshiro256,
+}
+
+impl BatchSampler {
+    pub fn new(data: Arc<Dataset>, shard: Vec<usize>, seed: u64) -> Self {
+        assert!(!shard.is_empty(), "agent shard must be non-empty");
+        assert!(shard.iter().all(|&i| i < data.len()));
+        BatchSampler {
+            data,
+            shard,
+            rng: Xoshiro256::seed_from(seed ^ 0xba7c_4e80_0000_0003),
+        }
+    }
+
+    pub fn shard_len(&self) -> usize {
+        self.shard.len()
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.data
+    }
+
+    /// Fill `steps` minibatches of size `batch` into the flat buffers
+    /// (layout [steps, batch, dim] / [steps, batch]).
+    pub fn fill_local_batches(
+        &mut self,
+        steps: usize,
+        batch: usize,
+        x_out: &mut [f32],
+        y_out: &mut [i32],
+    ) {
+        let dim = self.data.dim;
+        assert_eq!(x_out.len(), steps * batch * dim);
+        assert_eq!(y_out.len(), steps * batch);
+        for s in 0..steps {
+            for b in 0..batch {
+                let i = self.shard[self.rng.below(self.shard.len())];
+                let k = s * batch + b;
+                x_out[k * dim..(k + 1) * dim].copy_from_slice(self.data.row(i));
+                y_out[k] = self.data.y[i];
+            }
+        }
+    }
+
+    /// Convenience allocating variant.
+    pub fn local_batches(&mut self, steps: usize, batch: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut x = vec![0.0; steps * batch * self.data.dim];
+        let mut y = vec![0; steps * batch];
+        self.fill_local_batches(steps, batch, &mut x, &mut y);
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+
+    fn tiny() -> Arc<Dataset> {
+        Arc::new(generate(
+            &SyntheticConfig {
+                n_per_class: 4,
+                ..Default::default()
+            },
+            0,
+        ))
+    }
+
+    #[test]
+    fn batches_come_from_the_shard() {
+        let ds = tiny();
+        let shard = vec![0, 1, 2];
+        let mut s = BatchSampler::new(ds.clone(), shard.clone(), 0);
+        let (x, y) = s.local_batches(3, 4);
+        assert_eq!(x.len(), 3 * 4 * 64);
+        assert_eq!(y.len(), 12);
+        // every sampled row must match one of the shard rows exactly
+        for k in 0..12 {
+            let row = &x[k * 64..(k + 1) * 64];
+            let hit = shard.iter().any(|&i| ds.row(i) == row && ds.y[i] == y[k]);
+            assert!(hit, "row {k} not from shard");
+        }
+    }
+
+    #[test]
+    fn deterministic_stream() {
+        let ds = tiny();
+        let mut a = BatchSampler::new(ds.clone(), vec![0, 5, 9, 13], 7);
+        let mut b = BatchSampler::new(ds.clone(), vec![0, 5, 9, 13], 7);
+        assert_eq!(a.local_batches(2, 3), b.local_batches(2, 3));
+        // second draw differs from the first (fresh randomness per call)
+        let second = a.local_batches(2, 3);
+        let first_again = b.local_batches(2, 3);
+        assert_eq!(second, first_again);
+    }
+
+    #[test]
+    fn singleton_shard_repeats() {
+        let ds = tiny();
+        let mut s = BatchSampler::new(ds.clone(), vec![3], 1);
+        let (x, y) = s.local_batches(1, 5);
+        for k in 0..5 {
+            assert_eq!(&x[k * 64..(k + 1) * 64], ds.row(3));
+            assert_eq!(y[k], ds.y[3]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty")]
+    fn empty_shard_panics() {
+        let ds = tiny();
+        BatchSampler::new(ds, vec![], 0);
+    }
+}

@@ -1,0 +1,196 @@
+//! In-memory dataset + the CSV format shared with the Python side.
+
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// A dense classification dataset: features row-major [n, dim], labels [n].
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub dim: usize,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f32>, y: Vec<i32>, dim: usize, num_classes: usize) -> Self {
+        assert_eq!(x.len(), y.len() * dim);
+        Dataset {
+            x,
+            y,
+            dim,
+            num_classes,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Feature row `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Load the `f0,...,f{dim-1},label` CSV emitted by
+    /// `python/compile/data.dump_csv`.
+    pub fn load_csv(path: impl AsRef<Path>, dim: usize, num_classes: usize) -> Result<Dataset> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)?;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        let pstr = path.display().to_string();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut fields = line.split(',');
+            for k in 0..dim {
+                let f = fields.next().ok_or_else(|| Error::Parse {
+                    path: pstr.clone(),
+                    line: lineno + 1,
+                    msg: format!("expected {} features, got {k}", dim),
+                })?;
+                let v: f32 = f.trim().parse().map_err(|e| Error::Parse {
+                    path: pstr.clone(),
+                    line: lineno + 1,
+                    msg: format!("bad float {f:?}: {e}"),
+                })?;
+                x.push(v);
+            }
+            let lab = fields.next().ok_or_else(|| Error::Parse {
+                path: pstr.clone(),
+                line: lineno + 1,
+                msg: "missing label".into(),
+            })?;
+            let lab: i32 = lab.trim().parse().map_err(|e| Error::Parse {
+                path: pstr.clone(),
+                line: lineno + 1,
+                msg: format!("bad label {lab:?}: {e}"),
+            })?;
+            if lab < 0 || lab >= num_classes as i32 {
+                return Err(Error::Parse {
+                    path: pstr.clone(),
+                    line: lineno + 1,
+                    msg: format!("label {lab} out of range 0..{num_classes}"),
+                });
+            }
+            if fields.next().is_some() {
+                return Err(Error::Parse {
+                    path: pstr.clone(),
+                    line: lineno + 1,
+                    msg: "trailing fields".into(),
+                });
+            }
+            y.push(lab);
+        }
+        if y.is_empty() {
+            return Err(Error::Parse {
+                path: pstr,
+                line: 0,
+                msg: "empty dataset".into(),
+            });
+        }
+        Ok(Dataset::new(x, y, dim, num_classes))
+    }
+
+    /// Per-class sample counts.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.num_classes];
+        for &lab in &self.y {
+            c[lab as usize] += 1;
+        }
+        c
+    }
+
+    /// Gather rows by index into freshly allocated buffers.
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(idx.len() * self.dim);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        (x, y)
+    }
+
+    /// Gather rows by index into caller-owned buffers (hot-path variant).
+    pub fn gather_into(&self, idx: &[usize], x_out: &mut [f32], y_out: &mut [i32]) {
+        assert_eq!(x_out.len(), idx.len() * self.dim);
+        assert_eq!(y_out.len(), idx.len());
+        for (k, &i) in idx.iter().enumerate() {
+            x_out[k * self.dim..(k + 1) * self.dim].copy_from_slice(self.row(i));
+            y_out[k] = self.y[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpfile(content: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "fedscalar_ds_test_{}_{}.csv",
+            std::process::id(),
+            content.len()
+        ));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        path
+    }
+
+    #[test]
+    fn load_good_csv() {
+        let p = tmpfile("0.1,0.2,1\n0.3,0.4,0\n");
+        let ds = Dataset::load_csv(&p, 2, 2).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.row(0), &[0.1, 0.2]);
+        assert_eq!(ds.y, vec![1, 0]);
+        assert_eq!(ds.class_counts(), vec![1, 1]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_rows() {
+        for bad in [
+            "0.1,zzz,1\n",       // bad float
+            "0.1,0.2\n",         // missing label
+            "0.1,0.2,5\n",       // label out of range
+            "0.1,0.2,1,9\n",     // trailing field
+            "",                  // empty
+        ] {
+            let p = tmpfile(&format!("{bad}?"));
+            // the "?" forces unique filenames per case; rewrite cleanly:
+            std::fs::write(&p, bad).unwrap();
+            assert!(Dataset::load_csv(&p, 2, 2).is_err(), "{bad:?}");
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn gather_variants_agree() {
+        let ds = Dataset::new(
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+            vec![0, 1, 0],
+            2,
+            2,
+        );
+        let idx = [2, 0];
+        let (x, y) = ds.gather(&idx);
+        assert_eq!(x, vec![4.0, 5.0, 0.0, 1.0]);
+        assert_eq!(y, vec![0, 0]);
+        let mut x2 = vec![0.0; 4];
+        let mut y2 = vec![0; 2];
+        ds.gather_into(&idx, &mut x2, &mut y2);
+        assert_eq!(x, x2);
+        assert_eq!(y, y2);
+    }
+}

@@ -1,0 +1,18 @@
+//! Dataset substrate: CSV-backed Digits corpus + synthetic generator,
+//! client partitioning (IID and Dirichlet non-IID), and the per-agent
+//! minibatch sampler.
+//!
+//! The canonical corpus is generated at artifact-build time by
+//! `python/compile/data.py` and loaded here from `artifacts/digits_*.csv`,
+//! so the JAX tests and the Rust coordinator train on byte-identical data.
+//! [`synthetic::generate`] is a native twin used when artifacts are absent
+//! (unit tests, artifact-free quickstart).
+
+mod batcher;
+mod dataset;
+mod partition;
+pub mod synthetic;
+
+pub use batcher::BatchSampler;
+pub use dataset::Dataset;
+pub use partition::{dirichlet_partition, iid_partition, Partition};

@@ -1,0 +1,230 @@
+//! Partition a dataset across the N federated agents.
+//!
+//! The paper's experiment distributes the corpus IID across N = 20 agents;
+//! [`dirichlet_partition`] adds the standard label-skew non-IID variant
+//! (used by the non-IID ablation bench).
+
+use super::Dataset;
+use crate::rng::Xoshiro256;
+
+/// Per-agent sample indices into the parent dataset.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub shards: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    pub fn num_agents(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn total_samples(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn min_shard(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).min().unwrap_or(0)
+    }
+
+    /// Every index appears in exactly one shard and is within bounds.
+    pub fn validate(&self, n: usize) -> bool {
+        let mut seen = vec![false; n];
+        for shard in &self.shards {
+            for &i in shard {
+                if i >= n || seen[i] {
+                    return false;
+                }
+                seen[i] = true;
+            }
+        }
+        true
+    }
+}
+
+/// Shuffle and deal samples round-robin: shard sizes differ by at most 1.
+pub fn iid_partition(n_samples: usize, n_agents: usize, seed: u64) -> Partition {
+    assert!(n_agents > 0);
+    let mut rng = Xoshiro256::seed_from(seed ^ 0x11d0_0000_0000_0001);
+    let mut idx: Vec<usize> = (0..n_samples).collect();
+    rng.shuffle(&mut idx);
+    let mut shards = vec![Vec::new(); n_agents];
+    for (k, i) in idx.into_iter().enumerate() {
+        shards[k % n_agents].push(i);
+    }
+    Partition { shards }
+}
+
+/// Label-skew non-IID: for each class, split its samples across agents with
+/// proportions drawn from Dirichlet(alpha). Small alpha => each agent sees
+/// few classes; alpha -> inf recovers IID.
+pub fn dirichlet_partition(ds: &Dataset, n_agents: usize, alpha: f64, seed: u64) -> Partition {
+    assert!(n_agents > 0 && alpha > 0.0);
+    let mut rng = Xoshiro256::seed_from(seed ^ 0xd1c1_e700_0000_0002);
+    let mut shards = vec![Vec::new(); n_agents];
+    for c in 0..ds.num_classes {
+        let mut cls: Vec<usize> = (0..ds.len()).filter(|&i| ds.y[i] == c as i32).collect();
+        rng.shuffle(&mut cls);
+        let props = sample_dirichlet(&mut rng, n_agents, alpha);
+        // convert proportions to cut points
+        let mut start = 0usize;
+        let mut acc = 0.0f64;
+        for (a, &p) in props.iter().enumerate() {
+            acc += p;
+            let end = if a + 1 == n_agents {
+                cls.len()
+            } else {
+                ((cls.len() as f64) * acc).round() as usize
+            }
+            .min(cls.len());
+            shards[a].extend_from_slice(&cls[start..end]);
+            start = end;
+        }
+    }
+    for s in shards.iter_mut() {
+        s.sort_unstable();
+    }
+    Partition { shards }
+}
+
+/// Dirichlet(alpha, ..., alpha) via normalized Gamma(alpha, 1) draws
+/// (Marsaglia–Tsang for alpha >= 1, boost trick below 1).
+fn sample_dirichlet(rng: &mut Xoshiro256, k: usize, alpha: f64) -> Vec<f64> {
+    let mut g = crate::rng::GaussianSource::new();
+    let mut xs: Vec<f64> = (0..k).map(|_| sample_gamma(rng, &mut g, alpha)).collect();
+    let s: f64 = xs.iter().sum();
+    if s <= 0.0 {
+        // pathological underflow: fall back to uniform
+        return vec![1.0 / k as f64; k];
+    }
+    for x in xs.iter_mut() {
+        *x /= s;
+    }
+    xs
+}
+
+fn sample_gamma(rng: &mut Xoshiro256, g: &mut crate::rng::GaussianSource, alpha: f64) -> f64 {
+    if alpha < 1.0 {
+        // Gamma(a) = Gamma(a+1) * U^{1/a}
+        let u = rng.uniform_f64().max(f64::MIN_POSITIVE);
+        return sample_gamma(rng, g, alpha + 1.0) * u.powf(1.0 / alpha);
+    }
+    // Marsaglia–Tsang
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = g.next(rng) as f64;
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v3 = v * v * v;
+        let u = rng.uniform_f64();
+        if u < 1.0 - 0.0331 * x * x * x * x {
+            return d * v3;
+        }
+        if u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+            return d * v3;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+
+    #[test]
+    fn iid_partition_covers_everything() {
+        let p = iid_partition(101, 7, 0);
+        assert_eq!(p.num_agents(), 7);
+        assert_eq!(p.total_samples(), 101);
+        assert!(p.validate(101));
+        // balanced within 1
+        let sizes: Vec<usize> = p.shards.iter().map(|s| s.len()).collect();
+        let (mn, mx) = (
+            *sizes.iter().min().unwrap(),
+            *sizes.iter().max().unwrap(),
+        );
+        assert!(mx - mn <= 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn iid_partition_deterministic() {
+        let a = iid_partition(50, 5, 3);
+        let b = iid_partition(50, 5, 3);
+        let c = iid_partition(50, 5, 4);
+        assert_eq!(a.shards, b.shards);
+        assert_ne!(a.shards, c.shards);
+    }
+
+    #[test]
+    fn dirichlet_partition_covers_everything() {
+        let ds = generate(
+            &SyntheticConfig {
+                n_per_class: 20,
+                ..Default::default()
+            },
+            0,
+        );
+        for alpha in [0.1, 1.0, 100.0] {
+            let p = dirichlet_partition(&ds, 6, alpha, 1);
+            assert_eq!(p.total_samples(), ds.len(), "alpha={alpha}");
+            assert!(p.validate(ds.len()), "alpha={alpha}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_small_alpha_is_skewed() {
+        let ds = generate(
+            &SyntheticConfig {
+                n_per_class: 60,
+                ..Default::default()
+            },
+            0,
+        );
+        // class-distribution entropy per agent: small alpha -> much lower
+        let ent = |p: &Partition| -> f64 {
+            let mut total = 0.0;
+            for shard in &p.shards {
+                let mut counts = vec![0usize; 10];
+                for &i in shard {
+                    counts[ds.y[i] as usize] += 1;
+                }
+                let n: usize = counts.iter().sum();
+                if n == 0 {
+                    continue;
+                }
+                let mut h = 0.0;
+                for &c in &counts {
+                    if c > 0 {
+                        let q = c as f64 / n as f64;
+                        h -= q * q.ln();
+                    }
+                }
+                total += h;
+            }
+            total / p.num_agents() as f64
+        };
+        let skewed = ent(&dirichlet_partition(&ds, 8, 0.1, 2));
+        let uniform = ent(&dirichlet_partition(&ds, 8, 100.0, 2));
+        assert!(
+            skewed < uniform - 0.3,
+            "skewed={skewed} uniform={uniform}"
+        );
+    }
+
+    #[test]
+    fn gamma_sampler_mean() {
+        let mut rng = Xoshiro256::seed_from(9);
+        let mut g = crate::rng::GaussianSource::new();
+        for alpha in [0.5f64, 1.0, 2.5, 10.0] {
+            let n = 20_000;
+            let mean: f64 =
+                (0..n).map(|_| sample_gamma(&mut rng, &mut g, alpha)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - alpha).abs() < 0.1 * alpha.max(1.0),
+                "alpha={alpha} mean={mean}"
+            );
+        }
+    }
+}

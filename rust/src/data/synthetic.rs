@@ -1,0 +1,208 @@
+//! Native twin of `python/compile/data.py`: procedural Digits-like corpus
+//! from the same ten 8x8 glyph templates (intensity jitter + translation +
+//! pixel noise). Distributionally equivalent to the CSV corpus, used when
+//! artifacts are absent (unit tests, artifact-free quickstart).
+
+use super::Dataset;
+use crate::rng::{GaussianSource, Xoshiro256};
+
+pub const IMG_SIDE: usize = 8;
+pub const NUM_FEATURES: usize = IMG_SIDE * IMG_SIDE;
+pub const NUM_CLASSES: usize = 10;
+
+// Same glyphs as python/compile/data.py ('#'=16, '+'=8, '.'=0).
+const GLYPHS: [[&str; 8]; 10] = [
+    [".+###+..", "+#...#+.", "#+...+#.", "#.....#.", "#.....#.", "#+...+#.", "+#...#+.", ".+###+.."],
+    ["...##...", "..+##...", ".+.##...", "...##...", "...##...", "...##...", "...##...", ".+####+."],
+    [".+###+..", "#+...#+.", ".....##.", "....+#..", "...+#+..", "..+#+...", ".+#+....", "+######."],
+    [".####+..", "....+#+.", ".....#+.", "..+##+..", ".....#+.", ".....+#.", "#+...+#.", ".+###+.."],
+    ["....+#..", "...+##..", "..+#+#..", ".+#.+#..", "+#..+#..", "########", "....+#..", "....+#.."],
+    ["+#####..", "+#......", "+#......", "+####+..", ".....#+.", "......#.", "+#...+#.", ".+###+.."],
+    ["..+###..", ".+#+....", "+#......", "+####+..", "+#...#+.", "#.....#.", "+#...#+.", ".+###+.."],
+    ["#######.", ".....+#.", "....+#..", "....#+..", "...+#...", "...#+...", "..+#....", "..##...."],
+    [".+###+..", "+#...#+.", "+#...#+.", ".+###+..", "+#...#+.", "#.....#.", "+#...#+.", ".+###+.."],
+    [".+###+..", "+#...#+.", "#.....#.", "+#...##.", ".+###+#.", "......#.", "....+#+.", "..###+.."],
+];
+
+/// The ten class templates, [10][64], values 0..16.
+pub fn glyph_templates() -> Vec<[f32; NUM_FEATURES]> {
+    GLYPHS
+        .iter()
+        .map(|rows| {
+            let mut t = [0.0f32; NUM_FEATURES];
+            for (i, row) in rows.iter().enumerate() {
+                for (j, ch) in row.bytes().enumerate() {
+                    t[i * IMG_SIDE + j] = match ch {
+                        b'#' => 16.0,
+                        b'+' => 8.0,
+                        b'.' => 0.0,
+                        _ => unreachable!("bad glyph char"),
+                    };
+                }
+            }
+            t
+        })
+        .collect()
+}
+
+/// Roll a [8,8] image by (dy, dx) with wraparound (numpy.roll semantics).
+fn roll(img: &[f32; NUM_FEATURES], dy: i32, dx: i32) -> [f32; NUM_FEATURES] {
+    let mut out = [0.0f32; NUM_FEATURES];
+    let s = IMG_SIDE as i32;
+    for i in 0..s {
+        for j in 0..s {
+            let si = (i - dy).rem_euclid(s);
+            let sj = (j - dx).rem_euclid(s);
+            out[(i * s + j) as usize] = img[(si * s + sj) as usize];
+        }
+    }
+    out
+}
+
+/// Generation knobs (defaults mirror python/compile/data.py).
+#[derive(Debug, Clone)]
+pub struct SyntheticConfig {
+    pub n_per_class: usize,
+    pub noise_std: f32,
+    pub intensity_jitter: f32,
+    pub max_shift: i32,
+}
+
+impl Default for SyntheticConfig {
+    fn default() -> Self {
+        SyntheticConfig {
+            n_per_class: 180,
+            noise_std: 1.5,
+            intensity_jitter: 0.3,
+            max_shift: 1,
+        }
+    }
+}
+
+/// Generate the synthetic corpus (features normalized to [0,1]).
+pub fn generate(cfg: &SyntheticConfig, seed: u64) -> Dataset {
+    let templates = glyph_templates();
+    let n = cfg.n_per_class * NUM_CLASSES;
+    let mut rng = Xoshiro256::seed_from(seed ^ 0xd161_7500_0000_0000);
+    let mut gauss = GaussianSource::new();
+    let mut x = Vec::with_capacity(n * NUM_FEATURES);
+    let mut y = Vec::with_capacity(n);
+    for c in 0..NUM_CLASSES {
+        for _ in 0..cfg.n_per_class {
+            let mut img = templates[c];
+            let gain = 1.0 + rng.uniform_in(-cfg.intensity_jitter, cfg.intensity_jitter);
+            for v in img.iter_mut() {
+                *v *= gain;
+            }
+            if cfg.max_shift > 0 {
+                let dy = rng.below(2 * cfg.max_shift as usize + 1) as i32 - cfg.max_shift;
+                let dx = rng.below(2 * cfg.max_shift as usize + 1) as i32 - cfg.max_shift;
+                img = roll(&img, dy, dx);
+            }
+            for v in img.iter_mut() {
+                *v = (*v + cfg.noise_std * gauss.next(&mut rng)).clamp(0.0, 16.0);
+            }
+            x.extend(img.iter().map(|v| v / 16.0));
+            y.push(c as i32);
+        }
+    }
+    // shuffle rows
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut xs = Vec::with_capacity(x.len());
+    let mut ys = Vec::with_capacity(n);
+    for &i in &order {
+        xs.extend_from_slice(&x[i * NUM_FEATURES..(i + 1) * NUM_FEATURES]);
+        ys.push(y[i]);
+    }
+    Dataset::new(xs, ys, NUM_FEATURES, NUM_CLASSES)
+}
+
+/// Deterministic stratified train/test split.
+pub fn train_test_split(ds: &Dataset, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+    let mut rng = Xoshiro256::seed_from(seed ^ 0x5911_7000_0000_0000);
+    let mut train_idx = Vec::new();
+    let mut test_idx = Vec::new();
+    for c in 0..ds.num_classes {
+        let mut cls: Vec<usize> = (0..ds.len()).filter(|&i| ds.y[i] == c as i32).collect();
+        rng.shuffle(&mut cls);
+        let n_test = (cls.len() as f64 * test_frac).round() as usize;
+        test_idx.extend_from_slice(&cls[..n_test]);
+        train_idx.extend_from_slice(&cls[n_test..]);
+    }
+    train_idx.sort_unstable();
+    test_idx.sort_unstable();
+    let (xtr, ytr) = ds.gather(&train_idx);
+    let (xte, yte) = ds.gather(&test_idx);
+    (
+        Dataset::new(xtr, ytr, ds.dim, ds.num_classes),
+        Dataset::new(xte, yte, ds.dim, ds.num_classes),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn templates_match_python_values() {
+        let t = glyph_templates();
+        assert_eq!(t.len(), 10);
+        // spot checks against the glyph strings
+        assert_eq!(t[0][1], 8.0); // '.' '+' at row0 col1 of the zero glyph
+        assert_eq!(t[0][2], 16.0);
+        assert_eq!(t[4][5 * 8], 16.0); // the '4' crossbar row
+        for row in &t {
+            assert!(row.iter().all(|&v| v == 0.0 || v == 8.0 || v == 16.0));
+        }
+    }
+
+    #[test]
+    fn roll_wraps() {
+        let mut img = [0.0f32; 64];
+        img[0] = 1.0;
+        let r = roll(&img, 1, 1);
+        assert_eq!(r[IMG_SIDE + 1], 1.0);
+        let r2 = roll(&img, -1, 0);
+        assert_eq!(r2[7 * IMG_SIDE], 1.0);
+    }
+
+    #[test]
+    fn generate_shapes_balance_normalization() {
+        let cfg = SyntheticConfig {
+            n_per_class: 12,
+            ..Default::default()
+        };
+        let ds = generate(&cfg, 0);
+        assert_eq!(ds.len(), 120);
+        assert!(ds.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert_eq!(ds.class_counts(), vec![12; 10]);
+    }
+
+    #[test]
+    fn generate_deterministic() {
+        let cfg = SyntheticConfig {
+            n_per_class: 5,
+            ..Default::default()
+        };
+        let a = generate(&cfg, 7);
+        let b = generate(&cfg, 7);
+        let c = generate(&cfg, 8);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn split_is_stratified_and_disjoint_sizes() {
+        let cfg = SyntheticConfig {
+            n_per_class: 20,
+            ..Default::default()
+        };
+        let ds = generate(&cfg, 1);
+        let (tr, te) = train_test_split(&ds, 0.2, 0);
+        assert_eq!(tr.len(), 160);
+        assert_eq!(te.len(), 40);
+        assert_eq!(te.class_counts(), vec![4; 10]);
+    }
+}

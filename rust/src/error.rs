@@ -1,0 +1,54 @@
+//! Crate-wide error type.
+
+/// Unified error type for the fedscalar crate.
+#[derive(thiserror::Error, Debug)]
+pub enum Error {
+    /// Errors surfaced by the PJRT runtime (`xla` crate).
+    #[error("xla runtime error: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// Filesystem / IO failures (artifact loading, CSV output, ...).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// A required AOT artifact is missing or inconsistent with the config.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Malformed configuration or CLI input.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Malformed data file (dataset CSV, manifest, ...).
+    #[error("parse error in {path}:{line}: {msg}")]
+    Parse {
+        path: String,
+        line: usize,
+        msg: String,
+    },
+
+    /// Shape / dimension mismatch between components.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// An invariant the coordinator relies on was violated at runtime.
+    #[error("invariant violated: {0}")]
+    Invariant(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        Error::Artifact(msg.into())
+    }
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+    pub fn invariant(msg: impl Into<String>) -> Self {
+        Error::Invariant(msg.into())
+    }
+}

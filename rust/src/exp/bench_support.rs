@@ -1,0 +1,110 @@
+//! Shared plumbing for the `rust/benches/*` targets (cargo bench runs them
+//! with `harness = false`).
+//!
+//! Environment knobs so `cargo bench` stays tractable while the full paper
+//! configuration remains one env var away:
+//!   FEDSCALAR_BENCH_ROUNDS  (default 400;  paper: 1500)
+//!   FEDSCALAR_BENCH_RUNS    (default 3;    paper: 10)
+//!   FEDSCALAR_BENCH_BACKEND (default pure-rust; xla = PJRT artifacts)
+//!   FEDSCALAR_BENCH_FULL=1  shorthand for rounds=1500 runs=10
+
+use crate::config::{DataSource, ExperimentConfig};
+use crate::error::Result;
+use crate::exp::figures::{run_figure_suite, BackendKind, FigureSuite, SuiteOptions};
+use std::path::PathBuf;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn bench_rounds() -> usize {
+    if std::env::var("FEDSCALAR_BENCH_FULL").is_ok() {
+        return 1500;
+    }
+    env_usize("FEDSCALAR_BENCH_ROUNDS", 600)
+}
+
+pub fn bench_runs() -> usize {
+    if std::env::var("FEDSCALAR_BENCH_FULL").is_ok() {
+        return 10;
+    }
+    env_usize("FEDSCALAR_BENCH_RUNS", 3)
+}
+
+pub fn bench_backend() -> BackendKind {
+    std::env::var("FEDSCALAR_BENCH_BACKEND")
+        .ok()
+        .and_then(|s| BackendKind::parse(&s))
+        .unwrap_or(BackendKind::PureRust)
+}
+
+/// The §III experiment at bench scale. Uses the artifact CSVs when
+/// available (so Rust and JAX consume identical data), synthetic otherwise.
+pub fn bench_config() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_section_iii();
+    cfg.fed.rounds = bench_rounds();
+    cfg.fed.eval_every = (cfg.fed.rounds / 30).max(1);
+    if !PathBuf::from("artifacts/manifest.txt").exists() {
+        cfg.data = DataSource::Synthetic;
+    }
+    cfg
+}
+
+/// Run (once) the four-method suite that Figs 2-6 all project from.
+pub fn run_paper_suite(out_subdir: &str) -> Result<FigureSuite> {
+    let cfg = bench_config();
+    let opts = SuiteOptions {
+        runs: bench_runs(),
+        backend: bench_backend(),
+        out_dir: Some(PathBuf::from("results").join(out_subdir)),
+        parallel: true,
+        ..Default::default()
+    };
+    println!(
+        "suite: K={} runs={} backend={} data={:?} (set FEDSCALAR_BENCH_FULL=1 for the paper's 1500x10)",
+        cfg.fed.rounds,
+        opts.runs,
+        opts.backend.name(),
+        cfg.data
+    );
+    run_figure_suite(&cfg, &opts)
+}
+
+/// Pretty-print one x/y series per method at a set of grid points.
+pub fn print_series(
+    title: &str,
+    suite: &FigureSuite,
+    x_label: &str,
+    x_of: impl Fn(&crate::metrics::RoundRecord) -> f64,
+    y_of: impl Fn(&crate::metrics::RoundRecord) -> f64,
+    points: usize,
+) {
+    println!("\n=== {title} ===");
+    for (method, h) in &suite.per_method {
+        println!("-- {}", method.name());
+        let n = h.records.len();
+        let step = (n / points.max(1)).max(1);
+        println!("   {:<16} {:>12}", x_label, "value");
+        for (i, r) in h.records.iter().enumerate() {
+            if i % step == 0 || i + 1 == n {
+                println!("   {:<16.6e} {:>12.4}", x_of(r), y_of(r));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        assert!(bench_rounds() >= 1);
+        assert!(bench_runs() >= 1);
+        let cfg = bench_config();
+        cfg.validate().unwrap();
+    }
+}

@@ -1,0 +1,294 @@
+//! Figures 2-6: the four-method comparison suite (FedScalar-Normal,
+//! FedScalar-Rademacher, FedAvg, QSGD-8bit) on the Digits task, averaged
+//! over multiple runs, with bits / simulated-time / energy on the x-axes.
+//!
+//! All five figures are projections of one underlying sweep, so the suite
+//! runs it once and every bench/CLI target projects what it needs.
+
+use crate::algo::Method;
+use crate::config::ExperimentConfig;
+use crate::coordinator::engine::{Engine, RunOutput};
+use crate::error::{Error, Result};
+use crate::metrics::{average_runs, RunHistory};
+use crate::runtime::{Backend, PureRustBackend, XlaBackend};
+use crate::util::stats;
+use std::path::PathBuf;
+
+/// Which backend executes the compute stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    PureRust,
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "pure-rust" | "purerust" | "rust" => Some(BackendKind::PureRust),
+            "xla" | "pjrt" => Some(BackendKind::Xla),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::PureRust => "pure-rust",
+            BackendKind::Xla => "xla-pjrt",
+        }
+    }
+}
+
+/// Build a backend for `cfg`.
+pub fn make_backend(kind: BackendKind, cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::PureRust => {
+            let mut be = PureRustBackend::new(&cfg.model);
+            be.set_shape(cfg.fed.local_steps, cfg.fed.batch_size);
+            Ok(Box::new(be))
+        }
+        BackendKind::Xla => {
+            let be = XlaBackend::load(&cfg.artifacts_dir)?;
+            be.manifest().check_compatible(
+                cfg.model.param_dim(),
+                cfg.fed.num_agents,
+                cfg.fed.local_steps,
+                cfg.fed.batch_size,
+            )?;
+            Ok(Box::new(be))
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SuiteOptions {
+    pub methods: Vec<Method>,
+    pub runs: usize,
+    pub backend: BackendKind,
+    /// Write per-method CSVs under this directory (None = don't write).
+    pub out_dir: Option<PathBuf>,
+    /// Parallelize across runs (PureRust only; PJRT handles are !Send).
+    pub parallel: bool,
+}
+
+impl Default for SuiteOptions {
+    fn default() -> Self {
+        SuiteOptions {
+            methods: Method::PAPER_SET.to_vec(),
+            runs: 10,
+            backend: BackendKind::PureRust,
+            out_dir: Some(PathBuf::from("results")),
+            parallel: true,
+        }
+    }
+}
+
+/// The averaged history per method.
+#[derive(Debug, Clone)]
+pub struct FigureSuite {
+    pub per_method: Vec<(Method, RunHistory)>,
+    pub runs: usize,
+}
+
+/// Run the full comparison suite.
+pub fn run_figure_suite(base: &ExperimentConfig, opts: &SuiteOptions) -> Result<FigureSuite> {
+    if opts.runs == 0 || opts.methods.is_empty() {
+        return Err(Error::config("need >= 1 run and >= 1 method"));
+    }
+    let mut per_method = Vec::new();
+    for &method in &opts.methods {
+        let mut cfg = base.clone();
+        cfg.fed.method = method;
+        let runs = if opts.parallel && opts.backend == BackendKind::PureRust && opts.runs > 1 {
+            run_many_parallel(&cfg, opts.runs)?
+        } else {
+            run_many_serial(&cfg, opts.backend, opts.runs)?
+        };
+        let avg = average_runs(&runs);
+        if let Some(dir) = &opts.out_dir {
+            avg.write_csv(dir.join(format!("{}.csv", method.name())))?;
+        }
+        per_method.push((method, avg));
+    }
+    Ok(FigureSuite {
+        per_method,
+        runs: opts.runs,
+    })
+}
+
+fn run_many_serial(
+    cfg: &ExperimentConfig,
+    backend: BackendKind,
+    runs: usize,
+) -> Result<Vec<RunOutput>> {
+    (0..runs)
+        .map(|r| {
+            let be = make_backend(backend, cfg)?;
+            Engine::from_config(cfg, be, r as u64)?.run()
+        })
+        .collect()
+}
+
+/// Work-stealing run-level parallelism: each worker thread builds its own
+/// PureRust backend + engine (everything it owns is Send), pulls run ids
+/// from a shared counter, and writes into its result slot.
+fn run_many_parallel(cfg: &ExperimentConfig, runs: usize) -> Result<Vec<RunOutput>> {
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(runs);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results: std::sync::Mutex<Vec<Option<Result<RunOutput>>>> =
+        std::sync::Mutex::new((0..runs).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let r = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if r >= runs {
+                    break;
+                }
+                let out = (|| {
+                    let be = make_backend(BackendKind::PureRust, cfg)?;
+                    Engine::from_config(cfg, be, r as u64)?.run()
+                })();
+                results.lock().unwrap()[r] = Some(out);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("every run slot filled"))
+        .collect()
+}
+
+impl FigureSuite {
+    pub fn history(&self, method: Method) -> Option<&RunHistory> {
+        self.per_method
+            .iter()
+            .find(|(m, _)| *m == method)
+            .map(|(_, h)| h)
+    }
+
+    /// Fig 2/3 style summary: per-method (final train loss, final acc).
+    pub fn summary_rows(&self) -> Vec<(String, f64, f64)> {
+        self.per_method
+            .iter()
+            .map(|(m, h)| (m.name(), h.final_train_loss(), h.final_accuracy()))
+            .collect()
+    }
+
+    /// Fig 4/5/6 readout: accuracy at a given budget on the chosen axis.
+    pub fn acc_at(&self, axis: Axis, budget: f64) -> Vec<(String, Option<f64>)> {
+        self.per_method
+            .iter()
+            .map(|(m, h)| {
+                let v = match axis {
+                    Axis::Bits => h.acc_at_bits(budget),
+                    Axis::Seconds => h.acc_at_seconds(budget),
+                    Axis::Joules => h.acc_at_joules(budget),
+                };
+                (m.name(), v)
+            })
+            .collect()
+    }
+
+    /// Bits needed to reach an accuracy target (Fig 4 crossing readout).
+    pub fn bits_to_accuracy(&self, target: f64) -> Vec<(String, Option<f64>)> {
+        self.per_method
+            .iter()
+            .map(|(m, h)| {
+                (
+                    m.name(),
+                    stats::first_crossing(
+                        &h.series(|r| r.cum_bits),
+                        &h.series(|r| r.test_acc),
+                        target,
+                    ),
+                )
+            })
+            .collect()
+    }
+}
+
+/// The three budget axes of Figs 4, 5, 6.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Axis {
+    Bits,
+    Seconds,
+    Joules,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::VDistribution;
+
+    fn tiny_opts(runs: usize, parallel: bool) -> SuiteOptions {
+        SuiteOptions {
+            methods: vec![
+                Method::FedScalar {
+                    dist: VDistribution::Rademacher,
+                    projections: 1,
+                },
+                Method::FedAvg,
+            ],
+            runs,
+            backend: BackendKind::PureRust,
+            out_dir: None,
+            parallel,
+        }
+    }
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::smoke();
+        cfg.fed.rounds = 8;
+        cfg.fed.eval_every = 4;
+        cfg.fed.num_agents = 3;
+        cfg
+    }
+
+    #[test]
+    fn suite_runs_and_summarizes() {
+        let suite = run_figure_suite(&tiny_cfg(), &tiny_opts(2, false)).unwrap();
+        assert_eq!(suite.per_method.len(), 2);
+        let rows = suite.summary_rows();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|(_, l, a)| l.is_finite() && *a >= 0.0));
+        // fedavg uploads many more bits than fedscalar in the same rounds
+        let fs = suite.per_method[0].1.records.last().unwrap().cum_bits;
+        let fa = suite.per_method[1].1.records.last().unwrap().cum_bits;
+        assert!(fa > 100.0 * fs, "fa={fa} fs={fs}");
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let cfg = tiny_cfg();
+        let s = run_figure_suite(&cfg, &tiny_opts(3, false)).unwrap();
+        let p = run_figure_suite(&cfg, &tiny_opts(3, true)).unwrap();
+        for ((m1, h1), (m2, h2)) in s.per_method.iter().zip(&p.per_method) {
+            assert_eq!(m1, m2);
+            assert!(
+                crate::metrics::same_histories(h1, h2),
+                "method {}",
+                m1.name()
+            );
+        }
+    }
+
+    #[test]
+    fn backend_kind_parse() {
+        assert_eq!(BackendKind::parse("xla"), Some(BackendKind::Xla));
+        assert_eq!(BackendKind::parse("rust"), Some(BackendKind::PureRust));
+        assert_eq!(BackendKind::parse("gpu"), None);
+    }
+
+    #[test]
+    fn empty_opts_rejected() {
+        let mut o = tiny_opts(0, false);
+        assert!(run_figure_suite(&tiny_cfg(), &o).is_err());
+        o.runs = 1;
+        o.methods.clear();
+        assert!(run_figure_suite(&tiny_cfg(), &o).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation section. Each bench target and CLI subcommand is a thin
+//! wrapper over these functions (see DESIGN.md section 3 for the index).
+
+pub mod bench_support;
+pub mod figures;
+pub mod table1;
+
+pub use figures::{run_figure_suite, FigureSuite, SuiteOptions};
+pub use table1::{table1_rows, Table1Row};

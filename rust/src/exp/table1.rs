@@ -1,0 +1,142 @@
+//! Table I: total upload time for K = 500 rounds, d = 1,000 parameters,
+//! N = 20 agents, across uplink bandwidths and schedules, against a
+//! 1,200-second battery budget (the dagger cells).
+//!
+//! This is a closed-form latency computation — the paper's motivating
+//! arithmetic — so our numbers must match the paper's *exactly*.
+
+use crate::netsim::{upload_seconds, Schedule};
+
+/// Paper Table I parameters.
+pub const TABLE1_ROUNDS: usize = 500;
+pub const TABLE1_DIM: usize = 1_000;
+pub const TABLE1_AGENTS: usize = 20;
+pub const TABLE1_BUDGET_S: f64 = 1_200.0;
+pub const TABLE1_BANDWIDTHS_KBPS: [f64; 4] = [1.0, 10.0, 50.0, 100.0];
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table1Row {
+    pub bandwidth_kbps: f64,
+    /// Per-agent upload time for one round (seconds) — the paper's
+    /// "Upload Time/Round" column.
+    pub upload_per_round_s: f64,
+    /// Total over K rounds, concurrent schedule.
+    pub concurrent_total_s: f64,
+    pub concurrent_violates: bool,
+    /// Total over K rounds, TDMA schedule (N sequential slots).
+    pub tdma_total_s: f64,
+    pub tdma_violates: bool,
+}
+
+/// Compute the full table for a given payload model (bits per agent-round).
+pub fn table1_rows_for_bits(bits_per_agent_round: u64) -> Vec<Table1Row> {
+    TABLE1_BANDWIDTHS_KBPS
+        .iter()
+        .map(|&kbps| {
+            let rate = kbps * 1_000.0;
+            let one = upload_seconds(bits_per_agent_round, rate);
+            let per_agent = vec![one; TABLE1_AGENTS];
+            let conc = Schedule::Concurrent.combine(&per_agent) * TABLE1_ROUNDS as f64;
+            let tdma = Schedule::Tdma.combine(&per_agent) * TABLE1_ROUNDS as f64;
+            Table1Row {
+                bandwidth_kbps: kbps,
+                upload_per_round_s: one,
+                concurrent_total_s: conc,
+                concurrent_violates: conc > TABLE1_BUDGET_S,
+                tdma_total_s: tdma,
+                tdma_violates: tdma > TABLE1_BUDGET_S,
+            }
+        })
+        .collect()
+}
+
+/// The paper's Table I: FedAvg-style full-model upload (d 32-bit floats).
+pub fn table1_rows() -> Vec<Table1Row> {
+    table1_rows_for_bits((TABLE1_DIM as u64) * 32)
+}
+
+/// The same table under FedScalar's 64-bit payload — the comparison the
+/// paper's §I argues for.
+pub fn table1_rows_fedscalar() -> Vec<Table1Row> {
+    table1_rows_for_bits(64)
+}
+
+/// Render rows in the paper's layout.
+pub fn render(rows: &[Table1Row], title: &str) -> String {
+    let mut s = format!(
+        "{title}\nK={TABLE1_ROUNDS} rounds, d={TABLE1_DIM}, N={TABLE1_AGENTS}, budget={TABLE1_BUDGET_S} s  († = budget violation)\n\
+         {:<12} {:>14} {:>22} {:>24}\n",
+        "Bandwidth", "Upload/Round", "Concurrent", "TDMA (N=20)"
+    );
+    for r in rows {
+        let fmt_total = |secs: f64, violates: bool| -> String {
+            let tag = if violates { " †" } else { "  " };
+            if secs >= 3600.0 {
+                format!("{:.0} s ({:.1} h){tag}", secs, secs / 3600.0)
+            } else if secs >= 60.0 {
+                format!("{:.0} s ({:.1} min){tag}", secs, secs / 60.0)
+            } else {
+                format!("{:.2} s{tag}", secs)
+            }
+        };
+        s.push_str(&format!(
+            "{:<12} {:>12.2} s {:>22} {:>24}\n",
+            format!("{} kbps", r.bandwidth_kbps),
+            r.upload_per_round_s,
+            fmt_total(r.concurrent_total_s, r.concurrent_violates),
+            fmt_total(r.tdma_total_s, r.tdma_violates),
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_exactly() {
+        let rows = table1_rows();
+        // paper row 1: 1 kbps -> 32 s/round, 16,000 s concurrent†, 320,000 s TDMA†
+        assert!((rows[0].upload_per_round_s - 32.0).abs() < 1e-9);
+        assert!((rows[0].concurrent_total_s - 16_000.0).abs() < 1e-6);
+        assert!((rows[0].tdma_total_s - 320_000.0).abs() < 1e-6);
+        assert!(rows[0].concurrent_violates && rows[0].tdma_violates);
+        // paper row 2: 10 kbps -> 3.2 s, 1,600 s†, 32,000 s†
+        assert!((rows[1].upload_per_round_s - 3.2).abs() < 1e-9);
+        assert!((rows[1].concurrent_total_s - 1_600.0).abs() < 1e-6);
+        assert!((rows[1].tdma_total_s - 32_000.0).abs() < 1e-6);
+        assert!(rows[1].concurrent_violates && rows[1].tdma_violates);
+        // paper row 3: 50 kbps -> 0.64 s, 320 s (ok), 6,400 s†
+        assert!((rows[2].upload_per_round_s - 0.64).abs() < 1e-9);
+        assert!((rows[2].concurrent_total_s - 320.0).abs() < 1e-6);
+        assert!(!rows[2].concurrent_violates);
+        assert!(rows[2].tdma_violates);
+        // paper row 4: 100 kbps -> 0.32 s, 160 s (ok), 3,200 s†
+        assert!((rows[3].upload_per_round_s - 0.32).abs() < 1e-9);
+        assert!((rows[3].concurrent_total_s - 160.0).abs() < 1e-6);
+        assert!(!rows[3].concurrent_violates);
+        assert!(rows[3].tdma_violates);
+    }
+
+    #[test]
+    fn fedscalar_never_violates() {
+        // FedScalar's 64-bit payload fits the budget at EVERY Table-I
+        // operating point — the paper's §I argument.
+        for r in table1_rows_fedscalar() {
+            assert!(!r.concurrent_violates, "{r:?}");
+            assert!(!r.tdma_violates, "{r:?}");
+            // worst case: 1 kbps TDMA = 64/1000 * 20 * 500 = 640 s < 1200 s
+        }
+        let worst = &table1_rows_fedscalar()[0];
+        assert!((worst.tdma_total_s - 640.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_contains_daggers() {
+        let s = render(&table1_rows(), "Table I");
+        assert!(s.contains("†"));
+        assert!(s.contains("1 kbps"));
+        assert!(s.contains("TDMA"));
+    }
+}

@@ -1,0 +1,58 @@
+//! # FedScalar
+//!
+//! Production-grade reproduction of *"FedScalar: Federated Learning with
+//! Scalar Communication for Bandwidth-Constrained Networks"* (Rostami & Kia,
+//! 2024).
+//!
+//! FedScalar replaces the `O(d)` per-round uplink of standard federated
+//! learning with **two scalars per agent**: the projection
+//! `r = ⟨δ, v⟩` of the local update difference onto a seeded random vector,
+//! plus the 32-bit seed `ξ` that generates `v`. The server regenerates `v`
+//! from `ξ` and reconstructs the unbiased update `ĝ = (1/N) Σ r_n v_n`.
+//!
+//! ## Architecture (three layers, Python never on the round path)
+//!
+//! * **L3 — this crate.** The federated coordinator: round engine, network
+//!   simulator (bandwidth / TDMA / energy, paper eqs. 12–13), strategies
+//!   (FedScalar-{Normal,Rademacher,multi-projection}, FedAvg, QSGD),
+//!   metrics, CLI, and the experiment harness that regenerates every table
+//!   and figure of the paper.
+//! * **L2 — JAX model** (`python/compile/`), AOT-lowered once to HLO text
+//!   artifacts that [`runtime::XlaBackend`] loads and executes via PJRT.
+//! * **L1 — Pallas kernels** (projection, reconstruction, fused linear
+//!   layers) lowered inside the L2 artifacts.
+//!
+//! Two interchangeable compute [`runtime::Backend`]s exist: the PJRT-backed
+//! [`runtime::XlaBackend`] (the real stack) and the dependency-free
+//! [`runtime::PureRustBackend`] (cross-validation oracle + fast sweeps).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use fedscalar::config::ExperimentConfig;
+//! use fedscalar::coordinator::Engine;
+//! use fedscalar::runtime::PureRustBackend;
+//!
+//! let cfg = ExperimentConfig::paper_section_iii();
+//! let backend = PureRustBackend::new(&cfg.model);
+//! let mut engine = Engine::from_config(&cfg, Box::new(backend), 0).unwrap();
+//! let result = engine.run().unwrap();
+//! println!("final accuracy: {:.2}%", 100.0 * result.final_accuracy());
+//! ```
+
+pub mod algo;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod exp;
+pub mod metrics;
+pub mod netsim;
+pub mod nn;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod testkit;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,239 @@
+//! fedscalar — launcher CLI.
+//!
+//! Subcommands:
+//!   train    run one federated training run and write its history CSV
+//!   suite    run the full four-method figure suite (Figs 2-6 data)
+//!   table1   print the paper's Table I (and the FedScalar counterpart)
+//!   info     show artifact manifest + platform info
+//!
+//! Examples:
+//!   fedscalar train --method fedscalar-rademacher --rounds 200 --backend xla
+//!   fedscalar suite --runs 10 --rounds 1500 --out results/
+//!   fedscalar table1
+
+use fedscalar::algo::Method;
+use fedscalar::config::{DataSource, ExperimentConfig};
+use fedscalar::coordinator::Engine;
+use fedscalar::error::{Error, Result};
+use fedscalar::exp::figures::{make_backend, run_figure_suite, Axis, BackendKind, SuiteOptions};
+use fedscalar::exp::table1;
+use fedscalar::log_info;
+use fedscalar::netsim::Schedule;
+use fedscalar::util::cli::Args;
+use fedscalar::util::logger;
+use std::path::PathBuf;
+
+fn main() {
+    logger::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{}", usage());
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let rest = argv[1..].to_vec();
+    let code = match run_command(&cmd, rest) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "fedscalar — FedScalar (Rostami & Kia 2024) reproduction\n\
+     \n\
+     USAGE: fedscalar <COMMAND> [OPTIONS]\n\
+     \n\
+     COMMANDS:\n\
+       train    one federated run (see `fedscalar train --help`)\n\
+       suite    the four-method figure suite (Figs 2-6 data)\n\
+       table1   print Table I (upload-time arithmetic)\n\
+       info     artifact + platform info\n"
+        .to_string()
+}
+
+fn common_cfg(a: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = if a.get("config").is_empty() {
+        ExperimentConfig::paper_section_iii()
+    } else {
+        ExperimentConfig::from_toml_file(a.get("config"))?
+    };
+    cfg.fed.rounds = a.get_usize("rounds")?;
+    cfg.fed.num_agents = a.get_usize("agents")?;
+    cfg.fed.local_steps = a.get_usize("local-steps")?;
+    cfg.fed.batch_size = a.get_usize("batch")?;
+    cfg.fed.alpha = a.get_f64("alpha")? as f32;
+    cfg.fed.eval_every = a.get_usize("eval-every")?;
+    cfg.fed.participation = a.get_f64("participation")?;
+    cfg.network.channel.nominal_bps = a.get_f64("bandwidth")?;
+    cfg.network.channel.sigma = a.get_f64("sigma")?;
+    cfg.network.p_tx_watts = a.get_f64("p-tx")?;
+    cfg.artifacts_dir = PathBuf::from(a.get("artifacts"));
+    cfg.network.schedule = Schedule::parse(&a.get("schedule"))
+        .ok_or_else(|| Error::config("bad --schedule (tdma|concurrent)"))?;
+    cfg.data = match a.get("data").as_str() {
+        "artifacts" => DataSource::ArtifactCsv,
+        "synthetic" => DataSource::Synthetic,
+        other => return Err(Error::config(format!("bad --data {other:?}"))),
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn common_args(args: Args) -> Args {
+    args.opt("config", "", "TOML config file (flags override it)")
+        .opt("rounds", "1500", "communication rounds K")
+        .opt("agents", "20", "number of agents N")
+        .opt("local-steps", "5", "local SGD steps S")
+        .opt("batch", "32", "minibatch size B")
+        .opt("alpha", "0.003", "local stepsize")
+        .opt("eval-every", "10", "evaluate every E rounds")
+        .opt("participation", "1.0", "fraction of agents active per round")
+        .opt("bandwidth", "100000", "nominal uplink bits/s (0.1 Mbps)")
+        .opt("sigma", "0.25", "lognormal channel sigma")
+        .opt("p-tx", "2.0", "transmit power (watts)")
+        .opt("schedule", "tdma", "upload schedule: tdma|concurrent")
+        .opt("data", "artifacts", "data source: artifacts|synthetic")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("backend", "xla", "compute backend: xla|pure-rust")
+}
+
+fn run_command(cmd: &str, rest: Vec<String>) -> Result<()> {
+    match cmd {
+        "train" => cmd_train(rest),
+        "suite" => cmd_suite(rest),
+        "table1" => cmd_table1(),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(Error::config(format!("unknown command {other:?}\n\n{}", usage()))),
+    }
+}
+
+fn cmd_train(rest: Vec<String>) -> Result<()> {
+    let a = common_args(Args::new("fedscalar train", "one federated training run"))
+        .opt("method", "fedscalar-rademacher", "strategy (fedscalar-normal|fedscalar-rademacher[-m<k>]|fedavg|qsgd[bits])")
+        .opt("run-seed", "0", "run seed")
+        .opt("out", "results/train.csv", "history CSV output path")
+        .parse(rest)?;
+    let mut cfg = common_cfg(&a)?;
+    cfg.fed.method = Method::parse(&a.get("method"))
+        .ok_or_else(|| Error::config(format!("unknown method {:?}", a.get("method"))))?;
+    let backend_kind = BackendKind::parse(&a.get("backend"))
+        .ok_or_else(|| Error::config("bad --backend (xla|pure-rust)"))?;
+    let be = make_backend(backend_kind, &cfg)?;
+    let mut engine = Engine::from_config(&cfg, be, a.get_u64("run-seed")?)?;
+    let history = engine.run()?;
+    let out = a.get("out");
+    history.write_csv(&out)?;
+    println!(
+        "method={} backend={} rounds={} final_acc={:.4} final_train_loss={:.4}",
+        cfg.fed.method.name(),
+        backend_kind.name(),
+        cfg.fed.rounds,
+        history.final_accuracy(),
+        history.final_train_loss()
+    );
+    println!("history written to {out}");
+    Ok(())
+}
+
+fn cmd_suite(rest: Vec<String>) -> Result<()> {
+    let a = common_args(Args::new(
+        "fedscalar suite",
+        "four-method comparison suite (figures 2-6 data)",
+    ))
+    .opt("runs", "10", "independent runs to average")
+    .opt("out", "results", "output directory for per-method CSVs")
+    .opt("methods", "paper", "comma list of methods or 'paper'")
+    .flag("serial", "disable run-level parallelism")
+    .parse(rest)?;
+    let cfg = common_cfg(&a)?;
+    let backend = BackendKind::parse(&a.get("backend"))
+        .ok_or_else(|| Error::config("bad --backend (xla|pure-rust)"))?;
+    let methods = if a.get("methods") == "paper" {
+        Method::PAPER_SET.to_vec()
+    } else {
+        a.get("methods")
+            .split(',')
+            .map(|s| {
+                Method::parse(s).ok_or_else(|| Error::config(format!("unknown method {s:?}")))
+            })
+            .collect::<Result<Vec<_>>>()?
+    };
+    let opts = SuiteOptions {
+        methods,
+        runs: a.get_usize("runs")?,
+        backend,
+        out_dir: Some(PathBuf::from(a.get("out"))),
+        parallel: !a.get_bool("serial"),
+    };
+    let suite = run_figure_suite(&cfg, &opts)?;
+    println!("\n=== Figure suite ({} runs averaged) ===", suite.runs);
+    println!("{:<28} {:>12} {:>10}", "method", "train_loss", "test_acc");
+    for (name, loss, acc) in suite.summary_rows() {
+        println!("{name:<28} {loss:>12.4} {:>9.2}%", acc * 100.0);
+    }
+    for (axis, budget, unit) in [
+        (Axis::Bits, 1e6, "bits"),
+        (Axis::Seconds, 1250.0, "s"),
+        (Axis::Joules, 50.0, "J"),
+    ] {
+        println!("\naccuracy at {budget:.0} {unit}:");
+        for (name, acc) in suite.acc_at(axis, budget) {
+            match acc {
+                Some(v) => println!("  {name:<26} {:.2}%", v * 100.0),
+                None => println!("  {name:<26} (budget below first round)"),
+            }
+        }
+    }
+    log_info!("per-method CSVs in {}", a.get("out"));
+    Ok(())
+}
+
+fn cmd_table1() -> Result<()> {
+    println!(
+        "{}",
+        table1::render(&table1::table1_rows(), "Table I (FedAvg-style d-float upload)")
+    );
+    println!(
+        "{}",
+        table1::render(
+            &table1::table1_rows_fedscalar(),
+            "Counterpart under FedScalar's 64-bit upload"
+        )
+    );
+    Ok(())
+}
+
+fn cmd_info(rest: Vec<String>) -> Result<()> {
+    let a = Args::new("fedscalar info", "artifact + platform info")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .parse(rest)?;
+    match fedscalar::runtime::Manifest::load(a.get("artifacts")) {
+        Ok(m) => {
+            println!("artifacts: {}", a.get("artifacts"));
+            println!(
+                "  d={} N={} S={} B={} eval={} entries={}",
+                m.param_dim,
+                m.num_agents,
+                m.local_steps,
+                m.batch_size,
+                m.eval_size,
+                m.entries.join(",")
+            );
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    match fedscalar::runtime::XlaRuntime::cpu() {
+        Ok(rt) => println!("pjrt platform: {}", rt.platform()),
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    println!("model d = {}", fedscalar::nn::ModelSpec::default().param_dim());
+    Ok(())
+}

@@ -1,0 +1,237 @@
+//! Per-round metrics: records, recorder, multi-run aggregation, CSV export.
+//!
+//! Every figure of the paper is a projection of these records:
+//! Fig 2 = (round, train_loss), Fig 3 = (round, test_acc),
+//! Fig 4 = (cum_bits, test_acc), Fig 5 = (cum_sim_time, test_acc),
+//! Fig 6 = (cum_energy, test_acc).
+
+use crate::error::Result;
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+use std::path::Path;
+
+/// One evaluated round of one run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Mean client-reported local loss this round (Fig 2 series).
+    pub train_loss: f64,
+    pub test_loss: f64,
+    pub test_acc: f64,
+    /// Cumulative uplink bits across all agents since round 0 (Fig 4 x).
+    pub cum_bits: f64,
+    /// Cumulative simulated wall-clock seconds, eq. 12 (Fig 5 x).
+    pub cum_sim_seconds: f64,
+    /// Cumulative transmit energy in joules, eq. 13 (Fig 6 x).
+    pub cum_energy_joules: f64,
+    /// Real (host) milliseconds spent on this round — perf diagnostics.
+    pub host_ms: f64,
+}
+
+/// The record stream of one run.
+#[derive(Debug, Clone, Default)]
+pub struct RunHistory {
+    pub method: String,
+    pub records: Vec<RoundRecord>,
+}
+
+impl RunHistory {
+    pub fn new(method: impl Into<String>) -> Self {
+        RunHistory {
+            method: method.into(),
+            records: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.records.last().map(|r| r.test_acc).unwrap_or(0.0)
+    }
+
+    pub fn final_train_loss(&self) -> f64 {
+        self.records.last().map(|r| r.train_loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn series(&self, f: impl Fn(&RoundRecord) -> f64) -> Vec<f64> {
+        self.records.iter().map(f).collect()
+    }
+
+    /// Accuracy at a cumulative-bits budget (Fig 4 readout).
+    pub fn acc_at_bits(&self, budget: f64) -> Option<f64> {
+        stats::value_at(
+            &self.series(|r| r.cum_bits),
+            &self.series(|r| r.test_acc),
+            budget,
+        )
+    }
+
+    /// Accuracy at a simulated-time budget (Fig 5 readout).
+    pub fn acc_at_seconds(&self, budget: f64) -> Option<f64> {
+        stats::value_at(
+            &self.series(|r| r.cum_sim_seconds),
+            &self.series(|r| r.test_acc),
+            budget,
+        )
+    }
+
+    /// Accuracy at an energy budget (Fig 6 readout).
+    pub fn acc_at_joules(&self, budget: f64) -> Option<f64> {
+        stats::value_at(
+            &self.series(|r| r.cum_energy_joules),
+            &self.series(|r| r.test_acc),
+            budget,
+        )
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "round",
+                "train_loss",
+                "test_loss",
+                "test_acc",
+                "cum_bits",
+                "cum_sim_seconds",
+                "cum_energy_joules",
+                "host_ms",
+            ],
+        )?;
+        for r in &self.records {
+            w.row(&[
+                r.round as f64,
+                r.train_loss,
+                r.test_loss,
+                r.test_acc,
+                r.cum_bits,
+                r.cum_sim_seconds,
+                r.cum_energy_joules,
+                r.host_ms,
+            ])?;
+        }
+        w.flush()
+    }
+}
+
+impl RoundRecord {
+    /// Equality on the *deterministic* metrics — everything except
+    /// `host_ms`, which measures real wall time and differs run to run.
+    pub fn same_metrics(&self, other: &RoundRecord) -> bool {
+        self.round == other.round
+            && self.train_loss == other.train_loss
+            && self.test_loss == other.test_loss
+            && self.test_acc == other.test_acc
+            && self.cum_bits == other.cum_bits
+            && self.cum_sim_seconds == other.cum_sim_seconds
+            && self.cum_energy_joules == other.cum_energy_joules
+    }
+}
+
+/// True when both histories agree on all deterministic metrics.
+pub fn same_histories(a: &RunHistory, b: &RunHistory) -> bool {
+    a.method == b.method
+        && a.records.len() == b.records.len()
+        && a.records
+            .iter()
+            .zip(&b.records)
+            .all(|(x, y)| x.same_metrics(y))
+}
+
+/// Element-wise mean across runs of the same method (round grids must
+/// match), the "averaged over 10 runs" aggregation of the paper.
+pub fn average_runs(runs: &[RunHistory]) -> RunHistory {
+    assert!(!runs.is_empty());
+    let n = runs[0].records.len();
+    assert!(
+        runs.iter().all(|r| r.records.len() == n),
+        "runs have mismatched round grids"
+    );
+    let mut out = RunHistory::new(runs[0].method.clone());
+    for i in 0..n {
+        let pick = |f: &dyn Fn(&RoundRecord) -> f64| -> f64 {
+            stats::mean(&runs.iter().map(|r| f(&r.records[i])).collect::<Vec<_>>())
+        };
+        out.push(RoundRecord {
+            round: runs[0].records[i].round,
+            train_loss: pick(&|r| r.train_loss),
+            test_loss: pick(&|r| r.test_loss),
+            test_acc: pick(&|r| r.test_acc),
+            cum_bits: pick(&|r| r.cum_bits),
+            cum_sim_seconds: pick(&|r| r.cum_sim_seconds),
+            cum_energy_joules: pick(&|r| r.cum_energy_joules),
+            host_ms: pick(&|r| r.host_ms),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, acc: f64, bits: f64, secs: f64, joules: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: 1.0 / (round + 1) as f64,
+            test_loss: 0.5,
+            test_acc: acc,
+            cum_bits: bits,
+            cum_sim_seconds: secs,
+            cum_energy_joules: joules,
+            host_ms: 1.0,
+        }
+    }
+
+    fn history() -> RunHistory {
+        let mut h = RunHistory::new("fedscalar-rademacher");
+        h.push(rec(0, 0.1, 100.0, 1.0, 0.5));
+        h.push(rec(10, 0.5, 200.0, 2.0, 1.0));
+        h.push(rec(20, 0.9, 300.0, 3.0, 1.5));
+        h
+    }
+
+    #[test]
+    fn budget_readouts() {
+        let h = history();
+        assert_eq!(h.acc_at_bits(250.0), Some(0.5));
+        assert_eq!(h.acc_at_bits(50.0), None);
+        assert_eq!(h.acc_at_seconds(3.0), Some(0.9));
+        assert_eq!(h.acc_at_joules(1.2), Some(0.5));
+        assert_eq!(h.final_accuracy(), 0.9);
+    }
+
+    #[test]
+    fn averaging_runs() {
+        let mut a = history();
+        let mut b = history();
+        a.records[2].test_acc = 0.8;
+        b.records[2].test_acc = 1.0;
+        let avg = average_runs(&[a, b]);
+        assert_eq!(avg.records.len(), 3);
+        assert!((avg.records[2].test_acc - 0.9).abs() < 1e-12);
+        assert_eq!(avg.method, "fedscalar-rademacher");
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched")]
+    fn ragged_runs_panic() {
+        let a = history();
+        let mut b = history();
+        b.records.pop();
+        average_runs(&[a, b]);
+    }
+
+    #[test]
+    fn csv_roundtrip_linecount() {
+        let h = history();
+        let p = std::env::temp_dir().join(format!("fedscalar_hist_{}.csv", std::process::id()));
+        h.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 4); // header + 3 rows
+        assert!(text.lines().next().unwrap().starts_with("round,train_loss"));
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,113 @@
+//! Uplink channel: nominal rate + mean-preserving lognormal fading.
+
+use crate::rng::{GaussianSource, Xoshiro256};
+
+#[derive(Debug, Clone)]
+pub struct ChannelConfig {
+    /// Nominal uplink bandwidth in bits/second (paper §III: 0.1 Mbps).
+    pub nominal_bps: f64,
+    /// Lognormal sigma; 0 disables fading.
+    pub sigma: f64,
+}
+
+impl Default for ChannelConfig {
+    fn default() -> Self {
+        ChannelConfig {
+            nominal_bps: 100_000.0, // 0.1 Mbps
+            sigma: 0.25,
+        }
+    }
+}
+
+/// Stateful channel: one rate sample per (round, agent) transmission.
+#[derive(Debug, Clone)]
+pub struct Channel {
+    cfg: ChannelConfig,
+    rng: Xoshiro256,
+    gauss: GaussianSource,
+}
+
+impl Channel {
+    pub fn new(cfg: ChannelConfig, seed: u64) -> Self {
+        assert!(cfg.nominal_bps > 0.0, "bandwidth must be positive");
+        assert!(cfg.sigma >= 0.0);
+        Channel {
+            cfg,
+            rng: Xoshiro256::seed_from(seed ^ 0xc4a2_2e10_0000_0005),
+            gauss: GaussianSource::new(),
+        }
+    }
+
+    pub fn nominal_bps(&self) -> f64 {
+        self.cfg.nominal_bps
+    }
+
+    /// Sample the effective uplink rate for one transmission.
+    /// Mean-preserving: E[rate] = nominal.
+    pub fn sample_rate_bps(&mut self) -> f64 {
+        if self.cfg.sigma == 0.0 {
+            return self.cfg.nominal_bps;
+        }
+        let z = self.gauss.next(&mut self.rng) as f64;
+        let factor = (self.cfg.sigma * z - self.cfg.sigma * self.cfg.sigma / 2.0).exp();
+        self.cfg.nominal_bps * factor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_sigma_is_deterministic() {
+        let mut ch = Channel::new(
+            ChannelConfig {
+                nominal_bps: 5_000.0,
+                sigma: 0.0,
+            },
+            0,
+        );
+        for _ in 0..10 {
+            assert_eq!(ch.sample_rate_bps(), 5_000.0);
+        }
+    }
+
+    #[test]
+    fn fading_is_mean_preserving_and_positive() {
+        let mut ch = Channel::new(ChannelConfig::default(), 1);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let r = ch.sample_rate_bps();
+            assert!(r > 0.0);
+            sum += r;
+        }
+        let mean = sum / n as f64;
+        let nominal = ch.nominal_bps();
+        assert!(
+            (mean / nominal - 1.0).abs() < 0.02,
+            "mean={mean} nominal={nominal}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Channel::new(ChannelConfig::default(), 7);
+        let mut b = Channel::new(ChannelConfig::default(), 7);
+        for _ in 0..100 {
+            assert_eq!(a.sample_rate_bps(), b.sample_rate_bps());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bandwidth")]
+    fn zero_bandwidth_rejected() {
+        Channel::new(
+            ChannelConfig {
+                nominal_bps: 0.0,
+                sigma: 0.0,
+            },
+            0,
+        );
+    }
+}

@@ -1,0 +1,34 @@
+//! Communication energy — paper eq. (13): `E_round = P_tx * B_upload / R`.
+//!
+//! Energy is summed across agents (each radio burns power for its own
+//! transmission) regardless of the schedule; the schedule only changes
+//! wall-clock, not joules. P_tx = 2 W in the paper's setup.
+
+/// Energy in joules for one transmission of `bits` at `rate_bps`.
+#[inline]
+pub fn energy_joules(p_tx_watts: f64, bits: u64, rate_bps: f64) -> f64 {
+    assert!(rate_bps > 0.0 && p_tx_watts >= 0.0);
+    p_tx_watts * bits as f64 / rate_bps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_anchor_values() {
+        // FedAvg d=1990 at 0.1 Mbps, P=2W: 2 * 63680/1e5 = 1.2736 J per agent
+        let e = energy_joules(2.0, 1990 * 32, 100_000.0);
+        assert!((e - 1.2736).abs() < 1e-9);
+        // FedScalar: two scalars = 64 bits -> 1.28 mJ
+        let e2 = energy_joules(2.0, 64, 100_000.0);
+        assert!((e2 - 0.00128).abs() < 1e-12);
+        // ratio is d*32/64 ~ 995x
+        assert!((e / e2 - 995.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_power_zero_energy() {
+        assert_eq!(energy_joules(0.0, 1_000, 1.0), 0.0);
+    }
+}

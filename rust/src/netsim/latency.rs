@@ -1,0 +1,80 @@
+//! Wall-clock model — paper eq. (12): `T_wall = T_other + B_upload / R`.
+//!
+//! `T_other` (local compute + system overhead) is modeled as a fixed
+//! fraction of the *FedAvg* upload time at the nominal rate, exactly as in
+//! the paper's §III ("we model T_other as a fraction of the FedAvg upload
+//! time") — it is therefore identical across methods, which is what makes
+//! the figure-5 comparison meaningful.
+
+use super::Schedule;
+
+#[derive(Debug, Clone)]
+pub struct LatencyConfig {
+    /// T_other as a fraction of the FedAvg per-round upload time.
+    pub t_other_frac: f64,
+}
+
+impl Default for LatencyConfig {
+    fn default() -> Self {
+        LatencyConfig { t_other_frac: 0.05 }
+    }
+}
+
+/// Upload seconds for one transmission.
+#[inline]
+pub fn upload_seconds(bits: u64, rate_bps: f64) -> f64 {
+    assert!(rate_bps > 0.0);
+    bits as f64 / rate_bps
+}
+
+/// Per-round wall time, eq. (12), from the per-agent upload times of the
+/// round (already individually faded) plus the method-independent T_other.
+pub fn round_wall_time(per_agent_upload_s: &[f64], schedule: Schedule, t_other_s: f64) -> f64 {
+    t_other_s + schedule.combine(per_agent_upload_s)
+}
+
+/// T_other in seconds for a given model dim / agent count / nominal rate.
+/// Fraction of the FedAvg per-round upload under the same schedule.
+pub fn t_other_seconds(
+    cfg: &LatencyConfig,
+    d: usize,
+    num_agents: usize,
+    nominal_bps: f64,
+    schedule: Schedule,
+) -> f64 {
+    let fedavg_bits = (d as u64) * 32;
+    let one = upload_seconds(fedavg_bits, nominal_bps);
+    let per_agent = vec![one; num_agents];
+    cfg.t_other_frac * schedule.combine(&per_agent)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upload_time_basic() {
+        // Table I anchor: d=1000 floats at 1 kbps = 32 s
+        assert!((upload_seconds(32_000, 1_000.0) - 32.0).abs() < 1e-12);
+        // at 100 kbps = 0.32 s
+        assert!((upload_seconds(32_000, 100_000.0) - 0.32).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_time_concurrent_vs_tdma() {
+        let per_agent = vec![1.0, 2.0, 3.0];
+        let c = round_wall_time(&per_agent, Schedule::Concurrent, 0.5);
+        let t = round_wall_time(&per_agent, Schedule::Tdma, 0.5);
+        assert!((c - 3.5).abs() < 1e-12); // max + t_other
+        assert!((t - 6.5).abs() < 1e-12); // sum + t_other
+    }
+
+    #[test]
+    fn t_other_scales_with_schedule() {
+        let cfg = LatencyConfig { t_other_frac: 0.1 };
+        let conc = t_other_seconds(&cfg, 1000, 20, 100_000.0, Schedule::Concurrent);
+        let tdma = t_other_seconds(&cfg, 1000, 20, 100_000.0, Schedule::Tdma);
+        assert!((conc - 0.032).abs() < 1e-9);
+        assert!((tdma - 0.64).abs() < 1e-9);
+    }
+}

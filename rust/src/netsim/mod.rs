@@ -1,0 +1,42 @@
+//! Network + energy simulator: the paper's system model.
+//!
+//! * [`Channel`] — nominal uplink rate with multiplicative lognormal
+//!   fading (paper §III: "0.1 Mbps ... with multiplicative lognormal
+//!   variability").
+//! * [`Schedule`] — concurrent vs TDMA upload scheduling (Table I columns).
+//! * [`latency`] — per-round wall-clock, eq. (12): `T = T_other + B/R`.
+//! * [`energy`] — transmit energy, eq. (13): `E = P_tx * B/R`.
+//!
+//! The simulated clock these produce is what Figs 5-6 plot — exactly how
+//! the paper itself computes them.
+
+mod channel;
+mod energy;
+pub mod latency;
+mod schedule;
+
+pub use channel::{Channel, ChannelConfig};
+pub use energy::energy_joules;
+pub use latency::{round_wall_time, upload_seconds, LatencyConfig};
+pub use schedule::Schedule;
+
+/// Full network model configuration.
+#[derive(Debug, Clone)]
+pub struct NetworkConfig {
+    pub channel: ChannelConfig,
+    pub schedule: Schedule,
+    pub latency: LatencyConfig,
+    /// Transmit power in watts (paper: 2 W).
+    pub p_tx_watts: f64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        NetworkConfig {
+            channel: ChannelConfig::default(),
+            schedule: Schedule::Tdma,
+            latency: LatencyConfig::default(),
+            p_tx_watts: 2.0,
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! Upload scheduling: how N simultaneous uplinks share the medium
+//! (Table I's two columns).
+
+/// Medium-access model for the upload phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Schedule {
+    /// All agents transmit simultaneously on orthogonal resources: the
+    /// round's upload phase lasts as long as the slowest agent.
+    Concurrent,
+    /// Time-division: agents transmit one after another in dedicated
+    /// slots (paper Table I "TDMA (N=20)"): times add up.
+    Tdma,
+}
+
+impl Schedule {
+    /// Combine per-agent upload durations into the round's upload phase.
+    pub fn combine(&self, per_agent_s: &[f64]) -> f64 {
+        match self {
+            Schedule::Concurrent => per_agent_s.iter().cloned().fold(0.0, f64::max),
+            Schedule::Tdma => per_agent_s.iter().sum(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::Concurrent => "concurrent",
+            Schedule::Tdma => "tdma",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Schedule> {
+        match s.to_ascii_lowercase().as_str() {
+            "concurrent" | "parallel" => Some(Schedule::Concurrent),
+            "tdma" | "sequential" => Some(Schedule::Tdma),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combine_rules() {
+        let t = [0.5, 2.0, 1.0];
+        assert_eq!(Schedule::Concurrent.combine(&t), 2.0);
+        assert!((Schedule::Tdma.combine(&t) - 3.5).abs() < 1e-12);
+        assert_eq!(Schedule::Concurrent.combine(&[]), 0.0);
+        assert_eq!(Schedule::Tdma.combine(&[]), 0.0);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Schedule::parse("tdma"), Some(Schedule::Tdma));
+        assert_eq!(Schedule::parse("Concurrent"), Some(Schedule::Concurrent));
+        assert_eq!(Schedule::parse("xyz"), None);
+        for s in [Schedule::Concurrent, Schedule::Tdma] {
+            assert_eq!(Schedule::parse(s.name()), Some(s));
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Glorot-uniform initialization matching `model.init_params` in spirit
+//! (same limit `sqrt(6/(fan_in+fan_out))`, zero biases; RNG streams differ —
+//! params always cross the backend boundary explicitly so this never
+//! matters for cross-backend comparison).
+
+use super::ModelSpec;
+use crate::rng::Xoshiro256;
+
+/// Flat glorot-initialized parameter vector for `spec`, deterministic in
+/// `seed`.
+pub fn glorot_init(spec: &ModelSpec, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::seed_from(seed ^ 0xfed5_ca1a_0000_0001);
+    let mut params = vec![0.0f32; spec.param_dim()];
+    let o = spec.offsets();
+    let dims = [
+        (spec.input_dim, spec.hidden1),
+        (spec.hidden1, spec.hidden2),
+        (spec.hidden2, spec.num_classes),
+    ];
+    for (layer, &(fan_in, fan_out)) in dims.iter().enumerate() {
+        let limit = (6.0f32 / (fan_in + fan_out) as f32).sqrt();
+        let w = &mut params[o[layer * 2]..o[layer * 2 + 1]];
+        for x in w.iter_mut() {
+            *x = rng.uniform_in(-limit, limit);
+        }
+        // biases (o[2i+1]..o[2i+2]) stay zero
+    }
+    params
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let spec = ModelSpec::default();
+        let a = glorot_init(&spec, 0);
+        let b = glorot_init(&spec, 0);
+        let c = glorot_init(&spec, 1);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 1990);
+    }
+
+    #[test]
+    fn weights_bounded_biases_zero() {
+        let spec = ModelSpec::default();
+        let p = glorot_init(&spec, 2);
+        let o = spec.offsets();
+        let lim1 = (6.0f32 / (64 + 24) as f32).sqrt();
+        assert!(p[o[0]..o[1]].iter().all(|x| x.abs() <= lim1));
+        assert!(p[o[1]..o[2]].iter().all(|&x| x == 0.0)); // b1
+        assert!(p[o[3]..o[4]].iter().all(|&x| x == 0.0)); // b2
+        assert!(p[o[5]..o[6]].iter().all(|&x| x == 0.0)); // b3
+        // not all zero overall
+        assert!(p.iter().any(|&x| x != 0.0));
+    }
+}

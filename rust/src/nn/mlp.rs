@@ -1,0 +1,332 @@
+//! The MLP forward/backward twin of `python/compile/model.py`.
+//!
+//! All buffers live in [`MlpScratch`] so the client-stage hot loop never
+//! allocates. Backward is hand-derived (the same closed form as the JAX
+//! custom_vjp): standard dense backprop through two ReLU layers and a
+//! softmax-CE head.
+
+use super::ModelSpec;
+use crate::tensor;
+
+/// Stateless MLP; parameters are always passed in as a flat slice.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub spec: ModelSpec,
+    offsets: [usize; 7],
+}
+
+/// Reusable forward/backward workspace for batches up to `max_batch`.
+#[derive(Debug, Clone)]
+pub struct MlpScratch {
+    max_batch: usize,
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+    logits: Vec<f32>,
+    probs: Vec<f32>,
+    g2: Vec<f32>, // dL/dh2
+    g1: Vec<f32>, // dL/dh1
+}
+
+impl MlpScratch {
+    pub fn new(spec: &ModelSpec, max_batch: usize) -> Self {
+        MlpScratch {
+            max_batch,
+            h1: vec![0.0; max_batch * spec.hidden1],
+            h2: vec![0.0; max_batch * spec.hidden2],
+            logits: vec![0.0; max_batch * spec.num_classes],
+            probs: vec![0.0; max_batch * spec.num_classes],
+            g2: vec![0.0; max_batch * spec.hidden2],
+            g1: vec![0.0; max_batch * spec.hidden1],
+        }
+    }
+}
+
+impl Mlp {
+    pub fn new(spec: ModelSpec) -> Self {
+        let offsets = spec.offsets();
+        Mlp { spec, offsets }
+    }
+
+    pub fn param_dim(&self) -> usize {
+        self.spec.param_dim()
+    }
+
+    fn split<'a>(&self, params: &'a [f32]) -> [&'a [f32]; 6] {
+        let o = &self.offsets;
+        [
+            &params[o[0]..o[1]], // w1
+            &params[o[1]..o[2]], // b1
+            &params[o[2]..o[3]], // w2
+            &params[o[3]..o[4]], // b2
+            &params[o[4]..o[5]], // w3
+            &params[o[5]..o[6]], // b3
+        ]
+    }
+
+    /// Forward pass: fills scratch.{h1,h2,logits}. `x` is [batch, input_dim].
+    pub fn forward(&self, params: &[f32], x: &[f32], batch: usize, s: &mut MlpScratch) {
+        assert!(batch <= s.max_batch, "batch {batch} > scratch {}", s.max_batch);
+        assert_eq!(params.len(), self.param_dim());
+        assert_eq!(x.len(), batch * self.spec.input_dim);
+        let [w1, b1, w2, b2, w3, b3] = self.split(params);
+        let (i, h1n, h2n, c) = (
+            self.spec.input_dim,
+            self.spec.hidden1,
+            self.spec.hidden2,
+            self.spec.num_classes,
+        );
+        let h1 = &mut s.h1[..batch * h1n];
+        tensor::gemm_nn(batch, i, h1n, x, w1, h1);
+        tensor::add_bias(batch, h1n, b1, h1);
+        tensor::relu_inplace(h1);
+        let h2 = &mut s.h2[..batch * h2n];
+        tensor::gemm_nn(batch, h1n, h2n, h1, w2, h2);
+        tensor::add_bias(batch, h2n, b2, h2);
+        tensor::relu_inplace(h2);
+        let logits = &mut s.logits[..batch * c];
+        tensor::gemm_nn(batch, h2n, c, h2, w3, logits);
+        tensor::add_bias(batch, c, b3, logits);
+    }
+
+    /// Mean softmax-CE loss of the logits currently in scratch.
+    pub fn loss_from_logits(&self, y: &[i32], batch: usize, s: &MlpScratch) -> f32 {
+        let c = self.spec.num_classes;
+        let mut loss = 0.0f32;
+        for r in 0..batch {
+            let row = &s.logits[r * c..(r + 1) * c];
+            loss += tensor::logsumexp(row) - row[y[r] as usize];
+        }
+        loss / batch as f32
+    }
+
+    /// Forward + loss (no gradient).
+    pub fn loss(&self, params: &[f32], x: &[f32], y: &[i32], batch: usize, s: &mut MlpScratch) -> f32 {
+        self.forward(params, x, batch, s);
+        self.loss_from_logits(y, batch, s)
+    }
+
+    /// Forward + backward. Writes dL/dparams into `grad` (overwritten) and
+    /// returns the mean loss. Math identical to jax.grad of the L2 model.
+    pub fn loss_and_grad(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        batch: usize,
+        s: &mut MlpScratch,
+        grad: &mut [f32],
+    ) -> f32 {
+        assert_eq!(grad.len(), self.param_dim());
+        self.forward(params, x, batch, s);
+        let loss = self.loss_from_logits(y, batch, s);
+        let [_, _, w2, _, w3, _] = self.split(params);
+        let (i, h1n, h2n, c) = (
+            self.spec.input_dim,
+            self.spec.hidden1,
+            self.spec.hidden2,
+            self.spec.num_classes,
+        );
+        let o = self.offsets;
+        grad.fill(0.0);
+
+        // dL/dlogits = (softmax - onehot) / batch
+        let probs = &mut s.probs[..batch * c];
+        tensor::softmax_rows(batch, c, &s.logits[..batch * c], probs);
+        let invb = 1.0 / batch as f32;
+        for r in 0..batch {
+            probs[r * c + y[r] as usize] -= 1.0;
+        }
+        tensor::scale(invb, probs);
+
+        {
+            // dW3 = h2^T @ probs ; db3 = sum_rows(probs)
+            let (gw3, gb3) = {
+                let (left, right) = grad.split_at_mut(o[5]);
+                (&mut left[o[4]..], &mut right[..c])
+            };
+            tensor::gemm_tn_acc(batch, h2n, c, &s.h2[..batch * h2n], probs, gw3);
+            for r in 0..batch {
+                for j in 0..c {
+                    gb3[j] += probs[r * c + j];
+                }
+            }
+        }
+
+        // g2 = probs @ w3^T, masked by relu'(h2)
+        let g2 = &mut s.g2[..batch * h2n];
+        tensor::gemm_nt(batch, c, h2n, probs, w3, g2);
+        for (gv, hv) in g2.iter_mut().zip(s.h2[..batch * h2n].iter()) {
+            if *hv <= 0.0 {
+                *gv = 0.0;
+            }
+        }
+
+        {
+            // dW2 = h1^T @ g2 ; db2 = sum_rows(g2)
+            let (left, right) = grad.split_at_mut(o[3]);
+            let gw2 = &mut left[o[2]..];
+            let gb2 = &mut right[..h2n];
+            tensor::gemm_tn_acc(batch, h1n, h2n, &s.h1[..batch * h1n], g2, gw2);
+            for r in 0..batch {
+                for j in 0..h2n {
+                    gb2[j] += g2[r * h2n + j];
+                }
+            }
+        }
+
+        // g1 = g2 @ w2^T, masked by relu'(h1)
+        let g1 = &mut s.g1[..batch * h1n];
+        tensor::gemm_nt(batch, h2n, h1n, g2, w2, g1);
+        for (gv, hv) in g1.iter_mut().zip(s.h1[..batch * h1n].iter()) {
+            if *hv <= 0.0 {
+                *gv = 0.0;
+            }
+        }
+
+        {
+            // dW1 = x^T @ g1 ; db1 = sum_rows(g1)
+            let (left, right) = grad.split_at_mut(o[1]);
+            let gw1 = &mut left[o[0]..];
+            let gb1 = &mut right[..h1n];
+            tensor::gemm_tn_acc(batch, i, h1n, x, g1, gw1);
+            for r in 0..batch {
+                for j in 0..h1n {
+                    gb1[j] += g1[r * h1n + j];
+                }
+            }
+        }
+
+        loss
+    }
+
+    /// Accuracy of argmax predictions on a (possibly large) eval set;
+    /// processes in chunks of the scratch's max batch.
+    pub fn evaluate(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        s: &mut MlpScratch,
+    ) -> (f32, f32) {
+        let n = y.len();
+        assert_eq!(x.len(), n * self.spec.input_dim);
+        let c = self.spec.num_classes;
+        let chunk = s.max_batch;
+        let mut correct = 0usize;
+        let mut loss_sum = 0.0f64;
+        let mut done = 0usize;
+        while done < n {
+            let b = chunk.min(n - done);
+            let xs = &x[done * self.spec.input_dim..(done + b) * self.spec.input_dim];
+            let ys = &y[done..done + b];
+            self.forward(params, xs, b, s);
+            for r in 0..b {
+                let row = &s.logits[r * c..(r + 1) * c];
+                loss_sum += (tensor::logsumexp(row) - row[ys[r] as usize]) as f64;
+                if tensor::argmax(row) == ys[r] as usize {
+                    correct += 1;
+                }
+            }
+            done += b;
+        }
+        ((loss_sum / n as f64) as f32, correct as f32 / n as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::glorot_init;
+    use crate::rng::Xoshiro256;
+
+    fn setup(batch: usize) -> (Mlp, Vec<f32>, Vec<f32>, Vec<i32>, MlpScratch) {
+        let spec = ModelSpec::default();
+        let mlp = Mlp::new(spec.clone());
+        let params = glorot_init(&spec, 0);
+        let mut rng = Xoshiro256::seed_from(1);
+        let x: Vec<f32> = (0..batch * spec.input_dim)
+            .map(|_| rng.uniform_f32())
+            .collect();
+        let y: Vec<i32> = (0..batch).map(|_| rng.below(10) as i32).collect();
+        let scratch = MlpScratch::new(&spec, batch);
+        (mlp, params, x, y, scratch)
+    }
+
+    #[test]
+    fn forward_finite_and_initial_loss_near_ln10() {
+        let (mlp, params, x, y, mut s) = setup(32);
+        let loss = mlp.loss(&params, &x, &y, 32, &mut s);
+        assert!(loss.is_finite());
+        // glorot init + uniform labels: loss ~ ln(10) = 2.303
+        assert!((loss - (10.0f32).ln()).abs() < 0.5, "loss={loss}");
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let (mlp, params, x, y, mut s) = setup(8);
+        let mut grad = vec![0.0; mlp.param_dim()];
+        mlp.loss_and_grad(&params, &x, &y, 8, &mut s, &mut grad);
+        let mut rng = Xoshiro256::seed_from(9);
+        let eps = 1e-3f32;
+        // check a few coordinates from each parameter block
+        let o = mlp.spec.offsets();
+        let mut idxs: Vec<usize> = (0..6).map(|b| o[b] + rng.below(o[b + 1] - o[b])).collect();
+        idxs.extend((0..6).map(|_| rng.below(mlp.param_dim())));
+        for idx in idxs {
+            let mut p = params.clone();
+            p[idx] += eps;
+            let hi = mlp.loss(&p, &x, &y, 8, &mut s);
+            p[idx] -= 2.0 * eps;
+            let lo = mlp.loss(&p, &x, &y, 8, &mut s);
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!(
+                (fd - grad[idx]).abs() < 5e-3,
+                "idx={idx} fd={fd} grad={}",
+                grad[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_reduces_loss() {
+        // memorize one fixed batch of 32 random-label samples: 1990 params
+        // are ample capacity, so full-batch SGD must cut the loss deeply
+        let (mlp, mut params, x, y, mut s) = setup(32);
+        let mut grad = vec![0.0; mlp.param_dim()];
+        let first = mlp.loss_and_grad(&params, &x, &y, 32, &mut s, &mut grad);
+        for _ in 0..400 {
+            let _ = mlp.loss_and_grad(&params, &x, &y, 32, &mut s, &mut grad);
+            tensor::axpy(-0.2, &grad, &mut params);
+        }
+        let last = mlp.loss(&params, &x, &y, 32, &mut s);
+        assert!(last < first * 0.5, "first={first} last={last}");
+    }
+
+    #[test]
+    fn evaluate_chunks_match_single_shot() {
+        let (mlp, params, x, y, _) = setup(64);
+        let mut small = MlpScratch::new(&mlp.spec, 10); // forces chunking
+        let mut big = MlpScratch::new(&mlp.spec, 64);
+        let (l1, a1) = mlp.evaluate(&params, &x, &y, &mut small);
+        let (l2, a2) = mlp.evaluate(&params, &x, &y, &mut big);
+        assert!((l1 - l2).abs() < 1e-5);
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn batch_one_works() {
+        let (mlp, params, x, y, _) = setup(1);
+        let mut s = MlpScratch::new(&mlp.spec, 1);
+        let mut grad = vec![0.0; mlp.param_dim()];
+        let loss = mlp.loss_and_grad(&params, &x, &y, 1, &mut s, &mut grad);
+        assert!(loss.is_finite());
+        assert!(grad.iter().any(|&g| g != 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "batch")]
+    fn oversized_batch_panics() {
+        let (mlp, params, x, _, mut s) = setup(4);
+        mlp.forward(&params, &x, 8, &mut s);
+    }
+}

@@ -1,0 +1,83 @@
+//! Pure-Rust neural-network substrate: the exact twin of the JAX model in
+//! `python/compile/model.py`.
+//!
+//! Same architecture (64 → 24 ReLU → 12 ReLU → 10, softmax-CE), same flat
+//! parameter layout (w1 b1 w2 b2 w3 b3 row-major, d = 1990), same math —
+//! the integration suite asserts the two backends produce matching local-SGD
+//! deltas given identical parameters and batches.
+
+mod init;
+mod mlp;
+
+pub use init::glorot_init;
+pub use mlp::{Mlp, MlpScratch};
+
+/// Model architecture description (shared by both backends and the config
+/// system). The default mirrors the paper's section III experiment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub input_dim: usize,
+    pub hidden1: usize,
+    pub hidden2: usize,
+    pub num_classes: usize,
+}
+
+impl Default for ModelSpec {
+    fn default() -> Self {
+        ModelSpec {
+            input_dim: 64,
+            hidden1: 24,
+            hidden2: 12,
+            num_classes: 10,
+        }
+    }
+}
+
+impl ModelSpec {
+    /// Total trainable parameter count `d` (1990 for the paper's model —
+    /// "approximately 2000").
+    pub fn param_dim(&self) -> usize {
+        self.input_dim * self.hidden1
+            + self.hidden1
+            + self.hidden1 * self.hidden2
+            + self.hidden2
+            + self.hidden2 * self.num_classes
+            + self.num_classes
+    }
+
+    /// Offsets of (w1, b1, w2, b2, w3, b3) in the flat vector.
+    pub fn offsets(&self) -> [usize; 7] {
+        let mut o = [0usize; 7];
+        let sizes = [
+            self.input_dim * self.hidden1,
+            self.hidden1,
+            self.hidden1 * self.hidden2,
+            self.hidden2,
+            self.hidden2 * self.num_classes,
+            self.num_classes,
+        ];
+        for i in 0..6 {
+            o[i + 1] = o[i] + sizes[i];
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_model_is_1990_params() {
+        assert_eq!(ModelSpec::default().param_dim(), 1990);
+    }
+
+    #[test]
+    fn offsets_partition_the_vector() {
+        let spec = ModelSpec::default();
+        let o = spec.offsets();
+        assert_eq!(o[0], 0);
+        assert_eq!(o[6], spec.param_dim());
+        assert!(o.windows(2).all(|w| w[0] < w[1]));
+    }
+}

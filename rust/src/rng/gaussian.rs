@@ -1,0 +1,116 @@
+//! Standard normal variates via Box–Muller (with caching of the second
+//! draw), used for the PureRust projection vectors, glorot-free init noise,
+//! and the lognormal channel model.
+
+use super::Xoshiro256;
+
+#[derive(Debug, Clone, Default)]
+pub struct GaussianSource {
+    cached: Option<f32>,
+}
+
+impl GaussianSource {
+    pub fn new() -> Self {
+        GaussianSource { cached: None }
+    }
+
+    /// Next N(0,1) sample.
+    ///
+    /// Marsaglia polar method (no sin/cos — §Perf: 2.8x faster than the
+    /// original Box–Muller on the projection hot path, see EXPERIMENTS.md).
+    #[inline]
+    pub fn next(&mut self, rng: &mut Xoshiro256) -> f32 {
+        if let Some(z) = self.cached.take() {
+            return z;
+        }
+        loop {
+            let u = 2.0 * rng.uniform_f64() - 1.0;
+            let v = 2.0 * rng.uniform_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.cached = Some((v * f) as f32);
+                return (u * f) as f32;
+            }
+        }
+    }
+
+    /// Fill a slice with N(0,1) samples (pairwise polar writes — skips the
+    /// per-sample cache shuffle of `next`).
+    pub fn fill(&mut self, rng: &mut Xoshiro256, out: &mut [f32]) {
+        let mut i = 0;
+        let n = out.len();
+        while i + 1 < n {
+            let (a, b) = polar_pair(rng);
+            out[i] = a;
+            out[i + 1] = b;
+            i += 2;
+        }
+        if i < n {
+            out[i] = self.next(rng);
+        }
+    }
+}
+
+/// One accepted polar-method pair.
+#[inline]
+fn polar_pair(rng: &mut Xoshiro256) -> (f32, f32) {
+    loop {
+        let u = 2.0 * rng.uniform_f64() - 1.0;
+        let v = 2.0 * rng.uniform_f64() - 1.0;
+        let s = u * u + v * v;
+        if s > 0.0 && s < 1.0 {
+            let f = (-2.0 * s.ln() / s).sqrt();
+            return ((u * f) as f32, (v * f) as f32);
+        }
+    }
+}
+
+/// One lognormal multiplicative factor with E[factor] = 1:
+/// `exp(sigma * z - sigma^2 / 2)`. Used by the channel model (§III: the
+/// nominal uplink rate is perturbed by "multiplicative lognormal
+/// variability").
+pub fn lognormal_unit_mean(rng: &mut Xoshiro256, g: &mut GaussianSource, sigma: f64) -> f64 {
+    let z = g.next(rng) as f64;
+    (sigma * z - sigma * sigma / 2.0).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Xoshiro256::seed_from(10);
+        let mut g = GaussianSource::new();
+        let n = 200_000;
+        let (mut s, mut s2, mut s4) = (0.0f64, 0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = g.next(&mut rng) as f64;
+            s += x;
+            s2 += x * x;
+            s4 += x * x * x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        let kurt = s4 / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+        assert!((kurt - 3.0).abs() < 0.15, "E[x^4]={kurt}"); // 4th moment = 3
+    }
+
+    #[test]
+    fn lognormal_unit_mean_property() {
+        let mut rng = Xoshiro256::seed_from(11);
+        let mut g = GaussianSource::new();
+        let n = 200_000;
+        let mut s = 0.0f64;
+        for _ in 0..n {
+            let f = lognormal_unit_mean(&mut rng, &mut g, 0.3);
+            assert!(f > 0.0);
+            s += f;
+        }
+        let mean = s / n as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean={mean}");
+    }
+}

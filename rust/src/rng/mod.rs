@@ -1,0 +1,126 @@
+//! Deterministic PRNG substrate (the `rand` crate is unavailable offline).
+//!
+//! * [`SplitMix64`] — seed expander / stream splitter (Steele et al. 2014).
+//! * [`Xoshiro256`] — xoshiro256++ general-purpose generator (Blackman &
+//!   Vigna 2019), the workhorse behind batching, channel noise, client
+//!   seeds, and the PureRust backend's projection vectors.
+//! * [`gaussian`] — Box–Muller standard normals.
+//! * [`rademacher`] — ±1 fair coin vectors (paper Definition 1).
+//!
+//! Everything is seedable and reproducible; all experiment entry points
+//! thread explicit seeds so a figure regenerates bit-identically.
+
+mod gaussian;
+mod splitmix;
+mod xoshiro;
+
+pub use gaussian::{lognormal_unit_mean, GaussianSource};
+pub use splitmix::SplitMix64;
+pub use xoshiro::Xoshiro256;
+
+/// The distribution of the random projection vector `v` (paper §II-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VDistribution {
+    /// `v ~ N(0, I_d)` — the baseline analysed in Lemmas 2.1/2.2.
+    Normal,
+    /// `v ∈ {−1,+1}^d` uniform — reduces aggregation variance by
+    /// `(2/N²) Σ‖δ‖²` (Proposition 2.1).
+    Rademacher,
+}
+
+impl VDistribution {
+    pub fn name(self) -> &'static str {
+        match self {
+            VDistribution::Normal => "normal",
+            VDistribution::Rademacher => "rademacher",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "normal" | "gaussian" => Some(VDistribution::Normal),
+            "rademacher" | "rad" => Some(VDistribution::Rademacher),
+            _ => None,
+        }
+    }
+}
+
+/// Fill `out` with the seeded random vector `v(seed)` for the given
+/// distribution. This is the PureRust twin of `fed.sample_v`: the *stream*
+/// differs from JAX threefry (irrelevant — each backend is internally
+/// consistent, which is all Algorithm 1 requires), but moments match:
+/// zero mean, identity covariance.
+pub fn fill_v(seed: u32, dist: VDistribution, out: &mut [f32]) {
+    let mut rng = Xoshiro256::seed_from(seed as u64 ^ 0x9e37_79b9_7f4a_7c15);
+    match dist {
+        VDistribution::Normal => {
+            let mut g = GaussianSource::new();
+            g.fill(&mut rng, out);
+        }
+        VDistribution::Rademacher => rademacher(&mut rng, out),
+    }
+}
+
+/// Fill `out` with independent ±1 entries (P = 1/2 each), 64 per draw.
+pub fn rademacher(rng: &mut Xoshiro256, out: &mut [f32]) {
+    let mut bits = 0u64;
+    let mut left = 0u32;
+    for x in out.iter_mut() {
+        if left == 0 {
+            bits = rng.next_u64();
+            left = 64;
+        }
+        *x = if bits & 1 == 1 { 1.0 } else { -1.0 };
+        bits >>= 1;
+        left -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_v_deterministic_per_seed() {
+        let mut a = vec![0.0f32; 64];
+        let mut b = vec![0.0f32; 64];
+        fill_v(7, VDistribution::Normal, &mut a);
+        fill_v(7, VDistribution::Normal, &mut b);
+        assert_eq!(a, b);
+        fill_v(8, VDistribution::Normal, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn rademacher_is_pm_one() {
+        let mut v = vec![0.0f32; 1000];
+        fill_v(3, VDistribution::Rademacher, &mut v);
+        assert!(v.iter().all(|&x| x == 1.0 || x == -1.0));
+        // roughly balanced
+        let pos = v.iter().filter(|&&x| x > 0.0).count();
+        assert!(pos > 380 && pos < 620, "pos={pos}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut v = vec![0.0f32; 100_000];
+        fill_v(11, VDistribution::Normal, &mut v);
+        let mean = v.iter().sum::<f32>() / v.len() as f32;
+        let var = v.iter().map(|x| x * x).sum::<f32>() / v.len() as f32 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn dist_parse_roundtrip() {
+        assert_eq!(VDistribution::parse("normal"), Some(VDistribution::Normal));
+        assert_eq!(
+            VDistribution::parse("rademacher"),
+            Some(VDistribution::Rademacher)
+        );
+        assert_eq!(VDistribution::parse("cauchy"), None);
+        for d in [VDistribution::Normal, VDistribution::Rademacher] {
+            assert_eq!(VDistribution::parse(d.name()), Some(d));
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! SplitMix64 — tiny, fast seed expander (Steele, Lea & Flood 2014).
+//!
+//! Used to derive well-distributed 256-bit xoshiro states from a single
+//! 64-bit seed, and to split independent per-agent / per-round streams.
+
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Derive an independent child seed for stream `index` (agent id,
+    /// round number, ...), stable w.r.t. the parent seed.
+    pub fn derive(seed: u64, index: u64) -> u64 {
+        let mut sm = SplitMix64::new(seed ^ index.wrapping_mul(0xd134_2543_de82_ef95));
+        sm.next_u64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // reference values for seed 0 (computed by the canonical C impl)
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next_u64(), 0xe220a8397b1dcdaf);
+        assert_eq!(sm.next_u64(), 0x6e789e6aa1b965f4);
+        assert_eq!(sm.next_u64(), 0x06c45d188009454f);
+    }
+
+    #[test]
+    fn derive_is_stable_and_distinct() {
+        let a = SplitMix64::derive(42, 0);
+        let b = SplitMix64::derive(42, 1);
+        let a2 = SplitMix64::derive(42, 0);
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_ne!(SplitMix64::derive(43, 0), a);
+    }
+}

@@ -1,0 +1,215 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. The Rust side refuses to run a configuration that
+//! disagrees with the shapes baked into the HLO artifacts.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub param_dim: usize,
+    pub num_agents: usize,
+    pub local_steps: usize,
+    pub batch_size: usize,
+    pub eval_size: usize,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub entries: Vec<String>,
+    dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let mut kv = BTreeMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                kv.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        let get_usize = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .ok_or_else(|| Error::artifact(format!("manifest missing key {k}")))?
+                .parse()
+                .map_err(|e| Error::artifact(format!("manifest key {k}: {e}")))
+        };
+        let entries: Vec<String> = kv
+            .get("entries")
+            .ok_or_else(|| Error::artifact("manifest missing key entries"))?
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        let m = Manifest {
+            param_dim: get_usize("param_dim")?,
+            num_agents: get_usize("num_agents")?,
+            local_steps: get_usize("local_steps")?,
+            batch_size: get_usize("batch_size")?,
+            eval_size: get_usize("eval_size")?,
+            input_dim: get_usize("input_dim")?,
+            num_classes: get_usize("num_classes")?,
+            entries,
+            dir,
+        };
+        // the six entry points the runtime depends on
+        for required in [
+            "client_fedscalar_normal",
+            "client_fedscalar_rademacher",
+            "server_reconstruct_normal",
+            "server_reconstruct_rademacher",
+            "client_delta",
+            "eval",
+        ] {
+            if !m.entries.iter().any(|e| e == required) {
+                return Err(Error::artifact(format!(
+                    "manifest lacks required entry point {required}"
+                )));
+            }
+            let p = m.hlo_path(required);
+            if !p.exists() {
+                return Err(Error::artifact(format!("missing artifact {}", p.display())));
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn hlo_path(&self, entry: &str) -> PathBuf {
+        self.dir.join(format!("{entry}.hlo.txt"))
+    }
+
+    pub fn train_csv(&self) -> PathBuf {
+        self.dir.join("digits_train.csv")
+    }
+
+    pub fn test_csv(&self) -> PathBuf {
+        self.dir.join("digits_test.csv")
+    }
+
+    /// Check an experiment configuration against the baked shapes.
+    pub fn check_compatible(
+        &self,
+        param_dim: usize,
+        num_agents: usize,
+        local_steps: usize,
+        batch_size: usize,
+    ) -> Result<()> {
+        let mut problems = Vec::new();
+        if self.param_dim != param_dim {
+            problems.push(format!("param_dim {} != {}", param_dim, self.param_dim));
+        }
+        if num_agents > self.num_agents {
+            // fewer agents than baked N is fine (zero-padded aggregation);
+            // more is not.
+            problems.push(format!(
+                "num_agents {} > baked {}",
+                num_agents, self.num_agents
+            ));
+        }
+        if self.local_steps != local_steps {
+            problems.push(format!(
+                "local_steps {} != {}",
+                local_steps, self.local_steps
+            ));
+        }
+        if self.batch_size != batch_size {
+            problems.push(format!("batch_size {} != {}", batch_size, self.batch_size));
+        }
+        if problems.is_empty() {
+            Ok(())
+        } else {
+            Err(Error::artifact(format!(
+                "config incompatible with artifacts ({}); re-run `make artifacts` after editing python/compile/aot.py",
+                problems.join("; ")
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, extra: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+        write!(
+            f,
+            "param_dim=1990\nnum_agents=20\nlocal_steps=5\nbatch_size=32\n\
+             eval_size=360\ninput_dim=64\nnum_classes=10\n\
+             entries=client_fedscalar_normal,client_fedscalar_rademacher,\
+             server_reconstruct_normal,server_reconstruct_rademacher,client_delta,eval\n{extra}"
+        )
+        .unwrap();
+        for e in [
+            "client_fedscalar_normal",
+            "client_fedscalar_rademacher",
+            "server_reconstruct_normal",
+            "server_reconstruct_rademacher",
+            "client_delta",
+            "eval",
+        ] {
+            std::fs::write(dir.join(format!("{e}.hlo.txt")), "ENTRY x").unwrap();
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fedscalar_manifest_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn load_and_check() {
+        let d = tmpdir("ok");
+        write_manifest(&d, "");
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.param_dim, 1990);
+        assert_eq!(m.entries.len(), 6);
+        m.check_compatible(1990, 20, 5, 32).unwrap();
+        m.check_compatible(1990, 10, 5, 32).unwrap(); // fewer agents OK
+        assert!(m.check_compatible(1990, 21, 5, 32).is_err());
+        assert!(m.check_compatible(2000, 20, 5, 32).is_err());
+        assert!(m.check_compatible(1990, 20, 4, 32).is_err());
+        assert!(m.check_compatible(1990, 20, 5, 64).is_err());
+        std::fs::remove_dir_all(d).ok();
+    }
+
+    #[test]
+    fn missing_dir_reports_make_artifacts() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(format!("{err}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn missing_hlo_file_detected() {
+        let d = tmpdir("missing");
+        write_manifest(&d, "");
+        std::fs::remove_file(d.join("eval.hlo.txt")).unwrap();
+        assert!(Manifest::load(&d).is_err());
+        std::fs::remove_dir_all(d).ok();
+    }
+
+    #[test]
+    fn paths() {
+        let d = tmpdir("paths");
+        write_manifest(&d, "");
+        let m = Manifest::load(&d).unwrap();
+        assert!(m.hlo_path("eval").ends_with("eval.hlo.txt"));
+        assert!(m.train_csv().ends_with("digits_train.csv"));
+        assert!(m.test_csv().ends_with("digits_test.csv"));
+        std::fs::remove_dir_all(d).ok();
+    }
+}

@@ -1,0 +1,103 @@
+//! The compute-backend abstraction: the five entry points every federated
+//! round needs.
+
+use crate::error::Result;
+use crate::rng::VDistribution;
+
+/// What a FedScalar client sends up the wire, plus simulation-only
+/// telemetry. THE INVARIANT: the wire payload is `seed` + `rs` (m scalars;
+/// m = 1 in the paper's headline config) — `loss` and `delta_sq` are
+/// simulation telemetry that never count toward communication (and are
+/// asserted so by the payload accounting tests).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalarUpload {
+    pub seed: u32,
+    pub rs: Vec<f32>,
+    pub loss: f32,
+    /// ||delta||² — reported so the harness can evaluate the Prop-2.1
+    /// variance gap exactly; not transmitted.
+    pub delta_sq: f32,
+}
+
+/// A compute backend. All methods take `&mut self` (backends own scratch
+/// buffers / PJRT handles); the coordinator serializes access.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Model dimension d.
+    fn param_dim(&self) -> usize;
+
+    /// Initial global parameters (glorot weights, zero biases).
+    fn init_params(&mut self, seed: u64) -> Result<Vec<f32>>;
+
+    /// FedScalar ClientStage (Algorithm 1 lines 15-24): S local SGD steps
+    /// on the [S,B,dim]/[S,B] batches, then `projections` scalar encodings
+    /// of delta against v(subseed(seed, j)).
+    fn client_fedscalar(
+        &mut self,
+        params: &[f32],
+        xb: &[f32],
+        yb: &[i32],
+        seed: u32,
+        alpha: f32,
+        dist: VDistribution,
+        projections: usize,
+    ) -> Result<ScalarUpload>;
+
+    /// All N FedScalar client stages of one round. `xbs`/`ybs` are the N
+    /// concatenated per-client batch buffers, `seeds` the N wire seeds.
+    ///
+    /// Default: loop over `client_fedscalar` (bit-identical to the
+    /// pre-batching behaviour). The XLA backend overrides this with a
+    /// single vmapped artifact call — the §Perf L2/L3 dispatch-collapse
+    /// optimization.
+    fn client_fedscalar_batch(
+        &mut self,
+        params: &[f32],
+        xbs: &[f32],
+        ybs: &[i32],
+        seeds: &[u32],
+        alpha: f32,
+        dist: VDistribution,
+        projections: usize,
+    ) -> Result<Vec<ScalarUpload>> {
+        let n = seeds.len();
+        assert!(n > 0 && xbs.len() % n == 0 && ybs.len() % n == 0);
+        let xlen = xbs.len() / n;
+        let ylen = ybs.len() / n;
+        (0..n)
+            .map(|i| {
+                self.client_fedscalar(
+                    params,
+                    &xbs[i * xlen..(i + 1) * xlen],
+                    &ybs[i * ylen..(i + 1) * ylen],
+                    seeds[i],
+                    alpha,
+                    dist,
+                    projections,
+                )
+            })
+            .collect()
+    }
+
+    /// Baseline client stage: the same S local SGD steps, returning the
+    /// raw d-dimensional delta (FedAvg ships it; QSGD quantizes it).
+    fn client_delta(
+        &mut self,
+        params: &[f32],
+        xb: &[f32],
+        yb: &[i32],
+        alpha: f32,
+    ) -> Result<(Vec<f32>, f32)>;
+
+    /// Server aggregation (Algorithm 1 lines 7-12 + the multi-projection
+    /// mean): `ghat = 1/(N*m) * sum_{n,j} r_{n,j} v(subseed(seed_n, j))`.
+    fn server_reconstruct(
+        &mut self,
+        uploads: &[ScalarUpload],
+        dist: VDistribution,
+    ) -> Result<Vec<f32>>;
+
+    /// (loss, accuracy) of `params` on an evaluation set.
+    fn evaluate(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)>;
+}

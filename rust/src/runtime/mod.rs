@@ -1,0 +1,26 @@
+//! Compute runtime: the [`Backend`] abstraction and its two
+//! implementations.
+//!
+//! * [`XlaBackend`] — loads the AOT HLO artifacts produced by
+//!   `python/compile/aot.py` and executes them on the PJRT CPU client via
+//!   the `xla` crate. This is the real three-layer stack (L3 Rust → L2 JAX
+//!   graph → L1 Pallas kernels): Python is never involved at run time.
+//! * [`PureRustBackend`] — the dependency-free native twin (same math,
+//!   same flat parameter layout). Serves as the cross-validation oracle
+//!   and the fast path for the 10-run figure sweeps.
+//!
+//! The FedScalar *wire protocol invariant* lives here: a client stage
+//! returns only `(seed, scalars, loss, ||delta||²)` — nothing
+//! d-dimensional ever crosses the [`ScalarUpload`] boundary.
+
+mod artifacts;
+mod backend;
+mod pjrt;
+mod pure_rust;
+mod xla_backend;
+
+pub use artifacts::Manifest;
+pub use backend::{Backend, ScalarUpload};
+pub use pjrt::{literal_f32_vec, literal_i32_vec, literal_u32_vec, XlaExecutable, XlaRuntime};
+pub use pure_rust::PureRustBackend;
+pub use xla_backend::XlaBackend;

@@ -1,0 +1,103 @@
+//! Thin PJRT wrapper around the `xla` crate: load HLO-text artifacts,
+//! compile once, execute many times.
+//!
+//! Interchange format is HLO *text* (not serialized HloModuleProto):
+//! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md
+//! and python/compile/aot.py).
+
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// Shared PJRT CPU client.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    pub fn cpu() -> Result<XlaRuntime> {
+        Ok(XlaRuntime {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<XlaExecutable> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Err(Error::artifact(format!(
+                "HLO artifact not found: {} (run `make artifacts`)",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::artifact("non-utf8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(XlaExecutable {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled executable. All aot.py entry points return tuples
+/// (`return_tuple=True`), so `run` always untuples.
+pub struct XlaExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl XlaExecutable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with the given input literals; returns the untupled outputs.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let literal = result[0][0].to_literal_sync()?;
+        Ok(literal.to_tuple()?)
+    }
+}
+
+/// f32 tensor literal with the given dims.
+pub fn literal_f32_vec(values: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    debug_assert_eq!(
+        dims.iter().product::<i64>() as usize,
+        values.len(),
+        "dims/product mismatch"
+    );
+    Ok(xla::Literal::vec1(values).reshape(dims)?)
+}
+
+/// i32 tensor literal with the given dims.
+pub fn literal_i32_vec(values: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    debug_assert_eq!(dims.iter().product::<i64>() as usize, values.len());
+    Ok(xla::Literal::vec1(values).reshape(dims)?)
+}
+
+/// u32 tensor literal with the given dims.
+pub fn literal_u32_vec(values: &[u32], dims: &[i64]) -> Result<xla::Literal> {
+    debug_assert_eq!(dims.iter().product::<i64>() as usize, values.len());
+    Ok(xla::Literal::vec1(values).reshape(dims)?)
+}
+
+/// Extract a scalar f32 from a literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Extract an f32 vector.
+pub fn vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

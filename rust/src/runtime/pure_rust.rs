@@ -1,0 +1,253 @@
+//! Dependency-free native backend: the cross-validation oracle and the
+//! fast path for multi-run figure sweeps. Implements exactly the math of
+//! the L2 JAX model + L1 kernels (see nn::Mlp and algo::projection).
+
+use super::backend::{Backend, ScalarUpload};
+use crate::algo::{projection, LocalSgd};
+use crate::error::{Error, Result};
+use crate::nn::{glorot_init, Mlp, MlpScratch, ModelSpec};
+use crate::rng::VDistribution;
+use crate::tensor;
+
+pub struct PureRustBackend {
+    mlp: Mlp,
+    sgd: Option<LocalSgd>,
+    delta: Vec<f32>,
+    v_scratch: Vec<f32>,
+    eval_scratch: MlpScratch,
+}
+
+impl PureRustBackend {
+    pub fn new(spec: &ModelSpec) -> Self {
+        let mlp = Mlp::new(spec.clone());
+        let d = mlp.param_dim();
+        PureRustBackend {
+            eval_scratch: MlpScratch::new(spec, 256),
+            mlp,
+            sgd: None,
+            delta: vec![0.0; d],
+            v_scratch: vec![0.0; d],
+        }
+    }
+
+    /// The (steps, batch) shape is discovered from the first client call
+    /// and the LocalSgd workspace is reused afterwards.
+    fn sgd_for(&mut self, xb: &[f32], yb: &[i32]) -> Result<&mut LocalSgd> {
+        let dim = self.mlp.spec.input_dim;
+        if xb.len() % dim != 0 || xb.len() / dim != yb.len() || yb.is_empty() {
+            return Err(Error::shape(format!(
+                "batch buffers inconsistent: xb={} yb={}",
+                xb.len(),
+                yb.len()
+            )));
+        }
+        let need_rebuild = match &self.sgd {
+            Some(s) => s.steps * s.batch != yb.len(),
+            None => true,
+        };
+        if need_rebuild {
+            // steps*batch total rows; the engine always uses its configured
+            // (S, B) so we recover S from the row count assuming the batch
+            // stays constant across calls. The engine passes (S*B) rows and
+            // sets the shape explicitly via set_shape.
+            return Err(Error::invariant(
+                "PureRustBackend: call set_shape(steps, batch) before client stages",
+            ));
+        }
+        Ok(self.sgd.as_mut().unwrap())
+    }
+
+    /// Declare the (S, B) client-stage shape (the engine calls this once).
+    pub fn set_shape(&mut self, steps: usize, batch: usize) {
+        let rebuild = match &self.sgd {
+            Some(s) => s.steps != steps || s.batch != batch,
+            None => true,
+        };
+        if rebuild {
+            self.sgd = Some(LocalSgd::new(&self.mlp, steps, batch));
+        }
+    }
+
+    fn run_local(
+        &mut self,
+        params: &[f32],
+        xb: &[f32],
+        yb: &[i32],
+        alpha: f32,
+    ) -> Result<f32> {
+        let _ = self.sgd_for(xb, yb)?;
+        let mlp = &self.mlp;
+        let sgd = self.sgd.as_mut().unwrap();
+        Ok(sgd.run(mlp, params, xb, yb, alpha, &mut self.delta))
+    }
+}
+
+impl Backend for PureRustBackend {
+    fn name(&self) -> &'static str {
+        "pure-rust"
+    }
+
+    fn param_dim(&self) -> usize {
+        self.mlp.param_dim()
+    }
+
+    fn init_params(&mut self, seed: u64) -> Result<Vec<f32>> {
+        Ok(glorot_init(&self.mlp.spec, seed))
+    }
+
+    fn client_fedscalar(
+        &mut self,
+        params: &[f32],
+        xb: &[f32],
+        yb: &[i32],
+        seed: u32,
+        alpha: f32,
+        dist: VDistribution,
+        projections: usize,
+    ) -> Result<ScalarUpload> {
+        let loss = self.run_local(params, xb, yb, alpha)?;
+        let mut rs = vec![0.0f32; projections];
+        projection::encode_multi(&self.delta, seed, dist, &mut self.v_scratch, &mut rs);
+        Ok(ScalarUpload {
+            seed,
+            rs,
+            loss,
+            delta_sq: tensor::norm_sq(&self.delta),
+        })
+    }
+
+    fn client_delta(
+        &mut self,
+        params: &[f32],
+        xb: &[f32],
+        yb: &[i32],
+        alpha: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let loss = self.run_local(params, xb, yb, alpha)?;
+        Ok((self.delta.clone(), loss))
+    }
+
+    fn server_reconstruct(
+        &mut self,
+        uploads: &[ScalarUpload],
+        dist: VDistribution,
+    ) -> Result<Vec<f32>> {
+        if uploads.is_empty() {
+            return Err(Error::invariant("no uploads to reconstruct"));
+        }
+        let m = uploads[0].rs.len();
+        if uploads.iter().any(|u| u.rs.len() != m) {
+            return Err(Error::invariant("uploads disagree on projection count"));
+        }
+        let n = uploads.len();
+        let mut ghat = vec![0.0f32; self.param_dim()];
+        let weight = 1.0 / (n as f32 * m as f32);
+        for u in uploads {
+            projection::decode_into(&mut ghat, u.seed, &u.rs, dist, &mut self.v_scratch, weight);
+        }
+        Ok(ghat)
+    }
+
+    fn evaluate(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        Ok(self.mlp.evaluate(params, x, y, &mut self.eval_scratch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn backend_with_batches(
+        steps: usize,
+        batch: usize,
+    ) -> (PureRustBackend, Vec<f32>, Vec<f32>, Vec<i32>) {
+        let spec = ModelSpec::default();
+        let mut be = PureRustBackend::new(&spec);
+        be.set_shape(steps, batch);
+        let params = be.init_params(0).unwrap();
+        let mut rng = Xoshiro256::seed_from(1);
+        let xb: Vec<f32> = (0..steps * batch * 64).map(|_| rng.uniform_f32()).collect();
+        let yb: Vec<i32> = (0..steps * batch).map(|_| rng.below(10) as i32).collect();
+        (be, params, xb, yb)
+    }
+
+    #[test]
+    fn client_fedscalar_consistent_with_client_delta() {
+        let (mut be, params, xb, yb) = backend_with_batches(3, 8);
+        let up = be
+            .client_fedscalar(&params, &xb, &yb, 7, 0.01, VDistribution::Rademacher, 1)
+            .unwrap();
+        let (delta, loss) = be.client_delta(&params, &xb, &yb, 0.01).unwrap();
+        assert!((up.loss - loss).abs() < 1e-6);
+        assert!((up.delta_sq - tensor::norm_sq(&delta)).abs() < 1e-3);
+        // r = <delta, v(seed)>
+        let mut v = vec![0.0f32; delta.len()];
+        crate::rng::fill_v(7, VDistribution::Rademacher, &mut v);
+        let r = tensor::dot(&delta, &v);
+        assert!((up.rs[0] - r).abs() < 1e-3);
+    }
+
+    #[test]
+    fn reconstruct_single_agent_matches_projector() {
+        let (mut be, params, xb, yb) = backend_with_batches(2, 4);
+        let up = be
+            .client_fedscalar(&params, &xb, &yb, 3, 0.02, VDistribution::Normal, 1)
+            .unwrap();
+        let ghat = be
+            .server_reconstruct(std::slice::from_ref(&up), VDistribution::Normal)
+            .unwrap();
+        let mut p = crate::algo::Projector::new(be.param_dim(), VDistribution::Normal);
+        let want = p.reconstruct(3, &up.rs); // weight 1 (N=1, m=1)
+        for (a, b) in ghat.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn reconstruct_rejects_inconsistent_uploads() {
+        let spec = ModelSpec::default();
+        let mut be = PureRustBackend::new(&spec);
+        let a = ScalarUpload {
+            seed: 0,
+            rs: vec![1.0],
+            loss: 0.0,
+            delta_sq: 0.0,
+        };
+        let b = ScalarUpload {
+            seed: 1,
+            rs: vec![1.0, 2.0],
+            loss: 0.0,
+            delta_sq: 0.0,
+        };
+        assert!(be.server_reconstruct(&[a, b], VDistribution::Normal).is_err());
+        assert!(be.server_reconstruct(&[], VDistribution::Normal).is_err());
+    }
+
+    #[test]
+    fn requires_set_shape() {
+        let spec = ModelSpec::default();
+        let mut be = PureRustBackend::new(&spec);
+        let params = be.init_params(0).unwrap();
+        let xb = vec![0.0f32; 2 * 4 * 64];
+        let yb = vec![0i32; 8];
+        assert!(be
+            .client_fedscalar(&params, &xb, &yb, 0, 0.01, VDistribution::Normal, 1)
+            .is_err());
+    }
+
+    #[test]
+    fn evaluate_bounds() {
+        let (mut be, params, _, _) = backend_with_batches(1, 4);
+        let ds = crate::data::synthetic::generate(
+            &crate::data::synthetic::SyntheticConfig {
+                n_per_class: 5,
+                ..Default::default()
+            },
+            0,
+        );
+        let (loss, acc) = be.evaluate(&params, &ds.x, &ds.y).unwrap();
+        assert!(loss > 0.0 && loss.is_finite());
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

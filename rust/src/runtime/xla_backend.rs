@@ -1,0 +1,371 @@
+//! The PJRT-backed backend: executes the AOT HLO artifacts (L2 JAX graph
+//! with the L1 Pallas kernels lowered inside) for every federated round.
+//!
+//! Seed round-trip: the client artifact computes `r = <delta, v(seed)>` and
+//! the server artifact regenerates the *bit-identical* `v(seed)` — both
+//! lower the same `jax.random` threefry program, so the only thing that
+//! crosses this boundary per agent is `(r, seed)`.
+//!
+//! Shape contract (from the manifest): params[d], xb[S,B,in], yb[S,B],
+//! reconstruct over exactly `manifest.num_agents` slots (fewer agents are
+//! zero-padded: r = 0 contributes nothing, then the mean is rescaled),
+//! eval over exactly `manifest.eval_size` rows.
+
+use super::artifacts::Manifest;
+use super::backend::{Backend, ScalarUpload};
+use super::pjrt::{
+    literal_f32_vec, literal_i32_vec, literal_u32_vec, scalar_f32, vec_f32, XlaExecutable,
+    XlaRuntime,
+};
+use crate::algo::projection::subseed;
+use crate::error::{Error, Result};
+use crate::nn::{glorot_init, ModelSpec};
+use crate::rng::VDistribution;
+use crate::tensor;
+
+pub struct XlaBackend {
+    runtime: XlaRuntime,
+    manifest: Manifest,
+    spec: ModelSpec,
+    client_fedscalar_normal: XlaExecutable,
+    client_fedscalar_rademacher: XlaExecutable,
+    /// Optional vmapped fast-path entries (one dispatch for all N client
+    /// stages) — present in artifacts built after the §Perf pass.
+    client_batch_normal: Option<XlaExecutable>,
+    client_batch_rademacher: Option<XlaExecutable>,
+    server_reconstruct_normal: XlaExecutable,
+    server_reconstruct_rademacher: XlaExecutable,
+    client_delta: XlaExecutable,
+    eval: XlaExecutable,
+    /// Route round-level client work through the vmapped artifact.
+    /// MEASURED SLOWER on single-core CPU PJRT (one batched 3-D graph vs
+    /// 20 small executables — see EXPERIMENTS.md §Perf), so the default is
+    /// false; enable with FEDSCALAR_XLA_BATCH=1 (the right choice on
+    /// multi-core/accelerator PJRT where one dispatch amortizes).
+    prefer_batched: bool,
+}
+
+impl XlaBackend {
+    /// Load + compile all six entry points from an artifacts directory.
+    pub fn load(artifacts_dir: impl AsRef<std::path::Path>) -> Result<XlaBackend> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let runtime = XlaRuntime::cpu()?;
+        let spec = ModelSpec::default();
+        if spec.param_dim() != manifest.param_dim {
+            return Err(Error::artifact(format!(
+                "model spec d={} != artifact d={}",
+                spec.param_dim(),
+                manifest.param_dim
+            )));
+        }
+        let load = |entry: &str| runtime.load(manifest.hlo_path(entry));
+        let load_opt = |entry: &str| -> Result<Option<XlaExecutable>> {
+            if manifest.entries.iter().any(|e| e == entry) {
+                Ok(Some(runtime.load(manifest.hlo_path(entry))?))
+            } else {
+                Ok(None)
+            }
+        };
+        Ok(XlaBackend {
+            client_fedscalar_normal: load("client_fedscalar_normal")?,
+            client_fedscalar_rademacher: load("client_fedscalar_rademacher")?,
+            client_batch_normal: load_opt("client_fedscalar_batch_normal")?,
+            client_batch_rademacher: load_opt("client_fedscalar_batch_rademacher")?,
+            server_reconstruct_normal: load("server_reconstruct_normal")?,
+            server_reconstruct_rademacher: load("server_reconstruct_rademacher")?,
+            client_delta: load("client_delta")?,
+            eval: load("eval")?,
+            runtime,
+            manifest,
+            spec,
+            prefer_batched: std::env::var("FEDSCALAR_XLA_BATCH").map_or(false, |v| v == "1"),
+        })
+    }
+
+    /// Override the batched-dispatch preference (see field docs).
+    pub fn set_prefer_batched(&mut self, on: bool) {
+        self.prefer_batched = on;
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    fn client_exe(&self, dist: VDistribution) -> &XlaExecutable {
+        match dist {
+            VDistribution::Normal => &self.client_fedscalar_normal,
+            VDistribution::Rademacher => &self.client_fedscalar_rademacher,
+        }
+    }
+
+    fn server_exe(&self, dist: VDistribution) -> &XlaExecutable {
+        match dist {
+            VDistribution::Normal => &self.server_reconstruct_normal,
+            VDistribution::Rademacher => &self.server_reconstruct_rademacher,
+        }
+    }
+
+    fn batch_literals(
+        &self,
+        xb: &[f32],
+        yb: &[i32],
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let s = self.manifest.local_steps as i64;
+        let b = self.manifest.batch_size as i64;
+        let input = self.manifest.input_dim as i64;
+        if xb.len() != (s * b * input) as usize || yb.len() != (s * b) as usize {
+            return Err(Error::shape(format!(
+                "client batches must be [S={s}, B={b}, {input}] as baked into the artifacts; got xb={} yb={}",
+                xb.len(),
+                yb.len()
+            )));
+        }
+        Ok((
+            literal_f32_vec(xb, &[s, b, input])?,
+            literal_i32_vec(yb, &[s, b])?,
+        ))
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn param_dim(&self) -> usize {
+        self.manifest.param_dim
+    }
+
+    fn init_params(&mut self, seed: u64) -> Result<Vec<f32>> {
+        // Same init as the PureRust backend: parameters are an explicit
+        // input to every artifact, so init does not need to run under XLA.
+        Ok(glorot_init(&self.spec, seed))
+    }
+
+    fn client_fedscalar(
+        &mut self,
+        params: &[f32],
+        xb: &[f32],
+        yb: &[i32],
+        seed: u32,
+        alpha: f32,
+        dist: VDistribution,
+        projections: usize,
+    ) -> Result<ScalarUpload> {
+        let d = self.param_dim() as i64;
+        if params.len() != d as usize {
+            return Err(Error::shape(format!("params len {} != d {}", params.len(), d)));
+        }
+        let (xl, yl) = self.batch_literals(xb, yb)?;
+        let pl = literal_f32_vec(params, &[d])?;
+        let mut rs = Vec::with_capacity(projections);
+        let mut loss = 0.0f32;
+        let mut delta_sq = 0.0f32;
+        // m > 1 re-runs the (deterministic) local stage per projection —
+        // correct but wasteful; multi-projection sweeps use the PureRust
+        // backend (see DESIGN.md).
+        for j in 0..projections {
+            let sj = subseed(seed, j);
+            let out = self.client_exe(dist).run(&[
+                pl.clone(),
+                xl.clone(),
+                yl.clone(),
+                xla::Literal::scalar(sj),
+                xla::Literal::scalar(alpha),
+            ])?;
+            if out.len() != 3 {
+                return Err(Error::invariant(format!(
+                    "client artifact returned {} outputs, expected 3",
+                    out.len()
+                )));
+            }
+            rs.push(scalar_f32(&out[0])?);
+            loss = scalar_f32(&out[1])?;
+            delta_sq = scalar_f32(&out[2])?;
+        }
+        Ok(ScalarUpload {
+            seed,
+            rs,
+            loss,
+            delta_sq,
+        })
+    }
+
+    fn client_fedscalar_batch(
+        &mut self,
+        params: &[f32],
+        xbs: &[f32],
+        ybs: &[i32],
+        seeds: &[u32],
+        alpha: f32,
+        dist: VDistribution,
+        projections: usize,
+    ) -> Result<Vec<ScalarUpload>> {
+        let n = seeds.len();
+        let slots = self.manifest.num_agents;
+        let has_batch = match dist {
+            VDistribution::Normal => self.client_batch_normal.is_some(),
+            VDistribution::Rademacher => self.client_batch_rademacher.is_some(),
+        };
+        // fast path: one vmapped dispatch when enabled, the artifact
+        // exists, the round is single-projection, and exactly the baked N
+        // agents run
+        if !(self.prefer_batched && has_batch && projections == 1 && n == slots) {
+            // fallback: the per-client loop (same as the trait default)
+            let xlen = xbs.len() / n;
+            let ylen = ybs.len() / n;
+            return (0..n)
+                .map(|i| {
+                    self.client_fedscalar(
+                        params,
+                        &xbs[i * xlen..(i + 1) * xlen],
+                        &ybs[i * ylen..(i + 1) * ylen],
+                        seeds[i],
+                        alpha,
+                        dist,
+                        projections,
+                    )
+                })
+                .collect();
+        }
+        let (s, b, input) = (
+            self.manifest.local_steps as i64,
+            self.manifest.batch_size as i64,
+            self.manifest.input_dim as i64,
+        );
+        if xbs.len() != (n as i64 * s * b * input) as usize
+            || ybs.len() != (n as i64 * s * b) as usize
+        {
+            return Err(Error::shape("batched client buffers disagree with manifest"));
+        }
+        let exe = match dist {
+            VDistribution::Normal => self.client_batch_normal.as_ref().unwrap(),
+            VDistribution::Rademacher => self.client_batch_rademacher.as_ref().unwrap(),
+        };
+        let out = exe.run(&[
+            literal_f32_vec(params, &[self.manifest.param_dim as i64])?,
+            literal_f32_vec(xbs, &[n as i64, s, b, input])?,
+            literal_i32_vec(ybs, &[n as i64, s, b])?,
+            literal_u32_vec(seeds, &[n as i64])?,
+            xla::Literal::scalar(alpha),
+        ])?;
+        if out.len() != 3 {
+            return Err(Error::invariant("batched client artifact: expected 3 outputs"));
+        }
+        let rs = vec_f32(&out[0])?;
+        let losses = vec_f32(&out[1])?;
+        let dsqs = vec_f32(&out[2])?;
+        if rs.len() != n || losses.len() != n || dsqs.len() != n {
+            return Err(Error::shape("batched client artifact output size"));
+        }
+        Ok((0..n)
+            .map(|i| ScalarUpload {
+                seed: seeds[i],
+                rs: vec![rs[i]],
+                loss: losses[i],
+                delta_sq: dsqs[i],
+            })
+            .collect())
+    }
+
+    fn client_delta(
+        &mut self,
+        params: &[f32],
+        xb: &[f32],
+        yb: &[i32],
+        alpha: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let d = self.param_dim() as i64;
+        let (xl, yl) = self.batch_literals(xb, yb)?;
+        let pl = literal_f32_vec(params, &[d])?;
+        let out = self
+            .client_delta
+            .run(&[pl, xl, yl, xla::Literal::scalar(alpha)])?;
+        if out.len() != 2 {
+            return Err(Error::invariant("client_delta artifact: expected 2 outputs"));
+        }
+        Ok((vec_f32(&out[0])?, scalar_f32(&out[1])?))
+    }
+
+    fn server_reconstruct(
+        &mut self,
+        uploads: &[ScalarUpload],
+        dist: VDistribution,
+    ) -> Result<Vec<f32>> {
+        if uploads.is_empty() {
+            return Err(Error::invariant("no uploads to reconstruct"));
+        }
+        let m = uploads[0].rs.len();
+        if uploads.iter().any(|u| u.rs.len() != m) {
+            return Err(Error::invariant("uploads disagree on projection count"));
+        }
+        let slots = self.manifest.num_agents;
+        let n = uploads.len();
+        if n > slots {
+            return Err(Error::shape(format!(
+                "{n} uploads > {slots} baked reconstruction slots"
+            )));
+        }
+        let d = self.param_dim();
+        // flatten (agent, projection) pairs into padded batches of `slots`
+        let mut pairs: Vec<(f32, u32)> = Vec::with_capacity(n * m);
+        for u in uploads {
+            for (j, &r) in u.rs.iter().enumerate() {
+                pairs.push((r, subseed(u.seed, j)));
+            }
+        }
+        let mut ghat = vec![0.0f32; d];
+        for chunk in pairs.chunks(slots) {
+            let mut rs = vec![0.0f32; slots];
+            let mut seeds = vec![0u32; slots];
+            for (i, &(r, s)) in chunk.iter().enumerate() {
+                rs[i] = r;
+                seeds[i] = s;
+            }
+            let out = self.server_exe(dist).run(&[
+                literal_f32_vec(&rs, &[slots as i64])?,
+                literal_u32_vec(&seeds, &[slots as i64])?,
+            ])?;
+            if out.len() != 1 {
+                return Err(Error::invariant("server artifact: expected 1 output"));
+            }
+            let part = vec_f32(&out[0])?;
+            if part.len() != d {
+                return Err(Error::shape(format!(
+                    "server artifact returned {} dims, expected {d}",
+                    part.len()
+                )));
+            }
+            tensor::axpy(1.0, &part, &mut ghat);
+        }
+        // artifact divides by `slots`; rescale to the true 1/(n*m) mean
+        let rescale = slots as f32 / (n as f32 * m as f32);
+        tensor::scale(rescale, &mut ghat);
+        Ok(ghat)
+    }
+
+    fn evaluate(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let e = self.manifest.eval_size;
+        let input = self.manifest.input_dim;
+        if y.len() != e || x.len() != e * input {
+            return Err(Error::shape(format!(
+                "eval artifact is baked for exactly {e} rows x {input} features; got {} rows \
+                 (use the artifact CSV test split or rebuild artifacts)",
+                y.len()
+            )));
+        }
+        let out = self.eval.run(&[
+            literal_f32_vec(params, &[self.param_dim() as i64])?,
+            literal_f32_vec(x, &[e as i64, input as i64])?,
+            literal_i32_vec(y, &[e as i64])?,
+        ])?;
+        if out.len() != 2 {
+            return Err(Error::invariant("eval artifact: expected 2 outputs"));
+        }
+        Ok((scalar_f32(&out[0])?, scalar_f32(&out[1])?))
+    }
+}

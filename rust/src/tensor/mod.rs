@@ -1,0 +1,16 @@
+//! Minimal dense linear algebra over `&[f32]` (row-major), sized for the
+//! Digits MLP hot path. No heap allocation inside the kernels — callers own
+//! every buffer, which keeps the round loop allocation-free.
+//!
+//! The blocked [`gemm`] variants are the L3 performance-critical kernels;
+//! see EXPERIMENTS.md §Perf for the micro-bench history.
+
+pub mod ops;
+
+pub use ops::*;
+
+/// Validate a (rows, cols) view of a flat slice.
+#[inline]
+pub fn check_dims(buf: &[f32], rows: usize, cols: usize, what: &str) {
+    debug_assert_eq!(buf.len(), rows * cols, "{what}: {} != {rows}x{cols}", buf.len());
+}

@@ -1,0 +1,309 @@
+//! Dense kernels: dot/axpy/gemm (NN / TN / NT) + softmax-CE helpers.
+
+/// `sum_i a_i * b_i`, 4-way unrolled.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = alpha * y`.
+#[inline]
+pub fn scale(alpha: f32, y: &mut [f32]) {
+    for yi in y.iter_mut() {
+        *yi *= alpha;
+    }
+}
+
+/// `out = a - b` elementwise.
+#[inline]
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn norm_sq(a: &[f32]) -> f32 {
+    dot(a, a)
+}
+
+/// C[m,n] = A[m,k] @ B[k,n] + C. Row-major, ikj loop order (B rows stream
+/// through cache, C row stays hot).
+pub fn gemm_nn_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (p, &aip) in a_row.iter().enumerate() {
+            if aip == 0.0 {
+                continue;
+            }
+            let b_row = &b[p * n..(p + 1) * n];
+            axpy(aip, b_row, c_row);
+        }
+    }
+}
+
+/// C[m,n] = A[m,k] @ B[k,n] (overwrites C).
+pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    c.fill(0.0);
+    gemm_nn_acc(m, k, n, a, b, c);
+}
+
+/// C[k,n] += A[m,k]^T @ B[m,n] — the dW = x^T g backprop kernel.
+pub fn gemm_tn_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    for r in 0..m {
+        let a_row = &a[r * k..(r + 1) * k];
+        let b_row = &b[r * n..(r + 1) * n];
+        for (p, &arp) in a_row.iter().enumerate() {
+            if arp == 0.0 {
+                continue;
+            }
+            axpy(arp, b_row, &mut c[p * n..(p + 1) * n]);
+        }
+    }
+}
+
+/// C[m,k] = A[m,n] @ B[k,n]^T — the dx = g W^T backprop kernel.
+pub fn gemm_nt(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * k);
+    for i in 0..m {
+        let a_row = &a[i * n..(i + 1) * n];
+        for p in 0..k {
+            c[i * k + p] = dot(a_row, &b[p * n..(p + 1) * n]);
+        }
+    }
+}
+
+/// In-place ReLU; returns nothing (mask recoverable from output > 0).
+#[inline]
+pub fn relu_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Add a bias row to each row of a [rows, n] buffer.
+#[inline]
+pub fn add_bias(rows: usize, n: usize, bias: &[f32], x: &mut [f32]) {
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(x.len(), rows * n);
+    for r in 0..rows {
+        for j in 0..n {
+            x[r * n + j] += bias[j];
+        }
+    }
+}
+
+/// Numerically-stable log-sum-exp of a row.
+#[inline]
+pub fn logsumexp(row: &[f32]) -> f32 {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let s: f32 = row.iter().map(|&x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// Row-wise softmax written into `out`.
+pub fn softmax_rows(rows: usize, n: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * n);
+    debug_assert_eq!(out.len(), rows * n);
+    for r in 0..rows {
+        let row = &x[r * n..(r + 1) * n];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut s = 0.0f32;
+        for j in 0..n {
+            let e = (row[j] - m).exp();
+            out[r * n + j] = e;
+            s += e;
+        }
+        let inv = 1.0 / s;
+        for j in 0..n {
+            out[r * n + j] *= inv;
+        }
+    }
+}
+
+/// Index of the max element of a row.
+#[inline]
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += a[i * k + p] * b[p * n + j];
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    fn arange(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (i as f32) * 0.37 - 3.0).collect()
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a = arange(103);
+        let b: Vec<f32> = a.iter().map(|x| x * 0.5 + 1.0).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-2 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn gemm_nn_matches_naive() {
+        let (m, k, n) = (7, 13, 5);
+        let a = arange(m * k);
+        let b = arange(k * n);
+        let mut c = vec![0.0; m * n];
+        gemm_nn(m, k, n, &a, &b, &mut c);
+        let want = naive_gemm(m, k, n, &a, &b);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gemm_tn_matches_naive() {
+        // C[k,n] = A[m,k]^T B[m,n]
+        let (m, k, n) = (6, 4, 9);
+        let a = arange(m * k);
+        let b = arange(m * n);
+        let mut c = vec![0.0; k * n];
+        gemm_tn_acc(m, k, n, &a, &b, &mut c);
+        // naive: at[k,m] @ b[m,n]
+        let mut at = vec![0.0; k * m];
+        for i in 0..m {
+            for p in 0..k {
+                at[p * m + i] = a[i * k + p];
+            }
+        }
+        let want = naive_gemm(k, m, n, &at, &b);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_naive() {
+        // C[m,k] = A[m,n] @ B[k,n]^T
+        let (m, n, k) = (5, 8, 3);
+        let a = arange(m * n);
+        let b = arange(k * n);
+        let mut c = vec![0.0; m * k];
+        gemm_nt(m, n, k, &a, &b, &mut c);
+        let mut bt = vec![0.0; n * k];
+        for p in 0..k {
+            for j in 0..n {
+                bt[j * k + p] = b[p * n + j];
+            }
+        }
+        let want = naive_gemm(m, n, k, &a, &bt);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = arange(4 * 10);
+        let mut out = vec![0.0; 40];
+        softmax_rows(4, 10, &x, &mut out);
+        for r in 0..4 {
+            let s: f32 = out[r * 10..(r + 1) * 10].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(out[r * 10..(r + 1) * 10].iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn logsumexp_stable() {
+        let row = [1000.0f32, 1000.0, 1000.0];
+        let l = logsumexp(&row);
+        assert!((l - (1000.0 + (3.0f32).ln())).abs() < 1e-3);
+        assert!(l.is_finite());
+    }
+
+    #[test]
+    fn relu_and_bias() {
+        let mut x = vec![-1.0, 2.0, -3.0, 4.0];
+        relu_inplace(&mut x);
+        assert_eq!(x, vec![0.0, 2.0, 0.0, 4.0]);
+        let mut y = vec![0.0; 4];
+        add_bias(2, 2, &[1.0, -1.0], &mut y);
+        assert_eq!(y, vec![1.0, -1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn axpy_scale_sub_norm() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![1.0, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, vec![1.5, 2.5, 3.5]);
+        let mut d = vec![0.0; 3];
+        sub(&y, &x, &mut d);
+        assert_eq!(d, vec![0.5, 0.5, 0.5]);
+        assert!((norm_sq(&d) - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Mini property-testing kit (proptest substitute): seeded generators +
+//! a `forall` runner that reports the failing case and its seed so it can
+//! be replayed deterministically.
+//!
+//! Used by the crate's property tests on routing/partition/quantizer/
+//! projection invariants.
+
+use crate::rng::{GaussianSource, Xoshiro256};
+
+/// Per-case generation context.
+pub struct Gen<'a> {
+    pub rng: &'a mut Xoshiro256,
+    gauss: GaussianSource,
+}
+
+impl<'a> Gen<'a> {
+    pub fn new(rng: &'a mut Xoshiro256) -> Self {
+        Gen {
+            rng,
+            gauss: GaussianSource::new(),
+        }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + self.rng.below(hi - lo)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn normal_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.gauss.next(self.rng) * scale).collect()
+    }
+
+    pub fn uniform_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.uniform_in(lo, hi)).collect()
+    }
+
+    pub fn labels(&mut self, n: usize, classes: usize) -> Vec<i32> {
+        (0..n).map(|_| self.rng.below(classes) as i32).collect()
+    }
+
+    pub fn pick<'b, T>(&mut self, xs: &'b [T]) -> &'b T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `cases` random cases of `prop`. On failure, panics with the case
+/// index and the master seed (set `FEDSCALAR_PROP_SEED` to replay).
+pub fn forall<F: FnMut(&mut Gen<'_>) -> Result<(), String>>(name: &str, cases: usize, mut prop: F) {
+    let seed = std::env::var("FEDSCALAR_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xfeed_5ca1);
+    let master = Xoshiro256::seed_from(seed);
+    for case in 0..cases {
+        let mut case_rng = master.child(case as u64);
+        let mut g = Gen::new(&mut case_rng);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property {name:?} failed at case {case}/{cases} (seed {seed}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("usize_in bounds", 200, |g| {
+            let x = g.usize_in(3, 10);
+            if (3..10).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn forall_reports_failure() {
+        forall("always fails eventually", 10, |g| {
+            if g.usize_in(0, 100) < 1000 {
+                // fail on case 3 deterministically
+                Err("boom".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_shapes() {
+        let mut rng = Xoshiro256::seed_from(1);
+        let mut g = Gen::new(&mut rng);
+        assert_eq!(g.normal_vec(10, 2.0).len(), 10);
+        assert_eq!(g.labels(5, 10).len(), 5);
+        assert!(g.labels(100, 3).iter().all(|&l| (0..3).contains(&l)));
+        let v = g.uniform_vec(50, -1.0, 1.0);
+        assert!(v.iter().all(|&x| (-1.0..1.0).contains(&x)));
+        let choices = [1, 2, 3];
+        assert!(choices.contains(g.pick(&choices)));
+    }
+}

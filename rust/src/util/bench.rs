@@ -1,0 +1,160 @@
+//! Mini-criterion: warmup + timed iterations + mean/σ/min reporting.
+//!
+//! Used by every `rust/benches/*.rs` target (criterion is unavailable
+//! offline). `cargo bench` runs these with `harness = false`.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} / iter (σ {:>10}, min {:>10}, n={})",
+            self.name,
+            fmt_duration(self.mean),
+            fmt_duration(self.std_dev),
+            fmt_duration(self.min),
+            self.iters
+        )
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e9
+    }
+}
+
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_secs_f64() * 1e9;
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark harness: targets a wall-clock budget per case and auto-scales
+/// iteration count.
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(900),
+            min_iters: 5,
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(30),
+            measure: Duration::from_millis(150),
+            min_iters: 3,
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` (its return value is black-boxed) and print the report line.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // warmup + estimate per-iter cost
+        let wstart = Instant::now();
+        let mut wcount = 0usize;
+        while wstart.elapsed() < self.warmup || wcount == 0 {
+            black_box(f());
+            wcount += 1;
+            if wcount >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = wstart.elapsed().as_secs_f64() / wcount as f64;
+        let iters = ((self.measure.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = if samples.len() > 1 {
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+                / (samples.len() - 1) as f64
+        } else {
+            0.0
+        };
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_secs_f64(mean),
+            std_dev: Duration::from_secs_f64(var.sqrt()),
+            min: Duration::from_secs_f64(min),
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Standard header for bench binaries.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let mut b = Bench::quick();
+        let r = b.run("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.mean_ns() > 0.0);
+        assert!(r.iters >= 3);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_duration(Duration::from_nanos(12)).contains("ns"));
+        assert!(fmt_duration(Duration::from_micros(12)).contains("µs"));
+        assert!(fmt_duration(Duration::from_millis(12)).contains("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with("s"));
+    }
+}

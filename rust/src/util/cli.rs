@@ -1,0 +1,234 @@
+//! Tiny declarative CLI argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positionals, defaults,
+//! and generated `--help` text. Used by `main.rs` and every example binary.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct ArgSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument set + parsed values.
+#[derive(Debug, Clone)]
+pub struct Args {
+    program: String,
+    about: &'static str,
+    specs: Vec<ArgSpec>,
+    values: BTreeMap<&'static str, String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &'static str) -> Self {
+        Args {
+            program: program.to_string(),
+            about,
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required `--name <value>`.
+    pub fn required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOPTIONS:\n", self.program, self.about);
+        for spec in &self.specs {
+            let tail = if spec.is_flag {
+                String::new()
+            } else if let Some(d) = &spec.default {
+                format!(" <value>  (default: {d})")
+            } else {
+                " <value>  (required)".to_string()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", spec.name, tail, spec.help));
+        }
+        s
+    }
+
+    /// Parse a token stream (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(mut self, argv: I) -> Result<Self> {
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(Error::config(self.usage()));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| Error::config(format!("unknown option --{key}\n\n{}", self.usage())))?
+                    .clone();
+                let value = if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(Error::config(format!("--{key} is a flag, no value allowed")));
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    it.next()
+                        .ok_or_else(|| Error::config(format!("--{key} requires a value")))?
+                };
+                self.values.insert(spec.name, value);
+            } else {
+                self.positionals.push(tok);
+            }
+        }
+        // required check
+        for spec in &self.specs {
+            if !spec.is_flag && spec.default.is_none() && !self.values.contains_key(spec.name) {
+                return Err(Error::config(format!("missing required --{}", spec.name)));
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+            .unwrap_or_else(|| panic!("undeclared option {name}"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.values.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|e| Error::config(format!("--{name}: {e}")))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get(name)
+            .parse()
+            .map_err(|e| Error::config(format!("--{name}: {e}")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|e| Error::config(format!("--{name}: {e}")))
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    fn spec() -> Args {
+        Args::new("prog", "test program")
+            .opt("rounds", "100", "number of rounds")
+            .opt("method", "fedscalar", "strategy")
+            .flag("verbose", "talk more")
+            .required("out", "output path")
+    }
+
+    #[test]
+    fn parse_defaults_and_overrides() {
+        let a = spec().parse(argv("--out /tmp/x --rounds 5 --verbose")).unwrap();
+        assert_eq!(a.get("rounds"), "5");
+        assert_eq!(a.get("method"), "fedscalar");
+        assert_eq!(a.get("out"), "/tmp/x");
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get_usize("rounds").unwrap(), 5);
+    }
+
+    #[test]
+    fn parse_equals_form() {
+        let a = spec().parse(argv("--out=/y --rounds=7")).unwrap();
+        assert_eq!(a.get("out"), "/y");
+        assert_eq!(a.get_usize("rounds").unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(spec().parse(argv("--rounds 5")).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(spec().parse(argv("--out x --bogus 1")).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(spec().parse(argv("--out x --verbose=yes")).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = spec().parse(argv("train --out x extra")).unwrap();
+        assert_eq!(a.positionals(), &["train".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let err = spec().parse(argv("--help")).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--rounds"));
+        assert!(msg.contains("required"));
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let a = spec().parse(argv("--out x --rounds nope")).unwrap();
+        assert!(a.get_usize("rounds").is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! Tiny CSV writer for experiment outputs (figures consume these files).
+
+use crate::error::Result;
+use std::io::Write;
+use std::path::Path;
+
+/// Column-ordered CSV writer.
+pub struct CsvWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create the file (and parent directories) and write the header.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<CsvWriter> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            file,
+            cols: header.len(),
+        })
+    }
+
+    /// Write one numeric row (must match the header width).
+    pub fn row(&mut self, values: &[f64]) -> Result<()> {
+        assert_eq!(values.len(), self.cols, "row width != header width");
+        let mut line = String::with_capacity(values.len() * 12);
+        for (i, v) in values.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&format_num(*v));
+        }
+        writeln!(self.file, "{line}")?;
+        Ok(())
+    }
+
+    /// Write one row of raw string fields.
+    pub fn row_str(&mut self, values: &[String]) -> Result<()> {
+        assert_eq!(values.len(), self.cols);
+        writeln!(self.file, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Compact float formatting (no trailing zeros beyond precision needs).
+pub fn format_num(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let path = std::env::temp_dir().join(format!("fedscalar_csv_{}.csv", std::process::id()));
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&[1.0, 2.5]).unwrap();
+            w.row(&[3.0, 0.000012345]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "a,b");
+        assert!(lines[1].starts_with("1,"));
+        assert_eq!(lines.len(), 3);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let path = std::env::temp_dir().join(format!("fedscalar_csv2_{}.csv", std::process::id()));
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        let _ = w.row(&[1.0]);
+    }
+
+    #[test]
+    fn format_compact() {
+        assert_eq!(format_num(3.0), "3");
+        assert_eq!(format_num(-15.0), "-15");
+        assert!(format_num(0.5).contains('e'));
+    }
+}

@@ -1,0 +1,10 @@
+//! General-purpose substrates that would normally come from crates.io
+//! (clap / serde+toml / criterion / env_logger) — unavailable in this
+//! offline environment, so implemented and tested here.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod logger;
+pub mod stats;
+pub mod toml_lite;

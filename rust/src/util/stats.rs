@@ -1,0 +1,123 @@
+//! Summary statistics + series helpers used by the experiment harness
+//! (multi-run averaging, accuracy-at-budget interpolation).
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator; 0 if n < 2).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// p-th percentile (0..=100) by linear interpolation on the sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Element-wise mean of equal-length series (e.g. loss curves across runs).
+pub fn mean_series(series: &[Vec<f64>]) -> Vec<f64> {
+    if series.is_empty() {
+        return Vec::new();
+    }
+    let n = series[0].len();
+    assert!(series.iter().all(|s| s.len() == n), "ragged series");
+    let mut out = vec![0.0; n];
+    for s in series {
+        for (o, x) in out.iter_mut().zip(s) {
+            *o += x;
+        }
+    }
+    let inv = 1.0 / series.len() as f64;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    out
+}
+
+/// Value of a monotone-x step series at query `q`: the last `y` whose `x <= q`
+/// (None if q precedes the first point). Used for "accuracy at budget B"
+/// readouts on the Fig 4-6 curves.
+pub fn value_at(xs: &[f64], ys: &[f64], q: f64) -> Option<f64> {
+    assert_eq!(xs.len(), ys.len());
+    let mut ans = None;
+    for (x, y) in xs.iter().zip(ys) {
+        if *x <= q {
+            ans = Some(*y);
+        } else {
+            break;
+        }
+    }
+    ans
+}
+
+/// First `x` at which `y` reaches `target` (None if never). Used for
+/// "time/bits/energy to accuracy" readouts.
+pub fn first_crossing(xs: &[f64], ys: &[f64], target: f64) -> Option<f64> {
+    assert_eq!(xs.len(), ys.len());
+    xs.iter()
+        .zip(ys)
+        .find(|(_, y)| **y >= target)
+        .map(|(x, _)| *x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.138089935).abs() < 1e-6);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn series_mean() {
+        let m = mean_series(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m, vec![2.0, 3.0]);
+        assert!(mean_series(&[]).is_empty());
+    }
+
+    #[test]
+    fn value_at_and_crossing() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [0.1, 0.4, 0.6, 0.9];
+        assert_eq!(value_at(&xs, &ys, 1.5), Some(0.4));
+        assert_eq!(value_at(&xs, &ys, -1.0), None);
+        assert_eq!(value_at(&xs, &ys, 99.0), Some(0.9));
+        assert_eq!(first_crossing(&xs, &ys, 0.5), Some(2.0));
+        assert_eq!(first_crossing(&xs, &ys, 0.95), None);
+    }
+}

@@ -1,0 +1,214 @@
+//! Minimal TOML-subset parser (serde+toml substitute) for experiment
+//! configs: `[section]` headers, `key = value` with string / bool / int /
+//! float values, `#` comments. No arrays-of-tables, no nesting beyond one
+//! level — exactly what the config system needs.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+}
+
+/// `section -> key -> value`; top-level keys live under the "" section.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Document> {
+        let mut doc = Document::default();
+        let mut current = String::new();
+        doc.sections.entry(current.clone()).or_default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(stripped) = line.strip_prefix('[') {
+                let name = stripped
+                    .strip_suffix(']')
+                    .ok_or_else(|| parse_err(lineno, "unterminated [section]"))?
+                    .trim()
+                    .to_string();
+                if name.is_empty() {
+                    return Err(parse_err(lineno, "empty section name"));
+                }
+                current = name;
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| parse_err(lineno, "expected key = value"))?;
+            let key = k.trim().to_string();
+            if key.is_empty() {
+                return Err(parse_err(lineno, "empty key"));
+            }
+            let value = parse_value(v.trim()).ok_or_else(|| {
+                parse_err(lineno, &format!("cannot parse value {:?}", v.trim()))
+            })?;
+            doc.sections
+                .get_mut(&current)
+                .expect("section exists")
+                .insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn get_or<'a>(&'a self, section: &str, key: &str, default: &'a Value) -> &'a Value {
+        self.get(section, key).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if let Some(stripped) = s.strip_prefix('"') {
+        let inner = stripped.strip_suffix('"')?;
+        if inner.contains('"') {
+            return None;
+        }
+        return Some(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+fn parse_err(lineno: usize, msg: &str) -> Error {
+    Error::Parse {
+        path: "<toml>".into(),
+        line: lineno + 1,
+        msg: msg.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+rounds = 1500
+alpha = 0.003          # stepsize
+method = "fedscalar"   # strategy
+verbose = true
+
+[network]
+bandwidth_bps = 100000
+sigma = 0.25
+tdma = false
+"#;
+
+    #[test]
+    fn parse_sample() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get("", "rounds").unwrap().as_int(), Some(1500));
+        assert_eq!(doc.get("", "alpha").unwrap().as_float(), Some(0.003));
+        assert_eq!(doc.get("", "method").unwrap().as_str(), Some("fedscalar"));
+        assert_eq!(doc.get("", "verbose").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            doc.get("network", "bandwidth_bps").unwrap().as_int(),
+            Some(100000)
+        );
+        assert_eq!(doc.get("network", "sigma").unwrap().as_float(), Some(0.25));
+        assert_eq!(doc.get("network", "tdma").unwrap().as_bool(), Some(false));
+        assert!(doc.get("network", "missing").is_none());
+        assert!(doc.get("nosection", "x").is_none());
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = Document::parse("x = 3\n").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = Document::parse("s = \"a#b\" # comment\n").unwrap();
+        assert_eq!(doc.get("", "s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        for (bad, line) in [
+            ("[unterminated\n", 1),
+            ("keyonly\n", 1),
+            ("x = \n", 1),
+            ("\n= 3\n", 2),
+            ("ok = 1\nx = @@@\n", 2),
+        ] {
+            match Document::parse(bad) {
+                Err(Error::Parse { line: l, .. }) => assert_eq!(l, line, "{bad:?}"),
+                other => panic!("expected parse error for {bad:?}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn get_or_default() {
+        let doc = Document::parse("x = 1\n").unwrap();
+        let d = Value::Int(9);
+        assert_eq!(doc.get_or("", "x", &d).as_int(), Some(1));
+        assert_eq!(doc.get_or("", "y", &d).as_int(), Some(9));
+    }
+}

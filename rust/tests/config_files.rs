@@ -1,0 +1,43 @@
+//! The shipped configs/ files must parse, validate, and mean what they say.
+
+use fedscalar::algo::Method;
+use fedscalar::config::{DataSource, ExperimentConfig};
+use fedscalar::netsim::Schedule;
+use fedscalar::rng::VDistribution;
+
+#[test]
+fn paper_toml_matches_section_iii() {
+    let cfg = ExperimentConfig::from_toml_file("configs/paper.toml").unwrap();
+    assert_eq!(cfg.fed.num_agents, 20);
+    assert_eq!(cfg.fed.rounds, 1500);
+    assert_eq!(cfg.fed.local_steps, 5);
+    assert_eq!(cfg.fed.batch_size, 32);
+    assert!((cfg.fed.alpha - 0.003).abs() < 1e-9);
+    assert_eq!(
+        cfg.fed.method,
+        Method::FedScalar {
+            dist: VDistribution::Rademacher,
+            projections: 1
+        }
+    );
+    assert_eq!(cfg.network.channel.nominal_bps, 100_000.0);
+    assert_eq!(cfg.network.p_tx_watts, 2.0);
+    assert_eq!(cfg.network.schedule, Schedule::Tdma);
+    assert_eq!(cfg.data, DataSource::ArtifactCsv);
+    assert_eq!(cfg.dirichlet_alpha, None);
+}
+
+#[test]
+fn lpwan_toml_is_10kbps_synthetic() {
+    let cfg = ExperimentConfig::from_toml_file("configs/lpwan.toml").unwrap();
+    assert_eq!(cfg.network.channel.nominal_bps, 10_000.0);
+    assert_eq!(cfg.data, DataSource::Synthetic);
+    assert_eq!(cfg.fed.rounds, 500);
+}
+
+#[test]
+fn noniid_toml_sets_dirichlet() {
+    let cfg = ExperimentConfig::from_toml_file("configs/noniid.toml").unwrap();
+    assert_eq!(cfg.dirichlet_alpha, Some(0.5));
+    assert_eq!(cfg.data, DataSource::ArtifactCsv);
+}

@@ -1,0 +1,104 @@
+//! Distributed (threaded, frame-passing) engine: equivalence with the
+//! sequential engine and frame-level accounting.
+
+use fedscalar::algo::Method;
+use fedscalar::config::ExperimentConfig;
+use fedscalar::coordinator::engine::run_pure_rust;
+use fedscalar::coordinator::DistributedEngine;
+use fedscalar::metrics::same_histories;
+use fedscalar::rng::VDistribution;
+
+fn cfg(method: Method, rounds: usize, agents: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.fed.method = method;
+    cfg.fed.rounds = rounds;
+    cfg.fed.eval_every = 5;
+    cfg.fed.num_agents = agents;
+    cfg
+}
+
+#[test]
+fn fedscalar_distributed_equals_sequential() {
+    let c = cfg(
+        Method::FedScalar {
+            dist: VDistribution::Rademacher,
+            projections: 1,
+        },
+        12,
+        5,
+    );
+    let seq = run_pure_rust(&c, 4).unwrap();
+    let dist = DistributedEngine::from_config(&c, 4).unwrap().run().unwrap();
+    assert!(
+        same_histories(&seq, &dist),
+        "distributed history diverged from sequential"
+    );
+}
+
+#[test]
+fn fedavg_distributed_equals_sequential() {
+    let c = cfg(Method::FedAvg, 8, 4);
+    let seq = run_pure_rust(&c, 1).unwrap();
+    let dist = DistributedEngine::from_config(&c, 1).unwrap().run().unwrap();
+    assert!(same_histories(&seq, &dist));
+}
+
+#[test]
+fn qsgd_distributed_runs_and_learns() {
+    // QSGD's stochastic rounding streams differ per worker, so we check
+    // behaviour rather than bit-equality.
+    let mut c = cfg(Method::Qsgd { bits: 8 }, 60, 4);
+    c.fed.alpha = 0.02;
+    c.fed.eval_every = 30;
+    let h = DistributedEngine::from_config(&c, 2).unwrap().run().unwrap();
+    assert!(h.records.last().unwrap().train_loss < h.records[0].train_loss);
+}
+
+#[test]
+fn frame_bytes_measured_on_the_wire() {
+    let rounds = 7usize;
+    let agents = 3usize;
+    let c = cfg(
+        Method::FedScalar {
+            dist: VDistribution::Normal,
+            projections: 1,
+        },
+        rounds,
+        agents,
+    );
+    let mut eng = DistributedEngine::from_config(&c, 0).unwrap();
+    let _ = eng.run().unwrap();
+    // uplink: 13-byte scalar frame per agent per round — dimension-free
+    assert_eq!(
+        eng.uplink_frame_bytes(),
+        (rounds * agents * 13) as u64
+    );
+    // downlink: model frame = 1 + 4 + 4 + 4d bytes per agent per round
+    let d = c.model.param_dim();
+    assert_eq!(
+        eng.downlink_frame_bytes(),
+        (rounds * agents * (9 + 4 * d)) as u64
+    );
+}
+
+#[test]
+fn multi_projection_distributed_equals_sequential() {
+    let c = cfg(
+        Method::FedScalar {
+            dist: VDistribution::Rademacher,
+            projections: 4,
+        },
+        6,
+        3,
+    );
+    let seq = run_pure_rust(&c, 9).unwrap();
+    let dist = DistributedEngine::from_config(&c, 9).unwrap().run().unwrap();
+    assert!(same_histories(&seq, &dist));
+}
+
+#[test]
+fn partial_participation_rejected_for_now() {
+    let mut c = cfg(Method::FedAvg, 2, 3);
+    c.fed.participation = 0.5;
+    assert!(DistributedEngine::from_config(&c, 0).is_err());
+}

@@ -1,0 +1,210 @@
+//! End-to-end coordinator tests on the synthetic corpus (artifact-free):
+//! convergence, accounting invariants, method orderings the paper predicts.
+
+use fedscalar::algo::Method;
+use fedscalar::config::ExperimentConfig;
+use fedscalar::coordinator::engine::run_pure_rust;
+use fedscalar::exp::figures::{run_figure_suite, BackendKind, SuiteOptions};
+use fedscalar::netsim::Schedule;
+use fedscalar::rng::VDistribution;
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.fed.num_agents = 8;
+    cfg
+}
+
+#[test]
+fn fedavg_converges_on_synthetic() {
+    let mut cfg = base_cfg();
+    cfg.fed.method = Method::FedAvg;
+    cfg.fed.rounds = 250;
+    cfg.fed.eval_every = 50;
+    cfg.fed.alpha = 0.02;
+    let h = run_pure_rust(&cfg, 0).unwrap();
+    let acc = h.final_accuracy();
+    assert!(acc > 0.7, "fedavg acc={acc}");
+}
+
+#[test]
+fn fedscalar_learns_and_uploads_3_orders_less() {
+    let mut cfg = base_cfg();
+    cfg.fed.rounds = 600;
+    cfg.fed.eval_every = 100;
+    cfg.fed.alpha = 0.02;
+    cfg.fed.method = Method::FedScalar {
+        dist: VDistribution::Rademacher,
+        projections: 1,
+    };
+    let h_fs = run_pure_rust(&cfg, 1).unwrap();
+    cfg.fed.method = Method::FedAvg;
+    cfg.fed.rounds = 600;
+    let h_fa = run_pure_rust(&cfg, 1).unwrap();
+    // learning happened
+    assert!(h_fs.final_accuracy() > 0.3, "acc={}", h_fs.final_accuracy());
+    // payload ratio is exactly (d*32)/64 ~ 995x
+    let bits_fs = h_fs.records.last().unwrap().cum_bits;
+    let bits_fa = h_fa.records.last().unwrap().cum_bits;
+    let ratio = bits_fa / bits_fs;
+    assert!((ratio - 995.0).abs() < 1.0, "ratio={ratio}");
+}
+
+#[test]
+fn multi_projection_improves_per_round_progress() {
+    // m=8 projections: ~8x less projection variance per round; at equal
+    // round counts the m=8 run should reach at least the m=1 accuracy.
+    let mut cfg = base_cfg();
+    cfg.fed.rounds = 300;
+    cfg.fed.eval_every = 300;
+    cfg.fed.alpha = 0.02;
+    let mut acc_m = |m: usize| {
+        cfg.fed.method = Method::FedScalar {
+            dist: VDistribution::Rademacher,
+            projections: m,
+        };
+        let accs: Vec<f64> = (0..3)
+            .map(|s| run_pure_rust(&cfg, 100 + s).unwrap().final_accuracy())
+            .collect();
+        accs.iter().sum::<f64>() / accs.len() as f64
+    };
+    let a1 = acc_m(1);
+    let a8 = acc_m(8);
+    assert!(
+        a8 > a1 - 0.02,
+        "m=8 ({a8}) should not trail m=1 ({a1})"
+    );
+}
+
+#[test]
+fn tdma_slower_than_concurrent_same_bits() {
+    let mut cfg = base_cfg();
+    cfg.fed.method = Method::FedAvg;
+    cfg.fed.rounds = 10;
+    cfg.fed.eval_every = 10;
+    cfg.network.channel.sigma = 0.0;
+    cfg.network.schedule = Schedule::Tdma;
+    let h_t = run_pure_rust(&cfg, 5).unwrap();
+    cfg.network.schedule = Schedule::Concurrent;
+    let h_c = run_pure_rust(&cfg, 5).unwrap();
+    let (t, c) = (
+        h_t.records.last().unwrap().cum_sim_seconds,
+        h_c.records.last().unwrap().cum_sim_seconds,
+    );
+    // TDMA with N=8 is ~8x slower (same per-agent upload, summed)
+    assert!(t > 6.0 * c, "tdma={t} conc={c}");
+    assert_eq!(
+        h_t.records.last().unwrap().cum_bits,
+        h_c.records.last().unwrap().cum_bits
+    );
+}
+
+#[test]
+fn energy_ordering_follows_payload() {
+    let mut cfg = base_cfg();
+    cfg.fed.rounds = 10;
+    cfg.fed.eval_every = 10;
+    cfg.network.channel.sigma = 0.0;
+    let mut energy = |m: Method| {
+        cfg.fed.method = m;
+        run_pure_rust(&cfg, 6)
+            .unwrap()
+            .records
+            .last()
+            .unwrap()
+            .cum_energy_joules
+    };
+    let e_fs = energy(Method::FedScalar {
+        dist: VDistribution::Rademacher,
+        projections: 1,
+    });
+    let e_q = energy(Method::Qsgd { bits: 8 });
+    let e_fa = energy(Method::FedAvg);
+    assert!(e_fs < e_q && e_q < e_fa, "fs={e_fs} q={e_q} fa={e_fa}");
+    // deterministic channel: exact ratios = payload ratios
+    let d = 1990.0;
+    assert!((e_fa / e_fs - d * 32.0 / 64.0).abs() < 1e-6);
+    assert!((e_q / e_fs - (32.0 + d * 8.0) / 64.0).abs() < 1e-6);
+}
+
+#[test]
+fn dirichlet_noniid_still_runs() {
+    let mut cfg = base_cfg();
+    cfg.dirichlet_alpha = Some(0.5);
+    cfg.fed.rounds = 20;
+    cfg.fed.eval_every = 20;
+    cfg.fed.method = Method::FedAvg;
+    let h = run_pure_rust(&cfg, 7).unwrap();
+    assert!(!h.records.is_empty());
+}
+
+#[test]
+fn suite_produces_csvs() {
+    let dir = std::env::temp_dir().join(format!("fedscalar_suite_{}", std::process::id()));
+    let mut cfg = base_cfg();
+    cfg.fed.rounds = 6;
+    cfg.fed.eval_every = 3;
+    let opts = SuiteOptions {
+        methods: vec![Method::FedAvg, Method::Qsgd { bits: 8 }],
+        runs: 2,
+        backend: BackendKind::PureRust,
+        out_dir: Some(dir.clone()),
+        parallel: true,
+    };
+    let suite = run_figure_suite(&cfg, &opts).unwrap();
+    assert_eq!(suite.per_method.len(), 2);
+    assert!(dir.join("fedavg.csv").exists());
+    assert!(dir.join("qsgd8.csv").exists());
+    let text = std::fs::read_to_string(dir.join("fedavg.csv")).unwrap();
+    assert!(text.lines().count() >= 3);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn checkpoint_save_restore_resume() {
+    use fedscalar::coordinator::{Checkpoint, Engine};
+    use fedscalar::exp::figures::{make_backend, BackendKind};
+    let mut c = base_cfg();
+    c.fed.method = Method::FedAvg;
+    c.fed.rounds = 20;
+    c.fed.eval_every = 10;
+    c.fed.alpha = 0.02;
+    // run 10 rounds, checkpoint, save/load, resume in a FRESH engine
+    let be = make_backend(BackendKind::PureRust, &c).unwrap();
+    let mut e1 = Engine::from_config(&c, be, 3).unwrap();
+    for k in 0..10 {
+        e1.run_round(k, false).unwrap();
+    }
+    let ck = e1.checkpoint(10);
+    let path = std::env::temp_dir().join(format!("fedscalar_resume_{}.ckpt", std::process::id()));
+    ck.save(&path).unwrap();
+    let loaded = Checkpoint::load(&path).unwrap();
+    assert_eq!(loaded, ck);
+
+    let be2 = make_backend(BackendKind::PureRust, &c).unwrap();
+    let mut e2 = Engine::from_config(&c, be2, 3).unwrap();
+    let start = e2.restore(&loaded).unwrap();
+    assert_eq!(start, 10);
+    assert_eq!(e2.params(), e1.params());
+    let h = e2.run_from(start).unwrap();
+    // resumed run completes and keeps learning
+    assert_eq!(h.records.last().unwrap().round, 19);
+    assert!(h.records.last().unwrap().train_loss < 2.4);
+    // method mismatch refused
+    let mut c3 = c.clone();
+    c3.fed.method = Method::Qsgd { bits: 8 };
+    let be3 = make_backend(BackendKind::PureRust, &c3).unwrap();
+    let mut e3 = Engine::from_config(&c3, be3, 3).unwrap();
+    assert!(e3.restore(&loaded).is_err());
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn eval_grid_respects_eval_every() {
+    let mut cfg = base_cfg();
+    cfg.fed.rounds = 25;
+    cfg.fed.eval_every = 10;
+    cfg.fed.method = Method::FedAvg;
+    let h = run_pure_rust(&cfg, 8).unwrap();
+    let rounds: Vec<usize> = h.records.iter().map(|r| r.round).collect();
+    assert_eq!(rounds, vec![0, 10, 20, 24]); // every 10 + final round
+}

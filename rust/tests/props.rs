@@ -1,0 +1,142 @@
+//! Cross-module property tests (testkit::forall): coordinator and
+//! algorithm invariants under randomized configurations.
+
+use fedscalar::algo::{projection, Method, Quantizer};
+use fedscalar::data::{iid_partition, Dataset};
+use fedscalar::rng::{fill_v, VDistribution};
+use fedscalar::tensor;
+use fedscalar::testkit::forall;
+
+#[test]
+fn prop_partition_is_exact_cover() {
+    forall("iid partition exact cover", 100, |g| {
+        let n = g.usize_in(1, 2000);
+        let agents = g.usize_in(1, 64.min(n + 1));
+        let p = iid_partition(n, agents, g.usize_in(0, 1 << 30) as u64);
+        if !p.validate(n) {
+            return Err("not a cover".into());
+        }
+        if p.total_samples() != n {
+            return Err(format!("total {} != {n}", p.total_samples()));
+        }
+        let sizes: Vec<usize> = p.shards.iter().map(|s| s.len()).collect();
+        let (mn, mx) = (
+            *sizes.iter().min().unwrap(),
+            *sizes.iter().max().unwrap(),
+        );
+        if mx - mn > 1 {
+            return Err(format!("imbalanced {sizes:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_uplink_bits_positive_and_fedscalar_constant() {
+    forall("payload accounting", 100, |g| {
+        let d = g.usize_in(1, 1 << 22);
+        let m = g.usize_in(1, 32);
+        let fs = Method::FedScalar {
+            dist: VDistribution::Rademacher,
+            projections: m,
+        };
+        if fs.uplink_bits(d) != 32 + 32 * m as u64 {
+            return Err("fedscalar bits depend on d".into());
+        }
+        if Method::FedAvg.uplink_bits(d) != 32 * d as u64 {
+            return Err("fedavg bits wrong".into());
+        }
+        let q = Method::Qsgd { bits: 8 }.uplink_bits(d);
+        if q <= 32 || q >= Method::FedAvg.uplink_bits(d).max(65) {
+            return Err(format!("qsgd bits {q} out of range for d={d}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reconstruction_unbiased_direction() {
+    // averaging decode over many seeds must align with delta (> 0 cosine)
+    forall("reconstruction direction", 12, |g| {
+        let d = g.usize_in(32, 256);
+        let delta = g.normal_vec(d, 1.0);
+        let dist = *g.pick(&[VDistribution::Normal, VDistribution::Rademacher]);
+        let m = 1500;
+        let mut est = vec![0.0f32; d];
+        let mut v = vec![0.0f32; d];
+        let base = g.usize_in(0, 1 << 20) as u32;
+        for s in 0..m {
+            let r = projection::encode(&delta, base + s, dist, &mut v);
+            projection::decode_into(&mut est, base + s, &[r], dist, &mut v, 1.0 / m as f32);
+        }
+        let cos = tensor::dot(&est, &delta)
+            / (tensor::norm_sq(&est).sqrt() * tensor::norm_sq(&delta).sqrt());
+        if cos > 0.5 {
+            Ok(())
+        } else {
+            Err(format!("cos={cos} for d={d} {dist:?}"))
+        }
+    });
+}
+
+#[test]
+fn prop_qsgd_preserves_norm_scale() {
+    forall("qsgd norm preservation", 60, |g| {
+        let d = g.usize_in(2, 500);
+        let scale = g.f32_in(0.1, 5.0);
+        let x = g.normal_vec(d, scale);
+        let mut q = Quantizer::new(*g.pick(&[4u32, 8]), 11);
+        let p = q.quantize(&x);
+        let norm = tensor::norm_sq(&x).sqrt();
+        if (p.norm - norm).abs() > 1e-3 * norm.max(1.0) {
+            return Err(format!("norm {} vs {}", p.norm, norm));
+        }
+        let xh = q.dequantize(&p);
+        // dequantized norm can exceed the true norm by at most sqrt(d)/s
+        let bound = norm + norm * (d as f32).sqrt() / p.s as f32 + 1e-4;
+        let nh = tensor::norm_sq(&xh).sqrt();
+        if nh > bound {
+            return Err(format!("dequantized norm {nh} > bound {bound}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rademacher_v_unit_coords_normal_v_unit_variance() {
+    forall("v moments", 40, |g| {
+        let d = g.usize_in(100, 2000);
+        let seed = g.usize_in(0, 1 << 30) as u32;
+        let mut v = vec![0.0f32; d];
+        fill_v(seed, VDistribution::Rademacher, &mut v);
+        if !v.iter().all(|&c| c == 1.0 || c == -1.0) {
+            return Err("rademacher coord not +-1".into());
+        }
+        fill_v(seed, VDistribution::Normal, &mut v);
+        let var = tensor::norm_sq(&v) / d as f32;
+        if (var - 1.0).abs() > 0.25 {
+            return Err(format!("normal var {var}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dataset_gather_consistent() {
+    forall("dataset gather", 50, |g| {
+        let n = g.usize_in(1, 100);
+        let dim = g.usize_in(1, 32);
+        let x = g.uniform_vec(n * dim, 0.0, 1.0);
+        let y = g.labels(n, 10);
+        let ds = Dataset::new(x, y, dim, 10);
+        let k = g.usize_in(1, n + 1);
+        let idx: Vec<usize> = (0..k).map(|_| g.usize_in(0, n)).collect();
+        let (gx, gy) = ds.gather(&idx);
+        for (j, &i) in idx.iter().enumerate() {
+            if gx[j * dim..(j + 1) * dim] != *ds.row(i) || gy[j] != ds.y[i] {
+                return Err(format!("row {j} mismatch"));
+            }
+        }
+        Ok(())
+    });
+}
