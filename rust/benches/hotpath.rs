@@ -3,18 +3,35 @@
 //! quantization, gemm kernels, batch gather) plus, when artifacts are
 //! present, the PJRT execute overhead of each HLO entry point.
 //!
-//! This is the profile the §Perf optimization pass iterates against; the
-//! before/after history lives in EXPERIMENTS.md §Perf.
+//! This is the profile the §Perf optimization pass iterates against. The
+//! fused block-streaming kernels are benchmarked side by side with the
+//! retained naive (fill_v-then-consume) reference, at the paper's d=1990
+//! and at d=100k to show dimension scaling.
+//!
+//! Machine-readable output: writes `BENCH_hotpath.json` (flat
+//! name → ns/iter) so the perf trajectory is diffable across PRs. Set
+//! `FEDSCALAR_BENCH_QUICK=1` for the sub-second verify.sh pass.
 
-use fedscalar::algo::{LocalSgd, Projector, Quantizer};
+use fedscalar::algo::{projection, LocalSgd, Quantizer};
+use fedscalar::config::ExperimentConfig;
+use fedscalar::coordinator::Engine;
 use fedscalar::data::synthetic::{generate, SyntheticConfig};
 use fedscalar::data::BatchSampler;
 use fedscalar::nn::{glorot_init, Mlp, ModelSpec};
 use fedscalar::rng::{fill_v, VDistribution, Xoshiro256};
 use fedscalar::runtime::{Backend, PureRustBackend, ScalarUpload, XlaBackend};
 use fedscalar::tensor;
-use fedscalar::util::bench::{header, Bench};
+use fedscalar::util::bench::{header, write_json, Bench};
 use std::sync::Arc;
+
+fn round_bench_engine(threads: usize) -> Engine {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.fed.num_agents = 20;
+    cfg.fed.threads = threads;
+    let mut be = PureRustBackend::new(&cfg.model);
+    be.set_shape(cfg.fed.local_steps, cfg.fed.batch_size);
+    Engine::from_config(&cfg, Box::new(be), 0).expect("smoke engine")
+}
 
 fn main() {
     let spec = ModelSpec::default();
@@ -25,7 +42,7 @@ fn main() {
     let (s_steps, batch) = (5usize, 32usize);
     let xb: Vec<f32> = (0..s_steps * batch * 64).map(|_| rng.uniform_f32()).collect();
     let yb: Vec<i32> = (0..s_steps * batch).map(|_| rng.below(10) as i32).collect();
-    let mut b = Bench::default();
+    let mut b = Bench::from_env();
 
     header("L3 gemm kernels (the MLP's dense work)");
     let w1 = &params[..64 * 24];
@@ -48,17 +65,105 @@ fn main() {
         sgd.run(&mlp, &params, &xb, &yb, 0.003, &mut delta)
     });
 
-    header("projection encode/decode at d=1990");
-    let mut proj = Projector::new(d, VDistribution::Rademacher);
-    b.run("fill_v rademacher", || {
-        let mut v = vec![0.0f32; d];
-        fill_v(42, VDistribution::Rademacher, &mut v);
-        v
+    header("projection encode/decode at d=1990 (fused vs naive)");
+    // scratch reused across iterations: measure the generator, not the
+    // allocator (the naive pipeline gets the same courtesy)
+    let mut v_scratch = vec![0.0f32; d];
+    b.run("fill_v rademacher d=1990", || {
+        fill_v(42, VDistribution::Rademacher, &mut v_scratch);
+        v_scratch[0]
     });
-    b.run("encode (fill_v + dot)", || proj.encode(&delta, 42));
+    b.run("fill_v normal d=1990", || {
+        fill_v(42, VDistribution::Normal, &mut v_scratch);
+        v_scratch[0]
+    });
+    b.run("encode rademacher fused d=1990", || {
+        projection::encode(&delta, 42, VDistribution::Rademacher)
+    });
+    b.run("encode rademacher naive d=1990", || {
+        projection::naive::encode(&delta, 42, VDistribution::Rademacher, &mut v_scratch)
+    });
+    b.run("encode normal fused d=1990", || {
+        projection::encode(&delta, 42, VDistribution::Normal)
+    });
+    b.run("encode normal naive d=1990", || {
+        projection::naive::encode(&delta, 42, VDistribution::Normal, &mut v_scratch)
+    });
+    let mut rs4 = [0.0f32; 4];
+    b.run("encode_multi m=4 rademacher fused d=1990", || {
+        projection::encode_multi(&delta, 42, VDistribution::Rademacher, &mut rs4);
+        rs4[0]
+    });
+    b.run("encode_multi m=4 rademacher naive d=1990", || {
+        projection::naive::encode_multi(
+            &delta,
+            42,
+            VDistribution::Rademacher,
+            &mut v_scratch,
+            &mut rs4,
+        );
+        rs4[0]
+    });
     let mut ghat = vec![0.0f32; d];
-    b.run("decode_into (fill_v + axpy)", || {
-        proj.decode_into(&mut ghat, 42, &[0.7], 0.05)
+    b.run("decode_into rademacher fused d=1990", || {
+        projection::decode_into(&mut ghat, 42, &[0.7], VDistribution::Rademacher, 0.05)
+    });
+    b.run("decode_into rademacher naive d=1990", || {
+        projection::naive::decode_into(
+            &mut ghat,
+            42,
+            &[0.7],
+            VDistribution::Rademacher,
+            &mut v_scratch,
+            0.05,
+        )
+    });
+    // batched server-side reconstruction: 20 agents in one blockwise sweep
+    let agent_rs: Vec<(u32, Vec<f32>)> = (0..20u32).map(|a| (a, vec![0.3 + a as f32])).collect();
+    let jobs: Vec<(u32, &[f32])> = agent_rs.iter().map(|(s, r)| (*s, r.as_slice())).collect();
+    b.run("decode_all 20 agents rademacher fused d=1990", || {
+        ghat.fill(0.0);
+        projection::decode_all(&mut ghat, &jobs, VDistribution::Rademacher, 0.05);
+        ghat[0]
+    });
+    b.run("decode 20 agents rademacher naive d=1990", || {
+        ghat.fill(0.0);
+        for &(seed, rs) in &jobs {
+            projection::naive::decode_into(
+                &mut ghat,
+                seed,
+                rs,
+                VDistribution::Rademacher,
+                &mut v_scratch,
+                0.05,
+            );
+        }
+        ghat[0]
+    });
+
+    header("projection dimension scaling at d=100000");
+    let d_big = 100_000usize;
+    let delta_big: Vec<f32> = (0..d_big).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    let mut scratch_big = vec![0.0f32; d_big];
+    let mut ghat_big = vec![0.0f32; d_big];
+    b.run("encode rademacher fused d=100000", || {
+        projection::encode(&delta_big, 42, VDistribution::Rademacher)
+    });
+    b.run("encode rademacher naive d=100000", || {
+        projection::naive::encode(&delta_big, 42, VDistribution::Rademacher, &mut scratch_big)
+    });
+    b.run("decode_into rademacher fused d=100000", || {
+        projection::decode_into(&mut ghat_big, 42, &[0.7], VDistribution::Rademacher, 0.05)
+    });
+    b.run("decode_into rademacher naive d=100000", || {
+        projection::naive::decode_into(
+            &mut ghat_big,
+            42,
+            &[0.7],
+            VDistribution::Rademacher,
+            &mut scratch_big,
+            0.05,
+        )
     });
 
     header("QSGD 8-bit quantizer at d=1990");
@@ -69,10 +174,7 @@ fn main() {
     b.run("dequantize_into", || q.dequantize_into(&packet, &mut out));
 
     header("batch gather (20 agents x S=5 x B=32)");
-    let data = Arc::new(generate(
-        &SyntheticConfig::default(),
-        0,
-    ));
+    let data = Arc::new(generate(&SyntheticConfig::default(), 0));
     let shard: Vec<usize> = (0..data.len() / 20).collect();
     let mut sampler = BatchSampler::new(data, shard, 0);
     let mut gx = vec![0.0f32; s_steps * batch * 64];
@@ -94,59 +196,99 @@ fn main() {
         }
         be.server_reconstruct(&ups, VDistribution::Rademacher).unwrap()
     });
+    // the same round through the engine: serial vs intra-round parallel
+    let mut eng_serial = round_bench_engine(1);
+    b.run("engine round 20 clients threads=1", || {
+        eng_serial.run_round(0, false).unwrap()
+    });
+    let mut eng_par = round_bench_engine(0);
+    b.run("engine round 20 clients threads=auto", || {
+        eng_par.run_round(0, false).unwrap()
+    });
 
+    let mut bq = Bench::quick();
     if std::path::Path::new("artifacts/manifest.txt").exists() {
         header("PJRT execute overhead (XLA backend, per entry point)");
-        let mut xla = XlaBackend::load("artifacts").expect("artifacts");
-        let mut bq = Bench::quick();
-        bq.run("xla client_fedscalar (1 call)", || {
-            xla.client_fedscalar(&params, &xb, &yb, 7, 0.003, VDistribution::Rademacher, 1)
-                .unwrap()
-        });
-        bq.run("xla client_delta (1 call)", || {
-            xla.client_delta(&params, &xb, &yb, 0.003).unwrap()
-        });
-        let ups: Vec<ScalarUpload> = (0..20)
-            .map(|i| ScalarUpload {
-                seed: i,
-                rs: vec![0.1],
-                loss: 0.0,
-                delta_sq: 0.0,
-            })
-            .collect();
-        bq.run("xla server_reconstruct (20 agents)", || {
-            xla.server_reconstruct(&ups, VDistribution::Rademacher).unwrap()
-        });
-        // §Perf: the vmapped batch artifact vs 20 individual dispatches
-        let mut xbs20 = Vec::with_capacity(20 * xb.len());
-        let mut ybs20 = Vec::with_capacity(20 * yb.len());
-        for _ in 0..20 {
-            xbs20.extend_from_slice(&xb);
-            ybs20.extend_from_slice(&yb);
+        match XlaBackend::load("artifacts") {
+            Err(e) => println!("(xla backend unavailable — {e})"),
+            Ok(mut xla) => {
+                bq.run("xla client_fedscalar (1 call)", || {
+                    xla.client_fedscalar(
+                        &params,
+                        &xb,
+                        &yb,
+                        7,
+                        0.003,
+                        VDistribution::Rademacher,
+                        1,
+                    )
+                    .unwrap()
+                });
+                bq.run("xla client_delta (1 call)", || {
+                    xla.client_delta(&params, &xb, &yb, 0.003).unwrap()
+                });
+                let ups: Vec<ScalarUpload> = (0..20)
+                    .map(|i| ScalarUpload {
+                        seed: i,
+                        rs: vec![0.1],
+                        loss: 0.0,
+                        delta_sq: 0.0,
+                    })
+                    .collect();
+                bq.run("xla server_reconstruct (20 agents)", || {
+                    xla.server_reconstruct(&ups, VDistribution::Rademacher).unwrap()
+                });
+                // §Perf: the vmapped batch artifact vs 20 individual dispatches
+                let mut xbs20 = Vec::with_capacity(20 * xb.len());
+                let mut ybs20 = Vec::with_capacity(20 * yb.len());
+                for _ in 0..20 {
+                    xbs20.extend_from_slice(&xb);
+                    ybs20.extend_from_slice(&yb);
+                }
+                let seeds20: Vec<u32> = (0..20).collect();
+                bq.run("xla 20x client_fedscalar (looped)", || {
+                    seeds20
+                        .iter()
+                        .map(|&s| {
+                            xla.client_fedscalar(
+                                &params,
+                                &xb,
+                                &yb,
+                                s,
+                                0.003,
+                                VDistribution::Rademacher,
+                                1,
+                            )
+                            .unwrap()
+                        })
+                        .count()
+                });
+                bq.run("xla client_fedscalar_batch (1 vmapped call)", || {
+                    xla.client_fedscalar_batch(
+                        &params,
+                        &xbs20,
+                        &ybs20,
+                        &seeds20,
+                        0.003,
+                        VDistribution::Rademacher,
+                        1,
+                    )
+                    .unwrap()
+                });
+            }
         }
-        let seeds20: Vec<u32> = (0..20).collect();
-        bq.run("xla 20x client_fedscalar (looped)", || {
-            seeds20
-                .iter()
-                .map(|&s| {
-                    xla.client_fedscalar(&params, &xb, &yb, s, 0.003, VDistribution::Rademacher, 1)
-                        .unwrap()
-                })
-                .count()
-        });
-        bq.run("xla client_fedscalar_batch (1 vmapped call)", || {
-            xla.client_fedscalar_batch(
-                &params,
-                &xbs20,
-                &ybs20,
-                &seeds20,
-                0.003,
-                VDistribution::Rademacher,
-                1,
-            )
-            .unwrap()
-        });
     } else {
         println!("\n(artifacts missing — skipping PJRT microbenches; run `make artifacts`)");
     }
+
+    // quick-mode numbers (tiny measurement budgets) must never overwrite
+    // the full-budget trajectory file a cross-PR diff reads
+    let json_path = if fedscalar::util::bench::quick_requested() {
+        "BENCH_hotpath.quick.json"
+    } else {
+        "BENCH_hotpath.json"
+    };
+    write_json(json_path, b.results().iter().chain(bq.results()))
+        .expect("write bench json");
+    println!("\nwrote {json_path} ({} entries)", b.results().len() + bq.results().len());
 }

@@ -79,9 +79,11 @@ impl Method {
     }
 
     /// Parse `fedscalar-normal`, `fedscalar-rademacher[-m<k>]`, `fedavg`,
-    /// `qsgd<bits>` / `qsgd`.
+    /// `qsgd<bits>` / `qsgd`. Normalized through [`crate::rng::canon`] —
+    /// the same trimming/lowercasing as `VDistribution::parse`, so
+    /// whitespace-adjacent forms behave identically in both parsers.
     pub fn parse(s: &str) -> Option<Method> {
-        let s = s.trim().to_ascii_lowercase();
+        let s = crate::rng::canon(s);
         if s == "fedavg" {
             return Some(Method::FedAvg);
         }
@@ -178,6 +180,23 @@ mod tests {
         assert_eq!(Method::parse("nonsense"), None);
         assert_eq!(Method::parse("qsgd99"), None);
         assert_eq!(Method::parse("fedscalar-normal-m0"), None);
+    }
+
+    #[test]
+    fn parse_canonicalizes_like_vdistribution() {
+        // whitespace + case normalize identically in both parsers (canon)
+        assert_eq!(Method::parse(" QSGD8 \n"), Some(Method::Qsgd { bits: 8 }));
+        assert_eq!(Method::parse("\tFedAvg "), Some(Method::FedAvg));
+        assert_eq!(
+            Method::parse(" FedScalar-Rademacher-m4"),
+            Some(Method::FedScalar {
+                dist: VDistribution::Rademacher,
+                projections: 4
+            })
+        );
+        // inner whitespace is NOT accepted, in either parser
+        assert_eq!(Method::parse("qsgd 8"), None);
+        assert_eq!(VDistribution::parse("rade macher"), None);
     }
 
     #[test]

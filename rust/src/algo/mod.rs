@@ -10,6 +10,6 @@ pub mod svrg;
 
 pub use local_sgd::LocalSgd;
 pub use method::Method;
-pub use projection::{decode_into, encode, encode_multi, Projector};
+pub use projection::{decode_all, decode_into, encode, encode_multi, Projector};
 pub use qsgd::{QsgdPacket, Quantizer};
 pub use svrg::LocalSvrg;

@@ -27,6 +27,11 @@ pub struct FedConfig {
     /// "broadcasts ... to a subset of clients"). 1.0 = full participation
     /// (the §III experiment).
     pub participation: f64,
+    /// Worker threads for the intra-round client stage (0 = one per
+    /// available core). Purely a throughput knob: the round results are
+    /// bit-identical for every thread count, since each client's stage
+    /// depends only on (params, its batches, its seed).
+    pub threads: usize,
 }
 
 impl Default for FedConfig {
@@ -43,6 +48,7 @@ impl Default for FedConfig {
             },
             eval_every: 10,
             participation: 1.0,
+            threads: 0,
         }
     }
 }
@@ -164,6 +170,7 @@ impl ExperimentConfig {
         f.alpha = getf("fed", "alpha", f.alpha as f64) as f32;
         f.eval_every = geti("fed", "eval_every", f.eval_every as i64) as usize;
         f.participation = getf("fed", "participation", f.participation);
+        f.threads = geti("fed", "threads", f.threads as i64) as usize;
         if let Some(v) = doc.get("fed", "method") {
             let s = v
                 .as_str()
@@ -259,6 +266,15 @@ source = "synthetic"
         assert_eq!(cfg.data, DataSource::Synthetic);
         // untouched keys keep paper values
         assert_eq!(cfg.fed.num_agents, 20);
+        assert_eq!(cfg.fed.threads, 0); // auto
+    }
+
+    #[test]
+    fn threads_override_parses() {
+        let cfg =
+            ExperimentConfig::from_toml_str("[fed]\nthreads = 3\n\n[data]\nsource = \"synthetic\"\n")
+                .unwrap();
+        assert_eq!(cfg.fed.threads, 3);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::error::{Error, Result};
 use crate::metrics::{RoundRecord, RunHistory};
 use crate::netsim::{energy_joules, latency, upload_seconds, Channel};
 use crate::rng::{SplitMix64, VDistribution, Xoshiro256};
-use crate::runtime::{Backend, PureRustBackend};
+use crate::runtime::{Backend, ClientWorker, PureRustBackend, ScalarUpload};
 use crate::{log_debug, log_info};
 use std::sync::Arc;
 use std::time::Instant;
@@ -38,6 +38,12 @@ pub struct Engine {
     run_seed: u64,
     /// RNG for per-round participant sampling (participation < 1).
     participation_rng: Xoshiro256,
+    /// Cached intra-round worker pool (grown lazily, reused across
+    /// rounds — worker scratch is the expensive part, not the threads).
+    workers: Vec<Box<dyn ClientWorker>>,
+    /// Set once the backend declines to provide workers (XLA), so rounds
+    /// stop re-asking.
+    workers_unavailable: bool,
 }
 
 impl Engine {
@@ -115,12 +121,44 @@ impl Engine {
             backend,
             run_seed,
             participation_rng: Xoshiro256::seed_from(SplitMix64::derive(run_seed, 0xac71)),
+            workers: Vec::new(),
+            workers_unavailable: false,
         })
     }
 
     /// How many agents participate each round.
     fn participants_per_round(&self) -> usize {
         ((self.cfg.fed.num_agents as f64) * self.cfg.fed.participation).ceil() as usize
+    }
+
+    /// Worker threads for the intra-round client stage (config knob;
+    /// 0 = one per available core).
+    fn worker_threads(&self) -> usize {
+        match self.cfg.fed.threads {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            t => t,
+        }
+    }
+
+    /// Lazily grow the cached worker pool to `want` entries; false when
+    /// the backend can't provide workers (then rounds stop re-asking).
+    fn ensure_workers(&mut self, want: usize) -> bool {
+        if self.workers_unavailable {
+            return false;
+        }
+        while self.workers.len() < want {
+            match self.backend.client_worker() {
+                Some(w) => self.workers.push(w),
+                None => {
+                    self.workers.clear();
+                    self.workers_unavailable = true;
+                    return false;
+                }
+            }
+        }
+        true
     }
 
     pub fn params(&self) -> &[f32] {
@@ -232,48 +270,98 @@ impl Engine {
                 .sample_indices(self.clients.len(), k_active)
         };
         let mut uplinks: Vec<Uplink> = Vec::with_capacity(k_active);
+        // batch gathering (and, below, quantization) stays serial — those
+        // RNG streams are stateful — while the compute stage fans out
+        // across worker threads when the backend supports it. Results are
+        // bit-identical to the serial order for any thread count, since
+        // each client's stage depends only on its own inputs.
+        let threads = self.worker_threads().min(k_active).max(1);
+        let parallel = threads > 1 && k_active > 1 && self.ensure_workers(threads);
         match method {
             Method::FedScalar { dist, projections } => {
-                // gather all client batches + seeds, then hand the whole
-                // round to the backend in ONE call (vmapped artifact on
-                // XLA — the §Perf dispatch-collapse; a loop on PureRust,
-                // bit-identical to the per-client path).
-                let xdim = self.clients[0].xb.len();
-                let ydim = self.clients[0].yb.len();
-                let mut xbs = Vec::with_capacity(k_active * xdim);
-                let mut ybs = Vec::with_capacity(k_active * ydim);
                 let mut seeds = Vec::with_capacity(k_active);
                 for &ci in &active {
                     let c = &mut self.clients[ci];
                     c.fill_round_batches(s, b);
-                    xbs.extend_from_slice(&c.xb);
-                    ybs.extend_from_slice(&c.yb);
                     seeds.push(c.next_projection_seed());
                 }
-                let ups = self.backend.client_fedscalar_batch(
-                    &self.params,
-                    &xbs,
-                    &ybs,
-                    &seeds,
-                    alpha,
-                    dist,
-                    projections,
-                )?;
+                let ups: Vec<ScalarUpload> = if parallel {
+                    // fan the stages out over the cached worker pool,
+                    // borrowing each client's buffers in place
+                    let clients = &self.clients;
+                    let params = &self.params;
+                    fan_out(&mut self.workers[..threads], k_active, |worker, i| {
+                        let c = &clients[active[i]];
+                        worker.client_fedscalar(
+                            params, &c.xb, &c.yb, seeds[i], alpha, dist, projections,
+                        )
+                    })
+                    .into_iter()
+                    .collect::<Result<_>>()?
+                } else {
+                    // ONE concatenated batch call (vmapped artifact on
+                    // XLA — the §Perf dispatch-collapse; a loop on
+                    // PureRust, bit-identical to per-client calls)
+                    let xdim = self.clients[0].xb.len();
+                    let ydim = self.clients[0].yb.len();
+                    let mut xbs = Vec::with_capacity(k_active * xdim);
+                    let mut ybs = Vec::with_capacity(k_active * ydim);
+                    for &ci in &active {
+                        let c = &self.clients[ci];
+                        xbs.extend_from_slice(&c.xb);
+                        ybs.extend_from_slice(&c.yb);
+                    }
+                    self.backend.client_fedscalar_batch(
+                        &self.params,
+                        &xbs,
+                        &ybs,
+                        &seeds,
+                        alpha,
+                        dist,
+                        projections,
+                    )?
+                };
                 uplinks.extend(ups.into_iter().map(Uplink::Scalar));
             }
             Method::FedAvg | Method::Qsgd { .. } => {
-                for &ci in &active {
-                    let c = &mut self.clients[ci];
-                    c.fill_round_batches(s, b);
-                    let (delta, loss) =
-                        self.backend.client_delta(&self.params, &c.xb, &c.yb, alpha)?;
-                    uplinks.push(match method {
-                        Method::Qsgd { .. } => Uplink::Quantized {
-                            packet: self.quantizer.quantize(&delta),
-                            loss,
-                        },
-                        _ => Uplink::Dense { delta, loss },
+                if parallel {
+                    // fill serially, fan out over borrowed buffers, then
+                    // quantize serially in client order (the quantizer
+                    // RNG stream must not depend on the thread count)
+                    for &ci in &active {
+                        self.clients[ci].fill_round_batches(s, b);
+                    }
+                    let clients = &self.clients;
+                    let params = &self.params;
+                    let deltas = fan_out(&mut self.workers[..threads], k_active, |worker, i| {
+                        let c = &clients[active[i]];
+                        worker.client_delta(params, &c.xb, &c.yb, alpha)
                     });
+                    for res in deltas {
+                        let (delta, loss) = res?;
+                        uplinks.push(match method {
+                            Method::Qsgd { .. } => Uplink::Quantized {
+                                packet: self.quantizer.quantize(&delta),
+                                loss,
+                            },
+                            _ => Uplink::Dense { delta, loss },
+                        });
+                    }
+                } else {
+                    // serial path: one delta live at a time, no copies
+                    for &ci in &active {
+                        let c = &mut self.clients[ci];
+                        c.fill_round_batches(s, b);
+                        let (delta, loss) =
+                            self.backend.client_delta(&self.params, &c.xb, &c.yb, alpha)?;
+                        uplinks.push(match method {
+                            Method::Qsgd { .. } => Uplink::Quantized {
+                                packet: self.quantizer.quantize(&delta),
+                                loss,
+                            },
+                            _ => Uplink::Dense { delta, loss },
+                        });
+                    }
                 }
             }
         }
@@ -335,6 +423,41 @@ impl Engine {
         }
         Ok(())
     }
+}
+
+/// Run `job(worker, ci)` for ci in 0..n across the workers via
+/// `std::thread::scope`, client ids chunked contiguously per worker.
+/// Results land in slot `ci`, so the output order matches the serial loop
+/// exactly, bit for bit, regardless of the worker count.
+fn fan_out<T, F>(workers: &mut [Box<dyn ClientWorker>], n: usize, job: F) -> Vec<Result<T>>
+where
+    T: Send,
+    F: Fn(&mut dyn ClientWorker, usize) -> Result<T> + Sync,
+{
+    let chunk = (n + workers.len() - 1) / workers.len();
+    let mut slots: Vec<Option<Result<T>>> = std::iter::repeat_with(|| None).take(n).collect();
+    std::thread::scope(|scope| {
+        let job = &job;
+        let mut rest = slots.as_mut_slice();
+        for (w, worker) in workers.iter_mut().enumerate() {
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let (head, tail) = rest.split_at_mut(hi - lo);
+            rest = tail;
+            scope.spawn(move || {
+                for (i, slot) in head.iter_mut().enumerate() {
+                    *slot = Some(job(worker.as_mut(), lo + i));
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.expect("client worker left a slot unfilled"))
+        .collect()
 }
 
 /// Resolve the configured data source into (train, test).

@@ -1,26 +1,24 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled — `thiserror` is unavailable in the
+//! offline build).
+
+use std::fmt;
 
 /// Unified error type for the fedscalar crate.
-#[derive(thiserror::Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    /// Errors surfaced by the PJRT runtime (`xla` crate).
-    #[error("xla runtime error: {0}")]
-    Xla(#[from] xla::Error),
+    /// Errors surfaced by the PJRT runtime (`xla` crate, `xla` feature).
+    Xla(String),
 
     /// Filesystem / IO failures (artifact loading, CSV output, ...).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// A required AOT artifact is missing or inconsistent with the config.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Malformed configuration or CLI input.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Malformed data file (dataset CSV, manifest, ...).
-    #[error("parse error in {path}:{line}: {msg}")]
     Parse {
         path: String,
         line: usize,
@@ -28,12 +26,41 @@ pub enum Error {
     },
 
     /// Shape / dimension mismatch between components.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// An invariant the coordinator relies on was violated at runtime.
-    #[error("invariant violated: {0}")]
     Invariant(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla runtime error: {e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Parse { path, line, msg } => {
+                write!(f, "parse error in {path}:{line}: {msg}")
+            }
+            Error::Shape(msg) => write!(f, "shape error: {msg}"),
+            Error::Invariant(msg) => write!(f, "invariant violated: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
@@ -50,5 +77,37 @@ impl Error {
     }
     pub fn invariant(msg: impl Into<String>) -> Self {
         Error::Invariant(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_match_variants() {
+        assert_eq!(Error::config("bad").to_string(), "config error: bad");
+        assert_eq!(Error::shape("s").to_string(), "shape error: s");
+        assert_eq!(
+            Error::invariant("inv").to_string(),
+            "invariant violated: inv"
+        );
+        assert_eq!(
+            Error::Parse {
+                path: "f.csv".into(),
+                line: 3,
+                msg: "bad float".into()
+            }
+            .to_string(),
+            "parse error in f.csv:3: bad float"
+        );
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = ioe.into();
+        assert!(e.to_string().starts_with("io error:"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -1,0 +1,139 @@
+//! Block-streaming generation of the projection vector `v(seed)`.
+//!
+//! The seed's pipeline materialized all d entries of `v` into a heap
+//! scratch buffer before consuming them (`fill_v` + `dot` / `axpy`). The
+//! fused kernels in `algo::projection` instead pull `v` through these
+//! streaming generators in cache-resident pieces:
+//!
+//! * [`RademacherWords`] — one `next_u64` carries 64 Rademacher signs;
+//!   consumers apply them as sign flips directly, so `v` is never
+//!   materialized at all (no ±1.0 multiplies, no scratch vector).
+//! * [`VStream`] — generic block generator for both distributions,
+//!   yielding [`V_BLOCK`]-sized chunks (1 KiB of f32 — L1-resident).
+//!
+//! INVARIANT: streaming the full length through either generator yields
+//! exactly the value stream of `fill_v(seed, dist, out)` — `fill_v` is
+//! itself implemented as a single-block `VStream` call, and the
+//! equivalence property tests in `tests/fused_equivalence.rs` pin the
+//! fused kernels to the retained naive reference.
+
+use super::gaussian::GaussianSource;
+use super::{rademacher, VDistribution, Xoshiro256};
+
+/// Streaming block size in f32 entries. 256 × 4 B = 1 KiB: small enough
+/// that a v-block plus the matching delta/ghat block stay L1-resident,
+/// large enough to amortize per-block loop overhead. A multiple of 64 so
+/// Rademacher blocks consume whole sign words, and even so Gaussian blocks
+/// keep the Box–Muller/polar pair alignment of `GaussianSource::fill`.
+pub const V_BLOCK: usize = 256;
+
+/// The PRNG behind `v(seed)` — shared by `fill_v` and the streaming
+/// generators so their value streams are bit-identical.
+#[inline]
+pub(crate) fn v_rng(seed: u32) -> Xoshiro256 {
+    Xoshiro256::seed_from(seed as u64 ^ 0x9e37_79b9_7f4a_7c15)
+}
+
+/// Stream of Rademacher sign *words* for `v(seed)`: bit `i` (LSB-first) of
+/// word `w` carries the sign of entry `64*w + i` — bit 1 → +1, bit 0 → −1,
+/// exactly the convention of [`rademacher`]. Consumers that handle a
+/// partial final word must discard the unused high bits (as `rademacher`
+/// does), keeping the stream aligned with `fill_v`.
+#[derive(Debug, Clone)]
+pub struct RademacherWords {
+    rng: Xoshiro256,
+}
+
+impl RademacherWords {
+    pub fn new(seed: u32) -> Self {
+        RademacherWords { rng: v_rng(seed) }
+    }
+
+    /// The next 64 signs, packed LSB-first.
+    #[inline]
+    pub fn next_word(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+}
+
+/// Block-streaming generator of `v(seed)` for either distribution: yields
+/// the same value stream as `fill_v`, a chunk at a time, without ever
+/// holding the full d-length vector.
+#[derive(Debug, Clone)]
+pub struct VStream {
+    dist: VDistribution,
+    rng: Xoshiro256,
+    gauss: GaussianSource,
+}
+
+impl VStream {
+    pub fn new(seed: u32, dist: VDistribution) -> Self {
+        VStream {
+            dist,
+            rng: v_rng(seed),
+            gauss: GaussianSource::new(),
+        }
+    }
+
+    /// Fill `out` with the next `out.len()` entries of `v(seed)`.
+    ///
+    /// To stay bit-identical with a single `fill_v` over the concatenated
+    /// lengths, every call except the last must use a multiple of
+    /// [`V_BLOCK`] (the Gaussian polar method emits pairs; Rademacher
+    /// discards leftover sign bits at the end of each call). Only the
+    /// final, possibly-partial block may have arbitrary (odd) length.
+    #[inline]
+    pub fn fill_next(&mut self, out: &mut [f32]) {
+        match self.dist {
+            VDistribution::Normal => self.gauss.fill(&mut self.rng, out),
+            VDistribution::Rademacher => rademacher(&mut self.rng, out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fill_v;
+    use super::*;
+
+    #[test]
+    fn streamed_blocks_match_one_shot_fill_v() {
+        for dist in [VDistribution::Normal, VDistribution::Rademacher] {
+            // lengths exercising: exact multiple, partial tail, odd tail,
+            // shorter than one block
+            for d in [V_BLOCK * 3, V_BLOCK * 2 + 77, 1990, 63, 1] {
+                let mut want = vec![0.0f32; d];
+                fill_v(99, dist, &mut want);
+                let mut got = vec![0.0f32; d];
+                let mut s = VStream::new(99, dist);
+                for chunk in got.chunks_mut(V_BLOCK) {
+                    s.fill_next(chunk);
+                }
+                assert_eq!(got, want, "{dist:?} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn rademacher_words_match_fill_v_signs() {
+        let d = 200; // 3 whole words + a partial one
+        let mut v = vec![0.0f32; d];
+        fill_v(7, VDistribution::Rademacher, &mut v);
+        let mut words = RademacherWords::new(7);
+        let mut i = 0;
+        while i < d {
+            let w = words.next_word();
+            for k in 0..64.min(d - i) {
+                let want = if (w >> k) & 1 == 1 { 1.0 } else { -1.0 };
+                assert_eq!(v[i + k], want, "entry {}", i + k);
+            }
+            i += 64;
+        }
+    }
+
+    #[test]
+    fn v_block_is_even_multiple_of_word() {
+        assert_eq!(V_BLOCK % 64, 0);
+        assert_eq!(V_BLOCK % 2, 0);
+    }
+}

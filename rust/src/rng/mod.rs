@@ -10,13 +10,23 @@
 //! Everything is seedable and reproducible; all experiment entry points
 //! thread explicit seeds so a figure regenerates bit-identically.
 
+mod block;
 mod gaussian;
 mod splitmix;
 mod xoshiro;
 
+pub use block::{RademacherWords, VStream, V_BLOCK};
 pub use gaussian::{lognormal_unit_mean, GaussianSource};
 pub use splitmix::SplitMix64;
 pub use xoshiro::Xoshiro256;
+
+/// Canonical form for user-supplied enum names (CLI / TOML): trimmed and
+/// ASCII-lowercased. The single normalization point every `parse` in the
+/// crate (`VDistribution`, `Method`, ...) routes through, so whitespace
+/// and case behave identically everywhere.
+pub fn canon(s: &str) -> String {
+    s.trim().to_ascii_lowercase()
+}
 
 /// The distribution of the random projection vector `v` (paper §II-A).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -37,7 +47,7 @@ impl VDistribution {
     }
 
     pub fn parse(s: &str) -> Option<Self> {
-        match s {
+        match canon(s).as_str() {
             "normal" | "gaussian" => Some(VDistribution::Normal),
             "rademacher" | "rad" => Some(VDistribution::Rademacher),
             _ => None,
@@ -50,15 +60,11 @@ impl VDistribution {
 /// differs from JAX threefry (irrelevant — each backend is internally
 /// consistent, which is all Algorithm 1 requires), but moments match:
 /// zero mean, identity covariance.
+///
+/// One-shot form of [`VStream`] — the fused projection kernels stream the
+/// identical values blockwise instead of materializing them here.
 pub fn fill_v(seed: u32, dist: VDistribution, out: &mut [f32]) {
-    let mut rng = Xoshiro256::seed_from(seed as u64 ^ 0x9e37_79b9_7f4a_7c15);
-    match dist {
-        VDistribution::Normal => {
-            let mut g = GaussianSource::new();
-            g.fill(&mut rng, out);
-        }
-        VDistribution::Rademacher => rademacher(&mut rng, out),
-    }
+    VStream::new(seed, dist).fill_next(out);
 }
 
 /// Fill `out` with independent ±1 entries (P = 1/2 each), 64 per draw.
@@ -122,5 +128,17 @@ mod tests {
         for d in [VDistribution::Normal, VDistribution::Rademacher] {
             assert_eq!(VDistribution::parse(d.name()), Some(d));
         }
+    }
+
+    #[test]
+    fn dist_parse_canonicalizes_case_and_whitespace() {
+        // same canon() normalization as Method::parse
+        assert_eq!(
+            VDistribution::parse("  Rademacher "),
+            Some(VDistribution::Rademacher)
+        );
+        assert_eq!(VDistribution::parse("GAUSSIAN\n"), Some(VDistribution::Normal));
+        assert_eq!(VDistribution::parse(" rad"), Some(VDistribution::Rademacher));
+        assert_eq!(VDistribution::parse("r a d"), None);
     }
 }

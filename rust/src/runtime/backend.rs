@@ -19,6 +19,35 @@ pub struct ScalarUpload {
     pub delta_sq: f32,
 }
 
+/// A thread-confined client-stage executor: the same math as the owning
+/// backend's `client_fedscalar` / `client_delta`, with its own scratch
+/// buffers, so the coordinator can fan one round's client stages across
+/// `std::thread::scope` workers. Each client's computation depends only on
+/// `(params, batches, seed)`, so any worker produces bit-identical results
+/// for a given client regardless of which thread runs it.
+pub trait ClientWorker: Send {
+    /// FedScalar ClientStage for one client (see [`Backend::client_fedscalar`]).
+    fn client_fedscalar(
+        &mut self,
+        params: &[f32],
+        xb: &[f32],
+        yb: &[i32],
+        seed: u32,
+        alpha: f32,
+        dist: VDistribution,
+        projections: usize,
+    ) -> Result<ScalarUpload>;
+
+    /// Baseline client stage for one client (see [`Backend::client_delta`]).
+    fn client_delta(
+        &mut self,
+        params: &[f32],
+        xb: &[f32],
+        yb: &[i32],
+        alpha: f32,
+    ) -> Result<(Vec<f32>, f32)>;
+}
+
 /// A compute backend. All methods take `&mut self` (backends own scratch
 /// buffers / PJRT handles); the coordinator serializes access.
 pub trait Backend {
@@ -78,6 +107,14 @@ pub trait Backend {
                 )
             })
             .collect()
+    }
+
+    /// Spawn an independent, `Send` client-stage worker for intra-round
+    /// parallelism, or `None` if the backend cannot support one (the
+    /// PJRT handles of the XLA backend are thread-confined) — the engine
+    /// then falls back to the serial `client_fedscalar_batch` path.
+    fn client_worker(&self) -> Option<Box<dyn ClientWorker>> {
+        None
     }
 
     /// Baseline client stage: the same S local SGD steps, returning the

@@ -5,6 +5,9 @@
 //!   `python/compile/aot.py` and executes them on the PJRT CPU client via
 //!   the `xla` crate. This is the real three-layer stack (L3 Rust → L2 JAX
 //!   graph → L1 Pallas kernels): Python is never involved at run time.
+//!   Compiled only under the `xla` cargo feature (the offline default
+//!   build has no crates.io access); without it a stub with the same API
+//!   surface reports the backend as unavailable at load time.
 //! * [`PureRustBackend`] — the dependency-free native twin (same math,
 //!   same flat parameter layout). Serves as the cross-validation oracle
 //!   and the fast path for the 10-run figure sweeps.
@@ -15,12 +18,20 @@
 
 mod artifacts;
 mod backend;
+#[cfg(feature = "xla")]
 mod pjrt;
 mod pure_rust;
+#[cfg(feature = "xla")]
 mod xla_backend;
+#[cfg(not(feature = "xla"))]
+mod xla_stub;
 
 pub use artifacts::Manifest;
-pub use backend::{Backend, ScalarUpload};
+pub use backend::{Backend, ClientWorker, ScalarUpload};
+#[cfg(feature = "xla")]
 pub use pjrt::{literal_f32_vec, literal_i32_vec, literal_u32_vec, XlaExecutable, XlaRuntime};
 pub use pure_rust::PureRustBackend;
+#[cfg(feature = "xla")]
 pub use xla_backend::XlaBackend;
+#[cfg(not(feature = "xla"))]
+pub use xla_stub::{XlaBackend, XlaExecutable, XlaRuntime};

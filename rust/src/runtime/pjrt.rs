@@ -9,6 +9,12 @@
 use crate::error::{Error, Result};
 use std::path::Path;
 
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
 /// Shared PJRT CPU client.
 pub struct XlaRuntime {
     client: xla::PjRtClient,

@@ -1,8 +1,13 @@
 //! Dependency-free native backend: the cross-validation oracle and the
 //! fast path for multi-run figure sweeps. Implements exactly the math of
 //! the L2 JAX model + L1 kernels (see nn::Mlp and algo::projection).
+//!
+//! Projection encode/decode run on the fused block-streaming kernels —
+//! no per-call v scratch vector — and [`PureRustBackend::client_worker`]
+//! hands out thread-confined clones of the client stage so the engine can
+//! run one round's clients in parallel.
 
-use super::backend::{Backend, ScalarUpload};
+use super::backend::{Backend, ClientWorker, ScalarUpload};
 use crate::algo::{projection, LocalSgd};
 use crate::error::{Error, Result};
 use crate::nn::{glorot_init, Mlp, MlpScratch, ModelSpec};
@@ -13,8 +18,31 @@ pub struct PureRustBackend {
     mlp: Mlp,
     sgd: Option<LocalSgd>,
     delta: Vec<f32>,
-    v_scratch: Vec<f32>,
     eval_scratch: MlpScratch,
+}
+
+/// Validate the [S*B, dim]/[S*B] batch buffers against the model + the
+/// declared (S, B) shape (shared by the backend and its workers).
+fn check_batches(mlp: &Mlp, sgd: &LocalSgd, xb: &[f32], yb: &[i32]) -> Result<()> {
+    let dim = mlp.spec.input_dim;
+    if xb.len() % dim != 0 || xb.len() / dim != yb.len() || yb.is_empty() {
+        return Err(Error::shape(format!(
+            "batch buffers inconsistent: xb={} yb={}",
+            xb.len(),
+            yb.len()
+        )));
+    }
+    if sgd.steps * sgd.batch != yb.len() {
+        return Err(Error::shape(format!(
+            "client batches sized for {} rows but the declared (S={}, B={}) shape \
+             expects {} — call set_shape with the matching shape",
+            yb.len(),
+            sgd.steps,
+            sgd.batch,
+            sgd.steps * sgd.batch
+        )));
+    }
+    Ok(())
 }
 
 impl PureRustBackend {
@@ -26,35 +54,7 @@ impl PureRustBackend {
             mlp,
             sgd: None,
             delta: vec![0.0; d],
-            v_scratch: vec![0.0; d],
         }
-    }
-
-    /// The (steps, batch) shape is discovered from the first client call
-    /// and the LocalSgd workspace is reused afterwards.
-    fn sgd_for(&mut self, xb: &[f32], yb: &[i32]) -> Result<&mut LocalSgd> {
-        let dim = self.mlp.spec.input_dim;
-        if xb.len() % dim != 0 || xb.len() / dim != yb.len() || yb.is_empty() {
-            return Err(Error::shape(format!(
-                "batch buffers inconsistent: xb={} yb={}",
-                xb.len(),
-                yb.len()
-            )));
-        }
-        let need_rebuild = match &self.sgd {
-            Some(s) => s.steps * s.batch != yb.len(),
-            None => true,
-        };
-        if need_rebuild {
-            // steps*batch total rows; the engine always uses its configured
-            // (S, B) so we recover S from the row count assuming the batch
-            // stays constant across calls. The engine passes (S*B) rows and
-            // sets the shape explicitly via set_shape.
-            return Err(Error::invariant(
-                "PureRustBackend: call set_shape(steps, batch) before client stages",
-            ));
-        }
-        Ok(self.sgd.as_mut().unwrap())
     }
 
     /// Declare the (S, B) client-stage shape (the engine calls this once).
@@ -75,10 +75,14 @@ impl PureRustBackend {
         yb: &[i32],
         alpha: f32,
     ) -> Result<f32> {
-        let _ = self.sgd_for(xb, yb)?;
-        let mlp = &self.mlp;
-        let sgd = self.sgd.as_mut().unwrap();
-        Ok(sgd.run(mlp, params, xb, yb, alpha, &mut self.delta))
+        let sgd = self
+            .sgd
+            .as_mut()
+            .ok_or_else(|| Error::invariant(
+                "PureRustBackend: call set_shape(steps, batch) before client stages",
+            ))?;
+        check_batches(&self.mlp, sgd, xb, yb)?;
+        Ok(sgd.run(&self.mlp, params, xb, yb, alpha, &mut self.delta))
     }
 }
 
@@ -107,7 +111,7 @@ impl Backend for PureRustBackend {
     ) -> Result<ScalarUpload> {
         let loss = self.run_local(params, xb, yb, alpha)?;
         let mut rs = vec![0.0f32; projections];
-        projection::encode_multi(&self.delta, seed, dist, &mut self.v_scratch, &mut rs);
+        projection::encode_multi(&self.delta, seed, dist, &mut rs);
         Ok(ScalarUpload {
             seed,
             rs,
@@ -127,6 +131,15 @@ impl Backend for PureRustBackend {
         Ok((self.delta.clone(), loss))
     }
 
+    fn client_worker(&self) -> Option<Box<dyn ClientWorker>> {
+        let sgd = self.sgd.as_ref()?;
+        Some(Box::new(PureRustClientWorker {
+            sgd: LocalSgd::new(&self.mlp, sgd.steps, sgd.batch),
+            mlp: self.mlp.clone(),
+            delta: vec![0.0; self.mlp.param_dim()],
+        }))
+    }
+
     fn server_reconstruct(
         &mut self,
         uploads: &[ScalarUpload],
@@ -142,14 +155,60 @@ impl Backend for PureRustBackend {
         let n = uploads.len();
         let mut ghat = vec![0.0f32; self.param_dim()];
         let weight = 1.0 / (n as f32 * m as f32);
-        for u in uploads {
-            projection::decode_into(&mut ghat, u.seed, &u.rs, dist, &mut self.v_scratch, weight);
-        }
+        // blockwise batched reconstruction: every ghat block is filled by
+        // all N*m streams while cache-hot (vs N*m full d-length passes)
+        let jobs: Vec<(u32, &[f32])> =
+            uploads.iter().map(|u| (u.seed, u.rs.as_slice())).collect();
+        projection::decode_all(&mut ghat, &jobs, dist, weight);
         Ok(ghat)
     }
 
     fn evaluate(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
         Ok(self.mlp.evaluate(params, x, y, &mut self.eval_scratch))
+    }
+}
+
+/// Thread-confined clone of the PureRust client stage: own model handle,
+/// own LocalSgd workspace, own delta buffer.
+struct PureRustClientWorker {
+    mlp: Mlp,
+    sgd: LocalSgd,
+    delta: Vec<f32>,
+}
+
+impl ClientWorker for PureRustClientWorker {
+    fn client_fedscalar(
+        &mut self,
+        params: &[f32],
+        xb: &[f32],
+        yb: &[i32],
+        seed: u32,
+        alpha: f32,
+        dist: VDistribution,
+        projections: usize,
+    ) -> Result<ScalarUpload> {
+        check_batches(&self.mlp, &self.sgd, xb, yb)?;
+        let loss = self.sgd.run(&self.mlp, params, xb, yb, alpha, &mut self.delta);
+        let mut rs = vec![0.0f32; projections];
+        projection::encode_multi(&self.delta, seed, dist, &mut rs);
+        Ok(ScalarUpload {
+            seed,
+            rs,
+            loss,
+            delta_sq: tensor::norm_sq(&self.delta),
+        })
+    }
+
+    fn client_delta(
+        &mut self,
+        params: &[f32],
+        xb: &[f32],
+        yb: &[i32],
+        alpha: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        check_batches(&self.mlp, &self.sgd, xb, yb)?;
+        let loss = self.sgd.run(&self.mlp, params, xb, yb, alpha, &mut self.delta);
+        Ok((self.delta.clone(), loss))
     }
 }
 
@@ -234,6 +293,27 @@ mod tests {
         assert!(be
             .client_fedscalar(&params, &xb, &yb, 0, 0.01, VDistribution::Normal, 1)
             .is_err());
+        // no declared shape -> no workers either
+        assert!(be.client_worker().is_none());
+    }
+
+    #[test]
+    fn worker_matches_backend_bit_for_bit() {
+        let (mut be, params, xb, yb) = backend_with_batches(3, 8);
+        let mut w = be.client_worker().expect("shape declared");
+        for dist in [VDistribution::Normal, VDistribution::Rademacher] {
+            let a = be
+                .client_fedscalar(&params, &xb, &yb, 21, 0.01, dist, 2)
+                .unwrap();
+            let b = w
+                .client_fedscalar(&params, &xb, &yb, 21, 0.01, dist, 2)
+                .unwrap();
+            assert_eq!(a, b, "{dist:?}");
+        }
+        let (da, la) = be.client_delta(&params, &xb, &yb, 0.02).unwrap();
+        let (db, lb) = w.client_delta(&params, &xb, &yb, 0.02).unwrap();
+        assert_eq!(da, db);
+        assert_eq!(la, lb);
     }
 
     #[test]

@@ -1,0 +1,130 @@
+//! API-compatible stand-ins for the PJRT runtime types, compiled when the
+//! `xla` cargo feature is off (the offline default — the `xla` crate can't
+//! be fetched without registry access).
+//!
+//! The types are uninhabited: every constructor returns
+//! [`Error::Artifact`], so the methods (which take `self`) are statically
+//! unreachable and the rest of the crate — CLI, benches, figure suite —
+//! compiles and runs unchanged against the PureRust backend.
+
+use super::artifacts::Manifest;
+use super::backend::{Backend, ScalarUpload};
+use crate::error::{Error, Result};
+use crate::rng::VDistribution;
+use std::path::Path;
+
+fn unavailable(what: &str) -> Error {
+    Error::artifact(format!(
+        "{what} requires the PJRT runtime: add the vendored `xla` path \
+         dependency in rust/Cargo.toml and rebuild with `--features xla` \
+         to enable the XLA backend"
+    ))
+}
+
+/// Stub of the PJRT-backed backend (see `runtime/xla_backend.rs`).
+pub enum XlaBackend {}
+
+impl XlaBackend {
+    pub fn load(_artifacts_dir: impl AsRef<Path>) -> Result<XlaBackend> {
+        Err(unavailable("XlaBackend::load"))
+    }
+
+    pub fn set_prefer_batched(&mut self, _on: bool) {
+        match *self {}
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        match *self {}
+    }
+
+    pub fn platform(&self) -> String {
+        match *self {}
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        match *self {}
+    }
+
+    fn param_dim(&self) -> usize {
+        match *self {}
+    }
+
+    fn init_params(&mut self, _seed: u64) -> Result<Vec<f32>> {
+        match *self {}
+    }
+
+    fn client_fedscalar(
+        &mut self,
+        _params: &[f32],
+        _xb: &[f32],
+        _yb: &[i32],
+        _seed: u32,
+        _alpha: f32,
+        _dist: VDistribution,
+        _projections: usize,
+    ) -> Result<ScalarUpload> {
+        match *self {}
+    }
+
+    fn client_delta(
+        &mut self,
+        _params: &[f32],
+        _xb: &[f32],
+        _yb: &[i32],
+        _alpha: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        match *self {}
+    }
+
+    fn server_reconstruct(
+        &mut self,
+        _uploads: &[ScalarUpload],
+        _dist: VDistribution,
+    ) -> Result<Vec<f32>> {
+        match *self {}
+    }
+
+    fn evaluate(&mut self, _params: &[f32], _x: &[f32], _y: &[i32]) -> Result<(f32, f32)> {
+        match *self {}
+    }
+}
+
+/// Stub of the shared PJRT CPU client.
+pub enum XlaRuntime {}
+
+impl XlaRuntime {
+    pub fn cpu() -> Result<XlaRuntime> {
+        Err(unavailable("XlaRuntime::cpu"))
+    }
+
+    pub fn platform(&self) -> String {
+        match *self {}
+    }
+
+    pub fn load(&self, _path: impl AsRef<Path>) -> Result<XlaExecutable> {
+        match *self {}
+    }
+}
+
+/// Stub of a compiled HLO executable.
+pub enum XlaExecutable {}
+
+impl XlaExecutable {
+    pub fn name(&self) -> &str {
+        match *self {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stubs_report_unavailable() {
+        let e = XlaBackend::load("artifacts").unwrap_err();
+        assert!(e.to_string().contains("--features xla"), "{e}");
+        assert!(XlaRuntime::cpu().is_err());
+    }
+}

@@ -79,6 +79,16 @@ impl Bench {
         }
     }
 
+    /// Default budgets, or [`Bench::quick`] when [`quick_requested`]
+    /// (how `verify.sh` keeps the tier-1 bench pass under a second).
+    pub fn from_env() -> Self {
+        if quick_requested() {
+            Bench::quick()
+        } else {
+            Bench::default()
+        }
+    }
+
     /// Time `f` (its return value is black-boxed) and print the report line.
     pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
         // warmup + estimate per-iter cost
@@ -131,6 +141,51 @@ pub fn header(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// The single reader of `FEDSCALAR_BENCH_QUICK`: bench binaries must key
+/// BOTH their budgets and their output filename off this, so quick-mode
+/// numbers never land in the full-budget trajectory file.
+pub fn quick_requested() -> bool {
+    std::env::var("FEDSCALAR_BENCH_QUICK").map_or(false, |v| v == "1")
+}
+
+/// Write results as machine-readable JSON: a flat `{"name": ns_per_iter}`
+/// object (mean ns/iter, 1 decimal). This is the cross-PR perf trajectory
+/// format — `benches/hotpath.rs` writes `BENCH_hotpath.json` so successive
+/// PRs can diff hot-path timings without scraping stdout.
+pub fn write_json<'a>(
+    path: impl AsRef<std::path::Path>,
+    results: impl IntoIterator<Item = &'a BenchResult>,
+) -> std::io::Result<()> {
+    let mut body = String::from("{\n");
+    let mut first = true;
+    for r in results {
+        if !first {
+            body.push_str(",\n");
+        }
+        first = false;
+        body.push_str(&format!(
+            "  \"{}\": {:.1}",
+            json_escape(&r.name),
+            r.mean_ns()
+        ));
+    }
+    body.push_str("\n}\n");
+    std::fs::write(path, body)
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,6 +203,22 @@ mod tests {
         assert!(r.mean_ns() > 0.0);
         assert!(r.iters >= 3);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn write_json_is_flat_name_to_ns() {
+        let mut b = Bench::quick();
+        b.run("alpha \"quoted\"", || 1 + 1);
+        b.run("beta", || 2 + 2);
+        let path = std::env::temp_dir().join("fedscalar_bench_test.json");
+        write_json(&path, b.results()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(text.starts_with('{') && text.trim_end().ends_with('}'), "{text}");
+        assert!(text.contains("\"alpha \\\"quoted\\\"\":"), "{text}");
+        assert!(text.contains("\"beta\":"), "{text}");
+        // exactly one comma between the two entries
+        assert_eq!(text.matches(',').count(), 1, "{text}");
     }
 
     #[test]

@@ -63,11 +63,10 @@ fn prop_reconstruction_unbiased_direction() {
         let dist = *g.pick(&[VDistribution::Normal, VDistribution::Rademacher]);
         let m = 1500;
         let mut est = vec![0.0f32; d];
-        let mut v = vec![0.0f32; d];
         let base = g.usize_in(0, 1 << 20) as u32;
         for s in 0..m {
-            let r = projection::encode(&delta, base + s, dist, &mut v);
-            projection::decode_into(&mut est, base + s, &[r], dist, &mut v, 1.0 / m as f32);
+            let r = projection::encode(&delta, base + s, dist);
+            projection::decode_into(&mut est, base + s, &[r], dist, 1.0 / m as f32);
         }
         let cos = tensor::dot(&est, &delta)
             / (tensor::norm_sq(&est).sqrt() * tensor::norm_sq(&delta).sqrt());

@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Tier-1 verification in one command (see ROADMAP.md):
+#   ./verify.sh          build + tests + fmt check + quick hotpath bench
+#   ./verify.sh --fast   skip the release build (debug tests only)
+#
+# The hotpath bench runs in quick mode (FEDSCALAR_BENCH_QUICK=1) and
+# leaves rust/BENCH_hotpath.quick.json (quick budgets are noisy, so they
+# get their own file; the cross-PR trajectory file BENCH_hotpath.json is
+# only written by a full `cargo bench --bench hotpath`).
+
+set -uo pipefail
+cd "$(dirname "$0")/rust"
+
+fail=0
+step() {
+    echo
+    echo "==> $*"
+    if ! "$@"; then
+        echo "FAILED: $*"
+        fail=1
+    fi
+}
+
+if [ "${1:-}" != "--fast" ]; then
+    step cargo build --release
+fi
+step cargo test -q
+
+# fmt is advisory when rustfmt isn't installed in the container
+if cargo fmt --version >/dev/null 2>&1; then
+    step cargo fmt --check
+else
+    echo "(cargo fmt unavailable — skipping format check)"
+fi
+
+echo
+echo "==> FEDSCALAR_BENCH_QUICK=1 cargo bench --bench hotpath"
+if ! FEDSCALAR_BENCH_QUICK=1 cargo bench --bench hotpath; then
+    echo "FAILED: hotpath bench"
+    fail=1
+fi
+
+echo
+if [ "$fail" -eq 0 ]; then
+    echo "verify: ALL GREEN"
+else
+    echo "verify: FAILURES (see above)"
+fi
+exit "$fail"
