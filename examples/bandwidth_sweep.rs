@@ -28,12 +28,9 @@ fn main() -> Result<()> {
 
     let bandwidths_kbps = [1.0, 10.0, 50.0, 100.0, 1000.0];
     let methods = [
-        Method::FedScalar {
-            dist: VDistribution::Rademacher,
-            projections: 1,
-        },
-        Method::Qsgd { bits: 8 },
-        Method::FedAvg,
+        Method::fedscalar(VDistribution::Rademacher, 1),
+        Method::qsgd(8),
+        Method::fedavg(),
     ];
 
     println!(
@@ -48,13 +45,13 @@ fn main() -> Result<()> {
 
     for &kbps in &bandwidths_kbps {
         print!("{:<14}", format!("{kbps} kbps"));
-        for &method in &methods {
+        for method in &methods {
             let mut cfg = ExperimentConfig::paper_section_iii();
             cfg.data = DataSource::Synthetic; // artifact-free example
             cfg.fed.rounds = a.get_usize("rounds")?;
             cfg.fed.eval_every = 10;
             cfg.fed.alpha = a.get_f64("alpha")? as f32;
-            cfg.fed.method = method;
+            cfg.fed.method = method.clone();
             cfg.network.channel.nominal_bps = kbps * 1000.0;
             let h = run_pure_rust(&cfg, 0)?;
             let t = stats::first_crossing(

@@ -36,11 +36,8 @@ fn human(secs: f64) -> String {
 }
 
 fn main() {
-    let fedavg = Method::FedAvg;
-    let fedscalar = Method::FedScalar {
-        dist: VDistribution::Rademacher,
-        projections: 1,
-    };
+    let fedavg = Method::fedavg();
+    let fedscalar = Method::fedscalar(VDistribution::Rademacher, 1);
     println!(
         "drone swarm: N={N} agents, d={D} parameters, K={K} rounds, mission budget {}\n",
         human(MISSION_BUDGET_S)

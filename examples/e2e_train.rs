@@ -35,10 +35,8 @@ fn main() -> Result<()> {
     cfg.fed.rounds = a.get_usize("rounds")?;
     cfg.fed.eval_every = a.get_usize("eval-every")?;
     cfg.fed.alpha = a.get_f64("alpha")? as f32;
-    cfg.fed.method = Method::parse(&a.get("method")).unwrap_or(Method::FedScalar {
-        dist: VDistribution::Rademacher,
-        projections: 1,
-    });
+    cfg.fed.method = Method::parse(&a.get("method"))
+        .unwrap_or_else(|| Method::fedscalar(VDistribution::Rademacher, 1));
     cfg.artifacts_dir = a.get("artifacts").into();
 
     let backend = XlaBackend::load(&cfg.artifacts_dir)?;

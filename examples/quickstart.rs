@@ -22,10 +22,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     cfg.fed.rounds = 300;
     cfg.fed.eval_every = 30;
     cfg.fed.alpha = 0.01;
-    cfg.fed.method = Method::FedScalar {
-        dist: VDistribution::Rademacher,
-        projections: 1,
-    };
+    cfg.fed.method = Method::fedscalar(VDistribution::Rademacher, 1);
 
     let mut backend = PureRustBackend::new(&cfg.model);
     backend.set_shape(cfg.fed.local_steps, cfg.fed.batch_size);
@@ -46,7 +43,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "\nFedScalar uploaded {} bits/agent/round (two 32-bit scalars) — \
          FedAvg would have uploaded {} bits/agent/round for the same model.",
         cfg.fed.method.uplink_bits(cfg.model.param_dim()),
-        Method::FedAvg.uplink_bits(cfg.model.param_dim()),
+        Method::fedavg().uplink_bits(cfg.model.param_dim()),
     );
     Ok(())
 }

@@ -70,10 +70,7 @@ fn main() -> Result<()> {
     cfg.fed.eval_every = 100;
     cfg.fed.alpha = 0.01;
     let mut acc_of = |dist: VDistribution| -> Result<Vec<f64>> {
-        cfg.fed.method = Method::FedScalar {
-            dist,
-            projections: 1,
-        };
+        cfg.fed.method = Method::fedscalar(dist, 1);
         let runs: Vec<Vec<f64>> = (0..5)
             .map(|s| Ok(run_pure_rust(&cfg, s)?.series(|r| r.test_acc)))
             .collect::<Result<_>>()?;

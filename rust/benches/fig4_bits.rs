@@ -42,12 +42,9 @@ fn main() {
 
     // shape check (paper's headline): at 1e6 bits FedScalar >> baselines
     let fs = suite
-        .history(Method::FedScalar {
-            dist: VDistribution::Rademacher,
-            projections: 1,
-        })
+        .history(&Method::fedscalar(VDistribution::Rademacher, 1))
         .unwrap();
-    let fa = suite.history(Method::FedAvg).unwrap();
+    let fa = suite.history(&Method::fedavg()).unwrap();
     let fs_at = fs.acc_at_bits(1e6).unwrap_or(0.0);
     let fa_at = fa.acc_at_bits(1e6).unwrap_or(0.0);
     assert!(

@@ -30,13 +30,10 @@ fn main() {
     }
 
     let fs = suite
-        .history(Method::FedScalar {
-            dist: VDistribution::Rademacher,
-            projections: 1,
-        })
+        .history(&Method::fedscalar(VDistribution::Rademacher, 1))
         .unwrap();
-    let fa = suite.history(Method::FedAvg).unwrap();
-    let q = suite.history(Method::Qsgd { bits: 8 }).unwrap();
+    let fa = suite.history(&Method::fedavg()).unwrap();
+    let q = suite.history(&Method::qsgd(8)).unwrap();
     let at = |h: &fedscalar::metrics::RunHistory| h.acc_at_seconds(1250.0).unwrap_or(0.0);
     let (a_fs, a_fa, a_q) = (at(fs), at(fa), at(q));
     assert!(

@@ -34,12 +34,9 @@ fn main() {
     let _ = suite.acc_at(Axis::Joules, 50.0);
 
     let fs = suite
-        .history(Method::FedScalar {
-            dist: VDistribution::Rademacher,
-            projections: 1,
-        })
+        .history(&Method::fedscalar(VDistribution::Rademacher, 1))
         .unwrap();
-    let fa = suite.history(Method::FedAvg).unwrap();
+    let fa = suite.history(&Method::fedavg()).unwrap();
     let fs50 = fs.acc_at_joules(50.0).unwrap_or(0.0);
     let fa50 = fa.acc_at_joules(50.0).unwrap_or(0.0);
     assert!(

@@ -12,7 +12,8 @@
 //! name → ns/iter) so the perf trajectory is diffable across PRs. Set
 //! `FEDSCALAR_BENCH_QUICK=1` for the sub-second verify.sh pass.
 
-use fedscalar::algo::{projection, LocalSgd, Quantizer};
+use fedscalar::algo::{projection, LocalSgd, Method, Quantizer, Strategy};
+use fedscalar::coordinator::Uplink;
 use fedscalar::config::ExperimentConfig;
 use fedscalar::coordinator::Engine;
 use fedscalar::data::synthetic::{generate, SyntheticConfig};
@@ -204,6 +205,35 @@ fn main() {
     let mut eng_par = round_bench_engine(0);
     b.run("engine round 20 clients threads=auto", || {
         eng_par.run_round(0, false).unwrap()
+    });
+
+    header("plug-in strategy encode/aggregate at d=1990 (topk64, signsgd)");
+    // encode = the strategy's client-side compression of one delta
+    // (includes the Vec clone handed to encode_delta, ~8 KiB)
+    let mut topk: Box<dyn Strategy> = Method::topk(64).instantiate(0);
+    b.run("topk64 encode (EF + select) d=1990", || {
+        topk.encode_delta(0, delta.clone(), 0.0).unwrap()
+    });
+    let mut signsgd: Box<dyn Strategy> = Method::signsgd().instantiate(0);
+    b.run("signsgd encode (pack signs) d=1990", || {
+        signsgd.encode_delta(0, delta.clone(), 0.0).unwrap()
+    });
+    // aggregate = one round of 20 agents applied into the params
+    let topk_ups: Vec<Uplink> = (0..20)
+        .map(|a| topk.encode_delta(a, delta.clone(), 0.0).unwrap())
+        .collect();
+    let mut agg_params = vec![0.0f32; d];
+    b.run("topk64 aggregate 20 agents d=1990", || {
+        topk.aggregate_and_apply(&mut be, &mut agg_params, &topk_ups)
+            .unwrap()
+    });
+    let sign_ups: Vec<Uplink> = (0..20)
+        .map(|a| signsgd.encode_delta(a, delta.clone(), 0.0).unwrap())
+        .collect();
+    b.run("signsgd aggregate 20 agents d=1990", || {
+        signsgd
+            .aggregate_and_apply(&mut be, &mut agg_params, &sign_ups)
+            .unwrap()
     });
 
     let mut bq = Bench::quick();

@@ -1,0 +1,105 @@
+//! FedAvg as a [`Strategy`]: the uncompressed baseline — every agent
+//! uploads its full d-dimensional update, the server applies the mean.
+//! This is the payload model of the paper's Table I (d 32-bit floats per
+//! agent per round).
+
+use crate::algo::strategy::{mean_loss, Strategy, BITS_PER_FLOAT};
+use crate::algo::Method;
+use crate::coordinator::messages::Uplink;
+use crate::error::{Error, Result};
+use crate::runtime::Backend;
+use crate::tensor;
+
+pub struct FedAvg;
+
+impl Strategy for FedAvg {
+    fn uplink_bits(&self, d: usize) -> u64 {
+        (d as u64) * BITS_PER_FLOAT
+    }
+
+    // default encode_delta: ships the raw delta as `Uplink::Dense`.
+
+    fn aggregate_and_apply(
+        &mut self,
+        _backend: &mut dyn Backend,
+        params: &mut [f32],
+        uplinks: &[Uplink],
+    ) -> Result<f64> {
+        let loss = mean_loss(uplinks)?;
+        let inv = 1.0 / uplinks.len() as f32;
+        for u in uplinks {
+            match u {
+                Uplink::Dense { delta, .. } => {
+                    if delta.len() != params.len() {
+                        return Err(Error::shape("delta/params length mismatch"));
+                    }
+                    tensor::axpy(inv, delta, params);
+                }
+                _ => return Err(Error::invariant("mixed uplink kinds in one round")),
+            }
+        }
+        Ok(loss)
+    }
+}
+
+/// Build the registry handle.
+pub fn method() -> Method {
+    Method::new("fedavg", |_run_seed| Box::new(FedAvg))
+}
+
+/// Registry parser: `fedavg`.
+pub fn parse(s: &str) -> Option<Method> {
+    (s == "fedavg").then(method)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ModelSpec;
+    use crate::runtime::PureRustBackend;
+
+    #[test]
+    fn dense_mean_applied() {
+        let mut be = PureRustBackend::new(&ModelSpec::default());
+        let d = 1990;
+        let mut params = vec![0.0f32; d];
+        let ups = vec![
+            Uplink::Dense {
+                delta: vec![1.0; d],
+                loss: 1.0,
+            },
+            Uplink::Dense {
+                delta: vec![3.0; d],
+                loss: 3.0,
+            },
+        ];
+        let mut s = FedAvg;
+        let loss = s.aggregate_and_apply(&mut be, &mut params, &ups).unwrap();
+        assert!((loss - 2.0).abs() < 1e-6);
+        assert!(params.iter().all(|&p| (p - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn shape_and_kind_mismatches_rejected() {
+        let mut be = PureRustBackend::new(&ModelSpec::default());
+        let mut params = vec![0.0f32; 8];
+        let mut s = FedAvg;
+        let short = vec![Uplink::Dense {
+            delta: vec![0.0; 4],
+            loss: 0.0,
+        }];
+        assert!(s.aggregate_and_apply(&mut be, &mut params, &short).is_err());
+        let mixed = vec![
+            Uplink::Dense {
+                delta: vec![0.0; 8],
+                loss: 0.0,
+            },
+            Uplink::Signs {
+                d: 8,
+                words: vec![0],
+                loss: 0.0,
+            },
+        ];
+        assert!(s.aggregate_and_apply(&mut be, &mut params, &mixed).is_err());
+    }
+}

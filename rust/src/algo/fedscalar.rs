@@ -1,0 +1,173 @@
+//! FedScalar (Algorithm 1) as a [`Strategy`]: the paper's headline method.
+//!
+//! The client stage is [`LocalStage::Projected`] — the backend fuses the S
+//! local SGD steps with the scalar projections (see
+//! [`crate::algo::projection`] for the block-streaming kernels), so the
+//! coordinator never materializes the d-dimensional update. The uplink is
+//! one 32-bit seed plus m 32-bit scalars; the server regenerates the
+//! projection vectors from the seeds and applies the reconstructed mean
+//! update `x += ghat` (Algorithm 1 line 13).
+
+use crate::algo::strategy::{mean_loss, LocalStage, Strategy, BITS_PER_FLOAT, BITS_PER_SEED};
+use crate::algo::Method;
+use crate::coordinator::messages::Uplink;
+use crate::error::{Error, Result};
+use crate::rng::VDistribution;
+use crate::runtime::{Backend, ScalarUpload};
+use crate::tensor;
+
+pub struct FedScalar {
+    dist: VDistribution,
+    projections: usize,
+}
+
+impl FedScalar {
+    pub fn new(dist: VDistribution, projections: usize) -> Self {
+        assert!(projections >= 1, "projections must be >= 1");
+        FedScalar { dist, projections }
+    }
+}
+
+impl Strategy for FedScalar {
+    fn uplink_bits(&self, _d: usize) -> u64 {
+        // m projected scalars + one seed (the m vectors derive from
+        // seed+j, so a single 32-bit seed suffices; m=1 reproduces the
+        // paper's "two scalars") — dimension-free.
+        BITS_PER_SEED + (self.projections as u64) * BITS_PER_FLOAT
+    }
+
+    fn local_stage(&self) -> LocalStage {
+        LocalStage::Projected {
+            dist: self.dist,
+            projections: self.projections,
+        }
+    }
+
+    fn encode_delta(&mut self, _client: usize, _delta: Vec<f32>, _loss: f32) -> Result<Uplink> {
+        Err(Error::invariant(
+            "fedscalar runs the fused projected stage; encode_delta is never reached",
+        ))
+    }
+
+    fn aggregate_and_apply(
+        &mut self,
+        backend: &mut dyn Backend,
+        params: &mut [f32],
+        uplinks: &[Uplink],
+    ) -> Result<f64> {
+        let loss = mean_loss(uplinks)?;
+        let ups: Vec<ScalarUpload> = uplinks
+            .iter()
+            .map(|u| match u {
+                Uplink::Scalar(s) => Ok(s.clone()),
+                _ => Err(Error::invariant("mixed uplink kinds in one round")),
+            })
+            .collect::<Result<_>>()?;
+        let ghat = backend.server_reconstruct(&ups, self.dist)?;
+        if ghat.len() != params.len() {
+            return Err(Error::shape("ghat/params length mismatch"));
+        }
+        tensor::axpy(1.0, &ghat, params);
+        Ok(loss)
+    }
+}
+
+/// Canonical name for a (dist, m) configuration.
+fn name(dist: VDistribution, projections: usize) -> String {
+    if projections == 1 {
+        format!("fedscalar-{}", dist.name())
+    } else {
+        format!("fedscalar-{}-m{}", dist.name(), projections)
+    }
+}
+
+/// Build the registry handle.
+pub fn method(dist: VDistribution, projections: usize) -> Method {
+    assert!(projections >= 1, "projections must be >= 1");
+    Method::new(name(dist, projections), move |_run_seed| {
+        Box::new(FedScalar::new(dist, projections))
+    })
+}
+
+/// Registry parser: `fedscalar`, `fedscalar-<dist>`,
+/// `fedscalar-<dist>-m<k>` (dist aliases as in `VDistribution::parse`).
+pub fn parse(s: &str) -> Option<Method> {
+    if s == "fedscalar" {
+        return Some(method(VDistribution::Rademacher, 1));
+    }
+    let rest = s.strip_prefix("fedscalar-")?;
+    let (dist_str, m) = match rest.split_once("-m") {
+        Some((d, m)) => (d, m.parse().ok()?),
+        None => (rest, 1usize),
+    };
+    if m == 0 {
+        return None;
+    }
+    let dist = VDistribution::parse(dist_str)?;
+    Some(method(dist, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ModelSpec;
+    use crate::runtime::PureRustBackend;
+
+    #[test]
+    fn aggregation_matches_manual_reconstruction() {
+        let mut be = PureRustBackend::new(&ModelSpec::default());
+        let d = be.param_dim();
+        let mut params = vec![0.0f32; d];
+        let ups = vec![
+            Uplink::Scalar(ScalarUpload {
+                seed: 10,
+                rs: vec![2.0],
+                loss: 1.0,
+                delta_sq: 0.0,
+            }),
+            Uplink::Scalar(ScalarUpload {
+                seed: 11,
+                rs: vec![-1.0],
+                loss: 2.0,
+                delta_sq: 0.0,
+            }),
+        ];
+        let mut s = FedScalar::new(VDistribution::Rademacher, 1);
+        let loss = s.aggregate_and_apply(&mut be, &mut params, &ups).unwrap();
+        assert!((loss - 1.5).abs() < 1e-6);
+        let mut proj = crate::algo::Projector::new(d, VDistribution::Rademacher);
+        let mut want = vec![0.0f32; d];
+        proj.decode_into(&mut want, 10, &[2.0], 0.5);
+        proj.decode_into(&mut want, 11, &[-1.0], 0.5);
+        for i in 0..d {
+            assert!((params[i] - want[i]).abs() < 1e-5, "i={i}");
+        }
+    }
+
+    #[test]
+    fn mixed_kinds_rejected() {
+        let mut be = PureRustBackend::new(&ModelSpec::default());
+        let mut params = vec![0.0f32; be.param_dim()];
+        let ups = vec![
+            Uplink::Scalar(ScalarUpload {
+                seed: 0,
+                rs: vec![0.0],
+                loss: 0.0,
+                delta_sq: 0.0,
+            }),
+            Uplink::Dense {
+                delta: vec![0.0; params.len()],
+                loss: 0.0,
+            },
+        ];
+        let mut s = FedScalar::new(VDistribution::Normal, 1);
+        assert!(s.aggregate_and_apply(&mut be, &mut params, &ups).is_err());
+        assert!(s.aggregate_and_apply(&mut be, &mut params, &[]).is_err());
+    }
+
+    #[test]
+    fn encode_delta_is_unreachable() {
+        let mut s = FedScalar::new(VDistribution::Normal, 1);
+        assert!(s.encode_delta(0, vec![0.0], 0.0).is_err());
+    }
+}

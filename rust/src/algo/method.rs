@@ -1,120 +1,134 @@
-//! Strategy taxonomy + wire-format payload accounting.
+//! `Method` — the open, clonable strategy handle the config layer stores.
 //!
-//! The uplink bit counts are the quantity every figure of the paper's
-//! evaluation turns on (Figs 4-6 x-axes, Table I rows): FedScalar uploads
-//! exactly two 32-bit scalars per agent per round regardless of d; FedAvg
-//! uploads d floats; QSGD uploads a norm + d 8-bit levels (+ sign packed in
-//! the level byte, as in the 8-bit QSGD configuration the paper benchmarks).
+//! Historically this was a closed three-variant enum that five coordinator
+//! files matched on; it is now a name + factory pair resolved through the
+//! [`crate::algo::strategy`] registry, so adding a baseline is one new
+//! file implementing [`Strategy`] plus one registered parser — no
+//! coordinator edits.
+//!
+//! The uplink bit counts reachable through this handle are the quantity
+//! every figure of the paper's evaluation turns on (Figs 4-6 x-axes,
+//! Table I rows): FedScalar uploads exactly two 32-bit scalars per agent
+//! per round regardless of d; FedAvg uploads d floats; QSGD a norm + d
+//! 8-bit levels; Top-k sends k (index, value) pairs; SignSGD one bit per
+//! coordinate.
 
+use crate::algo::strategy::{self, Strategy};
 use crate::rng::VDistribution;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
 
-pub const BITS_PER_FLOAT: u64 = 32;
-pub const BITS_PER_SEED: u64 = 32;
-
-/// A federated optimization strategy.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Method {
-    /// Algorithm 1. `projections` = m >= 1 independent random projections
-    /// per round (m = 1 is the paper's headline config; m > 1 is the §II
-    /// future-work extension trading upload for variance).
-    FedScalar {
-        dist: VDistribution,
-        projections: usize,
-    },
-    /// Classic FedAvg: the full d-dimensional update per agent per round.
-    FedAvg,
-    /// QSGD with `bits`-bit stochastic quantization (paper uses 8).
-    Qsgd { bits: u32 },
+/// A resolved federated optimization strategy: canonical name + per-run
+/// factory. Cheap to clone; equality/hashing are by canonical name.
+#[derive(Clone)]
+pub struct Method {
+    name: Arc<str>,
+    make: Arc<dyn Fn(u64) -> Box<dyn Strategy> + Send + Sync>,
 }
 
 impl Method {
-    pub const PAPER_SET: [Method; 4] = [
-        Method::FedScalar {
-            dist: VDistribution::Normal,
-            projections: 1,
-        },
-        Method::FedScalar {
-            dist: VDistribution::Rademacher,
-            projections: 1,
-        },
-        Method::FedAvg,
-        Method::Qsgd { bits: 8 },
-    ];
-
-    /// Uplink payload in bits for ONE agent in ONE round, model dim `d`.
-    pub fn uplink_bits(&self, d: usize) -> u64 {
-        match self {
-            // m projected scalars + one seed (the m vectors derive from
-            // seed+j, so a single 32-bit seed suffices; m=1 reproduces the
-            // paper's "two scalars").
-            Method::FedScalar { projections, .. } => {
-                BITS_PER_SEED + (*projections as u64) * BITS_PER_FLOAT
-            }
-            Method::FedAvg => (d as u64) * BITS_PER_FLOAT,
-            // 32-bit norm + d levels at `bits` bits (sign folded into the
-            // level encoding)
-            Method::Qsgd { bits } => BITS_PER_FLOAT + (d as u64) * (*bits as u64),
+    /// Build a handle from a canonical name and a `run_seed -> instance`
+    /// factory. The factory must derive ALL strategy randomness from the
+    /// given seed (see the determinism contract in
+    /// [`crate::algo::strategy`]).
+    pub fn new(
+        name: impl Into<String>,
+        make: impl Fn(u64) -> Box<dyn Strategy> + Send + Sync + 'static,
+    ) -> Method {
+        let name: String = name.into();
+        Method {
+            name: Arc::from(name),
+            make: Arc::new(make),
         }
     }
 
-    /// Downlink payload (broadcast model) in bits — identical across
-    /// methods; the paper's analysis (and ours) focuses on the uplink
-    /// bottleneck.
-    pub fn downlink_bits(&self, d: usize) -> u64 {
-        (d as u64) * BITS_PER_FLOAT
-    }
-
+    /// Canonical strategy name (`Method::parse(m.name()) == Some(m)`).
     pub fn name(&self) -> String {
-        match self {
-            Method::FedScalar { dist, projections } => {
-                if *projections == 1 {
-                    format!("fedscalar-{}", dist.name())
-                } else {
-                    format!("fedscalar-{}-m{}", dist.name(), projections)
-                }
-            }
-            Method::FedAvg => "fedavg".to_string(),
-            Method::Qsgd { bits } => format!("qsgd{bits}"),
-        }
+        self.name.to_string()
     }
 
-    /// Parse `fedscalar-normal`, `fedscalar-rademacher[-m<k>]`, `fedavg`,
-    /// `qsgd<bits>` / `qsgd`. Normalized through [`crate::rng::canon`] —
-    /// the same trimming/lowercasing as `VDistribution::parse`, so
-    /// whitespace-adjacent forms behave identically in both parsers.
+    /// Instantiate the per-run strategy state.
+    pub fn instantiate(&self, run_seed: u64) -> Box<dyn Strategy> {
+        (self.make)(run_seed)
+    }
+
+    /// Uplink payload in bits for ONE agent in ONE round, model dim `d`
+    /// (delegates to [`Strategy::uplink_bits`] — the single accounting
+    /// source of truth).
+    pub fn uplink_bits(&self, d: usize) -> u64 {
+        self.instantiate(0).uplink_bits(d)
+    }
+
+    /// Downlink payload (broadcast model) in bits.
+    pub fn downlink_bits(&self, d: usize) -> u64 {
+        self.instantiate(0).downlink_bits(d)
+    }
+
+    /// Resolve a strategy by name through the process-global registry
+    /// (normalized via [`crate::rng::canon`], so whitespace-adjacent and
+    /// case-variant forms behave identically everywhere). Built-ins:
+    /// `fedscalar[-normal|-rademacher][-m<k>]`, `fedavg`, `qsgd[<bits>]`,
+    /// `topk[<k>]`, `signsgd[-g<gamma>]` — plus anything added via
+    /// [`crate::algo::strategy::register`].
     pub fn parse(s: &str) -> Option<Method> {
-        let s = crate::rng::canon(s);
-        if s == "fedavg" {
-            return Some(Method::FedAvg);
-        }
-        if let Some(rest) = s.strip_prefix("qsgd") {
-            let bits = if rest.is_empty() { 8 } else { rest.parse().ok()? };
-            if bits == 0 || bits > 32 {
-                return None;
-            }
-            return Some(Method::Qsgd { bits });
-        }
-        if let Some(rest) = s.strip_prefix("fedscalar-") {
-            let (dist_str, m) = match rest.split_once("-m") {
-                Some((d, m)) => (d, m.parse().ok()?),
-                None => (rest, 1usize),
-            };
-            if m == 0 {
-                return None;
-            }
-            let dist = VDistribution::parse(dist_str)?;
-            return Some(Method::FedScalar {
-                dist,
-                projections: m,
-            });
-        }
-        if s == "fedscalar" {
-            return Some(Method::FedScalar {
-                dist: VDistribution::Rademacher,
-                projections: 1,
-            });
-        }
-        None
+        strategy::parse(s)
+    }
+
+    /// The paper's §III four-method comparison set.
+    pub fn paper_set() -> [Method; 4] {
+        [
+            Method::fedscalar(VDistribution::Normal, 1),
+            Method::fedscalar(VDistribution::Rademacher, 1),
+            Method::fedavg(),
+            Method::qsgd(8),
+        ]
+    }
+
+    /// Algorithm 1 with `projections` = m >= 1 independent random
+    /// projections per round (m = 1 is the paper's headline config).
+    pub fn fedscalar(dist: VDistribution, projections: usize) -> Method {
+        crate::algo::fedscalar::method(dist, projections)
+    }
+
+    /// Classic FedAvg: the full d-dimensional update per agent per round.
+    pub fn fedavg() -> Method {
+        crate::algo::fedavg::method()
+    }
+
+    /// QSGD with `bits`-bit stochastic quantization (paper uses 8).
+    pub fn qsgd(bits: u32) -> Method {
+        crate::algo::qsgd::method(bits)
+    }
+
+    /// Top-k sparsification with client-side error feedback.
+    pub fn topk(k: usize) -> Method {
+        crate::algo::topk::method(k)
+    }
+
+    /// SignSGD with majority-vote aggregation (default server step).
+    pub fn signsgd() -> Method {
+        crate::algo::signsgd::method(crate::algo::signsgd::DEFAULT_GAMMA)
+    }
+}
+
+impl PartialEq for Method {
+    fn eq(&self, other: &Self) -> bool {
+        self.name == other.name
+    }
+}
+
+impl Eq for Method {}
+
+impl Hash for Method {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        self.name.hash(state)
+    }
+}
+
+impl fmt::Debug for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_tuple("Method").field(&self.name).finish()
     }
 }
 
@@ -124,10 +138,7 @@ mod tests {
 
     #[test]
     fn fedscalar_upload_is_dimension_free() {
-        let m = Method::FedScalar {
-            dist: VDistribution::Normal,
-            projections: 1,
-        };
+        let m = Method::fedscalar(VDistribution::Normal, 1);
         assert_eq!(m.uplink_bits(10), 64);
         assert_eq!(m.uplink_bits(1990), 64); // two scalars, any d
         assert_eq!(m.uplink_bits(1_000_000), 64);
@@ -135,65 +146,58 @@ mod tests {
 
     #[test]
     fn baseline_uploads_scale_with_d() {
-        assert_eq!(Method::FedAvg.uplink_bits(1990), 1990 * 32);
-        assert_eq!(Method::Qsgd { bits: 8 }.uplink_bits(1990), 32 + 1990 * 8);
+        assert_eq!(Method::fedavg().uplink_bits(1990), 1990 * 32);
+        assert_eq!(Method::qsgd(8).uplink_bits(1990), 32 + 1990 * 8);
         // QSGD is ~4x smaller than FedAvg at 8 bits
-        let f = Method::FedAvg.uplink_bits(1990) as f64;
-        let q = Method::Qsgd { bits: 8 }.uplink_bits(1990) as f64;
+        let f = Method::fedavg().uplink_bits(1990) as f64;
+        let q = Method::qsgd(8).uplink_bits(1990) as f64;
         assert!(f / q > 3.9 && f / q < 4.1);
+        // the new baselines slot between FedScalar and FedAvg
+        assert_eq!(Method::topk(64).uplink_bits(1990), 64 * 64);
+        assert_eq!(Method::signsgd().uplink_bits(1990), 1990);
     }
 
     #[test]
     fn multi_projection_cost() {
-        let m = Method::FedScalar {
-            dist: VDistribution::Rademacher,
-            projections: 8,
-        };
+        let m = Method::fedscalar(VDistribution::Rademacher, 8);
         assert_eq!(m.uplink_bits(1990), 32 + 8 * 32);
     }
 
     #[test]
     fn parse_roundtrip() {
         for m in [
-            Method::FedScalar {
-                dist: VDistribution::Normal,
-                projections: 1,
-            },
-            Method::FedScalar {
-                dist: VDistribution::Rademacher,
-                projections: 4,
-            },
-            Method::FedAvg,
-            Method::Qsgd { bits: 8 },
-            Method::Qsgd { bits: 4 },
+            Method::fedscalar(VDistribution::Normal, 1),
+            Method::fedscalar(VDistribution::Rademacher, 4),
+            Method::fedavg(),
+            Method::qsgd(8),
+            Method::qsgd(4),
+            Method::topk(32),
+            Method::signsgd(),
         ] {
-            assert_eq!(Method::parse(&m.name()), Some(m), "{}", m.name());
+            assert_eq!(Method::parse(&m.name()), Some(m.clone()), "{}", m.name());
         }
         assert_eq!(
             Method::parse("fedscalar"),
-            Some(Method::FedScalar {
-                dist: VDistribution::Rademacher,
-                projections: 1
-            })
+            Some(Method::fedscalar(VDistribution::Rademacher, 1))
         );
-        assert_eq!(Method::parse("qsgd"), Some(Method::Qsgd { bits: 8 }));
+        assert_eq!(Method::parse("qsgd"), Some(Method::qsgd(8)));
+        assert_eq!(Method::parse("topk"), Some(Method::topk(64)));
         assert_eq!(Method::parse("nonsense"), None);
         assert_eq!(Method::parse("qsgd99"), None);
         assert_eq!(Method::parse("fedscalar-normal-m0"), None);
+        assert_eq!(Method::parse("topk0"), None);
     }
 
     #[test]
     fn parse_canonicalizes_like_vdistribution() {
         // whitespace + case normalize identically in both parsers (canon)
-        assert_eq!(Method::parse(" QSGD8 \n"), Some(Method::Qsgd { bits: 8 }));
-        assert_eq!(Method::parse("\tFedAvg "), Some(Method::FedAvg));
+        assert_eq!(Method::parse(" QSGD8 \n"), Some(Method::qsgd(8)));
+        assert_eq!(Method::parse("\tFedAvg "), Some(Method::fedavg()));
         assert_eq!(
             Method::parse(" FedScalar-Rademacher-m4"),
-            Some(Method::FedScalar {
-                dist: VDistribution::Rademacher,
-                projections: 4
-            })
+            Some(Method::fedscalar(VDistribution::Rademacher, 4))
         );
+        assert_eq!(Method::parse(" TopK16 "), Some(Method::topk(16)));
         // inner whitespace is NOT accepted, in either parser
         assert_eq!(Method::parse("qsgd 8"), None);
         assert_eq!(VDistribution::parse("rade macher"), None);
@@ -201,11 +205,21 @@ mod tests {
 
     #[test]
     fn paper_set_has_four_methods() {
-        assert_eq!(Method::PAPER_SET.len(), 4);
-        let names: Vec<String> = Method::PAPER_SET.iter().map(|m| m.name()).collect();
+        assert_eq!(Method::paper_set().len(), 4);
+        let names: Vec<String> = Method::paper_set().iter().map(|m| m.name()).collect();
         assert!(names.contains(&"fedscalar-normal".to_string()));
         assert!(names.contains(&"fedscalar-rademacher".to_string()));
         assert!(names.contains(&"fedavg".to_string()));
         assert!(names.contains(&"qsgd8".to_string()));
+    }
+
+    #[test]
+    fn equality_and_hash_are_by_name() {
+        use std::collections::HashSet;
+        assert_eq!(Method::fedavg(), Method::parse("fedavg").unwrap());
+        assert_ne!(Method::fedavg(), Method::qsgd(8));
+        let set: HashSet<Method> = Method::paper_set().into_iter().collect();
+        assert_eq!(set.len(), 4);
+        assert!(set.contains(&Method::qsgd(8)));
     }
 }

@@ -1,15 +1,25 @@
-//! The paper's algorithms: FedScalar (Algorithm 1) with Normal/Rademacher
-//! projections and the multi-projection extension, plus the FedAvg and
-//! QSGD baselines it is evaluated against.
+//! The paper's algorithms behind the pluggable [`Strategy`] API:
+//! FedScalar (Algorithm 1) with Normal/Rademacher projections and the
+//! multi-projection extension, plus the uplink-compression baselines it is
+//! evaluated against — FedAvg, QSGD, Top-k (error feedback), SignSGD
+//! (majority vote). New baselines register a parser via
+//! [`strategy::register`] and implement [`Strategy`]; no coordinator
+//! edits needed (see the Strategy API section of ROADMAP.md).
 
+pub mod fedavg;
+pub mod fedscalar;
 pub mod local_sgd;
 pub mod method;
 pub mod projection;
 pub mod qsgd;
+pub mod signsgd;
+pub mod strategy;
 pub mod svrg;
+pub mod topk;
 
 pub use local_sgd::LocalSgd;
 pub use method::Method;
 pub use projection::{decode_all, decode_into, encode, encode_multi, Projector};
 pub use qsgd::{QsgdPacket, Quantizer};
+pub use strategy::{LocalStage, Strategy, BITS_PER_FLOAT, BITS_PER_SEED};
 pub use svrg::LocalSvrg;

@@ -23,13 +23,6 @@ pub struct QsgdPacket {
     pub bits: u32,
 }
 
-impl QsgdPacket {
-    /// Wire size in bits: norm + d levels.
-    pub fn wire_bits(&self) -> u64 {
-        32 + (self.levels.len() as u64) * (self.bits as u64)
-    }
-}
-
 /// Stateful quantizer (owns the stochastic-rounding RNG).
 #[derive(Debug, Clone)]
 pub struct Quantizer {
@@ -98,6 +91,89 @@ impl Quantizer {
     }
 }
 
+/// QSGD as a [`Strategy`](crate::algo::Strategy): quantize each client's
+/// delta, dequantize-and-mean on the server. The stochastic-rounding RNG
+/// is strategy-owned state — FedScalar/FedAvg rounds carry no quantizer
+/// at all — seeded exactly as the pre-strategy engine did
+/// (`SplitMix64::derive(run_seed, 0x9594)`), so paper-set runs stay
+/// bit-identical across the refactor.
+pub struct QsgdStrategy {
+    quantizer: Quantizer,
+}
+
+impl QsgdStrategy {
+    pub fn new(bits: u32, run_seed: u64) -> Self {
+        QsgdStrategy {
+            quantizer: Quantizer::new(bits, crate::rng::SplitMix64::derive(run_seed, 0x9594)),
+        }
+    }
+}
+
+impl crate::algo::Strategy for QsgdStrategy {
+    fn uplink_bits(&self, d: usize) -> u64 {
+        // 32-bit norm + d levels at `bits` bits (sign folded into the
+        // level encoding)
+        32 + (d as u64) * (self.quantizer.bits as u64)
+    }
+
+    fn encode_delta(
+        &mut self,
+        _client: usize,
+        delta: Vec<f32>,
+        loss: f32,
+    ) -> crate::error::Result<crate::coordinator::messages::Uplink> {
+        Ok(crate::coordinator::messages::Uplink::Quantized {
+            packet: self.quantizer.quantize(&delta),
+            loss,
+        })
+    }
+
+    fn aggregate_and_apply(
+        &mut self,
+        _backend: &mut dyn crate::runtime::Backend,
+        params: &mut [f32],
+        uplinks: &[crate::coordinator::messages::Uplink],
+    ) -> crate::error::Result<f64> {
+        use crate::coordinator::messages::Uplink;
+        use crate::error::Error;
+        let loss = crate::algo::strategy::mean_loss(uplinks)?;
+        let inv = 1.0 / uplinks.len() as f32;
+        let mut scratch = vec![0.0f32; params.len()];
+        for u in uplinks {
+            match u {
+                Uplink::Quantized { packet, .. } => {
+                    if packet.levels.len() != params.len() {
+                        return Err(Error::shape("packet/params length mismatch"));
+                    }
+                    self.quantizer.dequantize_into(packet, &mut scratch);
+                    crate::tensor::axpy(inv, &scratch, params);
+                }
+                _ => return Err(Error::invariant("mixed uplink kinds in one round")),
+            }
+        }
+        Ok(loss)
+    }
+}
+
+/// Build the registry handle.
+pub fn method(bits: u32) -> crate::algo::Method {
+    assert!((2..=16).contains(&bits), "qsgd bits must be in 2..=16");
+    crate::algo::Method::new(format!("qsgd{bits}"), move |run_seed| {
+        Box::new(QsgdStrategy::new(bits, run_seed))
+    })
+}
+
+/// Registry parser: `qsgd` (8 bits) or `qsgd<bits>`, bits in 2..=16 (the
+/// range the quantizer and the wire format support).
+pub fn parse(s: &str) -> Option<crate::algo::Method> {
+    let rest = s.strip_prefix("qsgd")?;
+    let bits: u32 = if rest.is_empty() { 8 } else { rest.parse().ok()? };
+    if !(2..=16).contains(&bits) {
+        return None;
+    }
+    Some(method(bits))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,12 +188,32 @@ mod tests {
     }
 
     #[test]
-    fn wire_bits_match_method_accounting() {
-        use crate::algo::Method;
-        let mut q = Quantizer::new(8, 0);
-        let x = vec![1.0f32; 1990];
-        let p = q.quantize(&x);
-        assert_eq!(p.wire_bits(), Method::Qsgd { bits: 8 }.uplink_bits(1990));
+    fn strategy_bits_are_norm_plus_d_levels() {
+        use crate::algo::Strategy;
+        let s = QsgdStrategy::new(8, 0);
+        assert_eq!(s.uplink_bits(1990), 32 + 1990 * 8);
+        let s4 = QsgdStrategy::new(4, 0);
+        assert_eq!(s4.uplink_bits(1990), 32 + 1990 * 4);
+    }
+
+    #[test]
+    fn strategy_quantizer_stream_matches_engine_seeding() {
+        // the strategy must reproduce the pre-refactor engine's quantizer
+        // stream: Quantizer::new(bits, SplitMix64::derive(run_seed, 0x9594))
+        use crate::algo::Strategy;
+        let run_seed = 42u64;
+        let mut legacy = Quantizer::new(8, crate::rng::SplitMix64::derive(run_seed, 0x9594));
+        let mut s = QsgdStrategy::new(8, run_seed);
+        let delta: Vec<f32> = (0..300).map(|i| ((i % 17) as f32 - 8.0) / 10.0).collect();
+        for _ in 0..3 {
+            let want = legacy.quantize(&delta);
+            match s.encode_delta(0, delta.clone(), 0.0).unwrap() {
+                crate::coordinator::messages::Uplink::Quantized { packet, .. } => {
+                    assert_eq!(packet, want)
+                }
+                other => panic!("wrong kind {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! SignSGD with majority-vote aggregation, as a pure [`Strategy`] plug-in
+//! (Bernstein et al. 2018; the sign-based compression family named in the
+//! paper's related work).
+//!
+//! Each client uploads ONE BIT per coordinate — the sign of its local
+//! delta (bit = 1 for >= 0), packed 64 signs per word. The server takes a
+//! coordinate-wise majority vote across agents and steps the global model
+//! by a fixed `gamma` in the winning direction (ties move nothing). At
+//! d = 1990 the uplink is 1990 bits vs FedAvg's 63,680 — a 32x
+//! compression, still d-dependent where FedScalar is not.
+
+use crate::algo::strategy::{mean_loss, Strategy};
+use crate::algo::Method;
+use crate::coordinator::messages::Uplink;
+use crate::error::{Error, Result};
+use crate::runtime::Backend;
+
+/// Default server step size (the magnitude information signs discard).
+pub const DEFAULT_GAMMA: f32 = 1e-3;
+
+pub struct SignSgd {
+    gamma: f32,
+}
+
+impl SignSgd {
+    pub fn new(gamma: f32) -> Self {
+        assert!(gamma > 0.0 && gamma.is_finite(), "gamma must be positive");
+        SignSgd { gamma }
+    }
+}
+
+/// Pack sign bits (1 = non-negative), 64 per word, tail bits zero.
+pub fn pack_signs(delta: &[f32]) -> Vec<u64> {
+    let mut words = vec![0u64; delta.len().div_ceil(64)];
+    for (i, &x) in delta.iter().enumerate() {
+        if x >= 0.0 {
+            words[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    words
+}
+
+impl Strategy for SignSgd {
+    fn uplink_bits(&self, d: usize) -> u64 {
+        d as u64
+    }
+
+    fn encode_delta(&mut self, _client: usize, delta: Vec<f32>, loss: f32) -> Result<Uplink> {
+        Ok(Uplink::Signs {
+            d: delta.len(),
+            words: pack_signs(&delta),
+            loss,
+        })
+    }
+
+    fn aggregate_and_apply(
+        &mut self,
+        _backend: &mut dyn Backend,
+        params: &mut [f32],
+        uplinks: &[Uplink],
+    ) -> Result<f64> {
+        let loss = mean_loss(uplinks)?;
+        let d = params.len();
+        let n = uplinks.len();
+        let mut votes = vec![0u32; d];
+        for u in uplinks {
+            match u {
+                Uplink::Signs { d: ud, words, .. } => {
+                    if *ud != d || words.len() != d.div_ceil(64) {
+                        return Err(Error::shape("signs/params length mismatch"));
+                    }
+                    for (i, v) in votes.iter_mut().enumerate() {
+                        *v += ((words[i / 64] >> (i % 64)) & 1) as u32;
+                    }
+                }
+                _ => return Err(Error::invariant("mixed uplink kinds in one round")),
+            }
+        }
+        for (p, &pos) in params.iter_mut().zip(&votes) {
+            let neg = n as u32 - pos;
+            if pos > neg {
+                *p += self.gamma;
+            } else if pos < neg {
+                *p -= self.gamma;
+            }
+        }
+        Ok(loss)
+    }
+}
+
+/// Build the registry handle. `gamma` must round-trip through f32
+/// Display/parse (any value printed by Rust does).
+pub fn method(gamma: f32) -> Method {
+    assert!(gamma > 0.0 && gamma.is_finite(), "gamma must be positive");
+    let name = if gamma == DEFAULT_GAMMA {
+        "signsgd".to_string()
+    } else {
+        format!("signsgd-g{gamma}")
+    };
+    Method::new(name, move |_run_seed| Box::new(SignSgd::new(gamma)))
+}
+
+/// Registry parser: `signsgd` (default gamma) or `signsgd-g<gamma>`.
+pub fn parse(s: &str) -> Option<Method> {
+    if s == "signsgd" {
+        return Some(method(DEFAULT_GAMMA));
+    }
+    let g: f32 = s.strip_prefix("signsgd-g")?.parse().ok()?;
+    if g <= 0.0 || !g.is_finite() {
+        return None;
+    }
+    Some(method(g))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ModelSpec;
+    use crate::runtime::PureRustBackend;
+
+    #[test]
+    fn packs_one_bit_per_coordinate() {
+        let words = pack_signs(&[1.0, -2.0, 0.0, -0.0, 3.0]);
+        assert_eq!(words.len(), 1);
+        // coordinate i is bit i (LSB first); zeros count as non-negative,
+        // including -0.0 (IEEE: -0.0 >= 0.0) — so bits {0,2,3,4} are set
+        assert_eq!(words[0], 0b11101);
+        let w65 = pack_signs(&vec![-1.0f32; 65]);
+        assert_eq!(w65, vec![0, 0]);
+    }
+
+    #[test]
+    fn majority_vote_steps_gamma() {
+        let mut be = PureRustBackend::new(&ModelSpec::default());
+        let mut s = SignSgd::new(0.5);
+        let mut params = vec![0.0f32; 3];
+        let up = |signs: &[f32]| Uplink::Signs {
+            d: 3,
+            words: pack_signs(signs),
+            loss: 1.0,
+        };
+        // coord0: +,+,- => +; coord1: -,-,- => -; coord2: +,-,+ => +
+        let ups = vec![
+            up(&[1.0, -1.0, 1.0]),
+            up(&[1.0, -1.0, -1.0]),
+            up(&[-1.0, -1.0, 1.0]),
+        ];
+        let loss = s.aggregate_and_apply(&mut be, &mut params, &ups).unwrap();
+        assert!((loss - 1.0).abs() < 1e-6);
+        assert_eq!(params, vec![0.5, -0.5, 0.5]);
+    }
+
+    #[test]
+    fn even_split_is_a_tie_and_moves_nothing() {
+        let mut be = PureRustBackend::new(&ModelSpec::default());
+        let mut s = SignSgd::new(0.5);
+        let mut params = vec![1.25f32];
+        let ups = vec![
+            Uplink::Signs {
+                d: 1,
+                words: vec![1],
+                loss: 0.0,
+            },
+            Uplink::Signs {
+                d: 1,
+                words: vec![0],
+                loss: 0.0,
+            },
+        ];
+        s.aggregate_and_apply(&mut be, &mut params, &ups).unwrap();
+        assert_eq!(params, vec![1.25]);
+    }
+
+    #[test]
+    fn shape_and_kind_mismatches_rejected() {
+        let mut be = PureRustBackend::new(&ModelSpec::default());
+        let mut s = SignSgd::new(0.1);
+        let mut params = vec![0.0f32; 4];
+        let wrong_d = vec![Uplink::Signs {
+            d: 3,
+            words: vec![0],
+            loss: 0.0,
+        }];
+        assert!(s.aggregate_and_apply(&mut be, &mut params, &wrong_d).is_err());
+        let mixed = vec![
+            Uplink::Signs {
+                d: 4,
+                words: vec![0],
+                loss: 0.0,
+            },
+            Uplink::Dense {
+                delta: vec![0.0; 4],
+                loss: 0.0,
+            },
+        ];
+        assert!(s.aggregate_and_apply(&mut be, &mut params, &mixed).is_err());
+    }
+
+    #[test]
+    fn gamma_name_roundtrip() {
+        let m = method(0.25);
+        assert_eq!(m.name(), "signsgd-g0.25");
+        assert_eq!(Method::parse("signsgd-g0.25"), Some(m));
+        assert_eq!(Method::parse("signsgd-g-1"), None);
+        assert_eq!(Method::parse("signsgd-g0"), None);
+    }
+}

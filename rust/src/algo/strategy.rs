@@ -1,0 +1,242 @@
+//! The pluggable strategy API: one object-safe trait owning the full
+//! per-method surface the coordinator used to dispatch by hand.
+//!
+//! A [`Strategy`] instance owns everything that is method-specific in a
+//! federated round:
+//!
+//! * **client-side encode** of the local delta into an
+//!   [`Uplink`](crate::coordinator::messages::Uplink) message (including
+//!   any client-side state such as an error-feedback residual or a
+//!   stochastic-rounding RNG stream),
+//! * **server-side aggregate-and-apply** of one round of uplinks into the
+//!   global parameters,
+//! * **bit accounting** — [`Strategy::uplink_bits`] is the single source
+//!   of truth for the per-agent-round uplink payload, charged by the
+//!   network simulator and therefore the quantity on the figures' x-axes,
+//! * **wire (de)serialization** for the distributed engine's byte frames.
+//!
+//! Strategies are resolved by name through a process-global [`register`]d
+//! parser list, so `configs/*.toml`, the CLI, and test code all reach any
+//! strategy — including ones registered outside this crate's source tree —
+//! through [`Method::parse`](crate::algo::Method::parse).
+//!
+//! ## Determinism contract
+//!
+//! The engine guarantees, and every implementation must rely only on:
+//!
+//! * [`Strategy::encode_delta`] is called serially, in active-client
+//!   order, exactly once per participating client per round — so a
+//!   strategy-owned RNG stream (e.g. QSGD's stochastic rounding) advances
+//!   identically for every `fed.threads` value.
+//! * All randomness must derive from the `run_seed` passed to the
+//!   factory given to [`Method::new`](crate::algo::Method::new); given
+//!   the same seed and config, a run's `RunHistory` is bit-identical.
+//! * [`Strategy::uplink_bits`] must be a pure function of `(self, d)`:
+//!   the netsim charges it for every agent-round, whatever the actual
+//!   in-memory size of the produced message.
+
+use crate::coordinator::messages::Uplink;
+use crate::coordinator::wire::WireUplink;
+use crate::error::{Error, Result};
+use crate::rng::VDistribution;
+use crate::runtime::Backend;
+use std::sync::{OnceLock, RwLock};
+
+pub const BITS_PER_FLOAT: u64 = 32;
+pub const BITS_PER_SEED: u64 = 32;
+
+/// Which client compute stage the engine runs for a strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LocalStage {
+    /// The fused FedScalar stage: the backend performs the S local SGD
+    /// steps AND the scalar projections in one call
+    /// ([`Backend::client_fedscalar`]), never materializing the update
+    /// for the coordinator. The engine builds `Uplink::Scalar` messages
+    /// directly; [`Strategy::encode_delta`] is not called.
+    Projected {
+        dist: VDistribution,
+        projections: usize,
+    },
+    /// The generic stage: the backend returns the raw d-dimensional local
+    /// delta ([`Backend::client_delta`]) and the strategy compresses it
+    /// via [`Strategy::encode_delta`]. Every delta-compression baseline
+    /// (FedAvg, QSGD, Top-k, SignSGD, ...) uses this stage.
+    Delta,
+}
+
+/// A federated optimization strategy (object-safe; the engine holds a
+/// `Box<dyn Strategy>` instantiated per run from the
+/// [`Method`](crate::algo::Method) registry handle).
+pub trait Strategy: Send {
+    /// Uplink payload in bits for ONE agent in ONE round at model
+    /// dimension `d`. THE single source of truth for communication
+    /// accounting: the netsim charge, the figures' x-axes, and the wire
+    /// frame sizes are all pinned to this.
+    fn uplink_bits(&self, d: usize) -> u64;
+
+    /// Downlink payload (broadcast model) in bits — identical across the
+    /// shipped strategies; the paper's analysis (and ours) focuses on the
+    /// uplink bottleneck.
+    fn downlink_bits(&self, d: usize) -> u64 {
+        (d as u64) * BITS_PER_FLOAT
+    }
+
+    /// Which client compute stage the engine runs. Defaults to the
+    /// generic delta stage.
+    fn local_stage(&self) -> LocalStage {
+        LocalStage::Delta
+    }
+
+    /// Client-side encode (Delta stage only): compress one client's local
+    /// delta into an uplink message. `client` is the stable client id —
+    /// strategies with per-client state (error feedback) key it by this.
+    /// Called serially in active-client order (see the determinism
+    /// contract in the module docs). The default ships the raw delta.
+    fn encode_delta(&mut self, client: usize, delta: Vec<f32>, loss: f32) -> Result<Uplink> {
+        let _ = client;
+        Ok(Uplink::Dense { delta, loss })
+    }
+
+    /// Server-side: aggregate one round of uplinks into `params`, in
+    /// place. Returns the mean client-reported loss of the round (f64 —
+    /// full precision so the sequential and distributed engines agree
+    /// bit-for-bit). Must reject an empty round and mixed uplink kinds.
+    fn aggregate_and_apply(
+        &mut self,
+        backend: &mut dyn Backend,
+        params: &mut [f32],
+        uplinks: &[Uplink],
+    ) -> Result<f64>;
+
+    /// Serialize an uplink to its wire frame (distributed path). The
+    /// default covers every built-in [`Uplink`] kind.
+    fn wire_encode(&self, up: &Uplink) -> Result<Vec<u8>> {
+        Ok(WireUplink::from_uplink(up).encode())
+    }
+
+    /// Parse a wire frame back into an uplink (distributed path; loss
+    /// telemetry is NOT on the wire, so the decoded message carries 0).
+    fn wire_decode(&self, bytes: &[u8]) -> Result<Uplink> {
+        Ok(WireUplink::decode(bytes)?.into_uplink())
+    }
+}
+
+/// Mean client-reported loss of a round; errors on an empty round.
+/// Shared by every strategy's `aggregate_and_apply`.
+pub fn mean_loss(uplinks: &[Uplink]) -> Result<f64> {
+    if uplinks.is_empty() {
+        return Err(Error::invariant("round with zero uplinks"));
+    }
+    Ok(uplinks.iter().map(|u| u.loss() as f64).sum::<f64>() / uplinks.len() as f64)
+}
+
+/// A name parser: canonicalized strategy name -> resolved Method handle.
+/// Plain `fn` so registration needs no allocation and no teardown.
+pub type StrategyParser = fn(&str) -> Option<crate::algo::Method>;
+
+fn registry() -> &'static RwLock<Vec<StrategyParser>> {
+    static REGISTRY: OnceLock<RwLock<Vec<StrategyParser>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        RwLock::new(vec![
+            crate::algo::fedscalar::parse,
+            crate::algo::fedavg::parse,
+            crate::algo::qsgd::parse,
+            crate::algo::topk::parse,
+            crate::algo::signsgd::parse,
+        ])
+    })
+}
+
+/// Register a strategy name parser. Later registrations take precedence,
+/// so out-of-tree strategies can extend (or shadow) the built-in set;
+/// registration is process-global and idempotent re-registration is
+/// harmless.
+pub fn register(parser: StrategyParser) {
+    registry().write().unwrap().push(parser);
+}
+
+/// Resolve a strategy name through the registry (whitespace/case
+/// canonicalized via [`crate::rng::canon`], like every parser in the
+/// crate). This is what [`Method::parse`](crate::algo::Method::parse) —
+/// and therefore the TOML/CLI config layer — calls.
+pub fn parse(s: &str) -> Option<crate::algo::Method> {
+    let s = crate::rng::canon(s);
+    // snapshot the parser list before invoking anything: a parser is free
+    // to call Method::parse (composite strategies) or even register(),
+    // which would deadlock against a held registry lock
+    let parsers: Vec<StrategyParser> = registry().read().unwrap().clone();
+    parsers.iter().rev().find_map(|p| p(&s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::Method;
+
+    #[test]
+    fn builtins_resolve_through_registry() {
+        for name in [
+            "fedscalar-normal",
+            "fedscalar-rademacher",
+            "fedscalar-rademacher-m4",
+            "fedavg",
+            "qsgd8",
+            "topk64",
+            "signsgd",
+        ] {
+            let m = parse(name).unwrap_or_else(|| panic!("{name} not registered"));
+            assert_eq!(m.name(), name, "canonical name must round-trip");
+        }
+        assert!(parse("nonsense").is_none());
+    }
+
+    fn parse_unit_test_strategy(s: &str) -> Option<Method> {
+        if s != "unit-test-strategy" {
+            return None;
+        }
+        Some(Method::new("unit-test-strategy", |_seed| {
+            struct Fixed;
+            impl Strategy for Fixed {
+                fn uplink_bits(&self, _d: usize) -> u64 {
+                    123
+                }
+                fn aggregate_and_apply(
+                    &mut self,
+                    _backend: &mut dyn crate::runtime::Backend,
+                    _params: &mut [f32],
+                    uplinks: &[Uplink],
+                ) -> Result<f64> {
+                    mean_loss(uplinks)
+                }
+            }
+            Box::new(Fixed)
+        }))
+    }
+
+    #[test]
+    fn registered_parser_resolves_and_wins() {
+        assert!(parse("unit-test-strategy").is_none());
+        register(parse_unit_test_strategy);
+        let m = parse(" Unit-Test-Strategy \n").expect("canonicalized lookup");
+        assert_eq!(m.name(), "unit-test-strategy");
+        assert_eq!(m.uplink_bits(1990), 123);
+        // built-ins still resolve after the registration
+        assert!(parse("fedavg").is_some());
+    }
+
+    #[test]
+    fn mean_loss_rejects_empty() {
+        assert!(mean_loss(&[]).is_err());
+        let ups = vec![
+            Uplink::Dense {
+                delta: vec![],
+                loss: 1.0,
+            },
+            Uplink::Dense {
+                delta: vec![],
+                loss: 2.0,
+            },
+        ];
+        assert!((mean_loss(&ups).unwrap() - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,226 @@
+//! Top-k sparsification with client-side error feedback, as a pure
+//! [`Strategy`] plug-in (no coordinator dispatch edits — see the
+//! structured-updates family in Konečný et al. 2016 and the error-feedback
+//! analysis of Stich et al. 2018).
+//!
+//! Each client accumulates its un-sent mass in a residual `e`:
+//! `e += delta; send top-k of e by |.|; e[sent] = 0`. The server applies
+//! the mean of the sparse updates by scatter-add. Uplink payload:
+//! `min(k, d)` (32-bit index, 32-bit value) pairs.
+
+use crate::algo::strategy::{mean_loss, Strategy, BITS_PER_FLOAT};
+use crate::algo::Method;
+use crate::coordinator::messages::Uplink;
+use crate::error::{Error, Result};
+use crate::runtime::Backend;
+use std::collections::HashMap;
+
+/// Default sparsity when the config just says `topk`.
+pub const DEFAULT_K: usize = 64;
+
+pub struct TopK {
+    k: usize,
+    /// Per-client error-feedback residuals, keyed by stable client id and
+    /// sized lazily on first contact (so instantiation is d-free).
+    residuals: HashMap<usize, Vec<f32>>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "topk k must be >= 1");
+        TopK {
+            k,
+            residuals: HashMap::new(),
+        }
+    }
+
+    /// The residual currently held for `client` (test/diagnostic hook).
+    pub fn residual(&self, client: usize) -> Option<&[f32]> {
+        self.residuals.get(&client).map(|r| r.as_slice())
+    }
+}
+
+impl Strategy for TopK {
+    fn uplink_bits(&self, d: usize) -> u64 {
+        (self.k.min(d) as u64) * (32 + BITS_PER_FLOAT)
+    }
+
+    fn encode_delta(&mut self, client: usize, delta: Vec<f32>, loss: f32) -> Result<Uplink> {
+        let d = delta.len();
+        let r = self
+            .residuals
+            .entry(client)
+            .or_insert_with(|| vec![0.0f32; d]);
+        if r.len() != d {
+            return Err(Error::shape("delta dim changed across rounds"));
+        }
+        for (ri, di) in r.iter_mut().zip(&delta) {
+            *ri += di;
+        }
+        // deterministic selection: by |e| descending, index ascending on
+        // ties — a total order, so the selected SET is independent of the
+        // partition's internal ordering, thread count, and platform.
+        // select_nth partitions in O(d) instead of a full O(d log d) sort.
+        let k = self.k.min(d);
+        let mut order: Vec<u32> = (0..d as u32).collect();
+        let by_magnitude = |a: &u32, b: &u32| {
+            let (fa, fb) = (r[*a as usize].abs(), r[*b as usize].abs());
+            fb.total_cmp(&fa).then(a.cmp(b))
+        };
+        if k < d {
+            order.select_nth_unstable_by(k - 1, by_magnitude);
+            order.truncate(k);
+        }
+        let mut idx = order;
+        idx.sort_unstable();
+        let vals: Vec<f32> = idx.iter().map(|&i| r[i as usize]).collect();
+        for &i in &idx {
+            r[i as usize] = 0.0;
+        }
+        Ok(Uplink::Sparse { idx, vals, loss })
+    }
+
+    fn aggregate_and_apply(
+        &mut self,
+        _backend: &mut dyn Backend,
+        params: &mut [f32],
+        uplinks: &[Uplink],
+    ) -> Result<f64> {
+        let loss = mean_loss(uplinks)?;
+        let inv = 1.0 / uplinks.len() as f32;
+        for u in uplinks {
+            match u {
+                Uplink::Sparse { idx, vals, .. } => {
+                    if idx.len() != vals.len() {
+                        return Err(Error::shape("sparse idx/vals length mismatch"));
+                    }
+                    for (&i, &v) in idx.iter().zip(vals) {
+                        let slot = params
+                            .get_mut(i as usize)
+                            .ok_or_else(|| Error::shape("sparse index out of range"))?;
+                        *slot += inv * v;
+                    }
+                }
+                _ => return Err(Error::invariant("mixed uplink kinds in one round")),
+            }
+        }
+        Ok(loss)
+    }
+}
+
+/// Build the registry handle.
+pub fn method(k: usize) -> Method {
+    assert!(k >= 1, "topk k must be >= 1");
+    Method::new(format!("topk{k}"), move |_run_seed| Box::new(TopK::new(k)))
+}
+
+/// Registry parser: `topk` (k = 64) or `topk<k>`, k >= 1.
+pub fn parse(s: &str) -> Option<Method> {
+    let rest = s.strip_prefix("topk")?;
+    let k: usize = if rest.is_empty() {
+        DEFAULT_K
+    } else {
+        rest.parse().ok()?
+    };
+    if k == 0 {
+        return None;
+    }
+    Some(method(k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ModelSpec;
+    use crate::runtime::PureRustBackend;
+
+    fn sparse(u: Uplink) -> (Vec<u32>, Vec<f32>) {
+        match u {
+            Uplink::Sparse { idx, vals, .. } => (idx, vals),
+            other => panic!("wrong kind {other:?}"),
+        }
+    }
+
+    #[test]
+    fn selects_largest_magnitudes() {
+        let mut s = TopK::new(2);
+        let (idx, vals) = sparse(
+            s.encode_delta(0, vec![0.1, -5.0, 0.2, 3.0, -0.3], 0.0)
+                .unwrap(),
+        );
+        assert_eq!(idx, vec![1, 3]);
+        assert_eq!(vals, vec![-5.0, 3.0]);
+    }
+
+    #[test]
+    fn error_feedback_carries_unsent_mass() {
+        let mut s = TopK::new(1);
+        let (idx, vals) = sparse(s.encode_delta(7, vec![1.0, 0.5, -0.75], 0.0).unwrap());
+        assert_eq!((idx, vals), (vec![0], vec![1.0]));
+        // residual now holds [0, 0.5, -0.75]; a zero delta must flush the
+        // next-largest leftover, not nothing
+        let (idx, vals) = sparse(s.encode_delta(7, vec![0.0, 0.0, 0.0], 0.0).unwrap());
+        assert_eq!((idx, vals), (vec![2], vec![-0.75]));
+        assert_eq!(s.residual(7).unwrap(), &[0.0, 0.5, 0.0]);
+        // residuals are per client: a fresh client starts from zero
+        let (idx, vals) = sparse(s.encode_delta(8, vec![0.0, 0.2, 0.0], 0.0).unwrap());
+        assert_eq!((idx, vals), (vec![1], vec![0.2]));
+    }
+
+    #[test]
+    fn k_clamped_to_dimension_and_bits_account_for_it() {
+        let mut s = TopK::new(10);
+        let (idx, vals) = sparse(s.encode_delta(0, vec![1.0, 2.0], 0.0).unwrap());
+        assert_eq!(idx, vec![0, 1]);
+        assert_eq!(vals, vec![1.0, 2.0]);
+        assert_eq!(s.uplink_bits(2), 2 * 64);
+        assert_eq!(s.uplink_bits(1990), 10 * 64);
+    }
+
+    #[test]
+    fn aggregate_scatter_means() {
+        let mut be = PureRustBackend::new(&ModelSpec::default());
+        let mut params = vec![0.0f32; 6];
+        let ups = vec![
+            Uplink::Sparse {
+                idx: vec![0, 4],
+                vals: vec![2.0, -4.0],
+                loss: 1.0,
+            },
+            Uplink::Sparse {
+                idx: vec![0, 5],
+                vals: vec![4.0, 8.0],
+                loss: 3.0,
+            },
+        ];
+        let mut s = TopK::new(2);
+        let loss = s.aggregate_and_apply(&mut be, &mut params, &ups).unwrap();
+        assert!((loss - 2.0).abs() < 1e-6);
+        assert_eq!(params, vec![3.0, 0.0, 0.0, 0.0, -2.0, 4.0]);
+    }
+
+    #[test]
+    fn bad_uplinks_rejected() {
+        let mut be = PureRustBackend::new(&ModelSpec::default());
+        let mut params = vec![0.0f32; 4];
+        let mut s = TopK::new(2);
+        let oob = vec![Uplink::Sparse {
+            idx: vec![9],
+            vals: vec![1.0],
+            loss: 0.0,
+        }];
+        assert!(s.aggregate_and_apply(&mut be, &mut params, &oob).is_err());
+        let mixed = vec![
+            Uplink::Sparse {
+                idx: vec![],
+                vals: vec![],
+                loss: 0.0,
+            },
+            Uplink::Dense {
+                delta: vec![0.0; 4],
+                loss: 0.0,
+            },
+        ];
+        assert!(s.aggregate_and_apply(&mut be, &mut params, &mixed).is_err());
+    }
+}

@@ -42,10 +42,7 @@ impl Default for FedConfig {
             local_steps: 5,
             batch_size: 32,
             alpha: 0.003,
-            method: Method::FedScalar {
-                dist: VDistribution::Rademacher,
-                projections: 1,
-            },
+            method: Method::fedscalar(VDistribution::Rademacher, 1),
             eval_every: 10,
             participation: 1.0,
             threads: 0,
@@ -111,7 +108,7 @@ impl ExperimentConfig {
         if f.batch_size == 0 {
             return Err(Error::config("batch_size must be > 0"));
         }
-        if !(f.alpha > 0.0) || !f.alpha.is_finite() {
+        if f.alpha <= 0.0 || !f.alpha.is_finite() {
             return Err(Error::config(format!("alpha must be positive, got {}", f.alpha)));
         }
         if f.eval_every == 0 {
@@ -123,11 +120,9 @@ impl ExperimentConfig {
                 f.participation
             )));
         }
-        if let Method::FedScalar { projections, .. } = f.method {
-            if projections == 0 {
-                return Err(Error::config("projections must be >= 1"));
-            }
-        }
+        // strategy-specific parameter validation happens at Method
+        // construction (parsers and constructors reject e.g. m = 0
+        // projections, k = 0, out-of-range quantizer widths)
         if self.network.channel.nominal_bps <= 0.0 {
             return Err(Error::config("bandwidth must be positive"));
         }
@@ -138,7 +133,7 @@ impl ExperimentConfig {
             return Err(Error::config("p_tx must be >= 0"));
         }
         if let Some(a) = self.dirichlet_alpha {
-            if !(a > 0.0) {
+            if a <= 0.0 || a.is_nan() {
                 return Err(Error::config("dirichlet alpha must be > 0"));
             }
         }
@@ -259,7 +254,7 @@ source = "synthetic"
         )
         .unwrap();
         assert_eq!(cfg.fed.rounds, 10);
-        assert_eq!(cfg.fed.method, Method::FedAvg);
+        assert_eq!(cfg.fed.method, Method::fedavg());
         assert!((cfg.fed.alpha - 0.01).abs() < 1e-9);
         assert_eq!(cfg.network.channel.nominal_bps, 1000.0);
         assert_eq!(cfg.network.schedule, Schedule::Concurrent);
@@ -275,6 +270,23 @@ source = "synthetic"
             ExperimentConfig::from_toml_str("[fed]\nthreads = 3\n\n[data]\nsource = \"synthetic\"\n")
                 .unwrap();
         assert_eq!(cfg.fed.threads, 3);
+    }
+
+    #[test]
+    fn registry_strategies_resolve_from_toml() {
+        // any registered strategy is reachable by name from the config
+        // layer — including the plug-in baselines
+        for (name, want) in [
+            ("topk32", Method::topk(32)),
+            ("signsgd", Method::signsgd()),
+            ("qsgd4", Method::qsgd(4)),
+        ] {
+            let cfg = ExperimentConfig::from_toml_str(&format!(
+                "[fed]\nmethod = \"{name}\"\n\n[data]\nsource = \"synthetic\"\n"
+            ))
+            .unwrap();
+            assert_eq!(cfg.fed.method, want, "{name}");
+        }
     }
 
     #[test]

@@ -6,6 +6,13 @@
 //! `run_seed` and the resume round is an epoch boundary for them — resumed
 //! runs are statistically equivalent but not bit-identical to uninterrupted
 //! ones, which is standard checkpoint semantics for FL simulators.
+//!
+//! The same caveat covers per-run *strategy* state (a fresh engine
+//! re-instantiates its strategy from `run_seed`): QSGD's
+//! stochastic-rounding stream restarts, and Top-k error-feedback
+//! residuals restart empty, so the un-sent mass accumulated before the
+//! checkpoint is dropped on resume. A `Strategy` state save/restore hook
+//! is on the ROADMAP's open items.
 
 use crate::error::{Error, Result};
 use std::io::{Read, Write};

@@ -2,31 +2,35 @@
 //! exchanging *serialized wire frames* through byte-counted transports.
 //!
 //! This is the deployment-shaped variant of [`super::engine::Engine`]:
-//! each agent runs in its own OS thread with its own model replica and
-//! compute backend (PureRust — PJRT handles are not Send), receives the
-//! broadcast model as a [`super::wire::WireModel`] frame, runs the local
-//! stage, and sends back a [`super::wire::WireUplink`] frame. The leader
-//! decodes, aggregates, applies, and evaluates.
+//! each agent runs in its own OS thread with its own model replica,
+//! compute backend (PureRust — PJRT handles are not Send), and its own
+//! [`Strategy`](crate::algo::Strategy) instance (client-side state such
+//! as error-feedback residuals lives with the agent, exactly as it would
+//! in a real deployment). A worker receives the broadcast model as a
+//! [`super::wire::WireModel`] frame, runs the local stage its strategy
+//! declares, and sends back the strategy-encoded uplink frame. The leader
+//! decodes through its own strategy instance, aggregates, applies, and
+//! evaluates — no method dispatch anywhere in this file.
 //!
 //! Given the same config and run seed, FedScalar/FedAvg training metrics
 //! are bit-identical to the sequential engine (asserted by the
 //! integration suite): same shards, same batch streams, same seeds, same
 //! arithmetic — serialization is exact for f32. (QSGD differs only in the
-//! stochastic-rounding stream: per-worker quantizers draw independently.)
+//! stochastic-rounding stream: per-worker strategies draw independently.)
 
-use crate::algo::{Method, Quantizer};
-use crate::config::{DataSource, ExperimentConfig};
+use crate::algo::{LocalStage, Strategy};
+use crate::config::ExperimentConfig;
 use crate::coordinator::client::ClientState;
 use crate::coordinator::engine::load_data;
+use crate::coordinator::messages::Uplink;
 use crate::coordinator::transport::{duplex, AgentEndpoint, LeaderEndpoint};
-use crate::coordinator::wire::{WireModel, WireUplink};
+use crate::coordinator::wire::WireModel;
 use crate::error::{Error, Result};
 use crate::metrics::{RoundRecord, RunHistory};
 use crate::netsim::{energy_joules, latency, upload_seconds, Channel};
 use crate::nn::ModelSpec;
-use crate::rng::{SplitMix64, VDistribution};
-use crate::runtime::{Backend, PureRustBackend, ScalarUpload};
-use crate::tensor;
+use crate::rng::SplitMix64;
+use crate::runtime::{Backend, PureRustBackend};
 use crate::{log_debug, log_info};
 use std::sync::Arc;
 use std::time::Instant;
@@ -52,7 +56,8 @@ pub struct DistributedEngine {
     cfg: ExperimentConfig,
     workers: Vec<WorkerHandle>,
     leader_backend: PureRustBackend,
-    quantizer: Quantizer,
+    /// Leader-side strategy instance (decode + aggregate + accounting).
+    strategy: Box<dyn Strategy>,
     test_x: Vec<f32>,
     test_y: Vec<i32>,
     params: Vec<f32>,
@@ -107,7 +112,7 @@ impl DistributedEngine {
         Ok(DistributedEngine {
             history: RunHistory::new(cfg.fed.method.name()),
             channel: Channel::new(cfg.network.channel.clone(), run_seed),
-            quantizer: Quantizer::new(8, SplitMix64::derive(run_seed, 0x9594)),
+            strategy: cfg.fed.method.instantiate(run_seed),
             leader_backend,
             test_x: test.x,
             test_y: test.y,
@@ -155,24 +160,25 @@ impl DistributedEngine {
                 .send(frame.clone())
                 .map_err(Error::invariant)?;
         }
-        // collect uplink frames (in worker order — determinism)
-        let mut uploads: Vec<WireUplink> = Vec::with_capacity(self.workers.len());
+        // collect uplink frames (in worker order — determinism). The
+        // netsim charges the strategy's nominal payload accounting — the
+        // same single source of truth the sequential engine uses (the
+        // transport's frame-byte counters remain available for the
+        // framing-inclusive view).
+        let bits = self.strategy.uplink_bits(self.params.len());
+        let mut uplinks: Vec<Uplink> = Vec::with_capacity(self.workers.len());
         let mut losses = Vec::with_capacity(self.workers.len());
         let mut per_agent_seconds = Vec::with_capacity(self.workers.len());
         let mut round_bits = 0u64;
         let mut round_energy = 0.0f64;
         for w in &self.workers {
             let bytes = w.endpoint.uplink.recv().map_err(Error::invariant)?;
-            // charge the netsim with the PAYLOAD bits (frame minus the
-            // 5-byte tag+count framing for scalar/dense; quantized framing
-            // analogous) so accounting matches the sequential engine.
-            let up = WireUplink::decode(&bytes)?;
-            let bits = payload_bits(&up);
+            let up = self.strategy.wire_decode(&bytes)?;
             let rate = self.channel.sample_rate_bps();
             per_agent_seconds.push(upload_seconds(bits, rate));
             round_energy += energy_joules(self.cfg.network.p_tx_watts, bits, rate);
             round_bits += bits;
-            uploads.push(up);
+            uplinks.push(up);
             losses.push(w.telemetry.recv().map_err(|_| Error::invariant("telemetry lost"))?);
         }
         let round_seconds = latency::round_wall_time(
@@ -184,8 +190,13 @@ impl DistributedEngine {
         self.cum_sim_seconds += round_seconds;
         self.cum_energy_joules += round_energy;
 
-        // aggregate
-        self.apply_uploads(&uploads)?;
+        // aggregate + apply (loss telemetry is not on the wire, so the
+        // round loss comes from the side channel, not the aggregate)
+        self.strategy.aggregate_and_apply(
+            &mut self.leader_backend,
+            &mut self.params,
+            &uplinks,
+        )?;
         let train_loss = losses.iter().map(|l| *l as f64).sum::<f64>() / losses.len() as f64;
 
         if eval {
@@ -203,63 +214,6 @@ impl DistributedEngine {
                 cum_energy_joules: self.cum_energy_joules,
                 host_ms: host_t0.elapsed().as_secs_f64() * 1e3,
             });
-        }
-        Ok(())
-    }
-
-    fn apply_uploads(&mut self, uploads: &[WireUplink]) -> Result<()> {
-        let n = uploads.len();
-        match self.cfg.fed.method {
-            Method::FedScalar { dist, .. } => {
-                let ups: Vec<ScalarUpload> = uploads
-                    .iter()
-                    .map(|u| match u {
-                        WireUplink::Scalar { seed, rs } => Ok(ScalarUpload {
-                            seed: *seed,
-                            rs: rs.clone(),
-                            loss: 0.0,
-                            delta_sq: 0.0,
-                        }),
-                        _ => Err(Error::invariant("expected scalar uplink")),
-                    })
-                    .collect::<Result<_>>()?;
-                let ghat = self.leader_backend.server_reconstruct(&ups, dist)?;
-                tensor::axpy(1.0, &ghat, &mut self.params);
-            }
-            Method::FedAvg => {
-                let inv = 1.0 / n as f32;
-                for u in uploads {
-                    match u {
-                        WireUplink::Dense { delta } => {
-                            if delta.len() != self.params.len() {
-                                return Err(Error::shape("delta length"));
-                            }
-                            tensor::axpy(inv, delta, &mut self.params);
-                        }
-                        _ => return Err(Error::invariant("expected dense uplink")),
-                    }
-                }
-            }
-            Method::Qsgd { .. } => {
-                let inv = 1.0 / n as f32;
-                let mut scratch = vec![0.0f32; self.params.len()];
-                for u in uploads {
-                    match u {
-                        WireUplink::Quantized { norm, s, levels, .. } => {
-                            if levels.len() != self.params.len() {
-                                return Err(Error::shape("levels length"));
-                            }
-                            let scale = *norm / *s as f32;
-                            for (o, &l) in scratch.iter_mut().zip(levels) {
-                                *o = scale * l as f32;
-                            }
-                            tensor::axpy(inv, &scratch, &mut self.params);
-                        }
-                        _ => return Err(Error::invariant("expected quantized uplink")),
-                    }
-                }
-                let _ = &self.quantizer; // leader never quantizes; kept for symmetry
-            }
         }
         Ok(())
     }
@@ -308,16 +262,6 @@ impl Drop for DistributedEngine {
     }
 }
 
-/// Uplink payload bits as charged to the network simulator (frame bytes
-/// minus constant framing, matching `Method::uplink_bits`).
-fn payload_bits(u: &WireUplink) -> u64 {
-    match u {
-        WireUplink::Scalar { rs, .. } => 32 + 32 * rs.len() as u64,
-        WireUplink::Dense { delta } => 32 * delta.len() as u64,
-        WireUplink::Quantized { bits, levels, .. } => 32 + (levels.len() as u64) * (*bits as u64),
-    }
-}
-
 fn spawn_worker(
     id: usize,
     cfg: &ExperimentConfig,
@@ -328,17 +272,13 @@ fn spawn_worker(
     let (leader_ep, agent_ep) = duplex();
     let (ctl_tx, ctl_rx) = std::sync::mpsc::channel::<Control>();
     let (tel_tx, tel_rx) = std::sync::mpsc::channel::<f32>();
-    let method = cfg.fed.method;
+    let method = cfg.fed.method.clone();
     let (steps, batch, alpha) = (cfg.fed.local_steps, cfg.fed.batch_size, cfg.fed.alpha);
     let spec: ModelSpec = cfg.model.clone();
-    let qsgd_bits = match method {
-        Method::Qsgd { bits } => bits,
-        _ => 8,
-    };
     let join = std::thread::spawn(move || {
         worker_main(
             id, agent_ep, ctl_rx, tel_tx, method, spec, train, shard, steps, batch, alpha,
-            qsgd_bits, run_seed,
+            run_seed,
         );
     });
     WorkerHandle {
@@ -355,29 +295,32 @@ fn worker_main(
     ep: AgentEndpoint,
     ctl: std::sync::mpsc::Receiver<Control>,
     telemetry: std::sync::mpsc::Sender<f32>,
-    method: Method,
+    method: crate::algo::Method,
     spec: ModelSpec,
     train: Arc<crate::data::Dataset>,
     shard: Vec<usize>,
     steps: usize,
     batch: usize,
     alpha: f32,
-    qsgd_bits: u32,
     run_seed: u64,
 ) {
     let mut backend = PureRustBackend::new(&spec);
     backend.set_shape(steps, batch);
     let mut state = ClientState::new(id, train, shard, steps, batch, run_seed);
-    // per-worker quantizer stream (independent of other workers)
-    let mut quantizer = Quantizer::new(qsgd_bits, SplitMix64::derive(run_seed ^ 0x9594, id as u64));
+    // per-worker strategy instance with its own derived seed, so strategy
+    // RNG streams (e.g. QSGD's stochastic rounding) are independent across
+    // agents, and per-client state (error-feedback residuals) lives
+    // client-side
+    let mut strategy = method.instantiate(SplitMix64::derive(run_seed ^ 0x9594, id as u64));
     while let Ok(Control::Round) = ctl.recv() {
         let Ok(frame) = ep.downlink.recv() else { return };
         let Ok(model) = WireModel::decode(&frame) else { return };
         state.fill_round_batches(steps, batch);
-        let (wire, loss) = match method {
-            Method::FedScalar { dist, projections } => {
+        let stage = strategy.local_stage();
+        let (up, loss) = match stage {
+            LocalStage::Projected { dist, projections } => {
                 let seed = state.next_projection_seed();
-                let up = backend
+                let scalar = backend
                     .client_fedscalar(
                         &model.params,
                         &state.xb,
@@ -388,23 +331,21 @@ fn worker_main(
                         projections,
                     )
                     .expect("client stage");
-                let loss = up.loss;
-                (WireUplink::from_scalar(&up), loss)
+                let loss = scalar.loss;
+                (Uplink::Scalar(scalar), loss)
             }
-            Method::FedAvg => {
+            LocalStage::Delta => {
                 let (delta, loss) = backend
                     .client_delta(&model.params, &state.xb, &state.yb, alpha)
                     .expect("client stage");
-                (WireUplink::Dense { delta }, loss)
-            }
-            Method::Qsgd { .. } => {
-                let (delta, loss) = backend
-                    .client_delta(&model.params, &state.xb, &state.yb, alpha)
-                    .expect("client stage");
-                (WireUplink::from_qsgd(&quantizer.quantize(&delta)), loss)
+                let up = strategy
+                    .encode_delta(id, delta, loss)
+                    .expect("strategy encode");
+                (up, loss)
             }
         };
-        if ep.uplink.send(wire.encode()).is_err() {
+        let bytes = strategy.wire_encode(&up).expect("wire encode");
+        if ep.uplink.send(bytes).is_err() {
             return;
         }
         if telemetry.send(loss).is_err() {

@@ -1,17 +1,25 @@
 //! The federated round engine: Algorithm 1's outer loop plus the system
 //! model the paper evaluates under (uplink accounting, simulated clock,
 //! energy).
+//!
+//! The engine is strategy-agnostic: all method-specific behaviour (client
+//! encode, server aggregate, bit accounting) lives behind the
+//! [`Strategy`] object instantiated from `cfg.fed.method`, so registering
+//! a new strategy requires no engine edits. The engine only distinguishes
+//! the two client *compute* shapes ([`LocalStage`]): the fused projected
+//! stage (FedScalar's seed-and-scalars kernel, including the XLA backend's
+//! vmapped batch call) and the generic delta stage every compression
+//! baseline consumes.
 
-use crate::algo::{Method, Quantizer};
+use crate::algo::{LocalStage, Strategy};
 use crate::config::{DataSource, ExperimentConfig};
 use crate::coordinator::client::ClientState;
 use crate::coordinator::messages::Uplink;
-use crate::coordinator::server::aggregate_and_apply;
-use crate::data::{iid_partition, dirichlet_partition, Dataset};
+use crate::data::{dirichlet_partition, iid_partition, Dataset};
 use crate::error::{Error, Result};
 use crate::metrics::{RoundRecord, RunHistory};
 use crate::netsim::{energy_joules, latency, upload_seconds, Channel};
-use crate::rng::{SplitMix64, VDistribution, Xoshiro256};
+use crate::rng::{SplitMix64, Xoshiro256};
 use crate::runtime::{Backend, ClientWorker, PureRustBackend, ScalarUpload};
 use crate::{log_debug, log_info};
 use std::sync::Arc;
@@ -24,10 +32,11 @@ pub type RunOutput = RunHistory;
 pub struct Engine {
     cfg: ExperimentConfig,
     backend: Box<dyn Backend>,
+    /// Per-run strategy state (encode/aggregate/accounting).
+    strategy: Box<dyn Strategy>,
     clients: Vec<ClientState>,
     test: Arc<Dataset>,
     channel: Channel,
-    quantizer: Quantizer,
     params: Vec<f32>,
     t_other_s: f64,
     // cumulative counters across rounds
@@ -102,14 +111,10 @@ impl Engine {
             cfg.network.channel.nominal_bps,
             cfg.network.schedule,
         );
-        let qsgd_bits = match cfg.fed.method {
-            Method::Qsgd { bits } => bits,
-            _ => 8,
-        };
         Ok(Engine {
             history: RunHistory::new(cfg.fed.method.name()),
             channel: Channel::new(cfg.network.channel.clone(), run_seed),
-            quantizer: Quantizer::new(qsgd_bits, SplitMix64::derive(run_seed, 0x9594)),
+            strategy: cfg.fed.method.instantiate(run_seed),
             clients,
             test: Arc::new(test),
             params,
@@ -252,7 +257,7 @@ impl Engine {
         Ok(self.history.clone())
     }
 
-    /// One round: local stages -> uplinks -> aggregate -> netsim -> eval.
+    /// One round: local stages -> uplinks -> netsim -> aggregate -> eval.
     pub fn run_round(&mut self, k: usize, eval: bool) -> Result<()> {
         let host_t0 = Instant::now();
         let (s, b, alpha) = (
@@ -260,7 +265,6 @@ impl Engine {
             self.cfg.fed.batch_size,
             self.cfg.fed.alpha,
         );
-        let method = self.cfg.fed.method;
         // participant selection (paper: server activates a subset per round)
         let k_active = self.participants_per_round();
         let active: Vec<usize> = if k_active == self.clients.len() {
@@ -270,15 +274,17 @@ impl Engine {
                 .sample_indices(self.clients.len(), k_active)
         };
         let mut uplinks: Vec<Uplink> = Vec::with_capacity(k_active);
-        // batch gathering (and, below, quantization) stays serial — those
-        // RNG streams are stateful — while the compute stage fans out
-        // across worker threads when the backend supports it. Results are
-        // bit-identical to the serial order for any thread count, since
-        // each client's stage depends only on its own inputs.
+        // batch gathering (and, below, strategy encoding) stays serial —
+        // those RNG/state streams are order-dependent — while the compute
+        // stage fans out across worker threads when the backend supports
+        // it. Results are bit-identical to the serial order for any
+        // thread count, since each client's stage depends only on its own
+        // inputs.
         let threads = self.worker_threads().min(k_active).max(1);
         let parallel = threads > 1 && k_active > 1 && self.ensure_workers(threads);
-        match method {
-            Method::FedScalar { dist, projections } => {
+        let stage = self.strategy.local_stage();
+        match stage {
+            LocalStage::Projected { dist, projections } => {
                 let mut seeds = Vec::with_capacity(k_active);
                 for &ci in &active {
                     let c = &mut self.clients[ci];
@@ -323,11 +329,11 @@ impl Engine {
                 };
                 uplinks.extend(ups.into_iter().map(Uplink::Scalar));
             }
-            Method::FedAvg | Method::Qsgd { .. } => {
+            LocalStage::Delta => {
                 if parallel {
                     // fill serially, fan out over borrowed buffers, then
-                    // quantize serially in client order (the quantizer
-                    // RNG stream must not depend on the thread count)
+                    // encode serially in client order (a strategy's RNG /
+                    // state stream must not depend on the thread count)
                     for &ci in &active {
                         self.clients[ci].fill_round_batches(s, b);
                     }
@@ -337,15 +343,9 @@ impl Engine {
                         let c = &clients[active[i]];
                         worker.client_delta(params, &c.xb, &c.yb, alpha)
                     });
-                    for res in deltas {
+                    for (i, res) in deltas.into_iter().enumerate() {
                         let (delta, loss) = res?;
-                        uplinks.push(match method {
-                            Method::Qsgd { .. } => Uplink::Quantized {
-                                packet: self.quantizer.quantize(&delta),
-                                loss,
-                            },
-                            _ => Uplink::Dense { delta, loss },
-                        });
+                        uplinks.push(self.strategy.encode_delta(active[i], delta, loss)?);
                     }
                 } else {
                     // serial path: one delta live at a time, no copies
@@ -354,24 +354,20 @@ impl Engine {
                         c.fill_round_batches(s, b);
                         let (delta, loss) =
                             self.backend.client_delta(&self.params, &c.xb, &c.yb, alpha)?;
-                        uplinks.push(match method {
-                            Method::Qsgd { .. } => Uplink::Quantized {
-                                packet: self.quantizer.quantize(&delta),
-                                loss,
-                            },
-                            _ => Uplink::Dense { delta, loss },
-                        });
+                        uplinks.push(self.strategy.encode_delta(ci, delta, loss)?);
                     }
                 }
             }
         }
 
         // --- network + energy accounting (eqs. 12-13) ------------------------
+        // ONE source of truth for the uplink payload: the strategy's bit
+        // accounting (also what the figures' x-axes and the wire tests pin).
+        let bits = self.strategy.uplink_bits(self.params.len());
         let mut per_agent_seconds = Vec::with_capacity(uplinks.len());
         let mut round_bits = 0u64;
         let mut round_energy = 0.0f64;
-        for up in &uplinks {
-            let bits = up.wire_bits();
+        for _ in &uplinks {
             let rate = self.channel.sample_rate_bps();
             let secs = upload_seconds(bits, rate);
             round_energy += energy_joules(self.cfg.network.p_tx_watts, bits, rate);
@@ -388,17 +384,9 @@ impl Engine {
         self.cum_energy_joules += round_energy;
 
         // --- aggregate + apply ----------------------------------------------
-        let dist = match method {
-            Method::FedScalar { dist, .. } => dist,
-            _ => VDistribution::Rademacher, // unused
-        };
-        let train_loss = aggregate_and_apply(
-            self.backend.as_mut(),
-            &mut self.quantizer,
-            &mut self.params,
-            &uplinks,
-            dist,
-        )?;
+        let train_loss =
+            self.strategy
+                .aggregate_and_apply(self.backend.as_mut(), &mut self.params, &uplinks)?;
 
         // --- evaluation -------------------------------------------------------
         if eval {
@@ -434,7 +422,7 @@ where
     T: Send,
     F: Fn(&mut dyn ClientWorker, usize) -> Result<T> + Sync,
 {
-    let chunk = (n + workers.len() - 1) / workers.len();
+    let chunk = n.div_ceil(workers.len());
     let mut slots: Vec<Option<Result<T>>> = std::iter::repeat_with(|| None).take(n).collect();
     std::thread::scope(|scope| {
         let job = &job;
@@ -514,7 +502,7 @@ mod tests {
 
     #[test]
     fn fedavg_smoke_descends() {
-        let cfg = smoke_cfg(Method::FedAvg, 40);
+        let cfg = smoke_cfg(Method::fedavg(), 40);
         let h = run_pure_rust(&cfg, 0).unwrap();
         assert!(!h.records.is_empty());
         let first = h.records.first().unwrap();
@@ -525,13 +513,7 @@ mod tests {
 
     #[test]
     fn fedscalar_smoke_runs_and_accounts_bits() {
-        let cfg = smoke_cfg(
-            Method::FedScalar {
-                dist: VDistribution::Rademacher,
-                projections: 1,
-            },
-            10,
-        );
+        let cfg = smoke_cfg(Method::fedscalar(VDistribution::Rademacher, 1), 10);
         let h = run_pure_rust(&cfg, 1).unwrap();
         let last = h.records.last().unwrap();
         // 10 rounds * 4 agents * 64 bits
@@ -542,15 +524,30 @@ mod tests {
 
     #[test]
     fn qsgd_smoke_bits() {
-        let cfg = smoke_cfg(Method::Qsgd { bits: 8 }, 5);
+        let cfg = smoke_cfg(Method::qsgd(8), 5);
         let h = run_pure_rust(&cfg, 2).unwrap();
         let last = h.records.last().unwrap();
         assert_eq!(last.cum_bits, (5 * 4 * (32 + 1990 * 8)) as f64);
     }
 
     #[test]
+    fn topk_smoke_bits_and_signsgd_smoke_bits() {
+        // the two plug-in strategies run through the engine + netsim with
+        // their own accounting, no engine dispatch edits
+        let cfg = smoke_cfg(Method::topk(16), 5);
+        let h = run_pure_rust(&cfg, 3).unwrap();
+        assert_eq!(
+            h.records.last().unwrap().cum_bits,
+            (5 * 4 * 16 * 64) as f64
+        );
+        let cfg = smoke_cfg(Method::signsgd(), 5);
+        let h = run_pure_rust(&cfg, 3).unwrap();
+        assert_eq!(h.records.last().unwrap().cum_bits, (5 * 4 * 1990) as f64);
+    }
+
+    #[test]
     fn deterministic_given_run_seed() {
-        let cfg = smoke_cfg(Method::FedAvg, 6);
+        let cfg = smoke_cfg(Method::fedavg(), 6);
         let a = run_pure_rust(&cfg, 33).unwrap();
         let b = run_pure_rust(&cfg, 33).unwrap();
         assert!(crate::metrics::same_histories(&a, &b));
@@ -560,7 +557,7 @@ mod tests {
 
     #[test]
     fn partial_participation_reduces_round_bits() {
-        let mut cfg = smoke_cfg(Method::FedAvg, 6);
+        let mut cfg = smoke_cfg(Method::fedavg(), 6);
         cfg.fed.num_agents = 8;
         cfg.fed.participation = 0.5;
         let h = run_pure_rust(&cfg, 9).unwrap();
@@ -571,7 +568,7 @@ mod tests {
 
     #[test]
     fn partial_participation_still_learns() {
-        let mut cfg = smoke_cfg(Method::FedAvg, 120);
+        let mut cfg = smoke_cfg(Method::fedavg(), 120);
         cfg.fed.num_agents = 8;
         cfg.fed.participation = 0.25;
         cfg.fed.alpha = 0.02;
@@ -584,7 +581,7 @@ mod tests {
 
     #[test]
     fn invalid_participation_rejected() {
-        let mut cfg = smoke_cfg(Method::FedAvg, 2);
+        let mut cfg = smoke_cfg(Method::fedavg(), 2);
         cfg.fed.participation = 0.0;
         assert!(cfg.validate().is_err());
         cfg.fed.participation = 1.5;
@@ -599,13 +596,7 @@ mod tests {
         // x += ghat update near its stochastic stability edge (the
         // projection noise scales with d*||delta||^2, Lemma 2.2) — some
         // dataset realizations diverge. 0.01 is comfortably stable.
-        let mut cfg = smoke_cfg(
-            Method::FedScalar {
-                dist: VDistribution::Rademacher,
-                projections: 1,
-            },
-            400,
-        );
+        let mut cfg = smoke_cfg(Method::fedscalar(VDistribution::Rademacher, 1), 400);
         cfg.fed.eval_every = 100;
         cfg.fed.alpha = 0.01;
         let h = run_pure_rust(&cfg, 3).unwrap();
@@ -615,5 +606,25 @@ mod tests {
             "acc={} — FedScalar failed to learn at all",
             last.test_acc
         );
+    }
+
+    #[test]
+    fn error_feedback_strategies_learn() {
+        // the plug-in baselines descend on the smoke corpus: Top-k via
+        // error feedback, SignSGD via majority vote with the default step
+        for method in [Method::topk(64), Method::signsgd()] {
+            let mut cfg = smoke_cfg(method.clone(), 200);
+            cfg.fed.eval_every = 100;
+            cfg.fed.alpha = 0.02;
+            let h = run_pure_rust(&cfg, 4).unwrap();
+            let (first, last) = (h.records.first().unwrap(), h.records.last().unwrap());
+            assert!(
+                last.train_loss < first.train_loss,
+                "{}: {} -> {}",
+                method.name(),
+                first.train_loss,
+                last.train_loss
+            );
+        }
     }
 }

@@ -1,41 +1,51 @@
-//! Wire-protocol message types and their *byte-exact* payload accounting.
+//! Wire-protocol message types.
 //!
-//! `Uplink::wire_bits()` is the single source of truth the engine charges
-//! the network simulator with; the tests pin it to
-//! `Method::uplink_bits(d)` so the figures' x-axes can never drift from
-//! the strategy definitions.
+//! Payload *accounting* is NOT defined here: the single source of truth
+//! for uplink bits is [`crate::algo::Strategy::uplink_bits`], which the
+//! engine charges the network simulator with and the wire tests pin the
+//! frame sizes to. (`Uplink::wire_bits` used to re-implement the same
+//! formulas by hand; the strategy redesign removed the duplicate.)
 
 use crate::algo::QsgdPacket;
 use crate::runtime::ScalarUpload;
 
-/// What one agent sends to the server in one round.
+/// What one agent sends to the server in one round. Strategies with
+/// bespoke payloads reuse the closest kind or add a variant here plus a
+/// frame in [`super::wire`] — the engine and server never match on these.
 #[derive(Debug, Clone)]
 pub enum Uplink {
     /// FedScalar: m scalars + one 32-bit seed. The `loss`/`delta_sq`
     /// fields of the inner upload are simulation telemetry, NOT wire.
     Scalar(ScalarUpload),
-    /// FedAvg: the raw d-dimensional update.
+    /// FedAvg (and any uncompressed strategy): the raw d-dim update.
     Dense { delta: Vec<f32>, loss: f32 },
     /// QSGD: quantized update packet.
     Quantized { packet: QsgdPacket, loss: f32 },
+    /// Top-k sparsification: (index, value) pairs, indices ascending.
+    Sparse {
+        idx: Vec<u32>,
+        vals: Vec<f32>,
+        loss: f32,
+    },
+    /// SignSGD: one sign bit per coordinate (bit i of word i/64 is
+    /// coordinate i; 1 = non-negative), tail bits of the last word zero.
+    Signs {
+        d: usize,
+        words: Vec<u64>,
+        loss: f32,
+    },
 }
 
 impl Uplink {
-    /// Uplink payload in bits.
-    pub fn wire_bits(&self) -> u64 {
-        match self {
-            Uplink::Scalar(u) => 32 + 32 * u.rs.len() as u64,
-            Uplink::Dense { delta, .. } => 32 * delta.len() as u64,
-            Uplink::Quantized { packet, .. } => packet.wire_bits(),
-        }
-    }
-
-    /// The client-reported mean local loss (Fig 2 series input).
+    /// The client-reported mean local loss (Fig 2 series input) —
+    /// simulation telemetry, never on the wire.
     pub fn loss(&self) -> f32 {
         match self {
             Uplink::Scalar(u) => u.loss,
             Uplink::Dense { loss, .. } => *loss,
             Uplink::Quantized { loss, .. } => *loss,
+            Uplink::Sparse { loss, .. } => *loss,
+            Uplink::Signs { loss, .. } => *loss,
         }
     }
 }
@@ -43,52 +53,44 @@ impl Uplink {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algo::{Method, Quantizer};
-    use crate::rng::VDistribution;
-
-    #[test]
-    fn scalar_wire_bits_match_method() {
-        for m in [1usize, 4, 16] {
-            let up = Uplink::Scalar(ScalarUpload {
-                seed: 1,
-                rs: vec![0.5; m],
-                loss: 9.9,        // telemetry only
-                delta_sq: 1234.0, // telemetry only
-            });
-            let method = Method::FedScalar {
-                dist: VDistribution::Rademacher,
-                projections: m,
-            };
-            assert_eq!(up.wire_bits(), method.uplink_bits(1990));
-            assert_eq!(up.wire_bits(), method.uplink_bits(1_000_000));
-        }
-    }
-
-    #[test]
-    fn dense_wire_bits_match_method() {
-        let up = Uplink::Dense {
-            delta: vec![0.0; 1990],
-            loss: 0.0,
-        };
-        assert_eq!(up.wire_bits(), Method::FedAvg.uplink_bits(1990));
-    }
-
-    #[test]
-    fn quantized_wire_bits_match_method() {
-        let mut q = Quantizer::new(8, 0);
-        let up = Uplink::Quantized {
-            packet: q.quantize(&vec![1.0f32; 1990]),
-            loss: 0.0,
-        };
-        assert_eq!(up.wire_bits(), Method::Qsgd { bits: 8 }.uplink_bits(1990));
-    }
 
     #[test]
     fn loss_passthrough() {
-        let up = Uplink::Dense {
-            delta: vec![],
-            loss: 2.5,
-        };
-        assert_eq!(up.loss(), 2.5);
+        assert_eq!(
+            Uplink::Dense {
+                delta: vec![],
+                loss: 2.5
+            }
+            .loss(),
+            2.5
+        );
+        assert_eq!(
+            Uplink::Sparse {
+                idx: vec![],
+                vals: vec![],
+                loss: 1.5
+            }
+            .loss(),
+            1.5
+        );
+        assert_eq!(
+            Uplink::Signs {
+                d: 0,
+                words: vec![],
+                loss: 0.5
+            }
+            .loss(),
+            0.5
+        );
+        assert_eq!(
+            Uplink::Scalar(ScalarUpload {
+                seed: 0,
+                rs: vec![],
+                loss: 3.5,
+                delta_sq: 0.0
+            })
+            .loss(),
+            3.5
+        );
     }
 }

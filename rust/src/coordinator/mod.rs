@@ -6,11 +6,13 @@
 //! harness (and every figure bench) consumes.
 //!
 //! Structure:
-//! * [`messages`] — the wire-protocol types + byte-exact payload accounting
+//! * [`messages`] — the wire-protocol types (payload accounting lives on
+//!   [`crate::algo::Strategy::uplink_bits`], the single source of truth)
 //! * [`client`]  — per-agent state (shard sampler, batch buffers)
-//! * [`server`]  — aggregation rules per strategy
+//! * [`server`]  — the strategy-independent server-side pieces (the
+//!   per-strategy aggregation rules live with the strategies)
 //! * [`engine`]  — the round loop: broadcast -> local stage -> uplink ->
-//!   aggregate -> netsim accounting -> (periodic) evaluation
+//!   netsim accounting -> aggregate -> (periodic) evaluation
 
 pub mod checkpoint;
 pub mod client;

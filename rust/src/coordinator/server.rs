@@ -1,205 +1,75 @@
-//! Server-side aggregation rules.
+//! Server-side aggregation.
+//!
+//! Since the strategy redesign, each aggregation rule lives with its
+//! strategy ([`crate::algo::Strategy::aggregate_and_apply`]):
 //!
 //! * FedScalar: `x += ghat` where ghat is the reconstructed mean update
 //!   (Algorithm 1 line 13; the backend performs the seed-regeneration).
 //! * FedAvg / QSGD: `x += mean(delta_n)` (QSGD's deltas are the
 //!   dequantized packets — the server never sees the raw vectors).
+//! * Top-k: scatter-add mean of the (index, value) pairs.
+//! * SignSGD: coordinate-wise majority vote, fixed-gamma step.
+//!
+//! What remains here is the strategy-independent piece — the mean-loss
+//! reduction every rule shares — plus the contract tests each
+//! implementation must satisfy (reject empty rounds, reject mixed kinds).
 
-use crate::algo::Quantizer;
-use crate::coordinator::messages::Uplink;
-use crate::error::{Error, Result};
-use crate::rng::VDistribution;
-use crate::runtime::{Backend, ScalarUpload};
-use crate::tensor;
-
-/// Aggregate a round of uplinks into the parameter update, in place.
-/// Returns the mean client loss of the round (f64 — kept at full precision
-/// so the sequential and distributed engines agree bit-for-bit).
-pub fn aggregate_and_apply(
-    backend: &mut dyn Backend,
-    quantizer: &mut Quantizer,
-    params: &mut [f32],
-    uplinks: &[Uplink],
-    dist: VDistribution,
-) -> Result<f64> {
-    if uplinks.is_empty() {
-        return Err(Error::invariant("round with zero uplinks"));
-    }
-    let n = uplinks.len();
-    let mean_loss = uplinks.iter().map(|u| u.loss() as f64).sum::<f64>() / n as f64;
-    match &uplinks[0] {
-        Uplink::Scalar(_) => {
-            let ups: Vec<ScalarUpload> = uplinks
-                .iter()
-                .map(|u| match u {
-                    Uplink::Scalar(s) => Ok(s.clone()),
-                    _ => Err(Error::invariant("mixed uplink kinds in one round")),
-                })
-                .collect::<Result<_>>()?;
-            let ghat = backend.server_reconstruct(&ups, dist)?;
-            if ghat.len() != params.len() {
-                return Err(Error::shape("ghat/params length mismatch"));
-            }
-            tensor::axpy(1.0, &ghat, params);
-        }
-        Uplink::Dense { .. } => {
-            let inv = 1.0 / n as f32;
-            for u in uplinks {
-                match u {
-                    Uplink::Dense { delta, .. } => {
-                        if delta.len() != params.len() {
-                            return Err(Error::shape("delta/params length mismatch"));
-                        }
-                        tensor::axpy(inv, delta, params);
-                    }
-                    _ => return Err(Error::invariant("mixed uplink kinds in one round")),
-                }
-            }
-        }
-        Uplink::Quantized { .. } => {
-            let inv = 1.0 / n as f32;
-            let mut scratch = vec![0.0f32; params.len()];
-            for u in uplinks {
-                match u {
-                    Uplink::Quantized { packet, .. } => {
-                        if packet.levels.len() != params.len() {
-                            return Err(Error::shape("packet/params length mismatch"));
-                        }
-                        quantizer.dequantize_into(packet, &mut scratch);
-                        tensor::axpy(inv, &scratch, params);
-                    }
-                    _ => return Err(Error::invariant("mixed uplink kinds in one round")),
-                }
-            }
-        }
-    }
-    Ok(mean_loss)
-}
+pub use crate::algo::strategy::mean_loss;
 
 #[cfg(test)]
 mod tests {
-    use super::*;
+    use crate::algo::{Method, Strategy};
+    use crate::coordinator::messages::Uplink;
     use crate::nn::ModelSpec;
-    use crate::runtime::PureRustBackend;
+    use crate::runtime::{Backend, PureRustBackend, ScalarUpload};
 
-    fn small_backend() -> PureRustBackend {
-        PureRustBackend::new(&ModelSpec::default())
+    fn all_builtins() -> Vec<Box<dyn Strategy>> {
+        let mut methods = Method::paper_set().to_vec();
+        methods.push(Method::topk(8));
+        methods.push(Method::signsgd());
+        methods.iter().map(|m| m.instantiate(0)).collect()
     }
 
     #[test]
-    fn dense_mean_applied() {
-        let mut be = small_backend();
-        let d = 1990;
-        let mut q = Quantizer::new(8, 0);
-        let mut params = vec![0.0f32; d];
-        let ups = vec![
-            Uplink::Dense {
-                delta: vec![1.0; d],
-                loss: 1.0,
-            },
-            Uplink::Dense {
-                delta: vec![3.0; d],
-                loss: 3.0,
-            },
-        ];
-        let loss =
-            aggregate_and_apply(&mut be, &mut q, &mut params, &ups, VDistribution::Normal).unwrap();
-        assert!((loss - 2.0).abs() < 1e-6);
-        assert!(params.iter().all(|&p| (p - 2.0).abs() < 1e-6));
-    }
-
-    #[test]
-    fn quantized_mean_close_to_dense_mean() {
-        let mut be = small_backend();
-        let d = 1990;
-        let mut q = Quantizer::new(8, 1);
-        let mut params_q = vec![0.0f32; d];
-        let delta: Vec<f32> = (0..d).map(|i| ((i % 13) as f32 - 6.0) / 10.0).collect();
-        let packet = q.quantize(&delta);
-        let ups = vec![Uplink::Quantized {
-            packet,
-            loss: 0.5,
-        }];
-        aggregate_and_apply(&mut be, &mut q, &mut params_q, &ups, VDistribution::Normal).unwrap();
-        // 8-bit quantization: per-coordinate error <= norm/s
-        let norm = tensor::norm_sq(&delta).sqrt();
-        let bound = norm / 127.0 + 1e-6;
-        for i in 0..d {
-            assert!((params_q[i] - delta[i]).abs() <= bound, "i={i}");
+    fn every_builtin_rejects_empty_rounds() {
+        let mut be = PureRustBackend::new(&ModelSpec::default());
+        let mut params = vec![0.0f32; be.param_dim()];
+        for mut s in all_builtins() {
+            assert!(s.aggregate_and_apply(&mut be, &mut params, &[]).is_err());
         }
     }
 
     #[test]
-    fn scalar_aggregation_runs_reconstruction() {
-        let mut be = small_backend();
+    fn every_builtin_rejects_mixed_kinds() {
+        let mut be = PureRustBackend::new(&ModelSpec::default());
         let d = be.param_dim();
-        let mut q = Quantizer::new(8, 2);
         let mut params = vec![0.0f32; d];
+        // one valid-looking uplink of every kind; any pair of distinct
+        // kinds in one round must be rejected by whichever strategy runs
         let ups = vec![
-            Uplink::Scalar(ScalarUpload {
-                seed: 10,
-                rs: vec![2.0],
-                loss: 1.0,
-                delta_sq: 0.0,
-            }),
-            Uplink::Scalar(ScalarUpload {
-                seed: 11,
-                rs: vec![-1.0],
-                loss: 2.0,
-                delta_sq: 0.0,
-            }),
-        ];
-        let loss = aggregate_and_apply(
-            &mut be,
-            &mut q,
-            &mut params,
-            &ups,
-            VDistribution::Rademacher,
-        )
-        .unwrap();
-        assert!((loss - 1.5).abs() < 1e-6);
-        // params must equal (2 v(10) - 1 v(11)) / 2 — nonzero, and with
-        // rademacher every |coordinate| = (|2| + |-1|)/2 / ... varies; just
-        // check against a manual reconstruction
-        let mut proj = crate::algo::Projector::new(d, VDistribution::Rademacher);
-        let mut want = vec![0.0f32; d];
-        proj.decode_into(&mut want, 10, &[2.0], 0.5);
-        proj.decode_into(&mut want, 11, &[-1.0], 0.5);
-        for i in 0..d {
-            assert!((params[i] - want[i]).abs() < 1e-5, "i={i}");
-        }
-    }
-
-    #[test]
-    fn mixed_kinds_rejected() {
-        let mut be = small_backend();
-        let mut q = Quantizer::new(8, 3);
-        let mut params = vec![0.0f32; 1990];
-        let ups = vec![
-            Uplink::Dense {
-                delta: vec![0.0; 1990],
-                loss: 0.0,
-            },
             Uplink::Scalar(ScalarUpload {
                 seed: 0,
                 rs: vec![0.0],
                 loss: 0.0,
                 delta_sq: 0.0,
             }),
+            Uplink::Dense {
+                delta: vec![0.0; d],
+                loss: 0.0,
+            },
+            Uplink::Sparse {
+                idx: vec![0],
+                vals: vec![0.0],
+                loss: 0.0,
+            },
+            Uplink::Signs {
+                d,
+                words: vec![0; d.div_ceil(64)],
+                loss: 0.0,
+            },
         ];
-        assert!(
-            aggregate_and_apply(&mut be, &mut q, &mut params, &ups, VDistribution::Normal)
-                .is_err()
-        );
-    }
-
-    #[test]
-    fn empty_round_rejected() {
-        let mut be = small_backend();
-        let mut q = Quantizer::new(8, 4);
-        let mut params = vec![0.0f32; 1990];
-        assert!(
-            aggregate_and_apply(&mut be, &mut q, &mut params, &[], VDistribution::Normal).is_err()
-        );
+        for mut s in all_builtins() {
+            assert!(s.aggregate_and_apply(&mut be, &mut params, &ups).is_err());
+        }
     }
 }

@@ -3,16 +3,19 @@
 //! This is the byte-level embodiment of the paper's communication claims:
 //! a serialized FedScalar uplink is a fixed 13-byte frame (1-byte tag +
 //! 4-byte seed + 4-byte count m + m×4-byte scalars → 13 bytes at m=1)
-//! regardless of the model dimension, while FedAvg frames carry 4d bytes.
-//! The distributed engine ships these exact bytes through its transport,
-//! and the payload accounting in [`super::messages::Uplink::wire_bits`]
-//! is checked against `encode().len()` by the tests below.
+//! regardless of the model dimension, while FedAvg frames carry 4d bytes,
+//! QSGD packs `bits` bits per coordinate, Top-k ships k (index, value)
+//! pairs, and SignSGD one bit per coordinate. The distributed engine
+//! ships these exact bytes through its transport; the tests below pin
+//! every frame's payload size to [`crate::algo::Strategy::uplink_bits`] —
+//! the single accounting source of truth.
 //!
 //! Telemetry (client loss, ‖δ‖²) is deliberately NOT part of the uplink
 //! frame — it rides in a separate side-channel struct in-process, mirroring
 //! how a real deployment would log locally rather than transmit.
 
 use crate::algo::QsgdPacket;
+use crate::coordinator::messages::Uplink;
 use crate::error::{Error, Result};
 use crate::runtime::ScalarUpload;
 
@@ -21,6 +24,8 @@ const TAG_SCALAR: u8 = 1;
 const TAG_DENSE: u8 = 2;
 const TAG_QUANTIZED: u8 = 3;
 const TAG_MODEL: u8 = 4;
+const TAG_SPARSE: u8 = 5;
+const TAG_SIGNS: u8 = 6;
 
 /// Wire-facing uplink payload (telemetry stripped).
 #[derive(Debug, Clone, PartialEq)]
@@ -36,6 +41,11 @@ pub enum WireUplink {
         s: u16,
         levels: Vec<i16>,
     },
+    /// Top-k: (index, value) pairs.
+    Sparse { idx: Vec<u32>, vals: Vec<f32> },
+    /// SignSGD: d sign bits, packed 64 per word (bit i of word i/64 is
+    /// coordinate i), tail bits zero.
+    Signs { d: u32, words: Vec<u64> },
 }
 
 impl WireUplink {
@@ -52,6 +62,65 @@ impl WireUplink {
             bits: p.bits,
             s: p.s,
             levels: p.levels.clone(),
+        }
+    }
+
+    /// Strip an in-process uplink to its wire payload (total: every
+    /// [`Uplink`] kind has a frame).
+    pub fn from_uplink(u: &Uplink) -> WireUplink {
+        match u {
+            Uplink::Scalar(s) => WireUplink::from_scalar(s),
+            Uplink::Dense { delta, .. } => WireUplink::Dense {
+                delta: delta.clone(),
+            },
+            Uplink::Quantized { packet, .. } => WireUplink::from_qsgd(packet),
+            Uplink::Sparse { idx, vals, .. } => WireUplink::Sparse {
+                idx: idx.clone(),
+                vals: vals.clone(),
+            },
+            Uplink::Signs { d, words, .. } => WireUplink::Signs {
+                d: *d as u32,
+                words: words.clone(),
+            },
+        }
+    }
+
+    /// Rehydrate the in-process uplink. Loss telemetry is not on the
+    /// wire, so it comes back as 0 (the distributed engine carries loss
+    /// on its side channel).
+    pub fn into_uplink(self) -> Uplink {
+        match self {
+            WireUplink::Scalar { seed, rs } => Uplink::Scalar(ScalarUpload {
+                seed,
+                rs,
+                loss: 0.0,
+                delta_sq: 0.0,
+            }),
+            WireUplink::Dense { delta } => Uplink::Dense { delta, loss: 0.0 },
+            WireUplink::Quantized {
+                norm,
+                bits,
+                s,
+                levels,
+            } => Uplink::Quantized {
+                packet: QsgdPacket {
+                    norm,
+                    levels,
+                    s,
+                    bits,
+                },
+                loss: 0.0,
+            },
+            WireUplink::Sparse { idx, vals } => Uplink::Sparse {
+                idx,
+                vals,
+                loss: 0.0,
+            },
+            WireUplink::Signs { d, words } => Uplink::Signs {
+                d: d as usize,
+                words,
+                loss: 0.0,
+            },
         }
     }
 
@@ -104,6 +173,35 @@ impl WireUplink {
                 }
                 if nbits > 0 {
                     out.push((acc & 0xff) as u8);
+                }
+            }
+            WireUplink::Sparse { idx, vals } => {
+                assert_eq!(idx.len(), vals.len(), "sparse idx/vals must pair up");
+                out.push(TAG_SPARSE);
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                for i in idx {
+                    out.extend_from_slice(&i.to_le_bytes());
+                }
+                for v in vals {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            WireUplink::Signs { d, words } => {
+                let d = *d as usize;
+                assert_eq!(words.len(), d.div_ceil(64), "signs words must cover d bits");
+                out.push(TAG_SIGNS);
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+                let nbytes = d.div_ceil(8);
+                for i in 0..nbytes {
+                    let mut byte = ((words[i / 8] >> (8 * (i % 8))) & 0xff) as u8;
+                    // canonicalize: bits above d never reach the wire, so a
+                    // hand-built Signs uplink with a dirty tail serializes
+                    // to the same frame the sequential engine's aggregation
+                    // (which only reads bits 0..d) behaves as
+                    if i + 1 == nbytes && d % 8 != 0 {
+                        byte &= (1u8 << (d % 8)) - 1;
+                    }
+                    out.push(byte);
                 }
             }
         }
@@ -170,6 +268,48 @@ impl WireUplink {
                     s,
                     levels,
                 }
+            }
+            TAG_SPARSE => {
+                let k = cur.u32()? as usize;
+                if k > 1 << 28 {
+                    return Err(Error::invariant("absurd sparse count"));
+                }
+                let mut idx: Vec<u32> = Vec::with_capacity(k);
+                for _ in 0..k {
+                    let i = cur.u32()?;
+                    // the canonical form is strictly ascending (see
+                    // messages::Uplink::Sparse) — also rules out duplicate
+                    // indices, which aggregation would double-apply
+                    if let Some(&prev) = idx.last() {
+                        if i <= prev {
+                            return Err(Error::invariant(
+                                "sparse indices must be strictly ascending",
+                            ));
+                        }
+                    }
+                    idx.push(i);
+                }
+                let mut vals = Vec::with_capacity(k);
+                for _ in 0..k {
+                    vals.push(cur.f32()?);
+                }
+                WireUplink::Sparse { idx, vals }
+            }
+            TAG_SIGNS => {
+                let d = cur.u32()? as usize;
+                if d > 1 << 28 {
+                    return Err(Error::invariant("absurd signs dimension"));
+                }
+                let nbytes = d.div_ceil(8);
+                let mut words = vec![0u64; d.div_ceil(64)];
+                for i in 0..nbytes {
+                    let b = cur.u8()?;
+                    if i + 1 == nbytes && d % 8 != 0 && (b >> (d % 8)) != 0 {
+                        return Err(Error::invariant("nonzero sign padding bits"));
+                    }
+                    words[i / 8] |= (b as u64) << (8 * (i % 8));
+                }
+                WireUplink::Signs { d: d as u32, words }
             }
             other => return Err(Error::invariant(format!("unknown frame tag {other}"))),
         };
@@ -265,8 +405,9 @@ impl<'a> Cursor<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algo::Quantizer;
+    use crate::algo::{signsgd, Method, Quantizer};
     use crate::rng::Xoshiro256;
+    use crate::testkit::{forall, Gen};
 
     #[test]
     fn scalar_frame_is_13_bytes_at_m1() {
@@ -351,23 +492,232 @@ mod tests {
         assert!(WireUplink::decode(&model).is_err());
     }
 
+    /// One random WireUplink of each kind, including odd dimensions.
+    fn arb_uplink(g: &mut Gen<'_>) -> WireUplink {
+        let kind = g.usize_in(0, 5);
+        match kind {
+            0 => {
+                let seed = g.usize_in(0, 1 << 31) as u32;
+                let m = g.usize_in(0, 17);
+                WireUplink::Scalar {
+                    seed,
+                    rs: g.uniform_vec(m, -3.0, 3.0),
+                }
+            }
+            1 => {
+                let d = g.usize_in(0, 301);
+                WireUplink::Dense {
+                    delta: g.uniform_vec(d, -2.0, 2.0),
+                }
+            }
+            2 => {
+                let bits = *g.pick(&[2u32, 3, 8, 16]);
+                let d = g.usize_in(0, 301);
+                let qseed = g.usize_in(0, 1 << 20) as u64;
+                let mut q = Quantizer::new(bits, qseed);
+                let x = g.uniform_vec(d, -1.0, 1.0);
+                WireUplink::from_qsgd(&q.quantize(&x))
+            }
+            3 => {
+                let k = g.usize_in(0, 65);
+                // canonical frames carry strictly ascending indices
+                let mut idx = Vec::with_capacity(k);
+                let mut cur = 0u32;
+                for i in 0..k {
+                    let step = g.usize_in(0, 50) as u32;
+                    cur = if i == 0 { step } else { cur + 1 + step };
+                    idx.push(cur);
+                }
+                WireUplink::Sparse {
+                    idx,
+                    vals: g.uniform_vec(k, -2.0, 2.0),
+                }
+            }
+            _ => {
+                let d = g.usize_in(0, 301); // exercises odd d, d % 8 != 0, d = 0
+                let delta = g.uniform_vec(d, -1.0, 1.0);
+                WireUplink::Signs {
+                    d: d as u32,
+                    words: signsgd::pack_signs(&delta),
+                }
+            }
+        }
+    }
+
     #[test]
-    fn wire_bytes_match_method_accounting_for_fedscalar() {
-        use crate::algo::Method;
-        use crate::rng::VDistribution;
-        // Method::uplink_bits counts PAYLOAD (seed + scalars) = frame minus
-        // the 5 framing bytes (tag + count)
+    fn prop_every_kind_roundtrips() {
+        forall("wire roundtrip", 300, |g| {
+            let w = arb_uplink(g);
+            let bytes = w.encode();
+            let back = WireUplink::decode(&bytes)
+                .map_err(|e| format!("decode failed for {w:?}: {e}"))?;
+            if back != w {
+                return Err(format!("roundtrip mismatch: {w:?} -> {back:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_truncated_and_padded_frames_rejected() {
+        forall("wire truncation", 120, |g| {
+            let w = arb_uplink(g);
+            let bytes = w.encode();
+            // every strict prefix must fail to decode (the format is
+            // self-delimiting only through expect_end)
+            let cuts: Vec<usize> = if bytes.len() <= 24 {
+                (0..bytes.len()).collect()
+            } else {
+                vec![0, 1, 5, bytes.len() / 2, bytes.len() - 1]
+            };
+            for cut in cuts {
+                if WireUplink::decode(&bytes[..cut]).is_ok() {
+                    return Err(format!("accepted {cut}-byte prefix of {w:?}"));
+                }
+            }
+            let mut long = bytes.clone();
+            long.push(0);
+            if WireUplink::decode(&long).is_ok() {
+                return Err(format!("accepted trailing garbage on {w:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_payload_frames_roundtrip() {
+        for w in [
+            WireUplink::Scalar {
+                seed: 9,
+                rs: vec![],
+            },
+            WireUplink::Dense { delta: vec![] },
+            WireUplink::Sparse {
+                idx: vec![],
+                vals: vec![],
+            },
+            WireUplink::Signs {
+                d: 0,
+                words: vec![],
+            },
+        ] {
+            let bytes = w.encode();
+            assert_eq!(WireUplink::decode(&bytes).unwrap(), w, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn unsorted_or_duplicate_sparse_indices_rejected() {
+        for bad in [vec![5u32, 3], vec![4, 4]] {
+            let bytes = WireUplink::Sparse {
+                idx: bad,
+                vals: vec![1.0, 2.0],
+            }
+            .encode();
+            assert!(WireUplink::decode(&bytes).is_err());
+        }
+        let good = WireUplink::Sparse {
+            idx: vec![3, 5],
+            vals: vec![1.0, 2.0],
+        };
+        assert_eq!(WireUplink::decode(&good.encode()).unwrap(), good);
+    }
+
+    #[test]
+    fn nonzero_sign_padding_rejected() {
+        // d = 3 -> one byte, bits 3..8 must be zero on the wire
+        let good = WireUplink::Signs {
+            d: 3,
+            words: vec![0b101],
+        };
+        let mut bytes = good.encode();
+        assert_eq!(WireUplink::decode(&bytes).unwrap(), good);
+        // a hand-built uplink with dirty tail bits canonicalizes on encode
+        // (sequential aggregation never reads past d, so neither may the
+        // wire) ...
+        let dirty = WireUplink::Signs {
+            d: 3,
+            words: vec![0b1101],
+        };
+        assert_eq!(dirty.encode(), good.encode());
+        // ... while a frame corrupted in flight is still rejected
+        bytes[5] |= 0b1000; // flip a padding bit
+        assert!(WireUplink::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn uplink_conversion_roundtrips_and_strips_telemetry() {
+        let up = Uplink::Sparse {
+            idx: vec![1, 5],
+            vals: vec![0.5, -0.5],
+            loss: 9.9,
+        };
+        let back = WireUplink::from_uplink(&up).into_uplink();
+        match back {
+            Uplink::Sparse { idx, vals, loss } => {
+                assert_eq!(idx, vec![1, 5]);
+                assert_eq!(vals, vec![0.5, -0.5]);
+                assert_eq!(loss, 0.0); // telemetry never crosses the wire
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+    }
+
+    /// The dedup satellite, proven at the byte level: for every strategy,
+    /// frame bytes = constant framing + `Strategy::uplink_bits` payload
+    /// (rounded up to whole bytes where the payload is sub-byte packed).
+    #[test]
+    fn frame_sizes_match_strategy_uplink_bits() {
+        let d = 1990usize;
+        // FedScalar: 5 framing bytes (tag + count)
         for m in [1usize, 3, 16] {
             let w = WireUplink::Scalar {
                 seed: 1,
                 rs: vec![0.0; m],
             };
             let payload_bits = (w.encode().len() as u64 - 5) * 8;
-            let method = Method::FedScalar {
-                dist: VDistribution::Rademacher,
-                projections: m,
-            };
+            let method = Method::fedscalar(crate::rng::VDistribution::Rademacher, m);
             assert_eq!(payload_bits, method.uplink_bits(123_456));
         }
+        // FedAvg: 5 framing bytes (tag + count)
+        let w = WireUplink::Dense {
+            delta: vec![0.0; d],
+        };
+        assert_eq!(
+            (w.encode().len() as u64 - 5) * 8,
+            Method::fedavg().uplink_bits(d)
+        );
+        // QSGD: 11 framing bytes (tag + bits + s + count); packed levels
+        // round the 32 + d*bits payload up to whole bytes
+        let ones = vec![1.0f32; d];
+        for bits in [4u32, 8] {
+            let mut q = Quantizer::new(bits, 3);
+            let w = WireUplink::from_qsgd(&q.quantize(&ones));
+            let frame_payload_bits = (w.encode().len() as u64 - 11) * 8;
+            let want = Method::qsgd(bits).uplink_bits(d);
+            assert!(
+                frame_payload_bits >= want && frame_payload_bits < want + 8,
+                "bits={bits}: frame={frame_payload_bits} accounting={want}"
+            );
+        }
+        // Top-k: 5 framing bytes (tag + count)
+        for k in [1usize, 64] {
+            let w = WireUplink::Sparse {
+                idx: vec![0; k],
+                vals: vec![0.0; k],
+            };
+            assert_eq!(
+                (w.encode().len() as u64 - 5) * 8,
+                Method::topk(k).uplink_bits(d)
+            );
+        }
+        // SignSGD: 5 framing bytes (tag + d); d bits rounded up to bytes
+        let w = WireUplink::Signs {
+            d: d as u32,
+            words: signsgd::pack_signs(&ones),
+        };
+        let frame_payload_bits = (w.encode().len() as u64 - 5) * 8;
+        let want = Method::signsgd().uplink_bits(d);
+        assert!(frame_payload_bits >= want && frame_payload_bits < want + 8);
     }
 }

@@ -73,7 +73,7 @@ pub struct SuiteOptions {
 impl Default for SuiteOptions {
     fn default() -> Self {
         SuiteOptions {
-            methods: Method::PAPER_SET.to_vec(),
+            methods: Method::paper_set().to_vec(),
             runs: 10,
             backend: BackendKind::PureRust,
             out_dir: Some(PathBuf::from("results")),
@@ -95,9 +95,9 @@ pub fn run_figure_suite(base: &ExperimentConfig, opts: &SuiteOptions) -> Result<
         return Err(Error::config("need >= 1 run and >= 1 method"));
     }
     let mut per_method = Vec::new();
-    for &method in &opts.methods {
+    for method in &opts.methods {
         let mut cfg = base.clone();
-        cfg.fed.method = method;
+        cfg.fed.method = method.clone();
         let runs = if opts.parallel && opts.backend == BackendKind::PureRust && opts.runs > 1 {
             run_many_parallel(&cfg, opts.runs)?
         } else {
@@ -107,7 +107,7 @@ pub fn run_figure_suite(base: &ExperimentConfig, opts: &SuiteOptions) -> Result<
         if let Some(dir) = &opts.out_dir {
             avg.write_csv(dir.join(format!("{}.csv", method.name())))?;
         }
-        per_method.push((method, avg));
+        per_method.push((method.clone(), avg));
     }
     Ok(FigureSuite {
         per_method,
@@ -163,10 +163,10 @@ fn run_many_parallel(cfg: &ExperimentConfig, runs: usize) -> Result<Vec<RunOutpu
 }
 
 impl FigureSuite {
-    pub fn history(&self, method: Method) -> Option<&RunHistory> {
+    pub fn history(&self, method: &Method) -> Option<&RunHistory> {
         self.per_method
             .iter()
-            .find(|(m, _)| *m == method)
+            .find(|(m, _)| m == method)
             .map(|(_, h)| h)
     }
 
@@ -227,11 +227,8 @@ mod tests {
     fn tiny_opts(runs: usize, parallel: bool) -> SuiteOptions {
         SuiteOptions {
             methods: vec![
-                Method::FedScalar {
-                    dist: VDistribution::Rademacher,
-                    projections: 1,
-                },
-                Method::FedAvg,
+                Method::fedscalar(VDistribution::Rademacher, 1),
+                Method::fedavg(),
             ],
             runs,
             backend: BackendKind::PureRust,

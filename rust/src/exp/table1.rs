@@ -61,6 +61,14 @@ pub fn table1_rows_fedscalar() -> Vec<Table1Row> {
     table1_rows_for_bits(64)
 }
 
+/// Table I under ANY registered strategy's payload model at the table's
+/// d = 1,000 — the accounting comes straight from
+/// [`crate::algo::Strategy::uplink_bits`], so a strategy plugged in via
+/// the registry gets its Table-I row for free.
+pub fn table1_rows_for_method(method: &crate::algo::Method) -> Vec<Table1Row> {
+    table1_rows_for_bits(method.uplink_bits(TABLE1_DIM))
+}
+
 /// Render rows in the paper's layout.
 pub fn render(rows: &[Table1Row], title: &str) -> String {
     let mut s = format!(
@@ -130,6 +138,25 @@ mod tests {
         }
         let worst = &table1_rows_fedscalar()[0];
         assert!((worst.tdma_total_s - 640.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn method_rows_use_strategy_accounting() {
+        use crate::algo::Method;
+        use crate::rng::VDistribution;
+        // the generic path reproduces both hand-built tables exactly...
+        assert_eq!(table1_rows_for_method(&Method::fedavg()), table1_rows());
+        assert_eq!(
+            table1_rows_for_method(&Method::fedscalar(VDistribution::Rademacher, 1)),
+            table1_rows_fedscalar()
+        );
+        // ...and ranks the compression ladder: fedscalar < signsgd < qsgd < fedavg
+        let upload = |m: &Method| table1_rows_for_method(m)[0].upload_per_round_s;
+        let fs = upload(&Method::fedscalar(VDistribution::Rademacher, 1));
+        let sg = upload(&Method::signsgd());
+        let q8 = upload(&Method::qsgd(8));
+        let fa = upload(&Method::fedavg());
+        assert!(fs < sg && sg < q8 && q8 < fa, "{fs} {sg} {q8} {fa}");
     }
 
     #[test]

@@ -13,10 +13,12 @@
 //! ## Architecture (three layers, Python never on the round path)
 //!
 //! * **L3 — this crate.** The federated coordinator: round engine, network
-//!   simulator (bandwidth / TDMA / energy, paper eqs. 12–13), strategies
-//!   (FedScalar-{Normal,Rademacher,multi-projection}, FedAvg, QSGD),
-//!   metrics, CLI, and the experiment harness that regenerates every table
-//!   and figure of the paper.
+//!   simulator (bandwidth / TDMA / energy, paper eqs. 12–13), a pluggable
+//!   strategy registry ([`algo::Strategy`]) shipping
+//!   FedScalar-{Normal,Rademacher,multi-projection}, FedAvg, QSGD, Top-k
+//!   (error feedback), and SignSGD (majority vote), metrics, CLI, and the
+//!   experiment harness that regenerates every table and figure of the
+//!   paper.
 //! * **L2 — JAX model** (`python/compile/`), AOT-lowered once to HLO text
 //!   artifacts that [`runtime::XlaBackend`] loads and executes via PJRT.
 //! * **L1 — Pallas kernels** (projection, reconstruction, fused linear

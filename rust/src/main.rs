@@ -117,7 +117,7 @@ fn run_command(cmd: &str, rest: Vec<String>) -> Result<()> {
 
 fn cmd_train(rest: Vec<String>) -> Result<()> {
     let a = common_args(Args::new("fedscalar train", "one federated training run"))
-        .opt("method", "fedscalar-rademacher", "strategy (fedscalar-normal|fedscalar-rademacher[-m<k>]|fedavg|qsgd[bits])")
+        .opt("method", "fedscalar-rademacher", "strategy (fedscalar-normal|fedscalar-rademacher[-m<k>]|fedavg|qsgd[bits]|topk[k]|signsgd[-g<gamma>]|any registered strategy)")
         .opt("run-seed", "0", "run seed")
         .opt("out", "results/train.csv", "history CSV output path")
         .parse(rest)?;
@@ -157,7 +157,7 @@ fn cmd_suite(rest: Vec<String>) -> Result<()> {
     let backend = BackendKind::parse(&a.get("backend"))
         .ok_or_else(|| Error::config("bad --backend (xla|pure-rust)"))?;
     let methods = if a.get("methods") == "paper" {
-        Method::PAPER_SET.to_vec()
+        Method::paper_set().to_vec()
     } else {
         a.get("methods")
             .split(',')

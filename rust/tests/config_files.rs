@@ -15,10 +15,7 @@ fn paper_toml_matches_section_iii() {
     assert!((cfg.fed.alpha - 0.003).abs() < 1e-9);
     assert_eq!(
         cfg.fed.method,
-        Method::FedScalar {
-            dist: VDistribution::Rademacher,
-            projections: 1
-        }
+        Method::fedscalar(VDistribution::Rademacher, 1)
     );
     assert_eq!(cfg.network.channel.nominal_bps, 100_000.0);
     assert_eq!(cfg.network.p_tx_watts, 2.0);

@@ -19,14 +19,7 @@ fn cfg(method: Method, rounds: usize, agents: usize) -> ExperimentConfig {
 
 #[test]
 fn fedscalar_distributed_equals_sequential() {
-    let c = cfg(
-        Method::FedScalar {
-            dist: VDistribution::Rademacher,
-            projections: 1,
-        },
-        12,
-        5,
-    );
+    let c = cfg(Method::fedscalar(VDistribution::Rademacher, 1), 12, 5);
     let seq = run_pure_rust(&c, 4).unwrap();
     let dist = DistributedEngine::from_config(&c, 4).unwrap().run().unwrap();
     assert!(
@@ -37,7 +30,7 @@ fn fedscalar_distributed_equals_sequential() {
 
 #[test]
 fn fedavg_distributed_equals_sequential() {
-    let c = cfg(Method::FedAvg, 8, 4);
+    let c = cfg(Method::fedavg(), 8, 4);
     let seq = run_pure_rust(&c, 1).unwrap();
     let dist = DistributedEngine::from_config(&c, 1).unwrap().run().unwrap();
     assert!(same_histories(&seq, &dist));
@@ -47,7 +40,7 @@ fn fedavg_distributed_equals_sequential() {
 fn qsgd_distributed_runs_and_learns() {
     // QSGD's stochastic rounding streams differ per worker, so we check
     // behaviour rather than bit-equality.
-    let mut c = cfg(Method::Qsgd { bits: 8 }, 60, 4);
+    let mut c = cfg(Method::qsgd(8), 60, 4);
     c.fed.alpha = 0.02;
     c.fed.eval_every = 30;
     let h = DistributedEngine::from_config(&c, 2).unwrap().run().unwrap();
@@ -59,10 +52,7 @@ fn frame_bytes_measured_on_the_wire() {
     let rounds = 7usize;
     let agents = 3usize;
     let c = cfg(
-        Method::FedScalar {
-            dist: VDistribution::Normal,
-            projections: 1,
-        },
+        Method::fedscalar(VDistribution::Normal, 1),
         rounds,
         agents,
     );
@@ -83,14 +73,7 @@ fn frame_bytes_measured_on_the_wire() {
 
 #[test]
 fn multi_projection_distributed_equals_sequential() {
-    let c = cfg(
-        Method::FedScalar {
-            dist: VDistribution::Rademacher,
-            projections: 4,
-        },
-        6,
-        3,
-    );
+    let c = cfg(Method::fedscalar(VDistribution::Rademacher, 4), 6, 3);
     let seq = run_pure_rust(&c, 9).unwrap();
     let dist = DistributedEngine::from_config(&c, 9).unwrap().run().unwrap();
     assert!(same_histories(&seq, &dist));
@@ -98,7 +81,35 @@ fn multi_projection_distributed_equals_sequential() {
 
 #[test]
 fn partial_participation_rejected_for_now() {
-    let mut c = cfg(Method::FedAvg, 2, 3);
+    let mut c = cfg(Method::fedavg(), 2, 3);
     c.fed.participation = 0.5;
     assert!(DistributedEngine::from_config(&c, 0).is_err());
+}
+
+#[test]
+fn plugin_strategies_distributed_equal_sequential() {
+    // Top-k (stateful error feedback, client-side) and SignSGD (stateless)
+    // are deterministic, so the frame-passing engine must reproduce the
+    // sequential engine bit for bit — through the registry, with zero
+    // coordinator dispatch code.
+    for method in [Method::topk(16), Method::signsgd()] {
+        let c = cfg(method, 8, 3);
+        let seq = run_pure_rust(&c, 3).unwrap();
+        let dist = DistributedEngine::from_config(&c, 3).unwrap().run().unwrap();
+        assert!(same_histories(&seq, &dist), "{}", c.fed.method.name());
+    }
+}
+
+#[test]
+fn plugin_strategy_bits_charged_on_distributed_path() {
+    let rounds = 6usize;
+    let agents = 3usize;
+    let c = cfg(Method::topk(16), rounds, agents);
+    let h = DistributedEngine::from_config(&c, 1).unwrap().run().unwrap();
+    let per_agent = c.fed.method.uplink_bits(c.model.param_dim());
+    assert_eq!(per_agent, 16 * 64);
+    assert_eq!(
+        h.records.last().unwrap().cum_bits,
+        (rounds * agents) as f64 * per_agent as f64
+    );
 }

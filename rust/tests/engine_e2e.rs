@@ -17,7 +17,7 @@ fn base_cfg() -> ExperimentConfig {
 #[test]
 fn fedavg_converges_on_synthetic() {
     let mut cfg = base_cfg();
-    cfg.fed.method = Method::FedAvg;
+    cfg.fed.method = Method::fedavg();
     cfg.fed.rounds = 250;
     cfg.fed.eval_every = 50;
     cfg.fed.alpha = 0.02;
@@ -32,12 +32,9 @@ fn fedscalar_learns_and_uploads_3_orders_less() {
     cfg.fed.rounds = 600;
     cfg.fed.eval_every = 100;
     cfg.fed.alpha = 0.02;
-    cfg.fed.method = Method::FedScalar {
-        dist: VDistribution::Rademacher,
-        projections: 1,
-    };
+    cfg.fed.method = Method::fedscalar(VDistribution::Rademacher, 1);
     let h_fs = run_pure_rust(&cfg, 1).unwrap();
-    cfg.fed.method = Method::FedAvg;
+    cfg.fed.method = Method::fedavg();
     cfg.fed.rounds = 600;
     let h_fa = run_pure_rust(&cfg, 1).unwrap();
     // learning happened
@@ -58,10 +55,7 @@ fn multi_projection_improves_per_round_progress() {
     cfg.fed.eval_every = 300;
     cfg.fed.alpha = 0.02;
     let mut acc_m = |m: usize| {
-        cfg.fed.method = Method::FedScalar {
-            dist: VDistribution::Rademacher,
-            projections: m,
-        };
+        cfg.fed.method = Method::fedscalar(VDistribution::Rademacher, m);
         let accs: Vec<f64> = (0..3)
             .map(|s| run_pure_rust(&cfg, 100 + s).unwrap().final_accuracy())
             .collect();
@@ -78,7 +72,7 @@ fn multi_projection_improves_per_round_progress() {
 #[test]
 fn tdma_slower_than_concurrent_same_bits() {
     let mut cfg = base_cfg();
-    cfg.fed.method = Method::FedAvg;
+    cfg.fed.method = Method::fedavg();
     cfg.fed.rounds = 10;
     cfg.fed.eval_every = 10;
     cfg.network.channel.sigma = 0.0;
@@ -113,12 +107,9 @@ fn energy_ordering_follows_payload() {
             .unwrap()
             .cum_energy_joules
     };
-    let e_fs = energy(Method::FedScalar {
-        dist: VDistribution::Rademacher,
-        projections: 1,
-    });
-    let e_q = energy(Method::Qsgd { bits: 8 });
-    let e_fa = energy(Method::FedAvg);
+    let e_fs = energy(Method::fedscalar(VDistribution::Rademacher, 1));
+    let e_q = energy(Method::qsgd(8));
+    let e_fa = energy(Method::fedavg());
     assert!(e_fs < e_q && e_q < e_fa, "fs={e_fs} q={e_q} fa={e_fa}");
     // deterministic channel: exact ratios = payload ratios
     let d = 1990.0;
@@ -132,7 +123,7 @@ fn dirichlet_noniid_still_runs() {
     cfg.dirichlet_alpha = Some(0.5);
     cfg.fed.rounds = 20;
     cfg.fed.eval_every = 20;
-    cfg.fed.method = Method::FedAvg;
+    cfg.fed.method = Method::fedavg();
     let h = run_pure_rust(&cfg, 7).unwrap();
     assert!(!h.records.is_empty());
 }
@@ -144,7 +135,7 @@ fn suite_produces_csvs() {
     cfg.fed.rounds = 6;
     cfg.fed.eval_every = 3;
     let opts = SuiteOptions {
-        methods: vec![Method::FedAvg, Method::Qsgd { bits: 8 }],
+        methods: vec![Method::fedavg(), Method::qsgd(8)],
         runs: 2,
         backend: BackendKind::PureRust,
         out_dir: Some(dir.clone()),
@@ -164,7 +155,7 @@ fn checkpoint_save_restore_resume() {
     use fedscalar::coordinator::{Checkpoint, Engine};
     use fedscalar::exp::figures::{make_backend, BackendKind};
     let mut c = base_cfg();
-    c.fed.method = Method::FedAvg;
+    c.fed.method = Method::fedavg();
     c.fed.rounds = 20;
     c.fed.eval_every = 10;
     c.fed.alpha = 0.02;
@@ -191,7 +182,7 @@ fn checkpoint_save_restore_resume() {
     assert!(h.records.last().unwrap().train_loss < 2.4);
     // method mismatch refused
     let mut c3 = c.clone();
-    c3.fed.method = Method::Qsgd { bits: 8 };
+    c3.fed.method = Method::qsgd(8);
     let be3 = make_backend(BackendKind::PureRust, &c3).unwrap();
     let mut e3 = Engine::from_config(&c3, be3, 3).unwrap();
     assert!(e3.restore(&loaded).is_err());
@@ -203,7 +194,7 @@ fn eval_grid_respects_eval_every() {
     let mut cfg = base_cfg();
     cfg.fed.rounds = 25;
     cfg.fed.eval_every = 10;
-    cfg.fed.method = Method::FedAvg;
+    cfg.fed.method = Method::fedavg();
     let h = run_pure_rust(&cfg, 8).unwrap();
     let rounds: Vec<usize> = h.records.iter().map(|r| r.round).collect();
     assert_eq!(rounds, vec![0, 10, 20, 24]); // every 10 + final round

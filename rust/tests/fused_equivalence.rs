@@ -136,18 +136,14 @@ fn small_cfg(method: Method) -> ExperimentConfig {
 #[test]
 fn parallel_engine_matches_serial_run_history() {
     for method in [
-        Method::FedScalar {
-            dist: VDistribution::Rademacher,
-            projections: 1,
-        },
-        Method::FedScalar {
-            dist: VDistribution::Normal,
-            projections: 4,
-        },
-        Method::FedAvg,
-        Method::Qsgd { bits: 8 },
+        Method::fedscalar(VDistribution::Rademacher, 1),
+        Method::fedscalar(VDistribution::Normal, 4),
+        Method::fedavg(),
+        Method::qsgd(8),
+        Method::topk(32),
+        Method::signsgd(),
     ] {
-        let mut cfg = small_cfg(method);
+        let mut cfg = small_cfg(method.clone());
         cfg.fed.threads = 1;
         let serial = run_pure_rust(&cfg, 77).unwrap();
         for threads in [2, 4, 13] {
@@ -164,10 +160,7 @@ fn parallel_engine_matches_serial_run_history() {
 
 #[test]
 fn parallel_engine_matches_serial_under_partial_participation() {
-    let mut cfg = small_cfg(Method::FedScalar {
-        dist: VDistribution::Rademacher,
-        projections: 2,
-    });
+    let mut cfg = small_cfg(Method::fedscalar(VDistribution::Rademacher, 2));
     cfg.fed.num_agents = 9;
     cfg.fed.participation = 0.5;
     cfg.fed.threads = 1;

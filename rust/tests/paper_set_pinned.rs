@@ -1,0 +1,222 @@
+//! Pins `Method::paper_set()` run histories across the strategy-trait
+//! redesign: the engine must produce BIT-IDENTICAL `RunHistory` records
+//! to the pre-refactor (PR-1) round loop for all four paper methods.
+//!
+//! The pre-refactor engine is re-implemented here, verbatim, from public
+//! primitives — the same seed derivations (`0xd0d0` params, `0x9594`
+//! quantizer, per-client samplers), the same serial client order, the
+//! same netsim charge sequence (one channel draw per uplink), the same
+//! aggregation arithmetic — so any deviation introduced by the strategy
+//! layer (RNG re-seeding, reordered float reductions, changed accounting)
+//! fails this suite bit-for-bit.
+
+use fedscalar::algo::{Method, Quantizer};
+use fedscalar::config::ExperimentConfig;
+use fedscalar::coordinator::engine::{load_data, run_pure_rust};
+use fedscalar::coordinator::ClientState;
+use fedscalar::data::iid_partition;
+use fedscalar::metrics::{same_histories, RoundRecord, RunHistory};
+use fedscalar::netsim::latency::t_other_seconds;
+use fedscalar::netsim::{energy_joules, latency, upload_seconds, Channel};
+use fedscalar::rng::{SplitMix64, VDistribution};
+use fedscalar::runtime::{Backend, PureRustBackend};
+use fedscalar::tensor;
+use std::sync::Arc;
+
+/// The closed set of behaviours the seed engine dispatched on.
+#[derive(Clone, Copy)]
+enum Kind {
+    FedScalar(VDistribution),
+    FedAvg,
+    Qsgd,
+}
+
+fn kind_of(name: &str) -> Kind {
+    match name {
+        "fedscalar-normal" => Kind::FedScalar(VDistribution::Normal),
+        "fedscalar-rademacher" => Kind::FedScalar(VDistribution::Rademacher),
+        "fedavg" => Kind::FedAvg,
+        "qsgd8" => Kind::Qsgd,
+        other => panic!("not a paper-set method: {other}"),
+    }
+}
+
+/// The PR-1 engine, reproduced: serial client loop (the engine's
+/// parallel/batched paths are pinned bit-identical to it by the
+/// fused-equivalence suite), hand dispatch, inline accounting.
+fn reference_run(cfg: &ExperimentConfig, run_seed: u64) -> RunHistory {
+    let kind = kind_of(&cfg.fed.method.name());
+    let (s, b, alpha) = (cfg.fed.local_steps, cfg.fed.batch_size, cfg.fed.alpha);
+    let (train, test) = load_data(cfg).unwrap();
+    let train = Arc::new(train);
+    let partition = iid_partition(train.len(), cfg.fed.num_agents, run_seed);
+    let mut clients: Vec<ClientState> = partition
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(id, shard)| ClientState::new(id, train.clone(), shard.clone(), s, b, run_seed))
+        .collect();
+    let mut backend = PureRustBackend::new(&cfg.model);
+    backend.set_shape(s, b);
+    let mut params = backend
+        .init_params(SplitMix64::derive(run_seed, 0xd0d0))
+        .unwrap();
+    let d = params.len();
+    let t_other_s = t_other_seconds(
+        &cfg.network.latency,
+        cfg.model.param_dim(),
+        cfg.fed.num_agents,
+        cfg.network.channel.nominal_bps,
+        cfg.network.schedule,
+    );
+    let mut channel = Channel::new(cfg.network.channel.clone(), run_seed);
+    // the seed engine built this for EVERY method with exactly this seed
+    let mut quantizer = Quantizer::new(8, SplitMix64::derive(run_seed, 0x9594));
+
+    let per_agent_bits: u64 = match kind {
+        Kind::FedScalar(_) => 32 + 32,
+        Kind::FedAvg => (d as u64) * 32,
+        Kind::Qsgd => 32 + (d as u64) * 8,
+    };
+
+    let mut history = RunHistory::new(cfg.fed.method.name());
+    let (mut cum_bits, mut cum_secs, mut cum_joules) = (0.0f64, 0.0f64, 0.0f64);
+    for k in 0..cfg.fed.rounds {
+        let eval = k % cfg.fed.eval_every == 0 || k + 1 == cfg.fed.rounds;
+        // --- client stages, serial, in client order ---------------------
+        let mut losses: Vec<f32> = Vec::new();
+        let mut scalar_ups = Vec::new();
+        let mut dense: Vec<Vec<f32>> = Vec::new();
+        let mut packets = Vec::new();
+        for c in clients.iter_mut() {
+            c.fill_round_batches(s, b);
+            match kind {
+                Kind::FedScalar(dist) => {
+                    let seed = c.next_projection_seed();
+                    let up = backend
+                        .client_fedscalar(&params, &c.xb, &c.yb, seed, alpha, dist, 1)
+                        .unwrap();
+                    losses.push(up.loss);
+                    scalar_ups.push(up);
+                }
+                Kind::FedAvg => {
+                    let (delta, loss) = backend
+                        .client_delta(&params, &c.xb, &c.yb, alpha)
+                        .unwrap();
+                    losses.push(loss);
+                    dense.push(delta);
+                }
+                Kind::Qsgd => {
+                    let (delta, loss) = backend
+                        .client_delta(&params, &c.xb, &c.yb, alpha)
+                        .unwrap();
+                    losses.push(loss);
+                    packets.push(quantizer.quantize(&delta));
+                }
+            }
+        }
+        let n = clients.len();
+        // --- netsim accounting: one channel draw per uplink, in order ---
+        let mut per_agent_seconds = Vec::with_capacity(n);
+        let mut round_bits = 0u64;
+        let mut round_energy = 0.0f64;
+        for _ in 0..n {
+            let rate = channel.sample_rate_bps();
+            let secs = upload_seconds(per_agent_bits, rate);
+            round_energy += energy_joules(cfg.network.p_tx_watts, per_agent_bits, rate);
+            per_agent_seconds.push(secs);
+            round_bits += per_agent_bits;
+        }
+        let round_seconds =
+            latency::round_wall_time(&per_agent_seconds, cfg.network.schedule, t_other_s);
+        cum_bits += round_bits as f64;
+        cum_secs += round_seconds;
+        cum_joules += round_energy;
+        // --- aggregate + apply (the seed server.rs, inlined) ------------
+        let train_loss = losses.iter().map(|l| *l as f64).sum::<f64>() / n as f64;
+        match kind {
+            Kind::FedScalar(dist) => {
+                let ghat = backend.server_reconstruct(&scalar_ups, dist).unwrap();
+                tensor::axpy(1.0, &ghat, &mut params);
+            }
+            Kind::FedAvg => {
+                let inv = 1.0 / n as f32;
+                for delta in &dense {
+                    tensor::axpy(inv, delta, &mut params);
+                }
+            }
+            Kind::Qsgd => {
+                let inv = 1.0 / n as f32;
+                let mut scratch = vec![0.0f32; d];
+                for p in &packets {
+                    quantizer.dequantize_into(p, &mut scratch);
+                    tensor::axpy(inv, &scratch, &mut params);
+                }
+            }
+        }
+        // --- evaluation -------------------------------------------------
+        if eval {
+            let (test_loss, test_acc) = backend.evaluate(&params, &test.x, &test.y).unwrap();
+            history.push(RoundRecord {
+                round: k,
+                train_loss,
+                test_loss: test_loss as f64,
+                test_acc: test_acc as f64,
+                cum_bits,
+                cum_sim_seconds: cum_secs,
+                cum_energy_joules: cum_joules,
+                host_ms: 0.0, // excluded from same_histories
+            });
+        }
+    }
+    history
+}
+
+fn pin_cfg(method: Method) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.fed.method = method;
+    cfg.fed.num_agents = 4;
+    cfg.fed.rounds = 12;
+    cfg.fed.eval_every = 3;
+    cfg
+}
+
+#[test]
+fn paper_set_histories_bit_identical_to_pre_refactor_engine() {
+    for method in Method::paper_set() {
+        for run_seed in [7u64, 13] {
+            let cfg = pin_cfg(method.clone());
+            let want = reference_run(&cfg, run_seed);
+            let got = run_pure_rust(&cfg, run_seed).unwrap();
+            assert!(
+                same_histories(&want, &got),
+                "{} seed={run_seed}: strategy engine diverged from the \
+                 pre-refactor reference",
+                method.name()
+            );
+            // ... and the x-axis actually moved (guard against a trivially
+            // empty comparison)
+            assert!(want.records.last().unwrap().cum_bits > 0.0);
+        }
+    }
+}
+
+#[test]
+fn paper_set_distributed_fedscalar_fedavg_also_pinned() {
+    // the frame-passing engine holds the same bit-identity for the
+    // deterministic methods (QSGD's per-worker rounding streams differ by
+    // design, as documented in coordinator::distributed)
+    use fedscalar::coordinator::DistributedEngine;
+    for method in [
+        Method::fedscalar(VDistribution::Rademacher, 1),
+        Method::fedavg(),
+    ] {
+        let cfg = pin_cfg(method);
+        let want = reference_run(&cfg, 7);
+        let got = DistributedEngine::from_config(&cfg, 7)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(same_histories(&want, &got), "{}", cfg.fed.method.name());
+    }
+}

@@ -36,19 +36,25 @@ fn prop_uplink_bits_positive_and_fedscalar_constant() {
     forall("payload accounting", 100, |g| {
         let d = g.usize_in(1, 1 << 22);
         let m = g.usize_in(1, 32);
-        let fs = Method::FedScalar {
-            dist: VDistribution::Rademacher,
-            projections: m,
-        };
+        let fs = Method::fedscalar(VDistribution::Rademacher, m);
         if fs.uplink_bits(d) != 32 + 32 * m as u64 {
             return Err("fedscalar bits depend on d".into());
         }
-        if Method::FedAvg.uplink_bits(d) != 32 * d as u64 {
+        if Method::fedavg().uplink_bits(d) != 32 * d as u64 {
             return Err("fedavg bits wrong".into());
         }
-        let q = Method::Qsgd { bits: 8 }.uplink_bits(d);
-        if q <= 32 || q >= Method::FedAvg.uplink_bits(d).max(65) {
+        let q = Method::qsgd(8).uplink_bits(d);
+        if q <= 32 || q >= Method::fedavg().uplink_bits(d).max(65) {
             return Err(format!("qsgd bits {q} out of range for d={d}"));
+        }
+        // the plug-in baselines: topk is k pairs capped at d; signsgd is
+        // exactly one bit per coordinate
+        let k = g.usize_in(1, 256);
+        if Method::topk(k).uplink_bits(d) != (k.min(d) as u64) * 64 {
+            return Err("topk bits wrong".into());
+        }
+        if Method::signsgd().uplink_bits(d) != d as u64 {
+            return Err("signsgd bits wrong".into());
         }
         Ok(())
     });

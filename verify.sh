@@ -33,6 +33,14 @@ else
     echo "(cargo fmt unavailable — skipping format check)"
 fi
 
+# lints gate when clippy is installed (build containers without a
+# toolchain skip the whole script anyway; see .claude/skills/verify)
+if cargo clippy --version >/dev/null 2>&1; then
+    step cargo clippy --all-targets -- -D warnings
+else
+    echo "(cargo clippy unavailable — skipping lint check)"
+fi
+
 echo
 echo "==> FEDSCALAR_BENCH_QUICK=1 cargo bench --bench hotpath"
 if ! FEDSCALAR_BENCH_QUICK=1 cargo bench --bench hotpath; then
