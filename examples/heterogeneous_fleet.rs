@@ -1,0 +1,123 @@
+//! Heterogeneous-fleet scenario sweep: sampling policy × availability
+//! trace, on a fleet with a 4x compute-speed spread and a straggler
+//! deadline — the regime the paper's all-clients-every-round §III setup
+//! cannot express, and where FedScalar's dimension-free uplink matters
+//! most (a dropped 64-bit upload wastes 1.28 mJ; a dropped FedAvg upload
+//! wastes a thousand times that).
+//!
+//! Runs a seeded sweep over {full, uniform-k, deadline-aware} client
+//! sampling × {always-on, duty-cycle, churn} availability and writes a
+//! per-scenario summary CSV (wall-clock, energy, accuracy, bits).
+//!
+//!     cargo run --release --example heterogeneous_fleet
+//!     cargo run --release --example heterogeneous_fleet -- --rounds 300 --out results/fleet.csv
+
+use fedscalar::algo::Method;
+use fedscalar::config::{DataSource, ExperimentConfig};
+use fedscalar::coordinator::engine::run_pure_rust;
+use fedscalar::error::Result;
+use fedscalar::rng::VDistribution;
+use fedscalar::simnet::{Availability, SamplerPolicy};
+use fedscalar::util::cli::Args;
+use fedscalar::util::csv::CsvWriter;
+
+fn main() -> Result<()> {
+    fedscalar::util::logger::init_from_env();
+    let a = Args::new(
+        "heterogeneous_fleet",
+        "sampling-policy x availability sweep on a heterogeneous fleet",
+    )
+    .opt("rounds", "150", "rounds per scenario run")
+    .opt("agents", "12", "fleet size")
+    .opt("alpha", "0.01", "local stepsize")
+    .opt("run-seed", "0", "run seed")
+    .opt("out", "results/heterogeneous_fleet.csv", "summary CSV path")
+    .parse(std::env::args().skip(1))?;
+
+    let samplers = [
+        SamplerPolicy::Full,
+        SamplerPolicy::UniformK(6),
+        SamplerPolicy::DeadlineAware { target: 6, over: 2 },
+    ];
+    let traces = [
+        Availability::AlwaysOn,
+        Availability::DutyCycle { period: 3, on: 2 },
+        Availability::Churn { p_off: 0.2 },
+    ];
+
+    let mut base = ExperimentConfig::smoke();
+    base.data = DataSource::Synthetic;
+    base.fed.method = Method::fedscalar(VDistribution::Rademacher, 1);
+    base.fed.num_agents = a.get_usize("agents")?;
+    base.fed.rounds = a.get_usize("rounds")?;
+    base.fed.eval_every = (base.fed.rounds / 10).max(1);
+    base.fed.alpha = a.get_f64("alpha")? as f32;
+    base.scenario.fleet.compute_spread = 3.0; // multipliers in [1/4, 4]
+    let run_seed = a.get_u64("run-seed")?;
+
+    // calibrate the deadline from the always-on full-participation pace:
+    // tight enough that the slowest quartile misses it
+    let probe = run_pure_rust(&base, run_seed)?;
+    let mean_round =
+        probe.records.last().unwrap().cum_sim_seconds / base.fed.rounds as f64;
+    let deadline = 0.75 * mean_round;
+    println!(
+        "fleet: N={} compute spread 4x, deadline {:.3} s (75% of mean round {:.3} s)\n",
+        base.fed.num_agents, deadline, mean_round
+    );
+
+    let out_path = a.get("out");
+    let mut csv = CsvWriter::create(
+        &out_path,
+        &[
+            "sampler",
+            "availability",
+            "final_acc",
+            "sim_seconds",
+            "energy_joules",
+            "uplink_bits",
+            "downlink_bits",
+        ],
+    )?;
+    println!(
+        "{:<14} {:<10} {:>9} {:>12} {:>11} {:>12} {:>14}",
+        "sampler", "avail", "acc", "sim_s", "joules", "up_bits", "down_bits"
+    );
+    for sampler in samplers {
+        for trace in traces {
+            let mut cfg = base.clone();
+            cfg.scenario.sampler = sampler;
+            cfg.scenario.availability = trace;
+            cfg.scenario.deadline_s = Some(deadline);
+            let h = run_pure_rust(&cfg, run_seed)?;
+            let last = h.records.last().unwrap();
+            println!(
+                "{:<14} {:<10} {:>8.1}% {:>12.2} {:>11.4} {:>12} {:>14}",
+                sampler.name(),
+                trace.name(),
+                100.0 * last.test_acc,
+                last.cum_sim_seconds,
+                last.cum_energy_joules,
+                last.cum_bits,
+                last.cum_downlink_bits,
+            );
+            csv.row_str(&[
+                sampler.name(),
+                trace.name(),
+                format!("{:.4}", last.test_acc),
+                format!("{:.6}", last.cum_sim_seconds),
+                format!("{:.6}", last.cum_energy_joules),
+                format!("{}", last.cum_bits),
+                format!("{}", last.cum_downlink_bits),
+            ])?;
+        }
+    }
+    csv.flush()?;
+    println!(
+        "\nsummary written to {out_path}\n\
+         deadline-aware over-selection keeps the round tight without starving\n\
+         aggregation; FedScalar's 64-bit uplink makes every dropped straggler\n\
+         nearly free in energy — rerun with --rounds for tighter accuracy."
+    );
+    Ok(())
+}

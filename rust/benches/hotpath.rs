@@ -207,6 +207,43 @@ fn main() {
         eng_par.run_round(0, false).unwrap()
     });
 
+    header("simnet round lifecycle (20 clients, event-driven netsim)");
+    {
+        use fedscalar::simnet::{
+            Availability, FleetConfig, Sampler, SamplerPolicy, ScenarioConfig, SimNet,
+        };
+        let network = fedscalar::netsim::NetworkConfig::default();
+        let active20: Vec<usize> = (0..20).collect();
+        // the legacy path: homogeneous, always-on, no deadline — what
+        // every §III run now routes through
+        let mut legacy = SimNet::legacy(&network, d, 20, 0);
+        b.run("simnet round 20 clients legacy tdma", || {
+            legacy.run_round(&active20, 64, (d as u64) * 32).round_seconds
+        });
+        // the full scenario surface: heterogeneous fleet, churn,
+        // deadline-aware over-selection, straggler cutoff
+        let scenario = ScenarioConfig {
+            sampler: SamplerPolicy::DeadlineAware { target: 10, over: 4 },
+            availability: Availability::Churn { p_off: 0.2 },
+            deadline_s: Some(0.5),
+            downlink_bps: 1e6,
+            fleet: FleetConfig {
+                compute_spread: 2.0,
+                power_spread: 0.5,
+                rate_spread: 0.5,
+            },
+        };
+        let mut hetero = SimNet::new(&network, &scenario, d, 20, 0);
+        let mut sampler = Sampler::new(scenario.sampler, 0);
+        let mut round = 0u64;
+        b.run("simnet round 20 clients hetero deadline churn", || {
+            let avail = hetero.available(round);
+            let active = sampler.select(&avail, hetero.profiles());
+            round += 1;
+            hetero.run_round(&active, 64, (d as u64) * 32).round_seconds
+        });
+    }
+
     header("plug-in strategy encode/aggregate at d=1990 (topk64, signsgd)");
     // encode = the strategy's client-side compression of one delta
     // (includes the Vec clone handed to encode_delta, ~8 KiB)

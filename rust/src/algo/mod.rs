@@ -21,5 +21,5 @@ pub use local_sgd::LocalSgd;
 pub use method::Method;
 pub use projection::{decode_all, decode_into, encode, encode_multi, Projector};
 pub use qsgd::{QsgdPacket, Quantizer};
-pub use strategy::{LocalStage, Strategy, BITS_PER_FLOAT, BITS_PER_SEED};
+pub use strategy::{LocalStage, Strategy, StrategyInfo, BITS_PER_FLOAT, BITS_PER_SEED};
 pub use svrg::LocalSvrg;

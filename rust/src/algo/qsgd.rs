@@ -43,6 +43,17 @@ impl Quantizer {
         (1u16 << (self.bits - 1)) - 1
     }
 
+    /// Snapshot the stochastic-rounding stream position (checkpointing).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Resume the stochastic-rounding stream from a [`Self::rng_state`]
+    /// snapshot.
+    pub fn restore_rng_state(&mut self, s: [u64; 4]) {
+        self.rng = Xoshiro256::from_state(s);
+    }
+
     /// Stochastically quantize `x`.
     pub fn quantize(&mut self, x: &[f32]) -> QsgdPacket {
         let s = self.levels();
@@ -153,6 +164,31 @@ impl crate::algo::Strategy for QsgdStrategy {
         }
         Ok(loss)
     }
+
+    /// Checkpoint the rounding-stream position, so a resumed run draws
+    /// the continuation of the stream instead of restarting it.
+    fn save_state(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32);
+        for w in self.quantizer.rng_state() {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> crate::error::Result<()> {
+        if bytes.is_empty() {
+            return Ok(()); // fresh start
+        }
+        if bytes.len() != 32 {
+            return Err(crate::error::Error::invariant("bad qsgd state size"));
+        }
+        let mut s = [0u64; 4];
+        for (i, w) in s.iter_mut().enumerate() {
+            *w = u64::from_le_bytes(bytes[8 * i..8 * i + 8].try_into().unwrap());
+        }
+        self.quantizer.restore_rng_state(s);
+        Ok(())
+    }
 }
 
 /// Build the registry handle.
@@ -214,6 +250,36 @@ mod tests {
                 other => panic!("wrong kind {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn save_restore_continues_rounding_stream() {
+        use crate::algo::Strategy;
+        let delta: Vec<f32> = (0..200).map(|i| ((i % 13) as f32 - 6.0) / 7.0).collect();
+        let mut a = QsgdStrategy::new(8, 5);
+        a.encode_delta(0, delta.clone(), 0.0).unwrap(); // advance the stream
+        let state = a.save_state();
+        assert_eq!(state.len(), 32);
+        // a fresh instance (the resume path) restores the position...
+        let mut b = QsgdStrategy::new(8, 5);
+        b.restore_state(&state).unwrap();
+        // ...and continues bit-identically to the uninterrupted stream
+        let want = match a.encode_delta(0, delta.clone(), 0.0).unwrap() {
+            crate::coordinator::messages::Uplink::Quantized { packet, .. } => packet,
+            other => panic!("wrong kind {other:?}"),
+        };
+        let got = match b.encode_delta(0, delta.clone(), 0.0).unwrap() {
+            crate::coordinator::messages::Uplink::Quantized { packet, .. } => packet,
+            other => panic!("wrong kind {other:?}"),
+        };
+        assert_eq!(want, got);
+        // a fresh instance WITHOUT the restore sits at a different stream
+        // position (the old silent reset this hook exists to prevent)
+        let fresh = QsgdStrategy::new(8, 5);
+        assert_ne!(fresh.save_state(), state);
+        // malformed blobs rejected; empty accepted as fresh start
+        assert!(QsgdStrategy::new(8, 5).restore_state(&[1, 2, 3]).is_err());
+        assert!(QsgdStrategy::new(8, 5).restore_state(&[]).is_ok());
     }
 
     #[test]

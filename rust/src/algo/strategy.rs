@@ -101,6 +101,13 @@ pub trait Strategy: Send {
     /// place. Returns the mean client-reported loss of the round (f64 —
     /// full precision so the sequential and distributed engines agree
     /// bit-for-bit). Must reject an empty round and mixed uplink kinds.
+    ///
+    /// The return value must be [`mean_loss`] of the given uplinks (the
+    /// unweighted mean, in uplink order): the sequential engine records
+    /// this return as the round's train loss, while the distributed
+    /// engine — where loss telemetry never crosses the wire — recomputes
+    /// the same mean from its side channel. A strategy returning anything
+    /// else breaks the cross-engine bit-identity the tests pin.
     fn aggregate_and_apply(
         &mut self,
         backend: &mut dyn Backend,
@@ -119,6 +126,29 @@ pub trait Strategy: Send {
     fn wire_decode(&self, bytes: &[u8]) -> Result<Uplink> {
         Ok(WireUplink::decode(bytes)?.into_uplink())
     }
+
+    /// Serialize per-run strategy state for checkpointing — error-feedback
+    /// residuals, stochastic-rounding stream positions, anything a resume
+    /// must not silently reset. The default (stateless strategies) is an
+    /// empty blob. The format is strategy-private; it only ever round-trips
+    /// through [`Strategy::restore_state`] of the same strategy.
+    fn save_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore state produced by [`Strategy::save_state`]. The default
+    /// accepts only the empty blob (a non-empty blob reaching a stateless
+    /// strategy means the checkpoint belongs to a different strategy
+    /// build — reject rather than silently drop state).
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<()> {
+        if bytes.is_empty() {
+            Ok(())
+        } else {
+            Err(Error::invariant(
+                "strategy is stateless but checkpoint carries strategy state",
+            ))
+        }
+    }
 }
 
 /// Mean client-reported loss of a round; errors on an empty round.
@@ -130,29 +160,91 @@ pub fn mean_loss(uplinks: &[Uplink]) -> Result<f64> {
     Ok(uplinks.iter().map(|u| u.loss() as f64).sum::<f64>() / uplinks.len() as f64)
 }
 
+/// The same mean over raw f32 losses — the engines' side-channel twin of
+/// [`mean_loss`]: the identical left-to-right f32→f64 summation and
+/// single divide, so the sequential engine's aggregate-returned loss and
+/// the distributed engine's telemetry mean can never drift apart. NaN on
+/// an empty slice (callers guard).
+pub fn mean_loss_f32(losses: &[f32]) -> f64 {
+    losses.iter().map(|l| *l as f64).sum::<f64>() / losses.len() as f64
+}
+
 /// A name parser: canonicalized strategy name -> resolved Method handle.
 /// Plain `fn` so registration needs no allocation and no teardown.
 pub type StrategyParser = fn(&str) -> Option<crate::algo::Method>;
 
-fn registry() -> &'static RwLock<Vec<StrategyParser>> {
-    static REGISTRY: OnceLock<RwLock<Vec<StrategyParser>>> = OnceLock::new();
+/// A name-carrying registry entry: the parser plus the metadata that lets
+/// `fedscalar strategies` (and `--method`'s help text) enumerate what is
+/// registered — the registry is no longer a list of opaque `fn`s.
+#[derive(Debug, Clone, Copy)]
+pub struct StrategyInfo {
+    /// Canonical family name (`"fedscalar"`, `"qsgd"`, ...): the prefix
+    /// the parser recognizes. Re-registering a family shadows it.
+    pub family: &'static str,
+    /// The accepted name pattern, e.g. `"qsgd[<bits>]"`.
+    pub pattern: &'static str,
+    /// One-line description for listings.
+    pub summary: &'static str,
+    /// The name parser.
+    pub parse: StrategyParser,
+}
+
+fn registry() -> &'static RwLock<Vec<StrategyInfo>> {
+    static REGISTRY: OnceLock<RwLock<Vec<StrategyInfo>>> = OnceLock::new();
     REGISTRY.get_or_init(|| {
         RwLock::new(vec![
-            crate::algo::fedscalar::parse,
-            crate::algo::fedavg::parse,
-            crate::algo::qsgd::parse,
-            crate::algo::topk::parse,
-            crate::algo::signsgd::parse,
+            StrategyInfo {
+                family: "fedscalar",
+                pattern: "fedscalar[-normal|-rademacher][-m<k>]",
+                summary: "seed + m scalar projections per round (Algorithm 1); 64 bits at m=1",
+                parse: crate::algo::fedscalar::parse,
+            },
+            StrategyInfo {
+                family: "fedavg",
+                pattern: "fedavg",
+                summary: "uncompressed d-float update (the classic baseline)",
+                parse: crate::algo::fedavg::parse,
+            },
+            StrategyInfo {
+                family: "qsgd",
+                pattern: "qsgd[<bits>]",
+                summary: "stochastic uniform quantization, <bits> (default 8) per coordinate",
+                parse: crate::algo::qsgd::parse,
+            },
+            StrategyInfo {
+                family: "topk",
+                pattern: "topk[<k>]",
+                summary: "top-k sparsification with client-side error feedback (default k=64)",
+                parse: crate::algo::topk::parse,
+            },
+            StrategyInfo {
+                family: "signsgd",
+                pattern: "signsgd[-g<gamma>]",
+                summary: "1 bit/coordinate with majority-vote aggregation",
+                parse: crate::algo::signsgd::parse,
+            },
         ])
     })
 }
 
-/// Register a strategy name parser. Later registrations take precedence,
-/// so out-of-tree strategies can extend (or shadow) the built-in set;
+/// Register a strategy. Later registrations take precedence, so
+/// out-of-tree strategies can extend (or shadow) the built-in set;
 /// registration is process-global and idempotent re-registration is
 /// harmless.
-pub fn register(parser: StrategyParser) {
-    registry().write().unwrap().push(parser);
+pub fn register(info: StrategyInfo) {
+    registry().write().unwrap().push(info);
+}
+
+/// Snapshot the registered strategies, newest-registration first, one
+/// entry per family (a re-registered family appears once, with its newest
+/// metadata) — the enumeration behind the `strategies` CLI subcommand.
+pub fn strategies() -> Vec<StrategyInfo> {
+    let all: Vec<StrategyInfo> = registry().read().unwrap().clone();
+    let mut seen = std::collections::HashSet::new();
+    all.into_iter()
+        .rev()
+        .filter(|i| seen.insert(i.family))
+        .collect()
 }
 
 /// Resolve a strategy name through the registry (whitespace/case
@@ -161,11 +253,11 @@ pub fn register(parser: StrategyParser) {
 /// and therefore the TOML/CLI config layer — calls.
 pub fn parse(s: &str) -> Option<crate::algo::Method> {
     let s = crate::rng::canon(s);
-    // snapshot the parser list before invoking anything: a parser is free
+    // snapshot the entry list before invoking anything: a parser is free
     // to call Method::parse (composite strategies) or even register(),
     // which would deadlock against a held registry lock
-    let parsers: Vec<StrategyParser> = registry().read().unwrap().clone();
-    parsers.iter().rev().find_map(|p| p(&s))
+    let entries: Vec<StrategyInfo> = registry().read().unwrap().clone();
+    entries.iter().rev().find_map(|e| (e.parse)(&s))
 }
 
 #[cfg(test)]
@@ -216,12 +308,40 @@ mod tests {
     #[test]
     fn registered_parser_resolves_and_wins() {
         assert!(parse("unit-test-strategy").is_none());
-        register(parse_unit_test_strategy);
+        register(StrategyInfo {
+            family: "unit-test-strategy",
+            pattern: "unit-test-strategy",
+            summary: "fixed 123-bit strategy for registry tests",
+            parse: parse_unit_test_strategy,
+        });
         let m = parse(" Unit-Test-Strategy \n").expect("canonicalized lookup");
         assert_eq!(m.name(), "unit-test-strategy");
         assert_eq!(m.uplink_bits(1990), 123);
         // built-ins still resolve after the registration
         assert!(parse("fedavg").is_some());
+        // ... and the registration is enumerable by name
+        let listed = strategies();
+        assert!(listed.iter().any(|i| i.family == "unit-test-strategy"));
+    }
+
+    #[test]
+    fn strategies_enumerates_builtin_families_once() {
+        let listed = strategies();
+        for family in ["fedscalar", "fedavg", "qsgd", "topk", "signsgd"] {
+            assert_eq!(
+                listed.iter().filter(|i| i.family == family).count(),
+                1,
+                "{family} should appear exactly once"
+            );
+        }
+        // every listed pattern's family prefix resolves through parse()
+        for info in &listed {
+            assert!(
+                parse(info.family).is_some() || info.family == "unit-test-strategy",
+                "family {} does not resolve",
+                info.family
+            );
+        }
     }
 
     #[test]

@@ -106,6 +106,63 @@ impl Strategy for TopK {
         }
         Ok(loss)
     }
+
+    /// Checkpoint the error-feedback residuals: the accumulated un-sent
+    /// mass is exactly what a resume must NOT drop. Layout: `u32 count`,
+    /// then per client `u32 id, u32 d, d × f32`, clients ascending.
+    fn save_state(&self) -> Vec<u8> {
+        let mut ids: Vec<usize> = self.residuals.keys().copied().collect();
+        ids.sort_unstable();
+        let mut out = Vec::new();
+        out.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+        for id in ids {
+            let r = &self.residuals[&id];
+            out.extend_from_slice(&(id as u32).to_le_bytes());
+            out.extend_from_slice(&(r.len() as u32).to_le_bytes());
+            for v in r {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<()> {
+        fn take<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+            let s = bytes
+                .get(*pos..*pos + n)
+                .ok_or_else(|| Error::invariant("truncated topk state"))?;
+            *pos += n;
+            Ok(s)
+        }
+        let mut residuals = HashMap::new();
+        if !bytes.is_empty() {
+            let mut pos = 0usize;
+            let count =
+                u32::from_le_bytes(take(bytes, &mut pos, 4)?.try_into().unwrap()) as usize;
+            for _ in 0..count {
+                let id =
+                    u32::from_le_bytes(take(bytes, &mut pos, 4)?.try_into().unwrap()) as usize;
+                let d =
+                    u32::from_le_bytes(take(bytes, &mut pos, 4)?.try_into().unwrap()) as usize;
+                if d > 1 << 28 {
+                    return Err(Error::invariant("absurd residual dimension"));
+                }
+                let raw = take(bytes, &mut pos, 4 * d)?;
+                let r: Vec<f32> = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                if residuals.insert(id, r).is_some() {
+                    return Err(Error::invariant("duplicate client in topk state"));
+                }
+            }
+            if pos != bytes.len() {
+                return Err(Error::invariant("trailing bytes in topk state"));
+            }
+        }
+        self.residuals = residuals;
+        Ok(())
+    }
 }
 
 /// Build the registry handle.
@@ -197,6 +254,37 @@ mod tests {
         let loss = s.aggregate_and_apply(&mut be, &mut params, &ups).unwrap();
         assert!((loss - 2.0).abs() < 1e-6);
         assert_eq!(params, vec![3.0, 0.0, 0.0, 0.0, -2.0, 4.0]);
+    }
+
+    #[test]
+    fn save_restore_carries_residuals_across_resume() {
+        use crate::algo::Strategy;
+        // accumulate residual mass on two clients
+        let mut a = TopK::new(1);
+        a.encode_delta(0, vec![1.0, 0.5, -0.75], 0.0).unwrap();
+        a.encode_delta(3, vec![0.1, 2.0, 0.3], 0.0).unwrap();
+        let state = a.save_state();
+        // a fresh instance (the resume path) restores it...
+        let mut b = TopK::new(1);
+        b.restore_state(&state).unwrap();
+        assert_eq!(b.residual(0), a.residual(0));
+        assert_eq!(b.residual(3), a.residual(3));
+        // ...and continues bit-identically to the uninterrupted one
+        let next = vec![0.0f32, 0.0, 0.0];
+        let want = sparse(a.encode_delta(0, next.clone(), 0.0).unwrap());
+        let got = sparse(b.encode_delta(0, next, 0.0).unwrap());
+        assert_eq!(want, got);
+        assert_eq!(want.0, vec![2]); // the leftover -0.75, not nothing
+
+        // empty state = fresh start
+        let mut c = TopK::new(1);
+        c.restore_state(&[]).unwrap();
+        assert!(c.residual(0).is_none());
+        // corrupted blobs rejected
+        assert!(TopK::new(1).restore_state(&state[..state.len() - 2]).is_err());
+        let mut long = state.clone();
+        long.push(9);
+        assert!(TopK::new(1).restore_state(&long).is_err());
     }
 
     #[test]

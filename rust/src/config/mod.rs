@@ -9,6 +9,7 @@ use crate::error::{Error, Result};
 use crate::netsim::{NetworkConfig, Schedule};
 use crate::nn::ModelSpec;
 use crate::rng::VDistribution;
+use crate::simnet::{Availability, SamplerPolicy, ScenarioConfig};
 use crate::util::toml_lite::Document;
 use std::path::{Path, PathBuf};
 
@@ -66,6 +67,9 @@ pub struct ExperimentConfig {
     pub fed: FedConfig,
     pub model: ModelSpec,
     pub network: NetworkConfig,
+    /// The scenario surface (sampling, availability, deadlines, device
+    /// heterogeneity, downlink timing). Default = the paper's §III model.
+    pub scenario: ScenarioConfig,
     pub data: DataSource,
     pub artifacts_dir: PathBuf,
     /// Label-skew Dirichlet alpha; None = IID (the paper's setting).
@@ -79,6 +83,7 @@ impl ExperimentConfig {
             fed: FedConfig::default(),
             model: ModelSpec::default(),
             network: NetworkConfig::default(),
+            scenario: ScenarioConfig::default(),
             data: DataSource::ArtifactCsv,
             artifacts_dir: PathBuf::from("artifacts"),
             dirichlet_alpha: None,
@@ -120,6 +125,12 @@ impl ExperimentConfig {
                 f.participation
             )));
         }
+        self.scenario.validate()?;
+        if f.participation < 1.0 && self.scenario.sampler != SamplerPolicy::Full {
+            return Err(Error::config(
+                "set either fed.participation or scenario.sampler, not both",
+            ));
+        }
         // strategy-specific parameter validation happens at Method
         // construction (parsers and constructors reject e.g. m = 0
         // projections, k = 0, out-of-range quantizer widths)
@@ -138,6 +149,19 @@ impl ExperimentConfig {
             }
         }
         Ok(())
+    }
+
+    /// The effective per-round selection policy: the explicit scenario
+    /// sampler, or the legacy `fed.participation` fraction mapped onto
+    /// uniform-k (`ceil(N * participation)`, exactly the old engine's
+    /// arithmetic).
+    pub fn sampler_policy(&self) -> SamplerPolicy {
+        match self.scenario.sampler {
+            SamplerPolicy::Full if self.fed.participation < 1.0 => SamplerPolicy::UniformK(
+                ((self.fed.num_agents as f64) * self.fed.participation).ceil() as usize,
+            ),
+            s => s,
+        }
     }
 
     /// Load from a TOML file (any omitted key keeps the paper default).
@@ -187,6 +211,32 @@ impl ExperimentConfig {
             cfg.network.schedule = Schedule::parse(s)
                 .ok_or_else(|| Error::config(format!("unknown schedule {s:?}")))?;
         }
+
+        let sc = &mut cfg.scenario;
+        if let Some(v) = doc.get("scenario", "sampler") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::config("scenario.sampler must be a string"))?;
+            sc.sampler = SamplerPolicy::parse(s)
+                .ok_or_else(|| Error::config(format!("unknown sampler {s:?}")))?;
+        }
+        if let Some(v) = doc.get("scenario", "availability") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::config("scenario.availability must be a string"))?;
+            sc.availability = Availability::parse(s)
+                .ok_or_else(|| Error::config(format!("unknown availability {s:?}")))?;
+        }
+        if let Some(v) = doc.get("scenario", "deadline_s") {
+            let dl = v
+                .as_float()
+                .ok_or_else(|| Error::config("scenario.deadline_s must be numeric"))?;
+            sc.deadline_s = Some(dl);
+        }
+        sc.downlink_bps = getf("scenario", "downlink_bps", sc.downlink_bps);
+        sc.fleet.compute_spread = getf("scenario", "compute_spread", sc.fleet.compute_spread);
+        sc.fleet.power_spread = getf("scenario", "power_spread", sc.fleet.power_spread);
+        sc.fleet.rate_spread = getf("scenario", "rate_spread", sc.fleet.rate_spread);
 
         if let Some(v) = doc.get("data", "source") {
             cfg.data = match v.as_str() {
@@ -290,6 +340,53 @@ source = "synthetic"
     }
 
     #[test]
+    fn scenario_table_parses_and_defaults() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+[scenario]
+sampler = "uniform8"
+availability = "duty4/10"
+deadline_s = 2.5
+downlink_bps = 100000.0
+compute_spread = 0.5
+
+[data]
+source = "synthetic"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.scenario.sampler, SamplerPolicy::UniformK(8));
+        assert_eq!(
+            cfg.scenario.availability,
+            Availability::DutyCycle { period: 10, on: 4 }
+        );
+        assert_eq!(cfg.scenario.deadline_s, Some(2.5));
+        assert_eq!(cfg.scenario.downlink_bps, 100_000.0);
+        assert_eq!(cfg.scenario.fleet.compute_spread, 0.5);
+        assert_eq!(cfg.scenario.fleet.rate_spread, 0.0);
+        // omitted table = the paper's §III scenario
+        let plain =
+            ExperimentConfig::from_toml_str("[data]\nsource = \"synthetic\"\n").unwrap();
+        assert!(plain.scenario.is_legacy());
+        assert_eq!(plain.sampler_policy(), SamplerPolicy::Full);
+    }
+
+    #[test]
+    fn participation_maps_onto_uniform_sampler() {
+        let mut cfg = ExperimentConfig::smoke();
+        cfg.fed.num_agents = 8;
+        cfg.fed.participation = 0.5;
+        assert_eq!(cfg.sampler_policy(), SamplerPolicy::UniformK(4));
+        cfg.validate().unwrap();
+        // explicit sampler + participation is ambiguous -> rejected
+        cfg.scenario.sampler = SamplerPolicy::UniformK(3);
+        assert!(cfg.validate().is_err());
+        cfg.fed.participation = 1.0;
+        cfg.validate().unwrap();
+        assert_eq!(cfg.sampler_policy(), SamplerPolicy::UniformK(3));
+    }
+
+    #[test]
     fn invalid_configs_rejected() {
         for bad in [
             "[fed]\nrounds = 0\n",
@@ -300,6 +397,11 @@ source = "synthetic"
             "[network]\nschedule = \"fdd\"\n",
             "[data]\nsource = \"nope\"\n",
             "[data]\ndirichlet_alpha = 0.0\n",
+            "[scenario]\nsampler = \"uniform0\"\n",
+            "[scenario]\navailability = \"duty9/4\"\n",
+            "[scenario]\ndeadline_s = -1.0\n",
+            "[scenario]\ndownlink_bps = -5.0\n",
+            "[scenario]\ncompute_spread = -0.5\n",
         ] {
             assert!(
                 ExperimentConfig::from_toml_str(bad).is_err(),

@@ -1,25 +1,28 @@
-//! Training checkpoints: global model + round counters, binary on disk.
+//! Training checkpoints: global model + round counters + strategy state,
+//! binary on disk.
 //!
 //! Captures everything needed to resume the *optimization* (params, round
-//! index, cumulative communication/energy/time counters). RNG streams
-//! (batch samplers, channel fading, projection seeds) are re-derived from
-//! `run_seed` and the resume round is an epoch boundary for them — resumed
-//! runs are statistically equivalent but not bit-identical to uninterrupted
-//! ones, which is standard checkpoint semantics for FL simulators.
+//! index, cumulative communication/energy/time counters, and the
+//! strategy's own state via
+//! [`Strategy::save_state`](crate::algo::Strategy::save_state) — Top-k
+//! error-feedback residuals and QSGD's rounding-stream position survive a
+//! resume instead of silently resetting). RNG streams owned by the
+//! *engine* (batch samplers, channel fading, projection seeds, client
+//! sampling) are re-derived from `run_seed` and the resume round is an
+//! epoch boundary for them — resumed runs are statistically equivalent
+//! but not bit-identical to uninterrupted ones, which is standard
+//! checkpoint semantics for FL simulators.
 //!
-//! The same caveat covers per-run *strategy* state (a fresh engine
-//! re-instantiates its strategy from `run_seed`): QSGD's
-//! stochastic-rounding stream restarts, and Top-k error-feedback
-//! residuals restart empty, so the un-sent mass accumulated before the
-//! checkpoint is dropped on resume. A `Strategy` state save/restore hook
-//! is on the ROADMAP's open items.
+//! Format v2 appends a length-prefixed opaque strategy-state blob; v1
+//! files (no blob) are rejected rather than silently resuming with reset
+//! strategy state.
 
 use crate::error::{Error, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"FEDSCKPT";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
@@ -29,8 +32,13 @@ pub struct Checkpoint {
     pub round: u64,
     pub params: Vec<f32>,
     pub cum_bits: f64,
+    pub cum_downlink_bits: f64,
     pub cum_sim_seconds: f64,
     pub cum_energy_joules: f64,
+    /// Opaque per-strategy state blob
+    /// ([`Strategy::save_state`](crate::algo::Strategy::save_state));
+    /// empty for stateless strategies.
+    pub strategy_state: Vec<u8>,
 }
 
 impl Checkpoint {
@@ -50,12 +58,15 @@ impl Checkpoint {
         f.write_all(m)?;
         f.write_all(&self.round.to_le_bytes())?;
         f.write_all(&self.cum_bits.to_le_bytes())?;
+        f.write_all(&self.cum_downlink_bits.to_le_bytes())?;
         f.write_all(&self.cum_sim_seconds.to_le_bytes())?;
         f.write_all(&self.cum_energy_joules.to_le_bytes())?;
         f.write_all(&(self.params.len() as u64).to_le_bytes())?;
         for v in &self.params {
             f.write_all(&v.to_le_bytes())?;
         }
+        f.write_all(&(self.strategy_state.len() as u64).to_le_bytes())?;
+        f.write_all(&self.strategy_state)?;
         f.flush()?;
         Ok(())
     }
@@ -84,6 +95,7 @@ impl Checkpoint {
             .map_err(|_| Error::invariant("method name not utf-8"))?;
         let round = read_u64(&mut f)?;
         let cum_bits = read_f64(&mut f)?;
+        let cum_downlink_bits = read_f64(&mut f)?;
         let cum_sim_seconds = read_f64(&mut f)?;
         let cum_energy_joules = read_f64(&mut f)?;
         let d = read_u64(&mut f)? as usize;
@@ -96,6 +108,12 @@ impl Checkpoint {
             f.read_exact(&mut buf)?;
             params.push(f32::from_le_bytes(buf));
         }
+        let slen = read_u64(&mut f)? as usize;
+        if slen > 1 << 30 {
+            return Err(Error::invariant("absurd strategy-state size"));
+        }
+        let mut strategy_state = vec![0u8; slen];
+        f.read_exact(&mut strategy_state)?;
         // must be at EOF
         let mut probe = [0u8; 1];
         if f.read(&mut probe)? != 0 {
@@ -107,8 +125,10 @@ impl Checkpoint {
             round,
             params,
             cum_bits,
+            cum_downlink_bits,
             cum_sim_seconds,
             cum_energy_joules,
+            strategy_state,
         })
     }
 }
@@ -142,8 +162,10 @@ mod tests {
             round: 750,
             params: (0..1990).map(|i| (i as f32).sin()).collect(),
             cum_bits: 9.6e5,
+            cum_downlink_bits: 2.9e8,
             cum_sim_seconds: 488.0,
             cum_energy_joules: 20.4,
+            strategy_state: vec![1, 2, 3, 250],
         }
     }
 

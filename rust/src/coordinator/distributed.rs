@@ -6,11 +6,15 @@
 //! compute backend (PureRust — PJRT handles are not Send), and its own
 //! [`Strategy`](crate::algo::Strategy) instance (client-side state such
 //! as error-feedback residuals lives with the agent, exactly as it would
-//! in a real deployment). A worker receives the broadcast model as a
-//! [`super::wire::WireModel`] frame, runs the local stage its strategy
-//! declares, and sends back the strategy-encoded uplink frame. The leader
-//! decodes through its own strategy instance, aggregates, applies, and
-//! evaluates — no method dispatch anywhere in this file.
+//! in a real deployment). Each round the leader's [`Sampler`] selects the
+//! active set (partial participation included) and unicasts a
+//! [`super::wire::WireRoundPlan`] frame plus the
+//! [`super::wire::WireModel`] broadcast to those workers only; a worker
+//! runs the local stage its strategy declares and sends back the
+//! strategy-encoded uplink frame. The leader decodes through its own
+//! strategy instance, drops deadline casualties per the [`SimNet`]
+//! report, aggregates, applies, and evaluates — no method dispatch
+//! anywhere in this file.
 //!
 //! Given the same config and run seed, FedScalar/FedAvg training metrics
 //! are bit-identical to the sequential engine (asserted by the
@@ -24,13 +28,13 @@ use crate::coordinator::client::ClientState;
 use crate::coordinator::engine::load_data;
 use crate::coordinator::messages::Uplink;
 use crate::coordinator::transport::{duplex, AgentEndpoint, LeaderEndpoint};
-use crate::coordinator::wire::WireModel;
+use crate::coordinator::wire::{WireModel, WireRoundPlan};
 use crate::error::{Error, Result};
 use crate::metrics::{RoundRecord, RunHistory};
-use crate::netsim::{energy_joules, latency, upload_seconds, Channel};
 use crate::nn::ModelSpec;
 use crate::rng::SplitMix64;
 use crate::runtime::{Backend, PureRustBackend};
+use crate::simnet::{Sampler, SimNet};
 use crate::{log_debug, log_info};
 use std::sync::Arc;
 use std::time::Instant;
@@ -58,12 +62,16 @@ pub struct DistributedEngine {
     leader_backend: PureRustBackend,
     /// Leader-side strategy instance (decode + aggregate + accounting).
     strategy: Box<dyn Strategy>,
+    /// Leader-side scenario simulator + selection — the SAME seed
+    /// derivations as the sequential engine, so both engines pick (and
+    /// drop) identical clients every round.
+    simnet: SimNet,
+    sampler: Sampler,
     test_x: Vec<f32>,
     test_y: Vec<i32>,
     params: Vec<f32>,
-    channel: Channel,
-    t_other_s: f64,
     cum_bits: f64,
+    cum_downlink_bits: f64,
     cum_sim_seconds: f64,
     cum_energy_joules: f64,
     history: RunHistory,
@@ -72,11 +80,6 @@ pub struct DistributedEngine {
 impl DistributedEngine {
     pub fn from_config(cfg: &ExperimentConfig, run_seed: u64) -> Result<DistributedEngine> {
         cfg.validate()?;
-        if cfg.fed.participation < 1.0 {
-            return Err(Error::config(
-                "distributed engine currently requires full participation",
-            ));
-        }
         let (train, test) = load_data(cfg)?;
         let train = Arc::new(train);
         let partition = match cfg.dirichlet_alpha {
@@ -102,23 +105,23 @@ impl DistributedEngine {
             ));
         }
 
-        let t_other_s = latency::t_other_seconds(
-            &cfg.network.latency,
-            cfg.model.param_dim(),
-            cfg.fed.num_agents,
-            cfg.network.channel.nominal_bps,
-            cfg.network.schedule,
-        );
         Ok(DistributedEngine {
             history: RunHistory::new(cfg.fed.method.name()),
-            channel: Channel::new(cfg.network.channel.clone(), run_seed),
+            simnet: SimNet::new(
+                &cfg.network,
+                &cfg.scenario,
+                cfg.model.param_dim(),
+                cfg.fed.num_agents,
+                run_seed,
+            ),
+            sampler: Sampler::new(cfg.sampler_policy(), run_seed),
             strategy: cfg.fed.method.instantiate(run_seed),
             leader_backend,
             test_x: test.x,
             test_y: test.y,
             params,
-            t_other_s,
             cum_bits: 0.0,
+            cum_downlink_bits: 0.0,
             cum_sim_seconds: 0.0,
             cum_energy_joules: 0.0,
             workers,
@@ -145,76 +148,115 @@ impl DistributedEngine {
 
     fn run_round(&mut self, k: usize, eval: bool) -> Result<()> {
         let host_t0 = Instant::now();
-        // broadcast the model frame + round order
+        // select this round's active set (leader-side, identical to the
+        // sequential engine's sampler stream)
+        let avail = self.simnet.available(k as u64);
+        let active = self.sampler.select(&avail, self.simnet.profiles());
+        if active.is_empty() {
+            if eval {
+                self.push_record(k, f64::NAN, host_t0)?;
+            }
+            return Ok(());
+        }
+        // unicast the round plan + model frame to the selected workers
+        // only (an unselected worker never hears the round and keeps its
+        // batch/seed streams untouched, exactly like the sequential
+        // engine's inactive clients)
+        let plan = WireRoundPlan {
+            round: k as u32,
+            active: active.iter().map(|&c| c as u32).collect(),
+        }
+        .encode();
         let frame = WireModel {
             round: k as u32,
             params: self.params.clone(),
         }
         .encode();
-        for w in &self.workers {
+        for &c in &active {
+            let w = &self.workers[c];
             w.control
                 .send(Control::Round)
                 .map_err(|_| Error::invariant("worker died"))?;
             w.endpoint
                 .downlink
+                .send(plan.clone())
+                .map_err(Error::invariant)?;
+            w.endpoint
+                .downlink
                 .send(frame.clone())
                 .map_err(Error::invariant)?;
         }
-        // collect uplink frames (in worker order — determinism). The
-        // netsim charges the strategy's nominal payload accounting — the
-        // same single source of truth the sequential engine uses (the
+        // collect uplink frames (in active order — determinism); the
         // transport's frame-byte counters remain available for the
-        // framing-inclusive view).
-        let bits = self.strategy.uplink_bits(self.params.len());
-        let mut uplinks: Vec<Uplink> = Vec::with_capacity(self.workers.len());
-        let mut losses = Vec::with_capacity(self.workers.len());
-        let mut per_agent_seconds = Vec::with_capacity(self.workers.len());
-        let mut round_bits = 0u64;
-        let mut round_energy = 0.0f64;
-        for w in &self.workers {
+        // framing-inclusive view
+        let mut uplinks: Vec<Uplink> = Vec::with_capacity(active.len());
+        let mut losses = Vec::with_capacity(active.len());
+        for &c in &active {
+            let w = &self.workers[c];
             let bytes = w.endpoint.uplink.recv().map_err(Error::invariant)?;
-            let up = self.strategy.wire_decode(&bytes)?;
-            let rate = self.channel.sample_rate_bps();
-            per_agent_seconds.push(upload_seconds(bits, rate));
-            round_energy += energy_joules(self.cfg.network.p_tx_watts, bits, rate);
-            round_bits += bits;
-            uplinks.push(up);
-            losses.push(w.telemetry.recv().map_err(|_| Error::invariant("telemetry lost"))?);
+            uplinks.push(self.strategy.wire_decode(&bytes)?);
+            losses.push(
+                w.telemetry
+                    .recv()
+                    .map_err(|_| Error::invariant("telemetry lost"))?,
+            );
         }
-        let round_seconds = latency::round_wall_time(
-            &per_agent_seconds,
-            self.cfg.network.schedule,
-            self.t_other_s,
-        );
-        self.cum_bits += round_bits as f64;
-        self.cum_sim_seconds += round_seconds;
-        self.cum_energy_joules += round_energy;
+        // netsim lifecycle: the strategy's nominal payload accounting is
+        // the single source of truth both engines charge
+        let up_bits = self.strategy.uplink_bits(self.params.len());
+        let down_bits = self.strategy.downlink_bits(self.params.len());
+        let report = self.simnet.run_round(&active, up_bits, down_bits);
+        self.cum_bits += report.uplink_bits as f64;
+        self.cum_downlink_bits += report.downlink_bits as f64;
+        self.cum_sim_seconds += report.round_seconds;
+        self.cum_energy_joules += report.energy_joules;
 
-        // aggregate + apply (loss telemetry is not on the wire, so the
-        // round loss comes from the side channel, not the aggregate)
-        self.strategy.aggregate_and_apply(
-            &mut self.leader_backend,
-            &mut self.params,
-            &uplinks,
-        )?;
-        let train_loss = losses.iter().map(|l| *l as f64).sum::<f64>() / losses.len() as f64;
+        // aggregate + apply the survivors (loss telemetry is not on the
+        // wire, so the round loss comes from the side channel — over the
+        // same survivor set the sequential engine averages)
+        let survivors: Vec<Uplink> = report.filter_survivors(uplinks);
+        let train_loss = if survivors.is_empty() {
+            crate::algo::strategy::mean_loss_f32(&losses)
+        } else {
+            self.strategy.aggregate_and_apply(
+                &mut self.leader_backend,
+                &mut self.params,
+                &survivors,
+            )?;
+            // same survivor set, same summation (mean_loss_f32) as the
+            // sequential engine's mean_loss over survivor uplinks —
+            // loss telemetry is not on the wire, so it comes from the
+            // side channel
+            crate::algo::strategy::mean_loss_f32(&report.filter_survivors(losses))
+        };
 
         if eval {
-            let (test_loss, test_acc) =
-                self.leader_backend
-                    .evaluate(&self.params, &self.test_x, &self.test_y)?;
-            log_debug!("dist round {k}: loss={train_loss:.4} acc={test_acc:.4}");
-            self.history.push(RoundRecord {
-                round: k,
-                train_loss,
-                test_loss: test_loss as f64,
-                test_acc: test_acc as f64,
-                cum_bits: self.cum_bits,
-                cum_sim_seconds: self.cum_sim_seconds,
-                cum_energy_joules: self.cum_energy_joules,
-                host_ms: host_t0.elapsed().as_secs_f64() * 1e3,
-            });
+            log_debug!(
+                "dist round {k}: loss={train_loss:.4} active={} dropped={}",
+                active.len(),
+                report.dropped
+            );
+            self.push_record(k, train_loss, host_t0)?;
         }
+        Ok(())
+    }
+
+    /// Evaluate and append one history record at the current counters.
+    fn push_record(&mut self, k: usize, train_loss: f64, host_t0: Instant) -> Result<()> {
+        let (test_loss, test_acc) =
+            self.leader_backend
+                .evaluate(&self.params, &self.test_x, &self.test_y)?;
+        self.history.push(RoundRecord {
+            round: k,
+            train_loss,
+            test_loss: test_loss as f64,
+            test_acc: test_acc as f64,
+            cum_bits: self.cum_bits,
+            cum_downlink_bits: self.cum_downlink_bits,
+            cum_sim_seconds: self.cum_sim_seconds,
+            cum_energy_joules: self.cum_energy_joules,
+            host_ms: host_t0.elapsed().as_secs_f64() * 1e3,
+        });
         Ok(())
     }
 
@@ -313,6 +355,22 @@ fn worker_main(
     // client-side
     let mut strategy = method.instantiate(SplitMix64::derive(run_seed ^ 0x9594, id as u64));
     while let Ok(Control::Round) = ctl.recv() {
+        // the round plan precedes the model frame; a worker only ever
+        // receives rounds it was selected for, and the plan lets it
+        // verify that (and learn its slot order) from the wire alone
+        let Ok(plan_bytes) = ep.downlink.recv() else { return };
+        let Ok(plan) = WireRoundPlan::decode(&plan_bytes) else {
+            log_info!("worker {id}: undecodable round-plan frame; shutting down");
+            return;
+        };
+        if !plan.active.iter().any(|&c| c as usize == id) {
+            // a plan that excludes this worker is a protocol violation
+            log_info!(
+                "worker {id}: round {} plan excludes this worker; shutting down",
+                plan.round
+            );
+            return;
+        }
         let Ok(frame) = ep.downlink.recv() else { return };
         let Ok(model) = WireModel::decode(&frame) else { return };
         state.fill_round_batches(steps, batch);

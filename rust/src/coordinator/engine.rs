@@ -18,9 +18,9 @@ use crate::coordinator::messages::Uplink;
 use crate::data::{dirichlet_partition, iid_partition, Dataset};
 use crate::error::{Error, Result};
 use crate::metrics::{RoundRecord, RunHistory};
-use crate::netsim::{energy_joules, latency, upload_seconds, Channel};
-use crate::rng::{SplitMix64, Xoshiro256};
+use crate::rng::SplitMix64;
 use crate::runtime::{Backend, ClientWorker, PureRustBackend, ScalarUpload};
+use crate::simnet::{Sampler, SimNet};
 use crate::{log_debug, log_info};
 use std::sync::Arc;
 use std::time::Instant;
@@ -36,17 +36,19 @@ pub struct Engine {
     strategy: Box<dyn Strategy>,
     clients: Vec<ClientState>,
     test: Arc<Dataset>,
-    channel: Channel,
+    /// The scenario network simulator (fleet profiles, availability,
+    /// fading streams, deadlines, virtual clock).
+    simnet: SimNet,
+    /// Per-round client selection (leader-side; thread-independent).
+    sampler: Sampler,
     params: Vec<f32>,
-    t_other_s: f64,
     // cumulative counters across rounds
     cum_bits: f64,
+    cum_downlink_bits: f64,
     cum_sim_seconds: f64,
     cum_energy_joules: f64,
     history: RunHistory,
     run_seed: u64,
-    /// RNG for per-round participant sampling (participation < 1).
-    participation_rng: Xoshiro256,
     /// Cached intra-round worker pool (grown lazily, reused across
     /// rounds — worker scratch is the expensive part, not the threads).
     workers: Vec<Box<dyn ClientWorker>>,
@@ -104,36 +106,30 @@ impl Engine {
             })
             .collect();
         let params = backend.init_params(SplitMix64::derive(run_seed, 0xd0d0))?;
-        let t_other_s = latency::t_other_seconds(
-            &cfg.network.latency,
-            cfg.model.param_dim(),
-            cfg.fed.num_agents,
-            cfg.network.channel.nominal_bps,
-            cfg.network.schedule,
-        );
         Ok(Engine {
             history: RunHistory::new(cfg.fed.method.name()),
-            channel: Channel::new(cfg.network.channel.clone(), run_seed),
+            simnet: SimNet::new(
+                &cfg.network,
+                &cfg.scenario,
+                cfg.model.param_dim(),
+                cfg.fed.num_agents,
+                run_seed,
+            ),
+            sampler: Sampler::new(cfg.sampler_policy(), run_seed),
             strategy: cfg.fed.method.instantiate(run_seed),
             clients,
             test: Arc::new(test),
             params,
-            t_other_s,
             cum_bits: 0.0,
+            cum_downlink_bits: 0.0,
             cum_sim_seconds: 0.0,
             cum_energy_joules: 0.0,
             cfg: cfg.clone(),
             backend,
             run_seed,
-            participation_rng: Xoshiro256::seed_from(SplitMix64::derive(run_seed, 0xac71)),
             workers: Vec::new(),
             workers_unavailable: false,
         })
-    }
-
-    /// How many agents participate each round.
-    fn participants_per_round(&self) -> usize {
-        ((self.cfg.fed.num_agents as f64) * self.cfg.fed.participation).ceil() as usize
     }
 
     /// Worker threads for the intra-round client stage (config knob;
@@ -171,7 +167,9 @@ impl Engine {
     }
 
     /// Snapshot the optimization state (see coordinator::checkpoint for
-    /// the resume semantics).
+    /// the resume semantics). Strategy-owned state (error-feedback
+    /// residuals, rounding-stream positions) rides along via
+    /// [`Strategy::save_state`].
     pub fn checkpoint(&self, next_round: usize) -> crate::coordinator::checkpoint::Checkpoint {
         crate::coordinator::checkpoint::Checkpoint {
             run_seed: self.run_seed,
@@ -179,8 +177,10 @@ impl Engine {
             round: next_round as u64,
             params: self.params.clone(),
             cum_bits: self.cum_bits,
+            cum_downlink_bits: self.cum_downlink_bits,
             cum_sim_seconds: self.cum_sim_seconds,
             cum_energy_joules: self.cum_energy_joules,
+            strategy_state: self.strategy.save_state(),
         }
     }
 
@@ -206,8 +206,10 @@ impl Engine {
         }
         self.params.copy_from_slice(&ck.params);
         self.cum_bits = ck.cum_bits;
+        self.cum_downlink_bits = ck.cum_downlink_bits;
         self.cum_sim_seconds = ck.cum_sim_seconds;
         self.cum_energy_joules = ck.cum_energy_joules;
+        self.strategy.restore_state(&ck.strategy_state)?;
         Ok(ck.round as usize)
     }
 
@@ -257,7 +259,8 @@ impl Engine {
         Ok(self.history.clone())
     }
 
-    /// One round: local stages -> uplinks -> netsim -> aggregate -> eval.
+    /// One round: select -> broadcast -> local stages -> upload (simnet:
+    /// fading, slots, deadline) -> aggregate survivors -> eval.
     pub fn run_round(&mut self, k: usize, eval: bool) -> Result<()> {
         let host_t0 = Instant::now();
         let (s, b, alpha) = (
@@ -265,14 +268,20 @@ impl Engine {
             self.cfg.fed.batch_size,
             self.cfg.fed.alpha,
         );
-        // participant selection (paper: server activates a subset per round)
-        let k_active = self.participants_per_round();
-        let active: Vec<usize> = if k_active == self.clients.len() {
-            (0..self.clients.len()).collect()
-        } else {
-            self.participation_rng
-                .sample_indices(self.clients.len(), k_active)
-        };
+        // participant selection (paper: server activates a subset per
+        // round) — the sampler picks from the clients the availability
+        // trace marks reachable, on the leader only
+        let avail = self.simnet.available(k as u64);
+        let active = self.sampler.select(&avail, self.simnet.profiles());
+        let k_active = active.len();
+        if k_active == 0 {
+            // nobody reachable: the optimizer and the netsim both idle;
+            // an eval round still measures the (unchanged) model
+            if eval {
+                self.push_record(k, f64::NAN, host_t0)?;
+            }
+            return Ok(());
+        }
         let mut uplinks: Vec<Uplink> = Vec::with_capacity(k_active);
         // batch gathering (and, below, strategy encoding) stays serial —
         // those RNG/state streams are order-dependent — while the compute
@@ -360,55 +369,81 @@ impl Engine {
             }
         }
 
-        // --- network + energy accounting (eqs. 12-13) ------------------------
-        // ONE source of truth for the uplink payload: the strategy's bit
-        // accounting (also what the figures' x-axes and the wire tests pin).
-        let bits = self.strategy.uplink_bits(self.params.len());
-        let mut per_agent_seconds = Vec::with_capacity(uplinks.len());
-        let mut round_bits = 0u64;
-        let mut round_energy = 0.0f64;
-        for _ in &uplinks {
-            let rate = self.channel.sample_rate_bps();
-            let secs = upload_seconds(bits, rate);
-            round_energy += energy_joules(self.cfg.network.p_tx_watts, bits, rate);
-            per_agent_seconds.push(secs);
-            round_bits += bits;
-        }
-        let round_seconds = latency::round_wall_time(
-            &per_agent_seconds,
-            self.cfg.network.schedule,
-            self.t_other_s,
-        );
-        self.cum_bits += round_bits as f64;
-        self.cum_sim_seconds += round_seconds;
-        self.cum_energy_joules += round_energy;
+        // --- network + energy accounting (eqs. 12-13, simnet lifecycle) ------
+        // ONE source of truth for the payloads: the strategy's bit
+        // accounting (also what the figures' x-axes and the wire tests
+        // pin). The simulator charges broadcast, fading, slots, and the
+        // deadline cutoff in one event-driven pass.
+        let up_bits = self.strategy.uplink_bits(self.params.len());
+        let down_bits = self.strategy.downlink_bits(self.params.len());
+        let report = self.simnet.run_round(&active, up_bits, down_bits);
+        self.cum_bits += report.uplink_bits as f64;
+        self.cum_downlink_bits += report.downlink_bits as f64;
+        self.cum_sim_seconds += report.round_seconds;
+        self.cum_energy_joules += report.energy_joules;
 
-        // --- aggregate + apply ----------------------------------------------
-        let train_loss =
+        // --- aggregate + apply (survivors only) -------------------------------
+        let train_loss = if report.all_completed() {
             self.strategy
-                .aggregate_and_apply(self.backend.as_mut(), &mut self.params, &uplinks)?;
+                .aggregate_and_apply(self.backend.as_mut(), &mut self.params, &uplinks)?
+        } else {
+            // deadline casualties never reached the server: aggregate
+            // the survivors; their wasted energy/bits are already
+            // charged above. With zero survivors the model holds and the
+            // round loss falls back to the active clients' telemetry
+            // (mean_loss_f32 — the same summation the distributed
+            // engine's side channel uses).
+            //
+            // NOTE (modeled radio semantics): the client never learns its
+            // upload was cut — there is no ACK — so a stateful strategy's
+            // encode-side bookkeeping (e.g. Top-k's error-feedback
+            // residual) proceeds as if the upload was delivered, and the
+            // dropped update's mass leaves training. A deadline-NACK hook
+            // letting strategies restore dropped mass is a ROADMAP open
+            // item; both engines model the loss identically today.
+            let losses: Vec<f32> = uplinks.iter().map(|u| u.loss()).collect();
+            let survivors: Vec<Uplink> = report.filter_survivors(uplinks);
+            if survivors.is_empty() {
+                crate::algo::strategy::mean_loss_f32(&losses)
+            } else {
+                self.strategy.aggregate_and_apply(
+                    self.backend.as_mut(),
+                    &mut self.params,
+                    &survivors,
+                )?
+            }
+        };
 
         // --- evaluation -------------------------------------------------------
         if eval {
-            let (test_loss, test_acc) =
-                self.backend
-                    .evaluate(&self.params, &self.test.x, &self.test.y)?;
-            let host_ms = host_t0.elapsed().as_secs_f64() * 1e3;
             log_debug!(
-                "round {k}: train_loss={train_loss:.4} test_acc={test_acc:.4} \
-                 bits={round_bits} sim_s={round_seconds:.4}"
+                "round {k}: train_loss={train_loss:.4} active={k_active} \
+                 dropped={} bits={} sim_s={:.4}",
+                report.dropped,
+                report.uplink_bits,
+                report.round_seconds
             );
-            self.history.push(RoundRecord {
-                round: k,
-                train_loss,
-                test_loss: test_loss as f64,
-                test_acc: test_acc as f64,
-                cum_bits: self.cum_bits,
-                cum_sim_seconds: self.cum_sim_seconds,
-                cum_energy_joules: self.cum_energy_joules,
-                host_ms,
-            });
+            self.push_record(k, train_loss, host_t0)?;
         }
+        Ok(())
+    }
+
+    /// Evaluate and append one history record at the current counters.
+    fn push_record(&mut self, k: usize, train_loss: f64, host_t0: Instant) -> Result<()> {
+        let (test_loss, test_acc) = self
+            .backend
+            .evaluate(&self.params, &self.test.x, &self.test.y)?;
+        self.history.push(RoundRecord {
+            round: k,
+            train_loss,
+            test_loss: test_loss as f64,
+            test_acc: test_acc as f64,
+            cum_bits: self.cum_bits,
+            cum_downlink_bits: self.cum_downlink_bits,
+            cum_sim_seconds: self.cum_sim_seconds,
+            cum_energy_joules: self.cum_energy_joules,
+            host_ms: host_t0.elapsed().as_secs_f64() * 1e3,
+        });
         Ok(())
     }
 }

@@ -26,6 +26,7 @@ const TAG_QUANTIZED: u8 = 3;
 const TAG_MODEL: u8 = 4;
 const TAG_SPARSE: u8 = 5;
 const TAG_SIGNS: u8 = 6;
+const TAG_PLAN: u8 = 7;
 
 /// Wire-facing uplink payload (telemetry stripped).
 #[derive(Debug, Clone, PartialEq)]
@@ -355,6 +356,53 @@ impl WireModel {
     }
 }
 
+/// Downlink frame: the round plan — which clients the server selected
+/// this round, in activation (slot) order. Broadcast ahead of the model
+/// frame so every selected client knows the round index and the TDMA-slot
+/// order; this is what carries the [`crate::simnet::Sampler`]'s per-round
+/// active set through the distributed engine's frame protocol.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRoundPlan {
+    pub round: u32,
+    /// Selected client ids, in selection order (duplicates invalid).
+    pub active: Vec<u32>,
+}
+
+impl WireRoundPlan {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = vec![TAG_PLAN];
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&(self.active.len() as u32).to_le_bytes());
+        for c in &self.active {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<WireRoundPlan> {
+        let mut cur = Cursor::new(buf);
+        if cur.u8()? != TAG_PLAN {
+            return Err(Error::invariant("expected round-plan frame"));
+        }
+        let round = cur.u32()?;
+        let n = cur.u32()? as usize;
+        if n > 1 << 24 {
+            return Err(Error::invariant("absurd active-set size"));
+        }
+        let mut active = Vec::with_capacity(n);
+        let mut seen = std::collections::HashSet::with_capacity(n);
+        for _ in 0..n {
+            let c = cur.u32()?;
+            if !seen.insert(c) {
+                return Err(Error::invariant("duplicate client in round plan"));
+            }
+            active.push(c);
+        }
+        cur.expect_end()?;
+        Ok(WireRoundPlan { round, active })
+    }
+}
+
 /// Minimal byte cursor with bounds-checked reads.
 struct Cursor<'a> {
     buf: &'a [u8],
@@ -454,6 +502,44 @@ mod tests {
                 other => panic!("wrong variant {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn round_plan_roundtrip_and_validation() {
+        let plan = WireRoundPlan {
+            round: 17,
+            active: vec![4, 0, 2],
+        };
+        let bytes = plan.encode();
+        // tag + round + count + 3 ids
+        assert_eq!(bytes.len(), 1 + 4 + 4 + 3 * 4);
+        assert_eq!(WireRoundPlan::decode(&bytes).unwrap(), plan);
+        // selection ORDER survives the wire (it is the slot order)
+        assert_eq!(WireRoundPlan::decode(&bytes).unwrap().active, vec![4, 0, 2]);
+        // empty plans roundtrip (a zero-available round)
+        let empty = WireRoundPlan {
+            round: 0,
+            active: vec![],
+        };
+        assert_eq!(WireRoundPlan::decode(&empty.encode()).unwrap(), empty);
+        // duplicates rejected
+        let dup = WireRoundPlan {
+            round: 1,
+            active: vec![3, 3],
+        }
+        .encode();
+        assert!(WireRoundPlan::decode(&dup).is_err());
+        // truncation / trailing garbage / wrong tag rejected
+        assert!(WireRoundPlan::decode(&bytes[..bytes.len() - 1]).is_err());
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(WireRoundPlan::decode(&long).is_err());
+        let model = WireModel {
+            round: 0,
+            params: vec![],
+        }
+        .encode();
+        assert!(WireRoundPlan::decode(&model).is_err());
     }
 
     #[test]

@@ -185,6 +185,7 @@ impl FigureSuite {
             .map(|(m, h)| {
                 let v = match axis {
                     Axis::Bits => h.acc_at_bits(budget),
+                    Axis::TotalBits => h.acc_at_total_bits(budget),
                     Axis::Seconds => h.acc_at_seconds(budget),
                     Axis::Joules => h.acc_at_joules(budget),
                 };
@@ -211,10 +212,12 @@ impl FigureSuite {
     }
 }
 
-/// The three budget axes of Figs 4, 5, 6.
+/// The budget axes of Figs 4, 5, 6 — plus the uplink+downlink total of
+/// the symmetric communication cost model (Zheng et al., PAPERS.md).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Axis {
     Bits,
+    TotalBits,
     Seconds,
     Joules,
 }

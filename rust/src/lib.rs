@@ -13,7 +13,9 @@
 //! ## Architecture (three layers, Python never on the round path)
 //!
 //! * **L3 — this crate.** The federated coordinator: round engine, network
-//!   simulator (bandwidth / TDMA / energy, paper eqs. 12–13), a pluggable
+//!   simulator (bandwidth / TDMA / energy, paper eqs. 12–13, plus the
+//!   [`simnet`] scenario layer: heterogeneous devices, availability churn,
+//!   client sampling, straggler deadlines), a pluggable
 //!   strategy registry ([`algo::Strategy`]) shipping
 //!   FedScalar-{Normal,Rademacher,multi-projection}, FedAvg, QSGD, Top-k
 //!   (error feedback), and SignSGD (majority vote), metrics, CLI, and the
@@ -53,6 +55,7 @@ pub mod netsim;
 pub mod nn;
 pub mod rng;
 pub mod runtime;
+pub mod simnet;
 pub mod tensor;
 pub mod testkit;
 pub mod util;

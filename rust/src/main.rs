@@ -1,14 +1,17 @@
 //! fedscalar — launcher CLI.
 //!
 //! Subcommands:
-//!   train    run one federated training run and write its history CSV
-//!   suite    run the full four-method figure suite (Figs 2-6 data)
-//!   table1   print the paper's Table I (and the FedScalar counterpart)
-//!   info     show artifact manifest + platform info
+//!   train       run one federated training run and write its history CSV
+//!   suite       run the full four-method figure suite (Figs 2-6 data)
+//!   table1      print the paper's Table I (and the FedScalar counterpart)
+//!   strategies  list every registered strategy (name pattern + summary)
+//!   info        show artifact manifest + platform info
 //!
 //! Examples:
 //!   fedscalar train --method fedscalar-rademacher --rounds 200 --backend xla
+//!   fedscalar train --sampler uniform8 --availability churn0.2 --deadline 2.5
 //!   fedscalar suite --runs 10 --rounds 1500 --out results/
+//!   fedscalar strategies
 //!   fedscalar table1
 
 use fedscalar::algo::Method;
@@ -19,6 +22,7 @@ use fedscalar::exp::figures::{make_backend, run_figure_suite, Axis, BackendKind,
 use fedscalar::exp::table1;
 use fedscalar::log_info;
 use fedscalar::netsim::Schedule;
+use fedscalar::simnet::{Availability, SamplerPolicy};
 use fedscalar::util::cli::Args;
 use fedscalar::util::logger;
 use std::path::PathBuf;
@@ -48,10 +52,11 @@ fn usage() -> String {
      USAGE: fedscalar <COMMAND> [OPTIONS]\n\
      \n\
      COMMANDS:\n\
-       train    one federated run (see `fedscalar train --help`)\n\
-       suite    the four-method figure suite (Figs 2-6 data)\n\
-       table1   print Table I (upload-time arithmetic)\n\
-       info     artifact + platform info\n"
+       train       one federated run (see `fedscalar train --help`)\n\
+       suite       the four-method figure suite (Figs 2-6 data)\n\
+       table1      print Table I (upload-time arithmetic)\n\
+       strategies  list every registered strategy\n\
+       info        artifact + platform info\n"
         .to_string()
 }
 
@@ -61,30 +66,91 @@ fn common_cfg(a: &Args) -> Result<ExperimentConfig> {
     } else {
         ExperimentConfig::from_toml_file(a.get("config"))?
     };
-    cfg.fed.rounds = a.get_usize("rounds")?;
-    cfg.fed.num_agents = a.get_usize("agents")?;
-    cfg.fed.local_steps = a.get_usize("local-steps")?;
-    cfg.fed.batch_size = a.get_usize("batch")?;
-    cfg.fed.alpha = a.get_f64("alpha")? as f32;
-    cfg.fed.eval_every = a.get_usize("eval-every")?;
-    cfg.fed.participation = a.get_f64("participation")?;
-    cfg.network.channel.nominal_bps = a.get_f64("bandwidth")?;
-    cfg.network.channel.sigma = a.get_f64("sigma")?;
-    cfg.network.p_tx_watts = a.get_f64("p-tx")?;
-    cfg.artifacts_dir = PathBuf::from(a.get("artifacts"));
-    cfg.network.schedule = Schedule::parse(&a.get("schedule"))
-        .ok_or_else(|| Error::config("bad --schedule (tdma|concurrent)"))?;
-    cfg.data = match a.get("data").as_str() {
-        "artifacts" => DataSource::ArtifactCsv,
-        "synthetic" => DataSource::Synthetic,
-        other => return Err(Error::config(format!("bad --data {other:?}"))),
-    };
+    // a flag overrides the config file only when explicitly passed; the
+    // flag defaults mirror the paper §III values, so a run without
+    // --config behaves identically either way, while a --config file
+    // (e.g. configs/fleet.toml's [scenario] table) keeps its values
+    if a.provided("rounds") {
+        cfg.fed.rounds = a.get_usize("rounds")?;
+    }
+    if a.provided("agents") {
+        cfg.fed.num_agents = a.get_usize("agents")?;
+    }
+    if a.provided("local-steps") {
+        cfg.fed.local_steps = a.get_usize("local-steps")?;
+    }
+    if a.provided("batch") {
+        cfg.fed.batch_size = a.get_usize("batch")?;
+    }
+    if a.provided("alpha") {
+        cfg.fed.alpha = a.get_f64("alpha")? as f32;
+    }
+    if a.provided("eval-every") {
+        cfg.fed.eval_every = a.get_usize("eval-every")?;
+    }
+    if a.provided("participation") {
+        cfg.fed.participation = a.get_f64("participation")?;
+    }
+    if a.provided("bandwidth") {
+        cfg.network.channel.nominal_bps = a.get_f64("bandwidth")?;
+    }
+    if a.provided("sigma") {
+        cfg.network.channel.sigma = a.get_f64("sigma")?;
+    }
+    if a.provided("p-tx") {
+        cfg.network.p_tx_watts = a.get_f64("p-tx")?;
+    }
+    if a.provided("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(a.get("artifacts"));
+    }
+    if a.provided("schedule") {
+        cfg.network.schedule = Schedule::parse(&a.get("schedule"))
+            .ok_or_else(|| Error::config("bad --schedule (tdma|concurrent)"))?;
+    }
+    if a.provided("data") {
+        cfg.data = match a.get("data").as_str() {
+            "artifacts" => DataSource::ArtifactCsv,
+            "synthetic" => DataSource::Synthetic,
+            other => return Err(Error::config(format!("bad --data {other:?}"))),
+        };
+    }
+    // scenario surface (see `rust/src/simnet/`): defaults are §III
+    if a.provided("sampler") {
+        cfg.scenario.sampler = SamplerPolicy::parse(&a.get("sampler")).ok_or_else(|| {
+            Error::config("bad --sampler (full|uniform<k>|deadline<k>+<over>)")
+        })?;
+    }
+    if a.provided("availability") {
+        cfg.scenario.availability =
+            Availability::parse(&a.get("availability")).ok_or_else(|| {
+                Error::config("bad --availability (always|duty<on>/<period>|churn<p>)")
+            })?;
+    }
+    if a.provided("deadline") {
+        cfg.scenario.deadline_s = match a.get_f64("deadline")? {
+            d if d > 0.0 => Some(d),
+            d if d == 0.0 => None,
+            _ => return Err(Error::config("bad --deadline (seconds > 0, or 0 for none)")),
+        };
+    }
+    if a.provided("downlink-bps") {
+        cfg.scenario.downlink_bps = a.get_f64("downlink-bps")?;
+    }
+    if a.provided("compute-spread") {
+        cfg.scenario.fleet.compute_spread = a.get_f64("compute-spread")?;
+    }
+    if a.provided("power-spread") {
+        cfg.scenario.fleet.power_spread = a.get_f64("power-spread")?;
+    }
+    if a.provided("rate-spread") {
+        cfg.scenario.fleet.rate_spread = a.get_f64("rate-spread")?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
 
 fn common_args(args: Args) -> Args {
-    args.opt("config", "", "TOML config file (flags override it)")
+    args.opt("config", "", "TOML config file (explicitly passed flags override it)")
         .opt("rounds", "1500", "communication rounds K")
         .opt("agents", "20", "number of agents N")
         .opt("local-steps", "5", "local SGD steps S")
@@ -99,6 +165,17 @@ fn common_args(args: Args) -> Args {
         .opt("data", "artifacts", "data source: artifacts|synthetic")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("backend", "xla", "compute backend: xla|pure-rust")
+        .opt("sampler", "full", "client selection: full|uniform<k>|deadline<k>+<over>")
+        .opt(
+            "availability",
+            "always",
+            "availability trace: always|duty<on>/<period>|churn<p>",
+        )
+        .opt("deadline", "0", "round deadline in simulated seconds (0 = none)")
+        .opt("downlink-bps", "0", "broadcast rate for downlink time (0 = instantaneous)")
+        .opt("compute-spread", "0", "fleet compute-speed spread (0 = homogeneous)")
+        .opt("power-spread", "0", "fleet transmit-power spread")
+        .opt("rate-spread", "0", "fleet uplink-rate spread (per-client channels)")
 }
 
 fn run_command(cmd: &str, rest: Vec<String>) -> Result<()> {
@@ -106,6 +183,7 @@ fn run_command(cmd: &str, rest: Vec<String>) -> Result<()> {
         "train" => cmd_train(rest),
         "suite" => cmd_suite(rest),
         "table1" => cmd_table1(),
+        "strategies" => cmd_strategies(),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
             println!("{}", usage());
@@ -117,7 +195,7 @@ fn run_command(cmd: &str, rest: Vec<String>) -> Result<()> {
 
 fn cmd_train(rest: Vec<String>) -> Result<()> {
     let a = common_args(Args::new("fedscalar train", "one federated training run"))
-        .opt("method", "fedscalar-rademacher", "strategy (fedscalar-normal|fedscalar-rademacher[-m<k>]|fedavg|qsgd[bits]|topk[k]|signsgd[-g<gamma>]|any registered strategy)")
+        .opt("method", "fedscalar-rademacher", "strategy name (run `fedscalar strategies` for the registered list)")
         .opt("run-seed", "0", "run seed")
         .opt("out", "results/train.csv", "history CSV output path")
         .parse(rest)?;
@@ -180,7 +258,8 @@ fn cmd_suite(rest: Vec<String>) -> Result<()> {
         println!("{name:<28} {loss:>12.4} {:>9.2}%", acc * 100.0);
     }
     for (axis, budget, unit) in [
-        (Axis::Bits, 1e6, "bits"),
+        (Axis::Bits, 1e6, "uplink bits"),
+        (Axis::TotalBits, 1e9, "total (up+down) bits"),
         (Axis::Seconds, 1250.0, "s"),
         (Axis::Joules, 50.0, "J"),
     ] {
@@ -193,6 +272,23 @@ fn cmd_suite(rest: Vec<String>) -> Result<()> {
         }
     }
     log_info!("per-method CSVs in {}", a.get("out"));
+    Ok(())
+}
+
+fn cmd_strategies() -> Result<()> {
+    println!(
+        "registered strategies (resolve by name via --method / fed.method):\n"
+    );
+    println!("{:<12} {:<44} {}", "FAMILY", "PATTERN", "SUMMARY");
+    let mut listed = fedscalar::algo::strategy::strategies();
+    listed.sort_by_key(|i| i.family);
+    for info in listed {
+        println!("{:<12} {:<44} {}", info.family, info.pattern, info.summary);
+    }
+    println!(
+        "\nout-of-tree strategies register via \
+         fedscalar::algo::strategy::register(StrategyInfo {{ .. }})."
+    );
     Ok(())
 }
 

@@ -20,6 +20,10 @@ pub struct RoundRecord {
     pub test_acc: f64,
     /// Cumulative uplink bits across all agents since round 0 (Fig 4 x).
     pub cum_bits: f64,
+    /// Cumulative downlink (broadcast) bits across all selected agents —
+    /// the first-class downlink cost of Zheng et al. (PAPERS.md), charged
+    /// via `Strategy::downlink_bits`.
+    pub cum_downlink_bits: f64,
     /// Cumulative simulated wall-clock seconds, eq. 12 (Fig 5 x).
     pub cum_sim_seconds: f64,
     /// Cumulative transmit energy in joules, eq. 13 (Fig 6 x).
@@ -68,6 +72,16 @@ impl RunHistory {
         )
     }
 
+    /// Accuracy at a total-communication budget: uplink + downlink bits
+    /// (the symmetric cost model of Zheng et al.).
+    pub fn acc_at_total_bits(&self, budget: f64) -> Option<f64> {
+        stats::value_at(
+            &self.series(|r| r.cum_bits + r.cum_downlink_bits),
+            &self.series(|r| r.test_acc),
+            budget,
+        )
+    }
+
     /// Accuracy at a simulated-time budget (Fig 5 readout).
     pub fn acc_at_seconds(&self, budget: f64) -> Option<f64> {
         stats::value_at(
@@ -95,6 +109,7 @@ impl RunHistory {
                 "test_loss",
                 "test_acc",
                 "cum_bits",
+                "cum_downlink_bits",
                 "cum_sim_seconds",
                 "cum_energy_joules",
                 "host_ms",
@@ -107,6 +122,7 @@ impl RunHistory {
                 r.test_loss,
                 r.test_acc,
                 r.cum_bits,
+                r.cum_downlink_bits,
                 r.cum_sim_seconds,
                 r.cum_energy_joules,
                 r.host_ms,
@@ -116,15 +132,24 @@ impl RunHistory {
     }
 }
 
+/// Bit-equality that treats NaN as equal to NaN. Applied ONLY to
+/// `train_loss` — the one field with a legitimate NaN (a round where no
+/// client was reachable); every other metric keeps strict equality so a
+/// bug that NaNs a counter in both engines still fails the comparison.
+fn feq(a: f64, b: f64) -> bool {
+    a == b || (a.is_nan() && b.is_nan())
+}
+
 impl RoundRecord {
     /// Equality on the *deterministic* metrics — everything except
     /// `host_ms`, which measures real wall time and differs run to run.
     pub fn same_metrics(&self, other: &RoundRecord) -> bool {
         self.round == other.round
-            && self.train_loss == other.train_loss
+            && feq(self.train_loss, other.train_loss)
             && self.test_loss == other.test_loss
             && self.test_acc == other.test_acc
             && self.cum_bits == other.cum_bits
+            && self.cum_downlink_bits == other.cum_downlink_bits
             && self.cum_sim_seconds == other.cum_sim_seconds
             && self.cum_energy_joules == other.cum_energy_joules
     }
@@ -160,6 +185,7 @@ pub fn average_runs(runs: &[RunHistory]) -> RunHistory {
             test_loss: pick(&|r| r.test_loss),
             test_acc: pick(&|r| r.test_acc),
             cum_bits: pick(&|r| r.cum_bits),
+            cum_downlink_bits: pick(&|r| r.cum_downlink_bits),
             cum_sim_seconds: pick(&|r| r.cum_sim_seconds),
             cum_energy_joules: pick(&|r| r.cum_energy_joules),
             host_ms: pick(&|r| r.host_ms),
@@ -179,6 +205,7 @@ mod tests {
             test_loss: 0.5,
             test_acc: acc,
             cum_bits: bits,
+            cum_downlink_bits: 10.0 * bits,
             cum_sim_seconds: secs,
             cum_energy_joules: joules,
             host_ms: 1.0,
@@ -200,7 +227,23 @@ mod tests {
         assert_eq!(h.acc_at_bits(50.0), None);
         assert_eq!(h.acc_at_seconds(3.0), Some(0.9));
         assert_eq!(h.acc_at_joules(1.2), Some(0.5));
+        // total = uplink + downlink = 11x the uplink series here
+        assert_eq!(h.acc_at_total_bits(2500.0), Some(0.5));
+        assert_eq!(h.acc_at_total_bits(1000.0), None);
         assert_eq!(h.final_accuracy(), 0.9);
+    }
+
+    #[test]
+    fn nan_rounds_compare_equal_across_engines() {
+        // an all-dropped round records NaN train loss in BOTH engines;
+        // history comparison must not treat that as divergence
+        let mut a = rec(3, 0.5, 100.0, 1.0, 0.5);
+        let mut b = rec(3, 0.5, 100.0, 1.0, 0.5);
+        a.train_loss = f64::NAN;
+        b.train_loss = f64::NAN;
+        assert!(a.same_metrics(&b));
+        b.train_loss = 0.2;
+        assert!(!a.same_metrics(&b));
     }
 
     #[test]

@@ -9,6 +9,12 @@
 //!
 //! The simulated clock these produce is what Figs 5-6 plot — exactly how
 //! the paper itself computes them.
+//!
+//! These are the *formula primitives*. The round-lifecycle layer on top —
+//! device heterogeneity, availability traces, client sampling, straggler
+//! deadlines, downlink accounting — is [`crate::simnet`], which consumes
+//! these functions and reduces bit-identically to them under the default
+//! (paper §III) scenario.
 
 mod channel;
 mod energy;

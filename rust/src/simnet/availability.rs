@@ -1,0 +1,149 @@
+//! Client availability traces: which devices are reachable each round.
+//!
+//! Availability is a *pure function* of `(model, seed, round, client)` —
+//! no mutable trace state — so the sequential and distributed engines
+//! (and any thread count) agree on the reachable set by construction.
+
+use crate::rng::{canon, SplitMix64};
+
+/// When a client is reachable for selection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Availability {
+    /// Every client reachable every round (the paper's §III setting).
+    AlwaysOn,
+    /// Periodic duty cycle: client `i` is on for `on` of every `period`
+    /// rounds, with windows staggered by client id so the fleet never
+    /// goes dark all at once.
+    DutyCycle { period: u32, on: u32 },
+    /// Seeded churn: each `(round, client)` pair is independently offline
+    /// with probability `p_off`.
+    Churn { p_off: f64 },
+}
+
+impl Availability {
+    /// Is `client` reachable in `round`? Stateless and deterministic.
+    pub fn is_on(&self, seed: u64, round: u64, client: u64) -> bool {
+        match *self {
+            Availability::AlwaysOn => true,
+            Availability::DutyCycle { period, on } => {
+                ((round + client) % period as u64) < on as u64
+            }
+            Availability::Churn { p_off } => {
+                let h = SplitMix64::derive(
+                    SplitMix64::derive(seed ^ 0xa4a1_1ab1_e000_0009, round),
+                    client,
+                );
+                let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+                u >= p_off
+            }
+        }
+    }
+
+    /// The reachable subset of `0..n` in `round`, ascending.
+    pub fn on_clients(&self, seed: u64, round: u64, n: usize) -> Vec<usize> {
+        (0..n)
+            .filter(|&c| self.is_on(seed, round, c as u64))
+            .collect()
+    }
+
+    /// Canonical name (`parse(name()) == Some(self)`).
+    pub fn name(&self) -> String {
+        match *self {
+            Availability::AlwaysOn => "always".to_string(),
+            Availability::DutyCycle { period, on } => format!("duty{on}/{period}"),
+            Availability::Churn { p_off } => format!("churn{p_off}"),
+        }
+    }
+
+    /// Parse `always`, `duty<on>/<period>` (e.g. `duty4/10`), or
+    /// `churn<p>` (e.g. `churn0.2`), canonicalized like every other name
+    /// parser in the crate.
+    pub fn parse(s: &str) -> Option<Availability> {
+        let s = canon(s);
+        if s == "always" || s == "always-on" {
+            return Some(Availability::AlwaysOn);
+        }
+        if let Some(rest) = s.strip_prefix("duty") {
+            let (on, period) = rest.split_once('/')?;
+            let (on, period) = (on.parse().ok()?, period.parse().ok()?);
+            if on == 0 || period == 0 || on > period {
+                return None;
+            }
+            return Some(Availability::DutyCycle { period, on });
+        }
+        if let Some(rest) = s.strip_prefix("churn") {
+            let p_off: f64 = rest.parse().ok()?;
+            if !(0.0..1.0).contains(&p_off) {
+                return None;
+            }
+            return Some(Availability::Churn { p_off });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_on_is_everyone() {
+        let a = Availability::AlwaysOn;
+        assert_eq!(a.on_clients(0, 0, 4), vec![0, 1, 2, 3]);
+        assert_eq!(a.on_clients(9, 173, 4), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn duty_cycle_staggers_by_client() {
+        let a = Availability::DutyCycle { period: 4, on: 1 };
+        // exactly one quarter of a 4-client fleet is on each round, and
+        // the window rotates
+        for round in 0..8u64 {
+            let on = a.on_clients(0, round, 4);
+            assert_eq!(on.len(), 1, "round {round}: {on:?}");
+        }
+        assert_ne!(a.on_clients(0, 0, 4), a.on_clients(0, 1, 4));
+        // a client's own schedule is periodic
+        assert_eq!(a.is_on(0, 0, 0), a.is_on(0, 4, 0));
+    }
+
+    #[test]
+    fn churn_is_seeded_and_roughly_calibrated() {
+        let a = Availability::Churn { p_off: 0.3 };
+        let mut on = 0usize;
+        let total = 20_000;
+        for round in 0..(total / 20) as u64 {
+            for client in 0..20u64 {
+                if a.is_on(7, round, client) {
+                    on += 1;
+                }
+            }
+        }
+        let frac = on as f64 / total as f64;
+        assert!((frac - 0.7).abs() < 0.02, "on fraction {frac}");
+        // deterministic per (seed, round, client)
+        assert_eq!(a.is_on(7, 3, 5), a.is_on(7, 3, 5));
+        // different seeds give different traces
+        let diff = (0..200u64).filter(|&r| a.is_on(7, r, 0) != a.is_on(8, r, 0)).count();
+        assert!(diff > 20, "only {diff}/200 rounds differ across seeds");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for a in [
+            Availability::AlwaysOn,
+            Availability::DutyCycle { period: 10, on: 4 },
+            Availability::Churn { p_off: 0.25 },
+        ] {
+            assert_eq!(Availability::parse(&a.name()), Some(a), "{}", a.name());
+        }
+        assert_eq!(Availability::parse(" Always-On "), Some(Availability::AlwaysOn));
+        assert_eq!(
+            Availability::parse("duty2/5"),
+            Some(Availability::DutyCycle { period: 5, on: 2 })
+        );
+        for bad in ["duty0/5", "duty6/5", "duty5", "churn1.0", "churn-0.1", "sometimes"] {
+            assert_eq!(Availability::parse(bad), None, "{bad}");
+        }
+    }
+}

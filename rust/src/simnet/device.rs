@@ -1,0 +1,152 @@
+//! Per-client device heterogeneity: compute speed, transmit power, and
+//! (optionally) a dedicated uplink channel.
+//!
+//! A [`DeviceProfile`] is everything the scenario simulator needs to know
+//! about one client's hardware. The defaults describe the paper's §III
+//! reference device exactly — `SimNet` with all-default profiles is
+//! bit-identical to the legacy analytic netsim (multiplying by `1.0` is an
+//! IEEE identity, and a `None` channel draws from the shared fading
+//! stream in the same order the old engine did).
+
+use crate::netsim::ChannelConfig;
+use crate::rng::{SplitMix64, Xoshiro256};
+
+/// One client's hardware as the simulator sees it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    /// Wall-clock multiplier on the reference local-compute time
+    /// (`latency::t_other_seconds`): 1.0 = reference device, 2.0 = half
+    /// speed. Must be finite and > 0.
+    pub compute_mult: f64,
+    /// Multiplier on the network's transmit power: the effective radio
+    /// power is `network.p_tx_watts * p_tx_mult`.
+    pub p_tx_mult: f64,
+    /// Dedicated uplink channel (own nominal rate + fading stream).
+    /// `None` = the shared base channel, sampled in active-client order —
+    /// the legacy configuration.
+    pub channel: Option<ChannelConfig>,
+}
+
+impl Default for DeviceProfile {
+    fn default() -> Self {
+        DeviceProfile {
+            compute_mult: 1.0,
+            p_tx_mult: 1.0,
+            channel: None,
+        }
+    }
+}
+
+impl DeviceProfile {
+    pub fn is_reference(&self) -> bool {
+        self.compute_mult == 1.0 && self.p_tx_mult == 1.0 && self.channel.is_none()
+    }
+}
+
+/// Seeded fleet heterogeneity: log-symmetric multiplier spreads around the
+/// reference device. A spread of `s` draws multipliers uniformly in
+/// log-space over `[1/(1+s), 1+s]`, so slow and fast devices are equally
+/// likely and `s = 0` collapses to the reference (drawing nothing).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FleetConfig {
+    /// Spread of per-client compute-time multipliers (0 = homogeneous).
+    pub compute_spread: f64,
+    /// Spread of per-client transmit-power multipliers.
+    pub power_spread: f64,
+    /// Spread of per-client nominal uplink rates. Any nonzero value gives
+    /// every client a dedicated [`ChannelConfig`] (own fading stream).
+    pub rate_spread: f64,
+}
+
+impl FleetConfig {
+    pub fn is_homogeneous(&self) -> bool {
+        self.compute_spread == 0.0 && self.power_spread == 0.0 && self.rate_spread == 0.0
+    }
+
+    /// Generate the fleet's profiles. Deterministic in `(self, n, seed,
+    /// base)` and independent of everything else in the run — the
+    /// distributed and sequential engines build identical fleets.
+    pub fn profiles(&self, n: usize, base: &ChannelConfig, seed: u64) -> Vec<DeviceProfile> {
+        if self.is_homogeneous() {
+            return vec![DeviceProfile::default(); n];
+        }
+        let mut rng = Xoshiro256::seed_from(SplitMix64::derive(seed, 0xf1ee_7000));
+        (0..n)
+            .map(|_| {
+                let compute_mult = log_symmetric(&mut rng, self.compute_spread);
+                let p_tx_mult = log_symmetric(&mut rng, self.power_spread);
+                let channel = if self.rate_spread > 0.0 {
+                    Some(ChannelConfig {
+                        nominal_bps: base.nominal_bps * log_symmetric(&mut rng, self.rate_spread),
+                        sigma: base.sigma,
+                    })
+                } else {
+                    None
+                };
+                DeviceProfile {
+                    compute_mult,
+                    p_tx_mult,
+                    channel,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Multiplier uniform in log-space over `[1/(1+s), 1+s]`; exactly 1.0
+/// (without consuming randomness) when `s == 0`.
+fn log_symmetric(rng: &mut Xoshiro256, s: f64) -> f64 {
+    if s == 0.0 {
+        return 1.0;
+    }
+    let span = (1.0 + s).ln();
+    ((2.0 * rng.uniform_f64() - 1.0) * span).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_fleet_is_all_reference() {
+        let fleet = FleetConfig::default().profiles(7, &ChannelConfig::default(), 3);
+        assert_eq!(fleet.len(), 7);
+        assert!(fleet.iter().all(|p| p.is_reference()));
+    }
+
+    #[test]
+    fn heterogeneous_fleet_is_seeded_and_bounded() {
+        let cfg = FleetConfig {
+            compute_spread: 1.0,
+            power_spread: 0.5,
+            rate_spread: 0.25,
+        };
+        let base = ChannelConfig::default();
+        let a = cfg.profiles(32, &base, 9);
+        let b = cfg.profiles(32, &base, 9);
+        assert_eq!(a, b, "fleet generation must be deterministic per seed");
+        assert_ne!(a, cfg.profiles(32, &base, 10));
+        for p in &a {
+            assert!(p.compute_mult >= 0.5 - 1e-12 && p.compute_mult <= 2.0 + 1e-12);
+            assert!(p.p_tx_mult >= 1.0 / 1.5 - 1e-12 && p.p_tx_mult <= 1.5 + 1e-12);
+            let ch = p.channel.as_ref().expect("rate_spread > 0 => own channel");
+            assert!(ch.nominal_bps >= base.nominal_bps / 1.25 - 1e-6);
+            assert!(ch.nominal_bps <= base.nominal_bps * 1.25 + 1e-6);
+            assert_eq!(ch.sigma, base.sigma);
+        }
+        // actually heterogeneous
+        assert!(a.iter().any(|p| p.compute_mult != a[0].compute_mult));
+    }
+
+    #[test]
+    fn partial_spread_leaves_other_axes_at_reference() {
+        let cfg = FleetConfig {
+            compute_spread: 2.0,
+            power_spread: 0.0,
+            rate_spread: 0.0,
+        };
+        let fleet = cfg.profiles(10, &ChannelConfig::default(), 0);
+        assert!(fleet.iter().all(|p| p.p_tx_mult == 1.0 && p.channel.is_none()));
+        assert!(fleet.iter().any(|p| p.compute_mult != 1.0));
+    }
+}

@@ -1,0 +1,171 @@
+//! Deterministic discrete-event core: a virtual-clock priority queue.
+//!
+//! Ordering is total and platform-independent: events pop by
+//! `(time, sequence)` where `time` compares via `f64::total_cmp` and
+//! `sequence` is the push order — so simultaneous events resolve in the
+//! order they were scheduled, never by heap internals. This is the
+//! determinism contract every `simnet` lifecycle leans on: the same
+//! schedule of pushes produces the same pop order on every machine and
+//! for every `fed.threads` value (events are only ever pushed/popped from
+//! the coordinator thread).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<T> {
+    time: f64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; reverse so the EARLIEST (time, seq)
+        // pops first
+        other
+            .time
+            .total_cmp(&self.time)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// A min-queue of timed events with deterministic tie-breaking.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+    clock: f64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            clock: 0.0,
+        }
+    }
+
+    /// Schedule `payload` at absolute virtual time `time` (seconds).
+    /// Scheduling into the past is an invariant violation.
+    pub fn push(&mut self, time: f64, payload: T) {
+        assert!(
+            time.is_finite() && time >= self.clock,
+            "event at t={time} scheduled before clock {}",
+            self.clock
+        );
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { time, seq, payload });
+    }
+
+    /// Pop the earliest event, advancing the virtual clock to its time.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        let e = self.heap.pop()?;
+        self.clock = e.time;
+        Some((e.time, e.payload))
+    }
+
+    /// Current virtual time (the timestamp of the last popped event).
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(q.clock(), 3.0);
+    }
+
+    #[test]
+    fn simultaneous_events_pop_in_push_order() {
+        let mut q = EventQueue::new();
+        for i in 0..50 {
+            q.push(1.5, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push(0.5, ());
+        q.push(0.5, ());
+        q.push(0.75, ());
+        let mut last = 0.0;
+        while let Some((t, ())) = q.pop() {
+            assert!(t >= last);
+            last = t;
+        }
+        assert_eq!(q.clock(), 0.75);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduled before clock")]
+    fn scheduling_into_the_past_rejected() {
+        let mut q = EventQueue::new();
+        q.push(2.0, ());
+        q.pop();
+        q.push(1.0, ());
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_deterministic() {
+        // two runs with identical push schedules agree event for event
+        let run = || -> Vec<(u64, u32)> {
+            let mut q = EventQueue::new();
+            let mut out = Vec::new();
+            q.push(1.0, 0u32);
+            q.push(1.0, 1);
+            let (t, p) = q.pop().unwrap();
+            out.push((t.to_bits(), p));
+            q.push(1.0, 2); // same timestamp as remaining event, later seq
+            while let Some((t, p)) = q.pop() {
+                out.push((t.to_bits(), p));
+            }
+            out
+        };
+        assert_eq!(run(), run());
+        assert_eq!(
+            run().iter().map(|&(_, p)| p).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+    }
+}

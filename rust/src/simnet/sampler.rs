@@ -1,0 +1,247 @@
+//! Client sampling policies: which of the *available* clients the server
+//! activates each round (Konečný et al. 2016's partial-participation
+//! regime; deadline-aware over-selection after the production FL systems
+//! literature).
+//!
+//! Selection runs on the leader only — once per round, in round order —
+//! so the active set is identical between the sequential and distributed
+//! engines and independent of `fed.threads`. The uniform policy's RNG
+//! stream reproduces the legacy engine's `participation` sampling
+//! bit-for-bit (same seed derivation, same no-draw fast path when the
+//! whole fleet is selected).
+
+use crate::rng::{canon, SplitMix64, Xoshiro256};
+use crate::simnet::DeviceProfile;
+
+/// The selection rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerPolicy {
+    /// Activate every available client (the paper's §III setting).
+    Full,
+    /// Activate `k` clients uniformly at random from the available set
+    /// (all of them when fewer than `k` are available).
+    UniformK(usize),
+    /// Deadline-aware over-selection: the `target` fastest available
+    /// devices (by compute multiplier, client id as tiebreak) plus `over`
+    /// uniform extras as dropout insurance.
+    DeadlineAware { target: usize, over: usize },
+}
+
+impl SamplerPolicy {
+    /// Canonical name (`parse(name()) == Some(self)`).
+    pub fn name(&self) -> String {
+        match *self {
+            SamplerPolicy::Full => "full".to_string(),
+            SamplerPolicy::UniformK(k) => format!("uniform{k}"),
+            SamplerPolicy::DeadlineAware { target, over } => format!("deadline{target}+{over}"),
+        }
+    }
+
+    /// Parse `full`, `uniform<k>`, or `deadline<target>+<over>`
+    /// (e.g. `uniform8`, `deadline8+2`).
+    pub fn parse(s: &str) -> Option<SamplerPolicy> {
+        let s = canon(s);
+        if s == "full" {
+            return Some(SamplerPolicy::Full);
+        }
+        if let Some(rest) = s.strip_prefix("uniform") {
+            let k: usize = rest.parse().ok()?;
+            if k == 0 {
+                return None;
+            }
+            return Some(SamplerPolicy::UniformK(k));
+        }
+        if let Some(rest) = s.strip_prefix("deadline") {
+            let (target, over) = rest.split_once('+')?;
+            let (target, over) = (target.parse().ok()?, over.parse().ok()?);
+            if target == 0 {
+                return None;
+            }
+            return Some(SamplerPolicy::DeadlineAware { target, over });
+        }
+        None
+    }
+}
+
+/// Per-run sampler state: the policy plus its (run-seeded) RNG stream.
+pub struct Sampler {
+    policy: SamplerPolicy,
+    rng: Xoshiro256,
+}
+
+impl Sampler {
+    /// `run_seed` derivation matches the legacy engine's participation
+    /// stream (`derive(run_seed, 0xac71)`), so uniform-k selection under
+    /// the old `fed.participation` knob is bit-identical across the
+    /// refactor.
+    pub fn new(policy: SamplerPolicy, run_seed: u64) -> Sampler {
+        Sampler {
+            policy,
+            rng: Xoshiro256::seed_from(SplitMix64::derive(run_seed, 0xac71)),
+        }
+    }
+
+    pub fn policy(&self) -> SamplerPolicy {
+        self.policy
+    }
+
+    /// Select this round's active set from `avail` (client ids). The
+    /// returned order is the order clients encode/upload in — it is part
+    /// of the determinism contract, not a set.
+    pub fn select(&mut self, avail: &[usize], profiles: &[DeviceProfile]) -> Vec<usize> {
+        match self.policy {
+            SamplerPolicy::Full => avail.to_vec(),
+            SamplerPolicy::UniformK(k) => {
+                if k >= avail.len() {
+                    // the legacy full-fleet fast path: no RNG draw
+                    return avail.to_vec();
+                }
+                self.rng
+                    .sample_indices(avail.len(), k)
+                    .into_iter()
+                    .map(|i| avail[i])
+                    .collect()
+            }
+            SamplerPolicy::DeadlineAware { target, over } => {
+                if target >= avail.len() {
+                    return avail.to_vec();
+                }
+                // fastest `target` devices by compute multiplier (total
+                // order: multiplier, then id — platform-independent)
+                let mut by_speed = avail.to_vec();
+                by_speed.sort_by(|&a, &b| {
+                    profiles[a]
+                        .compute_mult
+                        .total_cmp(&profiles[b].compute_mult)
+                        .then(a.cmp(&b))
+                });
+                let mut active: Vec<usize> = by_speed[..target].to_vec();
+                let pool = &by_speed[target..];
+                let extras = over.min(pool.len());
+                if extras > 0 {
+                    active.extend(
+                        self.rng
+                            .sample_indices(pool.len(), extras)
+                            .into_iter()
+                            .map(|i| pool[i]),
+                    );
+                }
+                active
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(mults: &[f64]) -> Vec<DeviceProfile> {
+        mults
+            .iter()
+            .map(|&m| DeviceProfile {
+                compute_mult: m,
+                ..DeviceProfile::default()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn full_returns_available_in_order() {
+        let profiles = fleet(&[1.0; 5]);
+        let mut s = Sampler::new(SamplerPolicy::Full, 0);
+        assert_eq!(s.select(&[0, 2, 4], &profiles), vec![0, 2, 4]);
+        assert_eq!(s.select(&[], &profiles), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn uniform_k_is_k_distinct_available_clients() {
+        let profiles = fleet(&[1.0; 10]);
+        let avail: Vec<usize> = vec![1, 3, 5, 7, 9];
+        let mut s = Sampler::new(SamplerPolicy::UniformK(3), 7);
+        for _ in 0..50 {
+            let active = s.select(&avail, &profiles);
+            assert_eq!(active.len(), 3);
+            let mut sorted = active.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3);
+            assert!(active.iter().all(|c| avail.contains(c)));
+        }
+        // k >= available: everyone, no draw
+        let mut s2 = Sampler::new(SamplerPolicy::UniformK(8), 7);
+        assert_eq!(s2.select(&avail, &profiles), avail);
+    }
+
+    #[test]
+    fn uniform_matches_legacy_participation_stream() {
+        // the legacy engine drew sample_indices(n, k) from
+        // Xoshiro(derive(run_seed, 0xac71)) once per partial round
+        let run_seed = 33u64;
+        let n = 8usize;
+        let k = 4usize;
+        let mut legacy = Xoshiro256::seed_from(SplitMix64::derive(run_seed, 0xac71));
+        let mut s = Sampler::new(SamplerPolicy::UniformK(k), run_seed);
+        let avail: Vec<usize> = (0..n).collect();
+        let profiles = fleet(&[1.0; 8]);
+        for _ in 0..6 {
+            assert_eq!(s.select(&avail, &profiles), legacy.sample_indices(n, k));
+        }
+    }
+
+    #[test]
+    fn deadline_aware_prefers_fast_devices() {
+        let profiles = fleet(&[3.0, 0.5, 2.0, 0.7, 1.0, 9.0]);
+        let avail: Vec<usize> = (0..6).collect();
+        let mut s = Sampler::new(SamplerPolicy::DeadlineAware { target: 2, over: 1 }, 1);
+        let active = s.select(&avail, &profiles);
+        assert_eq!(active.len(), 3);
+        // the two fastest (ids 1 and 3) always lead
+        assert_eq!(&active[..2], &[1, 3]);
+        // the extra comes from the remaining pool
+        assert!([0, 2, 4, 5].contains(&active[2]));
+        // ties break by id: a homogeneous fleet selects the lowest ids
+        let flat = fleet(&[1.0; 6]);
+        let mut s2 = Sampler::new(SamplerPolicy::DeadlineAware { target: 3, over: 0 }, 1);
+        assert_eq!(s2.select(&avail, &flat), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn selection_is_deterministic_per_seed() {
+        let profiles = fleet(&[1.0; 20]);
+        let avail: Vec<usize> = (0..20).collect();
+        for policy in [
+            SamplerPolicy::UniformK(5),
+            SamplerPolicy::DeadlineAware { target: 4, over: 3 },
+        ] {
+            let mut a = Sampler::new(policy, 5);
+            let mut b = Sampler::new(policy, 5);
+            for _ in 0..10 {
+                assert_eq!(a.select(&avail, &profiles), b.select(&avail, &profiles));
+            }
+            let mut c = Sampler::new(policy, 6);
+            let diverged = (0..10)
+                .any(|_| a.select(&avail, &profiles) != c.select(&avail, &profiles));
+            assert!(diverged, "{policy:?} ignored its seed");
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in [
+            SamplerPolicy::Full,
+            SamplerPolicy::UniformK(8),
+            SamplerPolicy::DeadlineAware { target: 8, over: 2 },
+        ] {
+            assert_eq!(SamplerPolicy::parse(&p.name()), Some(p), "{}", p.name());
+        }
+        assert_eq!(SamplerPolicy::parse(" Uniform4 "), Some(SamplerPolicy::UniformK(4)));
+        assert_eq!(
+            SamplerPolicy::parse("deadline10+0"),
+            Some(SamplerPolicy::DeadlineAware { target: 10, over: 0 })
+        );
+        for bad in ["uniform0", "deadline0+2", "deadline5", "halfish"] {
+            assert_eq!(SamplerPolicy::parse(bad), None, "{bad}");
+        }
+    }
+}

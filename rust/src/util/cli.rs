@@ -126,6 +126,11 @@ impl Args {
         Ok(self)
     }
 
+    /// Was `--name` explicitly passed (vs falling back to its default)?
+    pub fn provided(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+
     pub fn get(&self, name: &str) -> String {
         if let Some(v) = self.values.get(name) {
             return v.clone();
@@ -188,6 +193,10 @@ mod tests {
         assert_eq!(a.get("out"), "/tmp/x");
         assert!(a.get_bool("verbose"));
         assert_eq!(a.get_usize("rounds").unwrap(), 5);
+        // provided() distinguishes explicit flags from defaults (what
+        // lets a --config file keep its values unless overridden)
+        assert!(a.provided("rounds"));
+        assert!(!a.provided("method"));
     }
 
     #[test]

@@ -38,3 +38,24 @@ fn noniid_toml_sets_dirichlet() {
     assert_eq!(cfg.dirichlet_alpha, Some(0.5));
     assert_eq!(cfg.data, DataSource::ArtifactCsv);
 }
+
+#[test]
+fn fleet_toml_sets_the_scenario_surface() {
+    use fedscalar::simnet::{Availability, SamplerPolicy};
+    let cfg = ExperimentConfig::from_toml_file("configs/fleet.toml").unwrap();
+    assert_eq!(cfg.scenario.sampler, SamplerPolicy::UniformK(8));
+    assert_eq!(cfg.scenario.availability, Availability::Churn { p_off: 0.1 });
+    assert_eq!(cfg.scenario.deadline_s, Some(2.5));
+    assert_eq!(cfg.scenario.downlink_bps, 1_000_000.0);
+    assert_eq!(cfg.scenario.fleet.compute_spread, 3.0);
+    assert_eq!(cfg.scenario.fleet.rate_spread, 0.5);
+    assert_eq!(cfg.data, DataSource::Synthetic);
+    assert!(!cfg.scenario.is_legacy());
+    // the other shipped configs stay on the paper's §III scenario
+    for f in ["configs/paper.toml", "configs/lpwan.toml", "configs/noniid.toml"] {
+        assert!(
+            ExperimentConfig::from_toml_file(f).unwrap().scenario.is_legacy(),
+            "{f}"
+        );
+    }
+}

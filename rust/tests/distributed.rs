@@ -63,11 +63,12 @@ fn frame_bytes_measured_on_the_wire() {
         eng.uplink_frame_bytes(),
         (rounds * agents * 13) as u64
     );
-    // downlink: model frame = 1 + 4 + 4 + 4d bytes per agent per round
+    // downlink per selected agent per round: round-plan frame
+    // (1 + 4 + 4 + 4·|active|) + model frame (1 + 4 + 4 + 4d)
     let d = c.model.param_dim();
     assert_eq!(
         eng.downlink_frame_bytes(),
-        (rounds * agents * (9 + 4 * d)) as u64
+        (rounds * agents * ((9 + 4 * agents) + (9 + 4 * d))) as u64
     );
 }
 
@@ -80,10 +81,17 @@ fn multi_projection_distributed_equals_sequential() {
 }
 
 #[test]
-fn partial_participation_rejected_for_now() {
-    let mut c = cfg(Method::fedavg(), 2, 3);
+fn partial_participation_distributed_equals_sequential() {
+    // the leader's sampler stream is shared with the sequential engine,
+    // and the per-round active set rides the WireRoundPlan frame — the
+    // two engines select, run, and aggregate identical subsets
+    let mut c = cfg(Method::fedscalar(VDistribution::Rademacher, 1), 10, 6);
     c.fed.participation = 0.5;
-    assert!(DistributedEngine::from_config(&c, 0).is_err());
+    let seq = run_pure_rust(&c, 11).unwrap();
+    let dist = DistributedEngine::from_config(&c, 11).unwrap().run().unwrap();
+    assert!(same_histories(&seq, &dist));
+    // 10 rounds * 3 active agents * 64 bits
+    assert_eq!(dist.records.last().unwrap().cum_bits, (10 * 3 * 64) as f64);
 }
 
 #[test]

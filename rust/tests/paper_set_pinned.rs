@@ -78,9 +78,14 @@ fn reference_run(cfg: &ExperimentConfig, run_seed: u64) -> RunHistory {
         Kind::FedAvg => (d as u64) * 32,
         Kind::Qsgd => 32 + (d as u64) * 8,
     };
+    // downlink: the broadcast model, 32d bits per agent per round (the
+    // Strategy::downlink_bits default) — a counter the seed engine never
+    // kept; its analytic value pins the new accounting
+    let per_agent_down_bits: u64 = (d as u64) * 32;
 
     let mut history = RunHistory::new(cfg.fed.method.name());
-    let (mut cum_bits, mut cum_secs, mut cum_joules) = (0.0f64, 0.0f64, 0.0f64);
+    let (mut cum_bits, mut cum_down, mut cum_secs, mut cum_joules) =
+        (0.0f64, 0.0f64, 0.0f64, 0.0f64);
     for k in 0..cfg.fed.rounds {
         let eval = k % cfg.fed.eval_every == 0 || k + 1 == cfg.fed.rounds;
         // --- client stages, serial, in client order ---------------------
@@ -130,6 +135,7 @@ fn reference_run(cfg: &ExperimentConfig, run_seed: u64) -> RunHistory {
         let round_seconds =
             latency::round_wall_time(&per_agent_seconds, cfg.network.schedule, t_other_s);
         cum_bits += round_bits as f64;
+        cum_down += (per_agent_down_bits * n as u64) as f64;
         cum_secs += round_seconds;
         cum_joules += round_energy;
         // --- aggregate + apply (the seed server.rs, inlined) ------------
@@ -163,6 +169,7 @@ fn reference_run(cfg: &ExperimentConfig, run_seed: u64) -> RunHistory {
                 test_loss: test_loss as f64,
                 test_acc: test_acc as f64,
                 cum_bits,
+                cum_downlink_bits: cum_down,
                 cum_sim_seconds: cum_secs,
                 cum_energy_joules: cum_joules,
                 host_ms: 0.0, // excluded from same_histories

@@ -1,0 +1,327 @@
+//! The `simnet` acceptance suite: legacy equivalence (the event-driven
+//! simulator pinned bit-identical to the old analytic netsim), scenario
+//! determinism across thread counts and engines, and partial
+//! participation for every shipped strategy in both engines.
+
+use fedscalar::algo::Method;
+use fedscalar::config::ExperimentConfig;
+use fedscalar::coordinator::engine::run_pure_rust;
+use fedscalar::coordinator::DistributedEngine;
+use fedscalar::metrics::same_histories;
+use fedscalar::netsim::{
+    energy_joules, latency, upload_seconds, Channel, ChannelConfig, NetworkConfig, Schedule,
+};
+use fedscalar::rng::VDistribution;
+use fedscalar::simnet::{Availability, SamplerPolicy, SimNet};
+use fedscalar::testkit::forall;
+
+/// THE legacy-equivalence property: with homogeneous profiles, full
+/// participation, and no deadline, the event-driven lifecycle reproduces
+/// the old per-round formulas — wall-clock AND energy — bit for bit,
+/// across random fleets, payloads, fading, and both MAC schedules.
+#[test]
+fn prop_homogeneous_simnet_is_bit_identical_to_legacy_netsim() {
+    forall("simnet legacy equivalence", 60, |g| {
+        let n = g.usize_in(1, 12);
+        let d = g.usize_in(1, 5000);
+        let bits = g.usize_in(1, 1 << 20) as u64;
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let rounds = g.usize_in(1, 6);
+        let schedule = *g.pick(&[Schedule::Tdma, Schedule::Concurrent]);
+        let sigma = *g.pick(&[0.0, 0.1, 0.25]);
+        let network = NetworkConfig {
+            channel: ChannelConfig {
+                nominal_bps: g.f32_in(1e3, 1e6) as f64,
+                sigma,
+            },
+            schedule,
+            ..NetworkConfig::default()
+        };
+
+        let mut sim = SimNet::legacy(&network, d, n, seed);
+        // the pre-simnet engine's inline accounting, reproduced
+        let mut channel = Channel::new(network.channel.clone(), seed);
+        let t_other = latency::t_other_seconds(
+            &network.latency,
+            d,
+            n,
+            network.channel.nominal_bps,
+            schedule,
+        );
+        let active: Vec<usize> = (0..n).collect();
+        let mut legacy_clock = 0.0f64;
+        for round in 0..rounds {
+            let mut per_agent = Vec::with_capacity(n);
+            let mut energy = 0.0f64;
+            for _ in 0..n {
+                let rate = channel.sample_rate_bps();
+                per_agent.push(upload_seconds(bits, rate));
+                energy += energy_joules(network.p_tx_watts, bits, rate);
+            }
+            let want_secs = latency::round_wall_time(&per_agent, schedule, t_other);
+            legacy_clock += want_secs;
+
+            let report = sim.run_round(&active, bits, 0);
+            if report.round_seconds != want_secs {
+                return Err(format!(
+                    "round {round}: clock {} != legacy {want_secs} \
+                     (n={n} bits={bits} {schedule:?} sigma={sigma})",
+                    report.round_seconds
+                ));
+            }
+            if report.energy_joules != energy {
+                return Err(format!(
+                    "round {round}: energy {} != legacy {energy}",
+                    report.energy_joules
+                ));
+            }
+            if report.uplink_bits != bits * n as u64 {
+                return Err(format!("round {round}: bits {}", report.uplink_bits));
+            }
+            if report.dropped != 0 {
+                return Err("legacy scenario dropped a client".into());
+            }
+        }
+        if sim.clock_seconds() != legacy_clock {
+            return Err(format!(
+                "virtual clock {} != accumulated legacy {legacy_clock}",
+                sim.clock_seconds()
+            ));
+        }
+        Ok(())
+    });
+}
+
+fn scenario_cfg(method: Method) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.fed.method = method;
+    cfg.fed.num_agents = 9;
+    cfg.fed.rounds = 10;
+    cfg.fed.eval_every = 2;
+    cfg.scenario.sampler = SamplerPolicy::UniformK(4);
+    cfg.scenario.availability = Availability::Churn { p_off: 0.25 };
+    cfg.scenario.fleet.compute_spread = 1.0;
+    cfg.scenario.downlink_bps = 500_000.0;
+    cfg
+}
+
+/// Event ordering — hence the RunHistory — must not depend on
+/// `fed.threads`, even with churn, sub-sampling, heterogeneous compute,
+/// a timed downlink, and a straggler deadline all active at once.
+#[test]
+fn scenario_history_is_thread_count_independent() {
+    let mut cfg = scenario_cfg(Method::fedscalar(VDistribution::Rademacher, 1));
+    // a deadline between the fast and slow devices' finish times, so
+    // drops actually happen
+    let probe = run_pure_rust(&cfg, 3).unwrap();
+    let mean_round = probe.records.last().unwrap().cum_sim_seconds / cfg.fed.rounds as f64;
+    cfg.scenario.deadline_s = Some(mean_round);
+    cfg.fed.threads = 1;
+    let serial = run_pure_rust(&cfg, 3).unwrap();
+    for threads in [2, 4, 13] {
+        cfg.fed.threads = threads;
+        let parallel = run_pure_rust(&cfg, 3).unwrap();
+        assert!(
+            same_histories(&serial, &parallel),
+            "threads={threads} diverged under the scenario"
+        );
+    }
+    // and the scenario actually bites: fewer uplink bits than the full
+    // fleet would have sent
+    let full_bits = (cfg.fed.rounds * cfg.fed.num_agents * 64) as f64;
+    assert!(serial.records.last().unwrap().cum_bits < full_bits);
+}
+
+/// The deadline-drop path itself is engine-parity-tested: with a
+/// heterogeneous fleet and a biting deadline, both engines drop the same
+/// clients, charge the same truncated energy/bits, and average the same
+/// survivor losses — bit for bit.
+#[test]
+fn deadline_drops_identical_across_engines() {
+    let mut cfg = scenario_cfg(Method::fedscalar(VDistribution::Rademacher, 1));
+    // calibrate a deadline from the no-deadline pace, tight enough that
+    // the slow half of the fleet misses it in most rounds
+    let probe = run_pure_rust(&cfg, 6).unwrap();
+    let mean_round = probe.records.last().unwrap().cum_sim_seconds / cfg.fed.rounds as f64;
+    cfg.scenario.deadline_s = Some(0.75 * mean_round);
+    let seq = run_pure_rust(&cfg, 6).unwrap();
+    let dist = DistributedEngine::from_config(&cfg, 6).unwrap().run().unwrap();
+    assert!(
+        same_histories(&seq, &dist),
+        "deadline-drop rounds diverged between engines"
+    );
+    // drops really happened: dropped clients deliver strictly fewer bits
+    // than the no-deadline probe
+    assert!(
+        seq.records.last().unwrap().cum_bits < probe.records.last().unwrap().cum_bits,
+        "deadline never dropped anyone — the parity check above was vacuous"
+    );
+}
+
+/// All five shipped strategies run under partial participation in BOTH
+/// engines; the deterministic four are bit-identical across engines
+/// (QSGD's per-worker rounding streams differ by design — it must still
+/// run and learn, asserted separately below).
+#[test]
+fn all_strategies_partial_participation_seq_equals_dist() {
+    for method in [
+        Method::fedscalar(VDistribution::Normal, 1),
+        Method::fedscalar(VDistribution::Rademacher, 1),
+        Method::fedavg(),
+        Method::topk(16),
+        Method::signsgd(),
+    ] {
+        let mut cfg = ExperimentConfig::smoke();
+        cfg.fed.method = method;
+        cfg.fed.num_agents = 6;
+        cfg.fed.rounds = 8;
+        cfg.fed.eval_every = 2;
+        cfg.fed.participation = 0.5;
+        let seq = run_pure_rust(&cfg, 21).unwrap();
+        let dist = DistributedEngine::from_config(&cfg, 21)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(
+            same_histories(&seq, &dist),
+            "{} diverged between engines under partial participation",
+            cfg.fed.method.name()
+        );
+    }
+}
+
+#[test]
+fn qsgd_partial_participation_distributed_runs_and_learns() {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.fed.method = Method::qsgd(8);
+    cfg.fed.num_agents = 6;
+    cfg.fed.rounds = 60;
+    cfg.fed.eval_every = 30;
+    cfg.fed.alpha = 0.02;
+    cfg.fed.participation = 0.5;
+    let h = DistributedEngine::from_config(&cfg, 2).unwrap().run().unwrap();
+    assert!(h.records.last().unwrap().train_loss < h.records[0].train_loss);
+    // 60 rounds * 3 active * (32 + d*8) bits
+    let want = (60 * 3) as f64 * (32.0 + 1990.0 * 8.0);
+    assert_eq!(h.records.last().unwrap().cum_bits, want);
+}
+
+/// Downlink bits are now charged (Strategy::downlink_bits, default 32d),
+/// identically by both engines.
+#[test]
+fn downlink_bits_charged_by_both_engines() {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.fed.method = Method::fedscalar(VDistribution::Rademacher, 1);
+    cfg.fed.num_agents = 4;
+    cfg.fed.rounds = 6;
+    cfg.fed.eval_every = 3;
+    let d = cfg.model.param_dim();
+    let seq = run_pure_rust(&cfg, 0).unwrap();
+    let want = (6 * 4 * d * 32) as f64;
+    assert_eq!(seq.records.last().unwrap().cum_downlink_bits, want);
+    // uplink stays dimension-free while downlink dominates — the Zheng
+    // et al. asymmetry the scenario layer exists to expose
+    assert_eq!(seq.records.last().unwrap().cum_bits, (6 * 4 * 64) as f64);
+    let dist = DistributedEngine::from_config(&cfg, 0).unwrap().run().unwrap();
+    assert!(same_histories(&seq, &dist));
+}
+
+/// Duty-cycle availability: only the on-window clients ever upload, and
+/// rounds where nobody is reachable idle (NaN train loss on eval rounds,
+/// identical across engines).
+#[test]
+fn duty_cycle_availability_limits_uploads_and_idles_empty_rounds() {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.fed.method = Method::fedavg();
+    cfg.fed.num_agents = 2;
+    cfg.fed.rounds = 8;
+    cfg.fed.eval_every = 1;
+    cfg.scenario.availability = Availability::DutyCycle { period: 4, on: 1 };
+    let h = run_pure_rust(&cfg, 5).unwrap();
+    // per round, client c is on iff (round + c) % 4 < 1: rounds 0,4 have
+    // client 0; rounds 3,7 have client 1; rounds 1,2,5,6 are empty
+    let d = cfg.model.param_dim();
+    let want_uploads = 4u64;
+    assert_eq!(
+        h.records.last().unwrap().cum_bits,
+        (want_uploads * (d as u64) * 32) as f64
+    );
+    let empty_rounds: Vec<usize> = h
+        .records
+        .iter()
+        .filter(|r| r.train_loss.is_nan())
+        .map(|r| r.round)
+        .collect();
+    assert_eq!(empty_rounds, vec![1, 2, 5, 6]);
+    // identical across engines, NaN rounds included
+    let dist = DistributedEngine::from_config(&cfg, 5).unwrap().run().unwrap();
+    assert!(same_histories(&h, &dist));
+}
+
+/// Deadline-aware over-selection against a heterogeneous fleet: the
+/// sampler prefers fast devices, so fewer drops (and no fewer survivors)
+/// than uniform selection under the same deadline.
+#[test]
+fn deadline_aware_sampler_beats_uniform_on_drop_rate() {
+    let base = |sampler: SamplerPolicy| {
+        let mut cfg = ExperimentConfig::smoke();
+        cfg.fed.method = Method::fedscalar(VDistribution::Rademacher, 1);
+        cfg.fed.num_agents = 10;
+        cfg.fed.rounds = 12;
+        cfg.fed.eval_every = 12;
+        cfg.scenario.sampler = sampler;
+        cfg.scenario.fleet.compute_spread = 3.0;
+        cfg
+    };
+    // pick a deadline from the homogeneous-selection run's pace
+    let probe = run_pure_rust(&base(SamplerPolicy::UniformK(4)), 1).unwrap();
+    let mean_round = probe.records.last().unwrap().cum_sim_seconds / 12.0;
+    let run = |sampler: SamplerPolicy| {
+        let mut cfg = base(sampler);
+        cfg.scenario.deadline_s = Some(0.9 * mean_round);
+        run_pure_rust(&cfg, 1).unwrap()
+    };
+    let uniform = run(SamplerPolicy::UniformK(4));
+    let aware = run(SamplerPolicy::DeadlineAware { target: 4, over: 2 });
+    // survivors upload full payloads; cum_bits is a survivor counter
+    // (dropped TDMA stragglers charge partial bits, but strictly less)
+    assert!(
+        aware.records.last().unwrap().cum_bits >= uniform.records.last().unwrap().cum_bits,
+        "deadline-aware ({}) sent fewer bits than uniform ({})",
+        aware.records.last().unwrap().cum_bits,
+        uniform.records.last().unwrap().cum_bits,
+    );
+}
+
+/// The [scenario] TOML table drives the whole surface end to end.
+#[test]
+fn scenario_toml_runs_end_to_end() {
+    let cfg = ExperimentConfig::from_toml_str(
+        r#"
+[fed]
+method = "topk16"
+num_agents = 6
+rounds = 6
+eval_every = 3
+
+[scenario]
+sampler = "uniform3"
+availability = "churn0.2"
+compute_spread = 0.5
+downlink_bps = 250000.0
+
+[data]
+source = "synthetic"
+"#,
+    )
+    .unwrap();
+    let h = run_pure_rust(&cfg, 8).unwrap();
+    assert_eq!(h.method, "topk16");
+    let last = h.records.last().unwrap();
+    assert!(last.cum_bits > 0.0);
+    assert!(last.cum_downlink_bits > 0.0);
+    assert!(last.cum_sim_seconds > 0.0);
+    // determinism under the scenario
+    let h2 = run_pure_rust(&cfg, 8).unwrap();
+    assert!(same_histories(&h, &h2));
+}

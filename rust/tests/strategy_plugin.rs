@@ -5,7 +5,7 @@
 //! own bit accounting charged, without modifying a single
 //! `rust/src/coordinator/` file.
 
-use fedscalar::algo::{strategy, Method, Strategy};
+use fedscalar::algo::{strategy, Method, Strategy, StrategyInfo};
 use fedscalar::config::ExperimentConfig;
 use fedscalar::coordinator::engine::run_pure_rust;
 use fedscalar::coordinator::Uplink;
@@ -69,7 +69,21 @@ fn parse_stride(s: &str) -> Option<Method> {
 
 #[test]
 fn test_local_strategy_runs_end_to_end() {
-    strategy::register(parse_stride);
+    strategy::register(StrategyInfo {
+        family: "stride",
+        pattern: "stride<k>",
+        summary: "keep every k-th coordinate (structured sketch)",
+        parse: parse_stride,
+    });
+
+    // the registration is enumerable by name (the `strategies` CLI
+    // subcommand's data source), not an opaque fn
+    let listed = strategy::strategies();
+    let entry = listed
+        .iter()
+        .find(|i| i.family == "stride")
+        .expect("stride listed");
+    assert_eq!(entry.pattern, "stride<k>");
 
     // resolves by name — through the same path the CLI and TOML use
     let m = Method::parse("stride7").expect("registered strategy resolves");
