@@ -15,11 +15,24 @@
 use fedscalar::algo::Method;
 use fedscalar::config::{DataSource, ExperimentConfig};
 use fedscalar::coordinator::engine::run_pure_rust;
+use fedscalar::coordinator::Engine;
 use fedscalar::error::Result;
+use fedscalar::metrics::RunHistory;
 use fedscalar::rng::VDistribution;
+use fedscalar::runtime::PureRustBackend;
 use fedscalar::simnet::{Availability, SamplerPolicy};
 use fedscalar::util::cli::Args;
 use fedscalar::util::csv::CsvWriter;
+
+/// Run one scenario and also report how many devices drained their
+/// battery (the engine owns the SimNet, so `run_pure_rust` can't see it).
+fn run_with_battery_report(cfg: &ExperimentConfig, seed: u64) -> Result<(RunHistory, usize)> {
+    let mut be = PureRustBackend::new(&cfg.model);
+    be.set_shape(cfg.fed.local_steps, cfg.fed.batch_size);
+    let mut engine = Engine::from_config(cfg, Box::new(be), seed)?;
+    let h = engine.run()?;
+    Ok((h, engine.exhausted_clients()))
+}
 
 fn main() -> Result<()> {
     fedscalar::util::logger::init_from_env();
@@ -56,14 +69,21 @@ fn main() -> Result<()> {
     let run_seed = a.get_u64("run-seed")?;
 
     // calibrate the deadline from the always-on full-participation pace:
-    // tight enough that the slowest quartile misses it
+    // tight enough that the slowest quartile misses it — and a per-client
+    // energy budget that roughly half the sweep's rounds can drain, so
+    // battery exhaustion is visible in the grid
     let probe = run_pure_rust(&base, run_seed)?;
-    let mean_round =
-        probe.records.last().unwrap().cum_sim_seconds / base.fed.rounds as f64;
+    let last_probe = probe.records.last().unwrap();
+    let mean_round = last_probe.cum_sim_seconds / base.fed.rounds as f64;
     let deadline = 0.75 * mean_round;
+    let per_client_round_j =
+        last_probe.cum_energy_joules / (base.fed.rounds * base.fed.num_agents) as f64;
+    let budget = 0.5 * per_client_round_j * base.fed.rounds as f64;
+    base.scenario.fleet.energy_budget_j = budget;
     println!(
-        "fleet: N={} compute spread 4x, deadline {:.3} s (75% of mean round {:.3} s)\n",
-        base.fed.num_agents, deadline, mean_round
+        "fleet: N={} compute spread 4x, deadline {:.3} s (75% of mean round {:.3} s),\n\
+         battery {:.4} J/client (~half the sweep's upload energy)\n",
+        base.fed.num_agents, deadline, mean_round, budget
     );
 
     let out_path = a.get("out");
@@ -77,11 +97,12 @@ fn main() -> Result<()> {
             "energy_joules",
             "uplink_bits",
             "downlink_bits",
+            "exhausted",
         ],
     )?;
     println!(
-        "{:<14} {:<10} {:>9} {:>12} {:>11} {:>12} {:>14}",
-        "sampler", "avail", "acc", "sim_s", "joules", "up_bits", "down_bits"
+        "{:<14} {:<10} {:>9} {:>12} {:>11} {:>12} {:>14} {:>10}",
+        "sampler", "avail", "acc", "sim_s", "joules", "up_bits", "down_bits", "exhausted"
     );
     for sampler in samplers {
         for trace in traces {
@@ -89,10 +110,10 @@ fn main() -> Result<()> {
             cfg.scenario.sampler = sampler;
             cfg.scenario.availability = trace;
             cfg.scenario.deadline_s = Some(deadline);
-            let h = run_pure_rust(&cfg, run_seed)?;
+            let (h, exhausted) = run_with_battery_report(&cfg, run_seed)?;
             let last = h.records.last().unwrap();
             println!(
-                "{:<14} {:<10} {:>8.1}% {:>12.2} {:>11.4} {:>12} {:>14}",
+                "{:<14} {:<10} {:>8.1}% {:>12.2} {:>11.4} {:>12} {:>14} {:>7}/{}",
                 sampler.name(),
                 trace.name(),
                 100.0 * last.test_acc,
@@ -100,6 +121,8 @@ fn main() -> Result<()> {
                 last.cum_energy_joules,
                 last.cum_bits,
                 last.cum_downlink_bits,
+                exhausted,
+                cfg.fed.num_agents,
             );
             csv.row_str(&[
                 sampler.name(),
@@ -109,6 +132,7 @@ fn main() -> Result<()> {
                 format!("{:.6}", last.cum_energy_joules),
                 format!("{}", last.cum_bits),
                 format!("{}", last.cum_downlink_bits),
+                format!("{exhausted}"),
             ])?;
         }
     }
@@ -116,8 +140,10 @@ fn main() -> Result<()> {
     println!(
         "\nsummary written to {out_path}\n\
          deadline-aware over-selection keeps the round tight without starving\n\
-         aggregation; FedScalar's 64-bit uplink makes every dropped straggler\n\
-         nearly free in energy — rerun with --rounds for tighter accuracy."
+         aggregation; sub-sampling policies also spread the battery load, so\n\
+         fewer devices exhaust their budget than under full participation —\n\
+         and FedScalar's 64-bit uplink makes every dropped straggler nearly\n\
+         free in energy. Rerun with --rounds for tighter accuracy."
     );
     Ok(())
 }

@@ -206,6 +206,34 @@ fn main() {
     b.run("engine round 20 clients threads=auto", || {
         eng_par.run_round(0, false).unwrap()
     });
+    // the drop-heavy round: churn + a deadline that bites + top-k error
+    // feedback — puts the delivery-feedback (NACK) bookkeeping cost
+    // (in-flight tracking, residual restores, outcome scan) on the
+    // trajectory next to the clean round above
+    let mut eng_drop = {
+        let mut cfg = ExperimentConfig::smoke();
+        cfg.fed.num_agents = 20;
+        cfg.fed.method = Method::topk(64);
+        cfg.scenario.availability = fedscalar::simnet::Availability::Churn { p_off: 0.2 };
+        cfg.scenario.fleet.compute_spread = 2.0;
+        let t_other = fedscalar::netsim::latency::t_other_seconds(
+            &cfg.network.latency,
+            cfg.model.param_dim(),
+            cfg.fed.num_agents,
+            cfg.network.channel.nominal_bps,
+            cfg.network.schedule,
+        );
+        cfg.scenario.deadline_s = Some(1.2 * t_other);
+        let mut be = PureRustBackend::new(&cfg.model);
+        be.set_shape(cfg.fed.local_steps, cfg.fed.batch_size);
+        Engine::from_config(&cfg, Box::new(be), 0).expect("drop-heavy engine")
+    };
+    let mut drop_round = 0usize;
+    b.run("engine round 20 clients topk64 deadline churn (nack)", || {
+        let k = drop_round;
+        drop_round += 1;
+        eng_drop.run_round(k, false).unwrap()
+    });
 
     header("simnet round lifecycle (20 clients, event-driven netsim)");
     {
@@ -231,7 +259,9 @@ fn main() {
                 compute_spread: 2.0,
                 power_spread: 0.5,
                 rate_spread: 0.5,
+                ..FleetConfig::default()
             },
+            ..ScenarioConfig::default()
         };
         let mut hetero = SimNet::new(&network, &scenario, d, 20, 0);
         let mut sampler = Sampler::new(scenario.sampler, 0);

@@ -108,6 +108,16 @@ impl Quantizer {
 /// at all — seeded exactly as the pre-strategy engine did
 /// (`SplitMix64::derive(run_seed, 0x9594)`), so paper-set runs stay
 /// bit-identical across the refactor.
+///
+/// **Delivery feedback**: `on_dropped` keeps the trait default (no-op) on
+/// purpose. The rounding stream advanced during the dropped encode, and
+/// it stays advanced: the draws model the client's local computation,
+/// which happened whether or not the radio delivered the result — and in
+/// the sequential engine the stream is shared across clients in encode
+/// order, so a mid-round rewind of one client would corrupt the others'
+/// draws. Both engines therefore treat dropped QSGD rounds identically:
+/// randomness consumed, nothing to restore (unlike Top-k, QSGD carries no
+/// cross-round mass to lose).
 pub struct QsgdStrategy {
     quantizer: Quantizer,
 }

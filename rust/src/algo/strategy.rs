@@ -97,6 +97,26 @@ pub trait Strategy: Send {
         Ok(Uplink::Dense { delta, loss })
     }
 
+    /// Delivery feedback (NACK): the round-`round` upload this strategy
+    /// encoded for `client` was NOT delivered — the radio dropped it at
+    /// the deadline, or the client never reached its upload slot. Called
+    /// by the sequential engine for every non-delivered active client
+    /// (after the survivors were aggregated), and by the distributed
+    /// worker when the leader's NACK frame arrives — so encode-side state
+    /// evolves identically on both paths.
+    ///
+    /// Stateful strategies whose encode advances client-side bookkeeping
+    /// must undo the delivery-assuming part here: Top-k restores the
+    /// un-delivered mass into the client's error-feedback residual.
+    /// Consumed randomness (e.g. QSGD's stochastic-rounding draws) stays
+    /// consumed — the client's local computation happened regardless of
+    /// what the radio did. The default (delivery-agnostic strategies) is
+    /// a no-op.
+    fn on_dropped(&mut self, client: usize, round: u64) -> Result<()> {
+        let _ = (client, round);
+        Ok(())
+    }
+
     /// Server-side: aggregate one round of uplinks into `params`, in
     /// place. Returns the mean client-reported loss of the round (f64 —
     /// full precision so the sequential and distributed engines agree
@@ -187,6 +207,14 @@ pub struct StrategyInfo {
     pub summary: &'static str,
     /// The name parser.
     pub parse: StrategyParser,
+    /// Named wire frames this family ships beyond the built-in kinds.
+    /// [`register`] assigns each name a dynamic frame tag from the open
+    /// range (see `coordinator::wire::tag`); the strategy looks its tags
+    /// up with [`crate::coordinator::wire::dynamic_tag`] and ships
+    /// [`Uplink::Opaque`](crate::coordinator::messages::Uplink::Opaque)
+    /// payloads under them — no `wire.rs` edits. Empty for strategies
+    /// that reuse built-in frame kinds (all the shipped ones).
+    pub wire_tags: &'static [&'static str],
 }
 
 fn registry() -> &'static RwLock<Vec<StrategyInfo>> {
@@ -198,30 +226,35 @@ fn registry() -> &'static RwLock<Vec<StrategyInfo>> {
                 pattern: "fedscalar[-normal|-rademacher][-m<k>]",
                 summary: "seed + m scalar projections per round (Algorithm 1); 64 bits at m=1",
                 parse: crate::algo::fedscalar::parse,
+                wire_tags: &[],
             },
             StrategyInfo {
                 family: "fedavg",
                 pattern: "fedavg",
                 summary: "uncompressed d-float update (the classic baseline)",
                 parse: crate::algo::fedavg::parse,
+                wire_tags: &[],
             },
             StrategyInfo {
                 family: "qsgd",
                 pattern: "qsgd[<bits>]",
                 summary: "stochastic uniform quantization, <bits> (default 8) per coordinate",
                 parse: crate::algo::qsgd::parse,
+                wire_tags: &[],
             },
             StrategyInfo {
                 family: "topk",
                 pattern: "topk[<k>]",
                 summary: "top-k sparsification with client-side error feedback (default k=64)",
                 parse: crate::algo::topk::parse,
+                wire_tags: &[],
             },
             StrategyInfo {
                 family: "signsgd",
                 pattern: "signsgd[-g<gamma>]",
                 summary: "1 bit/coordinate with majority-vote aggregation",
                 parse: crate::algo::signsgd::parse,
+                wire_tags: &[],
             },
         ])
     })
@@ -230,8 +263,14 @@ fn registry() -> &'static RwLock<Vec<StrategyInfo>> {
 /// Register a strategy. Later registrations take precedence, so
 /// out-of-tree strategies can extend (or shadow) the built-in set;
 /// registration is process-global and idempotent re-registration is
-/// harmless.
+/// harmless. Any `wire_tags` names the entry carries are assigned dynamic
+/// frame tags from the open range (idempotent per name — re-registering
+/// keeps the same tag); look them up with
+/// [`crate::coordinator::wire::dynamic_tag`].
 pub fn register(info: StrategyInfo) {
+    for name in info.wire_tags {
+        crate::coordinator::wire::reserve_dynamic_tag(name);
+    }
     registry().write().unwrap().push(info);
 }
 
@@ -313,6 +352,7 @@ mod tests {
             pattern: "unit-test-strategy",
             summary: "fixed 123-bit strategy for registry tests",
             parse: parse_unit_test_strategy,
+            wire_tags: &[],
         });
         let m = parse(" Unit-Test-Strategy \n").expect("canonicalized lookup");
         assert_eq!(m.name(), "unit-test-strategy");

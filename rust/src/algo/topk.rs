@@ -7,6 +7,14 @@
 //! `e += delta; send top-k of e by |.|; e[sent] = 0`. The server applies
 //! the mean of the sparse updates by scatter-add. Uplink payload:
 //! `min(k, d)` (32-bit index, 32-bit value) pairs.
+//!
+//! **Delivery feedback.** Zeroing `e[sent]` assumes the upload lands. When
+//! the round protocol reports it did not ([`Strategy::on_dropped`] — a
+//! deadline casualty or a compute overrun), the un-delivered values are
+//! added back into the residual from the in-flight record the encode kept,
+//! so the mass re-competes in the next top-k selection instead of leaking
+//! out of training — the error-feedback failure mode compression papers
+//! warn about under lossy rounds.
 
 use crate::algo::strategy::{mean_loss, Strategy, BITS_PER_FLOAT};
 use crate::algo::Method;
@@ -23,6 +31,11 @@ pub struct TopK {
     /// Per-client error-feedback residuals, keyed by stable client id and
     /// sized lazily on first contact (so instantiation is d-free).
     residuals: HashMap<usize, Vec<f32>>,
+    /// The last un-acknowledged send per client: what `on_dropped` must
+    /// put back into the residual if the radio reports the upload lost.
+    /// Overwritten by the client's next encode; NOT part of `save_state`
+    /// (drops are resolved within the round, before any checkpoint).
+    in_flight: HashMap<usize, (Vec<u32>, Vec<f32>)>,
 }
 
 impl TopK {
@@ -31,6 +44,7 @@ impl TopK {
         TopK {
             k,
             residuals: HashMap::new(),
+            in_flight: HashMap::new(),
         }
     }
 
@@ -77,7 +91,27 @@ impl Strategy for TopK {
         for &i in &idx {
             r[i as usize] = 0.0;
         }
+        self.in_flight.insert(client, (idx.clone(), vals.clone()));
         Ok(Uplink::Sparse { idx, vals, loss })
+    }
+
+    /// NACK: the send never reached the server — return the in-flight
+    /// values to the residual so the mass re-competes next round, leaving
+    /// the encode-side state exactly as if the dropped send had not
+    /// happened (residual = pre-encode residual + that round's delta).
+    fn on_dropped(&mut self, client: usize, _round: u64) -> Result<()> {
+        let (idx, vals) = self
+            .in_flight
+            .remove(&client)
+            .ok_or_else(|| Error::invariant("topk NACK for a client with nothing in flight"))?;
+        let r = self
+            .residuals
+            .get_mut(&client)
+            .ok_or_else(|| Error::invariant("topk NACK for a client that never encoded"))?;
+        for (&i, &v) in idx.iter().zip(&vals) {
+            r[i as usize] += v;
+        }
+        Ok(())
     }
 
     fn aggregate_and_apply(
@@ -161,6 +195,9 @@ impl Strategy for TopK {
             }
         }
         self.residuals = residuals;
+        // in-flight sends never outlive their round, so a restored run
+        // starts with none
+        self.in_flight.clear();
         Ok(())
     }
 }
@@ -254,6 +291,59 @@ mod tests {
         let loss = s.aggregate_and_apply(&mut be, &mut params, &ups).unwrap();
         assert!((loss - 2.0).abs() < 1e-6);
         assert_eq!(params, vec![3.0, 0.0, 0.0, 0.0, -2.0, 4.0]);
+    }
+
+    #[test]
+    fn nack_restores_undelivered_mass() {
+        use crate::algo::Strategy;
+        let mut s = TopK::new(1);
+        // round 0: send the biggest coordinate; residual keeps the rest
+        let delta = vec![1.0f32, 0.5, -0.75];
+        let (idx, vals) = sparse(s.encode_delta(0, delta.clone(), 0.0).unwrap());
+        assert_eq!((idx, vals), (vec![0], vec![1.0]));
+        assert_eq!(s.residual(0).unwrap(), &[0.0, 0.5, -0.75]);
+        // ...but the radio drops it: the full round mass returns — the
+        // encode-side state is exactly as if the send had never happened
+        s.on_dropped(0, 0).unwrap();
+        assert_eq!(s.residual(0).unwrap(), delta.as_slice());
+        // next round (zero new gradient) re-sends the dropped mass first
+        let (idx, vals) = sparse(s.encode_delta(0, vec![0.0; 3], 0.0).unwrap());
+        assert_eq!((idx, vals), (vec![0], vec![1.0]));
+        // a second NACK for the same send is a protocol violation...
+        s.on_dropped(0, 1).unwrap(); // (this one NACKs the re-send)
+        assert!(s.on_dropped(0, 1).is_err());
+        // ...and so is a NACK for a client that never encoded
+        assert!(s.on_dropped(7, 0).is_err());
+    }
+
+    #[test]
+    fn dropped_round_does_not_advance_encode_state() {
+        // THE regression pin for the error-feedback leak: encode + NACK
+        // must leave the exact state a parallel universe without the
+        // dropped round's send would have — same residual bytes, same
+        // next selection.
+        use crate::algo::Strategy;
+        let d1 = vec![0.3f32, -2.0, 0.9, 0.0];
+        let d2 = vec![0.1f32, 0.1, -0.1, 4.0];
+        // universe A: round 0 send dropped (NACK), then round 1
+        let mut a = TopK::new(2);
+        a.encode_delta(5, d1.clone(), 0.0).unwrap();
+        a.on_dropped(5, 0).unwrap();
+        // universe B: never sent in round 0 — residual accumulated only
+        let mut b = TopK::new(2);
+        for (ri, di) in b
+            .residuals
+            .entry(5)
+            .or_insert_with(|| vec![0.0; 4])
+            .iter_mut()
+            .zip(&d1)
+        {
+            *ri += di;
+        }
+        assert_eq!(a.residual(5), b.residual(5));
+        let ua = sparse(a.encode_delta(5, d2.clone(), 0.0).unwrap());
+        let ub = sparse(b.encode_delta(5, d2, 0.0).unwrap());
+        assert_eq!(ua, ub);
     }
 
     #[test]

@@ -234,9 +234,11 @@ impl ExperimentConfig {
             sc.deadline_s = Some(dl);
         }
         sc.downlink_bps = getf("scenario", "downlink_bps", sc.downlink_bps);
+        sc.p_compute_watts = getf("scenario", "p_compute_watts", sc.p_compute_watts);
         sc.fleet.compute_spread = getf("scenario", "compute_spread", sc.fleet.compute_spread);
         sc.fleet.power_spread = getf("scenario", "power_spread", sc.fleet.power_spread);
         sc.fleet.rate_spread = getf("scenario", "rate_spread", sc.fleet.rate_spread);
+        sc.fleet.energy_budget_j = getf("scenario", "energy_budget_j", sc.fleet.energy_budget_j);
 
         if let Some(v) = doc.get("data", "source") {
             cfg.data = match v.as_str() {
@@ -349,6 +351,8 @@ availability = "duty4/10"
 deadline_s = 2.5
 downlink_bps = 100000.0
 compute_spread = 0.5
+energy_budget_j = 12.5
+p_compute_watts = 0.5
 
 [data]
 source = "synthetic"
@@ -364,6 +368,8 @@ source = "synthetic"
         assert_eq!(cfg.scenario.downlink_bps, 100_000.0);
         assert_eq!(cfg.scenario.fleet.compute_spread, 0.5);
         assert_eq!(cfg.scenario.fleet.rate_spread, 0.0);
+        assert_eq!(cfg.scenario.fleet.energy_budget_j, 12.5);
+        assert_eq!(cfg.scenario.p_compute_watts, 0.5);
         // omitted table = the paper's §III scenario
         let plain =
             ExperimentConfig::from_toml_str("[data]\nsource = \"synthetic\"\n").unwrap();
@@ -402,6 +408,8 @@ source = "synthetic"
             "[scenario]\ndeadline_s = -1.0\n",
             "[scenario]\ndownlink_bps = -5.0\n",
             "[scenario]\ncompute_spread = -0.5\n",
+            "[scenario]\nenergy_budget_j = -1.0\n",
+            "[scenario]\np_compute_watts = -0.5\n",
         ] {
             assert!(
                 ExperimentConfig::from_toml_str(bad).is_err(),

@@ -14,7 +14,11 @@
 //! strategy-encoded uplink frame. The leader decodes through its own
 //! strategy instance, drops deadline casualties per the [`SimNet`]
 //! report, aggregates, applies, and evaluates — no method dispatch
-//! anywhere in this file.
+//! anywhere in this file. Each casualty then receives a
+//! [`super::wire::WireNack`] delivery-feedback frame, on which the
+//! worker's strategy rolls back its delivery-assuming encode state
+//! ([`crate::algo::Strategy::on_dropped`]) — mirroring the sequential
+//! engine's in-process `on_dropped` calls client for client.
 //!
 //! Given the same config and run seed, FedScalar/FedAvg training metrics
 //! are bit-identical to the sequential engine (asserted by the
@@ -28,7 +32,7 @@ use crate::coordinator::client::ClientState;
 use crate::coordinator::engine::load_data;
 use crate::coordinator::messages::Uplink;
 use crate::coordinator::transport::{duplex, AgentEndpoint, LeaderEndpoint};
-use crate::coordinator::wire::{WireModel, WireRoundPlan};
+use crate::coordinator::wire::{WireModel, WireNack, WireRoundPlan};
 use crate::error::{Error, Result};
 use crate::metrics::{RoundRecord, RunHistory};
 use crate::nn::ModelSpec;
@@ -43,6 +47,10 @@ use std::time::Instant;
 enum Control {
     /// Run round k against the frame that follows on the downlink.
     Round,
+    /// A delivery NACK frame follows on the downlink: the worker's last
+    /// upload was dropped; its strategy must roll back delivery-assuming
+    /// state ([`Strategy::on_dropped`]).
+    Nack,
     /// Shut down.
     Stop,
 }
@@ -230,6 +238,33 @@ impl DistributedEngine {
             crate::algo::strategy::mean_loss_f32(&report.filter_survivors(losses))
         };
 
+        // delivery feedback: NACK every casualty so its worker-side
+        // strategy rolls back delivery-assuming encode state (Top-k
+        // residuals), exactly as the sequential engine's in-process
+        // `on_dropped` calls do — same clients, same active order. The
+        // leader's own strategy instance holds no client-side state in
+        // this engine, so the rollback happens only where the state
+        // lives: on the worker.
+        if !report.all_completed() {
+            for (i, &c) in active.iter().enumerate() {
+                if report.outcome[i].delivered() {
+                    continue;
+                }
+                let w = &self.workers[c];
+                w.control
+                    .send(Control::Nack)
+                    .map_err(|_| Error::invariant("worker died"))?;
+                let nack = WireNack {
+                    round: k as u32,
+                    client: c as u32,
+                };
+                w.endpoint
+                    .downlink
+                    .send(nack.encode())
+                    .map_err(Error::invariant)?;
+            }
+        }
+
         if eval {
             log_debug!(
                 "dist round {k}: loss={train_loss:.4} active={} dropped={}",
@@ -354,7 +389,39 @@ fn worker_main(
     // agents, and per-client state (error-feedback residuals) lives
     // client-side
     let mut strategy = method.instantiate(SplitMix64::derive(run_seed ^ 0x9594, id as u64));
-    while let Ok(Control::Round) = ctl.recv() {
+    // the round this worker last uploaded for — the only round a NACK may
+    // legitimately reference
+    let mut last_round: Option<u32> = None;
+    loop {
+        match ctl.recv() {
+            Ok(Control::Round) => {}
+            Ok(Control::Nack) => {
+                // delivery feedback: our last upload never landed — roll
+                // back the strategy's delivery-assuming encode state
+                let Ok(bytes) = ep.downlink.recv() else { return };
+                let Ok(nack) = WireNack::decode(&bytes) else {
+                    log_info!("worker {id}: undecodable NACK frame; shutting down");
+                    return;
+                };
+                if nack.client as usize != id || Some(nack.round) != last_round {
+                    log_info!(
+                        "worker {id}: NACK for client {} round {} does not match \
+                         this worker's last upload; shutting down",
+                        nack.client,
+                        nack.round
+                    );
+                    return;
+                }
+                if let Err(e) = strategy.on_dropped(id, nack.round as u64) {
+                    log_info!("worker {id}: on_dropped failed ({e}); shutting down");
+                    return;
+                }
+                // a send can only be NACKed once
+                last_round = None;
+                continue;
+            }
+            Ok(Control::Stop) | Err(_) => return,
+        }
         // the round plan precedes the model frame; a worker only ever
         // receives rounds it was selected for, and the plan lets it
         // verify that (and learn its slot order) from the wire alone
@@ -371,6 +438,7 @@ fn worker_main(
             );
             return;
         }
+        last_round = Some(plan.round);
         let Ok(frame) = ep.downlink.recv() else { return };
         let Ok(model) = WireModel::decode(&frame) else { return };
         state.fill_round_batches(steps, batch);

@@ -166,6 +166,12 @@ impl Engine {
         &self.params
     }
 
+    /// How many devices have drained their energy budget so far (0 when
+    /// the scenario sets no budget).
+    pub fn exhausted_clients(&self) -> usize {
+        self.simnet.exhausted_clients()
+    }
+
     /// Snapshot the optimization state (see coordinator::checkpoint for
     /// the resume semantics). Strategy-owned state (error-feedback
     /// residuals, rounding-stream positions) rides along via
@@ -393,14 +399,6 @@ impl Engine {
             // round loss falls back to the active clients' telemetry
             // (mean_loss_f32 — the same summation the distributed
             // engine's side channel uses).
-            //
-            // NOTE (modeled radio semantics): the client never learns its
-            // upload was cut — there is no ACK — so a stateful strategy's
-            // encode-side bookkeeping (e.g. Top-k's error-feedback
-            // residual) proceeds as if the upload was delivered, and the
-            // dropped update's mass leaves training. A deadline-NACK hook
-            // letting strategies restore dropped mass is a ROADMAP open
-            // item; both engines model the loss identically today.
             let losses: Vec<f32> = uplinks.iter().map(|u| u.loss()).collect();
             let survivors: Vec<Uplink> = report.filter_survivors(uplinks);
             if survivors.is_empty() {
@@ -413,6 +411,21 @@ impl Engine {
                 )?
             }
         };
+
+        // --- delivery feedback (NACK) -----------------------------------------
+        // every casualty — cut at the deadline or never reaching its
+        // upload slot — gets a NACK so encode-side strategy state (e.g.
+        // Top-k's error-feedback residual) can restore the un-delivered
+        // mass. In active order, after aggregation: the same order the
+        // distributed leader emits its NACK frames, so both engines'
+        // strategy state evolves identically.
+        if !report.all_completed() {
+            for (i, &ci) in active.iter().enumerate() {
+                if !report.outcome[i].delivered() {
+                    self.strategy.on_dropped(ci, k as u64)?;
+                }
+            }
+        }
 
         // --- evaluation -------------------------------------------------------
         if eval {

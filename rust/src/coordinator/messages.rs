@@ -34,6 +34,18 @@ pub enum Uplink {
         words: Vec<u64>,
         loss: f32,
     },
+    /// A strategy-owned payload under a dynamic frame tag
+    /// (`tag >= wire::tag::DYNAMIC_MIN`, assigned through
+    /// [`crate::algo::strategy::register`]'s `wire_tags`). The bytes are
+    /// opaque to the coordinator; only the owning strategy's
+    /// `aggregate_and_apply` interprets them — this is how out-of-tree
+    /// strategies ship bespoke frames with zero edits here or in
+    /// [`super::wire`].
+    Opaque {
+        tag: u8,
+        payload: Vec<u8>,
+        loss: f32,
+    },
 }
 
 impl Uplink {
@@ -46,6 +58,7 @@ impl Uplink {
             Uplink::Quantized { loss, .. } => *loss,
             Uplink::Sparse { loss, .. } => *loss,
             Uplink::Signs { loss, .. } => *loss,
+            Uplink::Opaque { loss, .. } => *loss,
         }
     }
 }

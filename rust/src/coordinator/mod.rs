@@ -28,4 +28,4 @@ pub use client::ClientState;
 pub use distributed::DistributedEngine;
 pub use engine::{Engine, RunOutput};
 pub use messages::Uplink;
-pub use wire::{WireModel, WireRoundPlan, WireUplink};
+pub use wire::{WireModel, WireNack, WireRoundPlan, WireUplink};

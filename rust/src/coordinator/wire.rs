@@ -13,20 +13,102 @@
 //! Telemetry (client loss, ‖δ‖²) is deliberately NOT part of the uplink
 //! frame — it rides in a separate side-channel struct in-process, mirroring
 //! how a real deployment would log locally rather than transmit.
+//!
+//! ## Frame-tag namespace
+//!
+//! Every frame starts with a one-byte tag. The tag space is split into a
+//! reserved built-in range and an open, strategy-owned dynamic range:
+//!
+//! * **`0 ..= 31` — reserved built-ins** ([`tag`]): the frames this module
+//!   defines (scalar / dense / quantized / sparse / signs uplinks, the
+//!   model broadcast, the round plan, and the delivery NACK). New
+//!   in-tree frame kinds take the next free value here.
+//! * **`32 ..= 255` — dynamic, registry-assigned**: out-of-tree
+//!   strategies name their frame kinds in
+//!   [`StrategyInfo::wire_tags`](crate::algo::StrategyInfo::wire_tags);
+//!   [`crate::algo::strategy::register`] assigns each name a tag via
+//!   [`reserve_dynamic_tag`] (stable per name for the process lifetime,
+//!   in registration order), and the strategy looks it up with
+//!   [`dynamic_tag`]. A dynamic frame's payload is opaque to this module:
+//!   [`WireUplink::decode`] returns it as [`WireUplink::Opaque`] (the
+//!   whole rest of the frame), and only the owning strategy's
+//!   `aggregate_and_apply` interprets the bytes — so bespoke frames ship
+//!   without editing this file.
 
 use crate::algo::QsgdPacket;
 use crate::coordinator::messages::Uplink;
 use crate::error::{Error, Result};
 use crate::runtime::ScalarUpload;
+use std::sync::{OnceLock, RwLock};
 
-/// Frame tags.
-const TAG_SCALAR: u8 = 1;
-const TAG_DENSE: u8 = 2;
-const TAG_QUANTIZED: u8 = 3;
-const TAG_MODEL: u8 = 4;
-const TAG_SPARSE: u8 = 5;
-const TAG_SIGNS: u8 = 6;
-const TAG_PLAN: u8 = 7;
+/// The reserved built-in frame tags (see the module docs for the
+/// namespace split).
+pub mod tag {
+    /// FedScalar seed + scalars uplink.
+    pub const SCALAR: u8 = 1;
+    /// Raw d-float uplink (FedAvg).
+    pub const DENSE: u8 = 2;
+    /// QSGD packed-levels uplink.
+    pub const QUANTIZED: u8 = 3;
+    /// Model broadcast (downlink).
+    pub const MODEL: u8 = 4;
+    /// Top-k (index, value) uplink.
+    pub const SPARSE: u8 = 5;
+    /// SignSGD packed-signs uplink.
+    pub const SIGNS: u8 = 6;
+    /// Round plan: the selected active set (downlink).
+    pub const PLAN: u8 = 7;
+    /// Delivery NACK: "your round-k upload was dropped" (downlink).
+    pub const NACK: u8 = 8;
+    /// Last tag reserved for built-in frames.
+    pub const BUILTIN_MAX: u8 = 31;
+    /// First tag of the strategy-owned dynamic range.
+    pub const DYNAMIC_MIN: u8 = 32;
+}
+
+fn dynamic_registry() -> &'static RwLock<Vec<String>> {
+    static TAGS: OnceLock<RwLock<Vec<String>>> = OnceLock::new();
+    TAGS.get_or_init(|| RwLock::new(Vec::new()))
+}
+
+/// Assign (or fetch) the dynamic frame tag for `name`. Idempotent per
+/// name; tags are handed out sequentially from [`tag::DYNAMIC_MIN`] in
+/// registration order, so a process that registers its strategies in a
+/// deterministic order gets deterministic tags. Panics when the 224-tag
+/// dynamic range is exhausted (registering that many frame kinds in one
+/// process is a bug, not a load).
+pub fn reserve_dynamic_tag(name: &str) -> u8 {
+    let mut tags = dynamic_registry().write().unwrap();
+    if let Some(i) = tags.iter().position(|t| t == name) {
+        return tag::DYNAMIC_MIN + i as u8;
+    }
+    let next = tags.len();
+    assert!(
+        next <= (u8::MAX - tag::DYNAMIC_MIN) as usize,
+        "dynamic wire-tag range exhausted"
+    );
+    tags.push(name.to_string());
+    tag::DYNAMIC_MIN + next as u8
+}
+
+/// Look up the dynamic frame tag previously reserved for `name` (None if
+/// no strategy registered it).
+pub fn dynamic_tag(name: &str) -> Option<u8> {
+    let tags = dynamic_registry().read().unwrap();
+    tags.iter()
+        .position(|t| t == name)
+        .map(|i| tag::DYNAMIC_MIN + i as u8)
+}
+
+/// Frame tags (module-internal shorthands for the reserved range).
+const TAG_SCALAR: u8 = tag::SCALAR;
+const TAG_DENSE: u8 = tag::DENSE;
+const TAG_QUANTIZED: u8 = tag::QUANTIZED;
+const TAG_MODEL: u8 = tag::MODEL;
+const TAG_SPARSE: u8 = tag::SPARSE;
+const TAG_SIGNS: u8 = tag::SIGNS;
+const TAG_PLAN: u8 = tag::PLAN;
+const TAG_NACK: u8 = tag::NACK;
 
 /// Wire-facing uplink payload (telemetry stripped).
 #[derive(Debug, Clone, PartialEq)]
@@ -47,6 +129,10 @@ pub enum WireUplink {
     /// SignSGD: d sign bits, packed 64 per word (bit i of word i/64 is
     /// coordinate i), tail bits zero.
     Signs { d: u32, words: Vec<u64> },
+    /// A strategy-owned frame from the dynamic tag range
+    /// (`tag >= tag::DYNAMIC_MIN`): the payload is the whole rest of the
+    /// frame, interpreted only by the registering strategy.
+    Opaque { tag: u8, payload: Vec<u8> },
 }
 
 impl WireUplink {
@@ -82,6 +168,10 @@ impl WireUplink {
             Uplink::Signs { d, words, .. } => WireUplink::Signs {
                 d: *d as u32,
                 words: words.clone(),
+            },
+            Uplink::Opaque { tag, payload, .. } => WireUplink::Opaque {
+                tag: *tag,
+                payload: payload.clone(),
             },
         }
     }
@@ -120,6 +210,11 @@ impl WireUplink {
             WireUplink::Signs { d, words } => Uplink::Signs {
                 d: d as usize,
                 words,
+                loss: 0.0,
+            },
+            WireUplink::Opaque { tag, payload } => Uplink::Opaque {
+                tag,
+                payload,
                 loss: 0.0,
             },
         }
@@ -204,6 +299,14 @@ impl WireUplink {
                     }
                     out.push(byte);
                 }
+            }
+            WireUplink::Opaque { tag, payload } => {
+                assert!(
+                    *tag >= tag::DYNAMIC_MIN,
+                    "opaque frames live in the dynamic tag range"
+                );
+                out.push(*tag);
+                out.extend_from_slice(payload);
             }
         }
         out
@@ -312,6 +415,10 @@ impl WireUplink {
                 }
                 WireUplink::Signs { d: d as u32, words }
             }
+            dynamic if dynamic >= tag::DYNAMIC_MIN => WireUplink::Opaque {
+                tag: dynamic,
+                payload: cur.rest().to_vec(),
+            },
             other => return Err(Error::invariant(format!("unknown frame tag {other}"))),
         };
         cur.expect_end()?;
@@ -403,6 +510,40 @@ impl WireRoundPlan {
     }
 }
 
+/// Downlink frame: the delivery NACK. The server's radio dropped this
+/// client's round-`round` upload (deadline cutoff or a compute overrun
+/// that never reached the upload slot) — the payload was discarded, so
+/// the client's strategy must roll back any delivery-assuming encode
+/// state ([`crate::algo::Strategy::on_dropped`]). Sent only to dropped
+/// workers, after the round's aggregation; delivered uploads are
+/// implicitly ACKed by the next round plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireNack {
+    pub round: u32,
+    /// The dropped client's id (lets the worker reject a misrouted NACK).
+    pub client: u32,
+}
+
+impl WireNack {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = vec![TAG_NACK];
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.client.to_le_bytes());
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<WireNack> {
+        let mut cur = Cursor::new(buf);
+        if cur.u8()? != TAG_NACK {
+            return Err(Error::invariant("expected nack frame"));
+        }
+        let round = cur.u32()?;
+        let client = cur.u32()?;
+        cur.expect_end()?;
+        Ok(WireNack { round, client })
+    }
+}
+
 /// Minimal byte cursor with bounds-checked reads.
 struct Cursor<'a> {
     buf: &'a [u8],
@@ -437,6 +578,13 @@ impl<'a> Cursor<'a> {
 
     fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Consume everything left in the buffer (opaque dynamic payloads).
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
     }
 
     fn expect_end(&self) -> Result<()> {
@@ -565,9 +713,10 @@ mod tests {
         let mut long = good.clone();
         long.push(0);
         assert!(WireUplink::decode(&long).is_err());
-        // bad tag
+        // bad tag (reserved range, no built-in claims it — a tag from the
+        // dynamic range 32.. would instead decode as an Opaque frame)
         let mut bad = good.clone();
-        bad[0] = 99;
+        bad[0] = 29;
         assert!(WireUplink::decode(&bad).is_err());
         // model frame where uplink expected
         let model = WireModel {
@@ -729,6 +878,77 @@ mod tests {
         // ... while a frame corrupted in flight is still rejected
         bytes[5] |= 0b1000; // flip a padding bit
         assert!(WireUplink::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn nack_frame_roundtrip_and_validation() {
+        let n = WireNack { round: 9, client: 4 };
+        let bytes = n.encode();
+        // tag + round + client
+        assert_eq!(bytes.len(), 1 + 4 + 4);
+        assert_eq!(WireNack::decode(&bytes).unwrap(), n);
+        // truncation / trailing garbage / wrong tag rejected
+        assert!(WireNack::decode(&bytes[..bytes.len() - 1]).is_err());
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(WireNack::decode(&long).is_err());
+        let plan = WireRoundPlan {
+            round: 9,
+            active: vec![4],
+        }
+        .encode();
+        assert!(WireNack::decode(&plan).is_err());
+        // ... and a NACK is not an uplink
+        assert!(WireUplink::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn dynamic_tags_are_stable_open_and_above_the_builtin_range() {
+        let a = reserve_dynamic_tag("wire-test-frame-a");
+        let b = reserve_dynamic_tag("wire-test-frame-b");
+        assert!(a >= tag::DYNAMIC_MIN && b >= tag::DYNAMIC_MIN);
+        assert!(a > tag::BUILTIN_MAX);
+        assert_ne!(a, b, "distinct names get distinct tags");
+        // idempotent per name
+        assert_eq!(reserve_dynamic_tag("wire-test-frame-a"), a);
+        assert_eq!(dynamic_tag("wire-test-frame-a"), Some(a));
+        assert_eq!(dynamic_tag("never-reserved"), None);
+    }
+
+    #[test]
+    fn opaque_frames_roundtrip_with_registry_tags() {
+        let t = reserve_dynamic_tag("wire-test-opaque");
+        for payload in [vec![], vec![1u8, 2, 3, 255, 0, 42]] {
+            let w = WireUplink::Opaque {
+                tag: t,
+                payload: payload.clone(),
+            };
+            let bytes = w.encode();
+            assert_eq!(bytes.len(), 1 + payload.len());
+            assert_eq!(WireUplink::decode(&bytes).unwrap(), w);
+            // conversion to/from the in-process uplink keeps the bytes
+            match WireUplink::from_uplink(&w.clone().into_uplink()) {
+                WireUplink::Opaque { tag, payload: p } => {
+                    assert_eq!(tag, t);
+                    assert_eq!(p, payload);
+                }
+                other => panic!("wrong kind {other:?}"),
+            }
+        }
+        // reserved-range tags that no built-in uses stay rejected
+        for reserved in [0u8, 9, tag::BUILTIN_MAX] {
+            assert!(WireUplink::decode(&[reserved, 1, 2]).is_err(), "{reserved}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "dynamic tag range")]
+    fn opaque_encode_rejects_reserved_tags() {
+        let _ = WireUplink::Opaque {
+            tag: tag::SPARSE,
+            payload: vec![],
+        }
+        .encode();
     }
 
     #[test]

@@ -145,6 +145,12 @@ fn common_cfg(a: &Args) -> Result<ExperimentConfig> {
     if a.provided("rate-spread") {
         cfg.scenario.fleet.rate_spread = a.get_f64("rate-spread")?;
     }
+    if a.provided("energy-budget") {
+        cfg.scenario.fleet.energy_budget_j = a.get_f64("energy-budget")?;
+    }
+    if a.provided("p-compute") {
+        cfg.scenario.p_compute_watts = a.get_f64("p-compute")?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -176,6 +182,12 @@ fn common_args(args: Args) -> Args {
         .opt("compute-spread", "0", "fleet compute-speed spread (0 = homogeneous)")
         .opt("power-spread", "0", "fleet transmit-power spread")
         .opt("rate-spread", "0", "fleet uplink-rate spread (per-client channels)")
+        .opt(
+            "energy-budget",
+            "0",
+            "per-client battery in joules; exhausted devices drop out (0 = unlimited)",
+        )
+        .opt("p-compute", "0", "device compute power in watts (drains the battery)")
 }
 
 fn run_command(cmd: &str, rest: Vec<String>) -> Result<()> {

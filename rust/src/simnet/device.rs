@@ -25,6 +25,12 @@ pub struct DeviceProfile {
     /// `None` = the shared base channel, sampled in active-client order —
     /// the legacy configuration.
     pub channel: Option<ChannelConfig>,
+    /// Per-client energy budget in joules: the battery `SimNet` drains by
+    /// this device's compute + transmit energy each active round. A device
+    /// whose battery empties becomes unavailable (it drops out of
+    /// `SimNet::available`, exactly like an availability-trace off-round).
+    /// `None` = mains-powered (unlimited) — the legacy configuration.
+    pub battery_j: Option<f64>,
 }
 
 impl Default for DeviceProfile {
@@ -33,13 +39,17 @@ impl Default for DeviceProfile {
             compute_mult: 1.0,
             p_tx_mult: 1.0,
             channel: None,
+            battery_j: None,
         }
     }
 }
 
 impl DeviceProfile {
     pub fn is_reference(&self) -> bool {
-        self.compute_mult == 1.0 && self.p_tx_mult == 1.0 && self.channel.is_none()
+        self.compute_mult == 1.0
+            && self.p_tx_mult == 1.0
+            && self.channel.is_none()
+            && self.battery_j.is_none()
     }
 }
 
@@ -56,9 +66,17 @@ pub struct FleetConfig {
     /// Spread of per-client nominal uplink rates. Any nonzero value gives
     /// every client a dedicated [`ChannelConfig`] (own fading stream).
     pub rate_spread: f64,
+    /// Per-client battery in joules (each device starts with this much;
+    /// compute + transmit energy drain it and an empty device drops out
+    /// of availability). 0 = unlimited (the legacy configuration).
+    pub energy_budget_j: f64,
 }
 
 impl FleetConfig {
+    /// No multiplier spreads (every device is the reference device up to
+    /// its battery). Battery budgets are deliberately NOT part of this —
+    /// they spread nothing; `ScenarioConfig::is_legacy` performs the full
+    /// legacy check (spreads AND budget AND compute power).
     pub fn is_homogeneous(&self) -> bool {
         self.compute_spread == 0.0 && self.power_spread == 0.0 && self.rate_spread == 0.0
     }
@@ -67,8 +85,15 @@ impl FleetConfig {
     /// base)` and independent of everything else in the run — the
     /// distributed and sequential engines build identical fleets.
     pub fn profiles(&self, n: usize, base: &ChannelConfig, seed: u64) -> Vec<DeviceProfile> {
+        let battery_j = (self.energy_budget_j > 0.0).then_some(self.energy_budget_j);
         if self.is_homogeneous() {
-            return vec![DeviceProfile::default(); n];
+            return vec![
+                DeviceProfile {
+                    battery_j,
+                    ..DeviceProfile::default()
+                };
+                n
+            ];
         }
         let mut rng = Xoshiro256::seed_from(SplitMix64::derive(seed, 0xf1ee_7000));
         (0..n)
@@ -87,6 +112,7 @@ impl FleetConfig {
                     compute_mult,
                     p_tx_mult,
                     channel,
+                    battery_j,
                 }
             })
             .collect()
@@ -120,6 +146,7 @@ mod tests {
             compute_spread: 1.0,
             power_spread: 0.5,
             rate_spread: 0.25,
+            ..FleetConfig::default()
         };
         let base = ChannelConfig::default();
         let a = cfg.profiles(32, &base, 9);
@@ -142,11 +169,40 @@ mod tests {
     fn partial_spread_leaves_other_axes_at_reference() {
         let cfg = FleetConfig {
             compute_spread: 2.0,
-            power_spread: 0.0,
-            rate_spread: 0.0,
+            ..FleetConfig::default()
         };
         let fleet = cfg.profiles(10, &ChannelConfig::default(), 0);
         assert!(fleet.iter().all(|p| p.p_tx_mult == 1.0 && p.channel.is_none()));
+        assert!(fleet.iter().all(|p| p.battery_j.is_none()));
         assert!(fleet.iter().any(|p| p.compute_mult != 1.0));
+    }
+
+    #[test]
+    fn energy_budget_equips_every_profile_with_a_battery() {
+        // homogeneous fast path
+        let cfg = FleetConfig {
+            energy_budget_j: 2.5,
+            ..FleetConfig::default()
+        };
+        let fleet = cfg.profiles(4, &ChannelConfig::default(), 0);
+        assert!(fleet.iter().all(|p| p.battery_j == Some(2.5)));
+        assert!(fleet.iter().all(|p| !p.is_reference()));
+        // heterogeneous path: same battery rides every drawn profile, and
+        // the multiplier draws are unchanged by the battery knob
+        let het = FleetConfig {
+            compute_spread: 1.0,
+            energy_budget_j: 2.5,
+            ..FleetConfig::default()
+        };
+        let no_batt = FleetConfig {
+            compute_spread: 1.0,
+            ..FleetConfig::default()
+        };
+        let a = het.profiles(8, &ChannelConfig::default(), 3);
+        let b = no_batt.profiles(8, &ChannelConfig::default(), 3);
+        for (pa, pb) in a.iter().zip(&b) {
+            assert_eq!(pa.battery_j, Some(2.5));
+            assert_eq!(pa.compute_mult, pb.compute_mult);
+        }
     }
 }

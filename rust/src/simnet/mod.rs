@@ -29,10 +29,18 @@
 //! 5. **deadline cutoff** — clients whose upload completes after
 //!    `deadline_s` are dropped from aggregation; the energy (and bits)
 //!    they burned before the cutoff are still charged, and the round
-//!    closes at the deadline. There is no ACK: a dropped client does not
-//!    learn its upload was discarded, so stateful strategies' client-side
-//!    bookkeeping (e.g. error-feedback residuals) advances as if the
-//!    upload landed — see the ROADMAP open item on a deadline-NACK hook.
+//!    closes at the deadline. Every active client's [`Delivery`] outcome
+//!    is reported — delivered, transmitted-but-dropped, or never-started
+//!    (compute casualty) — and the engines feed the non-delivered ones
+//!    back to the strategy as NACKs
+//!    ([`Strategy::on_dropped`](crate::algo::Strategy::on_dropped)), so
+//!    stateful strategies (Top-k error feedback) can restore the
+//!    un-delivered mass instead of leaking it out of training.
+//! 6. **battery drain** — when a device has an energy budget
+//!    ([`DeviceProfile::battery_j`]), its compute energy
+//!    (`p_compute_watts × compute seconds`) and transmit energy (truncated
+//!    uploads included) drain it; an exhausted device drops out of
+//!    [`SimNet::available`], exactly like an availability-trace off-round.
 //!
 //! ## Determinism contract
 //!
@@ -80,7 +88,12 @@ pub struct ScenarioConfig {
     /// Broadcast rate in bits/s for downlink *time*; 0 = broadcast is
     /// instantaneous (downlink bits are charged either way).
     pub downlink_bps: f64,
-    /// Device heterogeneity.
+    /// Device compute power draw in watts: each active round drains
+    /// `p_compute_watts × compute seconds` from the device battery (and
+    /// adds to the round's energy). 0 = compute energy not modeled (the
+    /// paper's §III accounting, which charges the radio only).
+    pub p_compute_watts: f64,
+    /// Device heterogeneity (including per-client energy budgets).
     pub fleet: FleetConfig,
 }
 
@@ -91,6 +104,7 @@ impl Default for ScenarioConfig {
             availability: Availability::AlwaysOn,
             deadline_s: None,
             downlink_bps: 0.0,
+            p_compute_watts: 0.0,
             fleet: FleetConfig::default(),
         }
     }
@@ -104,7 +118,9 @@ impl ScenarioConfig {
             && self.availability == Availability::AlwaysOn
             && self.deadline_s.is_none()
             && self.downlink_bps == 0.0
+            && self.p_compute_watts == 0.0
             && self.fleet.is_homogeneous()
+            && self.fleet.energy_budget_j == 0.0
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -134,6 +150,12 @@ impl ScenarioConfig {
         if !(self.downlink_bps >= 0.0 && self.downlink_bps.is_finite()) {
             return Err(Error::config("downlink_bps must be >= 0"));
         }
+        if !(self.p_compute_watts >= 0.0 && self.p_compute_watts.is_finite()) {
+            return Err(Error::config("p_compute_watts must be >= 0"));
+        }
+        if !(self.fleet.energy_budget_j >= 0.0 && self.fleet.energy_budget_j.is_finite()) {
+            return Err(Error::config("energy_budget_j must be >= 0"));
+        }
         for (name, s) in [
             ("compute_spread", self.fleet.compute_spread),
             ("power_spread", self.fleet.power_spread),
@@ -147,16 +169,39 @@ impl ScenarioConfig {
     }
 }
 
+/// Per-client delivery outcome of one round — what the server's radio
+/// actually saw, which is exactly what the delivery-feedback (NACK) layer
+/// reports back to the strategies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Delivery {
+    /// The upload landed before the deadline and was aggregated.
+    Delivered,
+    /// The client keyed its radio but the deadline cut the upload; its
+    /// partial transmit energy and bits were charged, the payload was
+    /// discarded.
+    TransmittedDropped,
+    /// The client's local compute alone overran the deadline: it never
+    /// keyed its radio (no fading draw, no transmit energy, no bits).
+    NeverStarted,
+}
+
+impl Delivery {
+    pub fn delivered(self) -> bool {
+        self == Delivery::Delivered
+    }
+}
+
 /// What one simulated round did (entries parallel `active`'s order).
 #[derive(Debug, Clone)]
 pub struct RoundReport {
-    /// Per active client: did its upload land before the deadline?
-    pub completed: Vec<bool>,
+    /// Per active client: its delivery outcome.
+    pub outcome: Vec<Delivery>,
     /// Virtual seconds this round took (closed at the deadline if any
     /// client missed it).
     pub round_seconds: f64,
-    /// Transmit energy across all active clients, truncated uploads
-    /// included (wasted straggler energy IS charged).
+    /// Energy across all active clients: transmit energy (truncated
+    /// uploads included — wasted straggler energy IS charged) plus
+    /// compute energy when `p_compute_watts > 0`.
     pub energy_joules: f64,
     /// Uplink payload bits put on the air this round.
     pub uplink_bits: u64,
@@ -165,7 +210,8 @@ pub struct RoundReport {
     /// Per active client: its upload duration at the sampled rate (0 for
     /// clients dropped before transmitting).
     pub per_upload_seconds: Vec<f64>,
-    /// Number of active clients dropped at the deadline.
+    /// Number of active clients whose upload was NOT delivered (both
+    /// dropped kinds).
     pub dropped: usize,
 }
 
@@ -175,20 +221,20 @@ impl RoundReport {
     }
 
     /// Keep only the entries whose client made the deadline (`items`
-    /// parallels `completed`'s order). Both engines filter through this
+    /// parallels `outcome`'s order). Both engines filter through this
     /// one helper so survivor selection can never drift between them.
     pub fn filter_survivors<T>(&self, items: Vec<T>) -> Vec<T> {
-        assert_eq!(items.len(), self.completed.len(), "items/active mismatch");
+        assert_eq!(items.len(), self.outcome.len(), "items/active mismatch");
         items
             .into_iter()
-            .zip(&self.completed)
-            .filter_map(|(x, &ok)| ok.then_some(x))
+            .zip(&self.outcome)
+            .filter_map(|(x, &o)| o.delivered().then_some(x))
             .collect()
     }
 
     fn empty() -> RoundReport {
         RoundReport {
-            completed: Vec::new(),
+            outcome: Vec::new(),
             round_seconds: 0.0,
             energy_joules: 0.0,
             uplink_bits: 0,
@@ -210,12 +256,17 @@ enum Ev {
 pub struct SimNet {
     schedule: Schedule,
     p_tx_watts: f64,
+    p_compute_watts: f64,
     t_other_s: f64,
     downlink_bps: f64,
     deadline_s: Option<f64>,
     availability: Availability,
     avail_seed: u64,
     profiles: Vec<DeviceProfile>,
+    /// Remaining battery per client (None = mains-powered). Drained by
+    /// compute + transmit energy each active round; an empty battery
+    /// removes the client from `available`.
+    battery: Vec<Option<f64>>,
     /// The legacy fading stream, sampled in active order by every client
     /// without a dedicated channel.
     shared: Channel,
@@ -257,15 +308,18 @@ impl SimNet {
                 })
             })
             .collect();
+        let battery = profiles.iter().map(|p| p.battery_j).collect();
         SimNet {
             schedule: network.schedule,
             p_tx_watts: network.p_tx_watts,
+            p_compute_watts: scenario.p_compute_watts,
             t_other_s,
             downlink_bps: scenario.downlink_bps,
             deadline_s: scenario.deadline_s,
             availability: scenario.availability,
             avail_seed: run_seed,
             profiles,
+            battery,
             shared: Channel::new(network.channel.clone(), run_seed),
             dedicated,
             clock_s: 0.0,
@@ -293,10 +347,24 @@ impl SimNet {
         self.clock_s
     }
 
-    /// The clients reachable in `round` (ascending ids).
+    /// Remaining battery for `client` (None = mains-powered / unlimited).
+    pub fn battery_remaining(&self, client: usize) -> Option<f64> {
+        self.battery[client]
+    }
+
+    /// How many devices have drained their energy budget.
+    pub fn exhausted_clients(&self) -> usize {
+        self.battery.iter().filter(|b| matches!(b, Some(j) if *j <= 0.0)).count()
+    }
+
+    /// The clients reachable in `round` (ascending ids): on per the
+    /// availability trace AND not battery-exhausted.
     pub fn available(&self, round: u64) -> Vec<usize> {
         self.availability
             .on_clients(self.avail_seed, round, self.profiles.len())
+            .into_iter()
+            .filter(|&c| self.battery[c].is_none_or(|j| j > 0.0))
+            .collect()
     }
 
     /// Simulate one round for the given active set (in selection order).
@@ -393,17 +461,29 @@ impl SimNet {
         }
 
         // --- deadline cutoff ------------------------------------------
-        let mut completed = vec![false; n];
+        let mut outcome: Vec<Delivery> = ready_ok
+            .iter()
+            .map(|&ok| {
+                if ok {
+                    Delivery::TransmittedDropped // upgraded below on landing
+                } else {
+                    Delivery::NeverStarted
+                }
+            })
+            .collect();
         let mut natural_end = phase_start;
         while let Some((t, ev)) = q.pop() {
             let Ev::UploadDone(i) = ev else { continue };
             natural_end = t; // events pop in time order: last = latest
-            completed[i] = match self.deadline_s {
+            let landed = match self.deadline_s {
                 None => true,
                 Some(dl) => t <= dl,
             };
+            if landed {
+                outcome[i] = Delivery::Delivered;
+            }
         }
-        let dropped = completed.iter().filter(|&&ok| !ok).count();
+        let dropped = outcome.iter().filter(|o| !o.delivered()).count();
         let round_seconds = if dropped == 0 && any_upload {
             natural_end
         } else {
@@ -412,16 +492,19 @@ impl SimNet {
         };
 
         // --- energy + bits, in active order ---------------------------
+        // per-client transmit energy accumulates into the round total in
+        // the legacy summation order, then drains that client's battery
         let mut energy = 0.0f64;
         let mut bits_sent = 0u64;
         for i in 0..n {
             if !ready_ok[i] {
                 continue; // never transmitted
             }
-            let p_eff = self.p_tx_watts * self.profiles[active[i]].p_tx_mult;
-            if completed[i] {
-                energy += energy_joules(p_eff, uplink_bits, rates[i]);
+            let c = active[i];
+            let p_eff = self.p_tx_watts * self.profiles[c].p_tx_mult;
+            let tx_joules = if outcome[i].delivered() {
                 bits_sent += uplink_bits;
+                energy_joules(p_eff, uplink_bits, rates[i])
             } else {
                 // upload straggler: transmitted from its slot start until
                 // the cutoff — that energy (and those bits) were spent
@@ -430,14 +513,32 @@ impl SimNet {
                 let tx = (dl - (phase_start + slot_start_rel[i]))
                     .min(uploads[i])
                     .max(0.0);
-                energy += p_eff * tx;
                 bits_sent += ((rates[i] * tx).floor() as u64).min(uplink_bits);
+                p_eff * tx
+            };
+            energy += tx_joules;
+            if let Some(b) = &mut self.battery[c] {
+                *b -= tx_joules;
+            }
+        }
+        // compute energy (battery-relevant even when the deadline killed
+        // the round: the device does not know and computes to completion).
+        // Appended after the transmit sum so the legacy p_compute == 0
+        // default adds exact zeros and the round total stays bit-identical.
+        if self.p_compute_watts > 0.0 {
+            for &c in active {
+                let compute_joules =
+                    self.p_compute_watts * self.t_other_s * self.profiles[c].compute_mult;
+                energy += compute_joules;
+                if let Some(b) = &mut self.battery[c] {
+                    *b -= compute_joules;
+                }
             }
         }
 
         self.clock_s += round_seconds;
         RoundReport {
-            completed,
+            outcome,
             round_seconds,
             energy_joules: energy,
             uplink_bits: bits_sent,
@@ -512,7 +613,14 @@ mod tests {
         let report = sim.run_round(&[0, 1, 2], 64, 0);
         // the slow client is dropped at the compute stage and does NOT
         // hold the upload phase: the two reference devices land
-        assert_eq!(report.completed, vec![true, true, false]);
+        assert_eq!(
+            report.outcome,
+            vec![
+                Delivery::Delivered,
+                Delivery::Delivered,
+                Delivery::NeverStarted
+            ]
+        );
         assert_eq!(report.dropped, 1);
         assert_eq!(report.round_seconds, 2.0 * t_other);
         // the casualty never keyed its radio: exactly two full uploads
@@ -528,7 +636,18 @@ mod tests {
         let slot = upload_seconds(64_000, network.channel.nominal_bps); // big payload
         sim2.deadline_s = Some(t_other + 1.5 * slot);
         let report2 = sim2.run_round(&[0, 1, 2], 64_000, 0);
-        assert_eq!(report2.completed, vec![true, false, false]);
+        // client 1 keyed its radio and was cut mid-slot; client 2's TDMA
+        // slot never opened before the cutoff, but it DID key its radio
+        // conceptually — it finished compute and entered the upload
+        // phase, so it is a transmit casualty, not a compute one
+        assert_eq!(
+            report2.outcome,
+            vec![
+                Delivery::Delivered,
+                Delivery::TransmittedDropped,
+                Delivery::TransmittedDropped
+            ]
+        );
         assert_eq!(report2.dropped, 2);
         assert_eq!(report2.round_seconds, t_other + 1.5 * slot);
         // client 1 transmitted half a slot before the cutoff; client 2
@@ -607,6 +726,89 @@ mod tests {
     }
 
     #[test]
+    fn energy_budget_exhausts_devices_out_of_availability() {
+        let network = net(0.0, Schedule::Tdma);
+        // budget covers exactly two full uploads (deterministic channel)
+        let one = energy_joules(network.p_tx_watts, 64_000, network.channel.nominal_bps);
+        let scenario = ScenarioConfig {
+            fleet: FleetConfig {
+                energy_budget_j: 2.0 * one,
+                ..FleetConfig::default()
+            },
+            ..ScenarioConfig::default()
+        };
+        assert!(!scenario.is_legacy());
+        let mut sim = SimNet::new(&network, &scenario, 1990, 3, 0);
+        assert_eq!(sim.available(0), vec![0, 1, 2]);
+        assert_eq!(sim.exhausted_clients(), 0);
+        // round 1: everyone transmits, batteries half-drained
+        let r = sim.run_round(&[0, 1, 2], 64_000, 0);
+        assert!(r.all_completed());
+        assert!(sim.battery_remaining(0).unwrap() > 0.0);
+        // round 2: batteries hit exactly zero -> exhausted
+        let _ = sim.run_round(&[0, 1, 2], 64_000, 0);
+        assert_eq!(sim.exhausted_clients(), 3);
+        assert_eq!(sim.available(2), Vec::<usize>::new());
+        // a mains-powered fleet never exhausts
+        let mut mains = SimNet::legacy(&network, 1990, 3, 0);
+        let _ = mains.run_round(&[0, 1, 2], 64_000, 0);
+        assert_eq!(mains.exhausted_clients(), 0);
+        assert_eq!(mains.battery_remaining(0), None);
+    }
+
+    #[test]
+    fn compute_energy_charged_and_drains_battery() {
+        let network = net(0.0, Schedule::Tdma);
+        let scenario = ScenarioConfig {
+            p_compute_watts: 0.5,
+            fleet: FleetConfig {
+                energy_budget_j: 100.0,
+                ..FleetConfig::default()
+            },
+            ..ScenarioConfig::default()
+        };
+        let mut sim = SimNet::new(&network, &scenario, 1990, 2, 0);
+        let t_other = sim.t_other_seconds();
+        let mut plain = SimNet::legacy(&network, 1990, 2, 0);
+        let with = sim.run_round(&[0, 1], 64, 0);
+        let without = plain.run_round(&[0, 1], 64, 0);
+        // round energy = legacy transmit energy + 0.5 W x compute seconds
+        // per active client (reference multiplier = 1.0)
+        let want = without.energy_joules + 2.0 * 0.5 * t_other;
+        assert!((with.energy_joules - want).abs() < 1e-12);
+        // ... and exactly that much left the batteries
+        let spent: f64 = (0..2)
+            .map(|c| 100.0 - sim.battery_remaining(c).unwrap())
+            .sum();
+        assert!((spent - with.energy_joules).abs() < 1e-12);
+        // the clock is untouched by energy accounting
+        assert_eq!(with.round_seconds, without.round_seconds);
+    }
+
+    #[test]
+    fn compute_casualties_still_drain_compute_energy() {
+        let network = net(0.0, Schedule::Tdma);
+        let scenario = ScenarioConfig {
+            p_compute_watts: 1.0,
+            fleet: FleetConfig {
+                energy_budget_j: 100.0,
+                ..FleetConfig::default()
+            },
+            ..ScenarioConfig::default()
+        };
+        let mut sim = SimNet::new(&network, &scenario, 1990, 2, 0);
+        sim.profiles[1].compute_mult = 100.0;
+        let t_other = sim.t_other_seconds();
+        sim.deadline_s = Some(2.0 * t_other);
+        let r = sim.run_round(&[0, 1], 64, 0);
+        assert_eq!(r.outcome[1], Delivery::NeverStarted);
+        // the casualty burned its FULL compute energy (it does not know
+        // the server closed the round) but no transmit energy
+        let drained = 100.0 - sim.battery_remaining(1).unwrap();
+        assert!((drained - 100.0 * t_other).abs() < 1e-9, "drained={drained}");
+    }
+
+    #[test]
     fn scenario_validation() {
         assert!(ScenarioConfig::default().validate().is_ok());
         assert!(ScenarioConfig::default().is_legacy());
@@ -624,6 +826,14 @@ mod tests {
         s.fleet.compute_spread = f64::NAN;
         assert!(s.validate().is_err());
         s.fleet.compute_spread = 0.5;
+        assert!(s.validate().is_ok());
+        s.p_compute_watts = -1.0;
+        assert!(s.validate().is_err());
+        s.p_compute_watts = 0.5;
+        assert!(s.validate().is_ok());
+        s.fleet.energy_budget_j = f64::INFINITY;
+        assert!(s.validate().is_err());
+        s.fleet.energy_budget_j = 10.0;
         assert!(s.validate().is_ok());
         s.sampler = SamplerPolicy::UniformK(0);
         assert!(s.validate().is_err());

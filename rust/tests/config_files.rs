@@ -49,6 +49,8 @@ fn fleet_toml_sets_the_scenario_surface() {
     assert_eq!(cfg.scenario.downlink_bps, 1_000_000.0);
     assert_eq!(cfg.scenario.fleet.compute_spread, 3.0);
     assert_eq!(cfg.scenario.fleet.rate_spread, 0.5);
+    assert_eq!(cfg.scenario.fleet.energy_budget_j, 40.0);
+    assert_eq!(cfg.scenario.p_compute_watts, 0.5);
     assert_eq!(cfg.data, DataSource::Synthetic);
     assert!(!cfg.scenario.is_legacy());
     // the other shipped configs stay on the paper's §III scenario

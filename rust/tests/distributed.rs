@@ -109,6 +109,41 @@ fn plugin_strategies_distributed_equal_sequential() {
 }
 
 #[test]
+fn nack_frames_measured_on_the_wire() {
+    // a deadline below the compute time makes EVERY upload a casualty:
+    // each active worker must then receive exactly one 9-byte NACK frame
+    // per round on top of the round plan + model broadcast
+    let rounds = 5usize;
+    let agents = 3usize;
+    let mut c = cfg(Method::topk(16), rounds, agents);
+    let t_other = fedscalar::netsim::latency::t_other_seconds(
+        &c.network.latency,
+        c.model.param_dim(),
+        agents,
+        c.network.channel.nominal_bps,
+        c.network.schedule,
+    );
+    c.scenario.deadline_s = Some(0.5 * t_other);
+    let mut eng = DistributedEngine::from_config(&c, 0).unwrap();
+    let h = eng.run().unwrap();
+    // nothing ever landed: the model held, zero uplink payload charged
+    assert_eq!(h.records.last().unwrap().cum_bits, 0.0);
+    let d = c.model.param_dim();
+    let plan = 9 + 4 * agents;
+    let model = 9 + 4 * d;
+    let nack = 9;
+    assert_eq!(
+        eng.downlink_frame_bytes(),
+        (rounds * agents * (plan + model + nack)) as u64
+    );
+    // ...and the same all-drop scenario stays bit-identical to the
+    // sequential engine (every round zero-survivor, every client NACKed)
+    let seq = run_pure_rust(&c, 0).unwrap();
+    let dist = DistributedEngine::from_config(&c, 0).unwrap().run().unwrap();
+    assert!(same_histories(&seq, &dist));
+}
+
+#[test]
 fn plugin_strategy_bits_charged_on_distributed_path() {
     let rounds = 6usize;
     let agents = 3usize;

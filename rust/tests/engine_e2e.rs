@@ -189,6 +189,86 @@ fn checkpoint_save_restore_resume() {
     std::fs::remove_file(path).ok();
 }
 
+/// Checkpoint v2 round-trip UNDER DROPS: in a churn + deadline scenario
+/// the strategy-state blob carries NACK-restored error-feedback residuals
+/// (Top-k) and mid-stream rounding positions (QSGD). Saving at the
+/// half-way point, round-tripping through disk into a fresh engine whose
+/// engine-owned streams were positioned by replay, and continuing must
+/// reproduce the uninterrupted run bit for bit — any loss or corruption
+/// of the under-drop strategy state in the v2 blob diverges the tail.
+#[test]
+fn checkpoint_roundtrip_under_drops_is_bit_identical() {
+    use fedscalar::coordinator::{Checkpoint, Engine};
+    use fedscalar::exp::figures::{make_backend, BackendKind};
+    use fedscalar::simnet::Availability;
+
+    for method in [Method::topk(16), Method::qsgd(8)] {
+        let mut c = ExperimentConfig::smoke();
+        c.fed.method = method;
+        c.fed.num_agents = 5;
+        c.fed.rounds = 10;
+        c.fed.eval_every = 1;
+        c.scenario.availability = Availability::Churn { p_off: 0.3 };
+        // calibrate a deadline that actually drops uploads
+        let probe = run_pure_rust(&c, 11).unwrap();
+        let mean_round = probe.records.last().unwrap().cum_sim_seconds / 10.0;
+        c.scenario.deadline_s = Some(0.8 * mean_round);
+
+        let eval = |k: usize| k % c.fed.eval_every == 0 || k + 1 == c.fed.rounds;
+
+        // the uninterrupted reference
+        let be = make_backend(BackendKind::PureRust, &c).unwrap();
+        let mut full = Engine::from_config(&c, be, 11).unwrap();
+        let h_full = full.run_from(0).unwrap();
+        // the deadline bit: fewer delivered bits than the probe
+        assert!(
+            h_full.records.last().unwrap().cum_bits
+                < probe.records.last().unwrap().cum_bits,
+            "{}: no drops — the under-drops claim is vacuous",
+            c.fed.method.name()
+        );
+
+        // run to the midpoint and checkpoint through disk
+        let be = make_backend(BackendKind::PureRust, &c).unwrap();
+        let mut head = Engine::from_config(&c, be, 11).unwrap();
+        for k in 0..5 {
+            head.run_round(k, eval(k)).unwrap();
+        }
+        let path = std::env::temp_dir().join(format!(
+            "fedscalar_dropckpt_{}_{}.bin",
+            c.fed.method.name(),
+            std::process::id()
+        ));
+        head.checkpoint(5).save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.round, 5);
+        assert!(
+            !loaded.strategy_state.is_empty(),
+            "{}: stateful strategy checkpointed no state",
+            c.fed.method.name()
+        );
+
+        // fresh engine: replay the head to position the engine-owned
+        // streams (batches, fading, churn draws), then OVERWRITE params,
+        // counters, and strategy state with the disk round-trip and run
+        // the tail
+        let be = make_backend(BackendKind::PureRust, &c).unwrap();
+        let mut resumed = Engine::from_config(&c, be, 11).unwrap();
+        for k in 0..5 {
+            resumed.run_round(k, eval(k)).unwrap();
+        }
+        assert_eq!(resumed.restore(&loaded).unwrap(), 5);
+        assert_eq!(resumed.params(), head.params());
+        let h_resumed = resumed.run_from(5).unwrap();
+        assert!(
+            fedscalar::metrics::same_histories(&h_full, &h_resumed),
+            "{}: resumed tail diverged from the uninterrupted run",
+            c.fed.method.name()
+        );
+    }
+}
+
 #[test]
 fn eval_grid_respects_eval_every() {
     let mut cfg = base_cfg();

@@ -134,28 +134,39 @@ fn scenario_history_is_thread_count_independent() {
 
 /// The deadline-drop path itself is engine-parity-tested: with a
 /// heterogeneous fleet and a biting deadline, both engines drop the same
-/// clients, charge the same truncated energy/bits, and average the same
-/// survivor losses — bit for bit.
+/// clients, charge the same truncated energy/bits, average the same
+/// survivor losses, AND evolve identical strategy state — bit for bit.
+/// Top-k is the load-bearing case: its error-feedback residuals are only
+/// identical across engines if the distributed NACK frames restore the
+/// same un-delivered mass the sequential `on_dropped` calls do.
 #[test]
 fn deadline_drops_identical_across_engines() {
-    let mut cfg = scenario_cfg(Method::fedscalar(VDistribution::Rademacher, 1));
-    // calibrate a deadline from the no-deadline pace, tight enough that
-    // the slow half of the fleet misses it in most rounds
-    let probe = run_pure_rust(&cfg, 6).unwrap();
-    let mean_round = probe.records.last().unwrap().cum_sim_seconds / cfg.fed.rounds as f64;
-    cfg.scenario.deadline_s = Some(0.75 * mean_round);
-    let seq = run_pure_rust(&cfg, 6).unwrap();
-    let dist = DistributedEngine::from_config(&cfg, 6).unwrap().run().unwrap();
-    assert!(
-        same_histories(&seq, &dist),
-        "deadline-drop rounds diverged between engines"
-    );
-    // drops really happened: dropped clients deliver strictly fewer bits
-    // than the no-deadline probe
-    assert!(
-        seq.records.last().unwrap().cum_bits < probe.records.last().unwrap().cum_bits,
-        "deadline never dropped anyone — the parity check above was vacuous"
-    );
+    for method in [
+        Method::fedscalar(VDistribution::Rademacher, 1),
+        Method::topk(16),
+        Method::signsgd(),
+    ] {
+        let mut cfg = scenario_cfg(method);
+        // calibrate a deadline from the no-deadline pace, tight enough
+        // that the slow half of the fleet misses it in most rounds
+        let probe = run_pure_rust(&cfg, 6).unwrap();
+        let mean_round = probe.records.last().unwrap().cum_sim_seconds / cfg.fed.rounds as f64;
+        cfg.scenario.deadline_s = Some(0.75 * mean_round);
+        let seq = run_pure_rust(&cfg, 6).unwrap();
+        let dist = DistributedEngine::from_config(&cfg, 6).unwrap().run().unwrap();
+        assert!(
+            same_histories(&seq, &dist),
+            "{}: deadline-drop rounds diverged between engines",
+            cfg.fed.method.name()
+        );
+        // drops really happened: dropped clients deliver strictly fewer
+        // bits than the no-deadline probe
+        assert!(
+            seq.records.last().unwrap().cum_bits < probe.records.last().unwrap().cum_bits,
+            "{}: deadline never dropped anyone — the parity check was vacuous",
+            cfg.fed.method.name()
+        );
+    }
 }
 
 /// All five shipped strategies run under partial participation in BOTH
@@ -291,6 +302,144 @@ fn deadline_aware_sampler_beats_uniform_on_drop_rate() {
         aware.records.last().unwrap().cum_bits,
         uniform.records.last().unwrap().cum_bits,
     );
+}
+
+mod probe {
+    //! A delivery-feedback probe: a registered strategy that records
+    //! every `encode_delta` / `on_dropped` call, so the tests below can
+    //! pin exactly which (client, round) pairs the engine NACKed.
+    use fedscalar::algo::{strategy, Method, Strategy, StrategyInfo};
+    use fedscalar::coordinator::Uplink;
+    use fedscalar::error::Result;
+    use fedscalar::runtime::Backend;
+    use std::sync::Mutex;
+
+    pub static ENCODES: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+    pub static NACKS: Mutex<Vec<(usize, u64)>> = Mutex::new(Vec::new());
+
+    pub fn reset() {
+        ENCODES.lock().unwrap().clear();
+        NACKS.lock().unwrap().clear();
+    }
+
+    struct Probe;
+
+    impl Strategy for Probe {
+        fn uplink_bits(&self, _d: usize) -> u64 {
+            64
+        }
+        fn encode_delta(&mut self, client: usize, _delta: Vec<f32>, loss: f32) -> Result<Uplink> {
+            ENCODES.lock().unwrap().push(client);
+            Ok(Uplink::Dense { delta: vec![], loss })
+        }
+        fn on_dropped(&mut self, client: usize, round: u64) -> Result<()> {
+            NACKS.lock().unwrap().push((client, round));
+            Ok(())
+        }
+        fn aggregate_and_apply(
+            &mut self,
+            _backend: &mut dyn Backend,
+            _params: &mut [f32],
+            uplinks: &[Uplink],
+        ) -> Result<f64> {
+            strategy::mean_loss(uplinks)
+        }
+    }
+
+    fn parse(s: &str) -> Option<Method> {
+        (s == "nack-probe").then(|| Method::new("nack-probe", |_seed| Box::new(Probe)))
+    }
+
+    pub fn register() {
+        strategy::register(StrategyInfo {
+            family: "nack-probe",
+            pattern: "nack-probe",
+            summary: "records encode/on_dropped calls (delivery-feedback tests)",
+            parse,
+            wire_tags: &[],
+        });
+    }
+}
+
+/// THE delivery-feedback protocol pin: the sequential engine calls
+/// `Strategy::on_dropped` for every casualty — both the never-uploaded
+/// kind (compute overruns the deadline; zero bits on the air) and the
+/// transmitted-but-cut kind (partial bits charged) — and for nobody else.
+#[test]
+fn sequential_engine_nacks_every_casualty() {
+    probe::register();
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.fed.method = Method::parse("nack-probe").unwrap();
+    cfg.fed.num_agents = 3;
+    cfg.fed.rounds = 4;
+    cfg.fed.eval_every = 4;
+    let t_other = fedscalar::netsim::latency::t_other_seconds(
+        &cfg.network.latency,
+        cfg.model.param_dim(),
+        cfg.fed.num_agents,
+        cfg.network.channel.nominal_bps,
+        cfg.network.schedule,
+    );
+
+    // case 1: deadline below t_other -> every client is a compute
+    // casualty, nothing ever transmits, every (client, round) is NACKed
+    probe::reset();
+    cfg.scenario.deadline_s = Some(0.5 * t_other);
+    let h = run_pure_rust(&cfg, 0).unwrap();
+    assert_eq!(h.records.last().unwrap().cum_bits, 0.0, "nothing on the air");
+    let want: Vec<(usize, u64)> = (0..4u64)
+        .flat_map(|r| (0..3usize).map(move |c| (c, r)))
+        .collect();
+    assert_eq!(*probe::NACKS.lock().unwrap(), want);
+    assert_eq!(probe::ENCODES.lock().unwrap().len(), 12);
+
+    // case 2: deadline inside the upload train -> everyone keys the
+    // radio (partial bits charged) and still every upload is NACKed
+    probe::reset();
+    cfg.network.channel.sigma = 0.0;
+    let slot = 64.0 / cfg.network.channel.nominal_bps; // 64-bit probe payload
+    cfg.scenario.deadline_s = Some(t_other + 0.25 * slot);
+    let h = run_pure_rust(&cfg, 0).unwrap();
+    assert!(h.records.last().unwrap().cum_bits > 0.0, "partial bits charged");
+    assert_eq!(*probe::NACKS.lock().unwrap(), want);
+
+    // case 3: no deadline -> no NACKs
+    probe::reset();
+    cfg.scenario.deadline_s = None;
+    let _ = run_pure_rust(&cfg, 0).unwrap();
+    assert!(probe::NACKS.lock().unwrap().is_empty());
+}
+
+/// Per-client energy budgets end to end: batteries drain (compute +
+/// transmit), exhausted devices leave the availability set, the run goes
+/// quiet once the fleet is flat — and both engines see the identical
+/// trajectory.
+#[test]
+fn energy_budget_exhaustion_quiets_the_run_in_both_engines() {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.fed.method = Method::fedavg(); // big payload: drains fast
+    cfg.fed.num_agents = 3;
+    cfg.fed.rounds = 8;
+    cfg.fed.eval_every = 1;
+    cfg.network.channel.sigma = 0.0;
+    // calibrate the budget to survive exactly ~2 rounds of fedavg uploads
+    let probe_run = run_pure_rust(&cfg, 4).unwrap();
+    let per_round_per_client =
+        probe_run.records.last().unwrap().cum_energy_joules / (8.0 * 3.0);
+    cfg.scenario.fleet.energy_budget_j = 2.5 * per_round_per_client;
+    let seq = run_pure_rust(&cfg, 4).unwrap();
+    // the fleet dies after round 2: later rounds are empty (NaN train
+    // loss) and the counters freeze
+    let last = seq.records.last().unwrap();
+    let bits_by_round: Vec<f64> = seq.records.iter().map(|r| r.cum_bits).collect();
+    assert_eq!(last.cum_bits, bits_by_round[2], "no uploads after exhaustion");
+    assert!(last.cum_bits > 0.0);
+    assert!(seq.records[3..].iter().all(|r| r.train_loss.is_nan()));
+    assert!(seq.records[..3].iter().all(|r| !r.train_loss.is_nan()));
+    // identical across engines (battery state is leader-side SimNet
+    // state, driven the same way by both)
+    let dist = DistributedEngine::from_config(&cfg, 4).unwrap().run().unwrap();
+    assert!(same_histories(&seq, &dist));
 }
 
 /// The [scenario] TOML table drives the whole surface end to end.
