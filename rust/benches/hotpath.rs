@@ -20,18 +20,22 @@ use fedscalar::data::synthetic::{generate, SyntheticConfig};
 use fedscalar::data::BatchSampler;
 use fedscalar::nn::{glorot_init, Mlp, ModelSpec};
 use fedscalar::rng::{fill_v, VDistribution, Xoshiro256};
-use fedscalar::runtime::{Backend, PureRustBackend, ScalarUpload, XlaBackend};
+use fedscalar::runtime::{Backend, PureRustBackend, ScalarUpload, WorkerPool, XlaBackend};
 use fedscalar::tensor;
 use fedscalar::util::bench::{header, write_json, Bench};
 use std::sync::Arc;
 
-fn round_bench_engine(threads: usize) -> Engine {
+fn round_bench_engine_n(agents: usize, threads: usize) -> Engine {
     let mut cfg = ExperimentConfig::smoke();
-    cfg.fed.num_agents = 20;
+    cfg.fed.num_agents = agents;
     cfg.fed.threads = threads;
     let mut be = PureRustBackend::new(&cfg.model);
     be.set_shape(cfg.fed.local_steps, cfg.fed.batch_size);
     Engine::from_config(&cfg, Box::new(be), 0).expect("smoke engine")
+}
+
+fn round_bench_engine(threads: usize) -> Engine {
+    round_bench_engine_n(20, threads)
 }
 
 fn main() {
@@ -167,6 +171,50 @@ fn main() {
         )
     });
 
+    header("parallel server aggregation: decode_all N=512 at d=100000");
+    // the large-fleet leader hot path: 512 agents' streams reconstructed
+    // into one ghat — serial vs the persistent pool (Rademacher splits
+    // the coordinate axis via seekable streams; Gaussian splits agents
+    // into fixed macro-chunks); results are bit-identical either way
+    let fleet_rs: Vec<(u32, Vec<f32>)> = (0..512u32)
+        .map(|a| (a.wrapping_mul(2_654_435_761) ^ 0xbeef, vec![0.3 + a as f32 * 1e-3]))
+        .collect();
+    let fleet_jobs: Vec<(u32, &[f32])> =
+        fleet_rs.iter().map(|(s, r)| (*s, r.as_slice())).collect();
+    let pool = WorkerPool::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    b.run("decode_all N=512 rademacher d=100000 threads=1", || {
+        ghat_big.fill(0.0);
+        projection::decode_all(&mut ghat_big, &fleet_jobs, VDistribution::Rademacher, 1e-3);
+        ghat_big[0]
+    });
+    b.run("decode_all N=512 rademacher d=100000 threads=auto", || {
+        ghat_big.fill(0.0);
+        projection::decode_all_pooled(
+            &mut ghat_big,
+            &fleet_jobs,
+            VDistribution::Rademacher,
+            1e-3,
+            &pool,
+        );
+        ghat_big[0]
+    });
+    b.run("decode_all N=512 normal d=100000 threads=1", || {
+        ghat_big.fill(0.0);
+        projection::decode_all(&mut ghat_big, &fleet_jobs, VDistribution::Normal, 1e-3);
+        ghat_big[0]
+    });
+    b.run("decode_all N=512 normal d=100000 threads=auto", || {
+        ghat_big.fill(0.0);
+        projection::decode_all_pooled(
+            &mut ghat_big,
+            &fleet_jobs,
+            VDistribution::Normal,
+            1e-3,
+            &pool,
+        );
+        ghat_big[0]
+    });
+
     header("QSGD 8-bit quantizer at d=1990");
     let mut q = Quantizer::new(8, 0);
     b.run("quantize", || q.quantize(&delta));
@@ -205,6 +253,16 @@ fn main() {
     let mut eng_par = round_bench_engine(0);
     b.run("engine round 20 clients threads=auto", || {
         eng_par.run_round(0, false).unwrap()
+    });
+    // the large-fleet round: 256 clients through the persistent pool
+    // (client stage fan-out + pooled decode) vs one core
+    let mut eng256_serial = round_bench_engine_n(256, 1);
+    b.run("engine round 256 clients threads=1", || {
+        eng256_serial.run_round(0, false).unwrap()
+    });
+    let mut eng256_par = round_bench_engine_n(256, 0);
+    b.run("engine round 256 clients threads=auto", || {
+        eng256_par.run_round(0, false).unwrap()
     });
     // the drop-heavy round: churn + a deadline that bites + top-k error
     // feedback — puts the delivery-feedback (NACK) bookkeeping cost

@@ -6,7 +6,10 @@
 //! coordinator never materializes the d-dimensional update. The uplink is
 //! one 32-bit seed plus m 32-bit scalars; the server regenerates the
 //! projection vectors from the seeds and applies the reconstructed mean
-//! update `x += ghat` (Algorithm 1 line 13).
+//! update `x += ghat` (Algorithm 1 line 13). At fleet scale the
+//! regeneration fans out over the engine's worker pool
+//! ([`crate::algo::projection::decode_all_pooled`]) — bit-identical to
+//! the serial reduction for every thread count.
 
 use crate::algo::strategy::{mean_loss, LocalStage, Strategy, BITS_PER_FLOAT, BITS_PER_SEED};
 use crate::algo::Method;

@@ -19,7 +19,9 @@ pub mod topk;
 
 pub use local_sgd::LocalSgd;
 pub use method::Method;
-pub use projection::{decode_all, decode_into, encode, encode_multi, Projector};
+pub use projection::{
+    decode_all, decode_all_pooled, decode_into, encode, encode_multi, Projector, DECODE_CHUNK,
+};
 pub use qsgd::{QsgdPacket, Quantizer};
 pub use strategy::{LocalStage, Strategy, StrategyInfo, BITS_PER_FLOAT, BITS_PER_SEED};
 pub use svrg::LocalSvrg;

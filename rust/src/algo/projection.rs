@@ -34,9 +34,40 @@
 //! used as the reference by the equivalence property tests and as the
 //! baseline in `benches/hotpath.rs`. Decode is bit-identical to the
 //! reference (per-coordinate addition order is preserved and sign flips
-//! are exact); encode differs only in f32 summation order.
+//! are exact) up to [`DECODE_CHUNK`] agents; encode differs only in f32
+//! summation order, and so do Gaussian decodes beyond one macro-chunk
+//! (see below).
+//!
+//! ## Parallel server-side aggregation (§Perf)
+//!
+//! Leader-side `decode_all` is O(N·m·d) — the aggregation half of the hot
+//! path. [`decode_all_pooled`] spreads it across a
+//! [`WorkerPool`](crate::runtime::WorkerPool) while staying **bit-identical
+//! to the serial [`decode_all`] for every thread count**:
+//!
+//! * **Rademacher splits the *coordinate* axis.** Sign-word consumption is
+//!   position-derivable (exactly one word per 64 entries), so each worker
+//!   opens every agent's word stream directly at its segment via an
+//!   O(1) [`Jump`] fast-forward — no prefix replay. Per coordinate the
+//!   additions happen in job order exactly as in the serial loop, so the
+//!   result is EXACT for any segmentation (and identical to the seed
+//!   pipeline).
+//! * **Gaussian splits the *agent* axis** — rejection sampling consumes a
+//!   data-dependent number of draws, so Gaussian streams cannot seek and
+//!   each stream must be regenerated from its own seed start. Agents are
+//!   partitioned into fixed [`DECODE_CHUNK`]-sized macro-chunks (a
+//!   compile-time constant, never a function of the worker count); each
+//!   chunk accumulates a partial ghat from zero, and the partials are
+//!   combined in ascending chunk order. The reduction *shape* — and hence
+//!   the f32 summation order — is identical for 1 worker and N workers;
+//!   the serial `decode_all` runs the very same chunked shape. Rounds
+//!   with ≤ `DECODE_CHUNK` agents keep the original single-pass order,
+//!   so existing pinned histories are unchanged.
 
-use crate::rng::{RademacherWords, SplitMix64, VDistribution, VStream, V_BLOCK};
+use crate::rng::{
+    v_rng, Jump, RademacherWords, SplitMix64, VDistribution, VStream, Xoshiro256, V_BLOCK,
+};
+use crate::runtime::WorkerPool;
 
 /// Derive the j-th projection sub-seed from the uploaded seed. j = 0 is the
 /// identity so single-projection FedScalar uses the wire seed directly.
@@ -169,64 +200,194 @@ pub fn decode_into(ghat: &mut [f32], seed: u32, rs: &[f32], dist: VDistribution,
     decode_all(ghat, &[(seed, rs)], dist, weight);
 }
 
+/// Agents per macro-chunk of the Gaussian fixed-shape reduction. A
+/// compile-time constant — NEVER a function of the worker count — so the
+/// f32 summation order of [`decode_all`]/[`decode_all_pooled`] is
+/// invariant under `fed.threads`. Rounds with at most this many agents
+/// keep the seed pipeline's single-pass addition order bit for bit.
+pub const DECODE_CHUNK: usize = 32;
+
 /// Batched reconstruction of EVERY agent's contribution in one blockwise
 /// sweep: `ghat += weight * sum_{(seed, rs)} sum_j rs[j] * v(seed, j)`.
 ///
 /// Each ghat block is touched once and stays cache-hot while all N×m
 /// (agent, projection) streams deposit into it — the seed's path made N×m
-/// full d-length passes instead. Per coordinate the additions happen in
-/// the same job order as chaining [`decode_into`], so the result is
-/// bit-identical to the sequential naive reference.
+/// full d-length passes instead. This is the canonical serial reduction:
+/// Rademacher accumulates per coordinate in job order (bit-identical to
+/// chained [`decode_into`]); Gaussian runs the fixed-shape
+/// [`DECODE_CHUNK`] macro-chunk reduction (identical to chaining up to
+/// one macro-chunk, identical to [`decode_all_pooled`] always — see the
+/// module docs).
 pub fn decode_all(ghat: &mut [f32], jobs: &[(u32, &[f32])], dist: VDistribution, weight: f32) {
     match dist {
         VDistribution::Rademacher => {
             // (word stream, weight * r) per (agent, projection) pair; the
             // weighted scalar is sign-flipped into ghat — v never exists.
-            let mut streams: Vec<(RademacherWords, f32)> = jobs
-                .iter()
-                .flat_map(|&(seed, rs)| {
-                    rs.iter().enumerate().map(move |(j, &r)| {
-                        (RademacherWords::new(subseed(seed, j)), weight * r)
-                    })
-                })
-                .collect();
-            let mut chunks = ghat.chunks_exact_mut(64);
-            for chunk in chunks.by_ref() {
-                for (s, wr) in streams.iter_mut() {
-                    let w = s.next_word();
-                    for (k, g) in chunk.iter_mut().enumerate() {
-                        *g += flip(*wr, (w >> k) & 1);
-                    }
-                }
-            }
-            let rem = chunks.into_remainder();
-            if !rem.is_empty() {
-                for (s, wr) in streams.iter_mut() {
-                    let w = s.next_word();
-                    for (k, g) in rem.iter_mut().enumerate() {
-                        *g += flip(*wr, (w >> k) & 1);
+            let mut streams = rademacher_streams(jobs, weight);
+            decode_words_rademacher(ghat, &mut streams);
+        }
+        VDistribution::Normal => {
+            if jobs.len() <= DECODE_CHUNK {
+                decode_chunk_normal(ghat, jobs, weight);
+            } else {
+                // fixed-shape reduction: every macro-chunk accumulates a
+                // partial from zero, partials land in ascending chunk
+                // order — the identical arithmetic decode_all_pooled
+                // performs with the chunks spread over workers
+                let mut partial = vec![0.0f32; ghat.len()];
+                for chunk in jobs.chunks(DECODE_CHUNK) {
+                    partial.fill(0.0);
+                    decode_chunk_normal(&mut partial, chunk, weight);
+                    for (g, p) in ghat.iter_mut().zip(partial.iter()) {
+                        *g += *p;
                     }
                 }
             }
         }
-        VDistribution::Normal => {
-            let mut streams: Vec<(VStream, f32)> = jobs
+    }
+}
+
+/// [`decode_all`] spread across a persistent [`WorkerPool`], bit-identical
+/// to the serial form for every pool size (see the module docs for the
+/// two parallel axes). Callers gate on problem size themselves — at
+/// `N·m·d` below a few million the pool dispatch outweighs the work (the
+/// PureRust backend applies such a threshold).
+pub fn decode_all_pooled(
+    ghat: &mut [f32],
+    jobs: &[(u32, &[f32])],
+    dist: VDistribution,
+    weight: f32,
+    pool: &WorkerPool,
+) {
+    if jobs.is_empty() {
+        return;
+    }
+    match dist {
+        VDistribution::Rademacher => {
+            // coordinate-axis split: 64-aligned segments, one per worker;
+            // every stream is opened AT its segment via one shared Jump
+            // fast-forward per boundary (chained — never replayed)
+            let words_total = ghat.len().div_ceil(64);
+            let n_seg = pool.threads().min(words_total);
+            if n_seg < 2 {
+                return decode_all(ghat, jobs, dist, weight);
+            }
+            let seg_words = words_total.div_ceil(n_seg);
+            let jump = Jump::by(seg_words as u64);
+            let mut gens: Vec<(Xoshiro256, f32)> = jobs
                 .iter()
                 .flat_map(|&(seed, rs)| {
                     rs.iter()
                         .enumerate()
-                        .map(move |(j, &r)| (VStream::new(subseed(seed, j), dist), weight * r))
+                        .map(move |(j, &r)| (v_rng(subseed(seed, j)), weight * r))
                 })
                 .collect();
-            let mut buf = [0.0f32; V_BLOCK];
-            for block in ghat.chunks_mut(V_BLOCK) {
-                for (s, wr) in streams.iter_mut() {
-                    let b = &mut buf[..block.len()];
-                    s.fill_next(b);
-                    for (g, &v) in block.iter_mut().zip(b.iter()) {
-                        *g += *wr * v;
+            let segments: Vec<&mut [f32]> = ghat.chunks_mut(seg_words * 64).collect();
+            let n_segments = segments.len();
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n_segments);
+            for (s, seg) in segments.into_iter().enumerate() {
+                let mut streams: Vec<(RademacherWords, f32)> = gens
+                    .iter()
+                    .map(|(g, wr)| (RademacherWords::from_rng(g.clone()), *wr))
+                    .collect();
+                if s + 1 < n_segments {
+                    for (g, _) in gens.iter_mut() {
+                        g.jump(&jump);
                     }
                 }
+                tasks.push(Box::new(move || decode_words_rademacher(seg, &mut streams)));
+            }
+            pool.scoped(tasks);
+        }
+        VDistribution::Normal => {
+            // agent-axis split: the same DECODE_CHUNK macro-chunks as the
+            // serial reduction, spread contiguously over the workers;
+            // partials then combine in ascending chunk order regardless
+            // of which worker produced them
+            let chunks: Vec<&[(u32, &[f32])]> = jobs.chunks(DECODE_CHUNK).collect();
+            if chunks.len() < 2 || pool.threads() < 2 {
+                return decode_all(ghat, jobs, dist, weight);
+            }
+            let d = ghat.len();
+            let mut partials: Vec<Vec<f32>> = chunks.iter().map(|_| vec![0.0f32; d]).collect();
+            let workers = pool.threads().min(chunks.len());
+            let per = chunks.len().div_ceil(workers);
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(workers);
+            for (chunk_group, partial_group) in chunks.chunks(per).zip(partials.chunks_mut(per)) {
+                tasks.push(Box::new(move || {
+                    for (chunk, partial) in chunk_group.iter().zip(partial_group.iter_mut()) {
+                        decode_chunk_normal(partial, chunk, weight);
+                    }
+                }));
+            }
+            pool.scoped(tasks);
+            for partial in &partials {
+                for (g, p) in ghat.iter_mut().zip(partial.iter()) {
+                    *g += *p;
+                }
+            }
+        }
+    }
+}
+
+/// One positioned word stream + weighted scalar per (agent, projection).
+fn rademacher_streams(jobs: &[(u32, &[f32])], weight: f32) -> Vec<(RademacherWords, f32)> {
+    jobs.iter()
+        .flat_map(|&(seed, rs)| {
+            rs.iter()
+                .enumerate()
+                .map(move |(j, &r)| (RademacherWords::new(subseed(seed, j)), weight * r))
+        })
+        .collect()
+}
+
+/// Deposit all streams into `out`, word block by word block, per
+/// coordinate in stream order. `out` may be any 64-aligned-start segment
+/// of the full ghat: each stream consumes exactly `ceil(len / 64)` words
+/// (partial-word sign bits discarded), matching the seek arithmetic of
+/// [`decode_all_pooled`].
+fn decode_words_rademacher(out: &mut [f32], streams: &mut [(RademacherWords, f32)]) {
+    let mut chunks = out.chunks_exact_mut(64);
+    for chunk in chunks.by_ref() {
+        for (s, wr) in streams.iter_mut() {
+            let w = s.next_word();
+            for (k, g) in chunk.iter_mut().enumerate() {
+                *g += flip(*wr, (w >> k) & 1);
+            }
+        }
+    }
+    let rem = chunks.into_remainder();
+    if !rem.is_empty() {
+        for (s, wr) in streams.iter_mut() {
+            let w = s.next_word();
+            for (k, g) in rem.iter_mut().enumerate() {
+                *g += flip(*wr, (w >> k) & 1);
+            }
+        }
+    }
+}
+
+/// Accumulate one macro-chunk of Gaussian jobs into `out`, blockwise (the
+/// seed pipeline's single-pass order over the chunk's streams).
+fn decode_chunk_normal(out: &mut [f32], jobs: &[(u32, &[f32])], weight: f32) {
+    let mut streams: Vec<(VStream, f32)> = jobs
+        .iter()
+        .flat_map(|&(seed, rs)| {
+            rs.iter().enumerate().map(move |(j, &r)| {
+                (
+                    VStream::new(subseed(seed, j), VDistribution::Normal),
+                    weight * r,
+                )
+            })
+        })
+        .collect();
+    let mut buf = [0.0f32; V_BLOCK];
+    for block in out.chunks_mut(V_BLOCK) {
+        for (s, wr) in streams.iter_mut() {
+            let b = &mut buf[..block.len()];
+            s.fill_next(b);
+            for (g, &v) in block.iter_mut().zip(b.iter()) {
+                *g += *wr * v;
             }
         }
     }
@@ -481,6 +642,39 @@ mod tests {
                         encode(&delta, subseed(1234, j), dist),
                         "{dist:?} d={d} j={j}"
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_decode_bit_identical_to_serial() {
+        use crate::runtime::WorkerPool;
+        let pool3 = WorkerPool::new(3);
+        let pool7 = WorkerPool::new(7);
+        let mut rng = Xoshiro256::seed_from(20);
+        // N straddles DECODE_CHUNK; d odd with a partial final word
+        for n_agents in [1usize, 5, DECODE_CHUNK + 1] {
+            for d in [129usize, 1990] {
+                let jobs_owned: Vec<(u32, Vec<f32>)> = (0..n_agents)
+                    .map(|a| (a as u32 * 7 + 1, vec![rng.uniform_in(-2.0, 2.0)]))
+                    .collect();
+                let jobs: Vec<(u32, &[f32])> =
+                    jobs_owned.iter().map(|(s, r)| (*s, r.as_slice())).collect();
+                for dist in [VDistribution::Normal, VDistribution::Rademacher] {
+                    let base: Vec<f32> = (0..d).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+                    let mut serial = base.clone();
+                    decode_all(&mut serial, &jobs, dist, 0.125);
+                    for pool in [&pool3, &pool7] {
+                        let mut pooled = base.clone();
+                        decode_all_pooled(&mut pooled, &jobs, dist, 0.125, pool);
+                        assert_eq!(
+                            pooled,
+                            serial,
+                            "{dist:?} N={n_agents} d={d} threads={}",
+                            pool.threads()
+                        );
+                    }
                 }
             }
         }

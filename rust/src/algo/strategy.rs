@@ -34,6 +34,13 @@
 //! * [`Strategy::uplink_bits`] must be a pure function of `(self, d)`:
 //!   the netsim charges it for every agent-round, whatever the actual
 //!   in-memory size of the produced message.
+//! * [`Strategy::aggregate_and_apply`] may run on a backend holding the
+//!   engine's persistent worker pool (server-side parallel `decode_all`);
+//!   those pooled reductions are fixed-shape and bit-identical to serial
+//!   (`algo::projection`), so aggregation results — like everything else —
+//!   never depend on `fed.threads`. Client-side `encode_delta` and
+//!   strategy state stay strictly serial; strategies must never spawn
+//!   their own encode-side parallelism.
 
 use crate::coordinator::messages::Uplink;
 use crate::coordinator::wire::WireUplink;

@@ -28,10 +28,12 @@ pub struct FedConfig {
     /// "broadcasts ... to a subset of clients"). 1.0 = full participation
     /// (the §III experiment).
     pub participation: f64,
-    /// Worker threads for the intra-round client stage (0 = one per
-    /// available core). Purely a throughput knob: the round results are
-    /// bit-identical for every thread count, since each client's stage
-    /// depends only on (params, its batches, its seed).
+    /// Worker threads for the intra-round client stage AND the server's
+    /// parallel `decode_all` aggregation (0 = one per available core; the
+    /// engine owns one persistent pool reused by both). Purely a
+    /// throughput knob: the round results are bit-identical for every
+    /// thread count — each client's stage depends only on (params, its
+    /// batches, its seed), and the server reduction is fixed-shape.
     pub threads: usize,
 }
 

@@ -101,6 +101,14 @@ impl DistributedEngine {
         let mut leader_backend = PureRustBackend::new(&cfg.model);
         leader_backend.set_shape(cfg.fed.local_steps, cfg.fed.batch_size);
         let params = leader_backend.init_params(SplitMix64::derive(run_seed, 0xd0d0))?;
+        // the leader's decode/aggregate stage parallelizes exactly like
+        // the sequential engine's (fed.threads semantics shared); pooled
+        // reductions are bit-identical to serial, so this cannot perturb
+        // the cross-engine equality the tests pin
+        let threads = crate::coordinator::engine::resolve_threads(cfg.fed.threads);
+        if threads > 1 {
+            leader_backend.set_worker_pool(Arc::new(crate::runtime::WorkerPool::new(threads)));
+        }
 
         let mut workers = Vec::with_capacity(cfg.fed.num_agents);
         for (id, shard) in partition.shards.iter().enumerate() {

@@ -19,7 +19,7 @@ use crate::data::{dirichlet_partition, iid_partition, Dataset};
 use crate::error::{Error, Result};
 use crate::metrics::{RoundRecord, RunHistory};
 use crate::rng::SplitMix64;
-use crate::runtime::{Backend, ClientWorker, PureRustBackend, ScalarUpload};
+use crate::runtime::{Backend, ClientWorker, PureRustBackend, ScalarUpload, WorkerPool};
 use crate::simnet::{Sampler, SimNet};
 use crate::{log_debug, log_info};
 use std::sync::Arc;
@@ -49,12 +49,17 @@ pub struct Engine {
     cum_energy_joules: f64,
     history: RunHistory,
     run_seed: u64,
-    /// Cached intra-round worker pool (grown lazily, reused across
-    /// rounds — worker scratch is the expensive part, not the threads).
+    /// Cached per-worker client-stage scratch (grown lazily, reused
+    /// across rounds).
     workers: Vec<Box<dyn ClientWorker>>,
     /// Set once the backend declines to provide workers (XLA), so rounds
     /// stop re-asking.
     workers_unavailable: bool,
+    /// Run-lifetime thread pool (None when `fed.threads` resolves to 1):
+    /// spawned once at construction, reused by every round's client fan-out
+    /// AND — via [`Backend::set_worker_pool`] — by the backend's parallel
+    /// `decode_all` reconstruction.
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl Engine {
@@ -106,6 +111,11 @@ impl Engine {
             })
             .collect();
         let params = backend.init_params(SplitMix64::derive(run_seed, 0xd0d0))?;
+        let threads = resolve_threads(cfg.fed.threads);
+        let pool = (threads > 1).then(|| Arc::new(WorkerPool::new(threads)));
+        if let Some(p) = &pool {
+            backend.set_worker_pool(p.clone());
+        }
         Ok(Engine {
             history: RunHistory::new(cfg.fed.method.name()),
             simnet: SimNet::new(
@@ -129,18 +139,8 @@ impl Engine {
             run_seed,
             workers: Vec::new(),
             workers_unavailable: false,
+            pool,
         })
-    }
-
-    /// Worker threads for the intra-round client stage (config knob;
-    /// 0 = one per available core).
-    fn worker_threads(&self) -> usize {
-        match self.cfg.fed.threads {
-            0 => std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1),
-            t => t,
-        }
     }
 
     /// Lazily grow the cached worker pool to `want` entries; false when
@@ -295,7 +295,11 @@ impl Engine {
         // it. Results are bit-identical to the serial order for any
         // thread count, since each client's stage depends only on its own
         // inputs.
-        let threads = self.worker_threads().min(k_active).max(1);
+        // the run-lifetime pool is the source of truth for the worker
+        // count (re-resolving `threads = 0` each round could exceed the
+        // fixed pool size if available parallelism grows mid-run)
+        let pool_threads = self.pool.as_ref().map_or(1, |p| p.threads());
+        let threads = pool_threads.min(k_active).max(1);
         let parallel = threads > 1 && k_active > 1 && self.ensure_workers(threads);
         let stage = self.strategy.local_stage();
         match stage {
@@ -307,11 +311,12 @@ impl Engine {
                     seeds.push(c.next_projection_seed());
                 }
                 let ups: Vec<ScalarUpload> = if parallel {
-                    // fan the stages out over the cached worker pool,
+                    // fan the stages out over the persistent pool threads,
                     // borrowing each client's buffers in place
                     let clients = &self.clients;
                     let params = &self.params;
-                    fan_out(&mut self.workers[..threads], k_active, |worker, i| {
+                    let pool = self.pool.as_deref().expect("parallel implies pool");
+                    fan_out(pool, &mut self.workers[..threads], k_active, |worker, i| {
                         let c = &clients[active[i]];
                         worker.client_fedscalar(
                             params, &c.xb, &c.yb, seeds[i], alpha, dist, projections,
@@ -354,7 +359,8 @@ impl Engine {
                     }
                     let clients = &self.clients;
                     let params = &self.params;
-                    let deltas = fan_out(&mut self.workers[..threads], k_active, |worker, i| {
+                    let pool = self.pool.as_deref().expect("parallel implies pool");
+                    let deltas = fan_out(pool, &mut self.workers[..threads], k_active, |worker, i| {
                         let c = &clients[active[i]];
                         worker.client_delta(params, &c.xb, &c.yb, alpha)
                     });
@@ -461,20 +467,37 @@ impl Engine {
     }
 }
 
-/// Run `job(worker, ci)` for ci in 0..n across the workers via
-/// `std::thread::scope`, client ids chunked contiguously per worker.
-/// Results land in slot `ci`, so the output order matches the serial loop
+/// Resolve the `fed.threads` knob (0 = one per available core) — shared
+/// with the distributed engine so both size their pools identically.
+pub(crate) fn resolve_threads(threads: usize) -> usize {
+    match threads {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        t => t,
+    }
+}
+
+/// Run `job(worker, ci)` for ci in 0..n across the persistent pool
+/// threads, client ids chunked contiguously per worker scratch. Results
+/// land in slot `ci`, so the output order matches the serial loop
 /// exactly, bit for bit, regardless of the worker count.
-fn fan_out<T, F>(workers: &mut [Box<dyn ClientWorker>], n: usize, job: F) -> Vec<Result<T>>
+fn fan_out<T, F>(
+    pool: &WorkerPool,
+    workers: &mut [Box<dyn ClientWorker>],
+    n: usize,
+    job: F,
+) -> Vec<Result<T>>
 where
     T: Send,
     F: Fn(&mut dyn ClientWorker, usize) -> Result<T> + Sync,
 {
     let chunk = n.div_ceil(workers.len());
     let mut slots: Vec<Option<Result<T>>> = std::iter::repeat_with(|| None).take(n).collect();
-    std::thread::scope(|scope| {
+    {
         let job = &job;
         let mut rest = slots.as_mut_slice();
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(workers.len());
         for (w, worker) in workers.iter_mut().enumerate() {
             let lo = w * chunk;
             let hi = ((w + 1) * chunk).min(n);
@@ -483,13 +506,14 @@ where
             }
             let (head, tail) = rest.split_at_mut(hi - lo);
             rest = tail;
-            scope.spawn(move || {
+            tasks.push(Box::new(move || {
                 for (i, slot) in head.iter_mut().enumerate() {
                     *slot = Some(job(worker.as_mut(), lo + i));
                 }
-            });
+            }));
         }
-    });
+        pool.scoped(tasks);
+    }
     slots
         .into_iter()
         .map(|s| s.expect("client worker left a slot unfilled"))

@@ -18,7 +18,7 @@
 //! fused kernels to the retained naive reference.
 
 use super::gaussian::GaussianSource;
-use super::{rademacher, VDistribution, Xoshiro256};
+use super::{rademacher, Jump, VDistribution, Xoshiro256};
 
 /// Streaming block size in f32 entries. 256 × 4 B = 1 KiB: small enough
 /// that a v-block plus the matching delta/ghat block stay L1-resident,
@@ -49,6 +49,24 @@ impl RademacherWords {
         RademacherWords { rng: v_rng(seed) }
     }
 
+    /// Open the stream at word `word_offset` — bit-identical to
+    /// `new(seed)` followed by `word_offset` `next_word` calls, without
+    /// replaying the prefix (one [`Jump`] fast-forward). Sign-word
+    /// consumption is exactly `ceil(d / 64)` words for a d-length pass,
+    /// so any 64-entry-aligned coordinate offset maps to an exact word
+    /// offset — the basis of segment-parallel Rademacher decoding.
+    pub fn new_at(seed: u32, word_offset: u64) -> Self {
+        let mut rng = v_rng(seed);
+        rng.jump(&Jump::by(word_offset));
+        RademacherWords { rng }
+    }
+
+    /// Wrap an already positioned generator (the parallel decode driver
+    /// seeks many streams by one shared [`Jump`] and hands them out here).
+    pub(crate) fn from_rng(rng: Xoshiro256) -> Self {
+        RademacherWords { rng }
+    }
+
     /// The next 64 signs, packed LSB-first.
     #[inline]
     pub fn next_word(&mut self) -> u64 {
@@ -75,13 +93,39 @@ impl VStream {
         }
     }
 
+    /// Open the stream at entry `offset` without replaying the prefix —
+    /// bit-identical to `new(seed, dist)` streamed past the first
+    /// `offset` entries in 64-multiple calls.
+    ///
+    /// Rademacher only: its consumption is position-derivable (exactly
+    /// one sign word per 64 entries), so a 64-aligned entry offset maps
+    /// to an exact [`Jump`] of `offset / 64` words. Returns `None` for
+    /// Gaussian — rejection sampling consumes a data-dependent number of
+    /// draws, so there is no closed-form seek; Gaussian work parallelizes
+    /// per agent instead (each agent's stream starts at its own seed).
+    pub fn new_at(seed: u32, dist: VDistribution, offset: usize) -> Option<Self> {
+        if dist != VDistribution::Rademacher {
+            return None;
+        }
+        assert_eq!(offset % 64, 0, "Rademacher seek offsets must be 64-aligned");
+        let mut rng = v_rng(seed);
+        rng.jump(&Jump::by((offset / 64) as u64));
+        Some(VStream {
+            dist,
+            rng,
+            gauss: GaussianSource::new(),
+        })
+    }
+
     /// Fill `out` with the next `out.len()` entries of `v(seed)`.
     ///
-    /// To stay bit-identical with a single `fill_v` over the concatenated
-    /// lengths, every call except the last must use a multiple of
-    /// [`V_BLOCK`] (the Gaussian polar method emits pairs; Rademacher
-    /// discards leftover sign bits at the end of each call). Only the
-    /// final, possibly-partial block may have arbitrary (odd) length.
+    /// Gaussian calls may use ANY split — `GaussianSource::fill` carries
+    /// the unconsumed half of an odd tail's polar pair into the next call,
+    /// so the concatenated stream is always bit-identical to one `fill_v`.
+    /// Rademacher calls must use multiples of 64 (of which [`V_BLOCK`] is
+    /// one) except for the final, possibly-partial call: each call
+    /// discards the leftover sign bits of its last word, exactly as
+    /// `fill_v` does at the end of the vector.
     #[inline]
     pub fn fill_next(&mut self, out: &mut [f32]) {
         match self.dist {
@@ -135,5 +179,62 @@ mod tests {
     fn v_block_is_even_multiple_of_word() {
         assert_eq!(V_BLOCK % 64, 0);
         assert_eq!(V_BLOCK % 2, 0);
+    }
+
+    #[test]
+    fn gaussian_odd_splits_match_fill_v_exactly() {
+        // odd-length Gaussian chunks leave a warm polar-pair cache; the
+        // next fill drains it first, so ANY split of the stream matches
+        // the one-shot fill_v bit for bit (satellite pin: VStream
+        // odd-tail-then-reuse behaviour)
+        let d = 61;
+        let mut want = vec![0.0f32; d];
+        fill_v(123, VDistribution::Normal, &mut want);
+        for splits in [vec![3, 5, 53], vec![1, 1, 1, 58], vec![7, 54], vec![60, 1]] {
+            assert_eq!(splits.iter().sum::<usize>(), d);
+            let mut got = vec![0.0f32; d];
+            let mut s = VStream::new(123, VDistribution::Normal);
+            let mut at = 0;
+            for len in splits.iter() {
+                s.fill_next(&mut got[at..at + len]);
+                at += len;
+            }
+            assert_eq!(got, want, "splits={splits:?}");
+        }
+    }
+
+    #[test]
+    fn rademacher_words_seek_matches_replay() {
+        for offset in [0u64, 1, 2, 31, 64, 100] {
+            let mut replay = RademacherWords::new(5);
+            for _ in 0..offset {
+                replay.next_word();
+            }
+            let mut seeked = RademacherWords::new_at(5, offset);
+            for i in 0..32 {
+                assert_eq!(
+                    seeked.next_word(),
+                    replay.next_word(),
+                    "offset={offset} word={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vstream_seek_rademacher_only() {
+        // a seeked Rademacher stream yields the tail of the full stream
+        let d = V_BLOCK * 2 + 17;
+        let mut full = vec![0.0f32; d];
+        fill_v(9, VDistribution::Rademacher, &mut full);
+        let offset = V_BLOCK;
+        let mut tail = vec![0.0f32; d - offset];
+        let mut s = VStream::new_at(9, VDistribution::Rademacher, offset).unwrap();
+        for chunk in tail.chunks_mut(V_BLOCK) {
+            s.fill_next(chunk);
+        }
+        assert_eq!(tail, full[offset..]);
+        // Gaussian cannot seek (rejection sampling)
+        assert!(VStream::new_at(9, VDistribution::Normal, V_BLOCK).is_none());
     }
 }

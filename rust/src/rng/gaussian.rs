@@ -37,9 +37,22 @@ impl GaussianSource {
 
     /// Fill a slice with N(0,1) samples (pairwise polar writes — skips the
     /// per-sample cache shuffle of `next`).
+    ///
+    /// A warm cache (the unconsumed second draw of an odd-length `next`/
+    /// `fill` tail) is the *next value of the stream*, so it is drained
+    /// first: any sequence of `fill`/`next` calls over this source yields
+    /// exactly the samples of one uninterrupted `fill` — `VStream` relies
+    /// on this to stay bit-identical to `fill_v` across arbitrary
+    /// (odd-length included) Gaussian block splits.
     pub fn fill(&mut self, rng: &mut Xoshiro256, out: &mut [f32]) {
         let mut i = 0;
         let n = out.len();
+        if i < n {
+            if let Some(z) = self.cached.take() {
+                out[i] = z;
+                i += 1;
+            }
+        }
         while i + 1 < n {
             let (a, b) = polar_pair(rng);
             out[i] = a;
@@ -97,6 +110,33 @@ mod tests {
         assert!(mean.abs() < 0.01, "mean={mean}");
         assert!((var - 1.0).abs() < 0.02, "var={var}");
         assert!((kurt - 3.0).abs() < 0.15, "E[x^4]={kurt}"); // 4th moment = 3
+    }
+
+    #[test]
+    fn fill_drains_a_warm_cache_first() {
+        // a fill after an odd-length tail must continue the stream exactly
+        // where the cached second draw left it, not discard it
+        let mut rng_ref = Xoshiro256::seed_from(77);
+        let mut g_ref = GaussianSource::new();
+        let mut want = [0.0f32; 9];
+        g_ref.fill(&mut rng_ref, &mut want);
+
+        let mut rng = Xoshiro256::seed_from(77);
+        let mut g = GaussianSource::new();
+        let mut got = [0.0f32; 9];
+        g.fill(&mut rng, &mut got[..3]); // odd: leaves a warm cache
+        g.fill(&mut rng, &mut got[3..8]); // drains it, ends odd again
+        got[8] = g.next(&mut rng); // next() also drains
+        assert_eq!(got, want);
+        // an empty fill neither consumes nor clobbers the cache
+        let mut rng2 = Xoshiro256::seed_from(5);
+        let mut g2 = GaussianSource::new();
+        let mut one = [0.0f32; 1];
+        g2.fill(&mut rng2, &mut one);
+        let cached_before = g2.cached;
+        g2.fill(&mut rng2, &mut []);
+        assert_eq!(g2.cached, cached_before);
+        assert!(cached_before.is_some());
     }
 
     #[test]

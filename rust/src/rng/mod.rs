@@ -15,10 +15,11 @@ mod gaussian;
 mod splitmix;
 mod xoshiro;
 
+pub(crate) use block::v_rng;
 pub use block::{RademacherWords, VStream, V_BLOCK};
 pub use gaussian::{lognormal_unit_mean, GaussianSource};
 pub use splitmix::SplitMix64;
-pub use xoshiro::Xoshiro256;
+pub use xoshiro::{Jump, Xoshiro256};
 
 /// Canonical form for user-supplied enum names (CLI / TOML): trimmed and
 /// ASCII-lowercased. The single normalization point every `parse` in the

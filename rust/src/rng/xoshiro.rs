@@ -1,6 +1,15 @@
 //! xoshiro256++ 1.0 (Blackman & Vigna 2019) — the crate's workhorse PRNG.
+//!
+//! Besides the usual sampling surface, the generator supports *seekable*
+//! streams: the state transition is linear over GF(2) (XOR / shift /
+//! rotate only — the `+` lives in the output function, which never feeds
+//! back into the state), so advancing by `n` steps is multiplication by a
+//! precomputed 256×256 bit matrix [`Jump`]. This is what lets the
+//! parallel aggregation path open a Rademacher v-stream at an arbitrary
+//! word offset without replaying the prefix (`rng::RademacherWords::new_at`).
 
 use super::SplitMix64;
+use std::sync::{Mutex, OnceLock};
 
 #[derive(Debug, Clone)]
 pub struct Xoshiro256 {
@@ -47,14 +56,36 @@ impl Xoshiro256 {
             .wrapping_add(self.s[3])
             .rotate_left(23)
             .wrapping_add(self.s[0]);
-        let t = self.s[1] << 17;
-        self.s[2] ^= self.s[0];
-        self.s[3] ^= self.s[1];
-        self.s[1] ^= self.s[2];
-        self.s[0] ^= self.s[3];
-        self.s[2] ^= t;
-        self.s[3] = self.s[3].rotate_left(45);
+        Self::advance(&mut self.s);
         result
+    }
+
+    /// The state transition of one `next_u64` call (output dropped).
+    /// GF(2)-linear: XOR/shift/rotate only — the basis of [`Jump`].
+    #[inline(always)]
+    fn advance(s: &mut [u64; 4]) {
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+    }
+
+    /// Fast-forward this stream as if the jump's distance worth of
+    /// `next_u64` calls had been made and their outputs discarded —
+    /// one 256-bit vector–matrix product, independent of the distance.
+    #[inline]
+    pub fn jump(&mut self, j: &Jump) {
+        self.s = j.apply(&self.s);
+    }
+
+    /// Fast-forward by `n` steps. Convenience over [`Self::jump`]; when
+    /// seeking many streams by the same distance, build the [`Jump`] once
+    /// and apply it per stream instead.
+    pub fn discard(&mut self, n: u64) {
+        self.jump(&Jump::by(n));
     }
 
     #[inline]
@@ -118,6 +149,102 @@ impl Xoshiro256 {
         }
         idx.truncate(k);
         idx
+    }
+}
+
+/// `T^n` for the xoshiro256++ state transition `T`, as a 256×256 matrix
+/// over GF(2) (`rows[i]` = image of state bit `i`). Applying it to a
+/// state fast-forwards the stream by `n` steps in one vector–matrix
+/// product (~256 conditional 4-word XORs) instead of `n` generator
+/// steps — the "jump" of the xoshiro authors, generalized from their
+/// fixed 2^128 distance to arbitrary `n` by square-and-multiply over a
+/// lazily built, process-global `T^(2^k)` table.
+///
+/// Build one `Jump` per distance and reuse it across streams: `by(n)`
+/// costs a handful of 256×256 GF(2) matrix products (sub-millisecond,
+/// amortized further by the table), while `Xoshiro256::jump` is ~1 µs.
+#[derive(Clone)]
+pub struct Jump {
+    rows: Box<[[u64; 4]; 256]>,
+}
+
+impl Jump {
+    /// `T^0` — the identity.
+    fn identity() -> Jump {
+        let mut rows = Box::new([[0u64; 4]; 256]);
+        for (i, row) in rows.iter_mut().enumerate() {
+            row[i >> 6] = 1 << (i & 63);
+        }
+        Jump { rows }
+    }
+
+    /// `T^1`: each basis state advanced by one step.
+    fn step() -> Jump {
+        let mut rows = Box::new([[0u64; 4]; 256]);
+        for (i, row) in rows.iter_mut().enumerate() {
+            let mut s = [0u64; 4];
+            s[i >> 6] = 1 << (i & 63);
+            Xoshiro256::advance(&mut s);
+            *row = s;
+        }
+        Jump { rows }
+    }
+
+    /// `T^n` via square-and-multiply over the cached `T^(2^k)` table.
+    pub fn by(n: u64) -> Jump {
+        if n == 0 {
+            return Jump::identity();
+        }
+        static POW2: OnceLock<Mutex<Vec<Jump>>> = OnceLock::new();
+        let table = POW2.get_or_init(|| Mutex::new(vec![Jump::step()]));
+        let mut table = table.lock().unwrap();
+        let top_bit = 63 - n.leading_zeros() as usize;
+        while table.len() <= top_bit {
+            let last = table.last().unwrap();
+            let sq = last.then(last);
+            table.push(sq);
+        }
+        let mut acc: Option<Jump> = None;
+        for k in 0..=top_bit {
+            if (n >> k) & 1 == 1 {
+                acc = Some(match acc {
+                    None => table[k].clone(),
+                    Some(a) => a.then(&table[k]),
+                });
+            }
+        }
+        acc.expect("n > 0 has at least one set bit")
+    }
+
+    /// Composition: the jump that applies `self` first, then `other`
+    /// (`T^(a+b)` from `T^a` and `T^b`).
+    pub fn then(&self, other: &Jump) -> Jump {
+        let mut rows = Box::new([[0u64; 4]; 256]);
+        for (row, src) in rows.iter_mut().zip(self.rows.iter()) {
+            *row = other.apply(src);
+        }
+        Jump { rows }
+    }
+
+    /// `state × T^n`: XOR together the images of the set state bits.
+    fn apply(&self, s: &[u64; 4]) -> [u64; 4] {
+        let mut out = [0u64; 4];
+        for (w, &word) in s.iter().enumerate() {
+            if word == 0 {
+                continue;
+            }
+            let base = w << 6;
+            for b in 0..64 {
+                if (word >> b) & 1 == 1 {
+                    let row = &self.rows[base + b];
+                    out[0] ^= row[0];
+                    out[1] ^= row[1];
+                    out[2] ^= row[2];
+                    out[3] ^= row[3];
+                }
+            }
+        }
+        out
     }
 }
 
@@ -198,5 +325,50 @@ mod tests {
         let mut c0 = base.child(0);
         let mut c1 = base.child(1);
         assert_ne!(c0.next_u64(), c1.next_u64());
+    }
+
+    #[test]
+    fn jump_matches_stepping_exactly() {
+        for n in [0u64, 1, 2, 63, 64, 65, 255, 1000, 12_345, 1 << 20] {
+            let mut stepped = Xoshiro256::seed_from(41);
+            for _ in 0..n {
+                stepped.next_u64();
+            }
+            let mut jumped = Xoshiro256::seed_from(41);
+            jumped.jump(&Jump::by(n));
+            assert_eq!(jumped.state(), stepped.state(), "n={n}");
+            // ... and the streams continue identically
+            for _ in 0..16 {
+                assert_eq!(jumped.next_u64(), stepped.next_u64(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn discard_is_jump_by_n() {
+        let mut a = Xoshiro256::seed_from(9);
+        let mut b = Xoshiro256::seed_from(9);
+        a.discard(777);
+        for _ in 0..777 {
+            b.next_u64();
+        }
+        assert_eq!(a.state(), b.state());
+    }
+
+    #[test]
+    fn jump_composition_adds_distances() {
+        let j3 = Jump::by(3);
+        let j5 = Jump::by(5);
+        let j8 = j3.then(&j5);
+        let mut a = Xoshiro256::seed_from(123);
+        let mut b = Xoshiro256::seed_from(123);
+        a.jump(&j8);
+        b.jump(&Jump::by(8));
+        assert_eq!(a.state(), b.state());
+        // chained application == one composed application
+        let mut c = Xoshiro256::seed_from(123);
+        c.jump(&j3);
+        c.jump(&j5);
+        assert_eq!(c.state(), a.state());
     }
 }

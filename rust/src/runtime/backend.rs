@@ -3,6 +3,8 @@
 
 use crate::error::Result;
 use crate::rng::VDistribution;
+use crate::runtime::WorkerPool;
+use std::sync::Arc;
 
 /// What a FedScalar client sends up the wire, plus simulation-only
 /// telemetry. THE INVARIANT: the wire payload is `seed` + `rs` (m scalars;
@@ -22,7 +24,7 @@ pub struct ScalarUpload {
 /// A thread-confined client-stage executor: the same math as the owning
 /// backend's `client_fedscalar` / `client_delta`, with its own scratch
 /// buffers, so the coordinator can fan one round's client stages across
-/// `std::thread::scope` workers. Each client's computation depends only on
+/// its persistent [`WorkerPool`]. Each client's computation depends only on
 /// `(params, batches, seed)`, so any worker produces bit-identical results
 /// for a given client regardless of which thread runs it.
 pub trait ClientWorker: Send {
@@ -115,6 +117,19 @@ pub trait Backend {
     /// then falls back to the serial `client_fedscalar_batch` path.
     fn client_worker(&self) -> Option<Box<dyn ClientWorker>> {
         None
+    }
+
+    /// Offer the engine's run-lifetime [`WorkerPool`] for server-side
+    /// parallel work (the batched `decode_all` reconstruction). Called at
+    /// most once, before the first round; the default (and the XLA
+    /// backend, whose aggregation runs inside its artifact) ignores it.
+    ///
+    /// THE INVARIANT: using or dropping the pool must not change any
+    /// result bit — the pooled reductions are fixed-shape and
+    /// thread-count-invariant (`algo::projection::decode_all_pooled`), so
+    /// `fed.threads` stays a pure throughput knob.
+    fn set_worker_pool(&mut self, pool: Arc<WorkerPool>) {
+        let _ = pool;
     }
 
     /// Baseline client stage: the same S local SGD steps, returning the

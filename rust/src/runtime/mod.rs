@@ -20,6 +20,7 @@ mod artifacts;
 mod backend;
 #[cfg(feature = "xla")]
 mod pjrt;
+mod pool;
 mod pure_rust;
 #[cfg(feature = "xla")]
 mod xla_backend;
@@ -28,6 +29,7 @@ mod xla_stub;
 
 pub use artifacts::Manifest;
 pub use backend::{Backend, ClientWorker, ScalarUpload};
+pub use pool::WorkerPool;
 #[cfg(feature = "xla")]
 pub use pjrt::{literal_f32_vec, literal_i32_vec, literal_u32_vec, XlaExecutable, XlaRuntime};
 pub use pure_rust::PureRustBackend;

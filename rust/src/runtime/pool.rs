@@ -1,0 +1,207 @@
+//! Run-lifetime worker pool for intra-round parallelism.
+//!
+//! The engine used to spawn fresh `std::thread::scope` threads every
+//! round; at fleet scale (hundreds of clients × thousands of rounds) the
+//! per-round spawn/join cost and the cold stacks add up. [`WorkerPool`]
+//! spawns its threads once and feeds them closures over channels for the
+//! whole run — the sequential engine fans the client stage over it AND
+//! hands it to the backend for the parallel server-side `decode_all`
+//! (see [`crate::runtime::Backend::set_worker_pool`]).
+//!
+//! [`WorkerPool::scoped`] blocks until every submitted job has finished,
+//! so jobs may borrow from the caller's stack exactly like
+//! `std::thread::scope` spawns — the pool is a drop-in replacement with
+//! persistent threads.
+//!
+//! The pool is a pure throughput device: everything executed on it must
+//! be (and is — see the determinism contracts in `algo::strategy` and
+//! `algo::projection`) bit-identical to the serial order for any thread
+//! count.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+/// A job once it is on the wire: erased to `'static` (see the SAFETY
+/// argument in [`WorkerPool::scoped`]) and paired with the per-call
+/// completion channel it must ack on.
+type Shuttle = (
+    Box<dyn FnOnce() + Send + 'static>,
+    Sender<Option<Box<dyn std::any::Any + Send>>>,
+);
+
+/// A fixed set of persistent worker threads executing borrowed closures.
+pub struct WorkerPool {
+    task_txs: Vec<Sender<Shuttle>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` (≥ 1) workers. They idle on channel receives until
+    /// the pool is dropped.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let mut task_txs = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let (tx, rx) = channel::<Shuttle>();
+            let handle = std::thread::Builder::new()
+                .name(format!("fedscalar-worker-{i}"))
+                .spawn(move || {
+                    while let Ok((task, done)) = rx.recv() {
+                        let panic = catch_unwind(AssertUnwindSafe(task)).err();
+                        // the receiver may only be gone if the submitting
+                        // call itself is unwinding; nothing left to tell
+                        let _ = done.send(panic);
+                    }
+                })
+                .expect("spawn pool worker");
+            task_txs.push(tx);
+            handles.push(handle);
+        }
+        WorkerPool { task_txs, handles }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.task_txs.len()
+    }
+
+    /// Execute `jobs` (at most [`Self::threads`]; job `i` runs on worker
+    /// `i`) and block until every one has finished, then propagate the
+    /// first panic, if any. Because the call does not return while any
+    /// job is still running, the closures may borrow from the caller's
+    /// stack — same contract as `std::thread::scope`.
+    pub fn scoped<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        assert!(
+            jobs.len() <= self.threads(),
+            "{} jobs > {} pool threads",
+            jobs.len(),
+            self.threads()
+        );
+        let (done_tx, done_rx) = channel();
+        let mut sent = 0usize;
+        let mut send_failed = false;
+        for (i, job) in jobs.into_iter().enumerate() {
+            // SAFETY: the task's only escape from this function is through
+            // a pool thread, and we do not return before receiving one
+            // completion ack per sent task (a worker always acks, panic or
+            // not) — so the erased borrows never outlive 'env. A lost
+            // worker (ack channel closed early) aborts via panic below
+            // rather than returning with a job in flight: its thread is
+            // gone, so the job is gone with it.
+            let task = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'env>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            };
+            if self.task_txs[i].send((task, done_tx.clone())).is_err() {
+                send_failed = true; // settle what was sent, then panic
+                break;
+            }
+            sent += 1;
+        }
+        drop(done_tx);
+        let mut panic = None;
+        let mut acked = 0usize;
+        while acked < sent {
+            match done_rx.recv() {
+                Ok(p) => {
+                    acked += 1;
+                    if panic.is_none() {
+                        panic = p;
+                    }
+                }
+                Err(_) => break, // every sender gone => no job in flight
+            }
+        }
+        if let Some(p) = panic {
+            resume_unwind(p);
+        }
+        assert!(
+            acked == sent && !send_failed,
+            "worker pool thread died ({acked}/{sent} jobs settled)"
+        );
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.task_txs.clear(); // disconnect => workers fall out of recv
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn jobs_run_and_borrow_the_stack() {
+        let pool = WorkerPool::new(4);
+        let mut out = vec![0usize; 4];
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (i, slot) in out.iter_mut().enumerate() {
+                jobs.push(Box::new(move || *slot = i + 1));
+            }
+            pool.scoped(jobs);
+        }
+        assert_eq!(out, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_calls() {
+        let pool = WorkerPool::new(2);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.scoped(vec![
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                }),
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                }),
+            ]);
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn fewer_jobs_than_threads_is_fine() {
+        let pool = WorkerPool::new(8);
+        let mut x = 0u64;
+        pool.scoped(vec![Box::new(|| x = 42)]);
+        assert_eq!(x, 42);
+        pool.scoped(Vec::new()); // zero jobs: no-op
+    }
+
+    #[test]
+    fn panics_propagate_after_all_jobs_settle() {
+        let pool = WorkerPool::new(2);
+        let finished = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped(vec![
+                Box::new(|| panic!("job zero exploded")),
+                Box::new(|| {
+                    finished.fetch_add(1, Ordering::SeqCst);
+                }),
+            ]);
+        }));
+        assert!(result.is_err());
+        assert_eq!(finished.load(Ordering::SeqCst), 1);
+        // the pool survives a panicked job
+        let mut ok = false;
+        pool.scoped(vec![Box::new(|| ok = true)]);
+        assert!(ok);
+    }
+
+    #[test]
+    fn at_least_one_thread() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 1);
+    }
+}

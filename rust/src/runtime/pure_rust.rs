@@ -8,17 +8,27 @@
 //! run one round's clients in parallel.
 
 use super::backend::{Backend, ClientWorker, ScalarUpload};
+use super::pool::WorkerPool;
 use crate::algo::{projection, LocalSgd};
 use crate::error::{Error, Result};
 use crate::nn::{glorot_init, Mlp, MlpScratch, ModelSpec};
 use crate::rng::VDistribution;
 use crate::tensor;
+use std::sync::Arc;
+
+/// Below this many f32 accumulations (N·m·d) a pooled `decode_all` costs
+/// more in dispatch + stream seeking than it saves — stay serial. Either
+/// path is bit-identical, so the threshold is purely a throughput knob.
+const POOLED_DECODE_MIN_WORK: usize = 1 << 22;
 
 pub struct PureRustBackend {
     mlp: Mlp,
     sgd: Option<LocalSgd>,
     delta: Vec<f32>,
     eval_scratch: MlpScratch,
+    /// Engine-provided pool for parallel server-side reconstruction
+    /// ([`Backend::set_worker_pool`]); absent = always serial.
+    pool: Option<Arc<WorkerPool>>,
 }
 
 /// Validate the [S*B, dim]/[S*B] batch buffers against the model + the
@@ -54,6 +64,7 @@ impl PureRustBackend {
             mlp,
             sgd: None,
             delta: vec![0.0; d],
+            pool: None,
         }
     }
 
@@ -156,11 +167,22 @@ impl Backend for PureRustBackend {
         let mut ghat = vec![0.0f32; self.param_dim()];
         let weight = 1.0 / (n as f32 * m as f32);
         // blockwise batched reconstruction: every ghat block is filled by
-        // all N*m streams while cache-hot (vs N*m full d-length passes)
+        // all N*m streams while cache-hot (vs N*m full d-length passes);
+        // big rounds additionally fan out over the engine's worker pool —
+        // bit-identical to the serial reduction either way
         let jobs: Vec<(u32, &[f32])> =
             uploads.iter().map(|u| (u.seed, u.rs.as_slice())).collect();
-        projection::decode_all(&mut ghat, &jobs, dist, weight);
+        match &self.pool {
+            Some(pool) if pool.threads() > 1 && n * m * ghat.len() >= POOLED_DECODE_MIN_WORK => {
+                projection::decode_all_pooled(&mut ghat, &jobs, dist, weight, pool)
+            }
+            _ => projection::decode_all(&mut ghat, &jobs, dist, weight),
+        }
         Ok(ghat)
+    }
+
+    fn set_worker_pool(&mut self, pool: Arc<WorkerPool>) {
+        self.pool = Some(pool);
     }
 
     fn evaluate(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
@@ -314,6 +336,32 @@ mod tests {
         let (db, lb) = w.client_delta(&params, &xb, &yb, 0.02).unwrap();
         assert_eq!(da, db);
         assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn pooled_reconstruct_bit_identical_to_serial() {
+        // enough uploads to clear POOLED_DECODE_MIN_WORK at d=1990, so
+        // the pooled path genuinely engages
+        let spec = ModelSpec::default();
+        let mut serial_be = PureRustBackend::new(&spec);
+        let mut pooled_be = PureRustBackend::new(&spec);
+        pooled_be.set_worker_pool(Arc::new(WorkerPool::new(4)));
+        let d = serial_be.param_dim();
+        let n = POOLED_DECODE_MIN_WORK / (2 * d) + 1;
+        let mut rng = Xoshiro256::seed_from(3);
+        let ups: Vec<ScalarUpload> = (0..n)
+            .map(|i| ScalarUpload {
+                seed: i as u32,
+                rs: vec![rng.uniform_in(-1.0, 1.0), rng.uniform_in(-1.0, 1.0)],
+                loss: 0.0,
+                delta_sq: 0.0,
+            })
+            .collect();
+        for dist in [VDistribution::Rademacher, VDistribution::Normal] {
+            let want = serial_be.server_reconstruct(&ups, dist).unwrap();
+            let got = pooled_be.server_reconstruct(&ups, dist).unwrap();
+            assert_eq!(got, want, "{dist:?}");
+        }
     }
 
     #[test]

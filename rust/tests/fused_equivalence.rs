@@ -6,9 +6,13 @@
 //!   order → tolerance-based equality, all m ∈ {1, 4, 16}, odd d, both
 //!   distributions.
 //! * decode_into/decode_all: per-coordinate addition order is preserved
-//!   and Rademacher signs are exact IEEE sign flips → near-exact equality.
+//!   and Rademacher signs are exact IEEE sign flips → near-exact equality
+//!   (above `DECODE_CHUNK` agents the Gaussian fixed-shape reduction
+//!   re-associates the sum; `tests/parallel_decode.rs` pins that regime
+//!   against the naive oracle and across worker pools).
 //! * engine: `fed.threads` must be a pure throughput knob — bit-identical
-//!   RunHistory for every thread count and every method.
+//!   RunHistory for every thread count and every method, on the client
+//!   fan-out and the pooled server decode alike.
 
 use fedscalar::algo::projection::{self, naive};
 use fedscalar::algo::Method;

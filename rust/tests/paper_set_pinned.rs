@@ -9,6 +9,16 @@
 //! aggregation arithmetic — so any deviation introduced by the strategy
 //! layer (RNG re-seeding, reordered float reductions, changed accounting)
 //! fails this suite bit-for-bit.
+//!
+//! Parallel-aggregation note: `decode_all` now runs a fixed-shape
+//! macro-chunk reduction for Gaussian rounds beyond
+//! `projection::DECODE_CHUNK` agents. At this suite's N = 4 the chunked
+//! shape degenerates to the seed pipeline's single-pass order (and
+//! Rademacher preserves it at every N), so these histories still pin the
+//! ORIGINAL seed behaviour — and because the reference below routes
+//! through the same `server_reconstruct`, the pin would catch either
+//! side drifting. Thread-count invariance of the pooled decode is pinned
+//! separately in `tests/parallel_decode.rs`.
 
 use fedscalar::algo::{Method, Quantizer};
 use fedscalar::config::ExperimentConfig;

@@ -1,0 +1,144 @@
+//! The parallel server-side aggregation contract:
+//!
+//! * `decode_all` / `decode_all_pooled` are BIT-IDENTICAL across worker
+//!   pools of 1, 2, and auto (one per core) threads — `fed.threads` is a
+//!   pure throughput knob on the server exactly as on the clients. N
+//!   straddles the `DECODE_CHUNK` macro-chunk boundary, d is odd (partial
+//!   final sign word), both distributions.
+//! * `projection::naive` remains the serial oracle: the fixed-shape
+//!   reduction differs from the naive chain only in f32 summation order
+//!   (tolerance-based pin; exact for Rademacher, whose per-coordinate
+//!   addition order is preserved by the coordinate-axis split).
+//! * Seekable streams open exactly where replay would have landed.
+
+use fedscalar::algo::projection::{self, naive, DECODE_CHUNK};
+use fedscalar::rng::{RademacherWords, VDistribution, Xoshiro256};
+use fedscalar::runtime::WorkerPool;
+
+const DISTS: [VDistribution; 2] = [VDistribution::Normal, VDistribution::Rademacher];
+
+fn jobs_for(n_agents: usize, m: usize, rng: &mut Xoshiro256) -> Vec<(u32, Vec<f32>)> {
+    (0..n_agents)
+        .map(|a| {
+            (
+                (a as u32).wrapping_mul(0x9e37_79b9) ^ 0xa5a5,
+                (0..m).map(|_| rng.uniform_in(-2.0, 2.0)).collect(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn decode_all_bit_identical_across_thread_counts() {
+    let auto = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let pools = [WorkerPool::new(1), WorkerPool::new(2), WorkerPool::new(auto)];
+    let mut rng = Xoshiro256::seed_from(1);
+    // N straddles the macro-chunk boundary (DECODE_CHUNK = 32); d odd,
+    // crossing the 64-word and V_BLOCK boundaries
+    const _: () = assert!(DECODE_CHUNK > 5 && DECODE_CHUNK < 33);
+    for n_agents in [1usize, 5, 33] {
+        for m in [1usize, 3] {
+            let owned = jobs_for(n_agents, m, &mut rng);
+            let jobs: Vec<(u32, &[f32])> = owned.iter().map(|(s, r)| (*s, r.as_slice())).collect();
+            for d in [63usize, 1001, 4097] {
+                for dist in DISTS {
+                    let base: Vec<f32> = (0..d).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+                    let mut serial = base.clone();
+                    projection::decode_all(&mut serial, &jobs, dist, 0.03125);
+                    for pool in &pools {
+                        let mut pooled = base.clone();
+                        projection::decode_all_pooled(&mut pooled, &jobs, dist, 0.03125, pool);
+                        assert_eq!(
+                            pooled,
+                            serial,
+                            "{dist:?} N={n_agents} m={m} d={d} threads={}",
+                            pool.threads()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_reduction_pinned_to_naive_oracle() {
+    // above DECODE_CHUNK agents the Gaussian fixed-shape reduction
+    // re-associates the per-coordinate sum (chunk partials combined in
+    // ascending order) — the naive chain stays the oracle up to f32
+    // summation-order error. Rademacher additions keep the exact naive
+    // per-coordinate order, so its pin is exact.
+    let mut rng = Xoshiro256::seed_from(2);
+    let d = 777;
+    let weight = 0.0625f32;
+    for n_agents in [DECODE_CHUNK - 1, DECODE_CHUNK, DECODE_CHUNK + 1, 3 * DECODE_CHUNK + 5] {
+        let owned = jobs_for(n_agents, 2, &mut rng);
+        let jobs: Vec<(u32, &[f32])> = owned.iter().map(|(s, r)| (*s, r.as_slice())).collect();
+        for dist in DISTS {
+            let mut got = vec![0.0f32; d];
+            projection::decode_all(&mut got, &jobs, dist, weight);
+            let mut want = vec![0.0f32; d];
+            let mut scratch = vec![0.0f32; d];
+            for &(seed, rs) in &jobs {
+                naive::decode_into(&mut want, seed, rs, dist, &mut scratch, weight);
+            }
+            for i in 0..d {
+                let diff = (got[i] - want[i]).abs();
+                let tol = match dist {
+                    // exact: same additions, same order, sign flips exact
+                    VDistribution::Rademacher => 0.0,
+                    // re-associated f32 sum of up to ~N*m ≈ 200 terms:
+                    // linear worst-case rounding bound with headroom
+                    VDistribution::Normal => {
+                        (n_agents * 2) as f32 * f32::EPSILON * 20.0 * (1.0 + want[i].abs())
+                    }
+                };
+                assert!(
+                    diff <= tol,
+                    "{dist:?} N={n_agents} i={i}: {} vs naive {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn seeked_stream_matches_replayed_stream() {
+    for word_offset in [0u64, 1, 4, 17, 64, 1563] {
+        let mut replay = RademacherWords::new(0xfeed);
+        for _ in 0..word_offset {
+            replay.next_word();
+        }
+        let mut seeked = RademacherWords::new_at(0xfeed, word_offset);
+        for k in 0..64 {
+            assert_eq!(
+                seeked.next_word(),
+                replay.next_word(),
+                "offset={word_offset} word={k}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pooled_decode_into_nonzero_ghat_is_exact() {
+    // the pooled path must also be exact when ghat starts non-zero (the
+    // accumulate-into contract of decode_all)
+    let pool = WorkerPool::new(4);
+    let mut rng = Xoshiro256::seed_from(3);
+    let d = 2113; // odd, > 2 * V_BLOCK
+    let owned = jobs_for(40, 1, &mut rng);
+    let jobs: Vec<(u32, &[f32])> = owned.iter().map(|(s, r)| (*s, r.as_slice())).collect();
+    for dist in DISTS {
+        let base: Vec<f32> = (0..d).map(|_| rng.uniform_in(-5.0, 5.0)).collect();
+        let mut serial = base.clone();
+        projection::decode_all(&mut serial, &jobs, dist, 0.2);
+        let mut pooled = base.clone();
+        projection::decode_all_pooled(&mut pooled, &jobs, dist, 0.2, &pool);
+        assert_eq!(pooled, serial, "{dist:?}");
+    }
+}

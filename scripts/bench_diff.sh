@@ -1,0 +1,68 @@
+#!/usr/bin/env bash
+# Diff two hotpath trajectory files (flat {"name": ns_per_iter} JSON, as
+# written by `cargo bench --bench hotpath`) and print a per-entry
+# regression table.
+#
+#   scripts/bench_diff.sh OLD.json NEW.json [--fail-above PCT]
+#
+# Entries present in only one file are listed separately. With
+# --fail-above PCT the script exits 1 if any shared entry regressed by
+# more than PCT percent (useful as a soft perf gate on the full-budget
+# trajectory; quick-mode numbers are too noisy to gate on).
+set -euo pipefail
+
+if [ "$#" -lt 2 ]; then
+    echo "usage: $0 OLD.json NEW.json [--fail-above PCT]" >&2
+    exit 2
+fi
+
+python3 - "$@" <<'PY'
+import json
+import sys
+
+old_path, new_path = sys.argv[1], sys.argv[2]
+fail_above = None
+if len(sys.argv) > 3:
+    if sys.argv[3] != "--fail-above" or len(sys.argv) < 5:
+        sys.exit(f"usage: bench_diff.sh OLD.json NEW.json [--fail-above PCT]")
+    fail_above = float(sys.argv[4])
+
+with open(old_path) as f:
+    old = json.load(f)
+with open(new_path) as f:
+    new = json.load(f)
+
+shared = [n for n in new if n in old]
+width = max((len(n) for n in shared), default=4)
+print(f"{'entry':<{width}}  {'old ns/iter':>14}  {'new ns/iter':>14}  {'delta':>9}")
+print("-" * (width + 43))
+worst = []
+for name in shared:
+    o, n = old[name], new[name]
+    delta = (n - o) / o * 100.0 if o else float("inf")
+    mark = ""
+    if delta >= 10.0:
+        mark = "  REGRESSED"
+    elif delta <= -10.0:
+        mark = "  improved"
+    print(f"{name:<{width}}  {o:>14,.1f}  {n:>14,.1f}  {delta:>+8.1f}%{mark}")
+    if fail_above is not None and delta > fail_above:
+        worst.append((name, delta))
+
+only_old = [n for n in old if n not in new]
+only_new = [n for n in new if n not in old]
+if only_old:
+    print(f"\nonly in {old_path}:")
+    for n in only_old:
+        print(f"  - {n}")
+if only_new:
+    print(f"\nonly in {new_path}:")
+    for n in only_new:
+        print(f"  + {n}")
+
+if worst:
+    print(f"\n{len(worst)} entr(ies) regressed beyond {fail_above:.1f}%:")
+    for name, delta in sorted(worst, key=lambda x: -x[1]):
+        print(f"  {name}: {delta:+.1f}%")
+    sys.exit(1)
+PY

@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Fail if a hotpath bench JSON is missing any expected entry name —
+# catches benches that silently stopped running (renamed, gated away,
+# early-exited) before a hole appears in the perf trajectory.
+#
+#   scripts/check_bench_entries.sh [BENCH.json] [EXPECTED.txt]
+#
+# Defaults check the quick-mode file verify.sh / CI produce.
+set -euo pipefail
+
+json="${1:-rust/BENCH_hotpath.quick.json}"
+expected="${2:-rust/benches/hotpath_expected.txt}"
+
+python3 - "$json" "$expected" <<'PY'
+import json
+import sys
+
+json_path, expected_path = sys.argv[1], sys.argv[2]
+with open(json_path) as f:
+    entries = json.load(f)
+with open(expected_path) as f:
+    expected = [l.strip() for l in f if l.strip() and not l.lstrip().startswith("#")]
+
+missing = [name for name in expected if name not in entries]
+if missing:
+    print(f"{json_path}: {len(missing)} expected bench entr(ies) missing:")
+    for name in missing:
+        print(f"  - {name}")
+    sys.exit(1)
+print(f"{json_path}: all {len(expected)} expected entries present ({len(entries)} total)")
+PY
