@@ -15,7 +15,7 @@
 use fedscalar::algo::{projection, LocalSgd, Method, Quantizer, Strategy};
 use fedscalar::coordinator::Uplink;
 use fedscalar::config::ExperimentConfig;
-use fedscalar::coordinator::Engine;
+use fedscalar::coordinator::{DistributedEngine, Engine};
 use fedscalar::data::synthetic::{generate, SyntheticConfig};
 use fedscalar::data::BatchSampler;
 use fedscalar::nn::{glorot_init, Mlp, ModelSpec};
@@ -291,6 +291,21 @@ fn main() {
         let k = drop_round;
         drop_round += 1;
         eng_drop.run_round(k, false).unwrap()
+    });
+    // the threaded frame-passing engine's round, faults off: leader
+    // serialize + seal -> 20 worker threads -> envelope decode ->
+    // aggregate. The round index must advance — replaying a computed
+    // round would hit the workers' resend cache, not the compute path.
+    let mut eng_dist = {
+        let mut cfg = ExperimentConfig::smoke();
+        cfg.fed.num_agents = 20;
+        DistributedEngine::from_config(&cfg, 0).expect("dist engine")
+    };
+    let mut dist_round = 0usize;
+    b.run("dist round 20 clients faults=off", || {
+        let k = dist_round;
+        dist_round += 1;
+        eng_dist.step(k, false).unwrap()
     });
 
     header("simnet round lifecycle (20 clients, event-driven netsim)");

@@ -5,6 +5,7 @@
 //! 0.1 Mbps lognormal uplink, P_tx = 2 W, Digits corpus, d = 1990.
 
 use crate::algo::Method;
+use crate::coordinator::faults::FaultsConfig;
 use crate::error::{Error, Result};
 use crate::netsim::{NetworkConfig, Schedule};
 use crate::nn::ModelSpec;
@@ -76,6 +77,10 @@ pub struct ExperimentConfig {
     pub artifacts_dir: PathBuf,
     /// Label-skew Dirichlet alpha; None = IID (the paper's setting).
     pub dirichlet_alpha: Option<f64>,
+    /// Deterministic transport-fault injection (distributed engine only).
+    /// Default = no faults: the sequential engine rejects anything else,
+    /// and the distributed engine is bit-identical to a fault-free build.
+    pub faults: FaultsConfig,
 }
 
 impl ExperimentConfig {
@@ -89,6 +94,7 @@ impl ExperimentConfig {
             data: DataSource::ArtifactCsv,
             artifacts_dir: PathBuf::from("artifacts"),
             dirichlet_alpha: None,
+            faults: FaultsConfig::none(),
         }
     }
 
@@ -150,6 +156,7 @@ impl ExperimentConfig {
                 return Err(Error::config("dirichlet alpha must be > 0"));
             }
         }
+        self.faults.validate()?;
         Ok(())
     }
 
@@ -266,6 +273,22 @@ impl ExperimentConfig {
             );
         }
 
+        let fl = &mut cfg.faults;
+        fl.seed = geti("faults", "seed", fl.seed as i64) as u64;
+        fl.drop = getf("faults", "drop", fl.drop);
+        fl.corrupt = getf("faults", "corrupt", fl.corrupt);
+        fl.duplicate = getf("faults", "duplicate", fl.duplicate);
+        fl.delay = getf("faults", "delay", fl.delay);
+        fl.delay_ms = geti("faults", "delay_ms", fl.delay_ms as i64) as u64;
+        fl.crash = getf("faults", "crash", fl.crash);
+        fl.retry_budget = geti("faults", "retry_budget", fl.retry_budget as i64) as u32;
+        fl.timeout_ms = geti("faults", "timeout_ms", fl.timeout_ms as i64) as u64;
+        if let Some(v) = doc.get("faults", "respawn") {
+            fl.respawn = v
+                .as_bool()
+                .ok_or_else(|| Error::config("faults.respawn must be a boolean"))?;
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -380,6 +403,40 @@ source = "synthetic"
     }
 
     #[test]
+    fn faults_table_parses_and_defaults_to_none() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+[faults]
+seed = 99
+drop = 0.1
+corrupt = 0.05
+duplicate = 0.02
+crash = 0.01
+retry_budget = 5
+timeout_ms = 1000
+respawn = true
+
+[data]
+source = "synthetic"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.faults.seed, 99);
+        assert_eq!(cfg.faults.drop, 0.1);
+        assert_eq!(cfg.faults.corrupt, 0.05);
+        assert_eq!(cfg.faults.duplicate, 0.02);
+        assert_eq!(cfg.faults.crash, 0.01);
+        assert_eq!(cfg.faults.retry_budget, 5);
+        assert_eq!(cfg.faults.timeout_ms, 1000);
+        assert!(cfg.faults.respawn);
+        assert!(cfg.faults.enabled());
+        // an omitted table = no faults (the bit-identical default)
+        let plain = ExperimentConfig::from_toml_str("[data]\nsource = \"synthetic\"\n").unwrap();
+        assert_eq!(plain.faults, FaultsConfig::none());
+        assert!(!plain.faults.enabled());
+    }
+
+    #[test]
     fn participation_maps_onto_uniform_sampler() {
         let mut cfg = ExperimentConfig::smoke();
         cfg.fed.num_agents = 8;
@@ -412,6 +469,10 @@ source = "synthetic"
             "[scenario]\ncompute_spread = -0.5\n",
             "[scenario]\nenergy_budget_j = -1.0\n",
             "[scenario]\np_compute_watts = -0.5\n",
+            "[faults]\ndrop = 1.5\n",
+            "[faults]\ncorrupt = -0.1\n",
+            "[faults]\ndrop = 0.6\ncorrupt = 0.6\n",
+            "[faults]\ntimeout_ms = 0\n",
         ] {
             assert!(
                 ExperimentConfig::from_toml_str(bad).is_err(),

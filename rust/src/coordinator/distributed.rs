@@ -10,57 +10,136 @@
 //! active set (partial participation included) and unicasts a
 //! [`super::wire::WireRoundPlan`] frame plus the
 //! [`super::wire::WireModel`] broadcast to those workers only; a worker
-//! runs the local stage its strategy declares and sends back the
-//! strategy-encoded uplink frame. The leader decodes through its own
-//! strategy instance, drops deadline casualties per the [`SimNet`]
-//! report, aggregates, applies, and evaluates — no method dispatch
-//! anywhere in this file. Each casualty then receives a
-//! [`super::wire::WireNack`] delivery-feedback frame, on which the
-//! worker's strategy rolls back its delivery-assuming encode state
-//! ([`crate::algo::Strategy::on_dropped`]) — mirroring the sequential
-//! engine's in-process `on_dropped` calls client for client.
+//! runs the local stage its strategy declares and sends back its
+//! strategy-encoded uplink in a [`super::wire::WireUplinkEnvelope`]. The
+//! leader decodes through its own strategy instance, drops deadline
+//! casualties per the [`SimNet`] report, aggregates, applies, and
+//! evaluates — no method dispatch anywhere in this file. Each casualty
+//! then receives a [`super::wire::WireNack`] delivery-feedback frame, on
+//! which the worker's strategy rolls back its delivery-assuming encode
+//! state ([`crate::algo::Strategy::on_dropped`]).
+//!
+//! ## Fault tolerance
+//!
+//! Every frame crossing a link wears a CRC32 trailer
+//! ([`super::wire::seal`]) and travels through the fault layer
+//! ([`super::faults`]): a seeded [`FaultPlan`] may drop, corrupt,
+//! duplicate, or delay it, and may crash a worker outright. The protocol
+//! survives all of it:
+//!
+//! * the worker is **frame-driven** — it dispatches on the frame tag
+//!   (plan / model / NACK), accumulates plan+model per round in any
+//!   order and multiplicity, computes exactly once per round, and
+//!   re-sends its *cached* envelope on repeated plans (recomputing would
+//!   advance its batch/seed streams and break determinism);
+//! * the leader **plays a script** ([`FaultPlan::client_script`]): the
+//!   fault plan is pure, so the leader simulates each client's
+//!   round-trip automaton up front and knows how many plan+model
+//!   attempts to send and whether an envelope will ever arrive — no
+//!   control flow depends on wall-clock. Receive timeouts remain as a
+//!   safety net: expiry (a genuine worker death outside the plan)
+//!   surfaces [`Error::WorkerLost`] instead of hanging forever;
+//! * a client whose retry budget is exhausted (or that crashed) is
+//!   marked **dead**: its round becomes a `Delivery` casualty through
+//!   [`SimNet::run_round_faulty`] (retransmitted frames charged, its
+//!   airtime accounted), it is excluded from future sampling like an
+//!   availability-off client, and — with `faults.respawn` — it is
+//!   respawned at the next round start from its last checkpoint
+//!   ([`crate::algo::Strategy::save_state`] + deterministic batch/seed
+//!   stream fast-forward), rejoining the pool;
+//! * a worker that *refuses* the protocol (undecodable frame, mismatched
+//!   NACK, excluding plan) says so with a goodbye frame
+//!   ([`super::wire::WireGoodbye`], sent reliably) before exiting, so
+//!   the leader distinguishes refusal from transport loss.
+//!
+//! With `faults = none` every fate is `Deliver`, every script is the
+//! 1-attempt clean script, and the round protocol is byte-for-byte the
+//! fault-free protocol — the cross-engine equality tests pin that.
 //!
 //! Given the same config and run seed, FedScalar/FedAvg training metrics
 //! are bit-identical to the sequential engine (asserted by the
 //! integration suite): same shards, same batch streams, same seeds, same
 //! arithmetic — serialization is exact for f32. (QSGD differs only in the
 //! stochastic-rounding stream: per-worker strategies draw independently.)
+//! A faulty run is bit-reproducible across re-runs and thread counts.
 
 use crate::algo::{LocalStage, Strategy};
 use crate::config::ExperimentConfig;
 use crate::coordinator::client::ClientState;
 use crate::coordinator::engine::load_data;
+use crate::coordinator::faults::{
+    ClientScript, Direction, FaultPlan, FaultyReceiver, FaultySender, RecvOutcome,
+};
 use crate::coordinator::messages::Uplink;
-use crate::coordinator::transport::{duplex, AgentEndpoint, LeaderEndpoint};
-use crate::coordinator::wire::{WireModel, WireNack, WireRoundPlan};
+use crate::coordinator::transport::{duplex, AgentEndpoint, LinkStats};
+use crate::coordinator::wire::{
+    self, GoodbyeReason, WireGoodbye, WireModel, WireNack, WireRoundPlan, WireUplinkEnvelope,
+};
 use crate::error::{Error, Result};
 use crate::metrics::{RoundRecord, RunHistory};
 use crate::nn::ModelSpec;
 use crate::rng::SplitMix64;
 use crate::runtime::{Backend, PureRustBackend};
-use crate::simnet::{Sampler, SimNet};
+use crate::simnet::{Delivery, RoundFaults, Sampler, SimNet};
 use crate::{log_debug, log_info};
-use std::sync::Arc;
-use std::time::Instant;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-/// Orders from leader to workers (frames are models; control is in-proc).
-enum Control {
-    /// Run round k against the frame that follows on the downlink.
-    Round,
-    /// A delivery NACK frame follows on the downlink: the worker's last
-    /// upload was dropped; its strategy must roll back delivery-assuming
-    /// state ([`Strategy::on_dropped`]).
-    Nack,
-    /// Shut down.
-    Stop,
+/// A worker's resumable state, written to its checkpoint slot after every
+/// compute (and every rollback) when respawn is enabled. Everything else
+/// a worker owns is a pure function of (config, run_seed, id) plus these
+/// two fields.
+#[derive(Debug, Clone, Default)]
+struct WorkerCheckpoint {
+    /// [`Strategy::save_state`] blob (error-feedback residuals etc.).
+    strategy_state: Vec<u8>,
+    /// Rounds this worker has computed — the fast-forward count for its
+    /// deterministic batch/projection-seed streams.
+    rounds_computed: u64,
+}
+
+/// What a respawned worker must do before entering its receive loop.
+struct ResumeState {
+    checkpoint: WorkerCheckpoint,
+    /// The round the previous incarnation computed but never delivered
+    /// (the NACK the leader could not send): rolled back at init.
+    nack_round: Option<u32>,
+}
+
+/// Why the leader gave up on a worker (diagnostic only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DeadCause {
+    /// The fault plan's one-shot crash fired.
+    Crashed,
+    /// The retry budget ran out without an intact envelope.
+    Exhausted,
+    /// The worker sent a goodbye frame (protocol refusal).
+    Refused,
+}
+
+/// Leader-side record of a dead worker.
+struct DeadInfo {
+    /// `Some(k)`: the worker computed round k but its upload never
+    /// landed — apply `on_dropped(k)` at respawn.
+    needs_rollback: Option<u32>,
 }
 
 struct WorkerHandle {
-    endpoint: LeaderEndpoint,
-    control: std::sync::mpsc::Sender<Control>,
-    /// Telemetry side-channel (NOT wire): per-round client loss.
-    telemetry: std::sync::mpsc::Receiver<f32>,
+    /// Plan+model+NACK frames leave through the fault layer.
+    downlink: FaultySender,
+    /// Envelopes and goodbyes arrive with a bounded wait.
+    uplink: FaultyReceiver,
+    down_stats: Arc<LinkStats>,
+    up_stats: Arc<LinkStats>,
+    /// Telemetry side-channel (NOT wire): per-round (round, client loss) —
+    /// round-tagged so the leader can discard entries from rounds whose
+    /// upload never landed.
+    telemetry: std::sync::mpsc::Receiver<(u32, f32)>,
     join: Option<std::thread::JoinHandle<()>>,
+    /// The worker's checkpoint slot (read by the leader after join, at
+    /// respawn). Empty unless checkpointing is on.
+    dump: Arc<Mutex<Option<WorkerCheckpoint>>>,
 }
 
 /// The distributed (threaded, frame-passing) federated engine.
@@ -75,6 +154,18 @@ pub struct DistributedEngine {
     /// drop) identical clients every round.
     simnet: SimNet,
     sampler: Sampler,
+    /// The run's fault oracle, shared with every worker.
+    plan: Arc<FaultPlan>,
+    /// Workers the leader has given up on, keyed by client id (BTreeMap:
+    /// deterministic respawn order). Excluded from sampling like
+    /// availability-off clients.
+    dead: BTreeMap<usize, DeadInfo>,
+    fault_casualty_count: u64,
+    respawn_count: u64,
+    /// Retained for respawning workers.
+    train: Arc<crate::data::Dataset>,
+    shards: Vec<Vec<usize>>,
+    run_seed: u64,
     test_x: Vec<f32>,
     test_y: Vec<i32>,
     params: Vec<f32>,
@@ -110,6 +201,7 @@ impl DistributedEngine {
             leader_backend.set_worker_pool(Arc::new(crate::runtime::WorkerPool::new(threads)));
         }
 
+        let plan = Arc::new(FaultPlan::new(cfg.faults.clone()));
         let mut workers = Vec::with_capacity(cfg.fed.num_agents);
         for (id, shard) in partition.shards.iter().enumerate() {
             workers.push(spawn_worker(
@@ -118,6 +210,8 @@ impl DistributedEngine {
                 train.clone(),
                 shard.clone(),
                 run_seed,
+                plan.clone(),
+                None,
             ));
         }
 
@@ -133,6 +227,13 @@ impl DistributedEngine {
             sampler: Sampler::new(cfg.sampler_policy(), run_seed),
             strategy: cfg.fed.method.instantiate(run_seed),
             leader_backend,
+            plan,
+            dead: BTreeMap::new(),
+            fault_casualty_count: 0,
+            respawn_count: 0,
+            shards: partition.shards.clone(),
+            train,
+            run_seed,
             test_x: test.x,
             test_y: test.y,
             params,
@@ -149,10 +250,11 @@ impl DistributedEngine {
     pub fn run(&mut self) -> Result<RunHistory> {
         let rounds = self.cfg.fed.rounds;
         log_info!(
-            "distributed run: method={} workers={} K={}",
+            "distributed run: method={} workers={} K={} faults={}",
             self.cfg.fed.method.name(),
             self.workers.len(),
-            rounds
+            rounds,
+            if self.plan.enabled() { "on" } else { "off" }
         );
         for k in 0..rounds {
             let eval = k % self.cfg.fed.eval_every == 0 || k + 1 == rounds;
@@ -164,9 +266,14 @@ impl DistributedEngine {
 
     fn run_round(&mut self, k: usize, eval: bool) -> Result<()> {
         let host_t0 = Instant::now();
+        self.respawn_dead();
         // select this round's active set (leader-side, identical to the
-        // sequential engine's sampler stream)
-        let avail = self.simnet.available(k as u64);
+        // sequential engine's sampler stream); dead workers leave the
+        // pool exactly like availability-off clients
+        let mut avail = self.simnet.available(k as u64);
+        if !self.dead.is_empty() {
+            avail.retain(|c| !self.dead.contains_key(c));
+        }
         let active = self.sampler.select(&avail, self.simnet.profiles());
         if active.is_empty() {
             if eval {
@@ -177,51 +284,126 @@ impl DistributedEngine {
         // unicast the round plan + model frame to the selected workers
         // only (an unselected worker never hears the round and keeps its
         // batch/seed streams untouched, exactly like the sequential
-        // engine's inactive clients)
-        let plan = WireRoundPlan {
-            round: k as u32,
-            active: active.iter().map(|&c| c as u32).collect(),
-        }
-        .encode();
-        let frame = WireModel {
-            round: k as u32,
-            params: self.params.clone(),
-        }
-        .encode();
+        // engine's inactive clients). Both frames are CRC-sealed.
+        let plan_frame = wire::seal(
+            WireRoundPlan {
+                round: k as u32,
+                active: active.iter().map(|&c| c as u32).collect(),
+            }
+            .encode(),
+        );
+        let model_frame = wire::seal(
+            WireModel {
+                round: k as u32,
+                params: self.params.clone(),
+            }
+            .encode(),
+        );
+        // the fault oracle: what will each client's round-trip do?
+        // (trivially the clean 1-attempt script when faults are off)
+        let budget = self.plan.cfg().retry_budget;
+        let scripts: Vec<ClientScript> = active
+            .iter()
+            .map(|&c| self.plan.client_script(k as u64, c as u32, budget))
+            .collect();
+
+        // phase A: first attempt to every active worker, so all workers
+        // compute in parallel
         for &c in &active {
-            let w = &self.workers[c];
-            w.control
-                .send(Control::Round)
-                .map_err(|_| Error::invariant("worker died"))?;
-            w.endpoint
-                .downlink
-                .send(plan.clone())
-                .map_err(Error::invariant)?;
-            w.endpoint
-                .downlink
-                .send(frame.clone())
-                .map_err(Error::invariant)?;
+            let w = &mut self.workers[c];
+            w.downlink.begin_round(k as u64);
+            let sent = w.downlink.send(plan_frame.clone());
+            let sent = w.downlink.send(model_frame.clone()) && sent;
+            if !sent && !self.plan.enabled() {
+                return Err(Error::worker_lost(c, k));
+            }
         }
-        // collect uplink frames (in active order — determinism); the
-        // transport's frame-byte counters remain available for the
-        // framing-inclusive view
-        let mut uplinks: Vec<Uplink> = Vec::with_capacity(active.len());
-        let mut losses = Vec::with_capacity(active.len());
-        for &c in &active {
-            let w = &self.workers[c];
-            let bytes = w.endpoint.uplink.recv().map_err(Error::invariant)?;
-            uplinks.push(self.strategy.wire_decode(&bytes)?);
-            losses.push(
-                w.telemetry
-                    .recv()
-                    .map_err(|_| Error::invariant("telemetry lost"))?,
-            );
+        // phase B: retries + collection, strictly in active order
+        // (determinism: the collection order never depends on arrival
+        // timing)
+        let mut uplinks: Vec<Option<Uplink>> = Vec::with_capacity(active.len());
+        let mut losses: Vec<Option<f32>> = Vec::with_capacity(active.len());
+        for (i, &c) in active.iter().enumerate() {
+            let script = &scripts[i];
+            for _ in 1..script.attempts {
+                let w = &mut self.workers[c];
+                let _ = w.downlink.send(plan_frame.clone());
+                let _ = w.downlink.send(model_frame.clone());
+            }
+            let collected = if script.delivered {
+                let got = self.collect_uplink(c, k)?;
+                if got.is_none() {
+                    // goodbye: the worker refused the protocol. Under
+                    // faults this degrades gracefully into a casualty;
+                    // without a fault plan it is a protocol bug.
+                    if !self.plan.enabled() {
+                        return Err(Error::worker_lost(c, k));
+                    }
+                    self.mark_dead(c, k, script, DeadCause::Refused);
+                }
+                got
+            } else {
+                let cause = if script.crashed {
+                    DeadCause::Crashed
+                } else {
+                    DeadCause::Exhausted
+                };
+                self.mark_dead(c, k, script, cause);
+                None
+            };
+            match collected {
+                Some((up, loss)) => {
+                    uplinks.push(Some(up));
+                    losses.push(Some(loss));
+                }
+                None => {
+                    uplinks.push(None);
+                    losses.push(None);
+                }
+            }
         }
         // netsim lifecycle: the strategy's nominal payload accounting is
-        // the single source of truth both engines charge
+        // the single source of truth both engines charge. Under faults,
+        // the script-known casualties override the radio outcome and the
+        // retransmitted frames are charged on top.
         let up_bits = self.strategy.uplink_bits(self.params.len());
         let down_bits = self.strategy.downlink_bits(self.params.len());
-        let report = self.simnet.run_round(&active, up_bits, down_bits);
+        let report = if self.plan.enabled() {
+            let outcome: Vec<Option<Delivery>> = scripts
+                .iter()
+                .zip(&uplinks)
+                .map(|(s, u)| {
+                    if u.is_some() {
+                        None // let the radio scenario decide
+                    } else if s.up_air_frames > 0 {
+                        Some(Delivery::TransmittedDropped)
+                    } else {
+                        Some(Delivery::NeverStarted)
+                    }
+                })
+                .collect();
+            let extra_uplink_frames: u64 = scripts
+                .iter()
+                .zip(&uplinks)
+                .map(|(s, u)| s.up_air_frames.saturating_sub(u.is_some() as u32) as u64)
+                .sum();
+            let extra_downlink_frames: u64 = scripts
+                .iter()
+                .map(|s| (s.model_air_frames - 1) as u64)
+                .sum();
+            self.simnet.run_round_faulty(
+                &active,
+                up_bits,
+                down_bits,
+                &RoundFaults {
+                    outcome,
+                    extra_uplink_frames,
+                    extra_downlink_frames,
+                },
+            )
+        } else {
+            self.simnet.run_round(&active, up_bits, down_bits)
+        };
         self.cum_bits += report.uplink_bits as f64;
         self.cum_downlink_bits += report.downlink_bits as f64;
         self.cum_sim_seconds += report.round_seconds;
@@ -230,9 +412,17 @@ impl DistributedEngine {
         // aggregate + apply the survivors (loss telemetry is not on the
         // wire, so the round loss comes from the side channel — over the
         // same survivor set the sequential engine averages)
-        let survivors: Vec<Uplink> = report.filter_survivors(uplinks);
+        let survivors: Vec<Uplink> = report
+            .filter_survivors(uplinks)
+            .into_iter()
+            .flatten()
+            .collect();
         let train_loss = if survivors.is_empty() {
-            crate::algo::strategy::mean_loss_f32(&losses)
+            // zero-survivor round: average every collected loss (the
+            // sequential engine averages all active clients' losses; a
+            // fault-dead client reported none)
+            let all: Vec<f32> = losses.iter().flatten().copied().collect();
+            crate::algo::strategy::mean_loss_f32(&all)
         } else {
             self.strategy.aggregate_and_apply(
                 &mut self.leader_backend,
@@ -240,48 +430,171 @@ impl DistributedEngine {
                 &survivors,
             )?;
             // same survivor set, same summation (mean_loss_f32) as the
-            // sequential engine's mean_loss over survivor uplinks —
-            // loss telemetry is not on the wire, so it comes from the
-            // side channel
-            crate::algo::strategy::mean_loss_f32(&report.filter_survivors(losses))
+            // sequential engine's mean_loss over survivor uplinks
+            let lv: Vec<f32> = report
+                .filter_survivors(losses)
+                .into_iter()
+                .flatten()
+                .collect();
+            crate::algo::strategy::mean_loss_f32(&lv)
         };
 
-        // delivery feedback: NACK every casualty so its worker-side
-        // strategy rolls back delivery-assuming encode state (Top-k
-        // residuals), exactly as the sequential engine's in-process
-        // `on_dropped` calls do — same clients, same active order. The
-        // leader's own strategy instance holds no client-side state in
-        // this engine, so the rollback happens only where the state
-        // lives: on the worker.
+        // delivery feedback: NACK every *live* casualty so its
+        // worker-side strategy rolls back delivery-assuming encode state
+        // (Top-k residuals), exactly as the sequential engine's
+        // in-process `on_dropped` calls do — same clients, same active
+        // order. A dead worker's rollback is deferred to its respawn
+        // (`ResumeState::nack_round`). NACKs ride the fault layer too: a
+        // NACK lost in flight simply never rolls back — delivery
+        // feedback is itself best-effort under faults, and the run stays
+        // bit-reproducible because the loss is part of the plan.
         if !report.all_completed() {
             for (i, &c) in active.iter().enumerate() {
-                if report.outcome[i].delivered() {
+                if report.outcome[i].delivered() || self.dead.contains_key(&c) {
                     continue;
                 }
-                let w = &self.workers[c];
-                w.control
-                    .send(Control::Nack)
-                    .map_err(|_| Error::invariant("worker died"))?;
-                let nack = WireNack {
-                    round: k as u32,
-                    client: c as u32,
-                };
-                w.endpoint
-                    .downlink
-                    .send(nack.encode())
-                    .map_err(Error::invariant)?;
+                let nack = wire::seal(
+                    WireNack {
+                        round: k as u32,
+                        client: c as u32,
+                    }
+                    .encode(),
+                );
+                let sent = self.workers[c].downlink.send(nack);
+                if !sent && !self.plan.enabled() {
+                    return Err(Error::worker_lost(c, k));
+                }
             }
         }
 
         if eval {
             log_debug!(
-                "dist round {k}: loss={train_loss:.4} active={} dropped={}",
+                "dist round {k}: loss={train_loss:.4} active={} dropped={} dead={}",
                 active.len(),
-                report.dropped
+                report.dropped,
+                self.dead.len()
             );
             self.push_record(k, train_loss, host_t0)?;
         }
         Ok(())
+    }
+
+    /// Await this client's round-`k` envelope: discard corrupt frames and
+    /// stale/duplicate envelopes (dedupe by `(round, client)`), stop on a
+    /// goodbye (`None`). Timeout or hangup — which the script said cannot
+    /// happen — is a genuine worker death: [`Error::WorkerLost`].
+    fn collect_uplink(&self, c: usize, k: usize) -> Result<Option<(Uplink, f32)>> {
+        let timeout = Duration::from_millis(self.plan.cfg().timeout_ms);
+        loop {
+            match self.workers[c].uplink.recv_within(timeout) {
+                RecvOutcome::Frame(sealed) => {
+                    let Ok(frame) = wire::unseal(&sealed) else {
+                        // corrupted in flight; the script has a
+                        // retransmission coming
+                        continue;
+                    };
+                    match frame.first().copied() {
+                        Some(wire::tag::UPLINK) => {
+                            let env = WireUplinkEnvelope::decode(frame)?;
+                            if env.round as usize != k || env.client as usize != c {
+                                continue; // stale or duplicate: dedupe
+                            }
+                            let up = self.strategy.wire_decode(&env.payload)?;
+                            let loss = self.collect_loss(c, k)?;
+                            return Ok(Some((up, loss)));
+                        }
+                        Some(wire::tag::GOODBYE) => {
+                            let g = WireGoodbye::decode(frame)?;
+                            log_info!(
+                                "worker {c}: refused the protocol in round {k} ({:?})",
+                                g.reason
+                            );
+                            return Ok(None);
+                        }
+                        _ => return Err(Error::invariant("unexpected frame tag on uplink")),
+                    }
+                }
+                RecvOutcome::TimedOut | RecvOutcome::Disconnected => {
+                    return Err(Error::worker_lost(c, k))
+                }
+            }
+        }
+    }
+
+    /// The round-`k` loss from this client's telemetry channel, skipping
+    /// stale entries from rounds whose upload never landed.
+    fn collect_loss(&self, c: usize, k: usize) -> Result<f32> {
+        let timeout = Duration::from_millis(self.plan.cfg().timeout_ms);
+        loop {
+            match self.workers[c].telemetry.recv_timeout(timeout) {
+                Ok((r, loss)) if r as usize == k => return Ok(loss),
+                Ok((r, _)) if (r as usize) < k => continue,
+                Ok(_) => return Err(Error::invariant("telemetry from a future round")),
+                Err(_) => return Err(Error::worker_lost(c, k)),
+            }
+        }
+    }
+
+    fn mark_dead(&mut self, c: usize, k: usize, script: &ClientScript, cause: DeadCause) {
+        log_info!(
+            "worker {c}: dead in round {k} ({cause:?}); excluded from sampling{}",
+            if self.plan.cfg().respawn {
+                " until respawn"
+            } else {
+                ""
+            }
+        );
+        self.fault_casualty_count += 1;
+        let needs_rollback = (script.computed && !script.delivered).then_some(k as u32);
+        self.dead.insert(c, DeadInfo { needs_rollback });
+    }
+
+    /// Respawn every dead worker from its checkpoint (respawn enabled
+    /// only), so it rejoins the sampling pool this round. Retiring the
+    /// old incarnation hangs up both channel halves and joins the
+    /// thread: a presumed-dead worker that is actually alive wakes on
+    /// the hangup, drains every frame the leader ever sent it (the
+    /// script already simulated exactly that drain), writes its final
+    /// checkpoint, and exits — so the checkpoint the leader reads after
+    /// `join` is deterministic.
+    fn respawn_dead(&mut self) {
+        if self.dead.is_empty() || !self.plan.cfg().respawn {
+            return;
+        }
+        let ids: Vec<usize> = self.dead.keys().copied().collect();
+        for c in ids {
+            let info = self.dead.remove(&c).expect("dead entry");
+            {
+                let w = &mut self.workers[c];
+                w.downlink.close();
+                w.uplink.close();
+                if let Some(h) = w.join.take() {
+                    let _ = h.join();
+                }
+            }
+            let checkpoint = self.workers[c]
+                .dump
+                .lock()
+                .expect("checkpoint lock")
+                .take()
+                .unwrap_or_default();
+            let resume = ResumeState {
+                checkpoint,
+                nack_round: info.needs_rollback,
+            };
+            let fresh = spawn_worker(
+                c,
+                &self.cfg,
+                self.train.clone(),
+                self.shards[c].clone(),
+                self.run_seed,
+                self.plan.clone(),
+                Some(resume),
+            );
+            self.workers[c] = fresh;
+            self.respawn_count += 1;
+            log_info!("worker {c}: respawned from checkpoint");
+        }
     }
 
     /// Evaluate and append one history record at the current counters.
@@ -313,25 +626,38 @@ impl DistributedEngine {
         self.run_round(k, eval)
     }
 
-    /// Total bytes that crossed the uplinks (frames, incl. framing).
+    /// Total bytes that crossed the uplinks (frames, incl. framing,
+    /// envelope, and CRC trailer; injected in-flight losses included).
     pub fn uplink_frame_bytes(&self) -> u64 {
-        self.workers
-            .iter()
-            .map(|w| w.endpoint.up_stats.bytes())
-            .sum()
+        self.workers.iter().map(|w| w.up_stats.bytes()).sum()
     }
 
     /// Total bytes broadcast on the downlinks.
     pub fn downlink_frame_bytes(&self) -> u64 {
-        self.workers
-            .iter()
-            .map(|w| w.endpoint.down_stats.bytes())
-            .sum()
+        self.workers.iter().map(|w| w.down_stats.bytes()).sum()
+    }
+
+    /// Clients currently marked dead (empty unless faults killed some).
+    pub fn dead_workers(&self) -> Vec<usize> {
+        self.dead.keys().copied().collect()
+    }
+
+    /// Times the leader gave up on a worker (crash / budget exhaustion /
+    /// refusal) across the run so far.
+    pub fn fault_casualties(&self) -> u64 {
+        self.fault_casualty_count
+    }
+
+    /// Workers respawned from a checkpoint across the run so far.
+    pub fn respawns(&self) -> u64 {
+        self.respawn_count
     }
 
     fn shutdown(&mut self) {
-        for w in &self.workers {
-            let _ = w.control.send(Control::Stop);
+        // hang up every link first (wakes all workers), then join
+        for w in self.workers.iter_mut() {
+            w.downlink.close();
+            w.uplink.close();
         }
         for w in self.workers.iter_mut() {
             if let Some(h) = w.join.take() {
@@ -353,33 +679,65 @@ fn spawn_worker(
     train: Arc<crate::data::Dataset>,
     shard: Vec<usize>,
     run_seed: u64,
+    plan: Arc<FaultPlan>,
+    resume: Option<ResumeState>,
 ) -> WorkerHandle {
     let (leader_ep, agent_ep) = duplex();
-    let (ctl_tx, ctl_rx) = std::sync::mpsc::channel::<Control>();
-    let (tel_tx, tel_rx) = std::sync::mpsc::channel::<f32>();
+    let (tel_tx, tel_rx) = std::sync::mpsc::channel::<(u32, f32)>();
+    let dump: Arc<Mutex<Option<WorkerCheckpoint>>> = Arc::new(Mutex::new(None));
     let method = cfg.fed.method.clone();
     let (steps, batch, alpha) = (cfg.fed.local_steps, cfg.fed.batch_size, cfg.fed.alpha);
     let spec: ModelSpec = cfg.model.clone();
+    let worker_plan = plan.clone();
+    let worker_dump = dump.clone();
     let join = std::thread::spawn(move || {
         worker_main(
-            id, agent_ep, ctl_rx, tel_tx, method, spec, train, shard, steps, batch, alpha,
+            id,
+            agent_ep,
+            tel_tx,
+            method,
+            spec,
+            train,
+            shard,
+            steps,
+            batch,
+            alpha,
             run_seed,
+            worker_plan,
+            worker_dump,
+            resume,
         );
     });
     WorkerHandle {
-        endpoint: leader_ep,
-        control: ctl_tx,
+        downlink: FaultySender::wrap(leader_ep.downlink, plan.clone(), Direction::Down, id as u32),
+        uplink: FaultyReceiver::wrap(leader_ep.uplink),
+        down_stats: leader_ep.down_stats,
+        up_stats: leader_ep.up_stats,
         telemetry: tel_rx,
         join: Some(join),
+        dump,
     }
+}
+
+/// Send a reliable (fault-bypassing) goodbye so the leader can tell
+/// refusal from transport loss.
+fn send_goodbye(uplink: &mut FaultySender, id: usize, round: Option<u32>, reason: GoodbyeReason) {
+    let frame = wire::seal(
+        WireGoodbye {
+            client: id as u32,
+            round: round.unwrap_or(u32::MAX),
+            reason,
+        }
+        .encode(),
+    );
+    let _ = uplink.send_reliable(frame);
 }
 
 #[allow(clippy::too_many_arguments)]
 fn worker_main(
     id: usize,
     ep: AgentEndpoint,
-    ctl: std::sync::mpsc::Receiver<Control>,
-    telemetry: std::sync::mpsc::Sender<f32>,
+    telemetry: std::sync::mpsc::Sender<(u32, f32)>,
     method: crate::algo::Method,
     spec: ModelSpec,
     train: Arc<crate::data::Dataset>,
@@ -388,6 +746,9 @@ fn worker_main(
     batch: usize,
     alpha: f32,
     run_seed: u64,
+    plan: Arc<FaultPlan>,
+    dump: Arc<Mutex<Option<WorkerCheckpoint>>>,
+    resume: Option<ResumeState>,
 ) {
     let mut backend = PureRustBackend::new(&spec);
     backend.set_shape(steps, batch);
@@ -397,58 +758,165 @@ fn worker_main(
     // agents, and per-client state (error-feedback residuals) lives
     // client-side
     let mut strategy = method.instantiate(SplitMix64::derive(run_seed ^ 0x9594, id as u64));
-    // the round this worker last uploaded for — the only round a NACK may
-    // legitimately reference
-    let mut last_round: Option<u32> = None;
+    let projected = matches!(strategy.local_stage(), LocalStage::Projected { .. });
+    // checkpoints exist only to serve respawn; without it (and in every
+    // fault-free run) the per-round save_state cost is not paid
+    let checkpointing = plan.enabled() && plan.cfg().respawn;
+    let mut rounds_computed: u64 = 0;
+    if let Some(res) = resume {
+        if let Err(e) = strategy.restore_state(&res.checkpoint.strategy_state) {
+            log_info!("worker {id}: respawn restore failed ({e}); staying down");
+            return;
+        }
+        // fast-forward the deterministic batch/projection-seed streams to
+        // where the previous incarnation stood: same number of draws =>
+        // same stream position
+        for _ in 0..res.checkpoint.rounds_computed {
+            state.fill_round_batches(steps, batch);
+            if projected {
+                let _ = state.next_projection_seed();
+            }
+        }
+        rounds_computed = res.checkpoint.rounds_computed;
+        if let Some(r) = res.nack_round {
+            // the round the previous incarnation computed never landed;
+            // the NACK the leader could not deliver applies now
+            if let Err(e) = strategy.on_dropped(id, r as u64) {
+                log_info!("worker {id}: respawn rollback failed ({e}); staying down");
+                return;
+            }
+        }
+    }
+    let mut uplink = FaultySender::wrap(ep.uplink, plan.clone(), Direction::Up, id as u32);
+    let downlink = ep.downlink;
+    // the frame-driven round automaton: plan + model accumulate (any
+    // order, any multiplicity) until both reference the same round, then
+    // the round computes exactly once
+    let mut pending_plan: Option<u32> = None;
+    let mut pending_model: Option<WireModel> = None;
+    // (round, cached sealed envelope): repeated plans re-send this
+    let mut computed: Option<(u32, Vec<u8>)> = None;
+    // the round this worker may legitimately be NACKed for, and the round
+    // it last rolled back (a duplicated NACK must be idempotent, not a
+    // protocol violation)
+    let mut nackable: Option<u32> = None;
+    let mut last_nacked: Option<u32> = None;
     loop {
-        match ctl.recv() {
-            Ok(Control::Round) => {}
-            Ok(Control::Nack) => {
-                // delivery feedback: our last upload never landed — roll
-                // back the strategy's delivery-assuming encode state
-                let Ok(bytes) = ep.downlink.recv() else { return };
-                let Ok(nack) = WireNack::decode(&bytes) else {
-                    log_info!("worker {id}: undecodable NACK frame; shutting down");
+        let Ok(sealed) = downlink.recv() else {
+            return; // leader hung up: clean shutdown
+        };
+        let Ok(frame) = wire::unseal(&sealed) else {
+            // corrupted in flight: drop it and keep listening — the
+            // leader's retry loop has a retransmission scheduled
+            continue;
+        };
+        let ctx = pending_plan.or(computed.as_ref().map(|(r, _)| *r));
+        match frame.first().copied() {
+            Some(wire::tag::PLAN) => {
+                let Ok(p) = WireRoundPlan::decode(frame) else {
+                    log_info!("worker {id}: undecodable round-plan frame; shutting down");
+                    send_goodbye(&mut uplink, id, ctx, GoodbyeReason::BadFrame);
                     return;
                 };
-                if nack.client as usize != id || Some(nack.round) != last_round {
+                if !p.active.iter().any(|&c| c as usize == id) {
+                    // a plan that excludes this worker is a protocol
+                    // violation
                     log_info!(
-                        "worker {id}: NACK for client {} round {} does not match \
-                         this worker's last upload; shutting down",
-                        nack.client,
-                        nack.round
+                        "worker {id}: round {} plan excludes this worker; shutting down",
+                        p.round
                     );
+                    send_goodbye(&mut uplink, id, Some(p.round), GoodbyeReason::Excluded);
                     return;
                 }
-                if let Err(e) = strategy.on_dropped(id, nack.round as u64) {
-                    log_info!("worker {id}: on_dropped failed ({e}); shutting down");
+                if plan.crashes_at(id as u32, p.round as u64) {
+                    // the injected one-shot crash: die silently — the
+                    // leader must hear nothing (that is the fault)
                     return;
                 }
-                // a send can only be NACKed once
-                last_round = None;
-                continue;
+                if let Some((r, env)) = &computed {
+                    if *r == p.round {
+                        // a repeated plan for an already-computed round:
+                        // re-send the cached envelope, never recompute
+                        // (recomputing would advance the batch/seed
+                        // streams and break determinism)
+                        if !uplink.send(env.clone()) {
+                            return;
+                        }
+                        continue;
+                    }
+                }
+                pending_plan = Some(p.round);
             }
-            Ok(Control::Stop) | Err(_) => return,
+            Some(wire::tag::MODEL) => {
+                let Ok(m) = WireModel::decode(frame) else {
+                    log_info!("worker {id}: undecodable model frame; shutting down");
+                    send_goodbye(&mut uplink, id, ctx, GoodbyeReason::BadFrame);
+                    return;
+                };
+                if computed.as_ref().is_some_and(|(r, _)| *r == m.round) {
+                    continue; // repeated model after compute: plan copies drive resends
+                }
+                pending_model = Some(m);
+            }
+            Some(wire::tag::NACK) => {
+                // delivery feedback: our round-`n.round` upload never
+                // landed — roll back the strategy's delivery-assuming
+                // encode state
+                let Ok(n) = WireNack::decode(frame) else {
+                    log_info!("worker {id}: undecodable NACK frame; shutting down");
+                    send_goodbye(&mut uplink, id, ctx, GoodbyeReason::BadFrame);
+                    return;
+                };
+                if n.client as usize != id {
+                    log_info!(
+                        "worker {id}: NACK for client {} is misrouted; shutting down",
+                        n.client
+                    );
+                    send_goodbye(&mut uplink, id, ctx, GoodbyeReason::BadNack);
+                    return;
+                }
+                if nackable == Some(n.round) {
+                    if let Err(e) = strategy.on_dropped(id, n.round as u64) {
+                        log_info!("worker {id}: on_dropped failed ({e}); shutting down");
+                        send_goodbye(&mut uplink, id, ctx, GoodbyeReason::StrategyError);
+                        return;
+                    }
+                    nackable = None;
+                    last_nacked = Some(n.round);
+                    if checkpointing {
+                        *dump.lock().expect("checkpoint lock") = Some(WorkerCheckpoint {
+                            strategy_state: strategy.save_state(),
+                            rounds_computed,
+                        });
+                    }
+                } else if last_nacked == Some(n.round) {
+                    // a duplicated NACK: the rollback already happened
+                } else {
+                    log_info!(
+                        "worker {id}: NACK for round {} does not match this \
+                         worker's last upload; shutting down",
+                        n.round
+                    );
+                    send_goodbye(&mut uplink, id, ctx, GoodbyeReason::BadNack);
+                    return;
+                }
+            }
+            _ => {
+                log_info!("worker {id}: unknown downlink frame tag; shutting down");
+                send_goodbye(&mut uplink, id, ctx, GoodbyeReason::BadFrame);
+                return;
+            }
         }
-        // the round plan precedes the model frame; a worker only ever
-        // receives rounds it was selected for, and the plan lets it
-        // verify that (and learn its slot order) from the wire alone
-        let Ok(plan_bytes) = ep.downlink.recv() else { return };
-        let Ok(plan) = WireRoundPlan::decode(&plan_bytes) else {
-            log_info!("worker {id}: undecodable round-plan frame; shutting down");
-            return;
-        };
-        if !plan.active.iter().any(|&c| c as usize == id) {
-            // a plan that excludes this worker is a protocol violation
-            log_info!(
-                "worker {id}: round {} plan excludes this worker; shutting down",
-                plan.round
-            );
-            return;
+        // compute when plan + model for the same round are both in
+        let ready = matches!(
+            (&pending_plan, &pending_model),
+            (Some(pr), Some(m)) if *pr == m.round
+        );
+        if !ready {
+            continue;
         }
-        last_round = Some(plan.round);
-        let Ok(frame) = ep.downlink.recv() else { return };
-        let Ok(model) = WireModel::decode(&frame) else { return };
+        let pr = pending_plan.take().expect("ready implies plan");
+        let model = pending_model.take().expect("ready implies model");
         state.fill_round_batches(steps, batch);
         let stage = strategy.local_stage();
         let (up, loss) = match stage {
@@ -478,11 +946,31 @@ fn worker_main(
                 (up, loss)
             }
         };
-        let bytes = strategy.wire_encode(&up).expect("wire encode");
-        if ep.uplink.send(bytes).is_err() {
+        let payload = strategy.wire_encode(&up).expect("wire encode");
+        let env = wire::seal(
+            WireUplinkEnvelope {
+                round: pr,
+                client: id as u32,
+                payload,
+            }
+            .encode(),
+        );
+        rounds_computed += 1;
+        // checkpoint BEFORE transmitting: if the leader retires this
+        // worker mid-flight, the slot it reads after join is complete
+        if checkpointing {
+            *dump.lock().expect("checkpoint lock") = Some(WorkerCheckpoint {
+                strategy_state: strategy.save_state(),
+                rounds_computed,
+            });
+        }
+        nackable = Some(pr);
+        computed = Some((pr, env.clone()));
+        uplink.begin_round(pr as u64);
+        if !uplink.send(env) {
             return;
         }
-        if telemetry.send(loss).is_err() {
+        if telemetry.send((pr, loss)).is_err() {
             return;
         }
     }

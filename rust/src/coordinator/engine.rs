@@ -71,6 +71,12 @@ impl Engine {
         run_seed: u64,
     ) -> Result<Engine> {
         cfg.validate()?;
+        if cfg.faults.enabled() {
+            return Err(Error::config(
+                "[faults] injection targets the wire protocol; it requires \
+                 the distributed engine (--engine distributed)",
+            ));
+        }
         let (train, test) = load_data(cfg)?;
         if backend.param_dim() != cfg.model.param_dim() {
             return Err(Error::config(format!(

@@ -1,0 +1,746 @@
+//! Deterministic fault injection for the distributed round protocol.
+//!
+//! A [`FaultPlan`] decides the fate of every frame that crosses a
+//! leader<->worker link — delivered, dropped, bit-flip-corrupted,
+//! duplicated, or delayed — plus one-shot worker crashes. Every decision
+//! is a pure function of `(fault_seed, direction, round, client, attempt)`,
+//! nothing else: no wall clock, no thread interleaving, no channel state.
+//! That buys the same contract discipline as `fed.threads`:
+//!
+//! * `faults = none` (all probabilities zero) is bit-identical to a run
+//!   without the fault layer — [`FaultPlan::fate`] short-circuits to
+//!   `Deliver` before hashing anything;
+//! * a faulty run reproduces bit-for-bit across re-runs and thread
+//!   counts, because both sides of every link consult the same plan with
+//!   the same indices.
+//!
+//! The leader exploits the purity directly: instead of discovering frame
+//! losses through timeouts (which would leak wall-clock into control
+//! flow), it *simulates* the round-trip automaton with
+//! [`FaultPlan::client_script`] and already knows how many attempts each
+//! client needs, whether the worker computes, crashes, or delivers, and
+//! how many frames actually hit the air. Transport timeouts remain as a
+//! safety net only — a divergence between script and reality (a genuine
+//! worker panic) surfaces as [`crate::error::Error::WorkerLost`] instead
+//! of a hang.
+//!
+//! Fault injection happens on the *sender* side ([`FaultySender`]): a
+//! dropped frame still records its bytes on the link's [`LinkStats`]
+//! (the radio transmitted it — the loss is in flight), a corrupted frame
+//! has one deterministic bit flipped so the CRC trailer
+//! ([`crate::coordinator::wire::unseal`]) rejects it on receipt, a
+//! duplicated frame is transmitted (and counted) twice, and a delayed
+//! frame sleeps `delay_ms` before transmission. Goodbye frames bypass
+//! injection: a worker's refusal notice is the one signal kept reliable
+//! so "worker refused" never degrades into "transport lost".
+
+use crate::coordinator::transport::{FrameReceiver, FrameSender};
+use crate::error::{Error, Result};
+use crate::rng::SplitMix64;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Salt separating the fate stream from the crash stream and the
+/// corrupt-bit stream (arbitrary, fixed forever: part of the fault-seed
+/// contract).
+const FATE_SALT: u64 = 0xfa7e_0000_0000_0001;
+const CRASH_SALT: u64 = 0xc4a5_0000_0000_0002;
+const BIT_SALT: u64 = 0xb17f_0000_0000_0003;
+
+/// The `[faults]` config table: per-frame fault probabilities and the
+/// leader's recovery knobs. All probabilities are per-frame (per
+/// direction); crash is per (client, round) and one-shot — see
+/// [`FaultPlan::crashes_at`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultsConfig {
+    /// Seed of the fault stream (independent of the run seed, so the same
+    /// training run can be replayed under different fault weather).
+    pub seed: u64,
+    /// P(frame lost in flight). Transmitted bytes are still charged.
+    pub drop: f64,
+    /// P(one bit flipped in flight). The CRC32 trailer detects every
+    /// single-bit flip, so a corrupt frame is rejected, never misdecoded.
+    pub corrupt: f64,
+    /// P(frame transmitted and delivered twice).
+    pub duplicate: f64,
+    /// P(frame delayed by `delay_ms` before transmission).
+    pub delay: f64,
+    /// Wall-clock delay per delayed frame (affects host time only, never
+    /// results: the protocol is order-driven, not time-driven).
+    pub delay_ms: u64,
+    /// P(worker thread dies at its first intact round plan of round k),
+    /// at most once per worker per run.
+    pub crash: f64,
+    /// Retries the leader grants per client per round beyond the first
+    /// attempt before marking the worker dead.
+    pub retry_budget: u32,
+    /// Safety-net receive timeout. Under the script oracle the leader
+    /// never *expects* to wait this long; expiry means a real worker
+    /// failure and surfaces `Error::WorkerLost`.
+    pub timeout_ms: u64,
+    /// Respawn dead workers from their last checkpoint
+    /// ([`crate::algo::Strategy::save_state`]) at the start of the next
+    /// round, so they rejoin the sampling pool.
+    pub respawn: bool,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl FaultsConfig {
+    /// The no-fault plan: the distributed engine behaves bit-identically
+    /// to a build without the fault layer.
+    pub fn none() -> Self {
+        FaultsConfig {
+            seed: 0,
+            drop: 0.0,
+            corrupt: 0.0,
+            duplicate: 0.0,
+            delay: 0.0,
+            delay_ms: 5,
+            crash: 0.0,
+            retry_budget: 3,
+            timeout_ms: 30_000,
+            respawn: false,
+        }
+    }
+
+    /// Is any fault possible? (Gates every per-frame hash, so the
+    /// disabled fault layer costs one branch per send.)
+    pub fn enabled(&self) -> bool {
+        self.drop > 0.0
+            || self.corrupt > 0.0
+            || self.duplicate > 0.0
+            || self.delay > 0.0
+            || self.crash > 0.0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [
+            ("faults.drop", self.drop),
+            ("faults.corrupt", self.corrupt),
+            ("faults.duplicate", self.duplicate),
+            ("faults.delay", self.delay),
+            ("faults.crash", self.crash),
+        ] {
+            if !(0.0..=1.0).contains(&p) || p.is_nan() {
+                return Err(Error::config(format!(
+                    "{name} must be a probability in [0, 1], got {p}"
+                )));
+            }
+        }
+        let frame_total = self.drop + self.corrupt + self.duplicate + self.delay;
+        if frame_total > 1.0 {
+            return Err(Error::config(format!(
+                "faults.drop + corrupt + duplicate + delay must be <= 1, got {frame_total}"
+            )));
+        }
+        if self.timeout_ms == 0 {
+            return Err(Error::config("faults.timeout_ms must be > 0"));
+        }
+        Ok(())
+    }
+}
+
+/// Which way a frame travels (leader->worker or worker->leader). The two
+/// directions draw from disjoint fault streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Down,
+    Up,
+}
+
+impl Direction {
+    fn salt(self) -> u64 {
+        match self {
+            Direction::Down => 0x5e44_d04c,
+            Direction::Up => 0x3a91_09c7,
+        }
+    }
+}
+
+/// The fate of one frame transmission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameFate {
+    Deliver,
+    Drop,
+    Corrupt,
+    Duplicate,
+    Delay,
+}
+
+impl FrameFate {
+    /// Intact copies the receiver sees.
+    pub fn arrivals(self) -> u32 {
+        match self {
+            FrameFate::Deliver | FrameFate::Delay => 1,
+            FrameFate::Duplicate => 2,
+            FrameFate::Drop | FrameFate::Corrupt => 0,
+        }
+    }
+
+    /// Frames put on the air (what [`LinkStats`] counts — dropped and
+    /// corrupted frames were still transmitted).
+    pub fn air_frames(self) -> u32 {
+        match self {
+            FrameFate::Duplicate => 2,
+            _ => 1,
+        }
+    }
+}
+
+/// What the leader's round-trip simulation predicts for one
+/// (round, client): how many attempts it will play, whether the worker
+/// computes / crashes / delivers, and the air-frame counts the SimNet
+/// accounting must charge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClientScript {
+    /// Plan+model attempts the leader plays (1 ..= retry_budget + 1).
+    pub attempts: u32,
+    /// An intact uplink envelope reaches the leader.
+    pub delivered: bool,
+    /// The worker computes the round (delivery-assuming strategy state
+    /// advances; `computed && !delivered` needs an eventual rollback).
+    pub computed: bool,
+    /// The worker's one-shot crash fires during this round.
+    pub crashed: bool,
+    /// Uplink envelope transmissions that hit the air (>= 1 iff
+    /// `computed`; retries and duplicates included).
+    pub up_air_frames: u32,
+    /// Model-frame transmissions that hit the air (>= 1; re-broadcasts
+    /// and duplicates included).
+    pub model_air_frames: u32,
+}
+
+impl ClientScript {
+    /// The script of a fault-free round-trip.
+    fn clean() -> ClientScript {
+        ClientScript {
+            attempts: 1,
+            delivered: true,
+            computed: true,
+            crashed: false,
+            up_air_frames: 1,
+            model_air_frames: 1,
+        }
+    }
+}
+
+/// The run's seeded fault oracle, shared (via `Arc`) by the leader and
+/// every worker.
+#[derive(Debug)]
+pub struct FaultPlan {
+    cfg: FaultsConfig,
+    enabled: bool,
+}
+
+/// Map a SplitMix64 output to a unit float (53-bit mantissa, the standard
+/// construction used by the rng module).
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultsConfig) -> FaultPlan {
+        let enabled = cfg.enabled();
+        FaultPlan { cfg, enabled }
+    }
+
+    pub fn cfg(&self) -> &FaultsConfig {
+        &self.cfg
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Two-level child-seed derivation: one hash per (salt, a), one per b.
+    fn roll(&self, salt: u64, a: u64, b: u64) -> u64 {
+        SplitMix64::derive(SplitMix64::derive(self.cfg.seed ^ salt, a), b)
+    }
+
+    /// The fate of the `idx`-th frame the sender puts on this link for
+    /// `(round, client)` — pure in all four arguments.
+    pub fn fate(&self, dir: Direction, round: u64, client: u32, idx: u32) -> FrameFate {
+        if !self.enabled {
+            return FrameFate::Deliver;
+        }
+        let h = self.roll(
+            FATE_SALT ^ dir.salt(),
+            round,
+            ((client as u64) << 32) | idx as u64,
+        );
+        let u = unit(h);
+        let c = &self.cfg;
+        let mut t = c.drop;
+        if u < t {
+            return FrameFate::Drop;
+        }
+        t += c.corrupt;
+        if u < t {
+            return FrameFate::Corrupt;
+        }
+        t += c.duplicate;
+        if u < t {
+            return FrameFate::Duplicate;
+        }
+        t += c.delay;
+        if u < t {
+            return FrameFate::Delay;
+        }
+        FrameFate::Deliver
+    }
+
+    /// Which bit a Corrupt fate flips (deterministic per frame).
+    pub fn corrupt_bit(
+        &self,
+        dir: Direction,
+        round: u64,
+        client: u32,
+        idx: u32,
+        nbits: usize,
+    ) -> usize {
+        (self.roll(
+            BIT_SALT ^ dir.salt(),
+            round,
+            ((client as u64) << 32) | idx as u64,
+        ) % nbits.max(1) as u64) as usize
+    }
+
+    /// Does `client`'s one-shot crash fire in `round`? True iff `round`
+    /// is the FIRST round whose crash hash clears the probability — a
+    /// worker crashes at most once per run, at its first intact round
+    /// plan of that round. (If no plan of the crash round ever gets
+    /// through, the crash opportunity is lost for good: faults depend on
+    /// delivery, deterministically on both sides.)
+    pub fn crashes_at(&self, client: u32, round: u64) -> bool {
+        let p = self.cfg.crash;
+        if p <= 0.0 {
+            return false;
+        }
+        let q = |r: u64| unit(self.roll(CRASH_SALT, r, client as u64)) < p;
+        q(round) && !(0..round).any(q)
+    }
+
+    /// Simulate the full round-trip automaton for `(round, client)` under
+    /// this plan and a retry budget: the leader plays attempts
+    /// (plan + model per attempt, downlink fate indices 2a and 2a+1), the
+    /// worker accumulates plan/model across attempts, computes once both
+    /// are in, re-sends its cached envelope on every repeated intact
+    /// plan, and crashes at its first intact plan if scheduled. Pure, so
+    /// leader control flow never depends on wall-clock — and because the
+    /// leader sends exactly `attempts` attempts, the worker's eventual
+    /// frame drain matches this simulation frame for frame.
+    pub fn client_script(&self, round: u64, client: u32, budget: u32) -> ClientScript {
+        if !self.enabled {
+            return ClientScript::clean();
+        }
+        let crash = self.crashes_at(client, round);
+        let (mut have_plan, mut have_model) = (false, false);
+        let (mut computed, mut crashed, mut delivered) = (false, false, false);
+        let (mut down_idx, mut up_idx) = (0u32, 0u32);
+        let (mut up_air, mut model_air) = (0u32, 0u32);
+        let mut attempts = 0u32;
+        for _ in 0..=budget {
+            attempts += 1;
+            let pf = self.fate(Direction::Down, round, client, down_idx);
+            down_idx += 1;
+            let mf = self.fate(Direction::Down, round, client, down_idx);
+            down_idx += 1;
+            model_air += mf.air_frames();
+            // worker processes this attempt's arrivals in channel order:
+            // plan copies first, then model copies
+            let mut sends = 0u32;
+            for _ in 0..pf.arrivals() {
+                if crash {
+                    crashed = true;
+                    break;
+                }
+                if computed {
+                    sends += 1; // repeated plan: re-send the cached envelope
+                } else {
+                    have_plan = true;
+                    if have_model {
+                        computed = true;
+                        sends += 1;
+                    }
+                }
+            }
+            if !crashed {
+                for _ in 0..mf.arrivals() {
+                    if !computed {
+                        have_model = true;
+                        if have_plan {
+                            computed = true;
+                            sends += 1;
+                        }
+                    }
+                }
+            }
+            for _ in 0..sends {
+                let uf = self.fate(Direction::Up, round, client, up_idx);
+                up_idx += 1;
+                up_air += uf.air_frames();
+                if uf.arrivals() > 0 {
+                    delivered = true;
+                }
+            }
+            if delivered || crashed {
+                break;
+            }
+        }
+        ClientScript {
+            attempts,
+            delivered,
+            computed,
+            crashed,
+            up_air_frames: up_air,
+            model_air_frames: model_air,
+        }
+    }
+}
+
+/// A [`FrameSender`] that consults the plan before every transmission.
+/// The fate index advances per send within the current `(round, client)`
+/// stream; [`FaultySender::begin_round`] resets it.
+pub struct FaultySender {
+    inner: Option<FrameSender>,
+    plan: Arc<FaultPlan>,
+    dir: Direction,
+    client: u32,
+    round: u64,
+    idx: u32,
+}
+
+impl FaultySender {
+    pub fn wrap(inner: FrameSender, plan: Arc<FaultPlan>, dir: Direction, client: u32) -> Self {
+        FaultySender {
+            inner: Some(inner),
+            plan,
+            dir,
+            client,
+            round: 0,
+            idx: 0,
+        }
+    }
+
+    /// Enter `(round)`'s fate stream (index restarts at 0).
+    pub fn begin_round(&mut self, round: u64) {
+        self.round = round;
+        self.idx = 0;
+    }
+
+    /// Transmit under the plan. Returns `false` only when the peer is
+    /// gone — every injected outcome (including in-flight loss) reports
+    /// `true`, because the radio cannot know.
+    pub fn send(&mut self, frame: Vec<u8>) -> bool {
+        let Some(tx) = &self.inner else { return false };
+        if !self.plan.enabled() {
+            return tx.send(frame).is_ok();
+        }
+        let idx = self.idx;
+        self.idx += 1;
+        match self.plan.fate(self.dir, self.round, self.client, idx) {
+            FrameFate::Deliver => tx.send(frame).is_ok(),
+            FrameFate::Drop => {
+                // transmitted, lost in flight: bytes on the air are
+                // charged, nothing reaches the peer
+                tx.transmit_void(frame.len());
+                true
+            }
+            FrameFate::Corrupt => {
+                let mut f = frame;
+                let nbits = f.len() * 8;
+                if nbits > 0 {
+                    let bit =
+                        self.plan
+                            .corrupt_bit(self.dir, self.round, self.client, idx, nbits);
+                    f[bit / 8] ^= 1 << (bit % 8);
+                }
+                tx.send(f).is_ok()
+            }
+            FrameFate::Duplicate => {
+                let ok = tx.send(frame.clone()).is_ok();
+                tx.send(frame).is_ok() && ok
+            }
+            FrameFate::Delay => {
+                std::thread::sleep(Duration::from_millis(self.plan.cfg().delay_ms));
+                tx.send(frame).is_ok()
+            }
+        }
+    }
+
+    /// Transmit bypassing fault injection (goodbye frames: the refusal
+    /// signal stays reliable). Does not consume a fate index.
+    pub fn send_reliable(&mut self, frame: Vec<u8>) -> bool {
+        self.inner.as_ref().is_some_and(|tx| tx.send(frame).is_ok())
+    }
+
+    /// Hang up (the peer's blocking recv wakes with a disconnect).
+    pub fn close(&mut self) {
+        self.inner = None;
+    }
+}
+
+/// What one bounded receive produced.
+#[derive(Debug)]
+pub enum RecvOutcome {
+    /// A frame arrived (still sealed — the caller unseals and dispatches).
+    Frame(Vec<u8>),
+    TimedOut,
+    Disconnected,
+}
+
+/// A [`FrameReceiver`] with bounded receives (the leader's safety net
+/// against genuine worker deaths) and an explicit hangup.
+pub struct FaultyReceiver {
+    inner: Option<FrameReceiver>,
+}
+
+impl FaultyReceiver {
+    pub fn wrap(inner: FrameReceiver) -> Self {
+        FaultyReceiver { inner: Some(inner) }
+    }
+
+    pub fn recv_within(&self, timeout: Duration) -> RecvOutcome {
+        match &self.inner {
+            None => RecvOutcome::Disconnected,
+            Some(rx) => match rx.recv_timeout(timeout) {
+                Ok(frame) => RecvOutcome::Frame(frame),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => RecvOutcome::TimedOut,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => RecvOutcome::Disconnected,
+            },
+        }
+    }
+
+    /// Hang up (a peer's send fails immediately afterwards).
+    pub fn close(&mut self) {
+        self.inner = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::link;
+
+    fn plan(f: impl FnOnce(&mut FaultsConfig)) -> FaultPlan {
+        let mut cfg = FaultsConfig::none();
+        f(&mut cfg);
+        FaultPlan::new(cfg)
+    }
+
+    #[test]
+    fn disabled_plan_always_delivers_and_scripts_clean() {
+        let p = plan(|_| {});
+        assert!(!p.enabled());
+        for idx in 0..50 {
+            assert_eq!(p.fate(Direction::Up, 3, 7, idx), FrameFate::Deliver);
+        }
+        assert!(!p.crashes_at(0, 0));
+        assert_eq!(p.client_script(11, 4, 3), ClientScript::clean());
+    }
+
+    #[test]
+    fn fates_are_pure_functions_of_their_indices() {
+        let a = plan(|c| {
+            c.seed = 42;
+            c.drop = 0.3;
+            c.corrupt = 0.2;
+            c.duplicate = 0.1;
+        });
+        let b = plan(|c| {
+            c.seed = 42;
+            c.drop = 0.3;
+            c.corrupt = 0.2;
+            c.duplicate = 0.1;
+        });
+        for round in 0..4u64 {
+            for client in 0..4u32 {
+                for idx in 0..8u32 {
+                    for dir in [Direction::Down, Direction::Up] {
+                        assert_eq!(
+                            a.fate(dir, round, client, idx),
+                            b.fate(dir, round, client, idx)
+                        );
+                    }
+                }
+            }
+        }
+        // directions draw from disjoint streams: at these rates the two
+        // 128-fate vectors cannot coincide by construction accident
+        let down: Vec<_> = (0..128).map(|i| a.fate(Direction::Down, 0, 0, i)).collect();
+        let up: Vec<_> = (0..128).map(|i| a.fate(Direction::Up, 0, 0, i)).collect();
+        assert_ne!(down, up);
+    }
+
+    #[test]
+    fn fate_frequencies_roughly_match_probabilities() {
+        let p = plan(|c| {
+            c.seed = 7;
+            c.drop = 0.25;
+            c.corrupt = 0.25;
+        });
+        let n = 4000u32;
+        let drops = (0..n)
+            .filter(|&i| p.fate(Direction::Down, 0, 0, i) == FrameFate::Drop)
+            .count() as f64;
+        let corrupts = (0..n)
+            .filter(|&i| p.fate(Direction::Down, 0, 0, i) == FrameFate::Corrupt)
+            .count() as f64;
+        assert!((drops / n as f64 - 0.25).abs() < 0.05, "{drops}");
+        assert!((corrupts / n as f64 - 0.25).abs() < 0.05, "{corrupts}");
+    }
+
+    #[test]
+    fn crash_is_one_shot_per_client() {
+        let p = plan(|c| {
+            c.seed = 3;
+            c.crash = 0.2;
+        });
+        for client in 0..16u32 {
+            let crash_rounds: Vec<u64> =
+                (0..200).filter(|&r| p.crashes_at(client, r)).collect();
+            assert!(crash_rounds.len() <= 1, "client {client}: {crash_rounds:?}");
+        }
+        // at p = 0.2 over 200 rounds and 16 clients, at least one crash
+        // is scheduled (probability of none ~ 1e-310)
+        assert!((0..16u32).any(|c| (0..200).any(|r| p.crashes_at(c, r))));
+    }
+
+    #[test]
+    fn scripts_are_internally_consistent() {
+        let p = plan(|c| {
+            c.seed = 99;
+            c.drop = 0.3;
+            c.corrupt = 0.15;
+            c.duplicate = 0.1;
+            c.crash = 0.05;
+        });
+        let budget = 3u32;
+        let mut saw_retry = false;
+        let mut saw_loss = false;
+        for round in 0..40u64 {
+            for client in 0..8u32 {
+                let s = p.client_script(round, client, budget);
+                assert!(s.attempts >= 1 && s.attempts <= budget + 1);
+                assert!(s.model_air_frames >= 1);
+                // a delivery requires a compute; a compute requires at
+                // least one uplink transmission; a crash precludes both
+                if s.delivered {
+                    assert!(s.computed && !s.crashed);
+                }
+                assert_eq!(s.computed, s.up_air_frames > 0);
+                if s.crashed {
+                    assert!(!s.computed && !s.delivered);
+                }
+                saw_retry |= s.attempts > 1;
+                saw_loss |= !s.delivered;
+                // determinism
+                assert_eq!(s, p.client_script(round, client, budget));
+            }
+        }
+        assert!(saw_retry, "fault rates high enough to force retries");
+        assert!(saw_loss, "fault rates high enough to exhaust a budget");
+    }
+
+    #[test]
+    fn faulty_sender_charges_dropped_frames_and_duplicates() {
+        // an all-drop plan: every frame's bytes land on the stats, none
+        // on the receiver
+        let p = Arc::new(plan(|c| {
+            c.seed = 1;
+            c.drop = 1.0;
+        }));
+        let (tx, rx, stats) = link();
+        let mut s = FaultySender::wrap(tx, p, Direction::Up, 0);
+        s.begin_round(0);
+        assert!(s.send(vec![0u8; 10]));
+        assert!(s.send(vec![0u8; 6]));
+        assert_eq!(stats.bytes(), 16);
+        assert_eq!(stats.frames(), 2);
+        assert!(rx.try_recv().is_none());
+
+        // an all-duplicate plan: every frame arrives (and is counted) twice
+        let p = Arc::new(plan(|c| {
+            c.seed = 1;
+            c.duplicate = 1.0;
+        }));
+        let (tx, rx, stats) = link();
+        let mut s = FaultySender::wrap(tx, p, Direction::Up, 0);
+        s.begin_round(0);
+        assert!(s.send(vec![7u8; 4]));
+        assert_eq!(stats.frames(), 2);
+        assert_eq!(stats.bytes(), 8);
+        assert_eq!(rx.recv().unwrap(), vec![7u8; 4]);
+        assert_eq!(rx.recv().unwrap(), vec![7u8; 4]);
+    }
+
+    #[test]
+    fn faulty_sender_corruption_flips_exactly_one_bit() {
+        let p = Arc::new(plan(|c| {
+            c.seed = 5;
+            c.corrupt = 1.0;
+        }));
+        let (tx, rx, _) = link();
+        let mut s = FaultySender::wrap(tx, p, Direction::Down, 2);
+        s.begin_round(4);
+        let original = vec![0u8; 16];
+        assert!(s.send(original.clone()));
+        let got = rx.recv().unwrap();
+        let flipped: u32 = original
+            .iter()
+            .zip(&got)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert_eq!(flipped, 1);
+    }
+
+    #[test]
+    fn reliable_send_bypasses_an_all_drop_plan() {
+        let p = Arc::new(plan(|c| {
+            c.drop = 1.0;
+        }));
+        let (tx, rx, _) = link();
+        let mut s = FaultySender::wrap(tx, p, Direction::Up, 0);
+        assert!(s.send_reliable(vec![1, 2, 3]));
+        assert_eq!(rx.recv().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn receiver_times_out_and_detects_hangup() {
+        let (tx, rx, _) = link();
+        let r = FaultyReceiver::wrap(rx);
+        assert!(matches!(
+            r.recv_within(Duration::from_millis(5)),
+            RecvOutcome::TimedOut
+        ));
+        tx.send(vec![9]).unwrap();
+        assert!(matches!(
+            r.recv_within(Duration::from_millis(5)),
+            RecvOutcome::Frame(f) if f == vec![9]
+        ));
+        drop(tx);
+        assert!(matches!(
+            r.recv_within(Duration::from_millis(5)),
+            RecvOutcome::Disconnected
+        ));
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_probabilities() {
+        let mut c = FaultsConfig::none();
+        c.drop = 1.5;
+        assert!(c.validate().is_err());
+        c.drop = 0.6;
+        c.corrupt = 0.6;
+        assert!(c.validate().is_err(), "per-frame fates must partition [0,1]");
+        c.corrupt = 0.2;
+        assert!(c.validate().is_ok());
+        c.timeout_ms = 0;
+        assert!(c.validate().is_err());
+    }
+}

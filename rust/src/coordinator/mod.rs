@@ -13,11 +13,14 @@
 //!   per-strategy aggregation rules live with the strategies)
 //! * [`engine`]  — the round loop: broadcast -> local stage -> uplink ->
 //!   netsim accounting -> aggregate -> (periodic) evaluation
+//! * [`faults`]  — deterministic transport-fault injection + the round
+//!   protocol's retry oracle (distributed engine only)
 
 pub mod checkpoint;
 pub mod client;
 pub mod distributed;
 pub mod engine;
+pub mod faults;
 pub mod messages;
 pub mod server;
 pub mod transport;
@@ -27,5 +30,6 @@ pub use checkpoint::Checkpoint;
 pub use client::ClientState;
 pub use distributed::DistributedEngine;
 pub use engine::{Engine, RunOutput};
+pub use faults::{FaultPlan, FaultsConfig};
 pub use messages::Uplink;
-pub use wire::{WireModel, WireNack, WireRoundPlan, WireUplink};
+pub use wire::{WireGoodbye, WireModel, WireNack, WireRoundPlan, WireUplink, WireUplinkEnvelope};

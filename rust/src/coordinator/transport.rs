@@ -44,6 +44,14 @@ impl FrameSender {
         self.stats.record(frame.len());
         self.tx.send(frame).map_err(|_| "peer hung up")
     }
+
+    /// Record a transmission that never reaches the peer (a frame lost in
+    /// flight): the radio spent the bytes, the link delivered nothing.
+    /// Used by the fault layer's Drop fate so injected losses stay
+    /// visible in the frame-byte accounting.
+    pub fn transmit_void(&self, len: usize) {
+        self.stats.record(len);
+    }
 }
 
 /// Receiving half.
@@ -58,6 +66,15 @@ impl FrameReceiver {
 
     pub fn try_recv(&self) -> Option<Vec<u8>> {
         self.rx.try_recv().ok()
+    }
+
+    /// Bounded receive: a hung or dead peer surfaces as an error within
+    /// `timeout` instead of blocking the caller forever.
+    pub fn recv_timeout(
+        &self,
+        timeout: std::time::Duration,
+    ) -> Result<Vec<u8>, std::sync::mpsc::RecvTimeoutError> {
+        self.rx.recv_timeout(timeout)
     }
 }
 
@@ -131,6 +148,35 @@ mod tests {
         assert_eq!(leader.uplink.recv().unwrap(), vec![9]);
         assert_eq!(leader.down_stats.bytes(), 3);
         assert_eq!(leader.up_stats.bytes(), 1);
+    }
+
+    #[test]
+    fn void_transmissions_count_without_delivering() {
+        let (tx, rx, stats) = link();
+        tx.transmit_void(9);
+        tx.send(vec![0u8; 4]).unwrap();
+        assert_eq!(stats.bytes(), 13);
+        assert_eq!(stats.frames(), 2);
+        assert_eq!(rx.recv().unwrap().len(), 4);
+        assert!(rx.try_recv().is_none());
+    }
+
+    #[test]
+    fn recv_timeout_bounds_the_wait() {
+        use std::sync::mpsc::RecvTimeoutError;
+        use std::time::Duration;
+        let (tx, rx, _) = link();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(5)),
+            Err(RecvTimeoutError::Timeout)
+        );
+        tx.send(vec![1]).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(5)), Ok(vec![1]));
+        drop(tx);
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(5)),
+            Err(RecvTimeoutError::Disconnected)
+        );
     }
 
     #[test]

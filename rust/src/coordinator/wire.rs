@@ -60,6 +60,13 @@ pub mod tag {
     pub const PLAN: u8 = 7;
     /// Delivery NACK: "your round-k upload was dropped" (downlink).
     pub const NACK: u8 = 8;
+    /// Worker goodbye: "this worker refuses the protocol and is shutting
+    /// down" (uplink) — lets the leader distinguish a refusal from a
+    /// transport loss.
+    pub const GOODBYE: u8 = 9;
+    /// Uplink envelope: (round, client) header around a strategy uplink
+    /// payload, so the leader can dedupe retransmissions (uplink).
+    pub const UPLINK: u8 = 10;
     /// Last tag reserved for built-in frames.
     pub const BUILTIN_MAX: u8 = 31;
     /// First tag of the strategy-owned dynamic range.
@@ -544,6 +551,187 @@ impl WireNack {
     }
 }
 
+/// Uplink frame: the envelope every worker upload travels in. The
+/// (round, client) header is what makes retransmission safe: the leader
+/// accepts the first intact envelope matching the round it is collecting
+/// and silently discards duplicates and stale copies — "dedupe by
+/// (round, client)". The payload is the strategy's own encoded uplink
+/// ([`crate::algo::Strategy::wire_encode`]), untouched, so the inner
+/// frame formats (and the paper's 13-byte scalar-frame claim) are
+/// unchanged by the envelope.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireUplinkEnvelope {
+    pub round: u32,
+    pub client: u32,
+    pub payload: Vec<u8>,
+}
+
+impl WireUplinkEnvelope {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(9 + self.payload.len());
+        out.push(tag::UPLINK);
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.client.to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<WireUplinkEnvelope> {
+        let mut cur = Cursor::new(buf);
+        if cur.u8()? != tag::UPLINK {
+            return Err(Error::invariant("expected uplink envelope frame"));
+        }
+        let round = cur.u32()?;
+        let client = cur.u32()?;
+        let payload = cur.rest().to_vec();
+        Ok(WireUplinkEnvelope {
+            round,
+            client,
+            payload,
+        })
+    }
+}
+
+/// Why a worker refused the protocol and shut down (rides the goodbye
+/// frame; purely diagnostic on the leader side).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GoodbyeReason {
+    /// A downlink frame decoded to garbage despite an intact CRC.
+    BadFrame,
+    /// A NACK referenced a round this worker never uploaded for.
+    BadNack,
+    /// A round plan excluded this worker.
+    Excluded,
+    /// The worker's strategy returned an error (encode / rollback).
+    StrategyError,
+}
+
+impl GoodbyeReason {
+    fn code(self) -> u8 {
+        match self {
+            GoodbyeReason::BadFrame => 1,
+            GoodbyeReason::BadNack => 2,
+            GoodbyeReason::Excluded => 3,
+            GoodbyeReason::StrategyError => 4,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<GoodbyeReason> {
+        Ok(match c {
+            1 => GoodbyeReason::BadFrame,
+            2 => GoodbyeReason::BadNack,
+            3 => GoodbyeReason::Excluded,
+            4 => GoodbyeReason::StrategyError,
+            _ => return Err(Error::invariant("unknown goodbye reason code")),
+        })
+    }
+}
+
+/// Uplink frame: a worker's explicit refusal notice, sent before it
+/// shuts down on a protocol violation — so the leader can distinguish
+/// "worker refused" (a protocol bug on one side) from "transport lost"
+/// (frames vanishing). `round` is the round context the worker was in
+/// (`u32::MAX` when it had none yet).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireGoodbye {
+    pub client: u32,
+    pub round: u32,
+    pub reason: GoodbyeReason,
+}
+
+impl WireGoodbye {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = vec![tag::GOODBYE];
+        out.extend_from_slice(&self.client.to_le_bytes());
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.push(self.reason.code());
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<WireGoodbye> {
+        let mut cur = Cursor::new(buf);
+        if cur.u8()? != tag::GOODBYE {
+            return Err(Error::invariant("expected goodbye frame"));
+        }
+        let client = cur.u32()?;
+        let round = cur.u32()?;
+        let reason = GoodbyeReason::from_code(cur.u8()?)?;
+        cur.expect_end()?;
+        Ok(WireGoodbye {
+            client,
+            round,
+            reason,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame integrity: CRC32 trailer
+// ---------------------------------------------------------------------
+
+/// Bytes the integrity trailer adds to every sealed frame.
+pub const CRC_TRAILER_BYTES: usize = 4;
+
+/// IEEE CRC-32 lookup table (polynomial 0xEDB88320), built at compile
+/// time — guarantees detection of every single-bit flip, which is
+/// exactly the corruption the fault layer injects.
+const fn crc_table() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// IEEE CRC-32 of `bytes` (the zlib/ethernet variant: init and final
+/// xor 0xFFFFFFFF). The pinned test vector below is this algorithm's
+/// version check — a change to the polynomial or the table breaks it.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Append the 4-byte little-endian CRC32 trailer. Every frame crossing a
+/// leader<->worker link is sealed at the protocol boundary — the inner
+/// frame formats (and their pinned sizes) are untouched.
+pub fn seal(mut frame: Vec<u8>) -> Vec<u8> {
+    let c = crc32(&frame);
+    frame.extend_from_slice(&c.to_le_bytes());
+    frame
+}
+
+/// Verify and strip the CRC32 trailer. A mismatch means the frame was
+/// corrupted in flight: the caller rejects it (and waits for a
+/// retransmission) instead of misdecoding or dying on it.
+pub fn unseal(sealed: &[u8]) -> Result<&[u8]> {
+    if sealed.len() < 1 + CRC_TRAILER_BYTES {
+        return Err(Error::invariant("frame shorter than its CRC trailer"));
+    }
+    let (payload, trailer) = sealed.split_at(sealed.len() - CRC_TRAILER_BYTES);
+    let want = u32::from_le_bytes(trailer.try_into().unwrap());
+    if crc32(payload) != want {
+        return Err(Error::invariant("frame integrity check failed (CRC32)"));
+    }
+    Ok(payload)
+}
+
 /// Minimal byte cursor with bounds-checked reads.
 struct Cursor<'a> {
     buf: &'a [u8],
@@ -1025,5 +1213,81 @@ mod tests {
         let frame_payload_bits = (w.encode().len() as u64 - 5) * 8;
         let want = Method::signsgd().uplink_bits(d);
         assert!(frame_payload_bits >= want && frame_payload_bits < want + 8);
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_reference_vector() {
+        // the standard "123456789" check value pins the polynomial,
+        // reflection, and xor conventions — the format's version check
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn seal_roundtrips_and_rejects_any_single_bit_flip() {
+        let frame = WireNack { round: 3, client: 7 }.encode();
+        let sealed = seal(frame.clone());
+        assert_eq!(sealed.len(), frame.len() + CRC_TRAILER_BYTES);
+        assert_eq!(unseal(&sealed).unwrap(), &frame[..]);
+        // CRC32 detects every single-bit error — flip each bit in turn,
+        // trailer included
+        for bit in 0..sealed.len() * 8 {
+            let mut bad = sealed.clone();
+            bad[bit / 8] ^= 1 << (bit % 8);
+            assert!(unseal(&bad).is_err(), "bit {bit} flip went undetected");
+        }
+        // truncation below the minimum sealed size is rejected, not a panic
+        assert!(unseal(&sealed[..4]).is_err());
+        assert!(unseal(&[]).is_err());
+    }
+
+    #[test]
+    fn uplink_envelope_roundtrips_and_preserves_payload() {
+        let inner = WireUplink::Scalar {
+            seed: 42,
+            rs: vec![1.5],
+        }
+        .encode();
+        assert_eq!(inner.len(), 13); // the paper claim, unchanged
+        let env = WireUplinkEnvelope {
+            round: 9,
+            client: 4,
+            payload: inner.clone(),
+        };
+        let bytes = env.encode();
+        assert_eq!(bytes.len(), 9 + inner.len());
+        let back = WireUplinkEnvelope::decode(&bytes).unwrap();
+        assert_eq!(back, env);
+        assert_eq!(WireUplink::decode(&back.payload).unwrap().encode(), inner);
+        // wrong tag rejected
+        assert!(WireUplinkEnvelope::decode(&WireNack { round: 0, client: 0 }.encode()).is_err());
+    }
+
+    #[test]
+    fn goodbye_roundtrips_all_reasons() {
+        for reason in [
+            GoodbyeReason::BadFrame,
+            GoodbyeReason::BadNack,
+            GoodbyeReason::Excluded,
+            GoodbyeReason::StrategyError,
+        ] {
+            let g = WireGoodbye {
+                client: 3,
+                round: 17,
+                reason,
+            };
+            let bytes = g.encode();
+            assert_eq!(bytes[0], tag::GOODBYE);
+            assert_eq!(WireGoodbye::decode(&bytes).unwrap(), g);
+        }
+        // unknown reason code rejected
+        let mut bytes = WireGoodbye {
+            client: 0,
+            round: 0,
+            reason: GoodbyeReason::BadFrame,
+        }
+        .encode();
+        *bytes.last_mut().unwrap() = 200;
+        assert!(WireGoodbye::decode(&bytes).is_err());
     }
 }

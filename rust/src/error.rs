@@ -30,6 +30,10 @@ pub enum Error {
 
     /// An invariant the coordinator relies on was violated at runtime.
     Invariant(String),
+
+    /// A distributed worker stopped responding (thread dead, channel
+    /// hung up, or a receive timed out) outside any injected-fault plan.
+    WorkerLost { client: usize, round: usize },
 }
 
 impl fmt::Display for Error {
@@ -44,6 +48,9 @@ impl fmt::Display for Error {
             }
             Error::Shape(msg) => write!(f, "shape error: {msg}"),
             Error::Invariant(msg) => write!(f, "invariant violated: {msg}"),
+            Error::WorkerLost { client, round } => {
+                write!(f, "worker {client} lost in round {round}")
+            }
         }
     }
 }
@@ -78,6 +85,9 @@ impl Error {
     pub fn invariant(msg: impl Into<String>) -> Self {
         Error::Invariant(msg.into())
     }
+    pub fn worker_lost(client: usize, round: usize) -> Self {
+        Error::WorkerLost { client, round }
+    }
 }
 
 #[cfg(test)]
@@ -91,6 +101,10 @@ mod tests {
         assert_eq!(
             Error::invariant("inv").to_string(),
             "invariant violated: inv"
+        );
+        assert_eq!(
+            Error::worker_lost(3, 12).to_string(),
+            "worker 3 lost in round 12"
         );
         assert_eq!(
             Error::Parse {

@@ -16,7 +16,7 @@
 
 use fedscalar::algo::Method;
 use fedscalar::config::{DataSource, ExperimentConfig};
-use fedscalar::coordinator::Engine;
+use fedscalar::coordinator::{DistributedEngine, Engine};
 use fedscalar::error::{Error, Result};
 use fedscalar::exp::figures::{make_backend, run_figure_suite, Axis, BackendKind, SuiteOptions};
 use fedscalar::exp::table1;
@@ -151,6 +151,38 @@ fn common_cfg(a: &Args) -> Result<ExperimentConfig> {
     if a.provided("p-compute") {
         cfg.scenario.p_compute_watts = a.get_f64("p-compute")?;
     }
+    // fault injection (distributed engine only; see `[faults]` in the
+    // config reference)
+    if a.provided("fault-seed") {
+        cfg.faults.seed = a.get_u64("fault-seed")?;
+    }
+    if a.provided("fault-drop") {
+        cfg.faults.drop = a.get_f64("fault-drop")?;
+    }
+    if a.provided("fault-corrupt") {
+        cfg.faults.corrupt = a.get_f64("fault-corrupt")?;
+    }
+    if a.provided("fault-duplicate") {
+        cfg.faults.duplicate = a.get_f64("fault-duplicate")?;
+    }
+    if a.provided("fault-delay") {
+        cfg.faults.delay = a.get_f64("fault-delay")?;
+    }
+    if a.provided("fault-delay-ms") {
+        cfg.faults.delay_ms = a.get_u64("fault-delay-ms")?;
+    }
+    if a.provided("fault-crash") {
+        cfg.faults.crash = a.get_f64("fault-crash")?;
+    }
+    if a.provided("fault-retries") {
+        cfg.faults.retry_budget = a.get_u64("fault-retries")? as u32;
+    }
+    if a.provided("fault-timeout-ms") {
+        cfg.faults.timeout_ms = a.get_u64("fault-timeout-ms")?;
+    }
+    if a.get_bool("fault-respawn") {
+        cfg.faults.respawn = true;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -188,6 +220,17 @@ fn common_args(args: Args) -> Args {
             "per-client battery in joules; exhausted devices drop out (0 = unlimited)",
         )
         .opt("p-compute", "0", "device compute power in watts (drains the battery)")
+        // fault injection (distributed engine only)
+        .opt("fault-seed", "0", "fault-plan seed (faulty runs are bit-reproducible)")
+        .opt("fault-drop", "0", "per-frame drop probability [0,1]")
+        .opt("fault-corrupt", "0", "per-frame bit-flip probability [0,1]")
+        .opt("fault-duplicate", "0", "per-frame duplication probability [0,1]")
+        .opt("fault-delay", "0", "per-frame delay probability [0,1]")
+        .opt("fault-delay-ms", "5", "delay fate hold time (wall-clock ms)")
+        .opt("fault-crash", "0", "per-round one-shot worker crash probability [0,1]")
+        .opt("fault-retries", "3", "leader retransmission budget per (round, client)")
+        .opt("fault-timeout-ms", "30000", "leader receive timeout safety net (ms)")
+        .flag("fault-respawn", "respawn dead workers from their checkpoint")
 }
 
 fn run_command(cmd: &str, rest: Vec<String>) -> Result<()> {
@@ -210,21 +253,58 @@ fn cmd_train(rest: Vec<String>) -> Result<()> {
         .opt("method", "fedscalar-rademacher", "strategy name (run `fedscalar strategies` for the registered list)")
         .opt("run-seed", "0", "run seed")
         .opt("out", "results/train.csv", "history CSV output path")
+        .opt(
+            "engine",
+            "sequential",
+            "round engine: sequential|distributed (threaded frame-passing; required for [faults])",
+        )
         .parse(rest)?;
     let mut cfg = common_cfg(&a)?;
     cfg.fed.method = Method::parse(&a.get("method"))
         .ok_or_else(|| Error::config(format!("unknown method {:?}", a.get("method"))))?;
-    let backend_kind = BackendKind::parse(&a.get("backend"))
-        .ok_or_else(|| Error::config("bad --backend (xla|pure-rust)"))?;
-    let be = make_backend(backend_kind, &cfg)?;
-    let mut engine = Engine::from_config(&cfg, be, a.get_u64("run-seed")?)?;
-    let history = engine.run()?;
+    let run_seed = a.get_u64("run-seed")?;
+    let engine_name;
+    let backend_name;
+    let history = match a.get("engine").as_str() {
+        "sequential" => {
+            let backend_kind = BackendKind::parse(&a.get("backend"))
+                .ok_or_else(|| Error::config("bad --backend (xla|pure-rust)"))?;
+            let be = make_backend(backend_kind, &cfg)?;
+            engine_name = "sequential";
+            backend_name = backend_kind.name();
+            Engine::from_config(&cfg, be, run_seed)?.run()?
+        }
+        "distributed" => {
+            // distributed workers are pure-Rust only (PJRT handles are
+            // not Send); an explicit --backend xla is a contradiction
+            if a.provided("backend") && a.get("backend") != "pure-rust" {
+                return Err(Error::config(
+                    "--engine distributed runs pure-rust workers; drop --backend or pass pure-rust",
+                ));
+            }
+            engine_name = "distributed";
+            backend_name = "pure-rust";
+            let mut engine = DistributedEngine::from_config(&cfg, run_seed)?;
+            let history = engine.run()?;
+            if engine.fault_casualties() > 0 {
+                println!(
+                    "faults: {} casualties, {} respawns, {} dead at exit",
+                    engine.fault_casualties(),
+                    engine.respawns(),
+                    engine.dead_workers().len()
+                );
+            }
+            history
+        }
+        other => return Err(Error::config(format!("bad --engine {other:?} (sequential|distributed)"))),
+    };
     let out = a.get("out");
     history.write_csv(&out)?;
     println!(
-        "method={} backend={} rounds={} final_acc={:.4} final_train_loss={:.4}",
+        "method={} engine={} backend={} rounds={} final_acc={:.4} final_train_loss={:.4}",
         cfg.fed.method.name(),
-        backend_kind.name(),
+        engine_name,
+        backend_name,
         cfg.fed.rounds,
         history.final_accuracy(),
         history.final_train_loss()

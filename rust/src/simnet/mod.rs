@@ -245,6 +245,28 @@ impl RoundReport {
     }
 }
 
+/// The protocol layer's fault overlay for one round (distributed engine
+/// under an active [`crate::coordinator::FaultPlan`]): script-known
+/// casualties that override the radio outcome, plus the retransmitted
+/// frames the retry loop put on the air beyond the nominal one per
+/// client.
+#[derive(Debug, Clone)]
+pub struct RoundFaults {
+    /// Per active client: `None` lets the radio scenario decide;
+    /// `Some(d)` forces the delivery outcome (a crash / retry-budget
+    /// casualty). A forced [`Delivery::NeverStarted`] additionally skips
+    /// the client's radio lifecycle entirely (no fading draw, no phase
+    /// hold, no transmit energy) — the worker never keyed its radio.
+    pub outcome: Vec<Option<Delivery>>,
+    /// Uplink frames on the air beyond the one-per-delivered-client
+    /// nominal (retries, duplicates, in-flight losses). Charged at
+    /// `uplink_bits` each.
+    pub extra_uplink_frames: u64,
+    /// Model re-broadcast frames beyond the one-per-client nominal.
+    /// Charged at `downlink_bits` each.
+    pub extra_downlink_frames: u64,
+}
+
 /// Lifecycle events inside one round (payload = index into `active`).
 enum Ev {
     ComputeDone(usize),
@@ -377,6 +399,37 @@ impl SimNet {
         uplink_bits: u64,
         downlink_bits: u64,
     ) -> RoundReport {
+        self.run_round_impl(active, uplink_bits, downlink_bits, None)
+    }
+
+    /// [`Self::run_round`] with a protocol-layer fault overlay: the
+    /// distributed engine's fault plan already knows which clients are
+    /// casualties (crash / exhausted retries) and how many retransmitted
+    /// frames hit the air; those override and top up the radio outcome.
+    /// An empty overlay (`outcome` all `None`, zero extras) reproduces
+    /// `run_round` bit for bit.
+    pub fn run_round_faulty(
+        &mut self,
+        active: &[usize],
+        uplink_bits: u64,
+        downlink_bits: u64,
+        faults: &RoundFaults,
+    ) -> RoundReport {
+        assert_eq!(
+            faults.outcome.len(),
+            active.len(),
+            "faults/active mismatch"
+        );
+        self.run_round_impl(active, uplink_bits, downlink_bits, Some(faults))
+    }
+
+    fn run_round_impl(
+        &mut self,
+        active: &[usize],
+        uplink_bits: u64,
+        downlink_bits: u64,
+        faults: Option<&RoundFaults>,
+    ) -> RoundReport {
         let n = active.len();
         if n == 0 {
             return RoundReport::empty();
@@ -394,6 +447,14 @@ impl SimNet {
         };
         let mut q = EventQueue::new();
         for (slot, &c) in active.iter().enumerate() {
+            if let Some(f) = faults {
+                if f.outcome[slot] == Some(Delivery::NeverStarted) {
+                    // the protocol layer knows this client never keyed
+                    // its radio (crashed, or never assembled a round):
+                    // no fading draw, no phase hold, no transmit energy
+                    continue;
+                }
+            }
             let ready = bcast_s + self.t_other_s * self.profiles[c].compute_mult;
             q.push(ready, Ev::ComputeDone(slot));
         }
@@ -483,12 +544,14 @@ impl SimNet {
                 outcome[i] = Delivery::Delivered;
             }
         }
-        let dropped = outcome.iter().filter(|o| !o.delivered()).count();
-        let round_seconds = if dropped == 0 && any_upload {
+        let radio_dropped = outcome.iter().filter(|o| !o.delivered()).count();
+        let round_seconds = if radio_dropped == 0 && any_upload {
             natural_end
         } else {
-            // the server closes the round at the deadline
-            self.deadline_s.expect("dropped clients imply a deadline")
+            // the server closes the round at the deadline; a fault-layer
+            // casualty in a deadline-free scenario closes at the natural
+            // end (the radio itself dropped nobody)
+            self.deadline_s.unwrap_or(natural_end)
         };
 
         // --- energy + bits, in active order ---------------------------
@@ -536,13 +599,31 @@ impl SimNet {
             }
         }
 
+        // --- fault overlay --------------------------------------------
+        // Applied AFTER the energy loop: a protocol-layer casualty whose
+        // frames fully hit the air (corrupted or lost in flight) is
+        // charged like a completed transmission — the radio spent the
+        // energy and the bits; only the payload never counted. The
+        // retransmitted frames the retry loop played are charged on top.
+        let mut extra_down_bits = 0u64;
+        if let Some(f) = faults {
+            for (i, o) in f.outcome.iter().enumerate() {
+                if let Some(d) = *o {
+                    outcome[i] = d;
+                }
+            }
+            bits_sent += f.extra_uplink_frames * uplink_bits;
+            extra_down_bits = f.extra_downlink_frames * downlink_bits;
+        }
+        let dropped = outcome.iter().filter(|o| !o.delivered()).count();
+
         self.clock_s += round_seconds;
         RoundReport {
             outcome,
             round_seconds,
             energy_joules: energy,
             uplink_bits: bits_sent,
-            downlink_bits: downlink_bits * n as u64,
+            downlink_bits: downlink_bits * n as u64 + extra_down_bits,
             per_upload_seconds: uploads,
             dropped,
         }

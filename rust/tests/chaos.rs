@@ -1,0 +1,214 @@
+//! Chaos suite: the distributed engine under deterministic fault
+//! injection — frame drops, bit-flips, duplicates, delays, and worker
+//! crashes.
+//!
+//! The invariants under test:
+//! * no fault mix hangs or panics the round protocol; every run
+//!   completes all K rounds (graceful degradation, not collapse);
+//! * the same fault seed reproduces the RunHistory bit for bit, across
+//!   re-runs AND across `fed.threads` settings;
+//! * `faults = none` is byte-identical to the unfaulted protocol (pinned
+//!   against the sequential engine);
+//! * injected losses stay visible in the accounting: retransmissions and
+//!   in-flight losses inflate the transport byte counters.
+
+use fedscalar::algo::Method;
+use fedscalar::config::ExperimentConfig;
+use fedscalar::coordinator::engine::run_pure_rust;
+use fedscalar::coordinator::{DistributedEngine, FaultsConfig};
+use fedscalar::metrics::{same_histories, RunHistory};
+use fedscalar::rng::VDistribution;
+
+fn cfg(method: Method, rounds: usize, agents: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.fed.method = method;
+    cfg.fed.rounds = rounds;
+    cfg.fed.eval_every = 2;
+    cfg.fed.num_agents = agents;
+    cfg
+}
+
+fn run_dist(c: &ExperimentConfig, run_seed: u64) -> RunHistory {
+    DistributedEngine::from_config(c, run_seed)
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+/// Every eval record belongs to a real round and rounds strictly advance.
+fn assert_monotone_rounds(h: &RunHistory, rounds: usize) {
+    assert!(!h.records.is_empty(), "no records");
+    let mut prev = None;
+    for r in &h.records {
+        assert!(r.round < rounds);
+        if let Some(p) = prev {
+            assert!(r.round > p, "round progress not monotone");
+        }
+        prev = Some(r.round);
+    }
+    assert_eq!(
+        h.records.last().unwrap().round,
+        rounds - 1,
+        "run did not reach the final round"
+    );
+}
+
+#[test]
+fn zero_fault_plan_is_bit_identical_to_the_unfaulted_protocol() {
+    // a fault table with a seed but all probabilities zero must not
+    // perturb a single byte of the protocol: the distributed history
+    // still equals the sequential engine's bit for bit
+    let mut c = cfg(Method::fedscalar(VDistribution::Rademacher, 1), 10, 4);
+    c.faults = FaultsConfig {
+        seed: 0xdead_beef,
+        ..FaultsConfig::none()
+    };
+    assert!(!c.faults.enabled());
+    let seq = {
+        let mut plain = c.clone();
+        plain.faults = FaultsConfig::none();
+        run_pure_rust(&plain, 6).unwrap()
+    };
+    let dist = run_dist(&c, 6);
+    assert!(same_histories(&seq, &dist));
+}
+
+#[test]
+fn sequential_engine_rejects_fault_injection() {
+    // faults target the wire protocol; the sequential engine has no wire
+    let mut c = cfg(Method::fedscalar(VDistribution::Rademacher, 1), 4, 3);
+    c.faults.drop = 0.2;
+    let err = run_pure_rust(&c, 0).unwrap_err();
+    assert!(
+        err.to_string().contains("distributed"),
+        "unhelpful error: {err}"
+    );
+}
+
+#[test]
+fn fault_sweep_no_hang_no_panic_and_reproducible() {
+    // drop / corrupt / duplicate, each against a scalar-uplink method, a
+    // stateful sparse plug-in, and a quantizer with per-worker RNG
+    let methods = [
+        Method::fedscalar(VDistribution::Rademacher, 1),
+        Method::topk(16),
+        Method::qsgd(8),
+    ];
+    let kinds: [(&str, fn(&mut FaultsConfig)); 3] = [
+        ("drop", |f| f.drop = 0.2),
+        ("corrupt", |f| f.corrupt = 0.2),
+        ("duplicate", |f| f.duplicate = 0.2),
+    ];
+    for method in methods {
+        for (kind, arm) in &kinds {
+            let mut c = cfg(method.clone(), 10, 4);
+            c.faults.seed = 42;
+            c.faults.retry_budget = 6;
+            arm(&mut c.faults);
+            assert!(c.faults.enabled());
+            let h1 = run_dist(&c, 5);
+            assert_monotone_rounds(&h1, 10);
+            // same fault seed => bit-identical history
+            let h2 = run_dist(&c, 5);
+            assert!(
+                same_histories(&h1, &h2),
+                "{}/{kind}: faulty run not reproducible",
+                method.name()
+            );
+            // ...and independent of the leader's thread count
+            let mut ct = c.clone();
+            ct.fed.threads = 4;
+            let h4 = run_dist(&ct, 5);
+            assert!(
+                same_histories(&h1, &h4),
+                "{}/{kind}: faulty run depends on fed.threads",
+                method.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn delayed_frames_arrive_late_but_change_nothing() {
+    // the Delay fate holds a frame for delay_ms of wall-clock: the
+    // protocol must absorb it (the script knows the frame still arrives)
+    let mut c = cfg(Method::fedscalar(VDistribution::Rademacher, 1), 6, 3);
+    c.faults.seed = 11;
+    c.faults.delay = 0.4;
+    c.faults.delay_ms = 1;
+    let h1 = run_dist(&c, 2);
+    assert_monotone_rounds(&h1, 6);
+    let h2 = run_dist(&c, 2);
+    assert!(same_histories(&h1, &h2));
+}
+
+#[test]
+fn crashed_workers_respawn_from_checkpoint_and_the_run_completes() {
+    let mut c = cfg(Method::topk(16), 12, 5);
+    c.faults.seed = 7;
+    c.faults.crash = 0.5;
+    c.faults.respawn = true;
+    let mut eng = DistributedEngine::from_config(&c, 3).unwrap();
+    let h = eng.run().unwrap();
+    assert_monotone_rounds(&h, 12);
+    // crash=0.5 over 5 workers and 12 rounds: the plan certainly kills
+    // some (deterministic given the seed), and respawn brings them back
+    assert!(eng.fault_casualties() > 0, "no crash ever fired");
+    assert!(eng.respawns() > 0, "casualties were never respawned");
+    // the same seeds reproduce the whole faulty run bit for bit
+    let h2 = run_dist(&c, 3);
+    assert!(same_histories(&h, &h2));
+}
+
+#[test]
+fn without_respawn_dead_workers_stay_excluded_and_the_run_degrades() {
+    // crash-heavy, no respawn: workers die one-shot and the engine keeps
+    // running rounds with whoever is left (eventually nobody — NaN
+    // records, no panic, no hang)
+    let mut c = cfg(Method::fedscalar(VDistribution::Rademacher, 1), 10, 4);
+    c.faults.seed = 19;
+    c.faults.crash = 0.9;
+    let mut eng = DistributedEngine::from_config(&c, 1).unwrap();
+    let h = eng.run().unwrap();
+    assert_monotone_rounds(&h, 10);
+    // with p=0.9 per round every worker is dead within a few rounds
+    assert_eq!(eng.dead_workers().len(), 4, "not every worker died");
+    assert_eq!(eng.fault_casualties(), 4);
+    assert_eq!(eng.respawns(), 0);
+    // once the pool is empty the active set is empty and eval records
+    // carry NaN losses — degradation, not failure
+    assert!(h.records.last().unwrap().train_loss.is_nan());
+}
+
+#[test]
+fn injected_losses_inflate_the_frame_byte_accounting() {
+    let clean = cfg(Method::fedscalar(VDistribution::Rademacher, 1), 10, 4);
+    let mut eng_clean = DistributedEngine::from_config(&clean, 8).unwrap();
+    eng_clean.run().unwrap();
+    let clean_up = eng_clean.uplink_frame_bytes();
+    let clean_down = eng_clean.downlink_frame_bytes();
+
+    let mut faulty = clean.clone();
+    faulty.faults.seed = 3;
+    faulty.faults.drop = 0.3;
+    faulty.faults.retry_budget = 6;
+    let mut eng = DistributedEngine::from_config(&faulty, 8).unwrap();
+    let h = eng.run().unwrap();
+    assert_monotone_rounds(&h, 10);
+    // every retransmission and every frame lost in flight was charged:
+    // the faulty run puts strictly more bytes on the air
+    assert!(
+        eng.downlink_frame_bytes() > clean_down,
+        "retransmitted downlink frames not charged ({} <= {clean_down})",
+        eng.downlink_frame_bytes()
+    );
+    assert!(
+        eng.uplink_frame_bytes() >= clean_up || eng.fault_casualties() > 0,
+        "uplink accounting lost frames"
+    );
+    // the byte counters are part of the deterministic surface too
+    let mut eng2 = DistributedEngine::from_config(&faulty, 8).unwrap();
+    eng2.run().unwrap();
+    assert_eq!(eng.uplink_frame_bytes(), eng2.uplink_frame_bytes());
+    assert_eq!(eng.downlink_frame_bytes(), eng2.downlink_frame_bytes());
+}

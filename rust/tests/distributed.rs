@@ -58,17 +58,20 @@ fn frame_bytes_measured_on_the_wire() {
     );
     let mut eng = DistributedEngine::from_config(&c, 0).unwrap();
     let _ = eng.run().unwrap();
-    // uplink: 13-byte scalar frame per agent per round — dimension-free
+    // uplink per agent per round: the 13-byte scalar payload — still
+    // dimension-free — inside the 9-byte (round, client) envelope, plus
+    // the 4-byte CRC trailer every frame wears
     assert_eq!(
         eng.uplink_frame_bytes(),
-        (rounds * agents * 13) as u64
+        (rounds * agents * (9 + 13 + 4)) as u64
     );
     // downlink per selected agent per round: round-plan frame
-    // (1 + 4 + 4 + 4·|active|) + model frame (1 + 4 + 4 + 4d)
+    // (1 + 4 + 4 + 4·|active|) + model frame (1 + 4 + 4 + 4d), each
+    // CRC-sealed (+4)
     let d = c.model.param_dim();
     assert_eq!(
         eng.downlink_frame_bytes(),
-        (rounds * agents * ((9 + 4 * agents) + (9 + 4 * d))) as u64
+        (rounds * agents * ((9 + 4 * agents + 4) + (9 + 4 * d + 4))) as u64
     );
 }
 
@@ -111,8 +114,8 @@ fn plugin_strategies_distributed_equal_sequential() {
 #[test]
 fn nack_frames_measured_on_the_wire() {
     // a deadline below the compute time makes EVERY upload a casualty:
-    // each active worker must then receive exactly one 9-byte NACK frame
-    // per round on top of the round plan + model broadcast
+    // each active worker must then receive exactly one sealed 13-byte
+    // NACK frame per round on top of the round plan + model broadcast
     let rounds = 5usize;
     let agents = 3usize;
     let mut c = cfg(Method::topk(16), rounds, agents);
@@ -129,9 +132,9 @@ fn nack_frames_measured_on_the_wire() {
     // nothing ever landed: the model held, zero uplink payload charged
     assert_eq!(h.records.last().unwrap().cum_bits, 0.0);
     let d = c.model.param_dim();
-    let plan = 9 + 4 * agents;
-    let model = 9 + 4 * d;
-    let nack = 9;
+    let plan = 9 + 4 * agents + 4;
+    let model = 9 + 4 * d + 4;
+    let nack = 9 + 4;
     assert_eq!(
         eng.downlink_frame_bytes(),
         (rounds * agents * (plan + model + nack)) as u64

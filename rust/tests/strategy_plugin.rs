@@ -187,10 +187,12 @@ source = "synthetic"
         "bespoke-frame plug-in diverged between engines"
     );
     // frame accounting: 1 tag byte + 4 bytes per kept coordinate, per
-    // agent per round — pinned on the transport's byte counters
+    // agent per round, carried inside the 9-byte (round, client) uplink
+    // envelope with the 4-byte CRC trailer — pinned on the transport's
+    // byte counters
     let kept = 1990usize.div_ceil(7);
     assert_eq!(
         eng.uplink_frame_bytes(),
-        (5 * 3 * (1 + 4 * kept)) as u64
+        (5 * 3 * (9 + (1 + 4 * kept) + 4)) as u64
     );
 }

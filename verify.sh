@@ -26,6 +26,17 @@ if [ "${1:-}" != "--fast" ]; then
 fi
 step cargo test -q
 
+# chaos smoke: a drop/corrupt/crash-heavy distributed run must complete
+# every round and exit 0 (skipped in --fast mode: wants the release
+# binary the build step above produced)
+if [ "${1:-}" != "--fast" ]; then
+    step cargo run --release --quiet -- train --engine distributed \
+        --data synthetic --rounds 6 --agents 4 --eval-every 3 \
+        --fault-seed 42 --fault-drop 0.15 --fault-corrupt 0.1 \
+        --fault-duplicate 0.1 --fault-crash 0.2 --fault-respawn \
+        --out /tmp/fedscalar_chaos_smoke.csv
+fi
+
 # fmt is advisory when rustfmt isn't installed in the container
 if cargo fmt --version >/dev/null 2>&1; then
     step cargo fmt --check
