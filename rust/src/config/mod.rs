@@ -15,7 +15,7 @@ use crate::util::toml_lite::Document;
 use std::path::{Path, PathBuf};
 
 /// Federated optimization hyper-parameters (Algorithm 1 knobs).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct FedConfig {
     pub num_agents: usize,
     pub rounds: usize,
@@ -64,8 +64,34 @@ pub enum DataSource {
     Synthetic,
 }
 
+/// Run-journal sink configuration (`[runlog]` / `--log`,
+/// `--snapshot-every`). See `crate::runlog`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunLogConfig {
+    /// JSONL journal path; `None` (the default) disables journaling.
+    pub path: Option<PathBuf>,
+    /// Append a full `Snapshot` event every this many rounds — the knob
+    /// trades journal size against replay length at resume.
+    pub snapshot_every: usize,
+}
+
+impl Default for RunLogConfig {
+    fn default() -> Self {
+        RunLogConfig {
+            path: None,
+            snapshot_every: 50,
+        }
+    }
+}
+
+impl RunLogConfig {
+    pub fn enabled(&self) -> bool {
+        self.path.is_some()
+    }
+}
+
 /// Top-level experiment configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
     pub fed: FedConfig,
     pub model: ModelSpec,
@@ -81,6 +107,8 @@ pub struct ExperimentConfig {
     /// Default = no faults: the sequential engine rejects anything else,
     /// and the distributed engine is bit-identical to a fault-free build.
     pub faults: FaultsConfig,
+    /// Event-sourced run journal (`crate::runlog`); disabled by default.
+    pub runlog: RunLogConfig,
 }
 
 impl ExperimentConfig {
@@ -95,6 +123,7 @@ impl ExperimentConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             dirichlet_alpha: None,
             faults: FaultsConfig::none(),
+            runlog: RunLogConfig::default(),
         }
     }
 
@@ -157,6 +186,9 @@ impl ExperimentConfig {
             }
         }
         self.faults.validate()?;
+        if self.runlog.snapshot_every == 0 {
+            return Err(Error::config("runlog.snapshot_every must be > 0"));
+        }
         Ok(())
     }
 
@@ -289,8 +321,116 @@ impl ExperimentConfig {
                 .ok_or_else(|| Error::config("faults.respawn must be a boolean"))?;
         }
 
+        let rl = &mut cfg.runlog;
+        rl.snapshot_every = geti("runlog", "snapshot_every", rl.snapshot_every as i64) as usize;
+        if let Some(v) = doc.get("runlog", "path") {
+            rl.path = Some(PathBuf::from(
+                v.as_str()
+                    .ok_or_else(|| Error::config("runlog.path must be a string"))?,
+            ));
+        }
+
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Serialize to TOML emitting exactly the keys [`Self::from_toml_str`]
+    /// reads, so `from_toml_str(to_toml_string())` reconstructs `self`
+    /// bit-for-bit — the property the run journal's `RunStarted` preamble
+    /// depends on. Floats print through `Display` (shortest round-trip)
+    /// and parse back correctly rounded, so every float survives exactly.
+    ///
+    /// Two honest limits of the TOML-lite dialect are rejected rather
+    /// than silently lost: a non-default [`ModelSpec`] (it has no TOML
+    /// spelling) and strings containing `"` or line breaks (TOML-lite
+    /// strings have no escape syntax).
+    pub fn to_toml_string(&self) -> Result<String> {
+        use std::fmt::Write as _;
+        if self.model != ModelSpec::default() {
+            return Err(Error::config(
+                "to_toml_string: non-default model specs have no TOML spelling",
+            ));
+        }
+        let quoted = |key: &str, s: &str| -> Result<String> {
+            if s.contains('"') || s.contains('\n') || s.contains('\r') {
+                return Err(Error::config(format!(
+                    "to_toml_string: {key} value {s:?} is not representable \
+                     (TOML-lite strings have no escapes)"
+                )));
+            }
+            Ok(format!("{key} = \"{s}\"\n"))
+        };
+        let mut out = String::new();
+        let f = &self.fed;
+        out.push_str("[fed]\n");
+        let _ = writeln!(out, "num_agents = {}", f.num_agents);
+        let _ = writeln!(out, "rounds = {}", f.rounds);
+        let _ = writeln!(out, "local_steps = {}", f.local_steps);
+        let _ = writeln!(out, "batch_size = {}", f.batch_size);
+        let _ = writeln!(out, "alpha = {}", f.alpha);
+        let _ = writeln!(out, "eval_every = {}", f.eval_every);
+        let _ = writeln!(out, "participation = {}", f.participation);
+        let _ = writeln!(out, "threads = {}", f.threads);
+        out.push_str(&quoted("method", &f.method.name())?);
+
+        let n = &self.network;
+        out.push_str("\n[network]\n");
+        let _ = writeln!(out, "bandwidth_bps = {}", n.channel.nominal_bps);
+        let _ = writeln!(out, "sigma = {}", n.channel.sigma);
+        let _ = writeln!(out, "t_other_frac = {}", n.latency.t_other_frac);
+        let _ = writeln!(out, "p_tx_watts = {}", n.p_tx_watts);
+        out.push_str(&quoted("schedule", n.schedule.name())?);
+
+        let sc = &self.scenario;
+        out.push_str("\n[scenario]\n");
+        out.push_str(&quoted("sampler", &sc.sampler.name())?);
+        out.push_str(&quoted("availability", &sc.availability.name())?);
+        if let Some(dl) = sc.deadline_s {
+            let _ = writeln!(out, "deadline_s = {dl}");
+        }
+        let _ = writeln!(out, "downlink_bps = {}", sc.downlink_bps);
+        let _ = writeln!(out, "p_compute_watts = {}", sc.p_compute_watts);
+        let _ = writeln!(out, "compute_spread = {}", sc.fleet.compute_spread);
+        let _ = writeln!(out, "power_spread = {}", sc.fleet.power_spread);
+        let _ = writeln!(out, "rate_spread = {}", sc.fleet.rate_spread);
+        let _ = writeln!(out, "energy_budget_j = {}", sc.fleet.energy_budget_j);
+
+        out.push_str("\n[data]\n");
+        let source = match self.data {
+            DataSource::ArtifactCsv => "artifacts",
+            DataSource::Synthetic => "synthetic",
+        };
+        out.push_str(&quoted("source", source)?);
+        let dir = self.artifacts_dir.to_str().ok_or_else(|| {
+            Error::config("to_toml_string: artifacts_dir is not valid UTF-8")
+        })?;
+        out.push_str(&quoted("artifacts_dir", dir)?);
+        if let Some(a) = self.dirichlet_alpha {
+            let _ = writeln!(out, "dirichlet_alpha = {a}");
+        }
+
+        let fl = &self.faults;
+        out.push_str("\n[faults]\n");
+        let _ = writeln!(out, "seed = {}", fl.seed);
+        let _ = writeln!(out, "drop = {}", fl.drop);
+        let _ = writeln!(out, "corrupt = {}", fl.corrupt);
+        let _ = writeln!(out, "duplicate = {}", fl.duplicate);
+        let _ = writeln!(out, "delay = {}", fl.delay);
+        let _ = writeln!(out, "delay_ms = {}", fl.delay_ms);
+        let _ = writeln!(out, "crash = {}", fl.crash);
+        let _ = writeln!(out, "retry_budget = {}", fl.retry_budget);
+        let _ = writeln!(out, "timeout_ms = {}", fl.timeout_ms);
+        let _ = writeln!(out, "respawn = {}", fl.respawn);
+
+        out.push_str("\n[runlog]\n");
+        let _ = writeln!(out, "snapshot_every = {}", self.runlog.snapshot_every);
+        if let Some(p) = &self.runlog.path {
+            let p = p.to_str().ok_or_else(|| {
+                Error::config("to_toml_string: runlog.path is not valid UTF-8")
+            })?;
+            out.push_str(&quoted("path", p)?);
+        }
+        Ok(out)
     }
 }
 
@@ -484,5 +624,72 @@ source = "synthetic"
     #[test]
     fn smoke_config_valid() {
         ExperimentConfig::smoke().validate().unwrap();
+    }
+
+    #[test]
+    fn runlog_table_parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[runlog]\nsnapshot_every = 7\npath = \"run.jsonl\"\n\n[data]\nsource = \"synthetic\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.runlog.snapshot_every, 7);
+        assert_eq!(cfg.runlog.path.as_deref(), Some(Path::new("run.jsonl")));
+        assert!(cfg.runlog.enabled());
+        assert!(ExperimentConfig::from_toml_str("[runlog]\nsnapshot_every = 0\n").is_err());
+        assert!(!ExperimentConfig::paper_section_iii().runlog.enabled());
+    }
+
+    #[test]
+    fn to_toml_round_trips_bit_for_bit() {
+        // the paper default, untouched
+        let base = ExperimentConfig::paper_section_iii();
+        let back = ExperimentConfig::from_toml_str(&base.to_toml_string().unwrap()).unwrap();
+        assert_eq!(back, base);
+
+        // every section exercised with non-default, non-round values
+        let mut cfg = ExperimentConfig::smoke();
+        cfg.fed.num_agents = 6;
+        cfg.fed.rounds = 24;
+        cfg.fed.alpha = 0.0123;
+        cfg.fed.eval_every = 4;
+        cfg.fed.threads = 2;
+        cfg.fed.method = Method::qsgd(4);
+        cfg.network.channel.nominal_bps = 123_456.75;
+        cfg.network.channel.sigma = 0.3;
+        cfg.network.latency.t_other_frac = 0.45;
+        cfg.network.p_tx_watts = 1.5;
+        cfg.network.schedule = Schedule::Concurrent;
+        cfg.scenario.sampler = SamplerPolicy::DeadlineAware { target: 4, over: 2 };
+        cfg.scenario.availability = Availability::parse("churn0.25").unwrap();
+        cfg.scenario.deadline_s = Some(0.1 + 0.2); // deliberately non-representable
+        cfg.scenario.downlink_bps = 2.0e6;
+        cfg.scenario.p_compute_watts = 0.7;
+        cfg.scenario.fleet.compute_spread = 0.8;
+        cfg.scenario.fleet.power_spread = 0.1;
+        cfg.scenario.fleet.rate_spread = 0.05;
+        cfg.scenario.fleet.energy_budget_j = 123.456;
+        cfg.dirichlet_alpha = Some(1.0 / 3.0);
+        cfg.faults.seed = 9;
+        cfg.faults.drop = 0.15;
+        cfg.faults.crash = 0.05;
+        cfg.faults.respawn = true;
+        cfg.runlog.snapshot_every = 5;
+        cfg.runlog.path = Some(PathBuf::from("/tmp/run.jsonl"));
+        let text = cfg.to_toml_string().unwrap();
+        let back = ExperimentConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn to_toml_rejects_the_unrepresentable() {
+        let mut cfg = ExperimentConfig::smoke();
+        cfg.artifacts_dir = PathBuf::from("weird\"dir");
+        assert!(cfg.to_toml_string().is_err(), "quote in a string value");
+        cfg.artifacts_dir = PathBuf::from("artifacts");
+        cfg.model = ModelSpec {
+            hidden1: 123,
+            ..ModelSpec::default()
+        };
+        assert!(cfg.to_toml_string().is_err(), "non-default model spec");
     }
 }

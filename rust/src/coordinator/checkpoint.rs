@@ -13,6 +13,13 @@
 //! but not bit-identical to uninterrupted ones, which is standard
 //! checkpoint semantics for FL simulators.
 //!
+//! For **bit-identical** resume, use the run journal instead
+//! ([`crate::runlog`], `fedscalar train --log` + `fedscalar resume`): it
+//! replays the engine-owned RNG/cursor streams from the event log before
+//! restoring this same expensive state, recovering the exact stream
+//! positions this format deliberately re-derives. The [`Checkpoint`]
+//! struct remains the in-memory carrier both paths restore through.
+//!
 //! Format v2 appends a length-prefixed opaque strategy-state blob; v1
 //! files (no blob) are rejected rather than silently resuming with reset
 //! strategy state.

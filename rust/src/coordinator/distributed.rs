@@ -79,10 +79,11 @@ use crate::error::{Error, Result};
 use crate::metrics::{RoundRecord, RunHistory};
 use crate::nn::ModelSpec;
 use crate::rng::SplitMix64;
+use crate::runlog::{Event, RoundClose, RunLog, SnapshotState, WorkerState};
 use crate::runtime::{Backend, PureRustBackend};
-use crate::simnet::{Delivery, RoundFaults, Sampler, SimNet};
+use crate::simnet::{Delivery, RoundFaults, RoundReport, Sampler, SimNet};
 use crate::{log_debug, log_info};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -160,6 +161,15 @@ pub struct DistributedEngine {
     /// deterministic respawn order). Excluded from sampling like
     /// availability-off clients.
     dead: BTreeMap<usize, DeadInfo>,
+    /// Clients whose worker-side checkpoint slot may lag the leader's
+    /// view: a NACK in flight (the worker may not have rolled back yet),
+    /// or a respawn that has not computed yet (empty slot). A journal
+    /// snapshot is ineligible until this drains. The slot is proven
+    /// current again by the client's next *collected* envelope — the
+    /// worker writes its dump before transmitting and the links are
+    /// FIFO, so a collected round-k envelope implies every earlier NACK
+    /// was already processed.
+    unsynced: BTreeSet<usize>,
     fault_casualty_count: u64,
     respawn_count: u64,
     /// Retained for respawning workers.
@@ -174,10 +184,41 @@ pub struct DistributedEngine {
     cum_sim_seconds: f64,
     cum_energy_joules: f64,
     history: RunHistory,
+    /// Run-journal sink (`--log` / `[runlog]`); `None` = journaling off.
+    log: Option<RunLog>,
 }
 
 impl DistributedEngine {
     pub fn from_config(cfg: &ExperimentConfig, run_seed: u64) -> Result<DistributedEngine> {
+        Self::from_config_inner(cfg, run_seed, None)
+    }
+
+    /// Rebuild a mid-run engine from journal-recovered worker state:
+    /// worker `i` is spawned from its `(strategy_state, rounds_computed)`
+    /// pair — strategy blob restored, deterministic batch/seed streams
+    /// fast-forwarded — exactly the respawn path, minus the deferred
+    /// NACK (a snapshot is only written with no rollback in flight). An
+    /// all-empty pair means the worker never computed and spawns fresh.
+    pub(crate) fn from_config_resumed(
+        cfg: &ExperimentConfig,
+        run_seed: u64,
+        workers: Vec<(Vec<u8>, u64)>,
+    ) -> Result<DistributedEngine> {
+        if workers.len() != cfg.fed.num_agents {
+            return Err(Error::invariant(format!(
+                "journal snapshot has {} worker states for {} agents",
+                workers.len(),
+                cfg.fed.num_agents
+            )));
+        }
+        Self::from_config_inner(cfg, run_seed, Some(workers))
+    }
+
+    fn from_config_inner(
+        cfg: &ExperimentConfig,
+        run_seed: u64,
+        resume: Option<Vec<(Vec<u8>, u64)>>,
+    ) -> Result<DistributedEngine> {
         cfg.validate()?;
         let (train, test) = load_data(cfg)?;
         let train = Arc::new(train);
@@ -202,6 +243,32 @@ impl DistributedEngine {
         }
 
         let plan = Arc::new(FaultPlan::new(cfg.faults.clone()));
+        let mut resume_states: Vec<Option<ResumeState>> = match resume {
+            None => (0..cfg.fed.num_agents).map(|_| None).collect(),
+            Some(ws) => ws
+                .into_iter()
+                .map(|(blob, rounds)| {
+                    (!blob.is_empty() || rounds > 0).then(|| ResumeState {
+                        checkpoint: WorkerCheckpoint {
+                            strategy_state: blob,
+                            rounds_computed: rounds,
+                        },
+                        nack_round: None,
+                    })
+                })
+                .collect(),
+        };
+        // a resumed worker's checkpoint slot must start out holding its
+        // resume state, exactly as the original run's slot did at the
+        // snapshot boundary (written at its last compute, read cloned)
+        // — otherwise a death *before its next compute* would respawn
+        // it fresh where the original respawned it from state. Seeded
+        // leader-side: the worker only writes the slot after receiving
+        // frames, none of which exist yet.
+        let seed_dumps: Vec<Option<WorkerCheckpoint>> = resume_states
+            .iter()
+            .map(|r| r.as_ref().map(|rs| rs.checkpoint.clone()))
+            .collect();
         let mut workers = Vec::with_capacity(cfg.fed.num_agents);
         for (id, shard) in partition.shards.iter().enumerate() {
             workers.push(spawn_worker(
@@ -211,8 +278,13 @@ impl DistributedEngine {
                 shard.clone(),
                 run_seed,
                 plan.clone(),
-                None,
+                resume_states[id].take(),
             ));
+        }
+        for (w, seed) in workers.iter().zip(seed_dumps) {
+            if let Some(ck) = seed {
+                *w.dump.lock().expect("checkpoint lock") = Some(ck);
+            }
         }
 
         Ok(DistributedEngine {
@@ -229,6 +301,7 @@ impl DistributedEngine {
             leader_backend,
             plan,
             dead: BTreeMap::new(),
+            unsynced: BTreeSet::new(),
             fault_casualty_count: 0,
             respawn_count: 0,
             shards: partition.shards.clone(),
@@ -243,25 +316,48 @@ impl DistributedEngine {
             cum_energy_joules: 0.0,
             workers,
             cfg: cfg.clone(),
+            log: None,
         })
     }
 
     /// Run all K rounds.
     pub fn run(&mut self) -> Result<RunHistory> {
-        let rounds = self.cfg.fed.rounds;
         log_info!(
             "distributed run: method={} workers={} K={} faults={}",
             self.cfg.fed.method.name(),
             self.workers.len(),
-            rounds,
+            self.cfg.fed.rounds,
             if self.plan.enabled() { "on" } else { "off" }
         );
-        for k in 0..rounds {
+        self.run_from(0)
+    }
+
+    /// Run rounds [start, rounds) — the resume entry point.
+    pub fn run_from(&mut self, start: usize) -> Result<RunHistory> {
+        let rounds = self.cfg.fed.rounds;
+        for k in start..rounds {
             let eval = k % self.cfg.fed.eval_every == 0 || k + 1 == rounds;
             self.run_round(k, eval)?;
         }
         self.shutdown();
+        if let Some(log) = self.log.as_mut() {
+            log.push(&Event::RunFinished {
+                rounds: rounds as u64,
+            })?;
+        }
         Ok(self.history.clone())
+    }
+
+    /// Attach a run-journal sink; every round from here on is logged.
+    pub fn set_runlog(&mut self, log: RunLog) {
+        self.log = Some(log);
+    }
+
+    /// Pre-seed the metric history with records recovered from a journal
+    /// — resume replays the pre-snapshot rounds without evaluating, so
+    /// their records come from the log verbatim.
+    pub fn seed_history(&mut self, records: Vec<RoundRecord>) {
+        self.history.records = records;
     }
 
     fn run_round(&mut self, k: usize, eval: bool) -> Result<()> {
@@ -275,12 +371,28 @@ impl DistributedEngine {
             avail.retain(|c| !self.dead.contains_key(c));
         }
         let active = self.sampler.select(&avail, self.simnet.profiles());
+        if let Some(log) = self.log.as_mut() {
+            log.push(&Event::RoundPlanned {
+                round: k as u64,
+                active: active.clone(),
+            })?;
+        }
         if active.is_empty() {
             if eval {
                 self.push_record(k, f64::NAN, host_t0)?;
             }
+            let record = if eval {
+                self.history.records.last().cloned()
+            } else {
+                None
+            };
+            self.log_round_close(k, &RoundReport::empty(), record, &[])?;
             return Ok(());
         }
+        // who dies *this* round (for the journal's `RoundClosed`): the
+        // dead set only grows between respawn points, so the delta is
+        // whatever was not present at round start
+        let dead_at_start: Vec<usize> = self.dead.keys().copied().collect();
         // unicast the round plan + model frame to the selected workers
         // only (an unselected worker never hears the round and keeps its
         // batch/seed streams untouched, exactly like the sequential
@@ -353,6 +465,9 @@ impl DistributedEngine {
             };
             match collected {
                 Some((up, loss)) => {
+                    // a collected envelope proves the worker's checkpoint
+                    // slot is current again (dump-before-send + FIFO)
+                    self.unsynced.remove(&c);
                     uplinks.push(Some(up));
                     losses.push(Some(loss));
                 }
@@ -464,6 +579,10 @@ impl DistributedEngine {
                 if !sent && !self.plan.enabled() {
                     return Err(Error::worker_lost(c, k));
                 }
+                // until this worker's next collected envelope, its
+                // checkpoint slot may or may not reflect the rollback —
+                // hold any journal snapshot until the ambiguity drains
+                self.unsynced.insert(c);
             }
         }
 
@@ -475,6 +594,215 @@ impl DistributedEngine {
                 self.dead.len()
             );
             self.push_record(k, train_loss, host_t0)?;
+        }
+        let record = if eval {
+            self.history.records.last().cloned()
+        } else {
+            None
+        };
+        let new_dead: Vec<usize> = self
+            .dead
+            .keys()
+            .copied()
+            .filter(|c| !dead_at_start.contains(c))
+            .collect();
+        self.log_round_close(k, &report, record, &new_dead)?;
+        Ok(())
+    }
+
+    /// Journal one round's close, plus a periodic snapshot when the
+    /// distributed state is quiescent: no dead workers awaiting respawn
+    /// and no checkpoint slot possibly lagging a NACK (`unsynced` empty)
+    /// — the only boundaries where (leader state, worker dumps) forms a
+    /// consistent cut a resume can rebuild from. A no-op when no sink is
+    /// attached.
+    fn log_round_close(
+        &mut self,
+        k: usize,
+        report: &RoundReport,
+        record: Option<RoundRecord>,
+        new_dead: &[usize],
+    ) -> Result<()> {
+        if self.log.is_none() {
+            return Ok(());
+        }
+        let close = RoundClose {
+            round: k as u64,
+            outcome: report.outcome.clone(),
+            round_seconds: report.round_seconds,
+            energy_joules: report.energy_joules,
+            uplink_bits: report.uplink_bits,
+            downlink_bits: report.downlink_bits,
+            bcast_seconds: report.bcast_seconds,
+            phase_start_seconds: report.phase_start_seconds,
+            ready_seconds: report.ready_seconds.clone(),
+            finish_seconds: report.finish_seconds.clone(),
+            new_dead: new_dead.to_vec(),
+            record,
+        };
+        let snapshot = ((k + 1) % self.cfg.runlog.snapshot_every == 0
+            && k + 1 < self.cfg.fed.rounds
+            && self.dead.is_empty()
+            && self.unsynced.is_empty())
+        .then(|| self.snapshot_event(k + 1));
+        let log = self.log.as_mut().expect("log presence checked above");
+        log.push(&Event::RoundClosed(Box::new(close)))?;
+        if let Some(snap) = snapshot {
+            log.push(&snap)?;
+        }
+        Ok(())
+    }
+
+    /// Full engine state at a quiescent round boundary: leader params +
+    /// strategy + counters, plus every worker's checkpoint slot (cloned,
+    /// not taken — the worker still owns it).
+    fn snapshot_event(&self, next_round: usize) -> Event {
+        let workers = self
+            .workers
+            .iter()
+            .map(|w| {
+                let d = w
+                    .dump
+                    .lock()
+                    .expect("checkpoint lock")
+                    .clone()
+                    .unwrap_or_default();
+                WorkerState {
+                    strategy_state: d.strategy_state,
+                    rounds_computed: d.rounds_computed,
+                }
+            })
+            .collect();
+        Event::Snapshot(Box::new(SnapshotState {
+            next_round: next_round as u64,
+            params: self.params.clone(),
+            strategy_state: self.strategy.save_state(),
+            cum_bits: self.cum_bits,
+            cum_downlink_bits: self.cum_downlink_bits,
+            cum_sim_seconds: self.cum_sim_seconds,
+            cum_energy_joules: self.cum_energy_joules,
+            workers,
+        }))
+    }
+
+    /// Restore leader-side optimization state from a journal snapshot
+    /// (the worker side rides in through [`Self::from_config_resumed`]).
+    pub(crate) fn restore_leader(&mut self, snap: &SnapshotState) -> Result<()> {
+        if snap.params.len() != self.params.len() {
+            return Err(Error::shape(format!(
+                "snapshot d={} != model d={}",
+                snap.params.len(),
+                self.params.len()
+            )));
+        }
+        self.params.copy_from_slice(&snap.params);
+        self.cum_bits = snap.cum_bits;
+        self.cum_downlink_bits = snap.cum_downlink_bits;
+        self.cum_sim_seconds = snap.cum_sim_seconds;
+        self.cum_energy_joules = snap.cum_energy_joules;
+        self.strategy.restore_state(&snap.strategy_state)?;
+        Ok(())
+    }
+
+    /// Replay round `k`'s leader-side stateful streams — availability,
+    /// selection (cross-checked against the journal's plan), fading /
+    /// battery / clock evolution, dead-set bookkeeping — without waking
+    /// any worker. `new_dead` comes from the journal: casualty *causes*
+    /// (a protocol refusal vs. an exhausted retry budget) are not
+    /// script-derivable, but given who died, every leader-side effect
+    /// is — the same outcome overrides and retransmission charges the
+    /// live round applied.
+    pub(crate) fn replay_round_streams(
+        &mut self,
+        k: usize,
+        expect_active: &[usize],
+        new_dead: &[usize],
+    ) -> Result<()> {
+        // respawn bookkeeping happens at round start on the live path
+        if !self.dead.is_empty() && self.plan.cfg().respawn {
+            self.respawn_count += self.dead.len() as u64;
+            self.dead.clear();
+        }
+        let mut avail = self.simnet.available(k as u64);
+        if !self.dead.is_empty() {
+            avail.retain(|c| !self.dead.contains_key(c));
+        }
+        let active = self.sampler.select(&avail, self.simnet.profiles());
+        if active != expect_active {
+            return Err(Error::invariant(format!(
+                "replay diverged at round {k}: journal planned {expect_active:?}, \
+                 recomputed {active:?} — journal/config mismatch"
+            )));
+        }
+        if active.is_empty() {
+            if !new_dead.is_empty() {
+                return Err(Error::invariant(format!(
+                    "journal marks workers dead in empty round {k}"
+                )));
+            }
+            return Ok(());
+        }
+        let up_bits = self.strategy.uplink_bits(self.params.len());
+        let down_bits = self.strategy.downlink_bits(self.params.len());
+        if self.plan.enabled() {
+            let budget = self.plan.cfg().retry_budget;
+            let scripts: Vec<ClientScript> = active
+                .iter()
+                .map(|&c| self.plan.client_script(k as u64, c as u32, budget))
+                .collect();
+            // "collected" is exactly "not newly dead" — identical
+            // override / extra-frame arithmetic to the live round
+            let outcome: Vec<Option<Delivery>> = active
+                .iter()
+                .zip(&scripts)
+                .map(|(c, s)| {
+                    if !new_dead.contains(c) {
+                        None
+                    } else if s.up_air_frames > 0 {
+                        Some(Delivery::TransmittedDropped)
+                    } else {
+                        Some(Delivery::NeverStarted)
+                    }
+                })
+                .collect();
+            let extra_uplink_frames: u64 = active
+                .iter()
+                .zip(&scripts)
+                .map(|(c, s)| {
+                    let collected = !new_dead.contains(c);
+                    s.up_air_frames.saturating_sub(collected as u32) as u64
+                })
+                .sum();
+            let extra_downlink_frames: u64 = scripts
+                .iter()
+                .map(|s| (s.model_air_frames - 1) as u64)
+                .sum();
+            self.simnet.run_round_faulty(
+                &active,
+                up_bits,
+                down_bits,
+                &RoundFaults {
+                    outcome,
+                    extra_uplink_frames,
+                    extra_downlink_frames,
+                },
+            );
+            for (i, &c) in active.iter().enumerate() {
+                if new_dead.contains(&c) {
+                    self.fault_casualty_count += 1;
+                    let script = &scripts[i];
+                    let needs_rollback =
+                        (script.computed && !script.delivered).then_some(k as u32);
+                    self.dead.insert(c, DeadInfo { needs_rollback });
+                }
+            }
+        } else {
+            if !new_dead.is_empty() {
+                return Err(Error::invariant(format!(
+                    "journal marks workers dead in round {k} but faults are off"
+                )));
+            }
+            self.simnet.run_round(&active, up_bits, down_bits);
         }
         Ok(())
     }
@@ -593,6 +921,9 @@ impl DistributedEngine {
             );
             self.workers[c] = fresh;
             self.respawn_count += 1;
+            // the fresh incarnation's checkpoint slot starts empty and
+            // only fills at its first compute — no snapshot until then
+            self.unsynced.insert(c);
             log_info!("worker {c}: respawned from checkpoint");
         }
     }
@@ -685,6 +1016,10 @@ fn spawn_worker(
     let (leader_ep, agent_ep) = duplex();
     let (tel_tx, tel_rx) = std::sync::mpsc::channel::<(u32, f32)>();
     let dump: Arc<Mutex<Option<WorkerCheckpoint>>> = Arc::new(Mutex::new(None));
+    // checkpoint slots serve two consumers — fault-layer respawn and
+    // journal snapshots; with neither in play the per-round save_state
+    // cost is not paid
+    let checkpointing = cfg.runlog.enabled() || (plan.enabled() && plan.cfg().respawn);
     let method = cfg.fed.method.clone();
     let (steps, batch, alpha) = (cfg.fed.local_steps, cfg.fed.batch_size, cfg.fed.alpha);
     let spec: ModelSpec = cfg.model.clone();
@@ -705,6 +1040,7 @@ fn spawn_worker(
             run_seed,
             worker_plan,
             worker_dump,
+            checkpointing,
             resume,
         );
     });
@@ -748,6 +1084,7 @@ fn worker_main(
     run_seed: u64,
     plan: Arc<FaultPlan>,
     dump: Arc<Mutex<Option<WorkerCheckpoint>>>,
+    checkpointing: bool,
     resume: Option<ResumeState>,
 ) {
     let mut backend = PureRustBackend::new(&spec);
@@ -759,9 +1096,6 @@ fn worker_main(
     // client-side
     let mut strategy = method.instantiate(SplitMix64::derive(run_seed ^ 0x9594, id as u64));
     let projected = matches!(strategy.local_stage(), LocalStage::Projected { .. });
-    // checkpoints exist only to serve respawn; without it (and in every
-    // fault-free run) the per-round save_state cost is not paid
-    let checkpointing = plan.enabled() && plan.cfg().respawn;
     let mut rounds_computed: u64 = 0;
     if let Some(res) = resume {
         if let Err(e) = strategy.restore_state(&res.checkpoint.strategy_state) {

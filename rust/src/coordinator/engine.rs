@@ -19,8 +19,9 @@ use crate::data::{dirichlet_partition, iid_partition, Dataset};
 use crate::error::{Error, Result};
 use crate::metrics::{RoundRecord, RunHistory};
 use crate::rng::SplitMix64;
+use crate::runlog::{Event, RoundClose, RunLog, SnapshotState};
 use crate::runtime::{Backend, ClientWorker, PureRustBackend, ScalarUpload, WorkerPool};
-use crate::simnet::{Sampler, SimNet};
+use crate::simnet::{RoundReport, Sampler, SimNet};
 use crate::{log_debug, log_info};
 use std::sync::Arc;
 use std::time::Instant;
@@ -60,6 +61,8 @@ pub struct Engine {
     /// AND — via [`Backend::set_worker_pool`] — by the backend's parallel
     /// `decode_all` reconstruction.
     pool: Option<Arc<WorkerPool>>,
+    /// Run-journal sink (`--log` / `[runlog]`); `None` = journaling off.
+    log: Option<RunLog>,
 }
 
 impl Engine {
@@ -146,7 +149,20 @@ impl Engine {
             workers: Vec::new(),
             workers_unavailable: false,
             pool,
+            log: None,
         })
+    }
+
+    /// Attach a run-journal sink; every round from here on is logged.
+    pub fn set_runlog(&mut self, log: RunLog) {
+        self.log = Some(log);
+    }
+
+    /// Pre-seed the metric history with records recovered from a journal
+    /// — resume replays the pre-snapshot rounds without evaluating, so
+    /// their records come from the log verbatim.
+    pub fn seed_history(&mut self, records: Vec<RoundRecord>) {
+        self.history.records = records;
     }
 
     /// Lazily grow the cached worker pool to `want` entries; false when
@@ -232,7 +248,48 @@ impl Engine {
             let eval = k % self.cfg.fed.eval_every == 0 || k + 1 == rounds;
             self.run_round(k, eval)?;
         }
+        if let Some(log) = self.log.as_mut() {
+            log.push(&Event::RunFinished {
+                rounds: rounds as u64,
+            })?;
+        }
         Ok(self.history.clone())
+    }
+
+    /// Replay round `k`'s leader-side stateful streams without computing
+    /// any gradients: availability, sampler selection (cross-checked
+    /// against the journal's `RoundPlanned`), per-client batch and
+    /// projection cursors, and the simnet's fading/battery/clock
+    /// evolution. `crate::runlog::replay` drives this for every round
+    /// below the snapshot, then [`Self::restore`]s the expensive state.
+    pub(crate) fn replay_round_streams(&mut self, k: usize, expect_active: &[usize]) -> Result<()> {
+        let (s, b) = (self.cfg.fed.local_steps, self.cfg.fed.batch_size);
+        let avail = self.simnet.available(k as u64);
+        let active = self.sampler.select(&avail, self.simnet.profiles());
+        if active != expect_active {
+            return Err(Error::invariant(format!(
+                "replay diverged at round {k}: journal planned {expect_active:?}, \
+                 recomputed {active:?} — journal/config mismatch"
+            )));
+        }
+        if active.is_empty() {
+            return Ok(());
+        }
+        let projected = matches!(self.strategy.local_stage(), LocalStage::Projected { .. });
+        for &ci in &active {
+            let c = &mut self.clients[ci];
+            c.fill_round_batches(s, b);
+            if projected {
+                c.next_projection_seed();
+            }
+        }
+        // bit accounting is a pure function of d (part of the
+        // determinism contract), so recomputing it here matches the
+        // original round's simnet arguments exactly
+        let up_bits = self.strategy.uplink_bits(self.params.len());
+        let down_bits = self.strategy.downlink_bits(self.params.len());
+        self.simnet.run_round(&active, up_bits, down_bits);
+        Ok(())
     }
 
     pub fn run_seed(&self) -> u64 {
@@ -257,10 +314,7 @@ impl Engine {
             self.cfg.fed.alpha,
             self.run_seed
         );
-        for k in 0..rounds {
-            let eval = k % self.cfg.fed.eval_every == 0 || k + 1 == rounds;
-            self.run_round(k, eval)?;
-        }
+        let out = self.run_from(0)?;
         log_info!(
             "run done: final acc={:.4} sim_time={:.1}s bits={:.3e} energy={:.2}J",
             self.history.final_accuracy(),
@@ -268,7 +322,7 @@ impl Engine {
             self.cum_bits,
             self.cum_energy_joules
         );
-        Ok(self.history.clone())
+        Ok(out)
     }
 
     /// One round: select -> broadcast -> local stages -> upload (simnet:
@@ -286,12 +340,24 @@ impl Engine {
         let avail = self.simnet.available(k as u64);
         let active = self.sampler.select(&avail, self.simnet.profiles());
         let k_active = active.len();
+        if let Some(log) = self.log.as_mut() {
+            log.push(&Event::RoundPlanned {
+                round: k as u64,
+                active: active.clone(),
+            })?;
+        }
         if k_active == 0 {
             // nobody reachable: the optimizer and the netsim both idle;
             // an eval round still measures the (unchanged) model
             if eval {
                 self.push_record(k, f64::NAN, host_t0)?;
             }
+            let record = if eval {
+                self.history.records.last().cloned()
+            } else {
+                None
+            };
+            self.log_round_close(k, &RoundReport::empty(), record)?;
             return Ok(());
         }
         let mut uplinks: Vec<Uplink> = Vec::with_capacity(k_active);
@@ -450,7 +516,66 @@ impl Engine {
             );
             self.push_record(k, train_loss, host_t0)?;
         }
+        let record = if eval {
+            self.history.records.last().cloned()
+        } else {
+            None
+        };
+        self.log_round_close(k, &report, record)?;
         Ok(())
+    }
+
+    /// Journal one round's close (plus a periodic snapshot); a no-op
+    /// when no sink is attached.
+    fn log_round_close(
+        &mut self,
+        k: usize,
+        report: &RoundReport,
+        record: Option<RoundRecord>,
+    ) -> Result<()> {
+        if self.log.is_none() {
+            return Ok(());
+        }
+        let close = RoundClose {
+            round: k as u64,
+            outcome: report.outcome.clone(),
+            round_seconds: report.round_seconds,
+            energy_joules: report.energy_joules,
+            uplink_bits: report.uplink_bits,
+            downlink_bits: report.downlink_bits,
+            bcast_seconds: report.bcast_seconds,
+            phase_start_seconds: report.phase_start_seconds,
+            ready_seconds: report.ready_seconds.clone(),
+            finish_seconds: report.finish_seconds.clone(),
+            new_dead: Vec::new(),
+            record,
+        };
+        // snapshot at the cadence boundary, skipping the final round
+        // (nothing left to resume)
+        let snapshot = ((k + 1) % self.cfg.runlog.snapshot_every == 0
+            && k + 1 < self.cfg.fed.rounds)
+            .then(|| self.snapshot_event(k + 1));
+        let log = self.log.as_mut().expect("log presence checked above");
+        log.push(&Event::RoundClosed(Box::new(close)))?;
+        if let Some(snap) = snapshot {
+            log.push(&snap)?;
+        }
+        Ok(())
+    }
+
+    /// Full sequential-engine state at a round boundary, as a journal
+    /// event. Mirrors [`Self::checkpoint`].
+    fn snapshot_event(&self, next_round: usize) -> Event {
+        Event::Snapshot(Box::new(SnapshotState {
+            next_round: next_round as u64,
+            params: self.params.clone(),
+            strategy_state: self.strategy.save_state(),
+            cum_bits: self.cum_bits,
+            cum_downlink_bits: self.cum_downlink_bits,
+            cum_sim_seconds: self.cum_sim_seconds,
+            cum_energy_joules: self.cum_energy_joules,
+            workers: Vec::new(),
+        }))
     }
 
     /// Evaluate and append one history record at the current counters.

@@ -54,6 +54,7 @@ pub mod metrics;
 pub mod netsim;
 pub mod nn;
 pub mod rng;
+pub mod runlog;
 pub mod runtime;
 pub mod simnet;
 pub mod tensor;

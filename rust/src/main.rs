@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train       run one federated training run and write its history CSV
+//!   resume      continue a crashed run from its journal, bit-identically
+//!   report      per-round bottleneck analysis from a run journal
 //!   suite       run the full four-method figure suite (Figs 2-6 data)
 //!   table1      print the paper's Table I (and the FedScalar counterpart)
 //!   strategies  list every registered strategy (name pattern + summary)
@@ -10,6 +12,9 @@
 //! Examples:
 //!   fedscalar train --method fedscalar-rademacher --rounds 200 --backend xla
 //!   fedscalar train --sampler uniform8 --availability churn0.2 --deadline 2.5
+//!   fedscalar train --log run.jsonl --engine distributed --fault-crash 0.01
+//!   fedscalar resume run.jsonl
+//!   fedscalar report run.jsonl
 //!   fedscalar suite --runs 10 --rounds 1500 --out results/
 //!   fedscalar strategies
 //!   fedscalar table1
@@ -53,6 +58,8 @@ fn usage() -> String {
      \n\
      COMMANDS:\n\
        train       one federated run (see `fedscalar train --help`)\n\
+       resume      continue a crashed run from its journal (`--log`)\n\
+       report      per-round bottleneck analysis from a run journal\n\
        suite       the four-method figure suite (Figs 2-6 data)\n\
        table1      print Table I (upload-time arithmetic)\n\
        strategies  list every registered strategy\n\
@@ -236,6 +243,8 @@ fn common_args(args: Args) -> Args {
 fn run_command(cmd: &str, rest: Vec<String>) -> Result<()> {
     match cmd {
         "train" => cmd_train(rest),
+        "resume" => cmd_resume(rest),
+        "report" => cmd_report(rest),
         "suite" => cmd_suite(rest),
         "table1" => cmd_table1(),
         "strategies" => cmd_strategies(),
@@ -258,10 +267,19 @@ fn cmd_train(rest: Vec<String>) -> Result<()> {
             "sequential",
             "round engine: sequential|distributed (threaded frame-passing; required for [faults])",
         )
+        .opt("log", "", "run-journal JSONL path (event log; enables `fedscalar resume`/`report`)")
+        .opt("snapshot-every", "50", "journal snapshot cadence in rounds")
         .parse(rest)?;
     let mut cfg = common_cfg(&a)?;
     cfg.fed.method = Method::parse(&a.get("method"))
         .ok_or_else(|| Error::config(format!("unknown method {:?}", a.get("method"))))?;
+    if a.provided("log") {
+        cfg.runlog.path = Some(PathBuf::from(a.get("log")));
+    }
+    if a.provided("snapshot-every") {
+        cfg.runlog.snapshot_every = a.get_usize("snapshot-every")?;
+        cfg.validate()?;
+    }
     let run_seed = a.get_u64("run-seed")?;
     let engine_name;
     let backend_name;
@@ -272,7 +290,13 @@ fn cmd_train(rest: Vec<String>) -> Result<()> {
             let be = make_backend(backend_kind, &cfg)?;
             engine_name = "sequential";
             backend_name = backend_kind.name();
-            Engine::from_config(&cfg, be, run_seed)?.run()?
+            let mut engine = Engine::from_config(&cfg, be, run_seed)?;
+            if let Some(path) = cfg.runlog.path.clone() {
+                let log =
+                    fedscalar::runlog::start_run(&path, engine_name, backend_name, run_seed, &cfg)?;
+                engine.set_runlog(log);
+            }
+            engine.run()?
         }
         "distributed" => {
             // distributed workers are pure-Rust only (PJRT handles are
@@ -285,6 +309,11 @@ fn cmd_train(rest: Vec<String>) -> Result<()> {
             engine_name = "distributed";
             backend_name = "pure-rust";
             let mut engine = DistributedEngine::from_config(&cfg, run_seed)?;
+            if let Some(path) = cfg.runlog.path.clone() {
+                let log =
+                    fedscalar::runlog::start_run(&path, engine_name, backend_name, run_seed, &cfg)?;
+                engine.set_runlog(log);
+            }
             let history = engine.run()?;
             if engine.fault_casualties() > 0 {
                 println!(
@@ -310,6 +339,54 @@ fn cmd_train(rest: Vec<String>) -> Result<()> {
         history.final_train_loss()
     );
     println!("history written to {out}");
+    Ok(())
+}
+
+fn cmd_resume(rest: Vec<String>) -> Result<()> {
+    let a = Args::new(
+        "fedscalar resume <log.jsonl>",
+        "replay a run journal and continue the run bit-identically",
+    )
+    .opt("out", "results/train.csv", "history CSV output path")
+    .opt(
+        "backend",
+        "",
+        "override the compute backend (sequential journals only: xla|pure-rust)",
+    )
+    .parse(rest)?;
+    let [path] = a.positionals() else {
+        return Err(Error::config(
+            "usage: fedscalar resume <log.jsonl> [--out csv] [--backend b]",
+        ));
+    };
+    let backend = a.provided("backend").then(|| a.get("backend"));
+    let r = fedscalar::runlog::replay::resume_run(path, backend.as_deref())?;
+    let out = a.get("out");
+    r.history.write_csv(&out)?;
+    println!(
+        "resumed at round {}: method={} engine={} backend={} final_acc={:.4} final_train_loss={:.4}",
+        r.resumed_at,
+        r.method,
+        r.engine,
+        r.backend,
+        r.history.final_accuracy(),
+        r.history.final_train_loss()
+    );
+    println!("history written to {out}");
+    Ok(())
+}
+
+fn cmd_report(rest: Vec<String>) -> Result<()> {
+    let a = Args::new(
+        "fedscalar report <log.jsonl>",
+        "per-round phase breakdown + critical-path clients from a run journal",
+    )
+    .parse(rest)?;
+    let [path] = a.positionals() else {
+        return Err(Error::config("usage: fedscalar report <log.jsonl>"));
+    };
+    let journal = fedscalar::runlog::Journal::parse_file(path)?;
+    print!("{}", fedscalar::runlog::report::render(&journal));
     Ok(())
 }
 

@@ -2,7 +2,7 @@
 
 use crate::rng::{GaussianSource, Xoshiro256};
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ChannelConfig {
     /// Nominal uplink bandwidth in bits/second (paper §III: 0.1 Mbps).
     pub nominal_bps: f64,

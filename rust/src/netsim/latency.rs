@@ -8,7 +8,7 @@
 
 use super::Schedule;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LatencyConfig {
     /// T_other as a fraction of the FedAvg per-round upload time.
     pub t_other_frac: f64,

@@ -27,7 +27,7 @@ pub use latency::{round_wall_time, upload_seconds, LatencyConfig};
 pub use schedule::Schedule;
 
 /// Full network model configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct NetworkConfig {
     pub channel: ChannelConfig,
     pub schedule: Schedule,

@@ -1,0 +1,602 @@
+//! The versioned journal event vocabulary: one event per JSONL line.
+//!
+//! Every line is an object `{"v": 1, "ev": "<type>", ...}`. The schema
+//! version `v` covers the whole vocabulary: a reader accepts any `v` up to
+//! its own [`SCHEMA_VERSION`] (same-version readers know every event type,
+//! so an unknown `ev` is corruption, not a forward-compat case) and
+//! refuses newer journals outright. Additive changes that old readers may
+//! safely ignore do NOT bump the version; anything a replay must not
+//! silently miss does.
+//!
+//! Wire spellings: floats print through the bit-exact JSON writer
+//! ([`super::json`]); non-finite floats are `null` (read back as NaN);
+//! byte blobs (strategy state) and `f32` parameter vectors ride as
+//! lowercase hex of their little-endian bytes; `Delivery` outcomes
+//! compress to one-letter codes `"D"`/`"T"`/`"N"`.
+
+use super::json::{self, Json};
+use crate::error::{Error, Result};
+use crate::metrics::RoundRecord;
+use crate::simnet::Delivery;
+
+/// Version written to every event line by this build.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Run preamble: everything needed to rebuild the engine from scratch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunStarted {
+    /// `"sequential"` or `"distributed"`.
+    pub engine: String,
+    /// Backend name as printed by `BackendKind::name()`.
+    pub backend: String,
+    pub run_seed: u64,
+    /// The full experiment config, serialized through
+    /// `ExperimentConfig::to_toml_string` — replay re-parses it.
+    pub config_toml: String,
+}
+
+/// Everything one closed round contributes to replay and reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundClose {
+    pub round: u64,
+    /// Per-active-slot delivery outcome, in `RoundPlanned.active` order.
+    pub outcome: Vec<Delivery>,
+    pub round_seconds: f64,
+    pub energy_joules: f64,
+    pub uplink_bits: u64,
+    pub downlink_bits: u64,
+    /// Phase timings captured by the simnet (see `RoundReport`).
+    pub bcast_seconds: f64,
+    pub phase_start_seconds: f64,
+    /// Per-slot compute-finish time; NaN for clients that never computed.
+    pub ready_seconds: Vec<f64>,
+    /// Per-slot would-be upload-finish time; NaN for non-transmitting slots.
+    pub finish_seconds: Vec<f64>,
+    /// Clients that died this round (distributed fault layer) — refusals
+    /// are not script-derivable, so replay needs the recorded ids.
+    pub new_dead: Vec<usize>,
+    /// The evaluated metrics record, present on eval rounds only.
+    pub record: Option<RoundRecord>,
+}
+
+/// One worker's resume state inside a [`SnapshotState`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerState {
+    pub strategy_state: Vec<u8>,
+    pub rounds_computed: u64,
+}
+
+/// Periodic full-state snapshot: replay fast-forwards the cheap streams
+/// (RNG, clocks, batteries) and restores the expensive state from here.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotState {
+    /// The first round NOT covered by this snapshot.
+    pub next_round: u64,
+    pub params: Vec<f32>,
+    /// Server-side strategy blob (`Strategy::save_state`).
+    pub strategy_state: Vec<u8>,
+    pub cum_bits: f64,
+    pub cum_downlink_bits: f64,
+    pub cum_sim_seconds: f64,
+    pub cum_energy_joules: f64,
+    /// Per-client worker state; empty for the sequential engine.
+    pub workers: Vec<WorkerState>,
+}
+
+/// One journal event — one line in the log file.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    RunStarted(RunStarted),
+    RoundPlanned { round: u64, active: Vec<usize> },
+    RoundClosed(Box<RoundClose>),
+    Snapshot(Box<SnapshotState>),
+    RunResumed { at_round: u64 },
+    RunFinished { rounds: u64 },
+}
+
+impl Event {
+    /// Serialize to one JSONL line (no trailing newline).
+    pub fn encode(&self) -> String {
+        self.to_json().to_json_string()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields: Vec<(String, Json)> = vec![
+            ("v".into(), unum(SCHEMA_VERSION)),
+            ("ev".into(), Json::Str(self.name().into())),
+        ];
+        match self {
+            Event::RunStarted(s) => {
+                fields.push(("engine".into(), Json::Str(s.engine.clone())));
+                fields.push(("backend".into(), Json::Str(s.backend.clone())));
+                fields.push(("run_seed".into(), unum(s.run_seed)));
+                fields.push(("config_toml".into(), Json::Str(s.config_toml.clone())));
+            }
+            Event::RoundPlanned { round, active } => {
+                fields.push(("round".into(), unum(*round)));
+                fields.push(("active".into(), usize_arr_json(active)));
+            }
+            Event::RoundClosed(c) => {
+                fields.push(("round".into(), unum(c.round)));
+                let codes = c
+                    .outcome
+                    .iter()
+                    .map(|d| Json::Str(delivery_code(*d).into()))
+                    .collect();
+                fields.push(("outcome".into(), Json::Arr(codes)));
+                fields.push(("round_seconds".into(), Json::Num(c.round_seconds)));
+                fields.push(("energy_joules".into(), Json::Num(c.energy_joules)));
+                fields.push(("uplink_bits".into(), unum(c.uplink_bits)));
+                fields.push(("downlink_bits".into(), unum(c.downlink_bits)));
+                fields.push(("bcast_seconds".into(), Json::Num(c.bcast_seconds)));
+                fields.push((
+                    "phase_start_seconds".into(),
+                    Json::Num(c.phase_start_seconds),
+                ));
+                fields.push(("ready_seconds".into(), f64_arr_json(&c.ready_seconds)));
+                fields.push(("finish_seconds".into(), f64_arr_json(&c.finish_seconds)));
+                if !c.new_dead.is_empty() {
+                    fields.push(("new_dead".into(), usize_arr_json(&c.new_dead)));
+                }
+                if let Some(r) = &c.record {
+                    fields.push(("record".into(), record_json(r)));
+                }
+            }
+            Event::Snapshot(s) => {
+                fields.push(("next_round".into(), unum(s.next_round)));
+                fields.push(("params".into(), Json::Str(params_encode(&s.params))));
+                fields.push((
+                    "strategy_state".into(),
+                    Json::Str(hex_encode(&s.strategy_state)),
+                ));
+                fields.push(("cum_bits".into(), Json::Num(s.cum_bits)));
+                fields.push(("cum_downlink_bits".into(), Json::Num(s.cum_downlink_bits)));
+                fields.push(("cum_sim_seconds".into(), Json::Num(s.cum_sim_seconds)));
+                fields.push(("cum_energy_joules".into(), Json::Num(s.cum_energy_joules)));
+                let workers = s
+                    .workers
+                    .iter()
+                    .map(|w| {
+                        Json::Obj(vec![
+                            (
+                                "strategy_state".into(),
+                                Json::Str(hex_encode(&w.strategy_state)),
+                            ),
+                            ("rounds_computed".into(), unum(w.rounds_computed)),
+                        ])
+                    })
+                    .collect();
+                fields.push(("workers".into(), Json::Arr(workers)));
+            }
+            Event::RunResumed { at_round } => {
+                fields.push(("at_round".into(), unum(*at_round)));
+            }
+            Event::RunFinished { rounds } => {
+                fields.push(("rounds".into(), unum(*rounds)));
+            }
+        }
+        Json::Obj(fields)
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            Event::RunStarted(_) => "RunStarted",
+            Event::RoundPlanned { .. } => "RoundPlanned",
+            Event::RoundClosed(_) => "RoundClosed",
+            Event::Snapshot(_) => "Snapshot",
+            Event::RunResumed { .. } => "RunResumed",
+            Event::RunFinished { .. } => "RunFinished",
+        }
+    }
+
+    /// Parse one JSONL line.
+    pub fn decode(line: &str) -> Result<Event> {
+        let j = json::parse(line)?;
+        let v = u64_of(&j, "v")?;
+        if v > SCHEMA_VERSION {
+            return Err(Error::config(format!(
+                "journal schema v{v} is newer than this build (v{SCHEMA_VERSION}) — \
+                 upgrade fedscalar to read it"
+            )));
+        }
+        let ev = str_of(&j, "ev")?;
+        match ev.as_str() {
+            "RunStarted" => Ok(Event::RunStarted(RunStarted {
+                engine: str_of(&j, "engine")?,
+                backend: str_of(&j, "backend")?,
+                run_seed: u64_of(&j, "run_seed")?,
+                config_toml: str_of(&j, "config_toml")?,
+            })),
+            "RoundPlanned" => Ok(Event::RoundPlanned {
+                round: u64_of(&j, "round")?,
+                active: usize_arr_of(&j, "active")?,
+            }),
+            "RoundClosed" => {
+                let outcome = field(&j, "outcome")?
+                    .as_arr()
+                    .ok_or_else(|| bad_field("outcome"))?
+                    .iter()
+                    .map(|item| {
+                        item.as_str()
+                            .ok_or_else(|| bad_field("outcome"))
+                            .and_then(delivery_parse)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let record = match j.get("record") {
+                    Some(r) => Some(record_parse(r)?),
+                    None => None,
+                };
+                Ok(Event::RoundClosed(Box::new(RoundClose {
+                    round: u64_of(&j, "round")?,
+                    outcome,
+                    round_seconds: f64_of(&j, "round_seconds")?,
+                    energy_joules: f64_of(&j, "energy_joules")?,
+                    uplink_bits: u64_of(&j, "uplink_bits")?,
+                    downlink_bits: u64_of(&j, "downlink_bits")?,
+                    bcast_seconds: f64_of(&j, "bcast_seconds")?,
+                    phase_start_seconds: f64_of(&j, "phase_start_seconds")?,
+                    ready_seconds: f64_arr_of(&j, "ready_seconds")?,
+                    finish_seconds: f64_arr_of(&j, "finish_seconds")?,
+                    new_dead: match j.get("new_dead") {
+                        Some(_) => usize_arr_of(&j, "new_dead")?,
+                        None => Vec::new(),
+                    },
+                    record,
+                })))
+            }
+            "Snapshot" => {
+                let workers = field(&j, "workers")?
+                    .as_arr()
+                    .ok_or_else(|| bad_field("workers"))?
+                    .iter()
+                    .map(|w| {
+                        Ok(WorkerState {
+                            strategy_state: hex_decode(&str_of(w, "strategy_state")?)?,
+                            rounds_computed: u64_of(w, "rounds_computed")?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Event::Snapshot(Box::new(SnapshotState {
+                    next_round: u64_of(&j, "next_round")?,
+                    params: params_decode(&str_of(&j, "params")?)?,
+                    strategy_state: hex_decode(&str_of(&j, "strategy_state")?)?,
+                    cum_bits: f64_of(&j, "cum_bits")?,
+                    cum_downlink_bits: f64_of(&j, "cum_downlink_bits")?,
+                    cum_sim_seconds: f64_of(&j, "cum_sim_seconds")?,
+                    cum_energy_joules: f64_of(&j, "cum_energy_joules")?,
+                    workers,
+                })))
+            }
+            "RunResumed" => Ok(Event::RunResumed {
+                at_round: u64_of(&j, "at_round")?,
+            }),
+            "RunFinished" => Ok(Event::RunFinished {
+                rounds: u64_of(&j, "rounds")?,
+            }),
+            other => Err(Error::invariant(format!(
+                "journal v{v} contains unknown event `{other}` — corrupt or hand-edited log"
+            ))),
+        }
+    }
+}
+
+fn delivery_code(d: Delivery) -> &'static str {
+    match d {
+        Delivery::Delivered => "D",
+        Delivery::TransmittedDropped => "T",
+        Delivery::NeverStarted => "N",
+    }
+}
+
+fn delivery_parse(code: &str) -> Result<Delivery> {
+    match code {
+        "D" => Ok(Delivery::Delivered),
+        "T" => Ok(Delivery::TransmittedDropped),
+        "N" => Ok(Delivery::NeverStarted),
+        other => Err(Error::invariant(format!(
+            "journal: unknown delivery code `{other}`"
+        ))),
+    }
+}
+
+fn record_json(r: &RoundRecord) -> Json {
+    Json::Obj(vec![
+        ("round".into(), unum(r.round as u64)),
+        ("train_loss".into(), Json::Num(r.train_loss)),
+        ("test_loss".into(), Json::Num(r.test_loss)),
+        ("test_acc".into(), Json::Num(r.test_acc)),
+        ("cum_bits".into(), Json::Num(r.cum_bits)),
+        ("cum_downlink_bits".into(), Json::Num(r.cum_downlink_bits)),
+        ("cum_sim_seconds".into(), Json::Num(r.cum_sim_seconds)),
+        ("cum_energy_joules".into(), Json::Num(r.cum_energy_joules)),
+        ("host_ms".into(), Json::Num(r.host_ms)),
+    ])
+}
+
+fn record_parse(j: &Json) -> Result<RoundRecord> {
+    Ok(RoundRecord {
+        round: usize_of(j, "round")?,
+        train_loss: f64_of(j, "train_loss")?,
+        test_loss: f64_of(j, "test_loss")?,
+        test_acc: f64_of(j, "test_acc")?,
+        cum_bits: f64_of(j, "cum_bits")?,
+        cum_downlink_bits: f64_of(j, "cum_downlink_bits")?,
+        cum_sim_seconds: f64_of(j, "cum_sim_seconds")?,
+        cum_energy_joules: f64_of(j, "cum_energy_joules")?,
+        host_ms: f64_of(j, "host_ms")?,
+    })
+}
+
+// --- field accessors -----------------------------------------------------
+
+fn bad_field(key: &str) -> Error {
+    Error::invariant(format!("journal event: bad or missing field `{key}`"))
+}
+
+fn field<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| bad_field(key))
+}
+
+fn f64_of(j: &Json, key: &str) -> Result<f64> {
+    field(j, key)?.as_f64().ok_or_else(|| bad_field(key))
+}
+
+fn u64_of(j: &Json, key: &str) -> Result<u64> {
+    let v = f64_of(j, key)?;
+    if (0.0..=9.007_199_254_740_992e15).contains(&v) && v.fract() == 0.0 {
+        Ok(v as u64)
+    } else {
+        Err(bad_field(key))
+    }
+}
+
+fn usize_of(j: &Json, key: &str) -> Result<usize> {
+    Ok(u64_of(j, key)? as usize)
+}
+
+fn str_of(j: &Json, key: &str) -> Result<String> {
+    Ok(field(j, key)?
+        .as_str()
+        .ok_or_else(|| bad_field(key))?
+        .to_string())
+}
+
+fn f64_arr_of(j: &Json, key: &str) -> Result<Vec<f64>> {
+    field(j, key)?
+        .as_arr()
+        .ok_or_else(|| bad_field(key))?
+        .iter()
+        .map(|item| item.as_f64().ok_or_else(|| bad_field(key)))
+        .collect()
+}
+
+fn usize_arr_of(j: &Json, key: &str) -> Result<Vec<usize>> {
+    field(j, key)?
+        .as_arr()
+        .ok_or_else(|| bad_field(key))?
+        .iter()
+        .map(|item| match item.as_f64() {
+            Some(v) if v >= 0.0 && v.fract() == 0.0 => Ok(v as usize),
+            _ => Err(bad_field(key)),
+        })
+        .collect()
+}
+
+fn unum(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn f64_arr_json(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+}
+
+fn usize_arr_json(v: &[usize]) -> Json {
+    Json::Arr(v.iter().map(|&x| unum(x as u64)).collect())
+}
+
+// --- hex blobs -----------------------------------------------------------
+
+pub fn hex_encode(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        let _ = std::fmt::Write::write_fmt(&mut out, format_args!("{b:02x}"));
+    }
+    out
+}
+
+pub fn hex_decode(s: &str) -> Result<Vec<u8>> {
+    let b = s.as_bytes();
+    if b.len() % 2 != 0 {
+        return Err(Error::invariant("journal: odd-length hex blob"));
+    }
+    let nib = |c: u8| -> Result<u8> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(Error::invariant("journal: non-hex byte in blob")),
+        }
+    };
+    b.chunks_exact(2)
+        .map(|pair| Ok((nib(pair[0])? << 4) | nib(pair[1])?))
+        .collect()
+}
+
+fn params_encode(params: &[f32]) -> String {
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for p in params {
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+    hex_encode(&bytes)
+}
+
+fn params_decode(s: &str) -> Result<Vec<f32>> {
+    let bytes = hex_decode(s)?;
+    if bytes.len() % 4 != 0 {
+        return Err(Error::invariant("journal: params blob not a multiple of 4"));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(ev: &Event) -> Event {
+        Event::decode(&ev.encode()).expect("event round-trip")
+    }
+
+    fn sample_record(round: usize, train_loss: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss,
+            test_loss: 0.1 + 0.2,
+            test_acc: 1.0 / 3.0,
+            cum_bits: 1.25e7,
+            cum_downlink_bits: 9.6e8,
+            cum_sim_seconds: 488.123456789,
+            cum_energy_joules: 20.4,
+            host_ms: 3.25,
+        }
+    }
+
+    #[test]
+    fn run_started_round_trips() {
+        let ev = Event::RunStarted(RunStarted {
+            engine: "sequential".into(),
+            backend: "pure-rust".into(),
+            run_seed: 0xdead_beef,
+            config_toml: "[fed]\nnum_agents = 6\nmethod = \"topk16\"\n".into(),
+        });
+        assert_eq!(roundtrip(&ev), ev);
+    }
+
+    #[test]
+    fn round_planned_round_trips() {
+        let ev = Event::RoundPlanned {
+            round: 7,
+            active: vec![0, 3, 5],
+        };
+        assert_eq!(roundtrip(&ev), ev);
+        let empty = Event::RoundPlanned {
+            round: 8,
+            active: vec![],
+        };
+        assert_eq!(roundtrip(&empty), empty);
+    }
+
+    #[test]
+    fn round_closed_round_trips_including_nans() {
+        let ev = Event::RoundClosed(Box::new(RoundClose {
+            round: 12,
+            outcome: vec![
+                Delivery::Delivered,
+                Delivery::TransmittedDropped,
+                Delivery::NeverStarted,
+            ],
+            round_seconds: 3.0625,
+            energy_joules: 0.75,
+            uplink_bits: 1234,
+            downlink_bits: 567_890,
+            bcast_seconds: 0.5,
+            phase_start_seconds: 1.5,
+            ready_seconds: vec![1.25, 1.5, f64::NAN],
+            finish_seconds: vec![2.0, f64::NAN, f64::NAN],
+            new_dead: vec![4],
+            record: Some(sample_record(12, f64::NAN)),
+        }));
+        let back = roundtrip(&ev);
+        let (a, b) = match (&ev, &back) {
+            (Event::RoundClosed(a), Event::RoundClosed(b)) => (a, b),
+            _ => panic!("variant changed"),
+        };
+        assert_eq!(a.outcome, b.outcome);
+        assert_eq!(a.new_dead, b.new_dead);
+        assert!(b.ready_seconds[2].is_nan() && b.finish_seconds[1].is_nan());
+        assert_eq!(a.ready_seconds[..2], b.ready_seconds[..2]);
+        let (ra, rb) = (a.record.as_ref().unwrap(), b.record.as_ref().unwrap());
+        assert!(rb.train_loss.is_nan());
+        assert_eq!(ra.test_loss.to_bits(), rb.test_loss.to_bits());
+        assert_eq!(ra.cum_sim_seconds.to_bits(), rb.cum_sim_seconds.to_bits());
+    }
+
+    #[test]
+    fn round_closed_minimal_omits_optional_fields() {
+        let ev = Event::RoundClosed(Box::new(RoundClose {
+            round: 0,
+            outcome: vec![],
+            round_seconds: 0.0,
+            energy_joules: 0.0,
+            uplink_bits: 0,
+            downlink_bits: 0,
+            bcast_seconds: 0.0,
+            phase_start_seconds: 0.0,
+            ready_seconds: vec![],
+            finish_seconds: vec![],
+            new_dead: vec![],
+            record: None,
+        }));
+        let line = ev.encode();
+        assert!(!line.contains("new_dead") && !line.contains("record"));
+        assert_eq!(roundtrip(&ev), ev);
+    }
+
+    #[test]
+    fn snapshot_round_trips_params_bit_exact() {
+        let ev = Event::Snapshot(Box::new(SnapshotState {
+            next_round: 10,
+            params: vec![0.1f32, -2.5, f32::MIN_POSITIVE, 1.0e30],
+            strategy_state: vec![0, 1, 254, 255, 16],
+            cum_bits: 1e7 + 0.5,
+            cum_downlink_bits: 2.0,
+            cum_sim_seconds: 3.0,
+            cum_energy_joules: 4.0,
+            workers: vec![
+                WorkerState {
+                    strategy_state: vec![],
+                    rounds_computed: 0,
+                },
+                WorkerState {
+                    strategy_state: vec![9, 8, 7],
+                    rounds_computed: 5,
+                },
+            ],
+        }));
+        assert_eq!(roundtrip(&ev), ev);
+    }
+
+    #[test]
+    fn resume_and_finish_round_trip() {
+        for ev in [
+            Event::RunResumed { at_round: 15 },
+            Event::RunFinished { rounds: 24 },
+        ] {
+            assert_eq!(roundtrip(&ev), ev);
+        }
+    }
+
+    #[test]
+    fn newer_schema_version_is_refused() {
+        let line = r#"{"v":999,"ev":"RunFinished","rounds":1}"#;
+        let err = Event::decode(line).unwrap_err().to_string();
+        assert!(err.contains("newer"), "got: {err}");
+    }
+
+    #[test]
+    fn unknown_event_and_missing_fields_error() {
+        assert!(Event::decode(r#"{"v":1,"ev":"Mystery"}"#).is_err());
+        assert!(Event::decode(r#"{"v":1,"ev":"RunResumed"}"#).is_err());
+        assert!(Event::decode(r#"{"ev":"RunFinished","rounds":1}"#).is_err());
+    }
+
+    #[test]
+    fn hex_blob_round_trips_and_rejects_garbage() {
+        let all: Vec<u8> = (0..=255).collect();
+        assert_eq!(hex_decode(&hex_encode(&all)).unwrap(), all);
+        assert!(hex_decode("abc").is_err());
+        assert!(hex_decode("zz").is_err());
+    }
+}

@@ -1,0 +1,442 @@
+//! Minimal JSON reader/writer for the run journal — zero dependencies.
+//!
+//! The journal needs exactly one property from its encoding: **bit-exact
+//! float round-trips**. Rust's `f64` `Display` prints the shortest string
+//! that parses back to the same bits, and `str::parse::<f64>` is correctly
+//! rounded, so `Num(v)` survives write→parse unchanged for every finite
+//! `v`. Non-finite values are written as `null` (JSON has no NaN) and read
+//! back as NaN via [`Json::as_f64`]; the only non-finite float the journal
+//! carries is an unevaluated `train_loss`, where NaN is the sentinel and
+//! the distinction from ±inf is irrelevant.
+//!
+//! Integers ride in `Num` too — every counter in the journal (rounds,
+//! bits, client ids) is far below 2^53, where `f64` is exact.
+
+use crate::error::{Error, Result};
+use std::fmt::Write as _;
+
+/// A parsed JSON value. Objects keep insertion order (`Vec`, linear
+/// lookup) — journal objects have a handful of keys.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup; `None` for missing keys or non-objects.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric value; `Null` reads as NaN (the writer's spelling of a
+    /// non-finite float).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            Json::Null => Some(f64::NAN),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Serialize to a single line (no pretty-printing, no trailing
+    /// newline).
+    pub fn to_json_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if v.is_finite() {
+                    // f64 Display: shortest round-trip, never exponent form.
+                    let _ = write!(out, "{v}");
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse one JSON value; trailing non-whitespace is an error.
+pub fn parse(s: &str) -> Result<Json> {
+    let mut p = Parser {
+        bytes: s.as_bytes(),
+        pos: 0,
+    };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(bad("trailing bytes after JSON value"));
+    }
+    Ok(v)
+}
+
+fn bad(msg: &str) -> Error {
+    Error::invariant(format!("journal JSON: {msg}"))
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while matches!(self.bytes.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, byte: u8, what: &str) -> Result<()> {
+        if self.peek() == Some(byte) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(bad(what))
+        }
+    }
+
+    fn literal(&mut self, lit: &str, value: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(value)
+        } else {
+            Err(bad("unrecognized literal"))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(bad("truncated or malformed value")),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{', "expected '{'")?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':', "expected ':' after object key")?;
+            self.skip_ws();
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(bad("expected ',' or '}' in object")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[', "expected '['")?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(bad("expected ',' or ']' in array")),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| bad("invalid utf-8 in number"))?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| bad("malformed number"))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"', "expected '\"'")?;
+        let mut out = String::new();
+        loop {
+            // Copy the raw span up to the next delimiter in one push — the
+            // input is valid UTF-8 and both delimiters are ASCII, so the
+            // span boundaries never split a multibyte sequence.
+            let start = self.pos;
+            while !matches!(self.peek(), Some(b'"' | b'\\') | None) {
+                self.pos += 1;
+            }
+            if self.pos > start {
+                let chunk = std::str::from_utf8(&self.bytes[start..self.pos])
+                    .map_err(|_| bad("invalid utf-8 in string"))?;
+                out.push_str(chunk);
+            }
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    self.escape(&mut out)?;
+                }
+                _ => return Err(bad("unterminated string")),
+            }
+        }
+    }
+
+    fn escape(&mut self, out: &mut String) -> Result<()> {
+        let c = self.peek().ok_or_else(|| bad("truncated escape"))?;
+        self.pos += 1;
+        match c {
+            b'"' => out.push('"'),
+            b'\\' => out.push('\\'),
+            b'/' => out.push('/'),
+            b'b' => out.push('\u{0008}'),
+            b'f' => out.push('\u{000c}'),
+            b'n' => out.push('\n'),
+            b'r' => out.push('\r'),
+            b't' => out.push('\t'),
+            b'u' => {
+                let hi = self.hex4()?;
+                let code = if (0xd800..0xdc00).contains(&hi) {
+                    // High surrogate: a \uXXXX low surrogate must follow.
+                    self.eat(b'\\', "expected low surrogate")?;
+                    self.eat(b'u', "expected low surrogate")?;
+                    let lo = self.hex4()?;
+                    if !(0xdc00..0xe000).contains(&lo) {
+                        return Err(bad("invalid low surrogate"));
+                    }
+                    0x10000 + ((hi - 0xd800) << 10) + (lo - 0xdc00)
+                } else {
+                    hi
+                };
+                out.push(char::from_u32(code).ok_or_else(|| bad("invalid codepoint"))?);
+            }
+            _ => return Err(bad("unknown escape")),
+        }
+        Ok(())
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let end = self.pos.checked_add(4).filter(|&e| e <= self.bytes.len());
+        let end = end.ok_or_else(|| bad("truncated \\u escape"))?;
+        let text = std::str::from_utf8(&self.bytes[self.pos..end])
+            .map_err(|_| bad("invalid \\u escape"))?;
+        let v = u32::from_str_radix(text, 16).map_err(|_| bad("invalid \\u escape"))?;
+        self.pos = end;
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(j: &Json) -> Json {
+        parse(&j.to_json_string()).expect("round-trip parse")
+    }
+
+    #[test]
+    fn floats_round_trip_bit_exact() {
+        for v in [
+            0.0,
+            -0.0,
+            0.1 + 0.2,
+            1.0 / 3.0,
+            std::f64::consts::PI,
+            1e-300,
+            -2.2250738585072014e-308,
+            f64::MAX,
+            9_007_199_254_740_991.0, // 2^53 - 1
+            123456.789e3,
+        ] {
+            let back = roundtrip(&Json::Num(v));
+            match back {
+                Json::Num(b) => assert_eq!(b.to_bits(), v.to_bits(), "value {v}"),
+                other => panic!("expected Num, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn non_finite_floats_write_null_and_read_nan() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let s = Json::Num(v).to_json_string();
+            assert_eq!(s, "null");
+            let back = parse(&s).unwrap();
+            assert!(back.as_f64().unwrap().is_nan());
+        }
+    }
+
+    #[test]
+    fn strings_escape_and_round_trip() {
+        for s in [
+            "plain",
+            "with \"quotes\" and \\backslash\\",
+            "newline\nand\ttab\rand\u{0001}ctrl",
+            "unicode: żółć 😀 → λ",
+            "",
+        ] {
+            let back = roundtrip(&Json::Str(s.to_string()));
+            assert_eq!(back, Json::Str(s.to_string()));
+        }
+    }
+
+    #[test]
+    fn surrogate_pairs_parse() {
+        let j = parse(r#""😀""#).unwrap();
+        assert_eq!(j, Json::Str("😀".to_string()));
+        assert!(parse(r#""\ud83d""#).is_err(), "lone high surrogate");
+        assert!(parse(r#""\ud83dA""#).is_err(), "bad low surrogate");
+    }
+
+    #[test]
+    fn nested_structures_round_trip() {
+        let j = Json::Obj(vec![
+            ("v".to_string(), Json::Num(1.0)),
+            (
+                "arr".to_string(),
+                Json::Arr(vec![Json::Null, Json::Bool(true), Json::Str("x".into())]),
+            ),
+            ("empty_obj".to_string(), Json::Obj(vec![])),
+            ("empty_arr".to_string(), Json::Arr(vec![])),
+        ]);
+        assert_eq!(roundtrip(&j), j);
+    }
+
+    #[test]
+    fn object_lookup_preserves_order_and_finds_keys() {
+        let j = parse(r#"{"a": 1, "b": [2, 3], "c": "s"}"#).unwrap();
+        assert_eq!(j.get("a").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("b").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+        assert_eq!(j.get("c").and_then(Json::as_str), Some("s"));
+        assert!(j.get("missing").is_none());
+    }
+
+    #[test]
+    fn truncated_and_malformed_inputs_error() {
+        for s in [
+            "",
+            "{",
+            "{\"a\":",
+            "[1, 2",
+            "\"unterminated",
+            "{\"a\" 1}",
+            "nul",
+            "1.2.3",
+            "{} trailing",
+            "\"bad \\q escape\"",
+        ] {
+            assert!(parse(s).is_err(), "input {s:?} should fail");
+        }
+    }
+
+    #[test]
+    fn integers_print_without_fraction() {
+        assert_eq!(Json::Num(42.0).to_json_string(), "42");
+        assert_eq!(Json::Num(-7.0).to_json_string(), "-7");
+        let big = (1u64 << 53) as f64;
+        assert_eq!(Json::Num(big).to_json_string(), "9007199254740992");
+    }
+}

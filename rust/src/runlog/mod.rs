@@ -1,0 +1,360 @@
+//! Event-sourced run journal: durable JSONL log, replay-based resume,
+//! and offline bottleneck analysis.
+//!
+//! Both engines write one versioned event per line through a single
+//! [`RunLog`] sink (`--log run.jsonl` or `[runlog] path`): `RunStarted`
+//! (config + seed preamble), `RoundPlanned` (the selected set),
+//! `RoundClosed` (delivery outcomes, phase timings, the eval record),
+//! a periodic `Snapshot` (params + strategy blobs + cums, every
+//! `snapshot_every` rounds), and `RunFinished`. Every line is flushed as
+//! written, so a crash loses at most the line in flight.
+//!
+//! Recovery leans on the determinism contract — everything in a run is a
+//! pure function of `(config, run_seed, round)` — so `fedscalar resume`
+//! ([`replay`]) rebuilds the engine from the embedded config, *replays*
+//! rounds `0..snapshot.next_round` against the cheap stateful streams
+//! (sampler/fading RNG positions, batch cursors, batteries, the clock)
+//! without computing any gradients, restores params/strategy state from
+//! the last snapshot, and continues **bit-identically** to an
+//! uninterrupted run. This subsumes both the v2 checkpoint file
+//! (`coordinator::checkpoint`, which resumes statistically-equivalent,
+//! not bit-identical) and the fault layer's in-memory `WorkerCheckpoint`
+//! path. [`report`] answers "which client/phase gated round k" from the
+//! same stream.
+//!
+//! A truncated final line (the crash case) is tolerated and ignored;
+//! malformed *interior* lines are corruption and refuse to parse.
+
+pub mod event;
+mod json;
+pub mod replay;
+pub mod report;
+
+pub use event::{Event, RoundClose, RunStarted, SnapshotState, WorkerState, SCHEMA_VERSION};
+
+use crate::config::ExperimentConfig;
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Append-only journal writer — the one sink both engines log through.
+pub struct RunLog {
+    out: BufWriter<File>,
+}
+
+impl RunLog {
+    /// Create (truncate) a journal at `path`.
+    pub fn create(path: impl AsRef<Path>) -> Result<RunLog> {
+        Ok(RunLog {
+            out: BufWriter::new(File::create(path)?),
+        })
+    }
+
+    /// Open an existing journal for appending (resume).
+    pub fn append(path: impl AsRef<Path>) -> Result<RunLog> {
+        let f = OpenOptions::new().append(true).open(path)?;
+        Ok(RunLog {
+            out: BufWriter::new(f),
+        })
+    }
+
+    /// Append one event line and flush it to the OS — durability is the
+    /// whole point of the journal, so every event hits the file before
+    /// the round proceeds.
+    pub fn push(&mut self, ev: &Event) -> Result<()> {
+        let mut line = ev.encode();
+        line.push('\n');
+        self.out.write_all(line.as_bytes())?;
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Create a journal and write its `RunStarted` preamble — the shared
+/// entry point for `fedscalar train --log` and the tests.
+pub fn start_run(
+    path: impl AsRef<Path>,
+    engine: &str,
+    backend: &str,
+    run_seed: u64,
+    cfg: &ExperimentConfig,
+) -> Result<RunLog> {
+    let mut log = RunLog::create(path)?;
+    log.push(&Event::RunStarted(RunStarted {
+        engine: engine.to_string(),
+        backend: backend.to_string(),
+        run_seed,
+        config_toml: cfg.to_toml_string()?,
+    }))?;
+    Ok(log)
+}
+
+/// One round's worth of journal state after folding plan + close.
+#[derive(Debug, Clone)]
+pub struct RoundEntry {
+    pub active: Vec<usize>,
+    /// `None` for a dangling `RoundPlanned` at a crash tail.
+    pub close: Option<RoundClose>,
+}
+
+/// A parsed journal: the event stream folded into resumable state.
+#[derive(Debug, Clone)]
+pub struct Journal {
+    pub start: RunStarted,
+    pub rounds: BTreeMap<u64, RoundEntry>,
+    /// The latest usable snapshot, if any survived `RunResumed` pruning.
+    pub snapshot: Option<SnapshotState>,
+    pub finished: bool,
+}
+
+impl Journal {
+    pub fn parse_file(path: impl AsRef<Path>) -> Result<Journal> {
+        let text = std::fs::read_to_string(&path)?;
+        Journal::parse_str(&text)
+    }
+
+    /// Fold the event lines. The final line may be truncated mid-write
+    /// (crash) — a decode failure there is ignored; anywhere else it is
+    /// corruption and errors out.
+    pub fn parse_str(text: &str) -> Result<Journal> {
+        let lines: Vec<&str> = text.lines().collect();
+        let last_content = lines.iter().rposition(|l| !l.trim().is_empty());
+        let mut journal: Option<Journal> = None;
+        for (i, line) in lines.iter().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let ev = match Event::decode(line) {
+                Ok(ev) => ev,
+                Err(e) => {
+                    if Some(i) == last_content {
+                        break; // torn final write — resume discards it
+                    }
+                    return Err(Error::invariant(format!(
+                        "journal line {}: {e}",
+                        i + 1
+                    )));
+                }
+            };
+            match (&mut journal, ev) {
+                (None, Event::RunStarted(s)) => {
+                    journal = Some(Journal {
+                        start: s,
+                        rounds: BTreeMap::new(),
+                        snapshot: None,
+                        finished: false,
+                    });
+                }
+                (None, _) => {
+                    return Err(Error::invariant(
+                        "journal does not begin with RunStarted",
+                    ));
+                }
+                (Some(_), Event::RunStarted(_)) => {
+                    return Err(Error::invariant("journal contains a second RunStarted"));
+                }
+                (Some(j), Event::RoundPlanned { round, active }) => {
+                    j.rounds.insert(round, RoundEntry { active, close: None });
+                }
+                (Some(j), Event::RoundClosed(c)) => {
+                    let entry = j.rounds.get_mut(&c.round).ok_or_else(|| {
+                        Error::invariant(format!("round {} closed without a plan", c.round))
+                    })?;
+                    entry.close = Some(*c);
+                }
+                (Some(j), Event::Snapshot(s)) => {
+                    j.snapshot = Some(*s);
+                }
+                (Some(j), Event::RunResumed { at_round }) => {
+                    // A resumed run re-writes rounds >= at_round; the later
+                    // timeline wins, so drop the superseded suffix.
+                    j.rounds.retain(|&r, _| r < at_round);
+                    if j.snapshot.as_ref().is_some_and(|s| s.next_round > at_round) {
+                        j.snapshot = None;
+                    }
+                    j.finished = false;
+                }
+                (Some(j), Event::RunFinished { .. }) => {
+                    j.finished = true;
+                }
+            }
+        }
+        journal.ok_or_else(|| Error::invariant("journal is empty or has no RunStarted"))
+    }
+
+    /// Evaluated records for rounds strictly below `before_round`, in
+    /// round order — the history prefix a resume seeds.
+    pub fn records_before(&self, before_round: u64) -> Vec<crate::metrics::RoundRecord> {
+        self.rounds
+            .range(..before_round)
+            .filter_map(|(_, e)| e.close.as_ref().and_then(|c| c.record.clone()))
+            .collect()
+    }
+
+    /// The round replay resumes from: the last snapshot's `next_round`,
+    /// or 0 (from-scratch replay) when no snapshot survived.
+    pub fn resume_round(&self) -> u64 {
+        self.snapshot.as_ref().map_or(0, |s| s.next_round)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn started_line() -> String {
+        Event::RunStarted(RunStarted {
+            engine: "sequential".into(),
+            backend: "pure-rust".into(),
+            run_seed: 7,
+            config_toml: "[fed]\n".into(),
+        })
+        .encode()
+    }
+
+    fn planned(round: u64, active: &[usize]) -> String {
+        Event::RoundPlanned {
+            round,
+            active: active.to_vec(),
+        }
+        .encode()
+    }
+
+    fn closed(round: u64) -> String {
+        Event::RoundClosed(Box::new(RoundClose {
+            round,
+            outcome: vec![],
+            round_seconds: 1.0,
+            energy_joules: 0.0,
+            uplink_bits: 0,
+            downlink_bits: 0,
+            bcast_seconds: 0.0,
+            phase_start_seconds: 0.0,
+            ready_seconds: vec![],
+            finish_seconds: vec![],
+            new_dead: vec![],
+            record: None,
+        }))
+        .encode()
+    }
+
+    #[test]
+    fn folds_a_clean_journal() {
+        let text = [
+            started_line(),
+            planned(0, &[0, 1]),
+            closed(0),
+            planned(1, &[1]),
+            Event::RunFinished { rounds: 2 }.encode(),
+        ]
+        .join("\n");
+        let j = Journal::parse_str(&text).unwrap();
+        assert_eq!(j.start.run_seed, 7);
+        assert_eq!(j.rounds.len(), 2);
+        assert!(j.rounds[&0].close.is_some());
+        assert!(j.rounds[&1].close.is_none(), "dangling plan kept as-is");
+        assert!(j.finished);
+    }
+
+    #[test]
+    fn tolerates_a_torn_final_line_only() {
+        let good = [started_line(), planned(0, &[0])].join("\n");
+        let torn = format!("{good}\n{}", &closed(0)[..20]);
+        let j = Journal::parse_str(&torn).unwrap();
+        assert_eq!(j.rounds.len(), 1);
+        assert!(j.rounds[&0].close.is_none());
+
+        let interior = format!("{}\n{}\n{}", started_line(), &closed(0)[..20], planned(1, &[]));
+        assert!(Journal::parse_str(&interior).is_err(), "torn interior line");
+    }
+
+    #[test]
+    fn run_resumed_prunes_the_superseded_suffix() {
+        let snap = Event::Snapshot(Box::new(SnapshotState {
+            next_round: 2,
+            params: vec![],
+            strategy_state: vec![],
+            cum_bits: 0.0,
+            cum_downlink_bits: 0.0,
+            cum_sim_seconds: 0.0,
+            cum_energy_joules: 0.0,
+            workers: vec![],
+        }))
+        .encode();
+        let text = [
+            started_line(),
+            planned(0, &[0]),
+            closed(0),
+            planned(1, &[1]),
+            closed(1),
+            snap,
+            planned(2, &[0]),
+            closed(2),
+            Event::RunResumed { at_round: 2 }.encode(),
+            planned(2, &[0]),
+        ]
+        .join("\n");
+        let j = Journal::parse_str(&text).unwrap();
+        assert_eq!(j.resume_round(), 2, "snapshot at next_round=2 survives");
+        assert!(j.rounds[&2].close.is_none(), "re-planned round 2 wins");
+        assert!(!j.finished);
+    }
+
+    #[test]
+    fn rejects_missing_or_duplicate_preamble() {
+        assert!(Journal::parse_str("").is_err());
+        assert!(Journal::parse_str(&planned(0, &[])).is_err());
+        let twice = format!("{}\n{}", started_line(), started_line());
+        assert!(Journal::parse_str(&twice).is_err());
+    }
+
+    #[test]
+    fn records_before_collects_eval_rounds_in_order() {
+        let record = |round: usize| crate::metrics::RoundRecord {
+            round,
+            train_loss: 1.0,
+            test_loss: 2.0,
+            test_acc: 0.5,
+            cum_bits: 0.0,
+            cum_downlink_bits: 0.0,
+            cum_sim_seconds: 0.0,
+            cum_energy_joules: 0.0,
+            host_ms: 0.0,
+        };
+        let close = |round: u64, rec: Option<usize>| {
+            Event::RoundClosed(Box::new(RoundClose {
+                round,
+                outcome: vec![],
+                round_seconds: 0.0,
+                energy_joules: 0.0,
+                uplink_bits: 0,
+                downlink_bits: 0,
+                bcast_seconds: 0.0,
+                phase_start_seconds: 0.0,
+                ready_seconds: vec![],
+                finish_seconds: vec![],
+                new_dead: vec![],
+                record: rec.map(record),
+            }))
+            .encode()
+        };
+        let text = [
+            started_line(),
+            planned(0, &[0]),
+            close(0, Some(0)),
+            planned(1, &[0]),
+            close(1, None),
+            planned(2, &[0]),
+            close(2, Some(2)),
+        ]
+        .join("\n");
+        let j = Journal::parse_str(&text).unwrap();
+        let recs = j.records_before(3);
+        assert_eq!(recs.len(), 2);
+        assert_eq!((recs[0].round, recs[1].round), (0, 2));
+        assert_eq!(j.records_before(1).len(), 1);
+    }
+}

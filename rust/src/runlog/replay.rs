@@ -1,0 +1,197 @@
+//! Replay-based crash recovery: `fedscalar resume <log>` rebuilds a run
+//! from its journal and continues bit-identically.
+//!
+//! The journal holds three kinds of state:
+//!
+//! * the **preamble** (`RunStarted`): engine, backend, run seed, and the
+//!   full config TOML — everything needed to reconstruct the engines;
+//! * the **round stream** (`RoundPlanned`/`RoundClosed`): who was
+//!   selected and who died, which lets [`replay`](self) drive the cheap
+//!   leader-side stateful streams (sampler RNG, fading channels, batch
+//!   cursors, batteries, the virtual clock, dead-set bookkeeping)
+//!   forward without computing a single gradient;
+//! * the latest **snapshot**: the expensive state (params, strategy
+//!   blobs, cumulative counters, per-worker checkpoints) restored
+//!   directly.
+//!
+//! Replaying `0..snapshot.next_round` then restoring the snapshot leaves
+//! every RNG position, cursor, and counter exactly where the original
+//! run had them at that boundary, so the continued rounds are
+//! bit-identical to an uninterrupted run — the `runlog` integration
+//! suite pins this for both engines across strategies.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::{DistributedEngine, Engine};
+use crate::error::{Error, Result};
+use crate::exp::figures::{make_backend, BackendKind};
+use crate::metrics::RunHistory;
+use crate::runlog::{Event, Journal, RoundEntry, RunLog};
+use std::path::Path;
+
+/// What a completed resume hands back to the CLI.
+pub struct Resumed {
+    pub history: RunHistory,
+    /// The round the run continued from (0 = full from-scratch replay).
+    pub resumed_at: u64,
+    pub engine: String,
+    pub backend: String,
+    pub method: String,
+}
+
+/// Resolve a journal's backend name. Accepts everything the CLI does,
+/// plus the display name the preamble records (`BackendKind::name`
+/// returns `"xla-pjrt"`, which `parse` alone does not accept).
+fn parse_backend(name: &str) -> Result<BackendKind> {
+    if name == "xla-pjrt" {
+        return Ok(BackendKind::Xla);
+    }
+    BackendKind::parse(name)
+        .ok_or_else(|| Error::config(format!("journal names unknown backend {name:?}")))
+}
+
+/// The fully-journaled entry for round `k` — a resume needs both the
+/// plan and the close for every round below the snapshot.
+fn entry(journal: &Journal, k: u64) -> Result<&RoundEntry> {
+    let e = journal
+        .rounds
+        .get(&k)
+        .ok_or_else(|| Error::invariant(format!("journal is missing round {k} below its snapshot")))?;
+    if e.close.is_none() {
+        return Err(Error::invariant(format!(
+            "journal round {k} below the snapshot was never closed"
+        )));
+    }
+    Ok(e)
+}
+
+/// Resume the run journaled at `path`: replay to the latest snapshot,
+/// restore it, append a `RunResumed` marker, and run the remaining
+/// rounds (which re-journal into the same file; [`Journal::parse_str`]'s
+/// fold lets the later timeline win). `backend_override` substitutes the
+/// compute backend (sequential engine only — results are bit-identical
+/// across backends by the cross-backend equality contract).
+pub fn resume_run(path: impl AsRef<Path>, backend_override: Option<&str>) -> Result<Resumed> {
+    let path = path.as_ref();
+    let journal = Journal::parse_file(path)?;
+    if journal.finished {
+        return Err(Error::config(
+            "journal records a finished run — nothing to resume",
+        ));
+    }
+    let mut cfg = ExperimentConfig::from_toml_str(&journal.start.config_toml)?;
+    cfg.runlog.path = Some(path.to_path_buf());
+    let run_seed = journal.start.run_seed;
+    let at = journal.resume_round();
+    let backend_name = backend_override.unwrap_or(&journal.start.backend);
+    let kind = parse_backend(backend_name)?;
+
+    let history = match journal.start.engine.as_str() {
+        "sequential" => {
+            let be = make_backend(kind, &cfg)?;
+            let mut engine = Engine::from_config(&cfg, be, run_seed)?;
+            for k in 0..at {
+                let e = entry(&journal, k)?;
+                let close = e.close.as_ref().expect("entry() checked close");
+                if !close.new_dead.is_empty() {
+                    return Err(Error::invariant(format!(
+                        "sequential journal marks workers dead in round {k}"
+                    )));
+                }
+                engine.replay_round_streams(k as usize, &e.active)?;
+            }
+            if at > 0 {
+                let snap = journal.snapshot.as_ref().expect("at > 0 implies a snapshot");
+                engine.restore(&Checkpoint {
+                    run_seed,
+                    method: cfg.fed.method.name(),
+                    round: at,
+                    params: snap.params.clone(),
+                    cum_bits: snap.cum_bits,
+                    cum_downlink_bits: snap.cum_downlink_bits,
+                    cum_sim_seconds: snap.cum_sim_seconds,
+                    cum_energy_joules: snap.cum_energy_joules,
+                    strategy_state: snap.strategy_state.clone(),
+                })?;
+            }
+            engine.seed_history(journal.records_before(at));
+            let mut log = RunLog::append(path)?;
+            log.push(&Event::RunResumed { at_round: at })?;
+            engine.set_runlog(log);
+            engine.run_from(at as usize)?
+        }
+        "distributed" => {
+            if matches!(kind, BackendKind::Xla) {
+                return Err(Error::config(
+                    "a distributed journal resumes with pure-rust workers; drop --backend",
+                ));
+            }
+            let mut engine = if at > 0 {
+                let snap = journal.snapshot.as_ref().expect("at > 0 implies a snapshot");
+                let workers = snap
+                    .workers
+                    .iter()
+                    .map(|w| (w.strategy_state.clone(), w.rounds_computed))
+                    .collect();
+                DistributedEngine::from_config_resumed(&cfg, run_seed, workers)?
+            } else {
+                DistributedEngine::from_config(&cfg, run_seed)?
+            };
+            for k in 0..at {
+                let e = entry(&journal, k)?;
+                let close = e.close.as_ref().expect("entry() checked close");
+                engine.replay_round_streams(k as usize, &e.active, &close.new_dead)?;
+            }
+            if at > 0 {
+                let snap = journal.snapshot.as_ref().expect("at > 0 implies a snapshot");
+                engine.restore_leader(snap)?;
+            }
+            engine.seed_history(journal.records_before(at));
+            let mut log = RunLog::append(path)?;
+            log.push(&Event::RunResumed { at_round: at })?;
+            engine.set_runlog(log);
+            engine.run_from(at as usize)?
+        }
+        other => {
+            return Err(Error::config(format!(
+                "journal names unknown engine {other:?}"
+            )))
+        }
+    };
+    Ok(Resumed {
+        history,
+        resumed_at: at,
+        engine: journal.start.engine,
+        backend: kind.name().to_string(),
+        method: cfg.fed.method.name(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names_round_trip_through_the_preamble() {
+        assert!(matches!(parse_backend("xla-pjrt"), Ok(BackendKind::Xla)));
+        assert!(matches!(parse_backend("xla"), Ok(BackendKind::Xla)));
+        assert!(matches!(
+            parse_backend("pure-rust"),
+            Ok(BackendKind::PureRust)
+        ));
+        assert!(parse_backend("tpu").is_err());
+    }
+
+    #[test]
+    fn refuses_a_finished_journal() {
+        let cfg = ExperimentConfig::paper_section_iii();
+        let path = std::env::temp_dir().join("fedscalar_replay_finished_test.jsonl");
+        let mut log =
+            crate::runlog::start_run(&path, "sequential", "pure-rust", 1, &cfg).unwrap();
+        log.push(&Event::RunFinished { rounds: 0 }).unwrap();
+        drop(log);
+        let err = resume_run(&path, None).unwrap_err();
+        assert!(err.to_string().contains("finished"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

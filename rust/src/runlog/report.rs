@@ -1,0 +1,234 @@
+//! Offline bottleneck analysis: `fedscalar report <log>` answers "which
+//! client and which phase gated each round" from the journal alone.
+//!
+//! Each `RoundClosed` carries the simnet's phase timings:
+//!
+//! * `bcast_seconds` — the model broadcast (downlink);
+//! * `phase_start_seconds` — when the upload phase opened, i.e. the
+//!   *last* client became ready: `compute = phase_start - bcast`;
+//! * `ready_seconds[i]` — when slot `i`'s client finished computing
+//!   (the argmax is the compute-critical client);
+//! * `finish_seconds[i]` — when slot `i`'s upload would land, deadline
+//!   or not (the argmax among transmitters is the upload-critical
+//!   client).
+//!
+//! A round's gating phase is the largest of its three segments — unless
+//! the deadline cut someone, which the report surfaces first: a dropped
+//! upload wastes the whole round's airtime and energy for that client,
+//! so it dominates any within-deadline breakdown.
+
+use crate::runlog::Journal;
+use std::fmt::Write;
+
+/// Largest non-NaN entry's index, or `None` if all are NaN/empty.
+fn argmax(xs: &[f64]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        if x.is_nan() {
+            continue;
+        }
+        if best.is_none_or(|(_, b)| x > b) {
+            best = Some((i, x));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+fn join_ids(ids: &[usize]) -> String {
+    ids.iter()
+        .map(|c| c.to_string())
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Render the per-round phase breakdown plus cumulative tallies.
+pub fn render(j: &Journal) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "run: engine={} backend={} seed={}{}",
+        j.start.engine,
+        j.start.backend,
+        j.start.run_seed,
+        if j.finished { "" } else { " (unfinished)" }
+    );
+    let _ = writeln!(
+        out,
+        "{:>6}  {:<9} {:>10} {:>10} {:>10} {:>10}  {}",
+        "round", "phase", "bcast_s", "compute_s", "upload_s", "total_s", "critical"
+    );
+
+    let (mut up_bits, mut down_bits) = (0u64, 0u64);
+    let (mut sim_s, mut energy_j) = (0.0f64, 0.0f64);
+    let (mut delivered, mut dropped, mut deaths, mut idle) = (0u64, 0u64, 0u64, 0u64);
+
+    for (&k, entry) in &j.rounds {
+        let Some(close) = &entry.close else {
+            let _ = writeln!(out, "{k:>6}  (round never closed — crash tail)");
+            continue;
+        };
+        up_bits += close.uplink_bits;
+        down_bits += close.downlink_bits;
+        sim_s += close.round_seconds;
+        energy_j += close.energy_joules;
+        deaths += close.new_dead.len() as u64;
+        if entry.active.is_empty() {
+            idle += 1;
+            let _ = writeln!(out, "{k:>6}  idle");
+            continue;
+        }
+        let drops: Vec<usize> = entry
+            .active
+            .iter()
+            .zip(&close.outcome)
+            .filter(|(_, o)| !o.delivered())
+            .map(|(&c, _)| c)
+            .collect();
+        delivered += (entry.active.len() - drops.len()) as u64;
+        dropped += drops.len() as u64;
+
+        let bcast = close.bcast_seconds;
+        let compute = (close.phase_start_seconds - close.bcast_seconds).max(0.0);
+        let upload = (close.round_seconds - close.phase_start_seconds).max(0.0);
+        let (phase, critical) = if !drops.is_empty() {
+            ("deadline", format!("dropped: {}", join_ids(&drops)))
+        } else if bcast >= compute && bcast >= upload {
+            ("bcast", "-".to_string())
+        } else if compute >= upload {
+            let who = argmax(&close.ready_seconds)
+                .and_then(|i| entry.active.get(i))
+                .map_or("-".to_string(), |c| format!("client {c}"));
+            ("compute", who)
+        } else {
+            let who = argmax(&close.finish_seconds)
+                .and_then(|i| entry.active.get(i))
+                .map_or("-".to_string(), |c| format!("client {c}"));
+            ("upload", who)
+        };
+        let dead_note = if close.new_dead.is_empty() {
+            String::new()
+        } else {
+            format!("  [dead: {}]", join_ids(&close.new_dead))
+        };
+        let _ = writeln!(
+            out,
+            "{k:>6}  {phase:<9} {bcast:>10.4} {compute:>10.4} {upload:>10.4} {:>10.4}  {critical}{dead_note}",
+            close.round_seconds
+        );
+    }
+
+    let _ = writeln!(
+        out,
+        "\ntotals: rounds={} (idle {idle})  delivered={delivered}  dropped={dropped}  dead={deaths}",
+        j.rounds.len()
+    );
+    let _ = writeln!(
+        out,
+        "        uplink={up_bits} bits  downlink={down_bits} bits  sim_time={sim_s:.4} s  energy={energy_j:.4} J"
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runlog::{Event, RoundClose, RunStarted};
+    use crate::simnet::Delivery;
+
+    fn close(round: u64, outcome: Vec<Delivery>, timings: (f64, f64, f64)) -> RoundClose {
+        let (bcast, phase_start, total) = timings;
+        RoundClose {
+            round,
+            outcome,
+            round_seconds: total,
+            energy_joules: 1.5,
+            uplink_bits: 100,
+            downlink_bits: 200,
+            bcast_seconds: bcast,
+            phase_start_seconds: phase_start,
+            ready_seconds: vec![],
+            finish_seconds: vec![],
+            new_dead: vec![],
+            record: None,
+        }
+    }
+
+    #[test]
+    fn names_the_gating_phase_and_critical_client() {
+        let mut upload_round = close(0, vec![Delivery::Delivered; 2], (0.1, 0.5, 2.0));
+        upload_round.ready_seconds = vec![0.5, 0.4];
+        upload_round.finish_seconds = vec![1.2, 2.0];
+        let deadline_round = close(
+            1,
+            vec![Delivery::Delivered, Delivery::TransmittedDropped],
+            (0.1, 0.2, 0.9),
+        );
+        let lines = [
+            Event::RunStarted(RunStarted {
+                engine: "sequential".into(),
+                backend: "pure-rust".into(),
+                run_seed: 5,
+                config_toml: String::new(),
+            })
+            .encode(),
+            Event::RoundPlanned {
+                round: 0,
+                active: vec![3, 7],
+            }
+            .encode(),
+            Event::RoundClosed(Box::new(upload_round)).encode(),
+            Event::RoundPlanned {
+                round: 1,
+                active: vec![2, 5],
+            }
+            .encode(),
+            Event::RoundClosed(Box::new(deadline_round)).encode(),
+            Event::RoundPlanned {
+                round: 2,
+                active: vec![],
+            }
+            .encode(),
+            Event::RoundClosed(Box::new(close(2, vec![], (0.0, 0.0, 0.0)))).encode(),
+        ]
+        .join("\n");
+        let j = Journal::parse_str(&lines).unwrap();
+        let text = render(&j);
+        // round 0: upload segment (1.5s) dominates; slot 1 = client 7
+        // finishes last
+        assert!(text.contains("upload"), "{text}");
+        assert!(text.contains("client 7"), "{text}");
+        // round 1: the drop outranks any segment; slot 1 = client 5
+        assert!(text.contains("deadline"), "{text}");
+        assert!(text.contains("dropped: 5"), "{text}");
+        // round 2: idle
+        assert!(text.contains("idle"), "{text}");
+        assert!(text.contains("delivered=3"), "{text}");
+        assert!(text.contains("dropped=1"), "{text}");
+    }
+
+    #[test]
+    fn compute_bound_round_names_the_slowest_client() {
+        let mut c = close(0, vec![Delivery::Delivered; 2], (0.1, 1.4, 1.6));
+        c.ready_seconds = vec![1.4, 0.6];
+        c.finish_seconds = vec![1.5, 1.6];
+        let lines = [
+            Event::RunStarted(RunStarted {
+                engine: "sequential".into(),
+                backend: "pure-rust".into(),
+                run_seed: 5,
+                config_toml: String::new(),
+            })
+            .encode(),
+            Event::RoundPlanned {
+                round: 0,
+                active: vec![4, 9],
+            }
+            .encode(),
+            Event::RoundClosed(Box::new(c)).encode(),
+        ]
+        .join("\n");
+        let text = render(&Journal::parse_str(&lines).unwrap());
+        assert!(text.contains("compute"), "{text}");
+        assert!(text.contains("client 4"), "{text}");
+    }
+}

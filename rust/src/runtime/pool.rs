@@ -17,9 +17,16 @@
 //! be (and is — see the determinism contracts in `algo::strategy` and
 //! `algo::projection`) bit-identical to the serial order for any thread
 //! count.
+//!
+//! Threads spawn **lazily on the first [`WorkerPool::scoped`] call**, not
+//! at construction: both engines build their pool unconditionally when
+//! `fed.threads > 1`, but a backend that never fans out (the XLA path
+//! runs one vmapped dispatch per round) should not pay `threads`×
+//! thread-spawn + idle stacks for a pool it never uses.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Sender};
+use std::sync::OnceLock;
 use std::thread::JoinHandle;
 
 /// A job once it is on the wire: erased to `'static` (see the SAFETY
@@ -30,17 +37,31 @@ type Shuttle = (
     Sender<Option<Box<dyn std::any::Any + Send>>>,
 );
 
-/// A fixed set of persistent worker threads executing borrowed closures.
-pub struct WorkerPool {
+/// The spawned threads + their feed channels (exists only after first use).
+struct PoolInner {
     task_txs: Vec<Sender<Shuttle>>,
     handles: Vec<JoinHandle<()>>,
 }
 
+/// A fixed set of persistent worker threads executing borrowed closures,
+/// spawned on first use.
+pub struct WorkerPool {
+    target: usize,
+    inner: OnceLock<PoolInner>,
+}
+
 impl WorkerPool {
-    /// Spawn `threads` (≥ 1) workers. They idle on channel receives until
-    /// the pool is dropped.
+    /// Declare a pool of `threads` (≥ 1) workers. Nothing is spawned
+    /// until the first [`Self::scoped`] call; from then on the threads
+    /// idle on channel receives until the pool is dropped.
     pub fn new(threads: usize) -> WorkerPool {
-        let threads = threads.max(1);
+        WorkerPool {
+            target: threads.max(1),
+            inner: OnceLock::new(),
+        }
+    }
+
+    fn spawn(threads: usize) -> PoolInner {
         let mut task_txs = Vec::with_capacity(threads);
         let mut handles = Vec::with_capacity(threads);
         for i in 0..threads {
@@ -59,11 +80,16 @@ impl WorkerPool {
             task_txs.push(tx);
             handles.push(handle);
         }
-        WorkerPool { task_txs, handles }
+        PoolInner { task_txs, handles }
     }
 
     pub fn threads(&self) -> usize {
-        self.task_txs.len()
+        self.target
+    }
+
+    /// Have the worker threads actually been spawned yet?
+    pub fn spawned(&self) -> bool {
+        self.inner.get().is_some()
     }
 
     /// Execute `jobs` (at most [`Self::threads`]; job `i` runs on worker
@@ -78,6 +104,10 @@ impl WorkerPool {
             jobs.len(),
             self.threads()
         );
+        if jobs.is_empty() {
+            return; // keep an unused pool thread-free
+        }
+        let inner = self.inner.get_or_init(|| Self::spawn(self.target));
         let (done_tx, done_rx) = channel();
         let mut sent = 0usize;
         let mut send_failed = false;
@@ -95,7 +125,7 @@ impl WorkerPool {
                     Box<dyn FnOnce() + Send + 'static>,
                 >(job)
             };
-            if self.task_txs[i].send((task, done_tx.clone())).is_err() {
+            if inner.task_txs[i].send((task, done_tx.clone())).is_err() {
                 send_failed = true; // settle what was sent, then panic
                 break;
             }
@@ -127,9 +157,11 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.task_txs.clear(); // disconnect => workers fall out of recv
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        if let Some(mut inner) = self.inner.take() {
+            inner.task_txs.clear(); // disconnect => workers fall out of recv
+            for h in inner.handles.drain(..) {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -203,5 +235,17 @@ mod tests {
     fn at_least_one_thread() {
         let pool = WorkerPool::new(0);
         assert_eq!(pool.threads(), 1);
+    }
+
+    #[test]
+    fn threads_spawn_only_on_first_use() {
+        let pool = WorkerPool::new(3);
+        assert!(!pool.spawned());
+        pool.scoped(Vec::new()); // empty batches don't force a spawn either
+        assert!(!pool.spawned());
+        let mut x = 0u8;
+        pool.scoped(vec![Box::new(|| x = 1)]);
+        assert!(pool.spawned());
+        assert_eq!(x, 1);
     }
 }

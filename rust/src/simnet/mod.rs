@@ -213,6 +213,19 @@ pub struct RoundReport {
     /// Number of active clients whose upload was NOT delivered (both
     /// dropped kinds).
     pub dropped: usize,
+    /// Seconds the model broadcast held the round open (phase 1).
+    pub bcast_seconds: f64,
+    /// When the upload phase opened: the latest deadline-eligible
+    /// compute finish (phase 2 ends here).
+    pub phase_start_seconds: f64,
+    /// Per active client: when its local compute finished (broadcast +
+    /// compute), even for clients the deadline had already dropped; NaN
+    /// for a fault-forced `NeverStarted` that never assembled a round.
+    pub ready_seconds: Vec<f64>,
+    /// Per active client: when its upload would have landed (phase open +
+    /// slot start + duration), even past the deadline; NaN for clients
+    /// that never keyed their radio.
+    pub finish_seconds: Vec<f64>,
 }
 
 impl RoundReport {
@@ -232,7 +245,7 @@ impl RoundReport {
             .collect()
     }
 
-    fn empty() -> RoundReport {
+    pub(crate) fn empty() -> RoundReport {
         RoundReport {
             outcome: Vec::new(),
             round_seconds: 0.0,
@@ -241,6 +254,10 @@ impl RoundReport {
             downlink_bits: 0,
             per_upload_seconds: Vec::new(),
             dropped: 0,
+            bcast_seconds: 0.0,
+            phase_start_seconds: 0.0,
+            ready_seconds: Vec::new(),
+            finish_seconds: Vec::new(),
         }
     }
 }
@@ -446,6 +463,7 @@ impl SimNet {
             0.0
         };
         let mut q = EventQueue::new();
+        let mut ready_at = vec![f64::NAN; n];
         for (slot, &c) in active.iter().enumerate() {
             if let Some(f) = faults {
                 if f.outcome[slot] == Some(Delivery::NeverStarted) {
@@ -456,6 +474,7 @@ impl SimNet {
                 }
             }
             let ready = bcast_s + self.t_other_s * self.profiles[c].compute_mult;
+            ready_at[slot] = ready;
             q.push(ready, Ev::ComputeDone(slot));
         }
         // drain in time order: eligible ComputeDone events are a time
@@ -514,10 +533,13 @@ impl SimNet {
             }
         }
         let mut any_upload = false;
+        let mut finish_at = vec![f64::NAN; n];
         for i in 0..n {
             if ready_ok[i] {
                 any_upload = true;
-                q.push(phase_start + (slot_start_rel[i] + uploads[i]), Ev::UploadDone(i));
+                let finish = phase_start + (slot_start_rel[i] + uploads[i]);
+                finish_at[i] = finish;
+                q.push(finish, Ev::UploadDone(i));
             }
         }
 
@@ -626,6 +648,10 @@ impl SimNet {
             downlink_bits: downlink_bits * n as u64 + extra_down_bits,
             per_upload_seconds: uploads,
             dropped,
+            bcast_seconds: bcast_s,
+            phase_start_seconds: phase_start,
+            ready_seconds: ready_at,
+            finish_seconds: finish_at,
         }
     }
 }

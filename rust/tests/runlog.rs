@@ -1,0 +1,237 @@
+//! Run-journal end-to-end: journal a run under churn + deadline pressure,
+//! "crash" it by truncating the log mid-stream (at a line boundary AND
+//! mid-line, the torn-write case), resume, and pin the final history
+//! bit-identical to the uninterrupted run — for a stateless-uplink
+//! strategy (fedscalar), client-stateful error feedback (top-k), and a
+//! per-worker stochastic rounding stream (qsgd), on both engines.
+
+use fedscalar::algo::Method;
+use fedscalar::config::ExperimentConfig;
+use fedscalar::coordinator::{DistributedEngine, Engine};
+use fedscalar::metrics::{same_histories, RunHistory};
+use fedscalar::rng::VDistribution;
+use fedscalar::runlog::{self, replay::resume_run, Journal};
+use fedscalar::runtime::PureRustBackend;
+use fedscalar::simnet::Availability;
+use std::path::{Path, PathBuf};
+
+const SEED: u64 = 7;
+
+/// 6 heterogeneous agents, availability churn, a deadline that cuts the
+/// fleet's slowest device whenever it is selected (its compute alone
+/// overruns), snapshots every 5 of 24 rounds.
+fn scenario_cfg(method: Method) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.fed.method = method;
+    cfg.fed.rounds = 24;
+    cfg.fed.eval_every = 4;
+    cfg.fed.num_agents = 6;
+    cfg.runlog.snapshot_every = 5;
+    cfg.scenario.availability = Availability::parse("churn0.25").unwrap();
+    cfg.scenario.fleet.compute_spread = 0.8;
+    let t_other = fedscalar::netsim::latency::t_other_seconds(
+        &cfg.network.latency,
+        cfg.model.param_dim(),
+        cfg.fed.num_agents,
+        cfg.network.channel.nominal_bps,
+        cfg.network.schedule,
+    );
+    // the fleet is a pure function of (fleet config, n, run_seed), so the
+    // test can see the multipliers the run will draw and pin the deadline
+    // just under the slowest device's compute time
+    let max_mult = cfg
+        .scenario
+        .fleet
+        .profiles(cfg.fed.num_agents, &cfg.network.channel, SEED)
+        .iter()
+        .map(|p| p.compute_mult)
+        .fold(f64::NEG_INFINITY, f64::max);
+    assert!(max_mult > 1.0, "spread 0.8 must produce a straggler");
+    cfg.scenario.deadline_s = Some(t_other * max_mult * 0.99);
+    cfg
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fedscalar_runlog_{tag}_{}.jsonl", std::process::id()))
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum EngineKind {
+    Sequential,
+    Distributed,
+}
+
+fn run_journaled(kind: EngineKind, cfg: &ExperimentConfig, path: &Path) -> RunHistory {
+    match kind {
+        EngineKind::Sequential => {
+            let mut be = PureRustBackend::new(&cfg.model);
+            be.set_shape(cfg.fed.local_steps, cfg.fed.batch_size);
+            let mut eng = Engine::from_config(cfg, Box::new(be), SEED).unwrap();
+            eng.set_runlog(runlog::start_run(path, "sequential", "pure-rust", SEED, cfg).unwrap());
+            eng.run().unwrap()
+        }
+        EngineKind::Distributed => {
+            let mut eng = DistributedEngine::from_config(cfg, SEED).unwrap();
+            eng.set_runlog(runlog::start_run(path, "distributed", "pure-rust", SEED, cfg).unwrap());
+            eng.run().unwrap()
+        }
+    }
+}
+
+fn drops_in(journal: &Journal) -> usize {
+    journal
+        .rounds
+        .values()
+        .filter_map(|e| e.close.as_ref())
+        .flat_map(|c| &c.outcome)
+        .filter(|o| !o.delivered())
+        .count()
+}
+
+/// Journal a full run, then resume from a cleanly-truncated copy and from
+/// a torn-last-line copy, requiring both resumed histories bit-identical
+/// to the uninterrupted one.
+fn crash_and_resume(kind: EngineKind, method: Method, tag: &str) {
+    let mut cfg = scenario_cfg(method);
+    let full_path = tmp(&format!("{tag}_full"));
+    cfg.runlog.path = Some(full_path.clone());
+    let h_full = run_journaled(kind, &cfg, &full_path);
+
+    let journal = Journal::parse_file(&full_path).unwrap();
+    assert!(journal.finished);
+    assert!(
+        drops_in(&journal) > 0,
+        "the deadline scenario must record drops"
+    );
+
+    let text = std::fs::read_to_string(&full_path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    let keep = lines.len() * 6 / 10; // mid-run, past several snapshots
+
+    // crash at a line boundary
+    let clean_path = tmp(&format!("{tag}_clean"));
+    std::fs::write(&clean_path, format!("{}\n", lines[..keep].join("\n"))).unwrap();
+    let resumed = resume_run(&clean_path, None).unwrap();
+    assert!(
+        same_histories(&resumed.history, &h_full),
+        "clean-cut resume diverged (resumed at {})",
+        resumed.resumed_at
+    );
+
+    // crash mid-line: the torn final line must be tolerated and ignored
+    let torn_path = tmp(&format!("{tag}_torn"));
+    let half = &lines[keep][..lines[keep].len() / 2];
+    std::fs::write(
+        &torn_path,
+        format!("{}\n{half}", lines[..keep].join("\n")),
+    )
+    .unwrap();
+    let resumed = resume_run(&torn_path, None).unwrap();
+    assert!(
+        same_histories(&resumed.history, &h_full),
+        "torn-line resume diverged (resumed at {})",
+        resumed.resumed_at
+    );
+
+    // the sequential engine snapshots on pure cadence, so a mid-run cut
+    // must land past at least one snapshot and skip the replayed prefix's
+    // recompute entirely
+    if kind == EngineKind::Sequential {
+        assert!(resumed.resumed_at > 0, "expected a snapshot-based resume");
+    }
+
+    for p in [&full_path, &clean_path, &torn_path] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn fedscalar_sequential_resume_is_bit_identical() {
+    crash_and_resume(
+        EngineKind::Sequential,
+        Method::fedscalar(VDistribution::Rademacher, 1),
+        "seq_fedscalar",
+    );
+}
+
+#[test]
+fn topk_sequential_resume_is_bit_identical() {
+    crash_and_resume(EngineKind::Sequential, Method::topk(16), "seq_topk");
+}
+
+#[test]
+fn qsgd_sequential_resume_is_bit_identical() {
+    crash_and_resume(EngineKind::Sequential, Method::qsgd(8), "seq_qsgd");
+}
+
+#[test]
+fn fedscalar_distributed_resume_is_bit_identical() {
+    crash_and_resume(
+        EngineKind::Distributed,
+        Method::fedscalar(VDistribution::Rademacher, 1),
+        "dist_fedscalar",
+    );
+}
+
+#[test]
+fn topk_distributed_resume_is_bit_identical() {
+    crash_and_resume(EngineKind::Distributed, Method::topk(16), "dist_topk");
+}
+
+#[test]
+fn qsgd_distributed_resume_is_bit_identical() {
+    crash_and_resume(EngineKind::Distributed, Method::qsgd(8), "dist_qsgd");
+}
+
+/// Without a deadline nobody is ever NACKed, so the distributed leader's
+/// snapshot gate (`dead` and `unsynced` both empty) passes on every
+/// cadence boundary — this pins the *snapshot-restore* path for the
+/// distributed engine: `from_config_resumed` worker rebuilds, per-worker
+/// strategy blobs, and `restore_leader`, under churn, for the stateful
+/// strategies where a reset blob would visibly diverge.
+#[test]
+fn distributed_snapshot_restore_under_churn() {
+    for (method, tag) in [
+        (Method::topk(16), "dist_snap_topk"),
+        (Method::qsgd(8), "dist_snap_qsgd"),
+    ] {
+        let mut cfg = scenario_cfg(method);
+        cfg.scenario.deadline_s = None;
+        let full_path = tmp(&format!("{tag}_full"));
+        cfg.runlog.path = Some(full_path.clone());
+        let h_full = run_journaled(EngineKind::Distributed, &cfg, &full_path);
+
+        let text = std::fs::read_to_string(&full_path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        let keep = lines.len() * 6 / 10;
+        let cut_path = tmp(&format!("{tag}_cut"));
+        std::fs::write(&cut_path, format!("{}\n", lines[..keep].join("\n"))).unwrap();
+
+        let resumed = resume_run(&cut_path, None).unwrap();
+        assert!(resumed.resumed_at > 0, "{tag}: expected a snapshot resume");
+        assert!(
+            same_histories(&resumed.history, &h_full),
+            "{tag}: snapshot-restored resume diverged (resumed at {})",
+            resumed.resumed_at
+        );
+        for p in [&full_path, &cut_path] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// The journal alone must answer "who gated round k": the report names
+/// the deadline casualties this scenario manufactures.
+#[test]
+fn report_names_the_manufactured_straggler() {
+    let mut cfg = scenario_cfg(Method::fedscalar(VDistribution::Rademacher, 1));
+    let path = tmp("report");
+    cfg.runlog.path = Some(path.clone());
+    let _ = run_journaled(EngineKind::Sequential, &cfg, &path);
+    let journal = Journal::parse_file(&path).unwrap();
+    let text = fedscalar::runlog::report::render(&journal);
+    assert!(text.contains("deadline"), "{text}");
+    assert!(text.contains("dropped:"), "{text}");
+    assert!(text.contains("engine=sequential"), "{text}");
+    let _ = std::fs::remove_file(&path);
+}
