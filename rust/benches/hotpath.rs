@@ -307,6 +307,25 @@ fn main() {
         dist_round += 1;
         eng_dist.step(k, false).unwrap()
     });
+    // telemetry cost on the round hot path: the same serial round with
+    // the gate forced off (one relaxed atomic load per hook site) vs
+    // forced on (span clocks + counter increments live). Forcing
+    // bypasses the env check so both entries measure what they claim
+    // regardless of FEDSCALAR_TELEMETRY in the environment.
+    let mut eng_tel_off = round_bench_engine(1);
+    fedscalar::telemetry::force(Some(false));
+    b.run("engine round 20 clients telemetry=off", || {
+        eng_tel_off.run_round(0, false).unwrap()
+    });
+    let mut eng_tel_on = round_bench_engine(1);
+    fedscalar::telemetry::force(Some(true));
+    b.run("engine round 20 clients telemetry=on", || {
+        eng_tel_on.run_round(0, false).unwrap()
+    });
+    // fold the benched rounds' span clocks into the global registry so
+    // the snapshot artifact below carries a populated phase family
+    fedscalar::telemetry::drain_spans();
+    fedscalar::telemetry::force(None);
 
     header("simnet round lifecycle (20 clients, event-driven netsim)");
     {
@@ -461,4 +480,17 @@ fn main() {
     write_json(json_path, b.results().iter().chain(bq.results()))
         .expect("write bench json");
     println!("\nwrote {json_path} ({} entries)", b.results().len() + bq.results().len());
+
+    // metrics-catalog snapshot artifact: every exposition key for the
+    // registry this process accumulated (the telemetry=on entries above
+    // fed it). scripts/check_metric_names.sh pins the catalog against
+    // rust/telemetry_expected.txt on the quick file.
+    let tel_path = if fedscalar::util::bench::quick_requested() {
+        "TELEMETRY_hotpath.quick.json"
+    } else {
+        "TELEMETRY_hotpath.json"
+    };
+    let snap = fedscalar::telemetry::snapshot_json(fedscalar::telemetry::global());
+    std::fs::write(tel_path, snap.to_json_string() + "\n").expect("write telemetry json");
+    println!("wrote {tel_path}");
 }

@@ -80,6 +80,18 @@ pub fn subseed(seed: u32, j: usize) -> u32 {
     }
 }
 
+/// v-generation blocks one sweep streams, for telemetry: 64-coordinate
+/// sign words for Rademacher, [`V_BLOCK`]-sized Gaussian tiles otherwise,
+/// times the number of (agent, projection) streams. Computed arithmetically
+/// so instrumented paths issue ONE counter add per call, never per block.
+fn v_blocks(d: usize, n_streams: usize, dist: VDistribution) -> u64 {
+    let per_stream = match dist {
+        VDistribution::Rademacher => d.div_ceil(64),
+        VDistribution::Normal => d.div_ceil(V_BLOCK),
+    };
+    per_stream as u64 * n_streams as u64
+}
+
 /// `±x` selected by a sign bit (1 → `+x`, 0 → `−x`) as a pure IEEE-754
 /// sign-bit flip — exact for every value, no multiply.
 #[inline(always)]
@@ -147,6 +159,7 @@ fn encode_normal(delta: &[f32], streams: &mut [VStream], acc: &mut [[f32; 8]]) {
 
 /// Single projection: `r = <delta, v(seed)>`, fused — no scratch vector.
 pub fn encode(delta: &[f32], seed: u32, dist: VDistribution) -> f32 {
+    crate::telemetry::projection_blocks(v_blocks(delta.len(), 1, dist));
     match dist {
         VDistribution::Rademacher => {
             let mut streams = [RademacherWords::new(seed)];
@@ -169,6 +182,7 @@ pub fn encode(delta: &[f32], seed: u32, dist: VDistribution) -> f32 {
 /// bit-identical to `encode(delta, subseed(seed, j), dist)`.
 pub fn encode_multi(delta: &[f32], seed: u32, dist: VDistribution, rs: &mut [f32]) {
     let m = rs.len();
+    crate::telemetry::projection_blocks(v_blocks(delta.len(), m, dist));
     match dist {
         VDistribution::Rademacher => {
             let mut streams: Vec<RademacherWords> = (0..m)
@@ -219,6 +233,11 @@ pub const DECODE_CHUNK: usize = 32;
 /// one macro-chunk, identical to [`decode_all_pooled`] always — see the
 /// module docs).
 pub fn decode_all(ghat: &mut [f32], jobs: &[(u32, &[f32])], dist: VDistribution, weight: f32) {
+    let n_streams: usize = jobs.iter().map(|(_, rs)| rs.len()).sum();
+    crate::telemetry::projection_blocks(v_blocks(ghat.len(), n_streams, dist));
+    if matches!(dist, VDistribution::Normal) {
+        crate::telemetry::projection_chunks(jobs.len().div_ceil(DECODE_CHUNK) as u64);
+    }
     match dist {
         VDistribution::Rademacher => {
             // (word stream, weight * r) per (agent, projection) pair; the
@@ -272,6 +291,8 @@ pub fn decode_all_pooled(
             if n_seg < 2 {
                 return decode_all(ghat, jobs, dist, weight);
             }
+            let n_streams: usize = jobs.iter().map(|(_, rs)| rs.len()).sum();
+            crate::telemetry::projection_blocks(v_blocks(ghat.len(), n_streams, dist));
             let seg_words = words_total.div_ceil(n_seg);
             let jump = Jump::by(seg_words as u64);
             let mut gens: Vec<(Xoshiro256, f32)> = jobs
@@ -308,6 +329,9 @@ pub fn decode_all_pooled(
             if chunks.len() < 2 || pool.threads() < 2 {
                 return decode_all(ghat, jobs, dist, weight);
             }
+            let n_streams: usize = jobs.iter().map(|(_, rs)| rs.len()).sum();
+            crate::telemetry::projection_blocks(v_blocks(ghat.len(), n_streams, dist));
+            crate::telemetry::projection_chunks(chunks.len() as u64);
             let d = ghat.len();
             let mut partials: Vec<Vec<f32>> = chunks.iter().map(|_| vec![0.0f32; d]).collect();
             let workers = pool.threads().min(chunks.len());

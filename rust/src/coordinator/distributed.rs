@@ -82,6 +82,8 @@ use crate::rng::SplitMix64;
 use crate::runlog::{Event, RoundClose, RunLog, SnapshotState, WorkerState};
 use crate::runtime::{Backend, PureRustBackend};
 use crate::simnet::{Delivery, RoundFaults, RoundReport, Sampler, SimNet};
+// aliased: `telemetry` is taken by the per-worker loss side-channel
+use crate::telemetry::{self as tel, Phase};
 use crate::{log_debug, log_info};
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{Arc, Mutex};
@@ -366,11 +368,14 @@ impl DistributedEngine {
         // select this round's active set (leader-side, identical to the
         // sequential engine's sampler stream); dead workers leave the
         // pool exactly like availability-off clients
-        let mut avail = self.simnet.available(k as u64);
-        if !self.dead.is_empty() {
-            avail.retain(|c| !self.dead.contains_key(c));
-        }
-        let active = self.sampler.select(&avail, self.simnet.profiles());
+        let active = {
+            let _t = tel::span(Phase::Select);
+            let mut avail = self.simnet.available(k as u64);
+            if !self.dead.is_empty() {
+                avail.retain(|c| !self.dead.contains_key(c));
+            }
+            self.sampler.select(&avail, self.simnet.profiles())
+        };
         if let Some(log) = self.log.as_mut() {
             log.push(&Event::RoundPlanned {
                 round: k as u64,
@@ -421,13 +426,16 @@ impl DistributedEngine {
 
         // phase A: first attempt to every active worker, so all workers
         // compute in parallel
-        for &c in &active {
-            let w = &mut self.workers[c];
-            w.downlink.begin_round(k as u64);
-            let sent = w.downlink.send(plan_frame.clone());
-            let sent = w.downlink.send(model_frame.clone()) && sent;
-            if !sent && !self.plan.enabled() {
-                return Err(Error::worker_lost(c, k));
+        {
+            let _t = tel::span(Phase::Broadcast);
+            for &c in &active {
+                let w = &mut self.workers[c];
+                w.downlink.begin_round(k as u64);
+                let sent = w.downlink.send(plan_frame.clone());
+                let sent = w.downlink.send(model_frame.clone()) && sent;
+                if !sent && !self.plan.enabled() {
+                    return Err(Error::worker_lost(c, k));
+                }
             }
         }
         // phase B: retries + collection, strictly in active order
@@ -435,9 +443,11 @@ impl DistributedEngine {
         // timing)
         let mut uplinks: Vec<Option<Uplink>> = Vec::with_capacity(active.len());
         let mut losses: Vec<Option<f32>> = Vec::with_capacity(active.len());
+        let _collect = tel::span(Phase::Compute);
         for (i, &c) in active.iter().enumerate() {
             let script = &scripts[i];
             for _ in 1..script.attempts {
+                tel::retry();
                 let w = &mut self.workers[c];
                 let _ = w.downlink.send(plan_frame.clone());
                 let _ = w.downlink.send(model_frame.clone());
@@ -477,10 +487,12 @@ impl DistributedEngine {
                 }
             }
         }
+        drop(_collect);
         // netsim lifecycle: the strategy's nominal payload accounting is
         // the single source of truth both engines charge. Under faults,
         // the script-known casualties override the radio outcome and the
         // retransmitted frames are charged on top.
+        let _apply = tel::span(Phase::Apply);
         let up_bits = self.strategy.uplink_bits(self.params.len());
         let down_bits = self.strategy.downlink_bits(self.params.len());
         let report = if self.plan.enabled() {
@@ -524,9 +536,12 @@ impl DistributedEngine {
         self.cum_sim_seconds += report.round_seconds;
         self.cum_energy_joules += report.energy_joules;
 
+        drop(_apply);
+
         // aggregate + apply the survivors (loss telemetry is not on the
         // wire, so the round loss comes from the side channel — over the
         // same survivor set the sequential engine averages)
+        let _decode = tel::span(Phase::Decode);
         let survivors: Vec<Uplink> = report
             .filter_survivors(uplinks)
             .into_iter()
@@ -553,6 +568,7 @@ impl DistributedEngine {
                 .collect();
             crate::algo::strategy::mean_loss_f32(&lv)
         };
+        drop(_decode);
 
         // delivery feedback: NACK every *live* casualty so its
         // worker-side strategy rolls back delivery-assuming encode state
@@ -564,10 +580,12 @@ impl DistributedEngine {
         // feedback is itself best-effort under faults, and the run stays
         // bit-reproducible because the loss is part of the plan.
         if !report.all_completed() {
+            let _t = tel::span(Phase::Apply);
             for (i, &c) in active.iter().enumerate() {
                 if report.outcome[i].delivered() || self.dead.contains_key(&c) {
                     continue;
                 }
+                tel::nack();
                 let nack = wire::seal(
                     WireNack {
                         round: k as u32,
@@ -623,9 +641,20 @@ impl DistributedEngine {
         record: Option<RoundRecord>,
         new_dead: &[usize],
     ) -> Result<()> {
+        // drain the per-thread span accumulators every round (even
+        // without a journal sink) so telemetry windows stay per-round,
+        // and refresh the round/gauge metrics while we're here
+        let span_ns = tel::drain_spans();
+        tel::set_exhausted_clients(self.simnet.exhausted_clients());
+        tel::round_complete();
         if self.log.is_none() {
             return Ok(());
         }
+        let host_phase_ms: Vec<f64> = if span_ns.iter().all(|&n| n == 0) {
+            Vec::new()
+        } else {
+            span_ns.iter().map(|&n| n as f64 / 1e6).collect()
+        };
         let close = RoundClose {
             round: k as u64,
             outcome: report.outcome.clone(),
@@ -638,6 +667,7 @@ impl DistributedEngine {
             ready_seconds: report.ready_seconds.clone(),
             finish_seconds: report.finish_seconds.clone(),
             new_dead: new_dead.to_vec(),
+            host_phase_ms,
             record,
         };
         let snapshot = ((k + 1) % self.cfg.runlog.snapshot_every == 0
@@ -649,6 +679,11 @@ impl DistributedEngine {
         log.push(&Event::RoundClosed(Box::new(close)))?;
         if let Some(snap) = snapshot {
             log.push(&snap)?;
+        }
+        if tel::enabled() {
+            // advisory sidecar next to the journal; metrics must never
+            // fail a round
+            let _ = tel::write_sidecar(log.path());
         }
         Ok(())
     }
@@ -873,8 +908,12 @@ impl DistributedEngine {
             }
         );
         self.fault_casualty_count += 1;
+        if cause == DeadCause::Crashed {
+            tel::fault_injected(tel::FaultKind::Crash);
+        }
         let needs_rollback = (script.computed && !script.delivered).then_some(k as u32);
         self.dead.insert(c, DeadInfo { needs_rollback });
+        tel::set_dead_clients(self.dead.len());
     }
 
     /// Respawn every dead worker from its checkpoint (respawn enabled
@@ -926,10 +965,12 @@ impl DistributedEngine {
             self.unsynced.insert(c);
             log_info!("worker {c}: respawned from checkpoint");
         }
+        tel::set_dead_clients(self.dead.len());
     }
 
     /// Evaluate and append one history record at the current counters.
     fn push_record(&mut self, k: usize, train_loss: f64, host_t0: Instant) -> Result<()> {
+        let _t = tel::span(Phase::Eval);
         let (test_loss, test_acc) =
             self.leader_backend
                 .evaluate(&self.params, &self.test_x, &self.test_y)?;

@@ -22,6 +22,7 @@ use crate::rng::SplitMix64;
 use crate::runlog::{Event, RoundClose, RunLog, SnapshotState};
 use crate::runtime::{Backend, ClientWorker, PureRustBackend, ScalarUpload, WorkerPool};
 use crate::simnet::{RoundReport, Sampler, SimNet};
+use crate::telemetry::{self, Phase};
 use crate::{log_debug, log_info};
 use std::sync::Arc;
 use std::time::Instant;
@@ -337,8 +338,11 @@ impl Engine {
         // participant selection (paper: server activates a subset per
         // round) — the sampler picks from the clients the availability
         // trace marks reachable, on the leader only
-        let avail = self.simnet.available(k as u64);
-        let active = self.sampler.select(&avail, self.simnet.profiles());
+        let active = {
+            let _t = telemetry::span(Phase::Select);
+            let avail = self.simnet.available(k as u64);
+            self.sampler.select(&avail, self.simnet.profiles())
+        };
         let k_active = active.len();
         if let Some(log) = self.log.as_mut() {
             log.push(&Event::RoundPlanned {
@@ -376,6 +380,7 @@ impl Engine {
         let stage = self.strategy.local_stage();
         match stage {
             LocalStage::Projected { dist, projections } => {
+                let _t = telemetry::span(Phase::Compute);
                 let mut seeds = Vec::with_capacity(k_active);
                 for &ci in &active {
                     let c = &mut self.clients[ci];
@@ -426,16 +431,20 @@ impl Engine {
                     // fill serially, fan out over borrowed buffers, then
                     // encode serially in client order (a strategy's RNG /
                     // state stream must not depend on the thread count)
-                    for &ci in &active {
-                        self.clients[ci].fill_round_batches(s, b);
-                    }
-                    let clients = &self.clients;
-                    let params = &self.params;
-                    let pool = self.pool.as_deref().expect("parallel implies pool");
-                    let deltas = fan_out(pool, &mut self.workers[..threads], k_active, |worker, i| {
-                        let c = &clients[active[i]];
-                        worker.client_delta(params, &c.xb, &c.yb, alpha)
-                    });
+                    let deltas = {
+                        let _t = telemetry::span(Phase::Compute);
+                        for &ci in &active {
+                            self.clients[ci].fill_round_batches(s, b);
+                        }
+                        let clients = &self.clients;
+                        let params = &self.params;
+                        let pool = self.pool.as_deref().expect("parallel implies pool");
+                        fan_out(pool, &mut self.workers[..threads], k_active, |worker, i| {
+                            let c = &clients[active[i]];
+                            worker.client_delta(params, &c.xb, &c.yb, alpha)
+                        })
+                    };
+                    let _t = telemetry::span(Phase::Encode);
                     for (i, res) in deltas.into_iter().enumerate() {
                         let (delta, loss) = res?;
                         uplinks.push(self.strategy.encode_delta(active[i], delta, loss)?);
@@ -443,10 +452,13 @@ impl Engine {
                 } else {
                     // serial path: one delta live at a time, no copies
                     for &ci in &active {
-                        let c = &mut self.clients[ci];
-                        c.fill_round_batches(s, b);
-                        let (delta, loss) =
-                            self.backend.client_delta(&self.params, &c.xb, &c.yb, alpha)?;
+                        let (delta, loss) = {
+                            let _t = telemetry::span(Phase::Compute);
+                            let c = &mut self.clients[ci];
+                            c.fill_round_batches(s, b);
+                            self.backend.client_delta(&self.params, &c.xb, &c.yb, alpha)?
+                        };
+                        let _t = telemetry::span(Phase::Encode);
                         uplinks.push(self.strategy.encode_delta(ci, delta, loss)?);
                     }
                 }
@@ -458,15 +470,20 @@ impl Engine {
         // accounting (also what the figures' x-axes and the wire tests
         // pin). The simulator charges broadcast, fading, slots, and the
         // deadline cutoff in one event-driven pass.
-        let up_bits = self.strategy.uplink_bits(self.params.len());
-        let down_bits = self.strategy.downlink_bits(self.params.len());
-        let report = self.simnet.run_round(&active, up_bits, down_bits);
-        self.cum_bits += report.uplink_bits as f64;
-        self.cum_downlink_bits += report.downlink_bits as f64;
-        self.cum_sim_seconds += report.round_seconds;
-        self.cum_energy_joules += report.energy_joules;
+        let report = {
+            let _t = telemetry::span(Phase::Apply);
+            let up_bits = self.strategy.uplink_bits(self.params.len());
+            let down_bits = self.strategy.downlink_bits(self.params.len());
+            let report = self.simnet.run_round(&active, up_bits, down_bits);
+            self.cum_bits += report.uplink_bits as f64;
+            self.cum_downlink_bits += report.downlink_bits as f64;
+            self.cum_sim_seconds += report.round_seconds;
+            self.cum_energy_joules += report.energy_joules;
+            report
+        };
 
         // --- aggregate + apply (survivors only) -------------------------------
+        let _decode = telemetry::span(Phase::Decode);
         let train_loss = if report.all_completed() {
             self.strategy
                 .aggregate_and_apply(self.backend.as_mut(), &mut self.params, &uplinks)?
@@ -490,6 +507,8 @@ impl Engine {
             }
         };
 
+        drop(_decode);
+
         // --- delivery feedback (NACK) -----------------------------------------
         // every casualty — cut at the deadline or never reaching its
         // upload slot — gets a NACK so encode-side strategy state (e.g.
@@ -498,8 +517,10 @@ impl Engine {
         // distributed leader emits its NACK frames, so both engines'
         // strategy state evolves identically.
         if !report.all_completed() {
+            let _t = telemetry::span(Phase::Apply);
             for (i, &ci) in active.iter().enumerate() {
                 if !report.outcome[i].delivered() {
+                    telemetry::nack();
                     self.strategy.on_dropped(ci, k as u64)?;
                 }
             }
@@ -533,9 +554,20 @@ impl Engine {
         report: &RoundReport,
         record: Option<RoundRecord>,
     ) -> Result<()> {
+        // drain the per-thread span accumulators every round (even
+        // without a journal sink) so telemetry windows stay per-round,
+        // and bump the round/dead-set counters while we're here
+        let span_ns = telemetry::drain_spans();
+        telemetry::set_exhausted_clients(self.simnet.exhausted_clients());
+        telemetry::round_complete();
         if self.log.is_none() {
             return Ok(());
         }
+        let host_phase_ms: Vec<f64> = if span_ns.iter().all(|&n| n == 0) {
+            Vec::new()
+        } else {
+            span_ns.iter().map(|&n| n as f64 / 1e6).collect()
+        };
         let close = RoundClose {
             round: k as u64,
             outcome: report.outcome.clone(),
@@ -548,6 +580,7 @@ impl Engine {
             ready_seconds: report.ready_seconds.clone(),
             finish_seconds: report.finish_seconds.clone(),
             new_dead: Vec::new(),
+            host_phase_ms,
             record,
         };
         // snapshot at the cadence boundary, skipping the final round
@@ -559,6 +592,11 @@ impl Engine {
         log.push(&Event::RoundClosed(Box::new(close)))?;
         if let Some(snap) = snapshot {
             log.push(&snap)?;
+        }
+        if telemetry::enabled() {
+            // advisory sidecar next to the journal; metrics must never
+            // fail a round
+            let _ = telemetry::write_sidecar(log.path());
         }
         Ok(())
     }
@@ -580,6 +618,7 @@ impl Engine {
 
     /// Evaluate and append one history record at the current counters.
     fn push_record(&mut self, k: usize, train_loss: f64, host_t0: Instant) -> Result<()> {
+        let _t = telemetry::span(Phase::Eval);
         let (test_loss, test_acc) = self
             .backend
             .evaluate(&self.params, &self.test.x, &self.test.y)?;

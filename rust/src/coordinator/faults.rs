@@ -446,12 +446,14 @@ impl FaultySender {
         match self.plan.fate(self.dir, self.round, self.client, idx) {
             FrameFate::Deliver => tx.send(frame).is_ok(),
             FrameFate::Drop => {
+                crate::telemetry::fault_injected(crate::telemetry::FaultKind::Drop);
                 // transmitted, lost in flight: bytes on the air are
                 // charged, nothing reaches the peer
                 tx.transmit_void(frame.len());
                 true
             }
             FrameFate::Corrupt => {
+                crate::telemetry::fault_injected(crate::telemetry::FaultKind::Corrupt);
                 let mut f = frame;
                 let nbits = f.len() * 8;
                 if nbits > 0 {
@@ -463,10 +465,12 @@ impl FaultySender {
                 tx.send(f).is_ok()
             }
             FrameFate::Duplicate => {
+                crate::telemetry::fault_injected(crate::telemetry::FaultKind::Duplicate);
                 let ok = tx.send(frame.clone()).is_ok();
                 tx.send(frame).is_ok() && ok
             }
             FrameFate::Delay => {
+                crate::telemetry::fault_injected(crate::telemetry::FaultKind::Delay);
                 std::thread::sleep(Duration::from_millis(self.plan.cfg().delay_ms));
                 tx.send(frame).is_ok()
             }

@@ -42,6 +42,8 @@ pub struct FrameSender {
 impl FrameSender {
     pub fn send(&self, frame: Vec<u8>) -> Result<(), &'static str> {
         self.stats.record(frame.len());
+        // byte 0 is the wire tag on every frame format, sealed or not
+        crate::telemetry::frame_sent(frame.first().copied().unwrap_or(0), frame.len());
         self.tx.send(frame).map_err(|_| "peer hung up")
     }
 

@@ -722,11 +722,13 @@ pub fn seal(mut frame: Vec<u8>) -> Vec<u8> {
 /// retransmission) instead of misdecoding or dying on it.
 pub fn unseal(sealed: &[u8]) -> Result<&[u8]> {
     if sealed.len() < 1 + CRC_TRAILER_BYTES {
+        crate::telemetry::crc_reject();
         return Err(Error::invariant("frame shorter than its CRC trailer"));
     }
     let (payload, trailer) = sealed.split_at(sealed.len() - CRC_TRAILER_BYTES);
     let want = u32::from_le_bytes(trailer.try_into().unwrap());
     if crc32(payload) != want {
+        crate::telemetry::crc_reject();
         return Err(Error::invariant("frame integrity check failed (CRC32)"));
     }
     Ok(payload)

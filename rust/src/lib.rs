@@ -57,6 +57,7 @@ pub mod rng;
 pub mod runlog;
 pub mod runtime;
 pub mod simnet;
+pub mod telemetry;
 pub mod tensor;
 pub mod testkit;
 pub mod util;

@@ -4,6 +4,7 @@
 //!   train       run one federated training run and write its history CSV
 //!   resume      continue a crashed run from its journal, bit-identically
 //!   report      per-round bottleneck analysis from a run journal
+//!   status      fold a run journal + telemetry sidecar into a run status view
 //!   suite       run the full four-method figure suite (Figs 2-6 data)
 //!   table1      print the paper's Table I (and the FedScalar counterpart)
 //!   strategies  list every registered strategy (name pattern + summary)
@@ -60,6 +61,7 @@ fn usage() -> String {
        train       one federated run (see `fedscalar train --help`)\n\
        resume      continue a crashed run from its journal (`--log`)\n\
        report      per-round bottleneck analysis from a run journal\n\
+       status      run status: journal + telemetry sidecar (FEDSCALAR_TELEMETRY=1)\n\
        suite       the four-method figure suite (Figs 2-6 data)\n\
        table1      print Table I (upload-time arithmetic)\n\
        strategies  list every registered strategy\n\
@@ -245,6 +247,7 @@ fn run_command(cmd: &str, rest: Vec<String>) -> Result<()> {
         "train" => cmd_train(rest),
         "resume" => cmd_resume(rest),
         "report" => cmd_report(rest),
+        "status" => cmd_status(rest),
         "suite" => cmd_suite(rest),
         "table1" => cmd_table1(),
         "strategies" => cmd_strategies(),
@@ -387,6 +390,21 @@ fn cmd_report(rest: Vec<String>) -> Result<()> {
     };
     let journal = fedscalar::runlog::Journal::parse_file(path)?;
     print!("{}", fedscalar::runlog::report::render(&journal));
+    Ok(())
+}
+
+fn cmd_status(rest: Vec<String>) -> Result<()> {
+    let a = Args::new(
+        "fedscalar status <log.jsonl>",
+        "run status from a journal + its telemetry sidecar (written when the \
+         run had FEDSCALAR_TELEMETRY=1): round rate, per-tag wire traffic, \
+         host phase times, pool utilization, faults, dead/exhausted clients",
+    )
+    .parse(rest)?;
+    let [path] = a.positionals() else {
+        return Err(Error::config("usage: fedscalar status <log.jsonl>"));
+    };
+    print!("{}", fedscalar::telemetry::status::render_path(path)?);
     Ok(())
 }
 

@@ -55,6 +55,12 @@ pub struct RoundClose {
     /// Clients that died this round (distributed fault layer) — refusals
     /// are not script-derivable, so replay needs the recorded ids.
     pub new_dead: Vec<usize>,
+    /// Host-side wall time per round phase (`telemetry::PHASE_NAMES`
+    /// order, milliseconds), drained from the telemetry spans. Empty —
+    /// and omitted from the line — unless `FEDSCALAR_TELEMETRY=1`, so
+    /// journals stay byte-identical with telemetry off. Advisory only:
+    /// replay ignores it, `fedscalar report` shows it.
+    pub host_phase_ms: Vec<f64>,
     /// The evaluated metrics record, present on eval rounds only.
     pub record: Option<RoundRecord>,
 }
@@ -137,6 +143,9 @@ impl Event {
                 fields.push(("finish_seconds".into(), f64_arr_json(&c.finish_seconds)));
                 if !c.new_dead.is_empty() {
                     fields.push(("new_dead".into(), usize_arr_json(&c.new_dead)));
+                }
+                if !c.host_phase_ms.is_empty() {
+                    fields.push(("host_phase_ms".into(), f64_arr_json(&c.host_phase_ms)));
                 }
                 if let Some(r) = &c.record {
                     fields.push(("record".into(), record_json(r)));
@@ -239,6 +248,10 @@ impl Event {
                     finish_seconds: f64_arr_of(&j, "finish_seconds")?,
                     new_dead: match j.get("new_dead") {
                         Some(_) => usize_arr_of(&j, "new_dead")?,
+                        None => Vec::new(),
+                    },
+                    host_phase_ms: match j.get("host_phase_ms") {
+                        Some(_) => f64_arr_of(&j, "host_phase_ms")?,
                         None => Vec::new(),
                     },
                     record,
@@ -506,6 +519,7 @@ mod tests {
             ready_seconds: vec![1.25, 1.5, f64::NAN],
             finish_seconds: vec![2.0, f64::NAN, f64::NAN],
             new_dead: vec![4],
+            host_phase_ms: vec![0.5, 0.0, 12.25, 0.0, 1.5, 0.125, 3.0],
             record: Some(sample_record(12, f64::NAN)),
         }));
         let back = roundtrip(&ev);
@@ -515,6 +529,7 @@ mod tests {
         };
         assert_eq!(a.outcome, b.outcome);
         assert_eq!(a.new_dead, b.new_dead);
+        assert_eq!(a.host_phase_ms, b.host_phase_ms);
         assert!(b.ready_seconds[2].is_nan() && b.finish_seconds[1].is_nan());
         assert_eq!(a.ready_seconds[..2], b.ready_seconds[..2]);
         let (ra, rb) = (a.record.as_ref().unwrap(), b.record.as_ref().unwrap());
@@ -537,10 +552,12 @@ mod tests {
             ready_seconds: vec![],
             finish_seconds: vec![],
             new_dead: vec![],
+            host_phase_ms: vec![],
             record: None,
         }));
         let line = ev.encode();
         assert!(!line.contains("new_dead") && !line.contains("record"));
+        assert!(!line.contains("host_phase_ms"));
         assert_eq!(roundtrip(&ev), ev);
     }
 

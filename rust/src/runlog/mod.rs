@@ -26,7 +26,7 @@
 //! malformed *interior* lines are corruption and refuse to parse.
 
 pub mod event;
-mod json;
+pub mod json;
 pub mod replay;
 pub mod report;
 
@@ -42,22 +42,30 @@ use std::path::Path;
 /// Append-only journal writer — the one sink both engines log through.
 pub struct RunLog {
     out: BufWriter<File>,
+    path: std::path::PathBuf,
 }
 
 impl RunLog {
     /// Create (truncate) a journal at `path`.
     pub fn create(path: impl AsRef<Path>) -> Result<RunLog> {
         Ok(RunLog {
-            out: BufWriter::new(File::create(path)?),
+            out: BufWriter::new(File::create(&path)?),
+            path: path.as_ref().to_path_buf(),
         })
     }
 
     /// Open an existing journal for appending (resume).
     pub fn append(path: impl AsRef<Path>) -> Result<RunLog> {
-        let f = OpenOptions::new().append(true).open(path)?;
+        let f = OpenOptions::new().append(true).open(&path)?;
         Ok(RunLog {
             out: BufWriter::new(f),
+            path: path.as_ref().to_path_buf(),
         })
+    }
+
+    /// Where the journal lives — the telemetry sidecar is derived from it.
+    pub fn path(&self) -> &Path {
+        &self.path
     }
 
     /// Append one event line and flush it to the OS — durability is the
@@ -66,8 +74,12 @@ impl RunLog {
     pub fn push(&mut self, ev: &Event) -> Result<()> {
         let mut line = ev.encode();
         line.push('\n');
+        let t0 = crate::telemetry::enabled().then(std::time::Instant::now);
         self.out.write_all(line.as_bytes())?;
         self.out.flush()?;
+        if let Some(t0) = t0 {
+            crate::telemetry::runlog_flush(t0.elapsed().as_secs_f64());
+        }
         Ok(())
     }
 }
@@ -236,6 +248,7 @@ mod tests {
             ready_seconds: vec![],
             finish_seconds: vec![],
             new_dead: vec![],
+            host_phase_ms: vec![],
             record: None,
         }))
         .encode()
@@ -337,6 +350,7 @@ mod tests {
                 ready_seconds: vec![],
                 finish_seconds: vec![],
                 new_dead: vec![],
+                host_phase_ms: vec![],
                 record: rec.map(record),
             }))
             .encode()

@@ -16,8 +16,16 @@
 //! the deadline cut someone, which the report surfaces first: a dropped
 //! upload wastes the whole round's airtime and energy for that client,
 //! so it dominates any within-deadline breakdown.
+//!
+//! Runs journaled under `FEDSCALAR_TELEMETRY=1` additionally carry
+//! host-side phase timings (`RoundClose.host_phase_ms`, from the
+//! telemetry spans); the `host_s(phase)` column puts real wall time next
+//! to the simulated clock, so a round the simnet calls upload-bound but
+//! the host spent decoding is visible at a glance. `-` when the run was
+//! not instrumented.
 
 use crate::runlog::Journal;
+use crate::telemetry::PHASE_NAMES;
 use std::fmt::Write;
 
 /// Largest non-NaN entry's index, or `None` if all are NaN/empty.
@@ -41,6 +49,20 @@ fn join_ids(ids: &[usize]) -> String {
         .join(",")
 }
 
+/// `total_host_seconds(dominant_phase)` from a round's span timings, or
+/// `-` for rounds journaled without telemetry.
+fn host_column(host_phase_ms: &[f64]) -> String {
+    if host_phase_ms.is_empty() {
+        return "-".to_string();
+    }
+    let total_s: f64 = host_phase_ms.iter().sum::<f64>() / 1e3;
+    let gate = argmax(host_phase_ms)
+        .and_then(|i| PHASE_NAMES.get(i))
+        .copied()
+        .unwrap_or("-");
+    format!("{total_s:.4}({gate})")
+}
+
 /// Render the per-round phase breakdown plus cumulative tallies.
 pub fn render(j: &Journal) -> String {
     let mut out = String::new();
@@ -54,8 +76,8 @@ pub fn render(j: &Journal) -> String {
     );
     let _ = writeln!(
         out,
-        "{:>6}  {:<9} {:>10} {:>10} {:>10} {:>10}  {}",
-        "round", "phase", "bcast_s", "compute_s", "upload_s", "total_s", "critical"
+        "{:>6}  {:<9} {:>10} {:>10} {:>10} {:>10} {:>16}  {}",
+        "round", "phase", "bcast_s", "compute_s", "upload_s", "total_s", "host_s(phase)", "critical"
     );
 
     let (mut up_bits, mut down_bits) = (0u64, 0u64);
@@ -110,9 +132,10 @@ pub fn render(j: &Journal) -> String {
         } else {
             format!("  [dead: {}]", join_ids(&close.new_dead))
         };
+        let host = host_column(&close.host_phase_ms);
         let _ = writeln!(
             out,
-            "{k:>6}  {phase:<9} {bcast:>10.4} {compute:>10.4} {upload:>10.4} {:>10.4}  {critical}{dead_note}",
+            "{k:>6}  {phase:<9} {bcast:>10.4} {compute:>10.4} {upload:>10.4} {:>10.4} {host:>16}  {critical}{dead_note}",
             close.round_seconds
         );
     }
@@ -149,6 +172,7 @@ mod tests {
             ready_seconds: vec![],
             finish_seconds: vec![],
             new_dead: vec![],
+            host_phase_ms: vec![],
             record: None,
         }
     }
@@ -230,5 +254,40 @@ mod tests {
         let text = render(&Journal::parse_str(&lines).unwrap());
         assert!(text.contains("compute"), "{text}");
         assert!(text.contains("client 4"), "{text}");
+    }
+
+    #[test]
+    fn host_column_shows_total_and_dominant_phase() {
+        let mut with_host = close(0, vec![Delivery::Delivered], (0.1, 0.2, 0.3));
+        // select/broadcast/compute/encode/decode/apply/eval, ms
+        with_host.host_phase_ms = vec![1.0, 0.0, 40.0, 0.0, 2.0, 0.5, 6.0];
+        let lines = [
+            Event::RunStarted(RunStarted {
+                engine: "sequential".into(),
+                backend: "pure-rust".into(),
+                run_seed: 1,
+                config_toml: String::new(),
+            })
+            .encode(),
+            Event::RoundPlanned {
+                round: 0,
+                active: vec![2],
+            }
+            .encode(),
+            Event::RoundClosed(Box::new(with_host)).encode(),
+            Event::RoundPlanned {
+                round: 1,
+                active: vec![2],
+            }
+            .encode(),
+            Event::RoundClosed(Box::new(close(1, vec![Delivery::Delivered], (0.1, 0.2, 0.3))))
+                .encode(),
+        ]
+        .join("\n");
+        let text = render(&Journal::parse_str(&lines).unwrap());
+        // 49.5 ms total, compute dominates
+        assert!(text.contains("0.0495(compute)"), "{text}");
+        // the uninstrumented round renders a placeholder, not zeros
+        assert!(text.contains(" -  "), "{text}");
     }
 }

@@ -28,13 +28,16 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::OnceLock;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// A job once it is on the wire: erased to `'static` (see the SAFETY
-/// argument in [`WorkerPool::scoped`]) and paired with the per-call
-/// completion channel it must ack on.
+/// argument in [`WorkerPool::scoped`]), paired with the per-call
+/// completion channel it must ack on, and stamped at enqueue when
+/// telemetry is on (queue-wait = enqueue -> task start).
 type Shuttle = (
     Box<dyn FnOnce() + Send + 'static>,
     Sender<Option<Box<dyn std::any::Any + Send>>>,
+    Option<Instant>,
 );
 
 /// The spawned threads + their feed channels (exists only after first use).
@@ -69,8 +72,16 @@ impl WorkerPool {
             let handle = std::thread::Builder::new()
                 .name(format!("fedscalar-worker-{i}"))
                 .spawn(move || {
-                    while let Ok((task, done)) = rx.recv() {
+                    while let Ok((task, done, enqueued)) = rx.recv() {
+                        let started = enqueued.map(|_| Instant::now());
                         let panic = catch_unwind(AssertUnwindSafe(task)).err();
+                        if let (Some(enq), Some(t0)) = (enqueued, started) {
+                            crate::telemetry::pool_task(
+                                i,
+                                t0.saturating_duration_since(enq).as_nanos() as u64,
+                                t0.elapsed().as_nanos() as u64,
+                            );
+                        }
                         // the receiver may only be gone if the submitting
                         // call itself is unwinding; nothing left to tell
                         let _ = done.send(panic);
@@ -109,6 +120,7 @@ impl WorkerPool {
         }
         let inner = self.inner.get_or_init(|| Self::spawn(self.target));
         let (done_tx, done_rx) = channel();
+        let telemetry_on = crate::telemetry::enabled();
         let mut sent = 0usize;
         let mut send_failed = false;
         for (i, job) in jobs.into_iter().enumerate() {
@@ -125,7 +137,8 @@ impl WorkerPool {
                     Box<dyn FnOnce() + Send + 'static>,
                 >(job)
             };
-            if inner.task_txs[i].send((task, done_tx.clone())).is_err() {
+            let enqueued = telemetry_on.then(Instant::now);
+            if inner.task_txs[i].send((task, done_tx.clone(), enqueued)).is_err() {
                 send_failed = true; // settle what was sent, then panic
                 break;
             }

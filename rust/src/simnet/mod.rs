@@ -640,6 +640,10 @@ impl SimNet {
         let dropped = outcome.iter().filter(|o| !o.delivered()).count();
 
         self.clock_s += round_seconds;
+        // batteries just drained — refresh the exhaustion gauge (gated,
+        // host-side only; the engines re-set it at round close too so
+        // idle rounds stay covered)
+        crate::telemetry::set_exhausted_clients(self.exhausted_clients());
         RoundReport {
             outcome,
             round_seconds,

@@ -1,0 +1,927 @@
+//! Lock-light, zero-perturbation observability.
+//!
+//! Everything the engines compute is a pure function of
+//! `(config, run_seed, round)`; this module exists to watch that
+//! computation without ever becoming part of it. The contract, pinned by
+//! `tests/telemetry.rs`:
+//!
+//! * telemetry reads **host clocks only** — it never draws from a seeded
+//!   stream, never writes `RunHistory`, never changes a wire byte;
+//! * `RunHistory` is bit-identical with telemetry on vs off, for both
+//!   engines, any `fed.threads`, and under an enabled `FaultPlan`;
+//! * disabled (no `FEDSCALAR_TELEMETRY=1`) the hooks cost one relaxed
+//!   atomic load and a predictable branch — no allocation, no lock, no
+//!   syscall.
+//!
+//! Three layers:
+//!
+//! 1. **Primitives** ([`Counter`], [`Gauge`], [`Histogram`]) — plain
+//!    relaxed atomics, *ungated*: a local instance always records, which
+//!    keeps unit tests independent of the process-wide switch.
+//! 2. **The global [`Registry`]** — every metric the binary exports, as
+//!    named fields (no interior maps, no registration lock): fixed-index
+//!    families for wire tags, fault kinds, log levels, round phases, and
+//!    pool workers. Enumerable, so both expositions always emit the full
+//!    catalog (`rust/telemetry_expected.txt` pins the names).
+//! 3. **Gated hooks** (`frame_sent`, `crc_reject`, [`span`], ...) — the
+//!    one-liners instrumented code calls; each checks [`enabled`] first.
+//!
+//! Span timers are RAII ([`SpanGuard`]) and accumulate into a
+//! thread-local array — the hot path pays one `Instant::now` pair per
+//! span and touches nothing shared. [`drain_spans`] folds the
+//! thread-local into the registry at round boundaries and hands the
+//! per-round nanoseconds back to the engine (which forwards them into
+//! the journal's `RoundClose.host_phase_ms`).
+//!
+//! Exposition: [`render_prometheus`] (text format) and
+//! [`snapshot_json`] / [`write_sidecar`] (a JSON snapshot written next
+//! to the run journal, folded into `fedscalar status <log>` by
+//! [`status`]).
+
+pub mod status;
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::runlog::json::Json;
+
+// ---------------------------------------------------------------------
+// The switch
+// ---------------------------------------------------------------------
+
+const FORCE_ENV: u8 = 0;
+const FORCE_OFF: u8 = 1;
+const FORCE_ON: u8 = 2;
+
+/// Test/bench override; `FORCE_ENV` defers to the environment.
+static FORCED: AtomicU8 = AtomicU8::new(FORCE_ENV);
+
+fn env_enabled() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| matches!(std::env::var("FEDSCALAR_TELEMETRY").as_deref(), Ok("1")))
+}
+
+/// Is telemetry collecting? Reads `FEDSCALAR_TELEMETRY=1` once per
+/// process; [`force`] overrides it for tests and benches.
+#[inline]
+pub fn enabled() -> bool {
+    match FORCED.load(Ordering::Relaxed) {
+        FORCE_OFF => false,
+        FORCE_ON => true,
+        _ => env_enabled(),
+    }
+}
+
+/// Override the env gate: `Some(on)` forces, `None` restores env
+/// control. For tests and benches only — the zero-perturbation contract
+/// means toggling this mid-run cannot change any result, only whether
+/// the registry sees it.
+pub fn force(mode: Option<bool>) {
+    let v = match mode {
+        None => FORCE_ENV,
+        Some(false) => FORCE_OFF,
+        Some(true) => FORCE_ON,
+    };
+    FORCED.store(v, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// Primitives (ungated — gating lives in the hooks)
+// ---------------------------------------------------------------------
+
+/// Monotone event count (relaxed atomic).
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Last-write-wins instantaneous value (relaxed atomic).
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Fixed-bucket histogram with compile-time bucket count and
+/// construction-time edges: `buckets[i]` counts samples `v <= edges[i]`
+/// (first matching edge), `overflow` the rest. The sum accumulates as
+/// f64 bits under a CAS loop — recording is rare enough (per flush, not
+/// per coordinate) that contention is not a concern.
+pub struct Histogram<const B: usize> {
+    edges: [f64; B],
+    buckets: [AtomicU64; B],
+    overflow: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl<const B: usize> Histogram<B> {
+    pub fn new(edges: [f64; B]) -> Histogram<B> {
+        assert!(edges.windows(2).all(|w| w[0] < w[1]), "edges not ascending");
+        Histogram {
+            edges,
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            overflow: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: f64) {
+        match self.edges.iter().position(|&e| v <= e) {
+            Some(i) => self.buckets[i].fetch_add(1, Ordering::Relaxed),
+            None => self.overflow.fetch_add(1, Ordering::Relaxed),
+        };
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self
+                .sum_bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn edges(&self) -> &[f64; B] {
+        &self.edges
+    }
+
+    /// Per-bucket counts, overflow last (`B + 1` entries).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        let mut out: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        out.push(self.overflow.load(Ordering::Relaxed));
+        out
+    }
+
+    pub fn count(&self) -> u64 {
+        self.bucket_counts().iter().sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fixed-index label families
+// ---------------------------------------------------------------------
+
+/// Exposition names for the wire-tag family: builtin tags 1..=10 by
+/// name, everything else (dynamic strategy tags included) under
+/// `other`.
+pub const TAG_NAMES: [&str; 11] = [
+    "scalar",
+    "dense",
+    "quantized",
+    "model",
+    "sparse",
+    "signs",
+    "plan",
+    "nack",
+    "goodbye",
+    "uplink",
+    "other",
+];
+
+/// Map a wire tag byte to its [`TAG_NAMES`] index.
+pub fn tag_index(tag: u8) -> usize {
+    if (1..=10).contains(&tag) {
+        (tag - 1) as usize
+    } else {
+        TAG_NAMES.len() - 1
+    }
+}
+
+/// Injected fault kinds (mirrors `coordinator::faults::FrameFate` minus
+/// `Deliver`, plus worker crashes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Drop = 0,
+    Corrupt = 1,
+    Duplicate = 2,
+    Delay = 3,
+    Crash = 4,
+}
+
+pub const FAULT_KIND_NAMES: [&str; 5] = ["drop", "corrupt", "duplicate", "delay", "crash"];
+
+/// Exposition names for `util::logger::Level` (same order as the enum).
+pub const LEVEL_NAMES: [&str; 5] = ["error", "warn", "info", "debug", "trace"];
+
+/// Round phases both engines span. The sequential engine has no
+/// broadcast wire phase (count stays 0); in the distributed engine
+/// `Compute` is the leader-side collect wait while workers compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Select = 0,
+    Broadcast = 1,
+    Compute = 2,
+    Encode = 3,
+    Decode = 4,
+    Apply = 5,
+    Eval = 6,
+}
+
+pub const NUM_PHASES: usize = 7;
+pub const PHASE_NAMES: [&str; NUM_PHASES] = [
+    "select",
+    "broadcast",
+    "compute",
+    "encode",
+    "decode",
+    "apply",
+    "eval",
+];
+
+/// Per-worker pool slots tracked individually; workers beyond the cap
+/// fold into the label-free pool totals only.
+pub const MAX_POOL_WORKERS: usize = 64;
+
+/// `fedscalar_runlog_flush_seconds` bucket edges (seconds).
+pub const FLUSH_EDGES: [f64; 7] = [0.00005, 0.0002, 0.001, 0.005, 0.02, 0.1, 0.5];
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// Every metric this binary exports, as plain fields — no maps, no
+/// registration lock, fully enumerable for exposition.
+pub struct Registry {
+    start: Instant,
+    pub rounds: Counter,
+    pub tx_frames: [Counter; TAG_NAMES.len()],
+    pub tx_bytes: [Counter; TAG_NAMES.len()],
+    pub crc_rejects: Counter,
+    pub retries: Counter,
+    pub nacks: Counter,
+    pub faults: [Counter; FAULT_KIND_NAMES.len()],
+    pub log_messages: [Counter; LEVEL_NAMES.len()],
+    pub projection_blocks: Counter,
+    pub projection_chunks: Counter,
+    pub dead_clients: Gauge,
+    pub exhausted_clients: Gauge,
+    pub phase_ns: [Counter; NUM_PHASES],
+    pub phase_spans: [Counter; NUM_PHASES],
+    pub pool_queue_wait_ns: [Counter; MAX_POOL_WORKERS],
+    pub pool_busy_ns: [Counter; MAX_POOL_WORKERS],
+    pub pool_tasks: [Counter; MAX_POOL_WORKERS],
+    pub runlog_flush_seconds: Histogram<7>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            start: Instant::now(),
+            rounds: Counter::new(),
+            tx_frames: std::array::from_fn(|_| Counter::new()),
+            tx_bytes: std::array::from_fn(|_| Counter::new()),
+            crc_rejects: Counter::new(),
+            retries: Counter::new(),
+            nacks: Counter::new(),
+            faults: std::array::from_fn(|_| Counter::new()),
+            log_messages: std::array::from_fn(|_| Counter::new()),
+            projection_blocks: Counter::new(),
+            projection_chunks: Counter::new(),
+            dead_clients: Gauge::new(),
+            exhausted_clients: Gauge::new(),
+            phase_ns: std::array::from_fn(|_| Counter::new()),
+            phase_spans: std::array::from_fn(|_| Counter::new()),
+            pool_queue_wait_ns: std::array::from_fn(|_| Counter::new()),
+            pool_busy_ns: std::array::from_fn(|_| Counter::new()),
+            pool_tasks: std::array::from_fn(|_| Counter::new()),
+            runlog_flush_seconds: Histogram::new(FLUSH_EDGES),
+        }
+    }
+
+    pub fn uptime_seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The process-wide registry all gated hooks feed.
+pub fn global() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::new)
+}
+
+// ---------------------------------------------------------------------
+// Gated hooks (the instrumentation surface)
+// ---------------------------------------------------------------------
+
+/// A frame put on a leader<->worker channel (`tag` = first frame byte).
+#[inline]
+pub fn frame_sent(tag: u8, bytes: usize) {
+    if !enabled() {
+        return;
+    }
+    let i = tag_index(tag);
+    let r = global();
+    r.tx_frames[i].add(1);
+    r.tx_bytes[i].add(bytes as u64);
+}
+
+/// A sealed frame failed its CRC32 check and was rejected.
+#[inline]
+pub fn crc_reject() {
+    if enabled() {
+        global().crc_rejects.add(1);
+    }
+}
+
+/// A downlink retransmission beyond the first attempt.
+#[inline]
+pub fn retry() {
+    if enabled() {
+        global().retries.add(1);
+    }
+}
+
+/// A delivery NACK issued to a client whose upload missed the round.
+#[inline]
+pub fn nack() {
+    if enabled() {
+        global().nacks.add(1);
+    }
+}
+
+/// The fault layer injected a fault of `kind`.
+#[inline]
+pub fn fault_injected(kind: FaultKind) {
+    if enabled() {
+        global().faults[kind as usize].add(1);
+    }
+}
+
+/// The logger emitted (passed its level filter) one message at `level`
+/// (`Level as usize`).
+#[inline]
+pub fn log_message(level: usize) {
+    if enabled() {
+        if let Some(c) = global().log_messages.get(level) {
+            c.add(1);
+        }
+    }
+}
+
+/// One pool task settled on `worker`: `queue_wait_ns` between submit and
+/// task start, `busy_ns` executing.
+#[inline]
+pub fn pool_task(worker: usize, queue_wait_ns: u64, busy_ns: u64) {
+    if !enabled() || worker >= MAX_POOL_WORKERS {
+        return;
+    }
+    let r = global();
+    r.pool_queue_wait_ns[worker].add(queue_wait_ns);
+    r.pool_busy_ns[worker].add(busy_ns);
+    r.pool_tasks[worker].add(1);
+}
+
+/// One run-journal event written through (write + flush), in seconds.
+#[inline]
+pub fn runlog_flush(seconds: f64) {
+    if enabled() {
+        global().runlog_flush_seconds.record(seconds);
+    }
+}
+
+/// `n` projection v-stream blocks generated (V_BLOCK-sized).
+#[inline]
+pub fn projection_blocks(n: u64) {
+    if enabled() {
+        global().projection_blocks.add(n);
+    }
+}
+
+/// `n` fixed-shape decode macro-chunks reduced.
+#[inline]
+pub fn projection_chunks(n: u64) {
+    if enabled() {
+        global().projection_chunks.add(n);
+    }
+}
+
+/// Current dead-worker set size (distributed engine).
+#[inline]
+pub fn set_dead_clients(n: usize) {
+    if enabled() {
+        global().dead_clients.set(n as u64);
+    }
+}
+
+/// Current battery-exhausted client count (simnet).
+#[inline]
+pub fn set_exhausted_clients(n: usize) {
+    if enabled() {
+        global().exhausted_clients.set(n as u64);
+    }
+}
+
+/// One engine round completed.
+#[inline]
+pub fn round_complete() {
+    if enabled() {
+        global().rounds.add(1);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spans: RAII timers, per-thread accumulation
+// ---------------------------------------------------------------------
+
+thread_local! {
+    /// (nanoseconds, span count) per phase, drained at round boundaries.
+    static SPAN_ACC: RefCell<[(u64, u64); NUM_PHASES]> =
+        const { RefCell::new([(0, 0); NUM_PHASES]) };
+}
+
+/// RAII phase timer: armed only while telemetry is enabled; on drop it
+/// adds the elapsed host time to this thread's accumulator. Nothing
+/// shared is touched until [`drain_spans`].
+pub struct SpanGuard {
+    phase: usize,
+    start: Option<Instant>,
+}
+
+/// Open a span over `phase`; close it by dropping the guard.
+#[inline]
+pub fn span(phase: Phase) -> SpanGuard {
+    SpanGuard {
+        phase: phase as usize,
+        start: enabled().then(Instant::now),
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            let ns = t0.elapsed().as_nanos() as u64;
+            SPAN_ACC.with(|acc| {
+                let mut acc = acc.borrow_mut();
+                acc[self.phase].0 += ns;
+                acc[self.phase].1 += 1;
+            });
+        }
+    }
+}
+
+/// Fold this thread's span accumulator into the global registry and
+/// return the per-phase nanoseconds since the last drain (all zeros
+/// while disabled — the engines forward a non-zero result into the
+/// journal's `host_phase_ms`). Call at round boundaries, on the thread
+/// that ran the spans.
+pub fn drain_spans() -> [u64; NUM_PHASES] {
+    let taken = SPAN_ACC.with(|acc| std::mem::take(&mut *acc.borrow_mut()));
+    let r = global();
+    let mut out = [0u64; NUM_PHASES];
+    for (i, (ns, count)) in taken.into_iter().enumerate() {
+        out[i] = ns;
+        if count > 0 {
+            r.phase_ns[i].add(ns);
+            r.phase_spans[i].add(count);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Exposition: Prometheus text format
+// ---------------------------------------------------------------------
+
+fn prom_family(out: &mut String, name: &str, kind: &str, rows: &[(Option<(&str, &str)>, String)]) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    for (label, value) in rows {
+        match label {
+            Some((k, v)) => {
+                let _ = writeln!(out, "{name}{{{k}=\"{v}\"}} {value}");
+            }
+            None => {
+                let _ = writeln!(out, "{name} {value}");
+            }
+        }
+    }
+}
+
+fn counter_rows<'a, const N: usize>(
+    label: &'a str,
+    names: &'a [&'a str],
+    counters: &[Counter; N],
+) -> Vec<(Option<(&'a str, &'a str)>, String)> {
+    names
+        .iter()
+        .zip(counters.iter())
+        .map(|(n, c)| (Some((label, *n)), c.get().to_string()))
+        .collect()
+}
+
+/// Render `r` in the Prometheus text exposition format. Deterministic
+/// order; every catalog family always present (per-worker pool rows only
+/// for workers that ran a task — the label-free pool totals always
+/// exist).
+pub fn render_prometheus(r: &Registry) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    prom_family(
+        &mut out,
+        "fedscalar_uptime_seconds",
+        "gauge",
+        &[(None, format!("{}", r.uptime_seconds()))],
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_rounds_total",
+        "counter",
+        &[(None, r.rounds.get().to_string())],
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_wire_tx_frames_total",
+        "counter",
+        &counter_rows("tag", &TAG_NAMES, &r.tx_frames),
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_wire_tx_bytes_total",
+        "counter",
+        &counter_rows("tag", &TAG_NAMES, &r.tx_bytes),
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_wire_crc_rejects_total",
+        "counter",
+        &[(None, r.crc_rejects.get().to_string())],
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_wire_retries_total",
+        "counter",
+        &[(None, r.retries.get().to_string())],
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_nacks_total",
+        "counter",
+        &[(None, r.nacks.get().to_string())],
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_faults_injected_total",
+        "counter",
+        &counter_rows("kind", &FAULT_KIND_NAMES, &r.faults),
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_log_messages_total",
+        "counter",
+        &counter_rows("level", &LEVEL_NAMES, &r.log_messages),
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_projection_blocks_total",
+        "counter",
+        &[(None, r.projection_blocks.get().to_string())],
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_projection_decode_chunks_total",
+        "counter",
+        &[(None, r.projection_chunks.get().to_string())],
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_dead_clients",
+        "gauge",
+        &[(None, r.dead_clients.get().to_string())],
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_battery_exhausted_clients",
+        "gauge",
+        &[(None, r.exhausted_clients.get().to_string())],
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_phase_host_ns_total",
+        "counter",
+        &counter_rows("phase", &PHASE_NAMES, &r.phase_ns),
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_phase_spans_total",
+        "counter",
+        &counter_rows("phase", &PHASE_NAMES, &r.phase_spans),
+    );
+    let (mut qw, mut busy, mut tasks) = (0u64, 0u64, 0u64);
+    for w in 0..MAX_POOL_WORKERS {
+        qw += r.pool_queue_wait_ns[w].get();
+        busy += r.pool_busy_ns[w].get();
+        tasks += r.pool_tasks[w].get();
+    }
+    prom_family(
+        &mut out,
+        "fedscalar_pool_queue_wait_ns_total",
+        "counter",
+        &[(None, qw.to_string())],
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_pool_busy_ns_total",
+        "counter",
+        &[(None, busy.to_string())],
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_pool_tasks_total",
+        "counter",
+        &[(None, tasks.to_string())],
+    );
+    for w in 0..MAX_POOL_WORKERS {
+        if r.pool_tasks[w].get() == 0 {
+            continue;
+        }
+        let _ = writeln!(
+            out,
+            "fedscalar_pool_worker_queue_wait_ns_total{{worker=\"{w}\"}} {}",
+            r.pool_queue_wait_ns[w].get()
+        );
+        let _ = writeln!(
+            out,
+            "fedscalar_pool_worker_busy_ns_total{{worker=\"{w}\"}} {}",
+            r.pool_busy_ns[w].get()
+        );
+        let _ = writeln!(
+            out,
+            "fedscalar_pool_worker_tasks_total{{worker=\"{w}\"}} {}",
+            r.pool_tasks[w].get()
+        );
+    }
+    let h = &r.runlog_flush_seconds;
+    let _ = writeln!(out, "# TYPE fedscalar_runlog_flush_seconds histogram");
+    let mut cum = 0u64;
+    for (edge, count) in h.edges().iter().zip(h.bucket_counts()) {
+        cum += count;
+        let _ = writeln!(
+            out,
+            "fedscalar_runlog_flush_seconds_bucket{{le=\"{edge}\"}} {cum}"
+        );
+    }
+    let _ = writeln!(
+        out,
+        "fedscalar_runlog_flush_seconds_bucket{{le=\"+Inf\"}} {}",
+        h.count()
+    );
+    let _ = writeln!(out, "fedscalar_runlog_flush_seconds_sum {}", h.sum());
+    let _ = writeln!(out, "fedscalar_runlog_flush_seconds_count {}", h.count());
+    out
+}
+
+// ---------------------------------------------------------------------
+// Exposition: JSON snapshot sidecar
+// ---------------------------------------------------------------------
+
+fn labeled(name: &str, label: &str, value: &str) -> String {
+    format!("{name}{{{label}=\"{value}\"}}")
+}
+
+/// Flat JSON snapshot of `r`: one key per exposition row (labels spelled
+/// into the key), histograms as `{edges, buckets, sum, count}` objects.
+/// Same catalog guarantee as [`render_prometheus`].
+pub fn snapshot_json(r: &Registry) -> Json {
+    let mut fields: Vec<(String, Json)> = Vec::new();
+    let mut num = |fields: &mut Vec<(String, Json)>, k: String, v: f64| {
+        fields.push((k, Json::Num(v)));
+    };
+    num(
+        &mut fields,
+        "fedscalar_uptime_seconds".into(),
+        r.uptime_seconds(),
+    );
+    num(&mut fields, "fedscalar_rounds_total".into(), r.rounds.get() as f64);
+    for (i, name) in TAG_NAMES.iter().enumerate() {
+        num(
+            &mut fields,
+            labeled("fedscalar_wire_tx_frames_total", "tag", name),
+            r.tx_frames[i].get() as f64,
+        );
+        num(
+            &mut fields,
+            labeled("fedscalar_wire_tx_bytes_total", "tag", name),
+            r.tx_bytes[i].get() as f64,
+        );
+    }
+    num(
+        &mut fields,
+        "fedscalar_wire_crc_rejects_total".into(),
+        r.crc_rejects.get() as f64,
+    );
+    num(
+        &mut fields,
+        "fedscalar_wire_retries_total".into(),
+        r.retries.get() as f64,
+    );
+    num(&mut fields, "fedscalar_nacks_total".into(), r.nacks.get() as f64);
+    for (i, name) in FAULT_KIND_NAMES.iter().enumerate() {
+        num(
+            &mut fields,
+            labeled("fedscalar_faults_injected_total", "kind", name),
+            r.faults[i].get() as f64,
+        );
+    }
+    for (i, name) in LEVEL_NAMES.iter().enumerate() {
+        num(
+            &mut fields,
+            labeled("fedscalar_log_messages_total", "level", name),
+            r.log_messages[i].get() as f64,
+        );
+    }
+    num(
+        &mut fields,
+        "fedscalar_projection_blocks_total".into(),
+        r.projection_blocks.get() as f64,
+    );
+    num(
+        &mut fields,
+        "fedscalar_projection_decode_chunks_total".into(),
+        r.projection_chunks.get() as f64,
+    );
+    num(
+        &mut fields,
+        "fedscalar_dead_clients".into(),
+        r.dead_clients.get() as f64,
+    );
+    num(
+        &mut fields,
+        "fedscalar_battery_exhausted_clients".into(),
+        r.exhausted_clients.get() as f64,
+    );
+    for (i, name) in PHASE_NAMES.iter().enumerate() {
+        num(
+            &mut fields,
+            labeled("fedscalar_phase_host_ns_total", "phase", name),
+            r.phase_ns[i].get() as f64,
+        );
+        num(
+            &mut fields,
+            labeled("fedscalar_phase_spans_total", "phase", name),
+            r.phase_spans[i].get() as f64,
+        );
+    }
+    let (mut qw, mut busy, mut tasks) = (0u64, 0u64, 0u64);
+    for w in 0..MAX_POOL_WORKERS {
+        qw += r.pool_queue_wait_ns[w].get();
+        busy += r.pool_busy_ns[w].get();
+        tasks += r.pool_tasks[w].get();
+    }
+    num(&mut fields, "fedscalar_pool_queue_wait_ns_total".into(), qw as f64);
+    num(&mut fields, "fedscalar_pool_busy_ns_total".into(), busy as f64);
+    num(&mut fields, "fedscalar_pool_tasks_total".into(), tasks as f64);
+    for w in 0..MAX_POOL_WORKERS {
+        if r.pool_tasks[w].get() == 0 {
+            continue;
+        }
+        let ws = w.to_string();
+        num(
+            &mut fields,
+            labeled("fedscalar_pool_worker_queue_wait_ns_total", "worker", &ws),
+            r.pool_queue_wait_ns[w].get() as f64,
+        );
+        num(
+            &mut fields,
+            labeled("fedscalar_pool_worker_busy_ns_total", "worker", &ws),
+            r.pool_busy_ns[w].get() as f64,
+        );
+        num(
+            &mut fields,
+            labeled("fedscalar_pool_worker_tasks_total", "worker", &ws),
+            r.pool_tasks[w].get() as f64,
+        );
+    }
+    let h = &r.runlog_flush_seconds;
+    fields.push((
+        "fedscalar_runlog_flush_seconds".into(),
+        Json::Obj(vec![
+            (
+                "edges".into(),
+                Json::Arr(h.edges().iter().map(|&e| Json::Num(e)).collect()),
+            ),
+            (
+                "buckets".into(),
+                Json::Arr(h.bucket_counts().iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+            ("sum".into(), Json::Num(h.sum())),
+            ("count".into(), Json::Num(h.count() as f64)),
+        ]),
+    ));
+    Json::Obj(fields)
+}
+
+/// Where the metrics snapshot lives relative to a run journal:
+/// `run.jsonl` -> `run.metrics.json`.
+pub fn sidecar_path(journal: &Path) -> PathBuf {
+    journal.with_extension("metrics.json")
+}
+
+/// Write the global registry's JSON snapshot next to `journal`. Errors
+/// are returned, not raised — telemetry must never fail a run; callers
+/// drop the result.
+pub fn write_sidecar(journal: &Path) -> std::io::Result<()> {
+    let body = snapshot_json(global()).to_json_string();
+    std::fs::write(sidecar_path(journal), body + "\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tag_indices_cover_builtin_and_fold_the_rest() {
+        assert_eq!(tag_index(1), 0); // scalar
+        assert_eq!(tag_index(10), 9); // uplink
+        assert_eq!(tag_index(0), 10); // other
+        assert_eq!(tag_index(32), 10); // dynamic -> other
+        assert_eq!(tag_index(255), 10);
+    }
+
+    #[test]
+    fn counters_and_gauges_are_plain_atomics() {
+        let c = Counter::new();
+        c.add(3);
+        c.add(4);
+        assert_eq!(c.get(), 7);
+        let g = Gauge::new();
+        g.set(9);
+        g.set(2);
+        assert_eq!(g.get(), 2);
+    }
+
+    #[test]
+    fn sidecar_path_swaps_the_extension() {
+        assert_eq!(
+            sidecar_path(Path::new("/tmp/run.jsonl")),
+            PathBuf::from("/tmp/run.metrics.json")
+        );
+    }
+
+    #[test]
+    fn snapshot_emits_the_full_catalog_on_a_fresh_registry() {
+        let r = Registry::new();
+        let j = snapshot_json(&r);
+        for key in [
+            "fedscalar_rounds_total",
+            "fedscalar_wire_tx_frames_total{tag=\"scalar\"}",
+            "fedscalar_faults_injected_total{kind=\"crash\"}",
+            "fedscalar_log_messages_total{level=\"trace\"}",
+            "fedscalar_phase_host_ns_total{phase=\"eval\"}",
+            "fedscalar_pool_tasks_total",
+            "fedscalar_runlog_flush_seconds",
+        ] {
+            assert!(j.get(key).is_some(), "snapshot missing {key}");
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! `fedscalar status <log>`: one screen folding the run journal and the
+//! telemetry sidecar (`<log>.metrics.json`, written every round while
+//! `FEDSCALAR_TELEMETRY=1`) into a live view of a running — or finished,
+//! or crashed — run: round progress and rate, the sim-time gating-phase
+//! tally, host-side phase costs, per-tag wire traffic, injected faults,
+//! pool worker utilization, and the dead/exhausted client sets.
+//!
+//! The journal side tolerates a torn final line (`Journal::parse_str`),
+//! so `status` works mid-run on a log whose last event is still being
+//! written. A missing sidecar degrades to the journal-only view with a
+//! pointer at the env switch — never an error.
+
+use crate::runlog::json::Json;
+use crate::runlog::Journal;
+use crate::telemetry::{FAULT_KIND_NAMES, MAX_POOL_WORKERS, PHASE_NAMES, TAG_NAMES};
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Parse the journal at `path`, pick up its metrics sidecar if present,
+/// and render the status screen.
+pub fn render_path(path: impl AsRef<Path>) -> crate::error::Result<String> {
+    let journal = Journal::parse_file(&path)?;
+    let sidecar = crate::telemetry::sidecar_path(path.as_ref());
+    let metrics = std::fs::read_to_string(&sidecar)
+        .ok()
+        .and_then(|text| crate::runlog::json::parse(&text).ok());
+    Ok(render(
+        &journal,
+        metrics.as_ref(),
+        &sidecar.display().to_string(),
+    ))
+}
+
+fn metric(m: Option<&Json>, key: &str) -> Option<f64> {
+    m?.get(key)?.as_f64()
+}
+
+fn labeled(name: &str, label: &str, value: &str) -> String {
+    format!("{name}{{{label}=\"{value}\"}}")
+}
+
+fn fmt_ms(ns: f64) -> String {
+    format!("{:.2}ms", ns / 1e6)
+}
+
+/// Render the status screen from a parsed journal plus the (optional)
+/// sidecar snapshot object.
+pub fn render(j: &Journal, m: Option<&Json>, sidecar_display: &str) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "run: engine={} backend={} seed={}{}",
+        j.start.engine,
+        j.start.backend,
+        j.start.run_seed,
+        if j.finished { "" } else { " (unfinished)" }
+    );
+
+    // -- journal side: progress + sim-time gating tally + dead set -----
+    let mut closed = 0u64;
+    let mut idle = 0u64;
+    let (mut gate_deadline, mut gate_bcast, mut gate_compute, mut gate_upload) =
+        (0u64, 0u64, 0u64, 0u64);
+    let mut dead: BTreeSet<usize> = BTreeSet::new();
+    for entry in j.rounds.values() {
+        let Some(close) = &entry.close else { continue };
+        closed += 1;
+        dead.extend(close.new_dead.iter().copied());
+        if entry.active.is_empty() {
+            idle += 1;
+            continue;
+        }
+        let drops = entry
+            .active
+            .iter()
+            .zip(&close.outcome)
+            .filter(|(_, o)| !o.delivered())
+            .count();
+        let bcast = close.bcast_seconds;
+        let compute = (close.phase_start_seconds - close.bcast_seconds).max(0.0);
+        let upload = (close.round_seconds - close.phase_start_seconds).max(0.0);
+        if drops > 0 {
+            gate_deadline += 1;
+        } else if bcast >= compute && bcast >= upload {
+            gate_bcast += 1;
+        } else if compute >= upload {
+            gate_compute += 1;
+        } else {
+            gate_upload += 1;
+        }
+    }
+    let _ = writeln!(
+        out,
+        "rounds: {closed} closed / {} journaled ({idle} idle)",
+        j.rounds.len()
+    );
+    if let (Some(rounds), Some(uptime)) = (
+        metric(m, "fedscalar_rounds_total"),
+        metric(m, "fedscalar_uptime_seconds"),
+    ) {
+        if uptime > 0.0 {
+            let _ = writeln!(
+                out,
+                "round rate: {:.2} rounds/s ({rounds:.0} rounds in {uptime:.2}s uptime)",
+                rounds / uptime
+            );
+        }
+    }
+    let _ = writeln!(
+        out,
+        "sim gating: deadline={gate_deadline} bcast={gate_bcast} compute={gate_compute} upload={gate_upload}"
+    );
+
+    // -- sidecar side: host phases, wire, faults, pool -----------------
+    let Some(m) = m else {
+        let _ = writeln!(
+            out,
+            "(no metrics sidecar at {sidecar_display} — run with FEDSCALAR_TELEMETRY=1)"
+        );
+        let _ = write_clients(&mut out, &dead, None);
+        return out;
+    };
+
+    let mut host = String::new();
+    for phase in PHASE_NAMES {
+        let ns = metric(
+            Some(m),
+            &labeled("fedscalar_phase_host_ns_total", "phase", phase),
+        )
+        .unwrap_or(0.0);
+        let spans = metric(
+            Some(m),
+            &labeled("fedscalar_phase_spans_total", "phase", phase),
+        )
+        .unwrap_or(0.0);
+        if spans > 0.0 {
+            let _ = write!(host, " {phase}={}", fmt_ms(ns / spans));
+        }
+    }
+    if !host.is_empty() {
+        let _ = writeln!(out, "host phases (per-span mean):{host}");
+    }
+
+    let _ = writeln!(out, "wire:");
+    let _ = writeln!(out, "  {:<10} {:>8} {:>12}", "tag", "frames", "bytes");
+    let mut any_frames = false;
+    for tag in TAG_NAMES {
+        let frames = metric(
+            Some(m),
+            &labeled("fedscalar_wire_tx_frames_total", "tag", tag),
+        )
+        .unwrap_or(0.0);
+        if frames == 0.0 {
+            continue;
+        }
+        any_frames = true;
+        let bytes = metric(
+            Some(m),
+            &labeled("fedscalar_wire_tx_bytes_total", "tag", tag),
+        )
+        .unwrap_or(0.0);
+        let _ = writeln!(out, "  {tag:<10} {frames:>8.0} {bytes:>12.0}");
+    }
+    if !any_frames {
+        let _ = writeln!(out, "  (no frames recorded)");
+    }
+    let _ = writeln!(
+        out,
+        "  crc-rejects={:.0} retries={:.0} nacks={:.0}",
+        metric(Some(m), "fedscalar_wire_crc_rejects_total").unwrap_or(0.0),
+        metric(Some(m), "fedscalar_wire_retries_total").unwrap_or(0.0),
+        metric(Some(m), "fedscalar_nacks_total").unwrap_or(0.0),
+    );
+
+    let mut faults = String::new();
+    for kind in FAULT_KIND_NAMES {
+        let n = metric(
+            Some(m),
+            &labeled("fedscalar_faults_injected_total", "kind", kind),
+        )
+        .unwrap_or(0.0);
+        if n > 0.0 {
+            let _ = write!(faults, " {kind}={n:.0}");
+        }
+    }
+    let _ = writeln!(
+        out,
+        "faults injected:{}",
+        if faults.is_empty() { " none" } else { &faults }
+    );
+
+    let mut pool_rows = String::new();
+    for w in 0..MAX_POOL_WORKERS {
+        let ws = w.to_string();
+        let Some(tasks) = metric(
+            Some(m),
+            &labeled("fedscalar_pool_worker_tasks_total", "worker", &ws),
+        ) else {
+            continue;
+        };
+        let wait = metric(
+            Some(m),
+            &labeled("fedscalar_pool_worker_queue_wait_ns_total", "worker", &ws),
+        )
+        .unwrap_or(0.0);
+        let busy = metric(
+            Some(m),
+            &labeled("fedscalar_pool_worker_busy_ns_total", "worker", &ws),
+        )
+        .unwrap_or(0.0);
+        let busy_share = if wait + busy > 0.0 {
+            100.0 * busy / (wait + busy)
+        } else {
+            0.0
+        };
+        let _ = writeln!(
+            pool_rows,
+            "  {w:<7} {tasks:>6.0} {:>12} {:>12} {busy_share:>6.1}",
+            fmt_ms(wait),
+            fmt_ms(busy),
+        );
+    }
+    if pool_rows.is_empty() {
+        let _ = writeln!(out, "pool: no tasks recorded");
+    } else {
+        let _ = writeln!(out, "pool:");
+        let _ = writeln!(
+            out,
+            "  {:<7} {:>6} {:>12} {:>12} {:>6}",
+            "worker", "tasks", "queue-wait", "busy", "busy%"
+        );
+        out.push_str(&pool_rows);
+    }
+
+    let _ = write_clients(&mut out, &dead, Some(m));
+    out
+}
+
+fn write_clients(out: &mut String, dead: &BTreeSet<usize>, m: Option<&Json>) -> std::fmt::Result {
+    let ids = dead
+        .iter()
+        .map(|c| c.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    let exhausted = metric(m, "fedscalar_battery_exhausted_clients")
+        .map_or(String::new(), |n| format!("  battery-exhausted={n:.0}"));
+    if dead.is_empty() {
+        writeln!(out, "clients: dead=0{exhausted}")
+    } else {
+        writeln!(out, "clients: dead={} ({ids}){exhausted}", dead.len())
+    }
+}

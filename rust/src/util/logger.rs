@@ -59,6 +59,7 @@ pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
     if !enabled(l) {
         return;
     }
+    crate::telemetry::log_message(l as usize);
     let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
     let tag = match l {
         Level::Error => "ERROR",
@@ -78,10 +79,16 @@ macro_rules! log_warn { ($($arg:tt)*) => { $crate::util::logger::log($crate::uti
 macro_rules! log_info { ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Info, format_args!($($arg)*)) } }
 #[macro_export]
 macro_rules! log_debug { ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Debug, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Trace, format_args!($($arg)*)) } }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
+
+    /// Serializes tests that mutate the global LEVEL.
+    static LEVEL_LOCK: Mutex<()> = Mutex::new(());
 
     #[test]
     fn parse_levels() {
@@ -92,6 +99,7 @@ mod tests {
 
     #[test]
     fn level_ordering_gates() {
+        let _guard = LEVEL_LOCK.lock().unwrap();
         set_level(Level::Warn);
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
@@ -99,5 +107,22 @@ mod tests {
         set_level(Level::Info);
         assert!(enabled(Level::Info));
         assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn trace_macro_emits_and_is_counted() {
+        let _guard = LEVEL_LOCK.lock().unwrap();
+        crate::telemetry::force(Some(true));
+        set_level(Level::Trace);
+        let counter = &crate::telemetry::global().log_messages[Level::Trace as usize];
+        let before = counter.get();
+        crate::log_trace!("trace is wired through: {}", 42);
+        assert!(counter.get() >= before + 1, "emitted trace not counted");
+        // below the filter: not emitted, not counted
+        set_level(Level::Info);
+        let muted = counter.get();
+        crate::log_trace!("filtered out");
+        assert_eq!(counter.get(), muted);
+        crate::telemetry::force(None);
     }
 }

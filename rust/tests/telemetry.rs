@@ -1,0 +1,406 @@
+//! Telemetry contract suite: the observability layer must never perturb
+//! the science.
+//!
+//! The invariants under test:
+//! * `RunHistory` is bit-identical with telemetry forced on vs forced
+//!   off — for the sequential and the distributed engine, at any
+//!   `fed.threads`, and under an enabled fault plan (spans, counters and
+//!   the sidecar all read host clocks only; nothing feeds back);
+//! * histogram samples land in the documented bucket: `v <= edge` picks
+//!   the first matching edge, beyond the last edge is overflow;
+//! * the Prometheus exposition is byte-stable for a known registry
+//!   state (golden), uptime aside;
+//! * `status` renders round rate, per-tag wire counters and per-worker
+//!   pool utilization from a real journaled run, and still works on a
+//!   journal whose final line is torn mid-write.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use fedscalar::algo::Method;
+use fedscalar::config::ExperimentConfig;
+use fedscalar::coordinator::engine::run_pure_rust;
+use fedscalar::coordinator::DistributedEngine;
+use fedscalar::metrics::{same_histories, RunHistory};
+use fedscalar::rng::VDistribution;
+use fedscalar::telemetry;
+
+/// `telemetry::force` flips process-global state; every test that
+/// touches it holds this lock for its whole body.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// RAII forcing: restores the env-driven default even if the test
+/// panics, so a failure here cannot cascade into the other gated tests.
+struct Forced;
+
+impl Forced {
+    fn set(on: bool) -> Forced {
+        telemetry::force(Some(on));
+        Forced
+    }
+}
+
+impl Drop for Forced {
+    fn drop(&mut self) {
+        telemetry::force(None);
+    }
+}
+
+fn cfg(method: Method, rounds: usize, agents: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.fed.method = method;
+    cfg.fed.rounds = rounds;
+    cfg.fed.eval_every = 2;
+    cfg.fed.num_agents = agents;
+    cfg
+}
+
+fn run_dist(c: &ExperimentConfig, run_seed: u64) -> RunHistory {
+    DistributedEngine::from_config(c, run_seed)
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "fedscalar_telemetry_{tag}_{}.jsonl",
+        std::process::id()
+    ))
+}
+
+fn cleanup(journal: &Path) {
+    let _ = std::fs::remove_file(journal);
+    let _ = std::fs::remove_file(telemetry::sidecar_path(journal));
+}
+
+// ---------------------------------------------------------------------
+// Zero-perturbation: history bit-identity on vs off
+// ---------------------------------------------------------------------
+
+#[test]
+fn sequential_history_is_bit_identical_with_telemetry_on() {
+    let _g = gate();
+    // Rademacher single-stream and Normal multi-stream (the latter takes
+    // the chunked decode path whose chunk counter must stay pure)
+    let methods = [
+        Method::fedscalar(VDistribution::Rademacher, 1),
+        Method::fedscalar(VDistribution::Normal, 2),
+    ];
+    for method in methods {
+        for threads in [1usize, 4] {
+            let mut c = cfg(method.clone(), 8, 4);
+            c.fed.threads = threads;
+            let off = {
+                let _f = Forced::set(false);
+                run_pure_rust(&c, 9).unwrap()
+            };
+            let on = {
+                let _f = Forced::set(true);
+                run_pure_rust(&c, 9).unwrap()
+            };
+            assert!(
+                same_histories(&off, &on),
+                "telemetry perturbed the sequential engine ({} threads={threads})",
+                method.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn distributed_history_is_bit_identical_with_telemetry_on() {
+    let _g = gate();
+    for threads in [1usize, 4] {
+        let mut c = cfg(Method::fedscalar(VDistribution::Rademacher, 1), 8, 4);
+        c.fed.threads = threads;
+        let off = {
+            let _f = Forced::set(false);
+            run_dist(&c, 6)
+        };
+        let on = {
+            let _f = Forced::set(true);
+            run_dist(&c, 6)
+        };
+        assert!(
+            same_histories(&off, &on),
+            "telemetry perturbed the distributed engine (threads={threads})"
+        );
+    }
+}
+
+#[test]
+fn faulted_distributed_history_is_bit_identical_with_telemetry_on() {
+    // the chaos case: drops, corruption, duplicates and crash/respawn all
+    // firing while every fault/retry/nack counter records them — the
+    // protocol outcome must not move by a bit
+    let _g = gate();
+    let mut c = cfg(Method::fedscalar(VDistribution::Rademacher, 1), 10, 4);
+    c.faults.seed = 42;
+    c.faults.drop = 0.2;
+    c.faults.corrupt = 0.1;
+    c.faults.duplicate = 0.1;
+    c.faults.crash = 0.3;
+    c.faults.respawn = true;
+    c.faults.retry_budget = 6;
+    assert!(c.faults.enabled());
+    let off = {
+        let _f = Forced::set(false);
+        run_dist(&c, 5)
+    };
+    let on = {
+        let _f = Forced::set(true);
+        run_dist(&c, 5)
+    };
+    assert!(
+        same_histories(&off, &on),
+        "telemetry perturbed the faulted distributed engine"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Primitives
+// ---------------------------------------------------------------------
+
+#[test]
+fn histogram_places_boundary_samples_in_their_edge_bucket() {
+    let h = telemetry::Histogram::new([0.001, 0.01, 0.1]);
+    h.record(0.0005); // below first edge
+    h.record(0.001); // exactly on an edge: v <= edge keeps it there
+    h.record(0.05);
+    h.record(0.5); // beyond the last edge: overflow
+    assert_eq!(h.bucket_counts(), vec![2, 0, 1, 1]);
+    assert_eq!(h.count(), 4);
+    let expect = 0.0005 + 0.001 + 0.05 + 0.5;
+    assert!((h.sum() - expect).abs() < 1e-12, "sum drifted: {}", h.sum());
+}
+
+// ---------------------------------------------------------------------
+// Exposition golden
+// ---------------------------------------------------------------------
+
+const PROM_GOLDEN: &str = "\
+# TYPE fedscalar_uptime_seconds gauge
+fedscalar_uptime_seconds <uptime>
+# TYPE fedscalar_rounds_total counter
+fedscalar_rounds_total 3
+# TYPE fedscalar_wire_tx_frames_total counter
+fedscalar_wire_tx_frames_total{tag=\"scalar\"} 2
+fedscalar_wire_tx_frames_total{tag=\"dense\"} 0
+fedscalar_wire_tx_frames_total{tag=\"quantized\"} 0
+fedscalar_wire_tx_frames_total{tag=\"model\"} 0
+fedscalar_wire_tx_frames_total{tag=\"sparse\"} 0
+fedscalar_wire_tx_frames_total{tag=\"signs\"} 0
+fedscalar_wire_tx_frames_total{tag=\"plan\"} 0
+fedscalar_wire_tx_frames_total{tag=\"nack\"} 0
+fedscalar_wire_tx_frames_total{tag=\"goodbye\"} 0
+fedscalar_wire_tx_frames_total{tag=\"uplink\"} 0
+fedscalar_wire_tx_frames_total{tag=\"other\"} 0
+# TYPE fedscalar_wire_tx_bytes_total counter
+fedscalar_wire_tx_bytes_total{tag=\"scalar\"} 16
+fedscalar_wire_tx_bytes_total{tag=\"dense\"} 0
+fedscalar_wire_tx_bytes_total{tag=\"quantized\"} 0
+fedscalar_wire_tx_bytes_total{tag=\"model\"} 0
+fedscalar_wire_tx_bytes_total{tag=\"sparse\"} 0
+fedscalar_wire_tx_bytes_total{tag=\"signs\"} 0
+fedscalar_wire_tx_bytes_total{tag=\"plan\"} 0
+fedscalar_wire_tx_bytes_total{tag=\"nack\"} 0
+fedscalar_wire_tx_bytes_total{tag=\"goodbye\"} 0
+fedscalar_wire_tx_bytes_total{tag=\"uplink\"} 0
+fedscalar_wire_tx_bytes_total{tag=\"other\"} 0
+# TYPE fedscalar_wire_crc_rejects_total counter
+fedscalar_wire_crc_rejects_total 0
+# TYPE fedscalar_wire_retries_total counter
+fedscalar_wire_retries_total 0
+# TYPE fedscalar_nacks_total counter
+fedscalar_nacks_total 0
+# TYPE fedscalar_faults_injected_total counter
+fedscalar_faults_injected_total{kind=\"drop\"} 0
+fedscalar_faults_injected_total{kind=\"corrupt\"} 0
+fedscalar_faults_injected_total{kind=\"duplicate\"} 0
+fedscalar_faults_injected_total{kind=\"delay\"} 0
+fedscalar_faults_injected_total{kind=\"crash\"} 1
+# TYPE fedscalar_log_messages_total counter
+fedscalar_log_messages_total{level=\"error\"} 0
+fedscalar_log_messages_total{level=\"warn\"} 0
+fedscalar_log_messages_total{level=\"info\"} 7
+fedscalar_log_messages_total{level=\"debug\"} 0
+fedscalar_log_messages_total{level=\"trace\"} 0
+# TYPE fedscalar_projection_blocks_total counter
+fedscalar_projection_blocks_total 10
+# TYPE fedscalar_projection_decode_chunks_total counter
+fedscalar_projection_decode_chunks_total 0
+# TYPE fedscalar_dead_clients gauge
+fedscalar_dead_clients 1
+# TYPE fedscalar_battery_exhausted_clients gauge
+fedscalar_battery_exhausted_clients 0
+# TYPE fedscalar_phase_host_ns_total counter
+fedscalar_phase_host_ns_total{phase=\"select\"} 0
+fedscalar_phase_host_ns_total{phase=\"broadcast\"} 0
+fedscalar_phase_host_ns_total{phase=\"compute\"} 1500
+fedscalar_phase_host_ns_total{phase=\"encode\"} 0
+fedscalar_phase_host_ns_total{phase=\"decode\"} 0
+fedscalar_phase_host_ns_total{phase=\"apply\"} 0
+fedscalar_phase_host_ns_total{phase=\"eval\"} 0
+# TYPE fedscalar_phase_spans_total counter
+fedscalar_phase_spans_total{phase=\"select\"} 0
+fedscalar_phase_spans_total{phase=\"broadcast\"} 0
+fedscalar_phase_spans_total{phase=\"compute\"} 2
+fedscalar_phase_spans_total{phase=\"encode\"} 0
+fedscalar_phase_spans_total{phase=\"decode\"} 0
+fedscalar_phase_spans_total{phase=\"apply\"} 0
+fedscalar_phase_spans_total{phase=\"eval\"} 0
+# TYPE fedscalar_pool_queue_wait_ns_total counter
+fedscalar_pool_queue_wait_ns_total 100
+# TYPE fedscalar_pool_busy_ns_total counter
+fedscalar_pool_busy_ns_total 2000
+# TYPE fedscalar_pool_tasks_total counter
+fedscalar_pool_tasks_total 4
+fedscalar_pool_worker_queue_wait_ns_total{worker=\"1\"} 100
+fedscalar_pool_worker_busy_ns_total{worker=\"1\"} 2000
+fedscalar_pool_worker_tasks_total{worker=\"1\"} 4
+# TYPE fedscalar_runlog_flush_seconds histogram
+fedscalar_runlog_flush_seconds_bucket{le=\"0.00005\"} 0
+fedscalar_runlog_flush_seconds_bucket{le=\"0.0002\"} 1
+fedscalar_runlog_flush_seconds_bucket{le=\"0.001\"} 1
+fedscalar_runlog_flush_seconds_bucket{le=\"0.005\"} 1
+fedscalar_runlog_flush_seconds_bucket{le=\"0.02\"} 1
+fedscalar_runlog_flush_seconds_bucket{le=\"0.1\"} 1
+fedscalar_runlog_flush_seconds_bucket{le=\"0.5\"} 2
+fedscalar_runlog_flush_seconds_bucket{le=\"+Inf\"} 2
+fedscalar_runlog_flush_seconds_sum 0.2501220703125
+fedscalar_runlog_flush_seconds_count 2
+";
+
+#[test]
+fn prometheus_exposition_matches_the_golden_text() {
+    // a local registry driven to a known state; the whole catalog must
+    // render, zero rows included, in a fixed order — uptime is the only
+    // wall-clock-dependent line and gets pinned before comparing
+    let r = telemetry::Registry::new();
+    r.rounds.add(3);
+    r.tx_frames[0].add(2);
+    r.tx_bytes[0].add(16);
+    r.faults[4].add(1); // crash
+    r.log_messages[2].add(7); // info
+    r.projection_blocks.add(10);
+    r.dead_clients.set(1);
+    r.phase_ns[2].add(1500); // compute
+    r.phase_spans[2].add(2);
+    r.pool_queue_wait_ns[1].add(100);
+    r.pool_busy_ns[1].add(2000);
+    r.pool_tasks[1].add(4);
+    // dyadic samples so the rendered sum is exact: 2^-13 and 2^-2
+    r.runlog_flush_seconds.record(0.0001220703125);
+    r.runlog_flush_seconds.record(0.25);
+
+    let rendered = telemetry::render_prometheus(&r);
+    let mut lines: Vec<String> = rendered.lines().map(str::to_string).collect();
+    assert!(
+        lines[1].starts_with("fedscalar_uptime_seconds "),
+        "unexpected line order: {}",
+        lines[1]
+    );
+    lines[1] = "fedscalar_uptime_seconds <uptime>".to_string();
+    let mut pinned = lines.join("\n");
+    pinned.push('\n');
+    assert_eq!(pinned, PROM_GOLDEN);
+}
+
+#[test]
+fn json_snapshot_carries_the_same_catalog() {
+    let r = telemetry::Registry::new();
+    r.tx_frames[3].add(5); // model
+    let snap = telemetry::snapshot_json(&r);
+    let frames = snap
+        .get("fedscalar_wire_tx_frames_total{tag=\"model\"}")
+        .and_then(|v| v.as_f64())
+        .unwrap();
+    assert_eq!(frames, 5.0);
+    // the histogram is an {edges, buckets, sum, count} object
+    let hist = snap.get("fedscalar_runlog_flush_seconds").unwrap();
+    assert_eq!(hist.get("count").and_then(|v| v.as_f64()), Some(0.0));
+    assert_eq!(
+        hist.get("edges").and_then(|v| v.as_arr()).map(|a| a.len()),
+        Some(telemetry::FLUSH_EDGES.len())
+    );
+}
+
+// ---------------------------------------------------------------------
+// Status surface
+// ---------------------------------------------------------------------
+
+#[test]
+fn status_renders_rate_wire_and_pool_from_a_journaled_run() {
+    let _g = gate();
+    let _f = Forced::set(true);
+    // a threads=4 sequential run first: the pool counters are
+    // process-global, so the sidecar the next run writes includes the
+    // per-worker utilization rows status must render
+    let mut warm = cfg(Method::fedscalar(VDistribution::Rademacher, 1), 4, 4);
+    warm.fed.threads = 4;
+    run_pure_rust(&warm, 1).unwrap();
+
+    // the journaled run: distributed, so plan/model/scalar frames flow
+    let c = cfg(Method::fedscalar(VDistribution::Rademacher, 1), 8, 4);
+    let path = tmp("status");
+    let mut eng = DistributedEngine::from_config(&c, 2).unwrap();
+    eng.set_runlog(
+        fedscalar::runlog::start_run(&path, "distributed", "pure-rust", 2, &c).unwrap(),
+    );
+    eng.run().unwrap();
+    assert!(
+        telemetry::sidecar_path(&path).is_file(),
+        "round close did not write the metrics sidecar"
+    );
+
+    let text = telemetry::status::render_path(&path).unwrap();
+    assert!(text.contains("engine=distributed"), "{text}");
+    assert!(text.contains("rounds: 8 closed / 8 journaled"), "{text}");
+    assert!(text.contains("round rate: "), "{text}");
+    // per-tag wire counters: the downlink model frames and the scalar
+    // uplinks of this method must both show up as table rows
+    assert!(text.contains("\n  model "), "no model wire row:\n{text}");
+    assert!(text.contains("\n  scalar "), "no scalar wire row:\n{text}");
+    // per-worker pool utilization from the warm-up run
+    assert!(text.contains("pool:"), "{text}");
+    assert!(text.contains("busy%"), "{text}");
+    assert!(text.contains("host phases (per-span mean):"), "{text}");
+    cleanup(&path);
+}
+
+#[test]
+fn status_survives_a_torn_final_journal_line_and_a_missing_sidecar() {
+    let _g = gate();
+    // telemetry off: no sidecar gets written — status must degrade to
+    // the journal-only view instead of erroring
+    let _f = Forced::set(false);
+    let c = cfg(Method::fedscalar(VDistribution::Rademacher, 1), 6, 3);
+    let path = tmp("torn");
+    let mut eng = DistributedEngine::from_config(&c, 4).unwrap();
+    eng.set_runlog(
+        fedscalar::runlog::start_run(&path, "distributed", "pure-rust", 4, &c).unwrap(),
+    );
+    eng.run().unwrap();
+
+    // tear the final line mid-write, as a crash would
+    let text = std::fs::read_to_string(&path).unwrap();
+    let torn = &text[..text.trim_end().len() - 7];
+    std::fs::write(&path, torn).unwrap();
+
+    let rendered = telemetry::status::render_path(&path).unwrap();
+    assert!(rendered.contains("rounds: "), "{rendered}");
+    assert!(
+        rendered.contains("no metrics sidecar"),
+        "missing-sidecar hint absent:\n{rendered}"
+    );
+    assert!(
+        rendered.contains("FEDSCALAR_TELEMETRY=1"),
+        "{rendered}"
+    );
+    cleanup(&path);
+}

@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# Fail if the telemetry snapshot JSON is missing any expected metric
+# name — catches metrics that silently dropped out of the exposition
+# catalog (renamed, gated away, never registered) before a dashboard or
+# the status surface goes dark.
+#
+#   scripts/check_metric_names.sh [TELEMETRY.json] [EXPECTED.txt]
+#
+# Defaults check the quick-mode snapshot verify.sh / CI produce. A
+# listed name passes if it is an exact key or a labelled family: some
+# key starting with `name{`.
+set -euo pipefail
+
+json="${1:-rust/TELEMETRY_hotpath.quick.json}"
+expected="${2:-rust/telemetry_expected.txt}"
+
+python3 - "$json" "$expected" <<'PY'
+import json
+import sys
+
+json_path, expected_path = sys.argv[1], sys.argv[2]
+with open(json_path) as f:
+    keys = set(json.load(f))
+with open(expected_path) as f:
+    expected = [l.strip() for l in f if l.strip() and not l.lstrip().startswith("#")]
+
+def present(name):
+    if name in keys:
+        return True
+    prefix = name + "{"
+    return any(k.startswith(prefix) for k in keys)
+
+missing = [name for name in expected if not present(name)]
+if missing:
+    print(f"{json_path}: {len(missing)} expected metric name(s) missing:")
+    for name in missing:
+        print(f"  - {name}")
+    sys.exit(1)
+print(f"{json_path}: all {len(expected)} expected metric names present ({len(keys)} keys)")
+PY
