@@ -6,6 +6,12 @@
 //! [`strategy::register`] and implement [`Strategy`]; no coordinator
 //! edits needed (see the Strategy API section of ROADMAP.md).
 
+// Doc debt: this subsystem predates the crate-level `missing_docs`
+// warning (added with the daemon PR, which held coordinator/, runlog/,
+// telemetry/, and daemon/ to it). Public items below still need doc
+// comments; remove this allow once they have them.
+#![allow(missing_docs)]
+
 pub mod fedavg;
 pub mod fedscalar;
 pub mod local_sgd;

@@ -17,11 +17,17 @@ use std::path::{Path, PathBuf};
 /// Federated optimization hyper-parameters (Algorithm 1 knobs).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FedConfig {
+    /// Number of agents N.
     pub num_agents: usize,
+    /// Communication rounds K.
     pub rounds: usize,
+    /// Local SGD steps S per round.
     pub local_steps: usize,
+    /// Minibatch size B.
     pub batch_size: usize,
+    /// Local stepsize α.
     pub alpha: f32,
+    /// The federated method (strategy) under test.
     pub method: Method,
     /// Evaluate every `eval_every` rounds (1 = every round).
     pub eval_every: usize,
@@ -85,21 +91,92 @@ impl Default for RunLogConfig {
 }
 
 impl RunLogConfig {
+    /// Is a journal sink configured?
     pub fn enabled(&self) -> bool {
         self.path.is_some()
+    }
+}
+
+/// `fedscalar serve` daemon configuration (`[daemon]` TOML table +
+/// `--control`/`--http`/`--runs-dir` flags). Deliberately NOT part of
+/// [`ExperimentConfig`]: the daemon hosts many experiments, and the
+/// journal preamble's config round-trip must stay free of host-local
+/// socket addresses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DaemonConfig {
+    /// Line-delimited-JSON control socket bind address (submit / list /
+    /// status / cancel / wait / shutdown). Port 0 binds an ephemeral
+    /// port (tests).
+    pub control_addr: String,
+    /// Plain-TCP HTTP/1.0 bind address serving `GET /metrics`,
+    /// `GET /metrics/<run>`, and `GET /status/<run>`.
+    pub http_addr: String,
+    /// Directory holding one `<run-name>.jsonl` journal per submitted
+    /// run. Scanned at startup: every unfinished journal is re-attached
+    /// via replay and continued bit-identically.
+    pub runs_dir: PathBuf,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            control_addr: "127.0.0.1:7878".to_string(),
+            http_addr: "127.0.0.1:7879".to_string(),
+            runs_dir: PathBuf::from("runs"),
+        }
+    }
+}
+
+impl DaemonConfig {
+    /// Read the `[daemon]` table from a TOML file (omitted keys keep the
+    /// defaults). The file may be a full experiment config — only the
+    /// `[daemon]` table is read here.
+    pub fn from_toml_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse the `[daemon]` table from TOML text.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = Document::parse(text)?;
+        let mut cfg = Self::default();
+        if let Some(v) = doc.get("daemon", "control_addr") {
+            cfg.control_addr = v
+                .as_str()
+                .ok_or_else(|| Error::config("daemon.control_addr must be a string"))?
+                .to_string();
+        }
+        if let Some(v) = doc.get("daemon", "http_addr") {
+            cfg.http_addr = v
+                .as_str()
+                .ok_or_else(|| Error::config("daemon.http_addr must be a string"))?
+                .to_string();
+        }
+        if let Some(v) = doc.get("daemon", "runs_dir") {
+            cfg.runs_dir = PathBuf::from(
+                v.as_str()
+                    .ok_or_else(|| Error::config("daemon.runs_dir must be a string"))?,
+            );
+        }
+        Ok(cfg)
     }
 }
 
 /// Top-level experiment configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
+    /// Federated optimization hyper-parameters.
     pub fed: FedConfig,
+    /// Model architecture.
     pub model: ModelSpec,
+    /// Channel / schedule / transmit-power model (paper §III).
     pub network: NetworkConfig,
     /// The scenario surface (sampling, availability, deadlines, device
     /// heterogeneity, downlink timing). Default = the paper's §III model.
     pub scenario: ScenarioConfig,
+    /// Where training data comes from.
     pub data: DataSource,
+    /// Directory holding the AOT artifacts (HLO + data CSVs).
     pub artifacts_dir: PathBuf,
     /// Label-skew Dirichlet alpha; None = IID (the paper's setting).
     pub dirichlet_alpha: Option<f64>,
@@ -136,6 +213,8 @@ impl ExperimentConfig {
         cfg
     }
 
+    /// Reject configurations no engine could run (zero counts,
+    /// non-positive rates, contradictory selection policies, ...).
     pub fn validate(&self) -> Result<()> {
         let f = &self.fed;
         if f.num_agents == 0 {
@@ -211,6 +290,8 @@ impl ExperimentConfig {
         Self::from_toml_str(&text)
     }
 
+    /// Parse TOML text (any omitted key keeps the paper default); the
+    /// result is validated before it is returned.
     pub fn from_toml_str(text: &str) -> Result<Self> {
         let doc = Document::parse(text)?;
         let mut cfg = Self::paper_section_iii();
@@ -678,6 +759,21 @@ source = "synthetic"
         let text = cfg.to_toml_string().unwrap();
         let back = ExperimentConfig::from_toml_str(&text).unwrap();
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn daemon_table_parses_and_defaults() {
+        let cfg = DaemonConfig::from_toml_str(
+            "[daemon]\ncontrol_addr = \"127.0.0.1:0\"\nhttp_addr = \"0.0.0.0:9102\"\nruns_dir = \"/tmp/fleet\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.control_addr, "127.0.0.1:0");
+        assert_eq!(cfg.http_addr, "0.0.0.0:9102");
+        assert_eq!(cfg.runs_dir, PathBuf::from("/tmp/fleet"));
+        // an omitted table (or a [daemon]-free experiment config) keeps
+        // the documented defaults
+        let plain = DaemonConfig::from_toml_str("[fed]\nrounds = 5\n").unwrap();
+        assert_eq!(plain, DaemonConfig::default());
     }
 
     #[test]

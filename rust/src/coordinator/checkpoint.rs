@@ -31,16 +31,25 @@ use std::path::Path;
 const MAGIC: &[u8; 8] = b"FEDSCKPT";
 const VERSION: u32 = 2;
 
+/// The expensive resumable state of a run at a round boundary (see the
+/// module docs for what it deliberately does *not* carry).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
+    /// The run seed every engine RNG stream derives from.
     pub run_seed: u64,
+    /// Strategy name — a resume refuses a mismatched method.
     pub method: String,
     /// Next round to execute.
     pub round: u64,
+    /// Global model parameters (flat, row-major).
     pub params: Vec<f32>,
+    /// Cumulative uplink bits through `round`.
     pub cum_bits: f64,
+    /// Cumulative downlink bits.
     pub cum_downlink_bits: f64,
+    /// Cumulative simulated wall-clock seconds (paper eq. 12 clock).
     pub cum_sim_seconds: f64,
+    /// Cumulative simulated transmit+compute energy in joules.
     pub cum_energy_joules: f64,
     /// Opaque per-strategy state blob
     /// ([`Strategy::save_state`](crate::algo::Strategy::save_state));
@@ -49,6 +58,7 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
+    /// Write the binary v2 format to `path`, creating parent directories.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         if let Some(parent) = path.parent() {
@@ -78,6 +88,8 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Read a checkpoint back, rejecting wrong magic or version (v1
+    /// files without the strategy blob are an error, not a silent reset).
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         let mut f = std::io::BufReader::new(std::fs::File::open(path.as_ref())?);
         let mut magic = [0u8; 8];

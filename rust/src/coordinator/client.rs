@@ -6,6 +6,7 @@ use std::sync::Arc;
 
 /// One federated agent as the coordinator sees it.
 pub struct ClientState {
+    /// Agent index `n` in `0..N`.
     pub id: usize,
     sampler: BatchSampler,
     seed_rng: Xoshiro256,
@@ -16,6 +17,8 @@ pub struct ClientState {
 }
 
 impl ClientState {
+    /// Build agent `id`'s state: shard sampler and seed stream derived
+    /// from `run_seed`, batch buffers sized for `steps × batch`.
     pub fn new(
         id: usize,
         data: Arc<Dataset>,
@@ -50,6 +53,7 @@ impl ClientState {
         self.seed_rng.next_u32()
     }
 
+    /// Number of samples in this agent's data shard.
     pub fn shard_len(&self) -> usize {
         self.sampler.shard_len()
     }

@@ -188,9 +188,17 @@ pub struct DistributedEngine {
     history: RunHistory,
     /// Run-journal sink (`--log` / `[runlog]`); `None` = journaling off.
     log: Option<RunLog>,
+    /// The telemetry scope captured from the constructing thread and
+    /// re-installed at every entry point (and in every worker thread),
+    /// so hooks land in this run's registry even when rounds are driven
+    /// from another thread (the daemon drives each run on its own
+    /// thread under a per-run scope).
+    tel: tel::Handle,
 }
 
 impl DistributedEngine {
+    /// Build a fresh engine: spawn one worker thread per agent and
+    /// initialize the leader-side model, sampler, and scenario streams.
     pub fn from_config(cfg: &ExperimentConfig, run_seed: u64) -> Result<DistributedEngine> {
         Self::from_config_inner(cfg, run_seed, None)
     }
@@ -222,6 +230,10 @@ impl DistributedEngine {
         resume: Option<Vec<(Vec<u8>, u64)>>,
     ) -> Result<DistributedEngine> {
         cfg.validate()?;
+        // captured once here: worker threads spawned now (and respawned
+        // later) install this same scope, so their hooks land in the
+        // run's registry rather than whatever the OS thread inherits
+        let tel_handle = tel::Handle::current();
         let (train, test) = load_data(cfg)?;
         let train = Arc::new(train);
         let partition = match cfg.dirichlet_alpha {
@@ -281,6 +293,7 @@ impl DistributedEngine {
                 run_seed,
                 plan.clone(),
                 resume_states[id].take(),
+                tel_handle.clone(),
             ));
         }
         for (w, seed) in workers.iter().zip(seed_dumps) {
@@ -319,6 +332,7 @@ impl DistributedEngine {
             workers,
             cfg: cfg.clone(),
             log: None,
+            tel: tel_handle,
         })
     }
 
@@ -336,6 +350,7 @@ impl DistributedEngine {
 
     /// Run rounds [start, rounds) — the resume entry point.
     pub fn run_from(&mut self, start: usize) -> Result<RunHistory> {
+        let _tel = self.tel.install();
         let rounds = self.cfg.fed.rounds;
         for k in start..rounds {
             let eval = k % self.cfg.fed.eval_every == 0 || k + 1 == rounds;
@@ -363,6 +378,7 @@ impl DistributedEngine {
     }
 
     fn run_round(&mut self, k: usize, eval: bool) -> Result<()> {
+        let _tel = self.tel.install();
         let host_t0 = Instant::now();
         self.respawn_dead();
         // select this round's active set (leader-side, identical to the
@@ -680,7 +696,7 @@ impl DistributedEngine {
         if let Some(snap) = snapshot {
             log.push(&snap)?;
         }
-        if tel::enabled() {
+        if tel::active() {
             // advisory sidecar next to the journal; metrics must never
             // fail a round
             let _ = tel::write_sidecar(log.path());
@@ -753,6 +769,7 @@ impl DistributedEngine {
         expect_active: &[usize],
         new_dead: &[usize],
     ) -> Result<()> {
+        let _tel = self.tel.install();
         // respawn bookkeeping happens at round start on the live path
         if !self.dead.is_empty() && self.plan.cfg().respawn {
             self.respawn_count += self.dead.len() as u64;
@@ -957,6 +974,7 @@ impl DistributedEngine {
                 self.run_seed,
                 self.plan.clone(),
                 Some(resume),
+                self.tel.clone(),
             );
             self.workers[c] = fresh;
             self.respawn_count += 1;
@@ -1025,6 +1043,16 @@ impl DistributedEngine {
         self.respawn_count
     }
 
+    /// Is the engine at a consistent cut a resume could rebuild from?
+    /// True when no worker is dead awaiting respawn and no checkpoint
+    /// slot may lag an in-flight NACK — the same gate
+    /// [`Self::run_round`] applies before writing a journal snapshot.
+    /// The daemon's cancellation path keeps stepping rounds until this
+    /// holds, so a cancelled run's journal always resumes cleanly.
+    pub fn quiescent(&self) -> bool {
+        self.dead.is_empty() && self.unsynced.is_empty()
+    }
+
     fn shutdown(&mut self) {
         // hang up every link first (wakes all workers), then join
         for w in self.workers.iter_mut() {
@@ -1045,6 +1073,7 @@ impl Drop for DistributedEngine {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn spawn_worker(
     id: usize,
     cfg: &ExperimentConfig,
@@ -1053,6 +1082,7 @@ fn spawn_worker(
     run_seed: u64,
     plan: Arc<FaultPlan>,
     resume: Option<ResumeState>,
+    tel_handle: tel::Handle,
 ) -> WorkerHandle {
     let (leader_ep, agent_ep) = duplex();
     let (tel_tx, tel_rx) = std::sync::mpsc::channel::<(u32, f32)>();
@@ -1067,6 +1097,9 @@ fn spawn_worker(
     let worker_plan = plan.clone();
     let worker_dump = dump.clone();
     let join = std::thread::spawn(move || {
+        // worker-side hooks (fault-injection counters, wire counters)
+        // must land in the same registry as the leader's
+        let _tel = tel_handle.install();
         worker_main(
             id,
             agent_ep,

@@ -64,6 +64,11 @@ pub struct Engine {
     pool: Option<Arc<WorkerPool>>,
     /// Run-journal sink (`--log` / `[runlog]`); `None` = journaling off.
     log: Option<RunLog>,
+    /// The telemetry scope captured from the constructing thread and
+    /// re-installed at every entry point, so hooks land in this run's
+    /// registry even when rounds are driven from another thread (the
+    /// daemon drives each run on its own thread under a per-run scope).
+    tel: telemetry::Handle,
 }
 
 impl Engine {
@@ -151,6 +156,7 @@ impl Engine {
             workers_unavailable: false,
             pool,
             log: None,
+            tel: telemetry::Handle::current(),
         })
     }
 
@@ -185,6 +191,7 @@ impl Engine {
         true
     }
 
+    /// The current server model parameters.
     pub fn params(&self) -> &[f32] {
         &self.params
     }
@@ -244,6 +251,7 @@ impl Engine {
 
     /// Run rounds [start, rounds) — the resume entry point.
     pub fn run_from(&mut self, start: usize) -> Result<RunOutput> {
+        let _tel = self.tel.install();
         let rounds = self.cfg.fed.rounds;
         for k in start..rounds {
             let eval = k % self.cfg.fed.eval_every == 0 || k + 1 == rounds;
@@ -264,6 +272,7 @@ impl Engine {
     /// evolution. `crate::runlog::replay` drives this for every round
     /// below the snapshot, then [`Self::restore`]s the expensive state.
     pub(crate) fn replay_round_streams(&mut self, k: usize, expect_active: &[usize]) -> Result<()> {
+        let _tel = self.tel.install();
         let (s, b) = (self.cfg.fed.local_steps, self.cfg.fed.batch_size);
         let avail = self.simnet.available(k as u64);
         let active = self.sampler.select(&avail, self.simnet.profiles());
@@ -293,10 +302,12 @@ impl Engine {
         Ok(())
     }
 
+    /// The seed this run derives every stream from.
     pub fn run_seed(&self) -> u64 {
         self.run_seed
     }
 
+    /// The backend's registry name (e.g. `pure-rust`).
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }
@@ -329,6 +340,7 @@ impl Engine {
     /// One round: select -> broadcast -> local stages -> upload (simnet:
     /// fading, slots, deadline) -> aggregate survivors -> eval.
     pub fn run_round(&mut self, k: usize, eval: bool) -> Result<()> {
+        let _tel = self.tel.install();
         let host_t0 = Instant::now();
         let (s, b, alpha) = (
             self.cfg.fed.local_steps,
@@ -593,7 +605,7 @@ impl Engine {
         if let Some(snap) = snapshot {
             log.push(&snap)?;
         }
-        if telemetry::enabled() {
+        if telemetry::active() {
             // advisory sidecar next to the journal; metrics must never
             // fail a round
             let _ = telemetry::write_sidecar(log.path());

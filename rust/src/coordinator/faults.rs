@@ -118,6 +118,8 @@ impl FaultsConfig {
             || self.crash > 0.0
     }
 
+    /// Check every probability is in `[0, 1]`, the per-frame fates sum
+    /// to at most 1, and the timeout is positive.
     pub fn validate(&self) -> Result<()> {
         for (name, p) in [
             ("faults.drop", self.drop),
@@ -149,7 +151,9 @@ impl FaultsConfig {
 /// directions draw from disjoint fault streams.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Direction {
+    /// Leader → worker.
     Down,
+    /// Worker → leader.
     Up,
 }
 
@@ -165,10 +169,15 @@ impl Direction {
 /// The fate of one frame transmission.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FrameFate {
+    /// Arrives intact.
     Deliver,
+    /// Lost in flight (bytes spent, nothing delivered).
     Drop,
+    /// Arrives with flipped bits (the CRC rejects it).
     Corrupt,
+    /// Arrives twice.
     Duplicate,
+    /// Arrives intact after a wall-clock hold.
     Delay,
 }
 
@@ -244,15 +253,18 @@ fn unit(h: u64) -> f64 {
 }
 
 impl FaultPlan {
+    /// Freeze a validated config into the run's fault oracle.
     pub fn new(cfg: FaultsConfig) -> FaultPlan {
         let enabled = cfg.enabled();
         FaultPlan { cfg, enabled }
     }
 
+    /// The config this plan was built from.
     pub fn cfg(&self) -> &FaultsConfig {
         &self.cfg
     }
 
+    /// Cached [`FaultsConfig::enabled`] (checked on every frame).
     pub fn enabled(&self) -> bool {
         self.enabled
     }
@@ -416,6 +428,8 @@ pub struct FaultySender {
 }
 
 impl FaultySender {
+    /// Put a [`FrameSender`] under the plan's fate stream for one
+    /// direction of one client's link.
     pub fn wrap(inner: FrameSender, plan: Arc<FaultPlan>, dir: Direction, client: u32) -> Self {
         FaultySender {
             inner: Some(inner),
@@ -494,7 +508,9 @@ impl FaultySender {
 pub enum RecvOutcome {
     /// A frame arrived (still sealed — the caller unseals and dispatches).
     Frame(Vec<u8>),
+    /// Nothing arrived within the bound.
     TimedOut,
+    /// The peer hung up (or this side already closed).
     Disconnected,
 }
 
@@ -505,10 +521,13 @@ pub struct FaultyReceiver {
 }
 
 impl FaultyReceiver {
+    /// Put a [`FrameReceiver`] behind the bounded-receive interface.
     pub fn wrap(inner: FrameReceiver) -> Self {
         FaultyReceiver { inner: Some(inner) }
     }
 
+    /// Receive with a deadline; a dead or hung peer surfaces as
+    /// [`RecvOutcome::Disconnected`] / [`RecvOutcome::TimedOut`].
     pub fn recv_within(&self, timeout: Duration) -> RecvOutcome {
         match &self.inner {
             None => RecvOutcome::Disconnected,

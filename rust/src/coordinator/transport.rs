@@ -14,20 +14,25 @@ use std::sync::Arc;
 /// Bytes-transferred counters for one direction of a link.
 #[derive(Debug, Default)]
 pub struct LinkStats {
+    /// Frames put on the air.
     pub frames: AtomicU64,
+    /// Total frame bytes put on the air.
     pub bytes: AtomicU64,
 }
 
 impl LinkStats {
+    /// Count one transmitted frame of `len` bytes.
     pub fn record(&self, len: usize) {
         self.frames.fetch_add(1, Ordering::Relaxed);
         self.bytes.fetch_add(len as u64, Ordering::Relaxed);
     }
 
+    /// Total bytes transmitted so far.
     pub fn bytes(&self) -> u64 {
         self.bytes.load(Ordering::Relaxed)
     }
 
+    /// Total frames transmitted so far.
     pub fn frames(&self) -> u64 {
         self.frames.load(Ordering::Relaxed)
     }
@@ -40,6 +45,7 @@ pub struct FrameSender {
 }
 
 impl FrameSender {
+    /// Transmit one frame, counting its bytes; errors if the peer hung up.
     pub fn send(&self, frame: Vec<u8>) -> Result<(), &'static str> {
         self.stats.record(frame.len());
         // byte 0 is the wire tag on every frame format, sealed or not
@@ -62,10 +68,12 @@ pub struct FrameReceiver {
 }
 
 impl FrameReceiver {
+    /// Block for the next frame; errors if the peer hung up.
     pub fn recv(&self) -> Result<Vec<u8>, &'static str> {
         self.rx.recv().map_err(|_| "peer hung up")
     }
 
+    /// The next frame if one is already queued.
     pub fn try_recv(&self) -> Option<Vec<u8>> {
         self.rx.try_recv().ok()
     }
@@ -96,15 +104,21 @@ pub fn link() -> (FrameSender, FrameReceiver, Arc<LinkStats>) {
 
 /// The leader's side of a full duplex connection to one agent.
 pub struct LeaderEndpoint {
+    /// Leader → agent sender.
     pub downlink: FrameSender,
+    /// Agent → leader receiver.
     pub uplink: FrameReceiver,
+    /// Downlink byte counters (shared with the sender).
     pub down_stats: Arc<LinkStats>,
+    /// Uplink byte counters.
     pub up_stats: Arc<LinkStats>,
 }
 
 /// The agent's side.
 pub struct AgentEndpoint {
+    /// Leader → agent receiver.
     pub downlink: FrameReceiver,
+    /// Agent → leader sender.
     pub uplink: FrameSender,
 }
 

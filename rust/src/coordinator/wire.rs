@@ -143,6 +143,7 @@ pub enum WireUplink {
 }
 
 impl WireUplink {
+    /// Frame a FedScalar upload (seed + projection scalars).
     pub fn from_scalar(u: &ScalarUpload) -> Self {
         WireUplink::Scalar {
             seed: u.seed,
@@ -150,6 +151,7 @@ impl WireUplink {
         }
     }
 
+    /// Frame a QSGD quantized upload.
     pub fn from_qsgd(p: &QsgdPacket) -> Self {
         WireUplink::Quantized {
             norm: p.norm,
@@ -436,11 +438,14 @@ impl WireUplink {
 /// Downlink frame: the broadcast global model.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireModel {
+    /// Round this model opens.
     pub round: u32,
+    /// Global model parameters (flat).
     pub params: Vec<f32>,
 }
 
 impl WireModel {
+    /// Serialize: tag, round, dimension, then the parameters.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = vec![TAG_MODEL];
         out.extend_from_slice(&self.round.to_le_bytes());
@@ -451,6 +456,8 @@ impl WireModel {
         out
     }
 
+    /// Parse a model frame, rejecting wrong tags, truncation, and
+    /// absurd dimensions.
     pub fn decode(buf: &[u8]) -> Result<WireModel> {
         let mut cur = Cursor::new(buf);
         if cur.u8()? != TAG_MODEL {
@@ -477,12 +484,14 @@ impl WireModel {
 /// active set through the distributed engine's frame protocol.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireRoundPlan {
+    /// Round the plan opens.
     pub round: u32,
     /// Selected client ids, in selection order (duplicates invalid).
     pub active: Vec<u32>,
 }
 
 impl WireRoundPlan {
+    /// Serialize: tag, round, count, then the active ids.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = vec![TAG_PLAN];
         out.extend_from_slice(&self.round.to_le_bytes());
@@ -493,6 +502,7 @@ impl WireRoundPlan {
         out
     }
 
+    /// Parse a round-plan frame, rejecting duplicates in the active set.
     pub fn decode(buf: &[u8]) -> Result<WireRoundPlan> {
         let mut cur = Cursor::new(buf);
         if cur.u8()? != TAG_PLAN {
@@ -526,12 +536,14 @@ impl WireRoundPlan {
 /// implicitly ACKed by the next round plan.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireNack {
+    /// Round whose upload was discarded.
     pub round: u32,
     /// The dropped client's id (lets the worker reject a misrouted NACK).
     pub client: u32,
 }
 
 impl WireNack {
+    /// Serialize: tag, round, client.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = vec![TAG_NACK];
         out.extend_from_slice(&self.round.to_le_bytes());
@@ -539,6 +551,7 @@ impl WireNack {
         out
     }
 
+    /// Parse a NACK frame.
     pub fn decode(buf: &[u8]) -> Result<WireNack> {
         let mut cur = Cursor::new(buf);
         if cur.u8()? != TAG_NACK {
@@ -561,12 +574,16 @@ impl WireNack {
 /// unchanged by the envelope.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireUplinkEnvelope {
+    /// Round the payload answers.
     pub round: u32,
+    /// Uploading client's id.
     pub client: u32,
+    /// The strategy's encoded uplink, byte-for-byte.
     pub payload: Vec<u8>,
 }
 
 impl WireUplinkEnvelope {
+    /// Serialize: tag, round, client, then the payload verbatim.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(9 + self.payload.len());
         out.push(tag::UPLINK);
@@ -576,6 +593,7 @@ impl WireUplinkEnvelope {
         out
     }
 
+    /// Parse an envelope; the payload is everything after the header.
     pub fn decode(buf: &[u8]) -> Result<WireUplinkEnvelope> {
         let mut cur = Cursor::new(buf);
         if cur.u8()? != tag::UPLINK {
@@ -634,12 +652,16 @@ impl GoodbyeReason {
 /// (`u32::MAX` when it had none yet).
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireGoodbye {
+    /// The refusing worker's id.
     pub client: u32,
+    /// Round context at refusal (`u32::MAX` if none yet).
     pub round: u32,
+    /// Why the worker refused.
     pub reason: GoodbyeReason,
 }
 
 impl WireGoodbye {
+    /// Serialize: tag, client, round, reason code.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = vec![tag::GOODBYE];
         out.extend_from_slice(&self.client.to_le_bytes());
@@ -648,6 +670,7 @@ impl WireGoodbye {
         out
     }
 
+    /// Parse a goodbye frame, rejecting unknown reason codes.
     pub fn decode(buf: &[u8]) -> Result<WireGoodbye> {
         let mut cur = Cursor::new(buf);
         if cur.u8()? != tag::GOODBYE {

@@ -1,0 +1,235 @@
+//! The daemon's control socket: line-delimited JSON over TCP.
+//!
+//! One request per line, one reply per line; a connection may issue any
+//! number of requests. Every request is an object with a `"cmd"` key;
+//! every reply carries `"ok": true` plus command-specific fields, or
+//! `"ok": false` with an `"error"` string.
+//!
+//! | `cmd`      | request fields                                    | reply fields |
+//! |------------|---------------------------------------------------|--------------|
+//! | `submit`   | `name`, `engine` (`sequential`\|`distributed`), `seed`, `config` (TOML text) | — |
+//! | `list`     | —                                                 | `runs`: array of `{name, state, round, rounds}` |
+//! | `status`   | `name`                                            | `name`, `state`, `error?`, `round`, `rounds`, `journal` |
+//! | `cancel`   | `name`                                            | — (sets the flag; poll `status` or `wait` for the drain) |
+//! | `wait`     | `name`                                            | same as `status`, sent once the run leaves `running` |
+//! | `shutdown` | —                                                 | — (sent after every run thread has been joined) |
+//!
+//! `round` in replies is the run's **telemetry** round counter — rounds
+//! closed since this daemon (re)attached, not the journal's absolute
+//! position — which keeps the reply lock-free against the run thread.
+
+use super::{submit, RunState, Shared};
+use crate::runlog::json::{self, Json};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Accept control connections until the daemon's stop flag is set,
+/// handling each on its own thread. On stop: drain every run thread,
+/// then return (which ends the accept thread).
+pub(super) fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let shared = shared.clone();
+                conns.push(std::thread::spawn(move || handle_conn(stream, shared)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    // a `shutdown` reply must not race the drain: join handlers first
+    for c in conns {
+        let _ = c.join();
+    }
+    super::drain_runs(&shared);
+}
+
+/// Serve one control connection: parse each line, dispatch, reply.
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = dispatch(&line, &shared);
+        let mut text = reply.to_json_string();
+        text.push('\n');
+        if writer.write_all(text.as_bytes()).is_err() {
+            break;
+        }
+        // shutdown: reply was written with every run drained; stop
+        // serving this connection so the accept loop can finish joining
+        if json::parse(&line)
+            .ok()
+            .and_then(|j| j.get("cmd").and_then(|c| c.as_str().map(String::from)))
+            .as_deref()
+            == Some("shutdown")
+        {
+            break;
+        }
+    }
+}
+
+/// An `{"ok": false, "error": ...}` reply.
+fn err_reply(msg: impl Into<String>) -> Json {
+    Json::Obj(vec![
+        ("ok".to_string(), Json::Bool(false)),
+        ("error".to_string(), Json::Str(msg.into())),
+    ])
+}
+
+/// An `{"ok": true, ...fields}` reply.
+fn ok_reply(fields: Vec<(String, Json)>) -> Json {
+    let mut obj = vec![("ok".to_string(), Json::Bool(true))];
+    obj.extend(fields);
+    Json::Obj(obj)
+}
+
+/// Parse one request line and execute it.
+fn dispatch(line: &str, shared: &Arc<Shared>) -> Json {
+    let req = match json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return err_reply(format!("bad request: {e}")),
+    };
+    let Some(cmd) = req.get("cmd").and_then(Json::as_str) else {
+        return err_reply("request has no \"cmd\"");
+    };
+    match cmd {
+        "submit" => cmd_submit(&req, shared),
+        "list" => cmd_list(shared),
+        "status" => cmd_status(&req, shared, false),
+        "wait" => cmd_status(&req, shared, true),
+        "cancel" => cmd_cancel(&req, shared),
+        "shutdown" => cmd_shutdown(shared),
+        other => err_reply(format!("unknown cmd {other:?}")),
+    }
+}
+
+/// Required string field, or an error message naming it.
+fn str_field<'a>(req: &'a Json, key: &str) -> Result<&'a str, Json> {
+    req.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| err_reply(format!("missing string field {key:?}")))
+}
+
+fn cmd_submit(req: &Json, shared: &Arc<Shared>) -> Json {
+    let name = match str_field(req, "name") {
+        Ok(s) => s,
+        Err(e) => return e,
+    };
+    let engine = req
+        .get("engine")
+        .and_then(Json::as_str)
+        .unwrap_or("sequential");
+    let seed = req.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let config = match str_field(req, "config") {
+        Ok(s) => s,
+        Err(e) => return e,
+    };
+    match submit(shared, name, engine, seed, config) {
+        Ok(()) => ok_reply(vec![("name".to_string(), Json::Str(name.to_string()))]),
+        Err(e) => err_reply(e.to_string()),
+    }
+}
+
+/// One run's status fields (shared by `status`, `wait`, and `list`).
+fn run_fields(name: &str, shared: &Shared) -> Option<Vec<(String, Json)>> {
+    let runs = shared.runs.lock().expect("runs lock");
+    let slot = runs.get(name)?;
+    let state = slot.state.lock().expect("state lock").clone();
+    let mut fields = vec![
+        ("name".to_string(), Json::Str(name.to_string())),
+        ("state".to_string(), Json::Str(state.name().to_string())),
+        (
+            "round".to_string(),
+            Json::Num(slot.registry.rounds.get() as f64),
+        ),
+        ("rounds".to_string(), Json::Num(slot.rounds as f64)),
+        (
+            "journal".to_string(),
+            Json::Str(slot.journal.display().to_string()),
+        ),
+    ];
+    if let RunState::Failed(msg) = state {
+        fields.push(("error".to_string(), Json::Str(msg)));
+    }
+    Some(fields)
+}
+
+fn cmd_list(shared: &Arc<Shared>) -> Json {
+    let names: Vec<String> = {
+        let runs = shared.runs.lock().expect("runs lock");
+        runs.keys().cloned().collect()
+    };
+    let items = names
+        .iter()
+        .filter_map(|n| run_fields(n, shared).map(Json::Obj))
+        .collect();
+    ok_reply(vec![("runs".to_string(), Json::Arr(items))])
+}
+
+/// `status` replies immediately; `wait` polls until the run leaves
+/// `running` (or the daemon stops) and then replies.
+fn cmd_status(req: &Json, shared: &Arc<Shared>, wait: bool) -> Json {
+    let name = match str_field(req, "name") {
+        Ok(s) => s.to_string(),
+        Err(e) => return e,
+    };
+    if wait {
+        loop {
+            let running = {
+                let runs = shared.runs.lock().expect("runs lock");
+                match runs.get(&name) {
+                    Some(slot) => *slot.state.lock().expect("state lock") == RunState::Running,
+                    None => false,
+                }
+            };
+            if !running || shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    match run_fields(&name, shared) {
+        Some(fields) => ok_reply(fields),
+        None => err_reply(format!("no run named {name:?}")),
+    }
+}
+
+fn cmd_cancel(req: &Json, shared: &Arc<Shared>) -> Json {
+    let name = match str_field(req, "name") {
+        Ok(s) => s,
+        Err(e) => return e,
+    };
+    let runs = shared.runs.lock().expect("runs lock");
+    match runs.get(name) {
+        Some(slot) => {
+            slot.cancel.store(true, Ordering::SeqCst);
+            ok_reply(vec![("name".to_string(), Json::Str(name.to_string()))])
+        }
+        None => err_reply(format!("no run named {name:?}")),
+    }
+}
+
+/// Set the daemon-wide stop flag and join every run thread before
+/// replying, so a client that reads the reply knows every journal is
+/// at rest.
+fn cmd_shutdown(shared: &Arc<Shared>) -> Json {
+    shared.stop.store(true, Ordering::SeqCst);
+    super::drain_runs(shared);
+    ok_reply(vec![])
+}

@@ -1,0 +1,151 @@
+//! The daemon's observability endpoint: a hand-rolled HTTP/1.0 server
+//! (no dependencies) exposing each run's telemetry.
+//!
+//! Routes (GET only):
+//!
+//! * `/metrics` — Prometheus exposition aggregated across every hosted
+//!   run: a fresh [`Registry`] absorbs each run's registry, so counters
+//!   and gauges sum and histograms merge bucket-wise.
+//! * `/metrics/<run>` — that run's catalog alone; its series never
+//!   include another run's traffic (pinned by the daemon integration
+//!   test).
+//! * `/status/<run>` — the `fedscalar status` fold for that run,
+//!   rendered from its journal on disk plus its **live** in-process
+//!   registry (where the CLI would read a metrics sidecar file).
+//!
+//! Responses always close the connection (`Connection: close`) and
+//! carry `Content-Length`, so `curl`-class HTTP/1.0 and HTTP/1.1
+//! clients both parse them.
+
+use super::Shared;
+use crate::runlog::Journal;
+use crate::telemetry::status;
+use crate::telemetry::{render_prometheus, snapshot_json, Registry};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Accept HTTP connections until the daemon's stop flag is set,
+/// serving each request on its own thread.
+pub(super) fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let shared = shared.clone();
+                conns.push(std::thread::spawn(move || handle_conn(stream, shared)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+}
+
+/// Read one request, route it, write one response, close.
+fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let Some(path) = read_request_path(&mut stream) else {
+        let _ = write_response(&mut stream, 400, "bad request\n");
+        return;
+    };
+    let (code, body) = route(&path, &shared);
+    let _ = write_response(&mut stream, code, &body);
+}
+
+/// Read until the header terminator and extract the request path from
+/// the request line. GET requests carry no body, so the head is all we
+/// need.
+fn read_request_path(stream: &mut TcpStream) -> Option<String> {
+    let mut head = Vec::new();
+    let mut buf = [0u8; 512];
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") {
+        if head.len() > 16 * 1024 {
+            return None;
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => head.extend_from_slice(&buf[..n]),
+            Err(_) => return None,
+        }
+    }
+    let head = String::from_utf8_lossy(&head);
+    let line = head.lines().next()?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next()?;
+    let path = parts.next()?;
+    if method != "GET" {
+        return None;
+    }
+    Some(path.to_string())
+}
+
+/// Dispatch a request path to `(status code, body)`.
+fn route(path: &str, shared: &Shared) -> (u16, String) {
+    if path == "/metrics" {
+        return (200, fleet_metrics(shared));
+    }
+    if let Some(name) = path.strip_prefix("/metrics/") {
+        return match with_run(shared, name, |slot| render_prometheus(&slot.registry)) {
+            Some(body) => (200, body),
+            None => (404, format!("no run named {name:?}\n")),
+        };
+    }
+    if let Some(name) = path.strip_prefix("/status/") {
+        let found = with_run(shared, name, |slot| {
+            (slot.journal.clone(), snapshot_json(&slot.registry))
+        });
+        return match found {
+            Some((journal_path, metrics)) => match Journal::parse_file(&journal_path) {
+                Ok(journal) => (200, status::render(&journal, Some(&metrics), "(live)")),
+                Err(e) => (500, format!("journal unreadable: {e}\n")),
+            },
+            None => (404, format!("no run named {name:?}\n")),
+        };
+    }
+    (404, "routes: /metrics, /metrics/<run>, /status/<run>\n".to_string())
+}
+
+/// Run `f` against the named run's slot under the table lock.
+fn with_run<T>(shared: &Shared, name: &str, f: impl FnOnce(&super::RunSlot) -> T) -> Option<T> {
+    let runs = shared.runs.lock().expect("runs lock");
+    runs.get(name).map(f)
+}
+
+/// Aggregate every run's registry into one exposition: per-run series
+/// sum, which is the fleet view an external scraper wants.
+fn fleet_metrics(shared: &Shared) -> String {
+    let fleet = Registry::new();
+    {
+        let runs = shared.runs.lock().expect("runs lock");
+        for slot in runs.values() {
+            fleet.absorb(&slot.registry);
+        }
+    }
+    render_prometheus(&fleet)
+}
+
+/// Write a complete HTTP/1.0 response with length framing.
+fn write_response(stream: &mut TcpStream, code: u16, body: &str) -> std::io::Result<()> {
+    let reason = match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    let head = format!(
+        "HTTP/1.0 {code} {reason}\r\nContent-Type: text/plain; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())
+}

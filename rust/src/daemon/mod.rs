@@ -1,0 +1,494 @@
+//! `fedscalar serve` — a single-process daemon hosting many concurrent
+//! experiments, each with its own journal, its own [`crate::runlog`]
+//! sink, and its own [`telemetry::Registry`](crate::telemetry::Registry)
+//! (installed as a per-run scope via
+//! [`telemetry::Handle`](crate::telemetry::Handle), so the hooks of two
+//! runs never mix).
+//!
+//! Surfaces — both hand-rolled on `std::net`, no new dependencies:
+//!
+//! * a **control socket** (line-delimited JSON over TCP, one request per
+//!   line, one reply per line): `submit` a TOML experiment config,
+//!   `list` runs, `status`/`wait` on one, `cancel` one, `shutdown` the
+//!   daemon. See [`control`] for the exact schema.
+//! * an **HTTP/1.0 endpoint**: `GET /metrics` (fleet-aggregated
+//!   Prometheus exposition — a fresh registry absorbing every run's),
+//!   `GET /metrics/<run>` (that run's catalog only), and
+//!   `GET /status/<run>` (the `fedscalar status` fold, rendered from
+//!   the run's journal plus its **live** registry instead of a sidecar
+//!   file). See [`http`].
+//!
+//! ## Lifecycle guarantees
+//!
+//! * Every run journals to `<runs_dir>/<name>.jsonl`. At startup the
+//!   daemon scans `runs_dir` and re-attaches to every unfinished
+//!   journal through [`crate::runlog::replay::prepare_resume`] — the
+//!   same replay the `fedscalar resume` CLI uses — so a daemon restart
+//!   continues every run **bit-identically** to an uninterrupted one.
+//! * Cancellation (and daemon shutdown) stops a run only at a
+//!   **quiescent** round boundary
+//!   ([`DistributedEngine::quiescent`](crate::coordinator::DistributedEngine::quiescent):
+//!   no dead worker awaiting respawn, no checkpoint slot lagging an
+//!   in-flight NACK), and never writes `RunFinished` — so a cancelled
+//!   run's journal always resumes cleanly, by resubmission to a daemon
+//!   or by `fedscalar resume`.
+//! * Daemon runs always compute on the pure-Rust backend: runs outlive
+//!   the submitting connection, and cross-backend bit-equality (pinned
+//!   by the integration suite) makes the choice invisible in the
+//!   metrics.
+
+mod control;
+mod http;
+
+use crate::config::{DaemonConfig, ExperimentConfig};
+use crate::coordinator::{DistributedEngine, Engine};
+use crate::error::{Error, Result};
+use crate::exp::figures::{make_backend, BackendKind};
+use crate::runlog::replay::{prepare_resume, ResumedEngine};
+use crate::runlog::Journal;
+use crate::telemetry::{Handle, Registry};
+use crate::{log_debug, log_info};
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Where a hosted run stands. Terminal states stay queryable over the
+/// control socket until the daemon shuts down.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RunState {
+    /// The run's thread is live (constructing, replaying, or stepping
+    /// rounds).
+    Running,
+    /// All rounds completed; `RunFinished` journaled.
+    Finished,
+    /// Stopped before completion (explicit `cancel` or daemon
+    /// shutdown) at a quiescent boundary — the journal has no
+    /// `RunFinished` and resumes cleanly.
+    Cancelled,
+    /// The run errored; the message is the engine's error. The journal
+    /// is whatever was written before the failure.
+    Failed(String),
+}
+
+impl RunState {
+    /// Stable lowercase name for wire replies (`running`, `finished`,
+    /// `cancelled`, `failed`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RunState::Running => "running",
+            RunState::Finished => "finished",
+            RunState::Cancelled => "cancelled",
+            RunState::Failed(_) => "failed",
+        }
+    }
+}
+
+/// One hosted run: its journal, registry, flags, and thread handle.
+struct RunSlot {
+    journal: PathBuf,
+    /// This run's private metric registry — installed as the telemetry
+    /// scope on the run thread (and, transitively, its pool and worker
+    /// threads), read by `/metrics/<run>` and `/status/<run>`.
+    registry: Arc<Registry>,
+    cancel: Arc<AtomicBool>,
+    state: Arc<Mutex<RunState>>,
+    /// Total configured rounds (progress denominator for `list`).
+    rounds: usize,
+    join: Option<JoinHandle<()>>,
+}
+
+/// State shared between the accept loops, connection handlers, and run
+/// threads.
+struct Shared {
+    runs_dir: PathBuf,
+    /// Daemon-wide stop flag: set by `shutdown`, checked by every run's
+    /// drive loop exactly like its per-run cancel flag.
+    stop: AtomicBool,
+    runs: Mutex<BTreeMap<String, RunSlot>>,
+}
+
+/// The running daemon: bound listeners + the shared run table. Create
+/// with [`Daemon::start`], block on [`Daemon::wait`].
+pub struct Daemon {
+    control_addr: SocketAddr,
+    http_addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept_threads: Vec<JoinHandle<()>>,
+}
+
+impl Daemon {
+    /// Bind both listeners, re-attach to every unfinished journal in
+    /// `runs_dir`, and spawn the accept loops. Returns once the daemon
+    /// is serving; block on [`Self::wait`] afterwards.
+    pub fn start(cfg: DaemonConfig) -> Result<Daemon> {
+        std::fs::create_dir_all(&cfg.runs_dir)?;
+        let control = TcpListener::bind(&cfg.control_addr)
+            .map_err(|e| Error::config(format!("bind control {}: {e}", cfg.control_addr)))?;
+        let http = TcpListener::bind(&cfg.http_addr)
+            .map_err(|e| Error::config(format!("bind http {}: {e}", cfg.http_addr)))?;
+        control.set_nonblocking(true)?;
+        http.set_nonblocking(true)?;
+        let control_addr = control.local_addr()?;
+        let http_addr = http.local_addr()?;
+        let shared = Arc::new(Shared {
+            runs_dir: cfg.runs_dir.clone(),
+            stop: AtomicBool::new(false),
+            runs: Mutex::new(BTreeMap::new()),
+        });
+        reattach_unfinished(&shared)?;
+        let accept_threads = vec![
+            std::thread::spawn({
+                let shared = shared.clone();
+                move || control::accept_loop(control, shared)
+            }),
+            std::thread::spawn({
+                let shared = shared.clone();
+                move || http::accept_loop(http, shared)
+            }),
+        ];
+        log_info!("daemon up: control={control_addr} http={http_addr}");
+        Ok(Daemon {
+            control_addr,
+            http_addr,
+            shared,
+            accept_threads,
+        })
+    }
+
+    /// The bound control-socket address (resolves port 0 to the actual
+    /// ephemeral port).
+    pub fn control_addr(&self) -> SocketAddr {
+        self.control_addr
+    }
+
+    /// The bound HTTP address.
+    pub fn http_addr(&self) -> SocketAddr {
+        self.http_addr
+    }
+
+    /// Block until a `shutdown` control command has drained every run
+    /// and stopped the accept loops.
+    pub fn wait(self) -> Result<()> {
+        for t in self.accept_threads {
+            t.join()
+                .map_err(|_| Error::invariant("daemon accept loop panicked"))?;
+        }
+        // the shutdown handler already joined the run threads; this is
+        // the backstop for an accept loop that exited another way
+        drain_runs(&self.shared);
+        Ok(())
+    }
+}
+
+/// Scan `runs_dir` for `*.jsonl` journals and re-attach every
+/// unfinished one as a live run (replay to the snapshot, continue).
+fn reattach_unfinished(shared: &Arc<Shared>) -> Result<()> {
+    let mut names: Vec<(String, PathBuf, usize)> = Vec::new();
+    for entry in std::fs::read_dir(&shared.runs_dir)? {
+        let path = entry?.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("jsonl") {
+            continue;
+        }
+        let Some(name) = path.file_stem().and_then(|s| s.to_str()).map(String::from) else {
+            continue;
+        };
+        let journal = match Journal::parse_file(&path) {
+            Ok(j) => j,
+            Err(e) => {
+                log_info!("daemon: skipping unreadable journal {}: {e}", path.display());
+                continue;
+            }
+        };
+        if journal.finished {
+            log_debug!("daemon: {} is finished; not re-attaching", path.display());
+            continue;
+        }
+        let rounds = ExperimentConfig::from_toml_str(&journal.start.config_toml)
+            .map(|c| c.fed.rounds)
+            .unwrap_or(0);
+        names.push((name, path, rounds));
+    }
+    for (name, path, rounds) in names {
+        log_info!("daemon: re-attaching unfinished run {name:?}");
+        spawn_run(shared, name, path, rounds, RunTask::Reattach);
+    }
+    Ok(())
+}
+
+/// What a freshly spawned run thread should do.
+enum RunTask {
+    /// Build the named engine from `cfg` and run from round 0.
+    Fresh {
+        cfg: Box<ExperimentConfig>,
+        distributed: bool,
+        run_seed: u64,
+    },
+    /// `prepare_resume` the slot's journal and continue where it stood.
+    Reattach,
+}
+
+/// Is `name` acceptable as a run name (it becomes a file stem)?
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 64
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+}
+
+/// Validate and register a submitted run, then spawn its thread.
+/// Called from control-connection handlers.
+fn submit(
+    shared: &Arc<Shared>,
+    name: &str,
+    engine: &str,
+    run_seed: u64,
+    config_toml: &str,
+) -> Result<()> {
+    if shared.stop.load(Ordering::SeqCst) {
+        return Err(Error::config("daemon is shutting down"));
+    }
+    if !valid_name(name) {
+        return Err(Error::config(format!(
+            "bad run name {name:?} (1-64 chars of [A-Za-z0-9_-])"
+        )));
+    }
+    let distributed = match engine {
+        "sequential" => false,
+        "distributed" => true,
+        other => {
+            return Err(Error::config(format!(
+                "bad engine {other:?} (sequential|distributed)"
+            )))
+        }
+    };
+    let mut cfg = ExperimentConfig::from_toml_str(config_toml)?;
+    if !distributed && cfg.faults.enabled() {
+        // mirror the Engine constructor's check at submit time, so the
+        // submitter hears about it instead of a Failed slot
+        return Err(Error::config(
+            "[faults] injection requires engine = distributed",
+        ));
+    }
+    let journal = shared.runs_dir.join(format!("{name}.jsonl"));
+    {
+        let runs = shared.runs.lock().expect("runs lock");
+        if runs.contains_key(name) {
+            return Err(Error::config(format!("run {name:?} already exists")));
+        }
+    }
+    if journal.exists() {
+        return Err(Error::config(format!(
+            "journal {} already exists (finished runs keep their name)",
+            journal.display()
+        )));
+    }
+    cfg.runlog.path = Some(journal.clone());
+    let rounds = cfg.fed.rounds;
+    spawn_run(
+        shared,
+        name.to_string(),
+        journal,
+        rounds,
+        RunTask::Fresh {
+            cfg: Box::new(cfg),
+            distributed,
+            run_seed,
+        },
+    );
+    Ok(())
+}
+
+/// Register a slot for `name` and spawn its drive thread under a fresh
+/// per-run telemetry scope.
+fn spawn_run(shared: &Arc<Shared>, name: String, journal: PathBuf, rounds: usize, task: RunTask) {
+    let registry = Arc::new(Registry::new());
+    let cancel = Arc::new(AtomicBool::new(false));
+    let state = Arc::new(Mutex::new(RunState::Running));
+    let handle = Handle::scoped(registry.clone());
+    let thread = {
+        let shared = shared.clone();
+        let journal = journal.clone();
+        let cancel = cancel.clone();
+        let state = state.clone();
+        let name = name.clone();
+        std::thread::spawn(move || {
+            // the load-bearing line: every hook fired on this thread —
+            // and on the engine's pool / worker threads, which capture
+            // the scope at spawn — lands in this run's registry
+            let _tel = handle.install();
+            let outcome = drive(&shared, &journal, task, &cancel);
+            let mut st = state.lock().expect("state lock");
+            *st = match outcome {
+                Ok(s) => s,
+                Err(e) => {
+                    log_info!("daemon run {name:?} failed: {e}");
+                    RunState::Failed(e.to_string())
+                }
+            };
+            log_info!("daemon run {name:?}: {}", st.name());
+        })
+    };
+    let slot = RunSlot {
+        journal,
+        registry,
+        cancel,
+        state,
+        rounds,
+        join: Some(thread),
+    };
+    shared.runs.lock().expect("runs lock").insert(name, slot);
+}
+
+/// The run-thread body: build or replay the engine, then step rounds
+/// until completion or a drained stop.
+fn drive(
+    shared: &Shared,
+    journal: &Path,
+    task: RunTask,
+    cancel: &AtomicBool,
+) -> Result<RunState> {
+    match task {
+        RunTask::Fresh {
+            cfg,
+            distributed,
+            run_seed,
+        } => {
+            let (rounds, eval_every) = (cfg.fed.rounds, cfg.fed.eval_every);
+            if distributed {
+                let mut engine = DistributedEngine::from_config(&cfg, run_seed)?;
+                let log =
+                    crate::runlog::start_run(journal, "distributed", "pure-rust", run_seed, &cfg)?;
+                engine.set_runlog(log);
+                drive_distributed(engine, 0, rounds, eval_every, shared, cancel)
+            } else {
+                let be = make_backend(BackendKind::PureRust, &cfg)?;
+                let mut engine = Engine::from_config(&cfg, be, run_seed)?;
+                let log =
+                    crate::runlog::start_run(journal, "sequential", "pure-rust", run_seed, &cfg)?;
+                engine.set_runlog(log);
+                drive_sequential(engine, 0, rounds, eval_every, shared, cancel)
+            }
+        }
+        RunTask::Reattach => {
+            let prepared = prepare_resume(journal, None)?;
+            let at = prepared.resumed_at as usize;
+            match prepared.engine {
+                ResumedEngine::Sequential(engine) => drive_sequential(
+                    *engine,
+                    at,
+                    prepared.rounds,
+                    prepared.eval_every,
+                    shared,
+                    cancel,
+                ),
+                ResumedEngine::Distributed(engine) => drive_distributed(
+                    *engine,
+                    at,
+                    prepared.rounds,
+                    prepared.eval_every,
+                    shared,
+                    cancel,
+                ),
+            }
+        }
+    }
+}
+
+/// Step a sequential engine round by round, checking the stop flags at
+/// every boundary (the sequential engine is always quiescent there).
+/// The eval predicate is copied from the engines' `run_from` so a
+/// daemon-driven run is bit-identical to a CLI one.
+fn drive_sequential(
+    mut engine: Engine,
+    start: usize,
+    rounds: usize,
+    eval_every: usize,
+    shared: &Shared,
+    cancel: &AtomicBool,
+) -> Result<RunState> {
+    for k in start..rounds {
+        if cancel.load(Ordering::SeqCst) || shared.stop.load(Ordering::SeqCst) {
+            return Ok(RunState::Cancelled);
+        }
+        let eval = k % eval_every == 0 || k + 1 == rounds;
+        engine.run_round(k, eval)?;
+    }
+    // no rounds left: journals `RunFinished`
+    engine.run_from(rounds)?;
+    Ok(RunState::Finished)
+}
+
+/// Step a distributed engine, draining a stop through the quiescence
+/// gate: a cancel observed while a worker is dead or a NACK may be in
+/// flight keeps stepping until the engine reaches a consistent cut, so
+/// the journal left behind always resumes.
+fn drive_distributed(
+    mut engine: DistributedEngine,
+    start: usize,
+    rounds: usize,
+    eval_every: usize,
+    shared: &Shared,
+    cancel: &AtomicBool,
+) -> Result<RunState> {
+    for k in start..rounds {
+        let stopping = cancel.load(Ordering::SeqCst) || shared.stop.load(Ordering::SeqCst);
+        if stopping && engine.quiescent() {
+            return Ok(RunState::Cancelled);
+        }
+        let eval = k % eval_every == 0 || k + 1 == rounds;
+        engine.step(k, eval)?;
+    }
+    engine.run_from(rounds)?;
+    Ok(RunState::Finished)
+}
+
+/// Join every run thread (their drive loops exit at the next boundary
+/// once `stop` is set).
+fn drain_runs(shared: &Arc<Shared>) {
+    let handles: Vec<(String, JoinHandle<()>)> = {
+        let mut runs = shared.runs.lock().expect("runs lock");
+        runs.iter_mut()
+            .filter_map(|(name, slot)| slot.join.take().map(|h| (name.clone(), h)))
+            .collect()
+    };
+    for (name, h) in handles {
+        if h.join().is_err() {
+            log_info!("daemon run {name:?}: thread panicked");
+            let runs = shared.runs.lock().expect("runs lock");
+            if let Some(slot) = runs.get(&name) {
+                let mut st = slot.state.lock().expect("state lock");
+                if *st == RunState::Running {
+                    *st = RunState::Failed("run thread panicked".to_string());
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_names_are_validated() {
+        assert!(valid_name("alpha"));
+        assert!(valid_name("run-7_b"));
+        assert!(!valid_name(""));
+        assert!(!valid_name("has space"));
+        assert!(!valid_name("dot.dot"));
+        assert!(!valid_name("../escape"));
+        assert!(!valid_name(&"x".repeat(65)));
+    }
+
+    #[test]
+    fn run_states_have_stable_wire_names() {
+        assert_eq!(RunState::Running.name(), "running");
+        assert_eq!(RunState::Finished.name(), "finished");
+        assert_eq!(RunState::Cancelled.name(), "cancelled");
+        assert_eq!(RunState::Failed("x".into()).name(), "failed");
+    }
+}

@@ -8,6 +8,12 @@
 //! [`synthetic::generate`] is a native twin used when artifacts are absent
 //! (unit tests, artifact-free quickstart).
 
+// Doc debt: this subsystem predates the crate-level `missing_docs`
+// warning (added with the daemon PR, which held coordinator/, runlog/,
+// telemetry/, and daemon/ to it). Public items below still need doc
+// comments; remove this allow once they have them.
+#![allow(missing_docs)]
+
 mod batcher;
 mod dataset;
 mod partition;

@@ -70,21 +70,27 @@ impl From<std::io::Error> for Error {
     }
 }
 
+/// Crate-wide result alias over [`Error`].
 pub type Result<T> = std::result::Result<T, Error>;
 
 impl Error {
+    /// A [`Error::Config`] with the given message.
     pub fn config(msg: impl Into<String>) -> Self {
         Error::Config(msg.into())
     }
+    /// A [`Error::Artifact`] with the given message.
     pub fn artifact(msg: impl Into<String>) -> Self {
         Error::Artifact(msg.into())
     }
+    /// A [`Error::Shape`] with the given message.
     pub fn shape(msg: impl Into<String>) -> Self {
         Error::Shape(msg.into())
     }
+    /// An [`Error::Invariant`] with the given message.
     pub fn invariant(msg: impl Into<String>) -> Self {
         Error::Invariant(msg.into())
     }
+    /// An [`Error::WorkerLost`] for the given worker and round.
     pub fn worker_lost(client: usize, round: usize) -> Self {
         Error::WorkerLost { client, round }
     }

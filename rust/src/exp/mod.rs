@@ -2,6 +2,12 @@
 //! evaluation section. Each bench target and CLI subcommand is a thin
 //! wrapper over these functions (see DESIGN.md section 3 for the index).
 
+// Doc debt: this subsystem predates the crate-level `missing_docs`
+// warning (added with the daemon PR, which held coordinator/, runlog/,
+// telemetry/, and daemon/ to it). Public items below still need doc
+// comments; remove this allow once they have them.
+#![allow(missing_docs)]
+
 pub mod bench_support;
 pub mod figures;
 pub mod table1;

@@ -43,10 +43,21 @@
 //! let result = engine.run().unwrap();
 //! println!("final accuracy: {:.2}%", 100.0 * result.final_accuracy());
 //! ```
+//!
+//! ## Running as a service
+//!
+//! `fedscalar serve` hosts many concurrent runs in one process — each
+//! with its own journal and its own telemetry registry — behind a
+//! line-delimited JSON control socket and a `/metrics` HTTP endpoint.
+//! See [`daemon`] and the "Running as a service" section of the crate
+//! README.
+
+#![warn(missing_docs)]
 
 pub mod algo;
 pub mod config;
 pub mod coordinator;
+pub mod daemon;
 pub mod data;
 pub mod error;
 pub mod exp;

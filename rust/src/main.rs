@@ -7,6 +7,7 @@
 //!   status      fold a run journal + telemetry sidecar into a run status view
 //!   suite       run the full four-method figure suite (Figs 2-6 data)
 //!   table1      print the paper's Table I (and the FedScalar counterpart)
+//!   serve       daemon: host many concurrent runs behind a control socket
 //!   strategies  list every registered strategy (name pattern + summary)
 //!   info        show artifact manifest + platform info
 //!
@@ -64,6 +65,7 @@ fn usage() -> String {
        status      run status: journal + telemetry sidecar (FEDSCALAR_TELEMETRY=1)\n\
        suite       the four-method figure suite (Figs 2-6 data)\n\
        table1      print Table I (upload-time arithmetic)\n\
+       serve       daemon: host many concurrent runs (control socket + /metrics)\n\
        strategies  list every registered strategy\n\
        info        artifact + platform info\n"
         .to_string()
@@ -250,6 +252,7 @@ fn run_command(cmd: &str, rest: Vec<String>) -> Result<()> {
         "status" => cmd_status(rest),
         "suite" => cmd_suite(rest),
         "table1" => cmd_table1(),
+        "serve" => cmd_serve(rest),
         "strategies" => cmd_strategies(),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
@@ -462,19 +465,66 @@ fn cmd_suite(rest: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(rest: Vec<String>) -> Result<()> {
+    let a = Args::new(
+        "fedscalar serve",
+        "daemon: host many concurrent runs, each with its own journal and \
+         telemetry registry, behind a line-delimited JSON control socket \
+         plus GET /metrics | /metrics/<run> | /status/<run> over HTTP",
+    )
+    .opt("config", "", "TOML file with a [daemon] table (flags override it)")
+    .opt("control", "", "control socket address (default 127.0.0.1:7878; port 0 = ephemeral)")
+    .opt("http", "", "HTTP metrics/status address (default 127.0.0.1:7879)")
+    .opt("runs-dir", "", "journal directory; unfinished journals re-attach at startup (default runs)")
+    .parse(rest)?;
+    let mut cfg = if a.get("config").is_empty() {
+        fedscalar::config::DaemonConfig::default()
+    } else {
+        fedscalar::config::DaemonConfig::from_toml_file(a.get("config"))?
+    };
+    if a.provided("control") {
+        cfg.control_addr = a.get("control");
+    }
+    if a.provided("http") {
+        cfg.http_addr = a.get("http");
+    }
+    if a.provided("runs-dir") {
+        cfg.runs_dir = PathBuf::from(a.get("runs-dir"));
+    }
+    let daemon = fedscalar::daemon::Daemon::start(cfg)?;
+    println!(
+        "serving: control={} http={} (send {{\"cmd\":\"shutdown\"}} to stop)",
+        daemon.control_addr(),
+        daemon.http_addr()
+    );
+    daemon.wait()
+}
+
 fn cmd_strategies() -> Result<()> {
     println!(
         "registered strategies (resolve by name via --method / fed.method):\n"
     );
-    println!("{:<12} {:<44} {}", "FAMILY", "PATTERN", "SUMMARY");
+    println!("{:<12} {:<44} {:<12} {}", "FAMILY", "PATTERN", "WIRE-TAGS", "SUMMARY");
     let mut listed = fedscalar::algo::strategy::strategies();
     listed.sort_by_key(|i| i.family);
     for info in listed {
-        println!("{:<12} {:<44} {}", info.family, info.pattern, info.summary);
+        // builtins ride the core frame set; only out-of-tree strategies
+        // reserve extra tags (the dynamic range, 32-255)
+        let tags = if info.wire_tags.is_empty() {
+            "core".to_string()
+        } else {
+            info.wire_tags.join(",")
+        };
+        println!(
+            "{:<12} {:<44} {:<12} {}",
+            info.family, info.pattern, tags, info.summary
+        );
     }
     println!(
         "\nout-of-tree strategies register via \
-         fedscalar::algo::strategy::register(StrategyInfo {{ .. }})."
+         fedscalar::algo::strategy::register(StrategyInfo {{ .. }}); their \
+         wire_tags reserve frame tags in the dynamic range (see the wire-tag \
+         namespace table in rust/README.md)."
     );
     Ok(())
 }

@@ -5,6 +5,12 @@
 //! Fig 4 = (cum_bits, test_acc), Fig 5 = (cum_sim_time, test_acc),
 //! Fig 6 = (cum_energy, test_acc).
 
+// Doc debt: this subsystem predates the crate-level `missing_docs`
+// warning (added with the daemon PR, which held coordinator/, runlog/,
+// telemetry/, and daemon/ to it). Public items below still need doc
+// comments; remove this allow once they have them.
+#![allow(missing_docs)]
+
 use crate::error::Result;
 use crate::util::csv::CsvWriter;
 use crate::util::stats;

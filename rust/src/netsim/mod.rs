@@ -16,6 +16,12 @@
 //! these functions and reduces bit-identically to them under the default
 //! (paper §III) scenario.
 
+// Doc debt: this subsystem predates the crate-level `missing_docs`
+// warning (added with the daemon PR, which held coordinator/, runlog/,
+// telemetry/, and daemon/ to it). Public items below still need doc
+// comments; remove this allow once they have them.
+#![allow(missing_docs)]
+
 mod channel;
 mod energy;
 pub mod latency;

@@ -6,6 +6,12 @@
 //! the integration suite asserts the two backends produce matching local-SGD
 //! deltas given identical parameters and batches.
 
+// Doc debt: this subsystem predates the crate-level `missing_docs`
+// warning (added with the daemon PR, which held coordinator/, runlog/,
+// telemetry/, and daemon/ to it). Public items below still need doc
+// comments; remove this allow once they have them.
+#![allow(missing_docs)]
+
 mod init;
 mod mlp;
 

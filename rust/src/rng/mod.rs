@@ -10,6 +10,12 @@
 //! Everything is seedable and reproducible; all experiment entry points
 //! thread explicit seeds so a figure regenerates bit-identically.
 
+// Doc debt: this subsystem predates the crate-level `missing_docs`
+// warning (added with the daemon PR, which held coordinator/, runlog/,
+// telemetry/, and daemon/ to it). Public items below still need doc
+// comments; remove this allow once they have them.
+#![allow(missing_docs)]
+
 mod block;
 mod gaussian;
 mod splitmix;

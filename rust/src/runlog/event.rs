@@ -29,6 +29,7 @@ pub struct RunStarted {
     pub engine: String,
     /// Backend name as printed by `BackendKind::name()`.
     pub backend: String,
+    /// The run seed every engine RNG stream derives from.
     pub run_seed: u64,
     /// The full experiment config, serialized through
     /// `ExperimentConfig::to_toml_string` — replay re-parses it.
@@ -38,15 +39,21 @@ pub struct RunStarted {
 /// Everything one closed round contributes to replay and reporting.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RoundClose {
+    /// The round being closed.
     pub round: u64,
     /// Per-active-slot delivery outcome, in `RoundPlanned.active` order.
     pub outcome: Vec<Delivery>,
+    /// Simulated duration of this round (paper eq. 12 clock).
     pub round_seconds: f64,
+    /// Simulated energy this round spent across the fleet.
     pub energy_joules: f64,
+    /// Uplink bits this round put on the air.
     pub uplink_bits: u64,
+    /// Downlink bits this round broadcast.
     pub downlink_bits: u64,
     /// Phase timings captured by the simnet (see `RoundReport`).
     pub bcast_seconds: f64,
+    /// Virtual-clock time at which this round's phases began.
     pub phase_start_seconds: f64,
     /// Per-slot compute-finish time; NaN for clients that never computed.
     pub ready_seconds: Vec<f64>,
@@ -68,7 +75,9 @@ pub struct RoundClose {
 /// One worker's resume state inside a [`SnapshotState`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerState {
+    /// The worker's strategy blob (`Strategy::save_state`).
     pub strategy_state: Vec<u8>,
+    /// Rounds this worker actually computed (drives its RNG position).
     pub rounds_computed: u64,
 }
 
@@ -78,12 +87,17 @@ pub struct WorkerState {
 pub struct SnapshotState {
     /// The first round NOT covered by this snapshot.
     pub next_round: u64,
+    /// Global model parameters at the boundary.
     pub params: Vec<f32>,
     /// Server-side strategy blob (`Strategy::save_state`).
     pub strategy_state: Vec<u8>,
+    /// Cumulative uplink bits through the boundary.
     pub cum_bits: f64,
+    /// Cumulative downlink bits.
     pub cum_downlink_bits: f64,
+    /// Cumulative simulated seconds.
     pub cum_sim_seconds: f64,
+    /// Cumulative simulated joules.
     pub cum_energy_joules: f64,
     /// Per-client worker state; empty for the sequential engine.
     pub workers: Vec<WorkerState>,
@@ -92,12 +106,29 @@ pub struct SnapshotState {
 /// One journal event — one line in the log file.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
+    /// The run preamble (always the first line).
     RunStarted(RunStarted),
-    RoundPlanned { round: u64, active: Vec<usize> },
+    /// A round opened with this active set.
+    RoundPlanned {
+        /// The opening round.
+        round: u64,
+        /// Selected client ids, in selection order.
+        active: Vec<usize>,
+    },
+    /// A round closed (boxed: the close record is large).
     RoundClosed(Box<RoundClose>),
+    /// A periodic full-state snapshot.
     Snapshot(Box<SnapshotState>),
-    RunResumed { at_round: u64 },
-    RunFinished { rounds: u64 },
+    /// A resume re-attached to this journal.
+    RunResumed {
+        /// First round the continuation ran.
+        at_round: u64,
+    },
+    /// The run completed all its rounds.
+    RunFinished {
+        /// Total rounds the run executed.
+        rounds: u64,
+    },
 }
 
 impl Event {
@@ -409,6 +440,8 @@ fn usize_arr_json(v: &[usize]) -> Json {
 
 // --- hex blobs -----------------------------------------------------------
 
+/// Lowercase hex encoding for opaque blobs (strategy state, params are
+/// not hexed — only byte blobs ride this way).
 pub fn hex_encode(bytes: &[u8]) -> String {
     let mut out = String::with_capacity(bytes.len() * 2);
     for b in bytes {
@@ -417,6 +450,7 @@ pub fn hex_encode(bytes: &[u8]) -> String {
     out
 }
 
+/// Inverse of [`hex_encode`]; rejects odd lengths and non-hex bytes.
 pub fn hex_decode(s: &str) -> Result<Vec<u8>> {
     let b = s.as_bytes();
     if b.len() % 2 != 0 {

@@ -19,11 +19,17 @@ use std::fmt::Write as _;
 /// lookup) — journal objects have a handful of keys.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null` — also the writer's spelling of a non-finite float.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (integers ride exactly below 2^53).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, in insertion order.
     Obj(Vec<(String, Json)>),
 }
 
@@ -46,6 +52,7 @@ impl Json {
         }
     }
 
+    /// String value; `None` for every other variant.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -53,6 +60,7 @@ impl Json {
         }
     }
 
+    /// Array items; `None` for every other variant.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(items) => Some(items),

@@ -74,7 +74,7 @@ impl RunLog {
     pub fn push(&mut self, ev: &Event) -> Result<()> {
         let mut line = ev.encode();
         line.push('\n');
-        let t0 = crate::telemetry::enabled().then(std::time::Instant::now);
+        let t0 = crate::telemetry::active().then(std::time::Instant::now);
         self.out.write_all(line.as_bytes())?;
         self.out.flush()?;
         if let Some(t0) = t0 {
@@ -106,6 +106,7 @@ pub fn start_run(
 /// One round's worth of journal state after folding plan + close.
 #[derive(Debug, Clone)]
 pub struct RoundEntry {
+    /// The client set `RoundPlanned` selected for the round.
     pub active: Vec<usize>,
     /// `None` for a dangling `RoundPlanned` at a crash tail.
     pub close: Option<RoundClose>,
@@ -114,14 +115,18 @@ pub struct RoundEntry {
 /// A parsed journal: the event stream folded into resumable state.
 #[derive(Debug, Clone)]
 pub struct Journal {
+    /// The `RunStarted` preamble (engine, backend, seed, config TOML).
     pub start: RunStarted,
+    /// Every planned round, keyed by round index.
     pub rounds: BTreeMap<u64, RoundEntry>,
     /// The latest usable snapshot, if any survived `RunResumed` pruning.
     pub snapshot: Option<SnapshotState>,
+    /// Whether a `RunFinished` closed the (latest) timeline.
     pub finished: bool,
 }
 
 impl Journal {
+    /// Read and fold the journal at `path` (see [`Journal::parse_str`]).
     pub fn parse_file(path: impl AsRef<Path>) -> Result<Journal> {
         let text = std::fs::read_to_string(&path)?;
         Journal::parse_str(&text)

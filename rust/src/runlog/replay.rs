@@ -31,12 +31,50 @@ use std::path::Path;
 
 /// What a completed resume hands back to the CLI.
 pub struct Resumed {
+    /// Full metric history: journal-recovered records plus the
+    /// freshly-run remainder.
     pub history: RunHistory,
     /// The round the run continued from (0 = full from-scratch replay).
     pub resumed_at: u64,
+    /// Engine name from the journal preamble (`sequential`/`distributed`).
     pub engine: String,
+    /// Compute backend the resumed rounds ran on.
     pub backend: String,
+    /// Federated method name (`fedscalar`/`fedavg`/...).
     pub method: String,
+}
+
+/// A resumable engine, replayed and restored but not yet driven: either
+/// variant stands exactly where the original run stood at the resume
+/// boundary, with the `RunResumed` marker already journaled and the
+/// journal re-attached as its sink. Call the engine's `run_from`
+/// (or step rounds manually) starting at [`PreparedResume::resumed_at`].
+pub enum ResumedEngine {
+    /// The in-process engine (journal preamble said `sequential`).
+    Sequential(Box<Engine>),
+    /// The threaded frame-passing engine (`distributed`).
+    Distributed(Box<DistributedEngine>),
+}
+
+/// The output of [`prepare_resume`]: an engine re-attached to its
+/// journal, plus the preamble facts a caller reports.
+pub struct PreparedResume {
+    /// The restored engine, ready to run from [`Self::resumed_at`].
+    pub engine: ResumedEngine,
+    /// First round left to run (0 = full from-scratch replay).
+    pub resumed_at: u64,
+    /// Engine name from the journal preamble.
+    pub engine_name: String,
+    /// Compute backend the continued rounds will run on.
+    pub backend: String,
+    /// Federated method name.
+    pub method: String,
+    /// Total rounds the run is configured for.
+    pub rounds: usize,
+    /// The config's evaluation cadence — a caller stepping rounds
+    /// manually must reproduce `k % eval_every == 0 || k + 1 == rounds`
+    /// to stay bit-identical to an uninterrupted run.
+    pub eval_every: usize,
 }
 
 /// Resolve a journal's backend name. Accepts everything the CLI does,
@@ -65,13 +103,21 @@ fn entry(journal: &Journal, k: u64) -> Result<&RoundEntry> {
     Ok(e)
 }
 
-/// Resume the run journaled at `path`: replay to the latest snapshot,
-/// restore it, append a `RunResumed` marker, and run the remaining
-/// rounds (which re-journal into the same file; [`Journal::parse_str`]'s
-/// fold lets the later timeline win). `backend_override` substitutes the
-/// compute backend (sequential engine only — results are bit-identical
-/// across backends by the cross-backend equality contract).
-pub fn resume_run(path: impl AsRef<Path>, backend_override: Option<&str>) -> Result<Resumed> {
+/// Rebuild the run journaled at `path` up to (but not past) the resume
+/// boundary: replay the leader-side streams to the latest snapshot,
+/// restore it, append a `RunResumed` marker, and re-attach the journal
+/// as the engine's sink — everything [`resume_run`] does short of
+/// driving the remaining rounds. The daemon uses this to re-attach to
+/// every unfinished journal at startup and then drive each engine on
+/// its own thread; [`Journal::parse_str`]'s fold lets the later
+/// timeline win when the continued rounds re-journal into the same
+/// file. `backend_override` substitutes the compute backend (sequential
+/// engine only — results are bit-identical across backends by the
+/// cross-backend equality contract).
+pub fn prepare_resume(
+    path: impl AsRef<Path>,
+    backend_override: Option<&str>,
+) -> Result<PreparedResume> {
     let path = path.as_ref();
     let journal = Journal::parse_file(path)?;
     if journal.finished {
@@ -86,7 +132,7 @@ pub fn resume_run(path: impl AsRef<Path>, backend_override: Option<&str>) -> Res
     let backend_name = backend_override.unwrap_or(&journal.start.backend);
     let kind = parse_backend(backend_name)?;
 
-    let history = match journal.start.engine.as_str() {
+    let engine = match journal.start.engine.as_str() {
         "sequential" => {
             let be = make_backend(kind, &cfg)?;
             let mut engine = Engine::from_config(&cfg, be, run_seed)?;
@@ -118,7 +164,7 @@ pub fn resume_run(path: impl AsRef<Path>, backend_override: Option<&str>) -> Res
             let mut log = RunLog::append(path)?;
             log.push(&Event::RunResumed { at_round: at })?;
             engine.set_runlog(log);
-            engine.run_from(at as usize)?
+            ResumedEngine::Sequential(Box::new(engine))
         }
         "distributed" => {
             if matches!(kind, BackendKind::Xla) {
@@ -150,7 +196,7 @@ pub fn resume_run(path: impl AsRef<Path>, backend_override: Option<&str>) -> Res
             let mut log = RunLog::append(path)?;
             log.push(&Event::RunResumed { at_round: at })?;
             engine.set_runlog(log);
-            engine.run_from(at as usize)?
+            ResumedEngine::Distributed(Box::new(engine))
         }
         other => {
             return Err(Error::config(format!(
@@ -158,12 +204,32 @@ pub fn resume_run(path: impl AsRef<Path>, backend_override: Option<&str>) -> Res
             )))
         }
     };
+    Ok(PreparedResume {
+        engine,
+        resumed_at: at,
+        engine_name: journal.start.engine,
+        backend: kind.name().to_string(),
+        method: cfg.fed.method.name(),
+        rounds: cfg.fed.rounds,
+        eval_every: cfg.fed.eval_every,
+    })
+}
+
+/// Resume the run journaled at `path`: [`prepare_resume`], then drive
+/// the remaining rounds to completion — the `fedscalar resume` CLI path.
+pub fn resume_run(path: impl AsRef<Path>, backend_override: Option<&str>) -> Result<Resumed> {
+    let prepared = prepare_resume(path, backend_override)?;
+    let at = prepared.resumed_at;
+    let history = match prepared.engine {
+        ResumedEngine::Sequential(mut engine) => engine.run_from(at as usize)?,
+        ResumedEngine::Distributed(mut engine) => engine.run_from(at as usize)?,
+    };
     Ok(Resumed {
         history,
         resumed_at: at,
-        engine: journal.start.engine,
-        backend: kind.name().to_string(),
-        method: cfg.fed.method.name(),
+        engine: prepared.engine_name,
+        backend: prepared.backend,
+        method: prepared.method,
     })
 }
 

@@ -16,6 +16,12 @@
 //! returns only `(seed, scalars, loss, ||delta||²)` — nothing
 //! d-dimensional ever crosses the [`ScalarUpload`] boundary.
 
+// Doc debt: this subsystem predates the crate-level `missing_docs`
+// warning (added with the daemon PR, which held coordinator/, runlog/,
+// telemetry/, and daemon/ to it). Public items below still need doc
+// comments; remove this allow once they have them.
+#![allow(missing_docs)]
+
 mod artifacts;
 mod backend;
 #[cfg(feature = "xla")]

@@ -65,13 +65,20 @@ impl WorkerPool {
     }
 
     fn spawn(threads: usize) -> PoolInner {
+        // lazily spawned from inside `scoped`, i.e. on the engine thread
+        // — capture its telemetry scope so pool-side hooks (task timing,
+        // projection counters inside jobs) land in the same registry as
+        // the run that owns this pool
+        let tel = crate::telemetry::Handle::current();
         let mut task_txs = Vec::with_capacity(threads);
         let mut handles = Vec::with_capacity(threads);
         for i in 0..threads {
             let (tx, rx) = channel::<Shuttle>();
+            let tel = tel.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("fedscalar-worker-{i}"))
                 .spawn(move || {
+                    let _tel = tel.install();
                     while let Ok((task, done, enqueued)) = rx.recv() {
                         let started = enqueued.map(|_| Instant::now());
                         let panic = catch_unwind(AssertUnwindSafe(task)).err();
@@ -94,6 +101,7 @@ impl WorkerPool {
         PoolInner { task_txs, handles }
     }
 
+    /// The declared worker count (≥ 1).
     pub fn threads(&self) -> usize {
         self.target
     }
@@ -120,7 +128,7 @@ impl WorkerPool {
         }
         let inner = self.inner.get_or_init(|| Self::spawn(self.target));
         let (done_tx, done_rx) = channel();
-        let telemetry_on = crate::telemetry::enabled();
+        let telemetry_on = crate::telemetry::active();
         let mut sent = 0usize;
         let mut send_failed = false;
         for (i, job) in jobs.into_iter().enumerate() {

@@ -61,6 +61,12 @@
 //! `t_other + Schedule::combine(uploads)` by the same f64 operations.
 //! `tests/simnet.rs` pins this property.
 
+// Doc debt: this subsystem predates the crate-level `missing_docs`
+// warning (added with the daemon PR, which held coordinator/, runlog/,
+// telemetry/, and daemon/ to it). Public items below still need doc
+// comments; remove this allow once they have them.
+#![allow(missing_docs)]
+
 mod availability;
 mod device;
 mod event;

@@ -13,18 +13,28 @@
 //!   atomic load and a predictable branch — no allocation, no lock, no
 //!   syscall.
 //!
-//! Three layers:
+//! Four layers:
 //!
 //! 1. **Primitives** ([`Counter`], [`Gauge`], [`Histogram`]) — plain
 //!    relaxed atomics, *ungated*: a local instance always records, which
 //!    keeps unit tests independent of the process-wide switch.
-//! 2. **The global [`Registry`]** — every metric the binary exports, as
+//! 2. **The [`Registry`]** — every metric the binary exports, as
 //!    named fields (no interior maps, no registration lock): fixed-index
 //!    families for wire tags, fault kinds, log levels, round phases, and
 //!    pool workers. Enumerable, so both expositions always emit the full
-//!    catalog (`rust/telemetry_expected.txt` pins the names).
-//! 3. **Gated hooks** (`frame_sent`, `crc_reject`, [`span`], ...) — the
-//!    one-liners instrumented code calls; each checks [`enabled`] first.
+//!    catalog (`rust/telemetry_expected.txt` pins the names). One
+//!    process-wide instance backs the CLI ([`global`]); the daemon gives
+//!    every run its own.
+//! 3. **Scopes** ([`Handle`]) — which registry the hooks feed. The
+//!    default scope is the env-gated global registry; a per-run
+//!    [`Handle::scoped`] installed on a thread (RAII, [`Handle::install`])
+//!    redirects every hook that fires on that thread into the run's own
+//!    registry, unconditionally. The engines capture the constructing
+//!    thread's handle and re-install it on every thread they spawn, so a
+//!    whole run — leader, workers, pool — lands in one registry.
+//! 4. **Gated hooks** (`frame_sent`, `crc_reject`, [`span`], ...) — the
+//!    one-liners instrumented code calls; each resolves the current
+//!    scope first ([`active`]) and does nothing when dark.
 //!
 //! Span timers are RAII ([`SpanGuard`]) and accumulate into a
 //! thread-local array — the hot path pays one `Instant::now` pair per
@@ -43,7 +53,7 @@ pub mod status;
 use std::cell::RefCell;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 use crate::runlog::json::Json;
@@ -89,6 +99,99 @@ pub fn force(mode: Option<bool>) {
 }
 
 // ---------------------------------------------------------------------
+// Scopes: which registry the hooks feed
+// ---------------------------------------------------------------------
+
+thread_local! {
+    /// The registry the current thread's hooks feed. `None` is the
+    /// default env-gated mode: hooks hit [`global`] iff [`enabled`].
+    static CURRENT: RefCell<Option<Arc<Registry>>> = const { RefCell::new(None) };
+}
+
+/// Run the closure against the thread's scoped registry, if any.
+#[inline]
+fn with_scoped<T>(f: impl FnOnce(Option<&Registry>) -> T) -> T {
+    CURRENT.with(|c| f(c.borrow().as_deref()))
+}
+
+/// Resolve the hook target: the scoped registry when one is installed
+/// (always records), else the global registry when the env gate is on.
+#[inline]
+fn with_registry(f: impl FnOnce(&Registry)) {
+    with_scoped(|scoped| match scoped {
+        Some(r) => f(r),
+        None if enabled() => f(global()),
+        None => {}
+    });
+}
+
+/// Is any registry collecting on this thread? `true` under an installed
+/// [`Handle::scoped`] regardless of the env gate, else [`enabled`].
+/// Instrumented code that pays a cost *before* calling a hook (an
+/// `Instant::now`, a snapshot render) gates on this, not on [`enabled`].
+#[inline]
+pub fn active() -> bool {
+    with_scoped(|scoped| scoped.is_some()) || enabled()
+}
+
+/// A telemetry scope: either the process default (env-gated [`global`]
+/// registry) or a specific per-run [`Registry`].
+///
+/// Handles are cheap to clone and thread-safe to move; installing one
+/// ([`Handle::install`]) redirects every hook fired on the installing
+/// thread for the guard's lifetime. The engines capture
+/// [`Handle::current`] at construction and re-install it on each thread
+/// they spawn, so a run's workers and pool threads all feed the same
+/// registry as its driving thread.
+#[derive(Clone, Default)]
+pub struct Handle(Option<Arc<Registry>>);
+
+impl Handle {
+    /// The default scope: hooks feed [`global`] iff [`enabled`].
+    pub fn env() -> Handle {
+        Handle(None)
+    }
+
+    /// A scope that feeds `registry` unconditionally — the env gate is
+    /// irrelevant inside it. This is how the daemon isolates concurrent
+    /// runs: one registry per run, installed on every thread of the run.
+    pub fn scoped(registry: Arc<Registry>) -> Handle {
+        Handle(Some(registry))
+    }
+
+    /// The scope installed on the calling thread (the env scope when
+    /// none is). Capture this before spawning a thread that should
+    /// inherit the caller's scope, and install the clone there.
+    pub fn current() -> Handle {
+        CURRENT.with(|c| Handle(c.borrow().clone()))
+    }
+
+    /// The scoped registry, if this handle carries one.
+    pub fn registry(&self) -> Option<&Arc<Registry>> {
+        self.0.as_ref()
+    }
+
+    /// Install this scope on the calling thread. The returned guard
+    /// restores the previous scope on drop, so installs nest.
+    pub fn install(&self) -> ScopeGuard {
+        let prev = CURRENT.with(|c| c.replace(self.0.clone()));
+        ScopeGuard { prev }
+    }
+}
+
+/// RAII scope installation (see [`Handle::install`]): restores the
+/// previously installed scope when dropped.
+pub struct ScopeGuard {
+    prev: Option<Arc<Registry>>,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        CURRENT.with(|c| *c.borrow_mut() = self.prev.take());
+    }
+}
+
+// ---------------------------------------------------------------------
 // Primitives (ungated — gating lives in the hooks)
 // ---------------------------------------------------------------------
 
@@ -96,15 +199,18 @@ pub fn force(mode: Option<bool>) {
 pub struct Counter(AtomicU64);
 
 impl Counter {
+    /// A zeroed counter.
     pub const fn new() -> Counter {
         Counter(AtomicU64::new(0))
     }
 
+    /// Add `n` to the count.
     #[inline]
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Current count.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -120,15 +226,18 @@ impl Default for Counter {
 pub struct Gauge(AtomicU64);
 
 impl Gauge {
+    /// A zeroed gauge.
     pub const fn new() -> Gauge {
         Gauge(AtomicU64::new(0))
     }
 
+    /// Overwrite the value.
     #[inline]
     pub fn set(&self, v: u64) {
         self.0.store(v, Ordering::Relaxed);
     }
 
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -153,6 +262,7 @@ pub struct Histogram<const B: usize> {
 }
 
 impl<const B: usize> Histogram<B> {
+    /// An empty histogram over strictly ascending bucket `edges`.
     pub fn new(edges: [f64; B]) -> Histogram<B> {
         assert!(edges.windows(2).all(|w| w[0] < w[1]), "edges not ascending");
         Histogram {
@@ -163,12 +273,20 @@ impl<const B: usize> Histogram<B> {
         }
     }
 
+    /// Record one sample: the first bucket with `v <= edge`, or
+    /// overflow past the last edge.
     #[inline]
     pub fn record(&self, v: f64) {
         match self.edges.iter().position(|&e| v <= e) {
             Some(i) => self.buckets[i].fetch_add(1, Ordering::Relaxed),
             None => self.overflow.fetch_add(1, Ordering::Relaxed),
         };
+        self.add_sum(v);
+    }
+
+    /// CAS-add `v` to the f64 sum (recording is rare — per flush, not
+    /// per coordinate — so contention is not a concern).
+    fn add_sum(&self, v: f64) {
         let mut cur = self.sum_bits.load(Ordering::Relaxed);
         loop {
             let next = (f64::from_bits(cur) + v).to_bits();
@@ -182,6 +300,20 @@ impl<const B: usize> Histogram<B> {
         }
     }
 
+    /// Fold `other`'s buckets, overflow and sum into this histogram.
+    /// Both sides must share the same edges (they always do in practice:
+    /// the registry builds every instance from the same const edges).
+    pub fn absorb(&self, other: &Histogram<B>) {
+        debug_assert_eq!(self.edges, other.edges, "absorbing mismatched histograms");
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.overflow
+            .fetch_add(other.overflow.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.add_sum(other.sum());
+    }
+
+    /// The configured bucket edges.
     pub fn edges(&self) -> &[f64; B] {
         &self.edges
     }
@@ -193,10 +325,12 @@ impl<const B: usize> Histogram<B> {
         out
     }
 
+    /// Total samples recorded (all buckets plus overflow).
     pub fn count(&self) -> u64 {
         self.bucket_counts().iter().sum()
     }
 
+    /// Sum of all recorded samples.
     pub fn sum(&self) -> f64 {
         f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
     }
@@ -236,13 +370,19 @@ pub fn tag_index(tag: u8) -> usize {
 /// `Deliver`, plus worker crashes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FaultKind {
+    /// A frame silently discarded in flight.
     Drop = 0,
+    /// A single bit flipped in a frame (caught by the CRC seal).
     Corrupt = 1,
+    /// A frame delivered twice.
     Duplicate = 2,
+    /// A frame delivered late (reordered behind later traffic).
     Delay = 3,
+    /// A worker process killed mid-round.
     Crash = 4,
 }
 
+/// Exposition names for [`FaultKind`] (same order as the enum).
 pub const FAULT_KIND_NAMES: [&str; 5] = ["drop", "corrupt", "duplicate", "delay", "crash"];
 
 /// Exposition names for `util::logger::Level` (same order as the enum).
@@ -253,16 +393,26 @@ pub const LEVEL_NAMES: [&str; 5] = ["error", "warn", "info", "debug", "trace"];
 /// `Compute` is the leader-side collect wait while workers compute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
+    /// Client sampling / availability resolution.
     Select = 0,
+    /// Model broadcast onto the downlink (distributed engine only).
     Broadcast = 1,
+    /// Local gradient computation (leader-side collect wait when
+    /// distributed).
     Compute = 2,
+    /// Strategy uplink encoding.
     Encode = 3,
+    /// Server-side uplink decoding / reconstruction.
     Decode = 4,
+    /// Applying the aggregated update to the server model.
     Apply = 5,
+    /// Held-out evaluation.
     Eval = 6,
 }
 
+/// Number of [`Phase`] variants (array sizes below).
 pub const NUM_PHASES: usize = 7;
+/// Exposition names for [`Phase`] (same order as the enum).
 pub const PHASE_NAMES: [&str; NUM_PHASES] = [
     "select",
     "broadcast",
@@ -288,27 +438,46 @@ pub const FLUSH_EDGES: [f64; 7] = [0.00005, 0.0002, 0.001, 0.005, 0.02, 0.1, 0.5
 /// registration lock, fully enumerable for exposition.
 pub struct Registry {
     start: Instant,
+    /// Engine rounds completed.
     pub rounds: Counter,
+    /// Frames put on a leader<->worker channel, by wire tag.
     pub tx_frames: [Counter; TAG_NAMES.len()],
+    /// Bytes put on a leader<->worker channel, by wire tag.
     pub tx_bytes: [Counter; TAG_NAMES.len()],
+    /// Sealed frames rejected by the CRC32 check.
     pub crc_rejects: Counter,
+    /// Downlink retransmissions beyond the first attempt.
     pub retries: Counter,
+    /// Delivery NACKs issued to clients whose upload missed the round.
     pub nacks: Counter,
+    /// Faults injected by the fault layer, by [`FaultKind`].
     pub faults: [Counter; FAULT_KIND_NAMES.len()],
+    /// Logger messages emitted, by level.
     pub log_messages: [Counter; LEVEL_NAMES.len()],
+    /// Projection v-stream blocks generated.
     pub projection_blocks: Counter,
+    /// Fixed-shape decode macro-chunks reduced.
     pub projection_chunks: Counter,
+    /// Current dead-worker set size (distributed engine).
     pub dead_clients: Gauge,
+    /// Current battery-exhausted client count (simnet).
     pub exhausted_clients: Gauge,
+    /// Host nanoseconds spent per round [`Phase`].
     pub phase_ns: [Counter; NUM_PHASES],
+    /// Spans closed per round [`Phase`].
     pub phase_spans: [Counter; NUM_PHASES],
+    /// Per-pool-worker nanoseconds between task submit and start.
     pub pool_queue_wait_ns: [Counter; MAX_POOL_WORKERS],
+    /// Per-pool-worker nanoseconds executing tasks.
     pub pool_busy_ns: [Counter; MAX_POOL_WORKERS],
+    /// Per-pool-worker tasks settled.
     pub pool_tasks: [Counter; MAX_POOL_WORKERS],
+    /// Run-journal write+flush latency, seconds ([`FLUSH_EDGES`]).
     pub runlog_flush_seconds: Histogram<7>,
 }
 
 impl Registry {
+    /// A fresh all-zero registry whose uptime starts now.
     pub fn new() -> Registry {
         Registry {
             start: Instant::now(),
@@ -333,8 +502,47 @@ impl Registry {
         }
     }
 
+    /// Seconds since this registry was created.
     pub fn uptime_seconds(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
+    }
+
+    /// Fold every counter, gauge and histogram of `other` into this
+    /// registry (gauges sum: across per-run registries a fleet-level
+    /// "dead clients" is the total over runs). The daemon's aggregated
+    /// `/metrics` endpoint builds a fresh registry and absorbs each
+    /// run's; `other` is unchanged.
+    pub fn absorb(&self, other: &Registry) {
+        self.rounds.add(other.rounds.get());
+        for i in 0..TAG_NAMES.len() {
+            self.tx_frames[i].add(other.tx_frames[i].get());
+            self.tx_bytes[i].add(other.tx_bytes[i].get());
+        }
+        self.crc_rejects.add(other.crc_rejects.get());
+        self.retries.add(other.retries.get());
+        self.nacks.add(other.nacks.get());
+        for i in 0..FAULT_KIND_NAMES.len() {
+            self.faults[i].add(other.faults[i].get());
+        }
+        for i in 0..LEVEL_NAMES.len() {
+            self.log_messages[i].add(other.log_messages[i].get());
+        }
+        self.projection_blocks.add(other.projection_blocks.get());
+        self.projection_chunks.add(other.projection_chunks.get());
+        self.dead_clients
+            .set(self.dead_clients.get() + other.dead_clients.get());
+        self.exhausted_clients
+            .set(self.exhausted_clients.get() + other.exhausted_clients.get());
+        for i in 0..NUM_PHASES {
+            self.phase_ns[i].add(other.phase_ns[i].get());
+            self.phase_spans[i].add(other.phase_spans[i].get());
+        }
+        for w in 0..MAX_POOL_WORKERS {
+            self.pool_queue_wait_ns[w].add(other.pool_queue_wait_ns[w].get());
+            self.pool_busy_ns[w].add(other.pool_busy_ns[w].get());
+            self.pool_tasks[w].add(other.pool_tasks[w].get());
+        }
+        self.runlog_flush_seconds.absorb(&other.runlog_flush_seconds);
     }
 }
 
@@ -344,7 +552,8 @@ impl Default for Registry {
     }
 }
 
-/// The process-wide registry all gated hooks feed.
+/// The process-wide registry: what the hooks feed when no per-run scope
+/// is installed (the CLI case).
 pub fn global() -> &'static Registry {
     static REG: OnceLock<Registry> = OnceLock::new();
     REG.get_or_init(Registry::new)
@@ -353,121 +562,104 @@ pub fn global() -> &'static Registry {
 // ---------------------------------------------------------------------
 // Gated hooks (the instrumentation surface)
 // ---------------------------------------------------------------------
+//
+// Each hook resolves its target through the thread's scope: the run's
+// registry under an installed per-run Handle (unconditionally), else
+// the global registry iff the env gate is on, else nothing.
 
 /// A frame put on a leader<->worker channel (`tag` = first frame byte).
 #[inline]
 pub fn frame_sent(tag: u8, bytes: usize) {
-    if !enabled() {
-        return;
-    }
-    let i = tag_index(tag);
-    let r = global();
-    r.tx_frames[i].add(1);
-    r.tx_bytes[i].add(bytes as u64);
+    with_registry(|r| {
+        let i = tag_index(tag);
+        r.tx_frames[i].add(1);
+        r.tx_bytes[i].add(bytes as u64);
+    });
 }
 
 /// A sealed frame failed its CRC32 check and was rejected.
 #[inline]
 pub fn crc_reject() {
-    if enabled() {
-        global().crc_rejects.add(1);
-    }
+    with_registry(|r| r.crc_rejects.add(1));
 }
 
 /// A downlink retransmission beyond the first attempt.
 #[inline]
 pub fn retry() {
-    if enabled() {
-        global().retries.add(1);
-    }
+    with_registry(|r| r.retries.add(1));
 }
 
 /// A delivery NACK issued to a client whose upload missed the round.
 #[inline]
 pub fn nack() {
-    if enabled() {
-        global().nacks.add(1);
-    }
+    with_registry(|r| r.nacks.add(1));
 }
 
 /// The fault layer injected a fault of `kind`.
 #[inline]
 pub fn fault_injected(kind: FaultKind) {
-    if enabled() {
-        global().faults[kind as usize].add(1);
-    }
+    with_registry(|r| r.faults[kind as usize].add(1));
 }
 
 /// The logger emitted (passed its level filter) one message at `level`
 /// (`Level as usize`).
 #[inline]
 pub fn log_message(level: usize) {
-    if enabled() {
-        if let Some(c) = global().log_messages.get(level) {
+    with_registry(|r| {
+        if let Some(c) = r.log_messages.get(level) {
             c.add(1);
         }
-    }
+    });
 }
 
 /// One pool task settled on `worker`: `queue_wait_ns` between submit and
 /// task start, `busy_ns` executing.
 #[inline]
 pub fn pool_task(worker: usize, queue_wait_ns: u64, busy_ns: u64) {
-    if !enabled() || worker >= MAX_POOL_WORKERS {
+    if worker >= MAX_POOL_WORKERS {
         return;
     }
-    let r = global();
-    r.pool_queue_wait_ns[worker].add(queue_wait_ns);
-    r.pool_busy_ns[worker].add(busy_ns);
-    r.pool_tasks[worker].add(1);
+    with_registry(|r| {
+        r.pool_queue_wait_ns[worker].add(queue_wait_ns);
+        r.pool_busy_ns[worker].add(busy_ns);
+        r.pool_tasks[worker].add(1);
+    });
 }
 
 /// One run-journal event written through (write + flush), in seconds.
 #[inline]
 pub fn runlog_flush(seconds: f64) {
-    if enabled() {
-        global().runlog_flush_seconds.record(seconds);
-    }
+    with_registry(|r| r.runlog_flush_seconds.record(seconds));
 }
 
 /// `n` projection v-stream blocks generated (V_BLOCK-sized).
 #[inline]
 pub fn projection_blocks(n: u64) {
-    if enabled() {
-        global().projection_blocks.add(n);
-    }
+    with_registry(|r| r.projection_blocks.add(n));
 }
 
 /// `n` fixed-shape decode macro-chunks reduced.
 #[inline]
 pub fn projection_chunks(n: u64) {
-    if enabled() {
-        global().projection_chunks.add(n);
-    }
+    with_registry(|r| r.projection_chunks.add(n));
 }
 
 /// Current dead-worker set size (distributed engine).
 #[inline]
 pub fn set_dead_clients(n: usize) {
-    if enabled() {
-        global().dead_clients.set(n as u64);
-    }
+    with_registry(|r| r.dead_clients.set(n as u64));
 }
 
 /// Current battery-exhausted client count (simnet).
 #[inline]
 pub fn set_exhausted_clients(n: usize) {
-    if enabled() {
-        global().exhausted_clients.set(n as u64);
-    }
+    with_registry(|r| r.exhausted_clients.set(n as u64));
 }
 
 /// One engine round completed.
 #[inline]
 pub fn round_complete() {
-    if enabled() {
-        global().rounds.add(1);
-    }
+    with_registry(|r| r.rounds.add(1));
 }
 
 // ---------------------------------------------------------------------
@@ -480,9 +672,9 @@ thread_local! {
         const { RefCell::new([(0, 0); NUM_PHASES]) };
 }
 
-/// RAII phase timer: armed only while telemetry is enabled; on drop it
-/// adds the elapsed host time to this thread's accumulator. Nothing
-/// shared is touched until [`drain_spans`].
+/// RAII phase timer: armed only while telemetry is [`active`] on this
+/// thread; on drop it adds the elapsed host time to this thread's
+/// accumulator. Nothing shared is touched until [`drain_spans`].
 pub struct SpanGuard {
     phase: usize,
     start: Option<Instant>,
@@ -493,7 +685,7 @@ pub struct SpanGuard {
 pub fn span(phase: Phase) -> SpanGuard {
     SpanGuard {
         phase: phase as usize,
-        start: enabled().then(Instant::now),
+        start: active().then(Instant::now),
     }
 }
 
@@ -510,22 +702,25 @@ impl Drop for SpanGuard {
     }
 }
 
-/// Fold this thread's span accumulator into the global registry and
-/// return the per-phase nanoseconds since the last drain (all zeros
-/// while disabled — the engines forward a non-zero result into the
-/// journal's `host_phase_ms`). Call at round boundaries, on the thread
-/// that ran the spans.
+/// Fold this thread's span accumulator into the current scope's
+/// registry and return the per-phase nanoseconds since the last drain
+/// (all zeros while inactive — the engines forward a non-zero result
+/// into the journal's `host_phase_ms`). Call at round boundaries, on
+/// the thread that ran the spans.
 pub fn drain_spans() -> [u64; NUM_PHASES] {
     let taken = SPAN_ACC.with(|acc| std::mem::take(&mut *acc.borrow_mut()));
-    let r = global();
     let mut out = [0u64; NUM_PHASES];
-    for (i, (ns, count)) in taken.into_iter().enumerate() {
-        out[i] = ns;
-        if count > 0 {
-            r.phase_ns[i].add(ns);
-            r.phase_spans[i].add(count);
-        }
+    for (i, (ns, _)) in taken.iter().enumerate() {
+        out[i] = *ns;
     }
+    with_registry(|r| {
+        for (i, (ns, count)) in taken.into_iter().enumerate() {
+            if count > 0 {
+                r.phase_ns[i].add(ns);
+                r.phase_spans[i].add(count);
+            }
+        }
+    });
     out
 }
 
@@ -867,11 +1062,12 @@ pub fn sidecar_path(journal: &Path) -> PathBuf {
     journal.with_extension("metrics.json")
 }
 
-/// Write the global registry's JSON snapshot next to `journal`. Errors
-/// are returned, not raised — telemetry must never fail a run; callers
-/// drop the result.
+/// Write the current scope's JSON snapshot (the run's registry under an
+/// installed [`Handle::scoped`], else the global one) next to
+/// `journal`. Errors are returned, not raised — telemetry must never
+/// fail a run; callers drop the result.
 pub fn write_sidecar(journal: &Path) -> std::io::Result<()> {
-    let body = snapshot_json(global()).to_json_string();
+    let body = with_scoped(|scoped| snapshot_json(scoped.unwrap_or_else(global))).to_json_string();
     std::fs::write(sidecar_path(journal), body + "\n")
 }
 
@@ -906,6 +1102,63 @@ mod tests {
             sidecar_path(Path::new("/tmp/run.jsonl")),
             PathBuf::from("/tmp/run.metrics.json")
         );
+    }
+
+    #[test]
+    fn scoped_handles_redirect_hooks_and_restore_on_drop() {
+        // a scoped install must capture hooks regardless of the env
+        // gate, and dropping the guard must restore the outer scope
+        let a = Arc::new(Registry::new());
+        let b = Arc::new(Registry::new());
+        {
+            let _ga = Handle::scoped(a.clone()).install();
+            assert!(active());
+            retry();
+            {
+                // nested scope: b collects, a does not
+                let _gb = Handle::scoped(b.clone()).install();
+                retry();
+                retry();
+            }
+            retry(); // back in a's scope
+        }
+        assert_eq!(a.retries.get(), 2);
+        assert_eq!(b.retries.get(), 2);
+        // Handle::current outside any install is the env scope
+        assert!(Handle::current().registry().is_none());
+    }
+
+    #[test]
+    fn spans_drain_into_the_scoped_registry() {
+        let r = Arc::new(Registry::new());
+        let _g = Handle::scoped(r.clone()).install();
+        {
+            let _s = span(Phase::Compute);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let per_round = drain_spans();
+        assert!(per_round[Phase::Compute as usize] > 0);
+        assert_eq!(r.phase_spans[Phase::Compute as usize].get(), 1);
+    }
+
+    #[test]
+    fn absorb_sums_counters_gauges_and_histograms() {
+        let a = Registry::new();
+        let b = Registry::new();
+        a.rounds.add(3);
+        b.rounds.add(4);
+        a.dead_clients.set(1);
+        b.dead_clients.set(2);
+        a.runlog_flush_seconds.record(0.25);
+        b.runlog_flush_seconds.record(0.0001220703125);
+        b.runlog_flush_seconds.record(9.0); // overflow bucket
+        a.absorb(&b);
+        assert_eq!(a.rounds.get(), 7);
+        assert_eq!(b.rounds.get(), 4, "absorb must not touch the source");
+        assert_eq!(a.dead_clients.get(), 3);
+        assert_eq!(a.runlog_flush_seconds.count(), 3);
+        let expect = 0.25 + 0.0001220703125 + 9.0;
+        assert!((a.runlog_flush_seconds.sum() - expect).abs() < 1e-12);
     }
 
     #[test]

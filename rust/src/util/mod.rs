@@ -2,6 +2,12 @@
 //! (clap / serde+toml / criterion / env_logger) — unavailable in this
 //! offline environment, so implemented and tested here.
 
+// Doc debt: this subsystem predates the crate-level `missing_docs`
+// warning (added with the daemon PR, which held coordinator/, runlog/,
+// telemetry/, and daemon/ to it). Public items below still need doc
+// comments; remove this allow once they have them.
+#![allow(missing_docs)]
+
 pub mod bench;
 pub mod cli;
 pub mod csv;

@@ -1,0 +1,322 @@
+//! Daemon integration suite: the `fedscalar serve` hosting contract.
+//!
+//! One end-to-end scenario pins the three guarantees the daemon makes:
+//!
+//! (a) a run the daemon was stopped under re-attaches on restart and its
+//!     journaled history is bit-identical to an uninterrupted solo run;
+//! (b) a cancelled run's journal has no `RunFinished` and resumes
+//!     cleanly (here: through the in-process `resume_run` the CLI uses);
+//! (c) each hosted run's `/metrics` catalog contains only its own
+//!     series — two concurrent runs with disjoint wire vocabularies
+//!     (FedScalar's scalar frames vs FedAvg's dense frames) never leak
+//!     into each other's registries.
+
+use fedscalar::algo::Method;
+use fedscalar::config::{DaemonConfig, ExperimentConfig};
+use fedscalar::coordinator::DistributedEngine;
+use fedscalar::daemon::Daemon;
+use fedscalar::metrics::same_histories;
+use fedscalar::rng::VDistribution;
+use fedscalar::runlog::json::{self, Json};
+use fedscalar::runlog::replay::resume_run;
+use fedscalar::runlog::Journal;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn runs_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "fedscalar_daemon_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn smoke(method: Method, rounds: usize, eval_every: usize, agents: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.fed.method = method;
+    cfg.fed.rounds = rounds;
+    cfg.fed.eval_every = eval_every;
+    cfg.fed.num_agents = agents;
+    cfg.fed.local_steps = 2;
+    cfg.fed.batch_size = 8;
+    cfg
+}
+
+/// One control connection: send request lines, read reply lines.
+struct Ctl {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Ctl {
+    fn connect(addr: SocketAddr) -> Ctl {
+        let stream = TcpStream::connect(addr).expect("connect control socket");
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Ctl {
+            writer: stream,
+            reader,
+        }
+    }
+
+    fn request(&mut self, req: &Json) -> Json {
+        let mut line = req.to_json_string();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes()).expect("send request");
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).expect("read reply");
+        json::parse(&reply).expect("parse reply")
+    }
+
+    fn ok(&mut self, req: &Json) -> Json {
+        let reply = self.request(req);
+        assert_eq!(
+            reply.get("ok"),
+            Some(&Json::Bool(true)),
+            "request failed: {}",
+            reply.to_json_string()
+        );
+        reply
+    }
+}
+
+fn obj(fields: &[(&str, Json)]) -> Json {
+    Json::Obj(
+        fields
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.clone()))
+            .collect(),
+    )
+}
+
+fn submit_req(name: &str, engine: &str, seed: u64, cfg: &ExperimentConfig) -> Json {
+    obj(&[
+        ("cmd", Json::Str("submit".into())),
+        ("name", Json::Str(name.into())),
+        ("engine", Json::Str(engine.into())),
+        ("seed", Json::Num(seed as f64)),
+        ("config", Json::Str(cfg.to_toml_string().unwrap())),
+    ])
+}
+
+fn named(cmd: &str, name: &str) -> Json {
+    obj(&[
+        ("cmd", Json::Str(cmd.into())),
+        ("name", Json::Str(name.into())),
+    ])
+}
+
+/// Poll `status` until the run's telemetry round counter reaches `n`.
+fn wait_for_round(ctl: &mut Ctl, name: &str, n: f64) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let st = ctl.ok(&named("status", name));
+        if st.get("round").and_then(Json::as_f64).unwrap_or(0.0) >= n {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{name} never reached round {n}: {}",
+            st.to_json_string()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Plain HTTP/1.0 GET returning (status code, body).
+fn http_get(addr: SocketAddr, path: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect http");
+    stream
+        .write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes())
+        .expect("send request");
+    let mut text = String::new();
+    stream.read_to_string(&mut text).expect("read response");
+    let (head, body) = text.split_once("\r\n\r\n").expect("header terminator");
+    let code: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    (code, body.to_string())
+}
+
+/// The nonzero-valued series line for a counter, e.g. `name{...} 3`.
+fn metric_value(body: &str, series: &str) -> f64 {
+    body.lines()
+        .find(|l| l.starts_with(series) && l.as_bytes().get(series.len()) == Some(&b' '))
+        .unwrap_or_else(|| panic!("series {series} absent"))
+        .rsplit(' ')
+        .next()
+        .unwrap()
+        .parse()
+        .unwrap()
+}
+
+#[test]
+fn daemon_hosts_cancels_restarts_and_stays_bit_identical() {
+    let dir = runs_dir("e2e");
+    // alpha: FedScalar (scalar uplink frames), long enough to still be
+    // mid-flight when the daemon shuts down; beta: FedAvg (dense frames)
+    let cfg_alpha = smoke(
+        Method::fedscalar(VDistribution::Rademacher, 1),
+        8000,
+        2000,
+        4,
+    );
+    let cfg_beta = smoke(Method::fedavg(), 5000, 1250, 3);
+
+    let daemon = Daemon::start(DaemonConfig {
+        control_addr: "127.0.0.1:0".into(),
+        http_addr: "127.0.0.1:0".into(),
+        runs_dir: dir.clone(),
+    })
+    .expect("start daemon");
+    let http = daemon.http_addr();
+    let mut ctl = Ctl::connect(daemon.control_addr());
+
+    ctl.ok(&submit_req("alpha", "distributed", 7, &cfg_alpha));
+    ctl.ok(&submit_req("beta", "distributed", 8, &cfg_beta));
+    wait_for_round(&mut ctl, "alpha", 1.0);
+    wait_for_round(&mut ctl, "beta", 1.0);
+
+    // (c) registry isolation over HTTP: each catalog carries only its
+    // own run's wire vocabulary
+    let (code, alpha_prom) = http_get(http, "/metrics/alpha");
+    assert_eq!(code, 200);
+    let (code, beta_prom) = http_get(http, "/metrics/beta");
+    assert_eq!(code, 200);
+    let scalar = "fedscalar_wire_tx_frames_total{tag=\"scalar\"}";
+    let dense = "fedscalar_wire_tx_frames_total{tag=\"dense\"}";
+    assert!(metric_value(&alpha_prom, scalar) > 0.0, "alpha sent no scalar frames");
+    assert_eq!(metric_value(&alpha_prom, dense), 0.0, "beta leaked into alpha");
+    assert!(metric_value(&beta_prom, dense) > 0.0, "beta sent no dense frames");
+    assert_eq!(metric_value(&beta_prom, scalar), 0.0, "alpha leaked into beta");
+
+    // the fleet view aggregates both
+    let (code, fleet) = http_get(http, "/metrics");
+    assert_eq!(code, 200);
+    assert!(metric_value(&fleet, scalar) > 0.0 && metric_value(&fleet, dense) > 0.0);
+
+    // live status over HTTP renders from journal + in-process registry
+    let (code, status) = http_get(http, "/status/alpha");
+    assert_eq!(code, 200);
+    assert!(status.contains("engine=distributed"), "{status}");
+    let (code, _) = http_get(http, "/status/nosuch");
+    assert_eq!(code, 404);
+
+    // cancel beta and observe the drain complete
+    ctl.ok(&named("cancel", "beta"));
+    let st = ctl.ok(&named("wait", "beta"));
+    assert_eq!(st.get("state").and_then(Json::as_str), Some("cancelled"));
+
+    // shutdown with alpha still running: the stop flag drains it at a
+    // quiescent boundary, exactly like a cancel
+    ctl.ok(&obj(&[("cmd", Json::Str("shutdown".into()))]));
+    daemon.wait().expect("daemon A wait");
+
+    let alpha_path = dir.join("alpha.jsonl");
+    let beta_path = dir.join("beta.jsonl");
+    let aj = Journal::parse_file(&alpha_path).expect("alpha journal");
+    assert!(
+        !aj.finished,
+        "alpha finished before shutdown — raise its rounds to keep the restart scenario meaningful"
+    );
+    let bj = Journal::parse_file(&beta_path).expect("beta journal");
+    assert!(!bj.finished, "cancel must not journal RunFinished");
+
+    // (b) the cancelled journal resumes cleanly via the CLI path, and
+    // the stitched history is bit-identical to an uninterrupted solo run
+    let resumed_beta = resume_run(&beta_path, None).expect("resume cancelled beta");
+    let solo_beta = DistributedEngine::from_config(&cfg_beta, 8)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(
+        same_histories(&resumed_beta.history, &solo_beta),
+        "cancelled-then-resumed beta diverged from a solo run"
+    );
+
+    // restart: daemon B scans the runs dir, re-attaches alpha (beta's
+    // journal is finished now and is left alone)
+    let daemon_b = Daemon::start(DaemonConfig {
+        control_addr: "127.0.0.1:0".into(),
+        http_addr: "127.0.0.1:0".into(),
+        runs_dir: dir.clone(),
+    })
+    .expect("start daemon B");
+    let mut ctl_b = Ctl::connect(daemon_b.control_addr());
+    let listing = ctl_b.ok(&obj(&[("cmd", Json::Str("list".into()))]));
+    let runs = listing.get("runs").and_then(Json::as_arr).unwrap();
+    assert_eq!(runs.len(), 1, "daemon B should host alpha only: {}", listing.to_json_string());
+    assert_eq!(runs[0].get("name").and_then(Json::as_str), Some("alpha"));
+
+    let st = ctl_b.ok(&named("wait", "alpha"));
+    assert_eq!(
+        st.get("state").and_then(Json::as_str),
+        Some("finished"),
+        "{}",
+        st.to_json_string()
+    );
+    ctl_b.ok(&obj(&[("cmd", Json::Str("shutdown".into()))]));
+    daemon_b.wait().expect("daemon B wait");
+
+    // (a) the re-attached run's journaled history is bit-identical to a
+    // solo uninterrupted run
+    let aj = Journal::parse_file(&alpha_path).expect("alpha journal after restart");
+    assert!(aj.finished);
+    let journaled = aj.records_before(u64::MAX);
+    let solo_alpha = DistributedEngine::from_config(&cfg_alpha, 7)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(journaled.len(), solo_alpha.records.len());
+    for (j, s) in journaled.iter().zip(&solo_alpha.records) {
+        assert!(
+            j.same_metrics(s),
+            "alpha diverged at round {} after the daemon restart",
+            s.round
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn daemon_rejects_bad_submissions() {
+    let dir = runs_dir("reject");
+    let daemon = Daemon::start(DaemonConfig {
+        control_addr: "127.0.0.1:0".into(),
+        http_addr: "127.0.0.1:0".into(),
+        runs_dir: dir.clone(),
+    })
+    .expect("start daemon");
+    let mut ctl = Ctl::connect(daemon.control_addr());
+    let cfg = smoke(Method::fedscalar(VDistribution::Rademacher, 1), 4000, 1000, 3);
+
+    // path-escaping and malformed names
+    let bad = ctl.request(&submit_req("../escape", "sequential", 1, &cfg));
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+    // unknown engine
+    let bad = ctl.request(&submit_req("run1", "hybrid", 1, &cfg));
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+    // faults demand the distributed engine — rejected at submit time
+    let mut faulty = cfg.clone();
+    faulty.faults.drop = 0.1;
+    let bad = ctl.request(&submit_req("run2", "sequential", 1, &faulty));
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+    // duplicate names
+    ctl.ok(&submit_req("dup", "sequential", 1, &cfg));
+    let bad = ctl.request(&submit_req("dup", "sequential", 2, &cfg));
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+    // unknown run
+    let bad = ctl.request(&named("cancel", "ghost"));
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+
+    ctl.ok(&named("cancel", "dup"));
+    ctl.ok(&obj(&[("cmd", Json::Str("shutdown".into()))]));
+    daemon.wait().expect("daemon wait");
+    let _ = std::fs::remove_dir_all(&dir);
+}

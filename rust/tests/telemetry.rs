@@ -373,6 +373,76 @@ fn status_renders_rate_wire_and_pool_from_a_journaled_run() {
     cleanup(&path);
 }
 
+// ---------------------------------------------------------------------
+// Per-run registry isolation (the daemon's hosting contract)
+// ---------------------------------------------------------------------
+
+#[test]
+fn scoped_registries_isolate_concurrent_runs_and_do_not_perturb_them() {
+    let _g = gate();
+    // env gate off: anything that lands in the process-global registry
+    // or leaks between scopes is a bug this test must catch
+    let _f = Forced::set(false);
+
+    // two concurrent distributed runs with disjoint wire vocabularies:
+    // fedscalar uploads scalar frames, fedavg uploads dense frames
+    let ca = cfg(Method::fedscalar(VDistribution::Rademacher, 1), 8, 4);
+    let cb = cfg(Method::fedavg(), 6, 3);
+
+    // solo baselines, no scopes installed
+    let solo_a = run_dist(&ca, 11);
+    let solo_b = run_dist(&cb, 12);
+
+    let reg_a = std::sync::Arc::new(telemetry::Registry::new());
+    let reg_b = std::sync::Arc::new(telemetry::Registry::new());
+    let (ha, hb) = (
+        telemetry::Handle::scoped(reg_a.clone()),
+        telemetry::Handle::scoped(reg_b.clone()),
+    );
+    let ta = std::thread::spawn({
+        let ca = ca.clone();
+        move || {
+            let _tel = ha.install();
+            run_dist(&ca, 11)
+        }
+    });
+    let tb = std::thread::spawn({
+        let cb = cb.clone();
+        move || {
+            let _tel = hb.install();
+            run_dist(&cb, 12)
+        }
+    });
+    let hist_a = ta.join().unwrap();
+    let hist_b = tb.join().unwrap();
+
+    // (1) zero perturbation: scoped runs are bit-identical to solo ones
+    assert!(same_histories(&solo_a, &hist_a), "scope perturbed run A");
+    assert!(same_histories(&solo_b, &hist_b), "scope perturbed run B");
+
+    // (2) each registry holds its own run's series only: rounds match
+    // the run's own length, and the other method's frames are absent
+    assert_eq!(reg_a.rounds.get(), 8, "run A round counter");
+    assert_eq!(reg_b.rounds.get(), 6, "run B round counter");
+    let tag = |name: &str| {
+        telemetry::TAG_NAMES
+            .iter()
+            .position(|t| *t == name)
+            .unwrap()
+    };
+    let (scalar, dense) = (tag("scalar"), tag("dense"));
+    assert!(reg_a.tx_frames[scalar].get() > 0, "run A sent no scalar frames");
+    assert!(reg_b.tx_frames[dense].get() > 0, "run B sent no dense frames");
+    assert_eq!(reg_a.tx_frames[dense].get(), 0, "run B leaked into A");
+    assert_eq!(reg_b.tx_frames[scalar].get(), 0, "run A leaked into B");
+
+    // (3) the rendered catalogs disagree wherever the runs differ
+    let prom_a = telemetry::render_prometheus(&reg_a);
+    let prom_b = telemetry::render_prometheus(&reg_b);
+    assert!(prom_a.contains("fedscalar_rounds_total 8"), "{prom_a}");
+    assert!(prom_b.contains("fedscalar_rounds_total 6"), "{prom_b}");
+}
+
 #[test]
 fn status_survives_a_torn_final_journal_line_and_a_missing_sidecar() {
     let _g = gate();
