@@ -12,7 +12,10 @@
 //! name → ns/iter) so the perf trajectory is diffable across PRs. Set
 //! `FEDSCALAR_BENCH_QUICK=1` for the sub-second verify.sh pass.
 
-use fedscalar::algo::{projection, LocalSgd, Method, Quantizer, Strategy};
+use fedscalar::algo::{
+    aggregate_and_apply_robust, projection, Aggregator, LocalSgd, Method, Quantizer, RobustConfig,
+    Strategy,
+};
 use fedscalar::coordinator::Uplink;
 use fedscalar::config::ExperimentConfig;
 use fedscalar::coordinator::{DistributedEngine, Engine};
@@ -394,6 +397,26 @@ fn main() {
             .aggregate_and_apply(&mut be, &mut agg_params, &sign_ups)
             .unwrap()
     });
+
+    header("robust server combine at d=1990 (20 fedscalar agents)");
+    // the Byzantine-defense hot path: per-client dense reconstruction
+    // (20 projector decodes) + the deterministic combine. `mean`
+    // delegates to the strategy untouched — its entry is the baseline
+    // the three robust policies are priced against.
+    let mut fs: Box<dyn Strategy> = Method::fedscalar(VDistribution::Rademacher, 1).instantiate(0);
+    let fs_ups: Vec<Uplink> = (0..20)
+        .map(|a| fs.encode_delta(a, delta.clone(), 0.0).unwrap())
+        .collect();
+    for agg in Aggregator::ALL {
+        let cfg = RobustConfig {
+            aggregator: agg,
+            ..RobustConfig::mean()
+        };
+        b.run(&format!("robust {} 20 agents fedscalar d=1990", agg.name()), || {
+            aggregate_and_apply_robust(&cfg, fs.as_mut(), &mut be, &mut agg_params, &fs_ups)
+                .unwrap()
+        });
+    }
 
     let mut bq = Bench::quick();
     if std::path::Path::new("artifacts/manifest.txt").exists() {

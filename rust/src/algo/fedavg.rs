@@ -10,6 +10,7 @@ use crate::error::{Error, Result};
 use crate::runtime::Backend;
 use crate::tensor;
 
+/// The uncompressed mean-of-updates baseline (stateless unit struct).
 pub struct FedAvg;
 
 impl Strategy for FedAvg {
@@ -18,6 +19,22 @@ impl Strategy for FedAvg {
     }
 
     // default encode_delta: ships the raw delta as `Uplink::Dense`.
+
+    fn has_dense_contribution(&self) -> bool {
+        true
+    }
+
+    fn dense_contribution(&self, d: usize, up: &Uplink) -> Result<Option<Vec<f32>>> {
+        match up {
+            Uplink::Dense { delta, .. } => {
+                if delta.len() != d {
+                    return Err(Error::shape("delta/params length mismatch"));
+                }
+                Ok(Some(delta.clone()))
+            }
+            _ => Err(Error::invariant("mixed uplink kinds in one round")),
+        }
+    }
 
     fn aggregate_and_apply(
         &mut self,

@@ -19,12 +19,16 @@ use crate::rng::VDistribution;
 use crate::runtime::{Backend, ScalarUpload};
 use crate::tensor;
 
+/// The paper's scalar-communication strategy (Algorithm 1), generalized
+/// to m projections per round.
 pub struct FedScalar {
     dist: VDistribution,
     projections: usize,
 }
 
 impl FedScalar {
+    /// A FedScalar strategy drawing its projection vectors from `dist`,
+    /// uploading `projections` (≥ 1) scalars per agent per round.
     pub fn new(dist: VDistribution, projections: usize) -> Self {
         assert!(projections >= 1, "projections must be >= 1");
         FedScalar { dist, projections }
@@ -50,6 +54,24 @@ impl Strategy for FedScalar {
         Err(Error::invariant(
             "fedscalar runs the fused projected stage; encode_delta is never reached",
         ))
+    }
+
+    fn has_dense_contribution(&self) -> bool {
+        true
+    }
+
+    fn dense_contribution(&self, d: usize, up: &Uplink) -> Result<Option<Vec<f32>>> {
+        let Uplink::Scalar(u) = up else {
+            return Err(Error::invariant("mixed uplink kinds in one round"));
+        };
+        // one client's reconstructed update: (1/m) sum_j rs[j] * v(seed, j)
+        // — the unweighted mean of these across the round is exactly the
+        // ghat `aggregate_and_apply` adds (decode_into's 1/(N*m) weight
+        // with the 1/N factored out to the aggregator).
+        let mut out = vec![0.0f32; d];
+        let mut proj = crate::algo::Projector::new(d, self.dist);
+        proj.decode_into(&mut out, u.seed, &u.rs, 1.0 / u.rs.len().max(1) as f32);
+        Ok(Some(out))
     }
 
     fn aggregate_and_apply(

@@ -11,7 +11,9 @@ use crate::tensor;
 /// Reusable local-SGD workspace.
 #[derive(Debug, Clone)]
 pub struct LocalSgd {
+    /// Local SGD steps per round (the paper's S).
     pub steps: usize,
+    /// Mini-batch size per step (the paper's B).
     pub batch: usize,
     params: Vec<f32>,
     grad: Vec<f32>,
@@ -19,6 +21,8 @@ pub struct LocalSgd {
 }
 
 impl LocalSgd {
+    /// A workspace sized for `mlp`, running `steps` SGD steps on
+    /// `batch`-sized mini-batches per round.
     pub fn new(mlp: &Mlp, steps: usize, batch: usize) -> Self {
         LocalSgd {
             steps,

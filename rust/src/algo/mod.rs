@@ -6,18 +6,13 @@
 //! [`strategy::register`] and implement [`Strategy`]; no coordinator
 //! edits needed (see the Strategy API section of ROADMAP.md).
 
-// Doc debt: this subsystem predates the crate-level `missing_docs`
-// warning (added with the daemon PR, which held coordinator/, runlog/,
-// telemetry/, and daemon/ to it). Public items below still need doc
-// comments; remove this allow once they have them.
-#![allow(missing_docs)]
-
 pub mod fedavg;
 pub mod fedscalar;
 pub mod local_sgd;
 pub mod method;
 pub mod projection;
 pub mod qsgd;
+pub mod robust;
 pub mod signsgd;
 pub mod strategy;
 pub mod svrg;
@@ -29,5 +24,6 @@ pub use projection::{
     decode_all, decode_all_pooled, decode_into, encode, encode_multi, Projector, DECODE_CHUNK,
 };
 pub use qsgd::{QsgdPacket, Quantizer};
+pub use robust::{aggregate_and_apply_robust, Aggregator, RobustConfig};
 pub use strategy::{LocalStage, Strategy, StrategyInfo, BITS_PER_FLOAT, BITS_PER_SEED};
 pub use svrg::LocalSvrg;

@@ -469,29 +469,35 @@ pub mod naive {
 /// fused kernels need no scratch buffer, this is now just a typed handle.
 #[derive(Debug, Clone)]
 pub struct Projector {
+    /// Distribution the projection vectors v are drawn from.
     pub dist: VDistribution,
     dim: usize,
 }
 
 impl Projector {
+    /// A projector for d-dimensional models drawing v from `dist`.
     pub fn new(dim: usize, dist: VDistribution) -> Self {
         Projector { dist, dim }
     }
 
+    /// The model dimension d this projector was built for.
     pub fn dim(&self) -> usize {
         self.dim
     }
 
+    /// One scalar r = ⟨delta, v(seed)⟩ (panics on dimension mismatch).
     pub fn encode(&mut self, delta: &[f32], seed: u32) -> f32 {
         assert_eq!(delta.len(), self.dim);
         encode(delta, seed, self.dist)
     }
 
+    /// `rs[j] = ⟨delta, v(seed+j)⟩` for each of the m sub-seeded vectors.
     pub fn encode_multi(&mut self, delta: &[f32], seed: u32, rs: &mut [f32]) {
         assert_eq!(delta.len(), self.dim);
         encode_multi(delta, seed, self.dist, rs)
     }
 
+    /// Accumulate `weight · Σ_j rs[j] · v(seed+j)` into `ghat`.
     pub fn decode_into(&mut self, ghat: &mut [f32], seed: u32, rs: &[f32], weight: f32) {
         assert_eq!(ghat.len(), self.dim);
         decode_into(ghat, seed, rs, self.dist, weight)

@@ -20,17 +20,21 @@ pub struct QsgdPacket {
     pub levels: Vec<i16>,
     /// Quantization levels s = 2^(bits-1) - 1.
     pub s: u16,
+    /// Wire width per level (sign + magnitude), in 2..=16.
     pub bits: u32,
 }
 
 /// Stateful quantizer (owns the stochastic-rounding RNG).
 #[derive(Debug, Clone)]
 pub struct Quantizer {
+    /// Wire width per level (sign + magnitude), in 2..=16.
     pub bits: u32,
     rng: Xoshiro256,
 }
 
 impl Quantizer {
+    /// A quantizer at `bits` bits per coordinate with its
+    /// stochastic-rounding stream seeded from `seed`.
     pub fn new(bits: u32, seed: u64) -> Self {
         assert!((2..=16).contains(&bits), "bits must be in 2..=16");
         Quantizer {
@@ -39,6 +43,7 @@ impl Quantizer {
         }
     }
 
+    /// Positive quantization levels s = 2^(bits-1) - 1.
     pub fn levels(&self) -> u16 {
         (1u16 << (self.bits - 1)) - 1
     }
@@ -95,6 +100,7 @@ impl Quantizer {
         }
     }
 
+    /// Dequantize into a fresh vector.
     pub fn dequantize(&self, p: &QsgdPacket) -> Vec<f32> {
         let mut out = vec![0.0; p.levels.len()];
         self.dequantize_into(p, &mut out);
@@ -123,6 +129,8 @@ pub struct QsgdStrategy {
 }
 
 impl QsgdStrategy {
+    /// A QSGD strategy at `bits` bits, rounding stream derived from the
+    /// run seed exactly as the pre-strategy engine did.
     pub fn new(bits: u32, run_seed: u64) -> Self {
         QsgdStrategy {
             quantizer: Quantizer::new(bits, crate::rng::SplitMix64::derive(run_seed, 0x9594)),
@@ -147,6 +155,28 @@ impl crate::algo::Strategy for QsgdStrategy {
             packet: self.quantizer.quantize(&delta),
             loss,
         })
+    }
+
+    fn has_dense_contribution(&self) -> bool {
+        true
+    }
+
+    fn dense_contribution(
+        &self,
+        d: usize,
+        up: &crate::coordinator::messages::Uplink,
+    ) -> crate::error::Result<Option<Vec<f32>>> {
+        match up {
+            crate::coordinator::messages::Uplink::Quantized { packet, .. } => {
+                if packet.levels.len() != d {
+                    return Err(crate::error::Error::shape("packet/params length mismatch"));
+                }
+                Ok(Some(self.quantizer.dequantize(packet)))
+            }
+            _ => Err(crate::error::Error::invariant(
+                "mixed uplink kinds in one round",
+            )),
+        }
     }
 
     fn aggregate_and_apply(

@@ -1,0 +1,498 @@
+//! Byzantine-robust server-side aggregation policies.
+//!
+//! FedScalar's server multiplies every uploaded scalar by its regenerated
+//! d-length projection, so one adversarial scalar is amplified by
+//! ‖v‖² ≈ d on reconstruction — the dimension-free uplink is uniquely
+//! fragile to payload-level lies, and the paper's convergence analysis
+//! assumes honest agents. This module is the *semantic* tier of the
+//! robustness stack (CRC framing catches transport bit-flips, the
+//! finite-value screen catches NaN/Inf payloads at delivery): the server
+//! combines the round's per-client updates with an outlier-resistant
+//! estimator instead of the plain mean.
+//!
+//! ## Policies
+//!
+//! * [`Aggregator::Mean`] (default) — delegate to the strategy's own
+//!   [`Strategy::aggregate_and_apply`], bit-identical to the pre-robust
+//!   pipeline. Zero overhead, zero resilience.
+//! * [`Aggregator::MedianOfMeans`] — partition the round's clients into
+//!   fixed consecutive groups (shape a pure function of the client count,
+//!   capped at [`DECODE_CHUNK`] so it lines up with the decode pipeline's
+//!   macro-chunk), take each group's coordinate mean, then the
+//!   coordinate-wise median of the group means. Tolerates a minority of
+//!   arbitrary lies at ~5× the mean's variance cost.
+//! * [`Aggregator::TrimmedMean`] — coordinate-wise: sort the n client
+//!   values, drop ⌊trim·n⌋ from each end, average the rest.
+//! * [`Aggregator::NormClip`] — scale any client update whose L2 norm
+//!   exceeds τ down to norm τ (τ = `robust.clip`, or the median client
+//!   norm when the config leaves it at 0 = auto), then take the mean.
+//!   Defangs scaling attacks; no help against sign flips.
+//!
+//! ## Determinism contract
+//!
+//! Every policy is a pure, serial function of the uplink list in
+//! active-client order: group shapes are compile-time / client-count
+//! derived (NEVER `fed.threads`), orderings use [`f64::total_cmp`] (a
+//! total order — identical bits sort identically on every platform), and
+//! all accumulation is left-to-right f64. `RunHistory` therefore stays
+//! bit-identical across thread counts and between the sequential and
+//! distributed engines, exactly like the mean path.
+//!
+//! The non-mean policies see the round through
+//! [`Strategy::dense_contribution`] — one unit-weight d-vector per client
+//! whose unweighted mean reproduces what the strategy's own aggregate
+//! would apply. SignSGD has no such per-client dense form (its majority
+//! vote is already a robust combine of sorts); the engines reject
+//! non-`mean` aggregators for it at construction.
+
+use crate::algo::projection::DECODE_CHUNK;
+use crate::algo::strategy::{mean_loss, Strategy};
+use crate::coordinator::messages::Uplink;
+use crate::error::{Error, Result};
+use crate::runtime::Backend;
+use crate::tensor;
+
+/// Which robust combine the server runs over a round's client updates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Aggregator {
+    /// The strategy's own aggregate (bit-identical to the pre-robust
+    /// pipeline). The default.
+    #[default]
+    Mean,
+    /// Median of fixed-group coordinate means.
+    MedianOfMeans,
+    /// Coordinate-wise trimmed mean (`robust.trim` fraction per end).
+    TrimmedMean,
+    /// Mean of norm-clipped updates (`robust.clip`, 0 = median-norm auto).
+    NormClip,
+}
+
+impl Aggregator {
+    /// Every policy, in documentation order.
+    pub const ALL: [Aggregator; 4] = [
+        Aggregator::Mean,
+        Aggregator::MedianOfMeans,
+        Aggregator::TrimmedMean,
+        Aggregator::NormClip,
+    ];
+
+    /// Canonical config/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Aggregator::Mean => "mean",
+            Aggregator::MedianOfMeans => "median-of-means",
+            Aggregator::TrimmedMean => "trimmed-mean",
+            Aggregator::NormClip => "norm-clip",
+        }
+    }
+
+    /// Parse a config/CLI name (whitespace/case canonicalized like every
+    /// parser in the crate).
+    pub fn parse(s: &str) -> Result<Aggregator> {
+        let c = crate::rng::canon(s);
+        Aggregator::ALL
+            .into_iter()
+            .find(|a| a.name() == c)
+            .ok_or_else(|| {
+                Error::config(format!(
+                    "unknown robust.aggregator {s:?} \
+                     (expected mean, median-of-means, trimmed-mean, or norm-clip)"
+                ))
+            })
+    }
+
+    /// Does this policy combine per-client dense contributions (i.e.
+    /// require [`Strategy::dense_contribution`] to return `Some`)?
+    pub fn needs_dense(self) -> bool {
+        self != Aggregator::Mean
+    }
+}
+
+/// The `[robust]` config table: which aggregator the server runs and its
+/// policy knobs. `mean()` (the default) is bit-identical to a build
+/// without this module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RobustConfig {
+    /// The combine policy.
+    pub aggregator: Aggregator,
+    /// Trimmed-mean: fraction of clients trimmed from EACH end of every
+    /// coordinate's sorted value list, in `[0, 0.5)`. Ignored by the
+    /// other policies.
+    pub trim: f64,
+    /// Norm-clip: the clip threshold τ; `0.0` means auto (the median
+    /// client-update norm of the round). Ignored by the other policies.
+    pub clip: f64,
+}
+
+impl RobustConfig {
+    /// The default: plain mean aggregation, standard knob values.
+    pub fn mean() -> Self {
+        RobustConfig {
+            aggregator: Aggregator::Mean,
+            trim: 0.1,
+            clip: 0.0,
+        }
+    }
+
+    /// Reject out-of-range knobs (call after parsing).
+    pub fn validate(&self) -> Result<()> {
+        if !self.trim.is_finite() || !(0.0..0.5).contains(&self.trim) {
+            return Err(Error::config(format!(
+                "robust.trim must be in [0, 0.5), got {}",
+                self.trim
+            )));
+        }
+        if !self.clip.is_finite() || self.clip < 0.0 {
+            return Err(Error::config(format!(
+                "robust.clip must be finite and >= 0 (0 = auto), got {}",
+                self.clip
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Default for RobustConfig {
+    fn default() -> Self {
+        RobustConfig::mean()
+    }
+}
+
+/// Aggregate one round of uplinks into `params` under the configured
+/// policy — THE hook both engines call in place of a direct
+/// [`Strategy::aggregate_and_apply`]. `mean` delegates to the strategy
+/// untouched (bit-identical); the robust policies collect each client's
+/// [`Strategy::dense_contribution`], combine deterministically, and apply
+/// the result. Returns the round's mean client loss either way (the
+/// engines' loss side channel is policy-independent).
+pub fn aggregate_and_apply_robust(
+    cfg: &RobustConfig,
+    strategy: &mut dyn Strategy,
+    backend: &mut dyn Backend,
+    params: &mut [f32],
+    uplinks: &[Uplink],
+) -> Result<f64> {
+    if !cfg.aggregator.needs_dense() {
+        return strategy.aggregate_and_apply(backend, params, uplinks);
+    }
+    let loss = mean_loss(uplinks)?; // also rejects the empty round
+    let d = params.len();
+    let mut contribs: Vec<Vec<f32>> = Vec::with_capacity(uplinks.len());
+    for up in uplinks {
+        let c = strategy.dense_contribution(d, up)?.ok_or_else(|| {
+            Error::config(format!(
+                "aggregator {:?} needs per-client dense contributions, \
+                 which this strategy does not expose",
+                cfg.aggregator.name()
+            ))
+        })?;
+        if c.len() != d {
+            return Err(Error::shape("contribution/params length mismatch"));
+        }
+        contribs.push(c);
+    }
+    let update = match cfg.aggregator {
+        Aggregator::Mean => unreachable!("mean delegates above"),
+        Aggregator::MedianOfMeans => median_of_means(&contribs),
+        Aggregator::TrimmedMean => trimmed_mean(&contribs, cfg.trim),
+        Aggregator::NormClip => norm_clip(&contribs, cfg.clip),
+    };
+    tensor::axpy(1.0, &update, params);
+    Ok(loss)
+}
+
+/// Median-of-means group size for an n-client round: ~5 fixed consecutive
+/// groups, each at most [`DECODE_CHUNK`] clients — a pure function of n,
+/// never of `fed.threads`.
+pub fn mom_group_size(n: usize) -> usize {
+    n.div_ceil(5).clamp(1, DECODE_CHUNK)
+}
+
+/// Sort by [`f64::total_cmp`] and return the median (midpoint average on
+/// even length — both picks are deterministic under the total order).
+fn median_by_total_cmp(xs: &mut [f64]) -> f64 {
+    xs.sort_unstable_by(|a, b| a.total_cmp(b));
+    let n = xs.len();
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        0.5 * (xs[n / 2 - 1] + xs[n / 2])
+    }
+}
+
+fn median_of_means(contribs: &[Vec<f32>]) -> Vec<f32> {
+    let n = contribs.len();
+    let d = contribs[0].len();
+    let g = mom_group_size(n);
+    let groups: Vec<(usize, usize)> = (0..n).step_by(g).map(|s| (s, (s + g).min(n))).collect();
+    let mut means = vec![0.0f64; groups.len()];
+    let mut out = vec![0.0f32; d];
+    for (j, o) in out.iter_mut().enumerate() {
+        for (m, &(s, e)) in means.iter_mut().zip(&groups) {
+            let mut acc = 0.0f64;
+            for c in &contribs[s..e] {
+                acc += c[j] as f64;
+            }
+            *m = acc / (e - s) as f64;
+        }
+        *o = median_by_total_cmp(&mut means) as f32;
+    }
+    out
+}
+
+fn trimmed_mean(contribs: &[Vec<f32>], trim: f64) -> Vec<f32> {
+    let n = contribs.len();
+    let d = contribs[0].len();
+    let t = ((trim * n as f64).floor() as usize).min((n - 1) / 2);
+    if t > 0 {
+        // one tally per round: how many client VALUES each coordinate
+        // dropped (2t — t per end), not per-coordinate (d× inflation)
+        crate::telemetry::robust_trimmed((2 * t) as u64);
+    }
+    let mut col = vec![0.0f64; n];
+    let mut out = vec![0.0f32; d];
+    for (j, o) in out.iter_mut().enumerate() {
+        for (ci, c) in col.iter_mut().zip(contribs) {
+            *ci = c[j] as f64;
+        }
+        col.sort_unstable_by(|a, b| a.total_cmp(b));
+        let kept = &col[t..n - t];
+        *o = (kept.iter().sum::<f64>() / kept.len() as f64) as f32;
+    }
+    out
+}
+
+fn norm_clip(contribs: &[Vec<f32>], clip: f64) -> Vec<f32> {
+    let n = contribs.len();
+    let d = contribs[0].len();
+    let norms: Vec<f64> = contribs
+        .iter()
+        .map(|c| c.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt())
+        .collect();
+    let tau = if clip > 0.0 {
+        clip
+    } else {
+        let mut ns = norms.clone();
+        median_by_total_cmp(&mut ns)
+    };
+    let mut acc = vec![0.0f64; d];
+    for (c, &norm) in contribs.iter().zip(&norms) {
+        let scale = if norm > tau && norm > 0.0 {
+            crate::telemetry::robust_clipped();
+            tau / norm
+        } else {
+            1.0
+        };
+        for (a, &v) in acc.iter_mut().zip(c) {
+            *a += scale * v as f64;
+        }
+    }
+    let inv = 1.0 / n as f64;
+    acc.into_iter().map(|v| (v * inv) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::fedavg::FedAvg;
+    use crate::algo::signsgd;
+    use crate::nn::ModelSpec;
+    use crate::runtime::PureRustBackend;
+
+    fn dense(deltas: &[Vec<f32>]) -> Vec<Uplink> {
+        deltas
+            .iter()
+            .map(|d| Uplink::Dense {
+                delta: d.clone(),
+                loss: 1.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn names_round_trip_and_unknowns_rejected() {
+        for a in Aggregator::ALL {
+            assert_eq!(Aggregator::parse(a.name()).unwrap(), a);
+        }
+        assert_eq!(
+            Aggregator::parse(" Median-Of-Means \n").unwrap(),
+            Aggregator::MedianOfMeans
+        );
+        assert!(Aggregator::parse("krum").is_err());
+        assert_eq!(Aggregator::default(), Aggregator::Mean);
+        assert!(!Aggregator::Mean.needs_dense());
+        assert!(Aggregator::NormClip.needs_dense());
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_knobs() {
+        let mut c = RobustConfig::mean();
+        assert!(c.validate().is_ok());
+        c.trim = 0.5;
+        assert!(c.validate().is_err());
+        c.trim = f64::NAN;
+        assert!(c.validate().is_err());
+        c.trim = 0.25;
+        assert!(c.validate().is_ok());
+        c.clip = -1.0;
+        assert!(c.validate().is_err());
+        c.clip = f64::INFINITY;
+        assert!(c.validate().is_err());
+        c.clip = 3.0;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn mean_policy_delegates_bit_identically() {
+        let mut be = PureRustBackend::new(&ModelSpec::default());
+        let ups = dense(&[vec![1.0; 8], vec![3.0; 8]]);
+        let mut direct = vec![0.5f32; 8];
+        let mut via_robust = direct.clone();
+        let loss_a = FedAvg
+            .aggregate_and_apply(&mut be, &mut direct, &ups)
+            .unwrap();
+        let loss_b = aggregate_and_apply_robust(
+            &RobustConfig::mean(),
+            &mut FedAvg,
+            &mut be,
+            &mut via_robust,
+            &ups,
+        )
+        .unwrap();
+        assert_eq!(loss_a.to_bits(), loss_b.to_bits());
+        for (a, b) in direct.iter().zip(&via_robust) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn group_shape_is_pure_in_client_count() {
+        assert_eq!(mom_group_size(1), 1);
+        assert_eq!(mom_group_size(5), 1);
+        assert_eq!(mom_group_size(6), 2);
+        assert_eq!(mom_group_size(50), 10);
+        // capped at the decode macro-chunk for huge fleets
+        assert_eq!(mom_group_size(100_000), DECODE_CHUNK);
+    }
+
+    #[test]
+    fn median_of_means_shrugs_off_a_lying_minority() {
+        // 9 honest clients around 1.0, one liar at 1e6: the mean is
+        // dragged five orders of magnitude; MoM stays near 1
+        let mut deltas: Vec<Vec<f32>> = (0..9).map(|i| vec![1.0 + 0.01 * i as f32; 4]).collect();
+        deltas.push(vec![1.0e6; 4]);
+        let ups = dense(&deltas);
+        let mut be = PureRustBackend::new(&ModelSpec::default());
+        let cfg = RobustConfig {
+            aggregator: Aggregator::MedianOfMeans,
+            ..RobustConfig::mean()
+        };
+        let mut params = vec![0.0f32; 4];
+        aggregate_and_apply_robust(&cfg, &mut FedAvg, &mut be, &mut params, &ups).unwrap();
+        for &p in &params {
+            assert!((0.9..1.2).contains(&p), "MoM dragged to {p}");
+        }
+        let mut mean_params = vec![0.0f32; 4];
+        FedAvg
+            .aggregate_and_apply(&mut be, &mut mean_params, &ups)
+            .unwrap();
+        assert!(mean_params[0] > 1.0e4, "mean should be poisoned");
+    }
+
+    #[test]
+    fn trimmed_mean_drops_both_tails() {
+        // n = 5, trim 0.2 -> 1 from each end: [-100, 1, 2, 3, 100] -> 2
+        let deltas = vec![
+            vec![-100.0f32],
+            vec![1.0],
+            vec![2.0],
+            vec![3.0],
+            vec![100.0],
+        ];
+        let cfg = RobustConfig {
+            aggregator: Aggregator::TrimmedMean,
+            trim: 0.2,
+            ..RobustConfig::mean()
+        };
+        let mut be = PureRustBackend::new(&ModelSpec::default());
+        let mut params = vec![0.0f32; 1];
+        aggregate_and_apply_robust(&cfg, &mut FedAvg, &mut be, &mut params, &dense(&deltas))
+            .unwrap();
+        assert!((params[0] - 2.0).abs() < 1e-6, "got {}", params[0]);
+    }
+
+    #[test]
+    fn norm_clip_bounds_the_loud_client() {
+        // two honest unit-norm updates + one at norm 1000 with explicit
+        // clip 1.0: the liar contributes at most norm 1/3 to the mean
+        let deltas = vec![vec![1.0f32, 0.0], vec![0.0, 1.0], vec![1000.0, 0.0]];
+        let cfg = RobustConfig {
+            aggregator: Aggregator::NormClip,
+            clip: 1.0,
+            ..RobustConfig::mean()
+        };
+        let mut be = PureRustBackend::new(&ModelSpec::default());
+        let mut params = vec![0.0f32; 2];
+        aggregate_and_apply_robust(&cfg, &mut FedAvg, &mut be, &mut params, &dense(&deltas))
+            .unwrap();
+        assert!((params[0] - 2.0 / 3.0).abs() < 1e-6, "got {}", params[0]);
+        assert!((params[1] - 1.0 / 3.0).abs() < 1e-6, "got {}", params[1]);
+        // auto mode (clip = 0): tau = median norm = 1, same result
+        let auto = RobustConfig {
+            clip: 0.0,
+            ..cfg
+        };
+        let mut auto_params = vec![0.0f32; 2];
+        aggregate_and_apply_robust(&auto, &mut FedAvg, &mut be, &mut auto_params, &dense(&deltas))
+            .unwrap();
+        for (a, b) in params.iter().zip(&auto_params) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn robust_policies_are_bitwise_deterministic() {
+        let deltas: Vec<Vec<f32>> = (0..7)
+            .map(|i| (0..5).map(|j| ((i * 5 + j) as f32).sin()).collect())
+            .collect();
+        let ups = dense(&deltas);
+        let mut be = PureRustBackend::new(&ModelSpec::default());
+        for agg in [
+            Aggregator::MedianOfMeans,
+            Aggregator::TrimmedMean,
+            Aggregator::NormClip,
+        ] {
+            let cfg = RobustConfig {
+                aggregator: agg,
+                ..RobustConfig::mean()
+            };
+            let mut a = vec![0.0f32; 5];
+            let mut b = vec![0.0f32; 5];
+            aggregate_and_apply_robust(&cfg, &mut FedAvg, &mut be, &mut a, &ups).unwrap();
+            aggregate_and_apply_robust(&cfg, &mut FedAvg, &mut be, &mut b, &ups).unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{agg:?} not deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_free_strategy_rejected_by_robust_policies() {
+        let mut s = signsgd::SignSgd::new(0.01);
+        let mut be = PureRustBackend::new(&ModelSpec::default());
+        let mut params = vec![0.0f32; 4];
+        let ups = vec![Uplink::Signs {
+            d: 4,
+            words: vec![0b1010],
+            loss: 0.0,
+        }];
+        let cfg = RobustConfig {
+            aggregator: Aggregator::MedianOfMeans,
+            ..RobustConfig::mean()
+        };
+        let err = aggregate_and_apply_robust(&cfg, &mut s, &mut be, &mut params, &ups)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("dense"), "unexpected error: {err}");
+    }
+}

@@ -18,11 +18,13 @@ use crate::runtime::Backend;
 /// Default server step size (the magnitude information signs discard).
 pub const DEFAULT_GAMMA: f32 = 1e-3;
 
+/// SignSGD-with-majority-vote as a [`Strategy`](crate::algo::Strategy).
 pub struct SignSgd {
     gamma: f32,
 }
 
 impl SignSgd {
+    /// A SignSGD strategy applying the vote at server step size `gamma`.
     pub fn new(gamma: f32) -> Self {
         assert!(gamma > 0.0 && gamma.is_finite(), "gamma must be positive");
         SignSgd { gamma }

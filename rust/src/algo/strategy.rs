@@ -49,7 +49,10 @@ use crate::rng::VDistribution;
 use crate::runtime::Backend;
 use std::sync::{OnceLock, RwLock};
 
+/// Wire width of one IEEE-754 single — the unit every strategy's bit
+/// accounting (Table I) is priced in.
 pub const BITS_PER_FLOAT: u64 = 32;
+/// Wire width of the FedScalar sub-seed an agent uploads per round.
 pub const BITS_PER_SEED: u64 = 32;
 
 /// Which client compute stage the engine runs for a strategy.
@@ -61,7 +64,9 @@ pub enum LocalStage {
     /// for the coordinator. The engine builds `Uplink::Scalar` messages
     /// directly; [`Strategy::encode_delta`] is not called.
     Projected {
+        /// Distribution the projection vectors v are drawn from.
         dist: VDistribution,
+        /// Scalars per agent per round (m; the paper's m = 1).
         projections: usize,
     },
     /// The generic stage: the backend returns the raw d-dimensional local
@@ -141,6 +146,32 @@ pub trait Strategy: Send {
         params: &mut [f32],
         uplinks: &[Uplink],
     ) -> Result<f64>;
+
+    /// Robust-aggregation bridge: this ONE client's unit-weight dense
+    /// update — the d-length vector whose unweighted mean over the
+    /// round's uplinks equals what [`Strategy::aggregate_and_apply`]
+    /// would add to `params`. Coordinate-robust aggregators
+    /// (median-of-means, trimmed-mean, norm-clip — see
+    /// [`crate::algo::robust`]) combine these per-client vectors instead
+    /// of taking that plain mean, so the `mean` policy can keep
+    /// delegating to `aggregate_and_apply` bit-identically while the
+    /// robust policies get an honest per-client view. `Ok(None)` (the
+    /// default) means the strategy has no per-client dense form (e.g.
+    /// SignSGD's majority vote); the engine rejects non-`mean`
+    /// aggregators for such strategies when the run is constructed.
+    fn dense_contribution(&self, d: usize, up: &Uplink) -> Result<Option<Vec<f32>>> {
+        let _ = (d, up);
+        Ok(None)
+    }
+
+    /// Does [`Strategy::dense_contribution`] return `Some` for this
+    /// strategy's own uplinks? The engines' construction-time gate: a
+    /// non-`mean` robust aggregator on a strategy without a dense form is
+    /// rejected before the run starts instead of erroring mid-round.
+    /// Must match `dense_contribution` (the default matches the default).
+    fn has_dense_contribution(&self) -> bool {
+        false
+    }
 
     /// Serialize an uplink to its wire frame (distributed path). The
     /// default covers every built-in [`Uplink`] kind.

@@ -14,7 +14,9 @@ use crate::tensor;
 /// Reusable SVRG local-stage workspace.
 #[derive(Debug, Clone)]
 pub struct LocalSvrg {
+    /// Local steps per round (the paper's S).
     pub steps: usize,
+    /// Mini-batch size per step (the paper's B).
     pub batch: usize,
     params: Vec<f32>,
     grad: Vec<f32>,
@@ -24,6 +26,8 @@ pub struct LocalSvrg {
 }
 
 impl LocalSvrg {
+    /// A workspace sized for `mlp`, running `steps` variance-reduced
+    /// steps on `batch`-sized mini-batches per round.
     pub fn new(mlp: &Mlp, steps: usize, batch: usize) -> Self {
         let d = mlp.param_dim();
         LocalSvrg {

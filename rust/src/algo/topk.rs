@@ -26,6 +26,8 @@ use std::collections::HashMap;
 /// Default sparsity when the config just says `topk`.
 pub const DEFAULT_K: usize = 64;
 
+/// Top-k sparsification with per-client error feedback as a
+/// [`Strategy`](crate::algo::Strategy).
 pub struct TopK {
     k: usize,
     /// Per-client error-feedback residuals, keyed by stable client id and
@@ -39,6 +41,8 @@ pub struct TopK {
 }
 
 impl TopK {
+    /// A Top-k strategy keeping the `k` (≥ 1) largest-magnitude
+    /// coordinates per upload.
     pub fn new(k: usize) -> Self {
         assert!(k >= 1, "topk k must be >= 1");
         TopK {
@@ -112,6 +116,29 @@ impl Strategy for TopK {
             r[i as usize] += v;
         }
         Ok(())
+    }
+
+    fn has_dense_contribution(&self) -> bool {
+        true
+    }
+
+    fn dense_contribution(&self, d: usize, up: &Uplink) -> Result<Option<Vec<f32>>> {
+        match up {
+            Uplink::Sparse { idx, vals, .. } => {
+                if idx.len() != vals.len() {
+                    return Err(Error::shape("sparse idx/vals length mismatch"));
+                }
+                let mut out = vec![0.0f32; d];
+                for (&i, &v) in idx.iter().zip(vals) {
+                    let slot = out
+                        .get_mut(i as usize)
+                        .ok_or_else(|| Error::shape("sparse index out of range"))?;
+                    *slot += v;
+                }
+                Ok(Some(out))
+            }
+            _ => Err(Error::invariant("mixed uplink kinds in one round")),
+        }
     }
 
     fn aggregate_and_apply(

@@ -4,8 +4,9 @@
 //! N = 20 agents, K = 1500 rounds, S = 5 local steps, B = 32, α = 0.003,
 //! 0.1 Mbps lognormal uplink, P_tx = 2 W, Digits corpus, d = 1990.
 
-use crate::algo::Method;
-use crate::coordinator::faults::FaultsConfig;
+use crate::algo::robust::RobustConfig;
+use crate::algo::{Aggregator, Method};
+use crate::coordinator::faults::{Attack, FaultsConfig};
 use crate::error::{Error, Result};
 use crate::netsim::{NetworkConfig, Schedule};
 use crate::nn::ModelSpec;
@@ -180,10 +181,16 @@ pub struct ExperimentConfig {
     pub artifacts_dir: PathBuf,
     /// Label-skew Dirichlet alpha; None = IID (the paper's setting).
     pub dirichlet_alpha: Option<f64>,
-    /// Deterministic transport-fault injection (distributed engine only).
-    /// Default = no faults: the sequential engine rejects anything else,
-    /// and the distributed engine is bit-identical to a fault-free build.
+    /// Deterministic transport-fault injection (distributed engine only)
+    /// plus payload-level adversarial client fates (both engines).
+    /// Default = no faults: the sequential engine rejects transport
+    /// injection, and the distributed engine is bit-identical to a
+    /// fault-free build.
     pub faults: FaultsConfig,
+    /// Server-side robust aggregation policy (`[robust]`). The default
+    /// `mean` delegates to the strategy's own combine and is bit-identical
+    /// to a build without this layer.
+    pub robust: RobustConfig,
     /// Event-sourced run journal (`crate::runlog`); disabled by default.
     pub runlog: RunLogConfig,
 }
@@ -200,6 +207,7 @@ impl ExperimentConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             dirichlet_alpha: None,
             faults: FaultsConfig::none(),
+            robust: RobustConfig::mean(),
             runlog: RunLogConfig::default(),
         }
     }
@@ -265,6 +273,7 @@ impl ExperimentConfig {
             }
         }
         self.faults.validate()?;
+        self.robust.validate()?;
         if self.runlog.snapshot_every == 0 {
             return Err(Error::config("runlog.snapshot_every must be > 0"));
         }
@@ -401,6 +410,24 @@ impl ExperimentConfig {
                 .as_bool()
                 .ok_or_else(|| Error::config("faults.respawn must be a boolean"))?;
         }
+        if let Some(v) = doc.get("faults", "adversary") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::config("faults.adversary must be a string"))?;
+            fl.adversary = Attack::parse(s)?;
+        }
+        fl.adversary_fraction = getf("faults", "adversary_fraction", fl.adversary_fraction);
+        fl.adversary_scale = getf("faults", "adversary_scale", fl.adversary_scale);
+
+        let rb = &mut cfg.robust;
+        if let Some(v) = doc.get("robust", "aggregator") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::config("robust.aggregator must be a string"))?;
+            rb.aggregator = Aggregator::parse(s)?;
+        }
+        rb.trim = getf("robust", "trim", rb.trim);
+        rb.clip = getf("robust", "clip", rb.clip);
 
         let rl = &mut cfg.runlog;
         rl.snapshot_every = geti("runlog", "snapshot_every", rl.snapshot_every as i64) as usize;
@@ -502,6 +529,17 @@ impl ExperimentConfig {
         let _ = writeln!(out, "retry_budget = {}", fl.retry_budget);
         let _ = writeln!(out, "timeout_ms = {}", fl.timeout_ms);
         let _ = writeln!(out, "respawn = {}", fl.respawn);
+        if let Some(a) = fl.adversary {
+            out.push_str(&quoted("adversary", a.name())?);
+        }
+        let _ = writeln!(out, "adversary_fraction = {}", fl.adversary_fraction);
+        let _ = writeln!(out, "adversary_scale = {}", fl.adversary_scale);
+
+        let rb = &self.robust;
+        out.push_str("\n[robust]\n");
+        out.push_str(&quoted("aggregator", rb.aggregator.name())?);
+        let _ = writeln!(out, "trim = {}", rb.trim);
+        let _ = writeln!(out, "clip = {}", rb.clip);
 
         out.push_str("\n[runlog]\n");
         let _ = writeln!(out, "snapshot_every = {}", self.runlog.snapshot_every);
@@ -658,6 +696,48 @@ source = "synthetic"
     }
 
     #[test]
+    fn robust_and_adversary_tables_parse_and_default() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+[faults]
+adversary = "random-lie"
+adversary_fraction = 0.3
+adversary_scale = 5.0
+
+[robust]
+aggregator = "median-of-means"
+trim = 0.2
+clip = 1.25
+
+[data]
+source = "synthetic"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.faults.adversary, Some(Attack::RandomLie));
+        assert_eq!(cfg.faults.adversary_fraction, 0.3);
+        assert_eq!(cfg.faults.adversary_scale, 5.0);
+        assert!(cfg.faults.adversary_enabled());
+        assert!(
+            !cfg.faults.enabled(),
+            "payload adversaries must not trip the transport gate"
+        );
+        assert_eq!(cfg.robust.aggregator, Aggregator::MedianOfMeans);
+        assert_eq!(cfg.robust.trim, 0.2);
+        assert_eq!(cfg.robust.clip, 1.25);
+        // `adversary = "none"` is the explicit spelling of the default
+        let off = ExperimentConfig::from_toml_str(
+            "[faults]\nadversary = \"none\"\n\n[data]\nsource = \"synthetic\"\n",
+        )
+        .unwrap();
+        assert_eq!(off.faults.adversary, None);
+        // omitted tables keep the bit-identical defaults
+        let plain = ExperimentConfig::from_toml_str("[data]\nsource = \"synthetic\"\n").unwrap();
+        assert_eq!(plain.robust, RobustConfig::mean());
+        assert!(!plain.faults.adversary_enabled());
+    }
+
+    #[test]
     fn participation_maps_onto_uniform_sampler() {
         let mut cfg = ExperimentConfig::smoke();
         cfg.fed.num_agents = 8;
@@ -694,6 +774,12 @@ source = "synthetic"
             "[faults]\ncorrupt = -0.1\n",
             "[faults]\ndrop = 0.6\ncorrupt = 0.6\n",
             "[faults]\ntimeout_ms = 0\n",
+            "[faults]\nadversary = \"martian\"\n",
+            "[faults]\nadversary_fraction = 1.5\n",
+            "[faults]\nadversary = \"scale\"\nadversary_scale = 0.0\n",
+            "[robust]\naggregator = \"byzantine-bingo\"\n",
+            "[robust]\ntrim = 0.5\n",
+            "[robust]\nclip = -1.0\n",
         ] {
             assert!(
                 ExperimentConfig::from_toml_str(bad).is_err(),
@@ -754,6 +840,12 @@ source = "synthetic"
         cfg.faults.drop = 0.15;
         cfg.faults.crash = 0.05;
         cfg.faults.respawn = true;
+        cfg.faults.adversary = Some(Attack::SignFlip);
+        cfg.faults.adversary_fraction = 0.25;
+        cfg.faults.adversary_scale = 7.5;
+        cfg.robust.aggregator = Aggregator::TrimmedMean;
+        cfg.robust.trim = 0.15;
+        cfg.robust.clip = 2.5;
         cfg.runlog.snapshot_every = 5;
         cfg.runlog.path = Some(PathBuf::from("/tmp/run.jsonl"));
         let text = cfg.to_toml_string().unwrap();

@@ -56,6 +56,20 @@
 //! 1-attempt clean script, and the round protocol is byte-for-byte the
 //! fault-free protocol — the cross-engine equality tests pin that.
 //!
+//! ## Byzantine clients
+//!
+//! Above the transport tier sits the *payload* threat model: a seeded
+//! minority of clients ([`FaultPlan::is_adversary`]) mutates its own
+//! honestly-computed uplink before sealing the envelope
+//! ([`FaultPlan::corrupt_uplink`] — scaling, sign flips, seeded random
+//! lies, NaN/Inf injection, wrong sub-seeds). The CRC cannot catch these:
+//! the bits are intact, the *semantics* lie. The leader answers in two
+//! tiers — a finite-value screen that rejects non-finite payloads as a
+//! [`Delivery::Rejected`] casualty (NACKed like a radio drop), and the
+//! robust aggregation policies of [`crate::algo::robust`] for the lies
+//! that remain finite. Both tiers are deterministic, so an adversarial
+//! run is bit-reproducible and identical across engines.
+//!
 //! Given the same config and run seed, FedScalar/FedAvg training metrics
 //! are bit-identical to the sequential engine (asserted by the
 //! integration suite): same shards, same batch streams, same seeds, same
@@ -86,6 +100,7 @@ use crate::simnet::{Delivery, RoundFaults, RoundReport, Sampler, SimNet};
 use crate::telemetry::{self as tel, Phase};
 use crate::{log_debug, log_info};
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -143,6 +158,14 @@ struct WorkerHandle {
     /// The worker's checkpoint slot (read by the leader after join, at
     /// respawn). Empty unless checkpointing is on.
     dump: Arc<Mutex<Option<WorkerCheckpoint>>>,
+    /// NACK rollbacks this worker has fully processed (dump written
+    /// first, then the increment — so the leader reading `acks ==
+    /// nacks_sent` knows the checkpoint slot is current).
+    acks: Arc<AtomicU64>,
+    /// NACK frames the leader has sent this incarnation. `u64::MAX`
+    /// poisons the pair: the slot can never be proven current again
+    /// (used when leader-side slot seeding fails at respawn).
+    nacks_sent: u64,
 }
 
 /// The distributed (threaded, frame-passing) federated engine.
@@ -159,6 +182,10 @@ pub struct DistributedEngine {
     sampler: Sampler,
     /// The run's fault oracle, shared with every worker.
     plan: Arc<FaultPlan>,
+    /// Run the finite-value screen on decoded uplinks? On whenever a
+    /// payload adversary or a non-`mean` aggregator is configured; off
+    /// otherwise so legacy journals stay byte-identical.
+    screen: bool,
     /// Workers the leader has given up on, keyed by client id (BTreeMap:
     /// deterministic respawn order). Excluded from sampling like
     /// availability-off clients.
@@ -230,6 +257,15 @@ impl DistributedEngine {
         resume: Option<Vec<(Vec<u8>, u64)>>,
     ) -> Result<DistributedEngine> {
         cfg.validate()?;
+        let strategy = cfg.fed.method.instantiate(run_seed);
+        if cfg.robust.aggregator.needs_dense() && !strategy.has_dense_contribution() {
+            return Err(Error::config(format!(
+                "robust.aggregator = {} needs per-client dense contributions, \
+                 which strategy {} does not expose (use aggregator = mean)",
+                cfg.robust.aggregator.name(),
+                cfg.fed.method.name()
+            )));
+        }
         // captured once here: worker threads spawned now (and respawned
         // later) install this same scope, so their hooks land in the
         // run's registry rather than whatever the OS thread inherits
@@ -312,9 +348,10 @@ impl DistributedEngine {
                 run_seed,
             ),
             sampler: Sampler::new(cfg.sampler_policy(), run_seed),
-            strategy: cfg.fed.method.instantiate(run_seed),
+            strategy,
             leader_backend,
             plan,
+            screen: cfg.faults.adversary_enabled() || cfg.robust.aggregator.needs_dense(),
             dead: BTreeMap::new(),
             unsynced: BTreeSet::new(),
             fault_casualty_count: 0,
@@ -511,7 +548,7 @@ impl DistributedEngine {
         let _apply = tel::span(Phase::Apply);
         let up_bits = self.strategy.uplink_bits(self.params.len());
         let down_bits = self.strategy.downlink_bits(self.params.len());
-        let report = if self.plan.enabled() {
+        let mut report = if self.plan.enabled() {
             let outcome: Vec<Option<Delivery>> = scripts
                 .iter()
                 .zip(&uplinks)
@@ -558,6 +595,21 @@ impl DistributedEngine {
         // wire, so the round loss comes from the side channel — over the
         // same survivor set the sequential engine averages)
         let _decode = tel::span(Phase::Decode);
+        // finite-value screen: a payload that arrived intact at the
+        // transport tier (frames complete, CRC clean) but decodes to
+        // NaN/Inf is a semantic lie, not a radio loss — discard it
+        // before aggregation and NACK it exactly like a drop. Gated so
+        // legacy runs keep byte-identical journals.
+        if self.screen {
+            for (i, u) in uplinks.iter().enumerate() {
+                if report.outcome[i].delivered()
+                    && u.as_ref().is_some_and(|u| !u.payload_is_finite())
+                {
+                    report.reject_delivered(i);
+                    tel::screened_reject();
+                }
+            }
+        }
         let survivors: Vec<Uplink> = report
             .filter_survivors(uplinks)
             .into_iter()
@@ -570,7 +622,9 @@ impl DistributedEngine {
             let all: Vec<f32> = losses.iter().flatten().copied().collect();
             crate::algo::strategy::mean_loss_f32(&all)
         } else {
-            self.strategy.aggregate_and_apply(
+            crate::algo::robust::aggregate_and_apply_robust(
+                &self.cfg.robust,
+                self.strategy.as_mut(),
                 &mut self.leader_backend,
                 &mut self.params,
                 &survivors,
@@ -613,9 +667,10 @@ impl DistributedEngine {
                 if !sent && !self.plan.enabled() {
                     return Err(Error::worker_lost(c, k));
                 }
-                // until this worker's next collected envelope, its
-                // checkpoint slot may or may not reflect the rollback —
+                // until this worker rolls back (acked below) or its next
+                // envelope is collected, its checkpoint slot may lag —
                 // hold any journal snapshot until the ambiguity drains
+                self.workers[c].nacks_sent = self.workers[c].nacks_sent.saturating_add(1);
                 self.unsynced.insert(c);
             }
         }
@@ -666,6 +721,14 @@ impl DistributedEngine {
         if self.log.is_none() {
             return Ok(());
         }
+        // snapshot-cadence guarantee: at a boundary, give in-flight NACK
+        // rollbacks a bounded window to land instead of silently skipping
+        // the snapshot. With reliable delivery (no transport faults) every
+        // rollback acks, so the cadence is exact; under faults a lost
+        // NACK still times out into today's skip-and-wait behaviour.
+        if (k + 1) % self.cfg.runlog.snapshot_every == 0 && k + 1 < self.cfg.fed.rounds {
+            self.settle_for_snapshot();
+        }
         let host_phase_ms: Vec<f64> = if span_ns.iter().all(|&n| n == 0) {
             Vec::new()
         } else {
@@ -702,6 +765,28 @@ impl DistributedEngine {
             let _ = tel::write_sidecar(log.path());
         }
         Ok(())
+    }
+
+    /// Drain `unsynced` by waiting (bounded by `faults.timeout_ms`) for
+    /// each lagging worker's rollback ack to catch up with the NACKs the
+    /// leader sent it. The worker increments its ack counter only AFTER
+    /// writing its checkpoint slot, so `acks == nacks_sent` proves the
+    /// slot reflects every rollback — the same proof a collected
+    /// envelope gives, without having to wait a whole round for one.
+    fn settle_for_snapshot(&mut self) {
+        if self.unsynced.is_empty() {
+            return;
+        }
+        let deadline = Instant::now() + Duration::from_millis(self.plan.cfg().timeout_ms);
+        loop {
+            let workers = &self.workers;
+            self.unsynced
+                .retain(|&c| workers[c].acks.load(Ordering::SeqCst) < workers[c].nacks_sent);
+            if self.unsynced.is_empty() || Instant::now() >= deadline {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
     }
 
     /// Full engine state at a quiescent round boundary: leader params +
@@ -963,7 +1048,7 @@ impl DistributedEngine {
                 .take()
                 .unwrap_or_default();
             let resume = ResumeState {
-                checkpoint,
+                checkpoint: checkpoint.clone(),
                 nack_round: info.needs_rollback,
             };
             let fresh = spawn_worker(
@@ -978,9 +1063,29 @@ impl DistributedEngine {
             );
             self.workers[c] = fresh;
             self.respawn_count += 1;
-            // the fresh incarnation's checkpoint slot starts empty and
-            // only fills at its first compute — no snapshot until then
-            self.unsynced.insert(c);
+            // seed the fresh incarnation's checkpoint slot leader-side —
+            // the same restore + deferred-rollback its init performs,
+            // replayed on a scratch strategy instance — so a snapshot
+            // boundary needn't wait for the worker's first compute
+            match seeded_checkpoint(
+                &self.cfg.fed.method,
+                self.run_seed,
+                c,
+                checkpoint,
+                info.needs_rollback,
+            ) {
+                Ok(ck) => {
+                    *self.workers[c].dump.lock().expect("checkpoint lock") = Some(ck);
+                }
+                Err(e) => {
+                    // the worker's own init will fail the same way and
+                    // stay down; poison the sync pair so no snapshot can
+                    // ever claim this slot is current
+                    log_info!("worker {c}: respawn slot seed failed ({e})");
+                    self.workers[c].nacks_sent = u64::MAX;
+                    self.unsynced.insert(c);
+                }
+            }
             log_info!("worker {c}: respawned from checkpoint");
         }
         tel::set_dead_clients(self.dead.len());
@@ -1073,6 +1178,28 @@ impl Drop for DistributedEngine {
     }
 }
 
+/// The checkpoint a just-respawned worker holds after its init:
+/// `restore_state` of the retired incarnation's blob plus the deferred
+/// rollback, replayed on a scratch strategy instance (same derived seed,
+/// so strategy-RNG state in the blob round-trips exactly).
+fn seeded_checkpoint(
+    method: &crate::algo::Method,
+    run_seed: u64,
+    id: usize,
+    checkpoint: WorkerCheckpoint,
+    nack_round: Option<u32>,
+) -> Result<WorkerCheckpoint> {
+    let mut s = method.instantiate(SplitMix64::derive(run_seed ^ 0x9594, id as u64));
+    s.restore_state(&checkpoint.strategy_state)?;
+    if let Some(r) = nack_round {
+        s.on_dropped(id, r as u64)?;
+    }
+    Ok(WorkerCheckpoint {
+        strategy_state: s.save_state(),
+        rounds_computed: checkpoint.rounds_computed,
+    })
+}
+
 #[allow(clippy::too_many_arguments)]
 fn spawn_worker(
     id: usize,
@@ -1087,6 +1214,7 @@ fn spawn_worker(
     let (leader_ep, agent_ep) = duplex();
     let (tel_tx, tel_rx) = std::sync::mpsc::channel::<(u32, f32)>();
     let dump: Arc<Mutex<Option<WorkerCheckpoint>>> = Arc::new(Mutex::new(None));
+    let acks: Arc<AtomicU64> = Arc::new(AtomicU64::new(0));
     // checkpoint slots serve two consumers — fault-layer respawn and
     // journal snapshots; with neither in play the per-round save_state
     // cost is not paid
@@ -1096,6 +1224,7 @@ fn spawn_worker(
     let spec: ModelSpec = cfg.model.clone();
     let worker_plan = plan.clone();
     let worker_dump = dump.clone();
+    let worker_acks = acks.clone();
     let join = std::thread::spawn(move || {
         // worker-side hooks (fault-injection counters, wire counters)
         // must land in the same registry as the leader's
@@ -1114,6 +1243,7 @@ fn spawn_worker(
             run_seed,
             worker_plan,
             worker_dump,
+            worker_acks,
             checkpointing,
             resume,
         );
@@ -1126,6 +1256,8 @@ fn spawn_worker(
         telemetry: tel_rx,
         join: Some(join),
         dump,
+        acks,
+        nacks_sent: 0,
     }
 }
 
@@ -1158,6 +1290,7 @@ fn worker_main(
     run_seed: u64,
     plan: Arc<FaultPlan>,
     dump: Arc<Mutex<Option<WorkerCheckpoint>>>,
+    acks: Arc<AtomicU64>,
     checkpointing: bool,
     resume: Option<ResumeState>,
 ) {
@@ -1297,6 +1430,9 @@ fn worker_main(
                             rounds_computed,
                         });
                     }
+                    // ack AFTER the slot write: the leader reads the
+                    // counter as proof the slot holds the rollback
+                    acks.fetch_add(1, Ordering::SeqCst);
                 } else if last_nacked == Some(n.round) {
                     // a duplicated NACK: the rollback already happened
                 } else {
@@ -1327,7 +1463,7 @@ fn worker_main(
         let model = pending_model.take().expect("ready implies model");
         state.fill_round_batches(steps, batch);
         let stage = strategy.local_stage();
-        let (up, loss) = match stage {
+        let (mut up, loss) = match stage {
             LocalStage::Projected { dist, projections } => {
                 let seed = state.next_projection_seed();
                 let scalar = backend
@@ -1354,6 +1490,11 @@ fn worker_main(
                 (up, loss)
             }
         };
+        // an adversarial client lies HERE — after the honest compute,
+        // before the envelope is sealed — so the cached envelope (and
+        // every retransmission of it) carries the same lie, and the
+        // loss side-channel below stays honest (lies target the payload)
+        plan.corrupt_uplink(pr as u64, id as u32, &mut up);
         let payload = strategy.wire_encode(&up).expect("wire encode");
         let env = wire::seal(
             WireUplinkEnvelope {

@@ -14,6 +14,7 @@
 use crate::algo::{LocalStage, Strategy};
 use crate::config::{DataSource, ExperimentConfig};
 use crate::coordinator::client::ClientState;
+use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::messages::Uplink;
 use crate::data::{dirichlet_partition, iid_partition, Dataset};
 use crate::error::{Error, Result};
@@ -62,6 +63,14 @@ pub struct Engine {
     /// AND — via [`Backend::set_worker_pool`] — by the backend's parallel
     /// `decode_all` reconstruction.
     pool: Option<Arc<WorkerPool>>,
+    /// Payload-level adversarial client fates (`[faults] adversary`);
+    /// `None` = honest fleet. Transport faults stay distributed-only —
+    /// this class is client *behaviour*, so it runs in both engines.
+    faults: Option<FaultPlan>,
+    /// Finite-value screen armed? On exactly when the robustness layer
+    /// is in play (an adversary or a non-mean aggregator), so legacy
+    /// runs keep byte-identical journals.
+    screen: bool,
     /// Run-journal sink (`--log` / `[runlog]`); `None` = journaling off.
     log: Option<RunLog>,
     /// The telemetry scope captured from the constructing thread and
@@ -125,6 +134,15 @@ impl Engine {
                 )
             })
             .collect();
+        let strategy = cfg.fed.method.instantiate(run_seed);
+        if cfg.robust.aggregator.needs_dense() && !strategy.has_dense_contribution() {
+            return Err(Error::config(format!(
+                "robust.aggregator = {} needs per-client dense contributions, \
+                 which strategy {} does not expose (use aggregator = mean)",
+                cfg.robust.aggregator.name(),
+                cfg.fed.method.name()
+            )));
+        }
         let params = backend.init_params(SplitMix64::derive(run_seed, 0xd0d0))?;
         let threads = resolve_threads(cfg.fed.threads);
         let pool = (threads > 1).then(|| Arc::new(WorkerPool::new(threads)));
@@ -141,7 +159,12 @@ impl Engine {
                 run_seed,
             ),
             sampler: Sampler::new(cfg.sampler_policy(), run_seed),
-            strategy: cfg.fed.method.instantiate(run_seed),
+            strategy,
+            faults: cfg
+                .faults
+                .adversary_enabled()
+                .then(|| FaultPlan::new(cfg.faults.clone())),
+            screen: cfg.faults.adversary_enabled() || cfg.robust.aggregator.needs_dense(),
             clients,
             test: Arc::new(test),
             params,
@@ -477,12 +500,26 @@ impl Engine {
             }
         }
 
+        // --- adversarial payload lies ------------------------------------------
+        // a Byzantine client computes (and reports loss telemetry)
+        // honestly, then lies in its uplink payload. Applied serially in
+        // active order after the honest encode — pure in (fault_seed,
+        // round, client), so adversarial runs stay bit-reproducible and
+        // identical between the engines (the distributed worker mutates
+        // at the same point, before wire encode).
+        if let Some(plan) = &self.faults {
+            let _t = telemetry::span(Phase::Encode);
+            for (i, &ci) in active.iter().enumerate() {
+                plan.corrupt_uplink(k as u64, ci as u32, &mut uplinks[i]);
+            }
+        }
+
         // --- network + energy accounting (eqs. 12-13, simnet lifecycle) ------
         // ONE source of truth for the payloads: the strategy's bit
         // accounting (also what the figures' x-axes and the wire tests
         // pin). The simulator charges broadcast, fading, slots, and the
         // deadline cutoff in one event-driven pass.
-        let report = {
+        let mut report = {
             let _t = telemetry::span(Phase::Apply);
             let up_bits = self.strategy.uplink_bits(self.params.len());
             let down_bits = self.strategy.downlink_bits(self.params.len());
@@ -494,11 +531,32 @@ impl Engine {
             report
         };
 
+        // --- finite-value screen ----------------------------------------------
+        // the payload-encoding tier of the robustness stack: an uplink
+        // whose payload decodes to NaN/Inf is rejected before it can
+        // reach any aggregator (one poisoned scalar is amplified by
+        // ‖v‖² ≈ d on reconstruction) and NACKed exactly like a radio
+        // drop. Armed only when the robustness layer is on.
+        if self.screen {
+            let _t = telemetry::span(Phase::Decode);
+            for i in 0..k_active {
+                if report.outcome[i].delivered() && !uplinks[i].payload_is_finite() {
+                    report.reject_delivered(i);
+                    telemetry::screened_reject();
+                }
+            }
+        }
+
         // --- aggregate + apply (survivors only) -------------------------------
         let _decode = telemetry::span(Phase::Decode);
         let train_loss = if report.all_completed() {
-            self.strategy
-                .aggregate_and_apply(self.backend.as_mut(), &mut self.params, &uplinks)?
+            crate::algo::robust::aggregate_and_apply_robust(
+                &self.cfg.robust,
+                self.strategy.as_mut(),
+                self.backend.as_mut(),
+                &mut self.params,
+                &uplinks,
+            )?
         } else {
             // deadline casualties never reached the server: aggregate
             // the survivors; their wasted energy/bits are already
@@ -511,7 +569,9 @@ impl Engine {
             if survivors.is_empty() {
                 crate::algo::strategy::mean_loss_f32(&losses)
             } else {
-                self.strategy.aggregate_and_apply(
+                crate::algo::robust::aggregate_and_apply_robust(
+                    &self.cfg.robust,
+                    self.strategy.as_mut(),
                     self.backend.as_mut(),
                     &mut self.params,
                     &survivors,

@@ -33,10 +33,26 @@
 //! frame sleeps `delay_ms` before transmission. Goodbye frames bypass
 //! injection: a worker's refusal notice is the one signal kept reliable
 //! so "worker refused" never degrades into "transport lost".
+//!
+//! Distinct from the transport tier above, the plan also scripts
+//! **payload-level adversarial clients** ([`Attack`]): a seeded fraction
+//! of the fleet lies about its *update contents* — scaled or sign-flipped
+//! scalars, seeded random garbage, NaN/Inf injection, or encoding under
+//! the wrong sub-seed — while its frames stay perfectly well-formed, so
+//! nothing at the CRC layer can catch them. Adversarial membership is a
+//! pure function of `(fault_seed, client)` (a Byzantine identity is
+//! persistent) and each lie is a pure function of
+//! `(fault_seed, round, client)`, so adversarial runs are bit-reproducible
+//! across re-runs, `fed.threads`, and engines. Because these are
+//! client-*behavior* faults rather than wire faults, they run in BOTH
+//! engines: [`FaultsConfig::enabled`] (the transport gate the sequential
+//! engine rejects) deliberately ignores them — see
+//! [`FaultsConfig::adversary_enabled`].
 
+use crate::coordinator::messages::Uplink;
 use crate::coordinator::transport::{FrameReceiver, FrameSender};
 use crate::error::{Error, Result};
-use crate::rng::SplitMix64;
+use crate::rng::{SplitMix64, Xoshiro256};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -46,6 +62,80 @@ use std::time::Duration;
 const FATE_SALT: u64 = 0xfa7e_0000_0000_0001;
 const CRASH_SALT: u64 = 0xc4a5_0000_0000_0002;
 const BIT_SALT: u64 = 0xb17f_0000_0000_0003;
+/// Salt of the adversarial-membership stream (which clients are Byzantine).
+const ADV_SALT: u64 = 0xadbe_0000_0000_0004;
+/// Salt of the per-(round, client) lie stream (what a Byzantine client sends).
+const LIE_SALT: u64 = 0x11e5_0000_0000_0005;
+
+/// A payload-level adversarial behavior: the client's frames are
+/// well-formed (CRC passes) but the update *contents* lie. Every attack
+/// is deterministic per `(fault_seed, round, client)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Attack {
+    /// Multiply the update payload by `faults.adversary_scale`.
+    Scale,
+    /// Negate the update payload (gradient-ascent client).
+    SignFlip,
+    /// Replace the payload with seeded uniform garbage in
+    /// `[-adversary_scale, adversary_scale]`.
+    RandomLie,
+    /// Inject a non-finite value (NaN on even rounds, +Inf on odd) —
+    /// the finite-screening tier must reject these before aggregation.
+    NonFinite,
+    /// Re-key the payload's sub-seed (FedScalar: the server regenerates
+    /// the *wrong* projection vector v, amplifying the lie by ‖v‖² ≈ d).
+    /// Payloads without a seed degrade to [`Attack::RandomLie`].
+    WrongSeed,
+}
+
+impl Attack {
+    /// Every attack, in the canonical (config/telemetry) order.
+    pub const ALL: [Attack; 5] = [
+        Attack::Scale,
+        Attack::SignFlip,
+        Attack::RandomLie,
+        Attack::NonFinite,
+        Attack::WrongSeed,
+    ];
+
+    /// Canonical config name (`[faults] adversary = "<name>"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Attack::Scale => "scale",
+            Attack::SignFlip => "sign-flip",
+            Attack::RandomLie => "random-lie",
+            Attack::NonFinite => "non-finite",
+            Attack::WrongSeed => "wrong-seed",
+        }
+    }
+
+    /// Parse a canonical name; `"none"` is `Ok(None)`.
+    pub fn parse(s: &str) -> Result<Option<Attack>> {
+        if s == "none" {
+            return Ok(None);
+        }
+        Attack::ALL
+            .into_iter()
+            .find(|a| a.name() == s)
+            .map(Some)
+            .ok_or_else(|| {
+                Error::config(format!(
+                    "unknown faults.adversary {s:?} (expected none, scale, sign-flip, \
+                     random-lie, non-finite, or wrong-seed)"
+                ))
+            })
+    }
+
+    fn telemetry_kind(self) -> crate::telemetry::AttackKind {
+        match self {
+            Attack::Scale => crate::telemetry::AttackKind::Scale,
+            Attack::SignFlip => crate::telemetry::AttackKind::SignFlip,
+            Attack::RandomLie => crate::telemetry::AttackKind::RandomLie,
+            Attack::NonFinite => crate::telemetry::AttackKind::NonFinite,
+            Attack::WrongSeed => crate::telemetry::AttackKind::WrongSeed,
+        }
+    }
+}
 
 /// The `[faults]` config table: per-frame fault probabilities and the
 /// leader's recovery knobs. All probabilities are per-frame (per
@@ -82,6 +172,16 @@ pub struct FaultsConfig {
     /// ([`crate::algo::Strategy::save_state`]) at the start of the next
     /// round, so they rejoin the sampling pool.
     pub respawn: bool,
+    /// The payload-level lie Byzantine clients tell (`None` = honest
+    /// fleet). Unlike the transport probabilities above this runs in
+    /// BOTH engines — see [`FaultsConfig::adversary_enabled`].
+    pub adversary: Option<Attack>,
+    /// Fraction of the fleet that is Byzantine; membership is a pure
+    /// function of `(seed, client)` (see [`FaultPlan::is_adversary`]).
+    pub adversary_fraction: f64,
+    /// Magnitude knob of the lies: the [`Attack::Scale`] multiplier and
+    /// the [`Attack::RandomLie`] amplitude bound.
+    pub adversary_scale: f64,
 }
 
 impl Default for FaultsConfig {
@@ -105,17 +205,29 @@ impl FaultsConfig {
             retry_budget: 3,
             timeout_ms: 30_000,
             respawn: false,
+            adversary: None,
+            adversary_fraction: 0.0,
+            adversary_scale: 10.0,
         }
     }
 
-    /// Is any fault possible? (Gates every per-frame hash, so the
-    /// disabled fault layer costs one branch per send.)
+    /// Is any *transport* fault possible? (Gates every per-frame hash, so
+    /// the disabled fault layer costs one branch per send.) Deliberately
+    /// ignores the adversary knobs: payload lies are client behavior, not
+    /// wire weather, and run in both engines — this is the predicate the
+    /// sequential engine rejects.
     pub fn enabled(&self) -> bool {
         self.drop > 0.0
             || self.corrupt > 0.0
             || self.duplicate > 0.0
             || self.delay > 0.0
             || self.crash > 0.0
+    }
+
+    /// Is any client Byzantine? Orthogonal to [`FaultsConfig::enabled`]:
+    /// an adversary-only config is accepted by BOTH engines.
+    pub fn adversary_enabled(&self) -> bool {
+        self.adversary.is_some() && self.adversary_fraction > 0.0
     }
 
     /// Check every probability is in `[0, 1]`, the per-frame fates sum
@@ -142,6 +254,18 @@ impl FaultsConfig {
         }
         if self.timeout_ms == 0 {
             return Err(Error::config("faults.timeout_ms must be > 0"));
+        }
+        if !(0.0..=1.0).contains(&self.adversary_fraction) || self.adversary_fraction.is_nan() {
+            return Err(Error::config(format!(
+                "faults.adversary_fraction must be a probability in [0, 1], got {}",
+                self.adversary_fraction
+            )));
+        }
+        if !self.adversary_scale.is_finite() || self.adversary_scale <= 0.0 {
+            return Err(Error::config(format!(
+                "faults.adversary_scale must be finite and > 0, got {}",
+                self.adversary_scale
+            )));
         }
         Ok(())
     }
@@ -412,6 +536,140 @@ impl FaultPlan {
             up_air_frames: up_air,
             model_air_frames: model_air,
         }
+    }
+
+    /// Is `client` Byzantine under this plan? Membership is persistent
+    /// (pure in `(fault_seed, client)`, round-independent): a Byzantine
+    /// identity does not flicker between rounds.
+    pub fn is_adversary(&self, client: u32) -> bool {
+        let f = self.cfg.adversary_fraction;
+        if self.cfg.adversary.is_none() || f <= 0.0 {
+            return false;
+        }
+        f >= 1.0 || unit(self.roll(ADV_SALT, client as u64, 0)) < f
+    }
+
+    /// Apply `client`'s scripted lie to its round-`round` uplink, in
+    /// place. Returns the attack applied, or `None` when the client is
+    /// honest or the payload kind offers this attack no surface (Signs
+    /// under Scale — no magnitudes; Opaque — strategy-owned bytes the
+    /// coordinator cannot interpret). Pure in
+    /// `(fault_seed, round, client, payload)`: both engines call this at
+    /// the same point of the client's round (after compute+encode, before
+    /// transmission), so seq == dist bit-for-bit. The `loss` telemetry
+    /// field is never touched — it is simulation bookkeeping, not wire
+    /// payload, and both engines keep it honest.
+    pub fn corrupt_uplink(&self, round: u64, client: u32, up: &mut Uplink) -> Option<Attack> {
+        let attack = self.cfg.adversary?;
+        if !self.is_adversary(client) {
+            return None;
+        }
+        let s = self.cfg.adversary_scale as f32;
+        // the lie stream: seeded per (fault_seed, round, client)
+        let mut lie = Xoshiro256::seed_from(self.roll(LIE_SALT, round, client as u64));
+        // alternate NaN / +Inf so screening sees both encodings
+        let bad = if round % 2 == 0 { f32::NAN } else { f32::INFINITY };
+        let applied = match up {
+            Uplink::Scalar(u) => {
+                match attack {
+                    Attack::Scale => u.rs.iter_mut().for_each(|r| *r *= s),
+                    Attack::SignFlip => u.rs.iter_mut().for_each(|r| *r = -*r),
+                    Attack::RandomLie => {
+                        u.rs.iter_mut().for_each(|r| *r = lie.uniform_in(-s, s))
+                    }
+                    Attack::NonFinite => match u.rs.first_mut() {
+                        Some(r0) => *r0 = bad,
+                        None => return None,
+                    },
+                    // re-key the sub-seed: the server regenerates the
+                    // wrong v (the |1 keeps the xor mask nonzero)
+                    Attack::WrongSeed => {
+                        u.seed ^= (self.roll(LIE_SALT ^ 1, round, client as u64) as u32) | 1
+                    }
+                }
+                attack
+            }
+            Uplink::Dense { delta, .. } => {
+                match attack {
+                    Attack::Scale => delta.iter_mut().for_each(|v| *v *= s),
+                    Attack::SignFlip => delta.iter_mut().for_each(|v| *v = -*v),
+                    // no sub-seed in a dense payload: WrongSeed degrades
+                    // to the random lie
+                    Attack::RandomLie | Attack::WrongSeed => {
+                        delta.iter_mut().for_each(|v| *v = lie.uniform_in(-s, s))
+                    }
+                    Attack::NonFinite => match delta.first_mut() {
+                        Some(v0) => *v0 = bad,
+                        None => return None,
+                    },
+                }
+                attack
+            }
+            Uplink::Quantized { packet, .. } => {
+                match attack {
+                    Attack::Scale => packet.norm *= s,
+                    Attack::SignFlip => packet.norm = -packet.norm,
+                    Attack::RandomLie | Attack::WrongSeed => {
+                        // reroll norm and levels; levels stay in
+                        // [-s_q, s_q] so the frame still round-trips
+                        packet.norm = s * lie.uniform_f32();
+                        let smax = packet.s as i32;
+                        packet.levels.iter_mut().for_each(|l| {
+                            *l = (lie.below((2 * smax + 1) as usize) as i32 - smax) as i16
+                        });
+                    }
+                    Attack::NonFinite => packet.norm = bad,
+                }
+                attack
+            }
+            Uplink::Sparse { vals, .. } => {
+                // indices are left intact (ascending-order wire validity);
+                // the lie lives in the values
+                match attack {
+                    Attack::Scale => vals.iter_mut().for_each(|v| *v *= s),
+                    Attack::SignFlip => vals.iter_mut().for_each(|v| *v = -*v),
+                    Attack::RandomLie | Attack::WrongSeed => {
+                        vals.iter_mut().for_each(|v| *v = lie.uniform_in(-s, s))
+                    }
+                    Attack::NonFinite => match vals.first_mut() {
+                        Some(v0) => *v0 = bad,
+                        None => return None,
+                    },
+                }
+                attack
+            }
+            Uplink::Signs { d, words, .. } => {
+                // one bit per coordinate: no magnitudes to scale and no
+                // floats to poison, so Scale has no surface and NonFinite
+                // degrades to the sign flip; tail padding bits stay zero
+                // so the frame still decodes
+                let n = words.len();
+                let mask = |i: usize| -> u64 {
+                    if i + 1 == n && *d % 64 != 0 {
+                        (1u64 << (*d % 64)) - 1
+                    } else {
+                        !0
+                    }
+                };
+                match attack {
+                    Attack::Scale => return None,
+                    Attack::SignFlip | Attack::NonFinite => {
+                        for i in 0..n {
+                            words[i] ^= mask(i);
+                        }
+                    }
+                    Attack::RandomLie | Attack::WrongSeed => {
+                        for i in 0..n {
+                            words[i] ^= lie.next_u64() & mask(i);
+                        }
+                    }
+                }
+                attack
+            }
+            Uplink::Opaque { .. } => return None,
+        };
+        crate::telemetry::adversary_injected(applied.telemetry_kind());
+        Some(applied)
     }
 }
 
@@ -765,5 +1023,184 @@ mod tests {
         assert!(c.validate().is_ok());
         c.timeout_ms = 0;
         assert!(c.validate().is_err());
+        c.timeout_ms = 100;
+        c.adversary_fraction = 1.2;
+        assert!(c.validate().is_err());
+        c.adversary_fraction = 0.3;
+        c.adversary_scale = 0.0;
+        assert!(c.validate().is_err());
+        c.adversary_scale = f64::INFINITY;
+        assert!(c.validate().is_err());
+        c.adversary_scale = 10.0;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn adversary_gate_is_orthogonal_to_the_transport_gate() {
+        let mut c = FaultsConfig::none();
+        assert!(!c.enabled() && !c.adversary_enabled());
+        c.adversary = Some(Attack::Scale);
+        c.adversary_fraction = 0.4;
+        assert!(
+            !c.enabled(),
+            "payload lies must not trip the transport gate the sequential engine rejects"
+        );
+        assert!(c.adversary_enabled());
+        c.adversary = None;
+        assert!(!c.adversary_enabled());
+    }
+
+    #[test]
+    fn attack_names_round_trip() {
+        for a in Attack::ALL {
+            assert_eq!(Attack::parse(a.name()).unwrap(), Some(a));
+        }
+        assert_eq!(Attack::parse("none").unwrap(), None);
+        assert!(Attack::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn adversarial_membership_is_persistent_and_fraction_shaped() {
+        let p = plan(|c| {
+            c.seed = 11;
+            c.adversary = Some(Attack::SignFlip);
+            c.adversary_fraction = 0.25;
+        });
+        let n = 4000u32;
+        let bad = (0..n).filter(|&c| p.is_adversary(c)).count() as f64;
+        assert!((bad / n as f64 - 0.25).abs() < 0.05, "{bad}");
+        for c in 0..64 {
+            assert_eq!(p.is_adversary(c), p.is_adversary(c), "membership flickered");
+        }
+        let all = plan(|c| {
+            c.adversary = Some(Attack::SignFlip);
+            c.adversary_fraction = 1.0;
+        });
+        assert!((0..32).all(|c| all.is_adversary(c)));
+        let none = plan(|c| {
+            c.adversary_fraction = 1.0; // no attack chosen -> honest fleet
+        });
+        assert!(!(0..32).any(|c| none.is_adversary(c)));
+    }
+
+    #[test]
+    fn lies_are_deterministic_and_leave_loss_honest() {
+        for attack in Attack::ALL {
+            let p = plan(|c| {
+                c.seed = 21;
+                c.adversary = Some(attack);
+                c.adversary_fraction = 1.0;
+                c.adversary_scale = 8.0;
+            });
+            let clean = Uplink::Scalar(crate::runtime::ScalarUpload {
+                seed: 77,
+                rs: vec![0.5, -0.25],
+                loss: 1.25,
+                delta_sq: 0.125,
+            });
+            let mut a = clean.clone();
+            let mut b = clean.clone();
+            assert_eq!(p.corrupt_uplink(3, 4, &mut a), Some(attack));
+            assert_eq!(p.corrupt_uplink(3, 4, &mut b), Some(attack));
+            let (Uplink::Scalar(ua), Uplink::Scalar(ub), Uplink::Scalar(uc)) = (&a, &b, &clean)
+            else {
+                unreachable!()
+            };
+            assert_eq!(ua.seed, ub.seed);
+            assert_eq!(ua.rs.len(), ub.rs.len());
+            for (x, y) in ua.rs.iter().zip(&ub.rs) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{attack:?} lie not reproducible");
+            }
+            assert_eq!(ua.loss, uc.loss, "loss telemetry must stay honest");
+            assert_eq!(ua.delta_sq, uc.delta_sq);
+            let changed = ua.seed != uc.seed
+                || ua.rs.iter().zip(&uc.rs).any(|(x, y)| x.to_bits() != y.to_bits());
+            assert!(changed, "{attack:?} must actually mutate a scalar payload");
+        }
+    }
+
+    #[test]
+    fn attack_surfaces_match_the_payload_kinds() {
+        let p = |attack| {
+            plan(|c| {
+                c.seed = 5;
+                c.adversary = Some(attack);
+                c.adversary_fraction = 1.0;
+                c.adversary_scale = 4.0;
+            })
+        };
+        // non-finite injection alternates NaN (even rounds) / Inf (odd)
+        let mut u = Uplink::Dense {
+            delta: vec![0.1, 0.2],
+            loss: 0.0,
+        };
+        p(Attack::NonFinite).corrupt_uplink(0, 0, &mut u);
+        let Uplink::Dense { delta, .. } = &u else { unreachable!() };
+        assert!(delta[0].is_nan());
+        assert!(!u.payload_is_finite());
+        let mut u = Uplink::Dense {
+            delta: vec![0.1, 0.2],
+            loss: 0.0,
+        };
+        p(Attack::NonFinite).corrupt_uplink(1, 0, &mut u);
+        let Uplink::Dense { delta, .. } = &u else { unreachable!() };
+        assert!(delta[0].is_infinite());
+
+        // sparse lies keep the wire-validity invariant: indices untouched
+        let mut u = Uplink::Sparse {
+            idx: vec![3, 9, 17],
+            vals: vec![1.0, -2.0, 0.5],
+            loss: 0.0,
+        };
+        p(Attack::RandomLie).corrupt_uplink(2, 1, &mut u);
+        let Uplink::Sparse { idx, vals, .. } = &u else { unreachable!() };
+        assert_eq!(idx, &vec![3, 9, 17]);
+        assert!(vals.iter().all(|v| v.abs() <= 4.0));
+
+        // sign-word lies keep the zero-tail invariant wire decode checks
+        let d = 70; // 64 + 6: one full word + a 6-bit tail
+        let mut u = Uplink::Signs {
+            d,
+            words: vec![!0u64, 0x3f],
+            loss: 0.0,
+        };
+        assert_eq!(
+            p(Attack::SignFlip).corrupt_uplink(0, 0, &mut u),
+            Some(Attack::SignFlip)
+        );
+        let Uplink::Signs { words, .. } = &u else { unreachable!() };
+        assert_eq!(words[0], 0, "all 64 signs flipped");
+        assert_eq!(words[1] & !0x3f, 0, "tail padding must stay zero");
+        // scale has no surface on sign words
+        let mut u2 = Uplink::Signs {
+            d,
+            words: vec![1, 2],
+            loss: 0.0,
+        };
+        assert_eq!(p(Attack::Scale).corrupt_uplink(0, 0, &mut u2), None);
+
+        // quantized random lies keep levels within the wire's level range
+        let mut q = crate::algo::Quantizer::new(8, 0);
+        let packet = q.quantize(&[0.5f32, -0.25, 0.125]);
+        let smax = packet.s as i16;
+        let mut u = Uplink::Quantized { packet, loss: 0.0 };
+        p(Attack::WrongSeed).corrupt_uplink(4, 2, &mut u);
+        let Uplink::Quantized { packet, .. } = &u else { unreachable!() };
+        assert!(packet.levels.iter().all(|&l| l.abs() <= smax));
+        assert!(packet.norm.is_finite());
+
+        // an honest client's payload is never touched
+        let honest = plan(|c| {
+            c.seed = 5;
+            c.adversary = Some(Attack::RandomLie);
+            c.adversary_fraction = 0.0;
+        });
+        let mut u = Uplink::Dense {
+            delta: vec![1.0],
+            loss: 0.0,
+        };
+        assert_eq!(honest.corrupt_uplink(0, 0, &mut u), None);
+        let Uplink::Dense { delta, .. } = &u else { unreachable!() };
+        assert_eq!(delta[0], 1.0);
     }
 }

@@ -61,6 +61,23 @@ impl Uplink {
             Uplink::Opaque { loss, .. } => *loss,
         }
     }
+
+    /// Is every *payload* value finite? The finite-screening tier of the
+    /// robust aggregation path rejects an uplink whose decoded payload
+    /// carries NaN/Inf (one poisoned scalar is amplified by ‖v‖² ≈ d on
+    /// reconstruction) before it can reach any aggregator. Sign words
+    /// carry no floats and opaque payloads are strategy-owned bytes, so
+    /// both screen as finite; the `loss` telemetry field is deliberately
+    /// NOT screened — it never feeds the model update.
+    pub fn payload_is_finite(&self) -> bool {
+        match self {
+            Uplink::Scalar(u) => u.rs.iter().all(|r| r.is_finite()),
+            Uplink::Dense { delta, .. } => delta.iter().all(|v| v.is_finite()),
+            Uplink::Quantized { packet, .. } => packet.norm.is_finite(),
+            Uplink::Sparse { vals, .. } => vals.iter().all(|v| v.is_finite()),
+            Uplink::Signs { .. } | Uplink::Opaque { .. } => true,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -13,8 +13,9 @@
 //!   per-strategy aggregation rules live with the strategies)
 //! * [`engine`]  — the round loop: broadcast -> local stage -> uplink ->
 //!   netsim accounting -> aggregate -> (periodic) evaluation
-//! * [`faults`]  — deterministic transport-fault injection + the round
-//!   protocol's retry oracle (distributed engine only)
+//! * [`faults`]  — deterministic fault injection: transport faults + the
+//!   round protocol's retry oracle (distributed engine only), plus
+//!   payload-level adversarial client fates (both engines)
 
 pub mod checkpoint;
 pub mod client;
@@ -30,6 +31,6 @@ pub use checkpoint::Checkpoint;
 pub use client::ClientState;
 pub use distributed::DistributedEngine;
 pub use engine::{Engine, RunOutput};
-pub use faults::{FaultPlan, FaultsConfig};
+pub use faults::{Attack, FaultPlan, FaultsConfig};
 pub use messages::Uplink;
 pub use wire::{WireGoodbye, WireModel, WireNack, WireRoundPlan, WireUplink, WireUplinkEnvelope};

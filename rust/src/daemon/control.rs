@@ -17,6 +17,13 @@
 //! `round` in replies is the run's **telemetry** round counter — rounds
 //! closed since this daemon (re)attached, not the journal's absolute
 //! position — which keeps the reply lock-free against the run thread.
+//!
+//! Request lines are read through a hard byte cap
+//! ([`MAX_REQUEST_LINE_BYTES`]): the socket faces whatever connects to
+//! it, and an unbounded line read would buffer an attacker's (or a
+//! confused client's) newline-free stream until the allocator gives out.
+//! An over-cap line gets a structured `{"ok": false}` reply and the
+//! connection is dropped.
 
 use super::{submit, RunState, Shared};
 use crate::runlog::json::{self, Json};
@@ -53,15 +60,89 @@ pub(super) fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     super::drain_runs(&shared);
 }
 
+/// The largest request line the control socket will buffer. A `submit`
+/// carries a full experiment-config TOML inline, so the cap is generous
+/// — but it is a cap: past it the daemon answers with a structured
+/// error and hangs up instead of buffering without bound.
+pub const MAX_REQUEST_LINE_BYTES: usize = 1 << 20;
+
+/// One capped line read off the control socket.
+enum LineRead {
+    /// A complete newline-terminated line (newline stripped).
+    Line(Vec<u8>),
+    /// The line outgrew [`MAX_REQUEST_LINE_BYTES`] before a newline.
+    TooLong,
+    /// Clean EOF / hangup / read error: stop serving this connection.
+    Closed,
+}
+
+/// Read one `\n`-terminated line without ever holding more than
+/// `max + BufReader-block` bytes: the un-newlined prefix is discarded
+/// as soon as it passes the cap.
+fn read_line_capped(reader: &mut BufReader<TcpStream>, max: usize) -> LineRead {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let buf = match reader.fill_buf() {
+            Ok(b) => b,
+            Err(_) => return LineRead::Closed,
+        };
+        if buf.is_empty() {
+            return LineRead::Closed; // EOF (a torn final line is dropped)
+        }
+        match buf.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                let over = line.len() + i > max;
+                if !over {
+                    line.extend_from_slice(&buf[..i]);
+                }
+                reader.consume(i + 1);
+                return if over { LineRead::TooLong } else { LineRead::Line(line) };
+            }
+            None => {
+                let n = buf.len();
+                if line.len() + n > max {
+                    reader.consume(n);
+                    return LineRead::TooLong;
+                }
+                line.extend_from_slice(buf);
+                reader.consume(n);
+            }
+        }
+    }
+}
+
 /// Serve one control connection: parse each line, dispatch, reply.
 fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_line_capped(&mut reader, MAX_REQUEST_LINE_BYTES) {
+            LineRead::Closed => break,
+            LineRead::TooLong => {
+                // structured refusal, then hang up: the rest of the
+                // stream is the tail of a request we will not buffer
+                let mut text = err_reply(format!(
+                    "request line exceeds {MAX_REQUEST_LINE_BYTES} bytes"
+                ))
+                .to_json_string();
+                text.push('\n');
+                let _ = writer.write_all(text.as_bytes());
+                break;
+            }
+            LineRead::Line(bytes) => match String::from_utf8(bytes) {
+                Ok(s) => s,
+                Err(_) => {
+                    let mut text =
+                        err_reply("request line is not UTF-8").to_json_string();
+                    text.push('\n');
+                    let _ = writer.write_all(text.as_bytes());
+                    break;
+                }
+            },
+        };
         if line.trim().is_empty() {
             continue;
         }

@@ -51,42 +51,56 @@ pub(super) fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     }
 }
 
+/// Hard cap on a request head (request line + headers). Every route is
+/// a short GET, so anything bigger is malformed or hostile; past the
+/// cap the daemon answers a structured 400 and drops the connection
+/// rather than buffering an unbounded head.
+pub const MAX_REQUEST_HEAD_BYTES: usize = 16 * 1024;
+
 /// Read one request, route it, write one response, close.
 fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>) {
     let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
-    let Some(path) = read_request_path(&mut stream) else {
-        let _ = write_response(&mut stream, 400, "bad request\n");
-        return;
+    let path = match read_request_path(&mut stream) {
+        Ok(p) => p,
+        Err(reason) => {
+            let _ = write_response(&mut stream, 400, &format!("bad request: {reason}\n"));
+            return;
+        }
     };
     let (code, body) = route(&path, &shared);
     let _ = write_response(&mut stream, code, &body);
 }
 
-/// Read until the header terminator and extract the request path from
-/// the request line. GET requests carry no body, so the head is all we
-/// need.
-fn read_request_path(stream: &mut TcpStream) -> Option<String> {
+/// Read until the header terminator (bounded by
+/// [`MAX_REQUEST_HEAD_BYTES`]) and extract the request path from the
+/// request line. GET requests carry no body, so the head is all we
+/// need. `Err` names what was wrong with the request.
+fn read_request_path(stream: &mut TcpStream) -> Result<String, String> {
     let mut head = Vec::new();
     let mut buf = [0u8; 512];
     while !head.windows(4).any(|w| w == b"\r\n\r\n") {
-        if head.len() > 16 * 1024 {
-            return None;
+        if head.len() > MAX_REQUEST_HEAD_BYTES {
+            return Err(format!(
+                "request head exceeds {MAX_REQUEST_HEAD_BYTES} bytes"
+            ));
         }
         match stream.read(&mut buf) {
             Ok(0) => break,
             Ok(n) => head.extend_from_slice(&buf[..n]),
-            Err(_) => return None,
+            Err(_) => return Err("read failed before the header terminator".to_string()),
         }
     }
     let head = String::from_utf8_lossy(&head);
-    let line = head.lines().next()?;
+    let line = head.lines().next().ok_or_else(|| "empty request".to_string())?;
     let mut parts = line.split_whitespace();
-    let method = parts.next()?;
-    let path = parts.next()?;
+    let method = parts.next().ok_or_else(|| "empty request line".to_string())?;
+    let path = parts
+        .next()
+        .ok_or_else(|| "request line has no path".to_string())?;
     if method != "GET" {
-        return None;
+        return Err(format!("method {method:?} not supported (GET only)"));
     }
-    Some(path.to_string())
+    Ok(path.to_string())
 }
 
 /// Dispatch a request path to `(status code, body)`.

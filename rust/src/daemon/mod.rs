@@ -37,8 +37,8 @@
 //!   by the integration suite) makes the choice invisible in the
 //!   metrics.
 
-mod control;
-mod http;
+pub mod control;
+pub mod http;
 
 use crate::config::{DaemonConfig, ExperimentConfig};
 use crate::coordinator::{DistributedEngine, Engine};

@@ -15,15 +15,17 @@
 //!   fedscalar train --method fedscalar-rademacher --rounds 200 --backend xla
 //!   fedscalar train --sampler uniform8 --availability churn0.2 --deadline 2.5
 //!   fedscalar train --log run.jsonl --engine distributed --fault-crash 0.01
+//!   fedscalar train --fault-adversary sign-flip --fault-adversary-fraction 0.2 \
+//!                   --aggregator median-of-means
 //!   fedscalar resume run.jsonl
 //!   fedscalar report run.jsonl
 //!   fedscalar suite --runs 10 --rounds 1500 --out results/
 //!   fedscalar strategies
 //!   fedscalar table1
 
-use fedscalar::algo::Method;
+use fedscalar::algo::{Aggregator, Method};
 use fedscalar::config::{DataSource, ExperimentConfig};
-use fedscalar::coordinator::{DistributedEngine, Engine};
+use fedscalar::coordinator::{Attack, DistributedEngine, Engine};
 use fedscalar::error::{Error, Result};
 use fedscalar::exp::figures::{make_backend, run_figure_suite, Axis, BackendKind, SuiteOptions};
 use fedscalar::exp::table1;
@@ -194,6 +196,26 @@ fn common_cfg(a: &Args) -> Result<ExperimentConfig> {
     if a.get_bool("fault-respawn") {
         cfg.faults.respawn = true;
     }
+    // payload adversaries + robust server combine (both engines; see
+    // `[faults]` adversary keys and the `[robust]` table)
+    if a.provided("fault-adversary") {
+        cfg.faults.adversary = Attack::parse(&a.get("fault-adversary"))?;
+    }
+    if a.provided("fault-adversary-fraction") {
+        cfg.faults.adversary_fraction = a.get_f64("fault-adversary-fraction")?;
+    }
+    if a.provided("fault-adversary-scale") {
+        cfg.faults.adversary_scale = a.get_f64("fault-adversary-scale")?;
+    }
+    if a.provided("aggregator") {
+        cfg.robust.aggregator = Aggregator::parse(&a.get("aggregator"))?;
+    }
+    if a.provided("robust-trim") {
+        cfg.robust.trim = a.get_f64("robust-trim")?;
+    }
+    if a.provided("robust-clip") {
+        cfg.robust.clip = a.get_f64("robust-clip")?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -242,6 +264,21 @@ fn common_args(args: Args) -> Args {
         .opt("fault-retries", "3", "leader retransmission budget per (round, client)")
         .opt("fault-timeout-ms", "30000", "leader receive timeout safety net (ms)")
         .flag("fault-respawn", "respawn dead workers from their checkpoint")
+        // Byzantine clients + robust aggregation (both engines)
+        .opt(
+            "fault-adversary",
+            "none",
+            "payload attack: none|scale|sign-flip|random-lie|non-finite|wrong-seed",
+        )
+        .opt("fault-adversary-fraction", "0", "fraction of the fleet that lies [0,1]")
+        .opt("fault-adversary-scale", "10", "lie magnitude (scale multiplier / random-lie bound)")
+        .opt(
+            "aggregator",
+            "mean",
+            "server combine: mean|median-of-means|trimmed-mean|norm-clip",
+        )
+        .opt("robust-trim", "0.1", "trimmed-mean tail fraction per side [0,0.5)")
+        .opt("robust-clip", "0", "norm-clip threshold (0 = auto: the median client norm)")
 }
 
 fn run_command(cmd: &str, rest: Vec<String>) -> Result<()> {

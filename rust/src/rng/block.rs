@@ -45,6 +45,7 @@ pub struct RademacherWords {
 }
 
 impl RademacherWords {
+    /// Open the sign-word stream of `v(seed)` at word 0.
     pub fn new(seed: u32) -> Self {
         RademacherWords { rng: v_rng(seed) }
     }
@@ -85,6 +86,7 @@ pub struct VStream {
 }
 
 impl VStream {
+    /// Open the `v(seed)` stream at entry 0 for either distribution.
     pub fn new(seed: u32, dist: VDistribution) -> Self {
         VStream {
             dist,

@@ -4,12 +4,15 @@
 
 use super::Xoshiro256;
 
+/// N(0,1) sampler over a caller-owned [`Xoshiro256`], caching the polar
+/// method's second draw.
 #[derive(Debug, Clone, Default)]
 pub struct GaussianSource {
     cached: Option<f32>,
 }
 
 impl GaussianSource {
+    /// An empty source (no cached second draw).
     pub fn new() -> Self {
         GaussianSource { cached: None }
     }

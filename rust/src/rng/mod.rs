@@ -10,12 +10,6 @@
 //! Everything is seedable and reproducible; all experiment entry points
 //! thread explicit seeds so a figure regenerates bit-identically.
 
-// Doc debt: this subsystem predates the crate-level `missing_docs`
-// warning (added with the daemon PR, which held coordinator/, runlog/,
-// telemetry/, and daemon/ to it). Public items below still need doc
-// comments; remove this allow once they have them.
-#![allow(missing_docs)]
-
 mod block;
 mod gaussian;
 mod splitmix;
@@ -46,6 +40,7 @@ pub enum VDistribution {
 }
 
 impl VDistribution {
+    /// Canonical config/CLI name.
     pub fn name(self) -> &'static str {
         match self {
             VDistribution::Normal => "normal",
@@ -53,6 +48,7 @@ impl VDistribution {
         }
     }
 
+    /// Parse a config/CLI name (aliases `gaussian`, `rad` accepted).
     pub fn parse(s: &str) -> Option<Self> {
         match canon(s).as_str() {
             "normal" | "gaussian" => Some(VDistribution::Normal),

@@ -3,16 +3,20 @@
 //! Used to derive well-distributed 256-bit xoshiro states from a single
 //! 64-bit seed, and to split independent per-agent / per-round streams.
 
+/// The SplitMix64 generator (64 bits of state, one multiply-xorshift
+/// mix per draw).
 #[derive(Debug, Clone)]
 pub struct SplitMix64 {
     state: u64,
 }
 
 impl SplitMix64 {
+    /// A generator starting at `seed` (the canonical C initialization).
     pub fn new(seed: u64) -> Self {
         SplitMix64 { state: seed }
     }
 
+    /// Next 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);

@@ -11,6 +11,7 @@
 use super::SplitMix64;
 use std::sync::{Mutex, OnceLock};
 
+/// The xoshiro256++ generator (256 bits of state).
 #[derive(Debug, Clone)]
 pub struct Xoshiro256 {
     s: [u64; 4],
@@ -50,6 +51,7 @@ impl Xoshiro256 {
         Xoshiro256 { s }
     }
 
+    /// Next 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]
@@ -88,6 +90,7 @@ impl Xoshiro256 {
         self.jump(&Jump::by(n));
     }
 
+    /// Next 32-bit draw (the upper half of one 64-bit draw).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32

@@ -12,7 +12,7 @@
 //! ([`super::json`]); non-finite floats are `null` (read back as NaN);
 //! byte blobs (strategy state) and `f32` parameter vectors ride as
 //! lowercase hex of their little-endian bytes; `Delivery` outcomes
-//! compress to one-letter codes `"D"`/`"T"`/`"N"`.
+//! compress to one-letter codes `"D"`/`"T"`/`"N"`/`"R"`.
 
 use super::json::{self, Json};
 use crate::error::{Error, Result};
@@ -329,6 +329,7 @@ fn delivery_code(d: Delivery) -> &'static str {
         Delivery::Delivered => "D",
         Delivery::TransmittedDropped => "T",
         Delivery::NeverStarted => "N",
+        Delivery::Rejected => "R",
     }
 }
 
@@ -337,6 +338,7 @@ fn delivery_parse(code: &str) -> Result<Delivery> {
         "D" => Ok(Delivery::Delivered),
         "T" => Ok(Delivery::TransmittedDropped),
         "N" => Ok(Delivery::NeverStarted),
+        "R" => Ok(Delivery::Rejected),
         other => Err(Error::invariant(format!(
             "journal: unknown delivery code `{other}`"
         ))),
@@ -543,6 +545,7 @@ mod tests {
                 Delivery::Delivered,
                 Delivery::TransmittedDropped,
                 Delivery::NeverStarted,
+                Delivery::Rejected,
             ],
             round_seconds: 3.0625,
             energy_joules: 0.75,
@@ -550,8 +553,8 @@ mod tests {
             downlink_bits: 567_890,
             bcast_seconds: 0.5,
             phase_start_seconds: 1.5,
-            ready_seconds: vec![1.25, 1.5, f64::NAN],
-            finish_seconds: vec![2.0, f64::NAN, f64::NAN],
+            ready_seconds: vec![1.25, 1.5, f64::NAN, 1.75],
+            finish_seconds: vec![2.0, f64::NAN, f64::NAN, 2.25],
             new_dead: vec![4],
             host_phase_ms: vec![0.5, 0.0, 12.25, 0.0, 1.5, 0.125, 3.0],
             record: Some(sample_record(12, f64::NAN)),

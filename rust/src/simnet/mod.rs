@@ -189,6 +189,13 @@ pub enum Delivery {
     /// The client's local compute alone overran the deadline: it never
     /// keyed its radio (no fading draw, no transmit energy, no bits).
     NeverStarted,
+    /// The upload landed intact at the transport layer (frames complete,
+    /// CRC clean) but the server's finite-value screen rejected the
+    /// payload (NaN/Inf — see
+    /// [`Uplink::payload_is_finite`](crate::coordinator::messages::Uplink::payload_is_finite)):
+    /// discarded before aggregation and NACKed exactly like a radio drop.
+    /// The transmit energy and bits were spent in full.
+    Rejected,
 }
 
 impl Delivery {
@@ -249,6 +256,21 @@ impl RoundReport {
             .zip(&self.outcome)
             .filter_map(|(x, &o)| o.delivered().then_some(x))
             .collect()
+    }
+
+    /// Downgrade active-slot `i` from delivered to [`Delivery::Rejected`]
+    /// — the server-side finite screen discarding a payload the radio
+    /// delivered intact. Keeps the `dropped` tally consistent; energy and
+    /// bits are untouched (the frames were transmitted in full). Both
+    /// engines reject through this one helper so the casualty accounting
+    /// can never drift between them.
+    pub fn reject_delivered(&mut self, i: usize) {
+        assert!(
+            self.outcome[i].delivered(),
+            "only a delivered uplink can be screen-rejected"
+        );
+        self.outcome[i] = Delivery::Rejected;
+        self.dropped += 1;
     }
 
     pub(crate) fn empty() -> RoundReport {

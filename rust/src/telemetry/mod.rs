@@ -385,6 +385,26 @@ pub enum FaultKind {
 /// Exposition names for [`FaultKind`] (same order as the enum).
 pub const FAULT_KIND_NAMES: [&str; 5] = ["drop", "corrupt", "duplicate", "delay", "crash"];
 
+/// Payload-level adversarial attack kinds (mirrors
+/// `coordinator::faults::Attack` — semantic lies, not wire faults).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttackKind {
+    /// Update payload multiplied by the adversary scale.
+    Scale = 0,
+    /// Update payload negated.
+    SignFlip = 1,
+    /// Update payload replaced with seeded garbage.
+    RandomLie = 2,
+    /// NaN/Inf injected into the payload.
+    NonFinite = 3,
+    /// Payload encoded under the wrong sub-seed.
+    WrongSeed = 4,
+}
+
+/// Exposition names for [`AttackKind`] (same order as the enum).
+pub const ATTACK_KIND_NAMES: [&str; 5] =
+    ["scale", "sign-flip", "random-lie", "non-finite", "wrong-seed"];
+
 /// Exposition names for `util::logger::Level` (same order as the enum).
 pub const LEVEL_NAMES: [&str; 5] = ["error", "warn", "info", "debug", "trace"];
 
@@ -452,6 +472,15 @@ pub struct Registry {
     pub nacks: Counter,
     /// Faults injected by the fault layer, by [`FaultKind`].
     pub faults: [Counter; FAULT_KIND_NAMES.len()],
+    /// Payload lies injected by scripted adversarial clients, by
+    /// [`AttackKind`].
+    pub adversary: [Counter; ATTACK_KIND_NAMES.len()],
+    /// Uplinks rejected by the finite-value screen (NaN/Inf payloads).
+    pub screened_rejects: Counter,
+    /// Client contributions rescaled by the norm-clip aggregator.
+    pub robust_clipped: Counter,
+    /// Per-coordinate entries discarded by the trimmed-mean aggregator.
+    pub robust_trimmed: Counter,
     /// Logger messages emitted, by level.
     pub log_messages: [Counter; LEVEL_NAMES.len()],
     /// Projection v-stream blocks generated.
@@ -488,6 +517,10 @@ impl Registry {
             retries: Counter::new(),
             nacks: Counter::new(),
             faults: std::array::from_fn(|_| Counter::new()),
+            adversary: std::array::from_fn(|_| Counter::new()),
+            screened_rejects: Counter::new(),
+            robust_clipped: Counter::new(),
+            robust_trimmed: Counter::new(),
             log_messages: std::array::from_fn(|_| Counter::new()),
             projection_blocks: Counter::new(),
             projection_chunks: Counter::new(),
@@ -524,6 +557,12 @@ impl Registry {
         for i in 0..FAULT_KIND_NAMES.len() {
             self.faults[i].add(other.faults[i].get());
         }
+        for i in 0..ATTACK_KIND_NAMES.len() {
+            self.adversary[i].add(other.adversary[i].get());
+        }
+        self.screened_rejects.add(other.screened_rejects.get());
+        self.robust_clipped.add(other.robust_clipped.get());
+        self.robust_trimmed.add(other.robust_trimmed.get());
         for i in 0..LEVEL_NAMES.len() {
             self.log_messages[i].add(other.log_messages[i].get());
         }
@@ -599,6 +638,30 @@ pub fn nack() {
 #[inline]
 pub fn fault_injected(kind: FaultKind) {
     with_registry(|r| r.faults[kind as usize].add(1));
+}
+
+/// A scripted adversarial client told a payload lie of `kind`.
+#[inline]
+pub fn adversary_injected(kind: AttackKind) {
+    with_registry(|r| r.adversary[kind as usize].add(1));
+}
+
+/// The finite-value screen rejected a NaN/Inf uplink before aggregation.
+#[inline]
+pub fn screened_reject() {
+    with_registry(|r| r.screened_rejects.add(1));
+}
+
+/// The norm-clip aggregator rescaled one client contribution.
+#[inline]
+pub fn robust_clipped() {
+    with_registry(|r| r.robust_clipped.add(1));
+}
+
+/// The trimmed-mean aggregator discarded `n` per-coordinate entries.
+#[inline]
+pub fn robust_trimmed(n: u64) {
+    with_registry(|r| r.robust_trimmed.add(n));
 }
 
 /// The logger emitted (passed its level filter) one message at `level`
@@ -812,6 +875,30 @@ pub fn render_prometheus(r: &Registry) -> String {
     );
     prom_family(
         &mut out,
+        "fedscalar_adversary_injected_total",
+        "counter",
+        &counter_rows("attack", &ATTACK_KIND_NAMES, &r.adversary),
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_screened_rejects_total",
+        "counter",
+        &[(None, r.screened_rejects.get().to_string())],
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_robust_clipped_total",
+        "counter",
+        &[(None, r.robust_clipped.get().to_string())],
+    );
+    prom_family(
+        &mut out,
+        "fedscalar_robust_trimmed_total",
+        "counter",
+        &[(None, r.robust_trimmed.get().to_string())],
+    );
+    prom_family(
+        &mut out,
         "fedscalar_log_messages_total",
         "counter",
         &counter_rows("level", &LEVEL_NAMES, &r.log_messages),
@@ -968,6 +1055,28 @@ pub fn snapshot_json(r: &Registry) -> Json {
             r.faults[i].get() as f64,
         );
     }
+    for (i, name) in ATTACK_KIND_NAMES.iter().enumerate() {
+        num(
+            &mut fields,
+            labeled("fedscalar_adversary_injected_total", "attack", name),
+            r.adversary[i].get() as f64,
+        );
+    }
+    num(
+        &mut fields,
+        "fedscalar_screened_rejects_total".into(),
+        r.screened_rejects.get() as f64,
+    );
+    num(
+        &mut fields,
+        "fedscalar_robust_clipped_total".into(),
+        r.robust_clipped.get() as f64,
+    );
+    num(
+        &mut fields,
+        "fedscalar_robust_trimmed_total".into(),
+        r.robust_trimmed.get() as f64,
+    );
     for (i, name) in LEVEL_NAMES.iter().enumerate() {
         num(
             &mut fields,
@@ -1169,6 +1278,10 @@ mod tests {
             "fedscalar_rounds_total",
             "fedscalar_wire_tx_frames_total{tag=\"scalar\"}",
             "fedscalar_faults_injected_total{kind=\"crash\"}",
+            "fedscalar_adversary_injected_total{attack=\"wrong-seed\"}",
+            "fedscalar_screened_rejects_total",
+            "fedscalar_robust_clipped_total",
+            "fedscalar_robust_trimmed_total",
             "fedscalar_log_messages_total{level=\"trace\"}",
             "fedscalar_phase_host_ns_total{phase=\"eval\"}",
             "fedscalar_pool_tasks_total",

@@ -12,7 +12,7 @@
 
 use crate::runlog::json::Json;
 use crate::runlog::Journal;
-use crate::telemetry::{FAULT_KIND_NAMES, MAX_POOL_WORKERS, PHASE_NAMES, TAG_NAMES};
+use crate::telemetry::{ATTACK_KIND_NAMES, FAULT_KIND_NAMES, MAX_POOL_WORKERS, PHASE_NAMES, TAG_NAMES};
 use std::collections::BTreeSet;
 use std::fmt::Write as _;
 use std::path::Path;
@@ -189,6 +189,29 @@ pub fn render(j: &Journal, m: Option<&Json>, sidecar_display: &str) -> String {
         "faults injected:{}",
         if faults.is_empty() { " none" } else { &faults }
     );
+
+    // payload-level adversaries + the server's robust-combine answers
+    let mut lies = String::new();
+    for attack in ATTACK_KIND_NAMES {
+        let n = metric(
+            Some(m),
+            &labeled("fedscalar_adversary_injected_total", "attack", attack),
+        )
+        .unwrap_or(0.0);
+        if n > 0.0 {
+            let _ = write!(lies, " {attack}={n:.0}");
+        }
+    }
+    let screened = metric(Some(m), "fedscalar_screened_rejects_total").unwrap_or(0.0);
+    let clipped = metric(Some(m), "fedscalar_robust_clipped_total").unwrap_or(0.0);
+    let trimmed = metric(Some(m), "fedscalar_robust_trimmed_total").unwrap_or(0.0);
+    if !lies.is_empty() || screened > 0.0 || clipped > 0.0 || trimmed > 0.0 {
+        let _ = writeln!(
+            out,
+            "byzantine: lies{}; screened-rejects={screened:.0} norm-clipped={clipped:.0} trimmed={trimmed:.0}",
+            if lies.is_empty() { " none".to_string() } else { lies }
+        );
+    }
 
     let mut pool_rows = String::new();
     for w in 0..MAX_POOL_WORKERS {

@@ -1,6 +1,6 @@
 //! Chaos suite: the distributed engine under deterministic fault
-//! injection — frame drops, bit-flips, duplicates, delays, and worker
-//! crashes.
+//! injection — frame drops, bit-flips, duplicates, delays, worker
+//! crashes, and payload-level Byzantine lies.
 //!
 //! The invariants under test:
 //! * no fault mix hangs or panics the round protocol; every run
@@ -10,12 +10,16 @@
 //! * `faults = none` is byte-identical to the unfaulted protocol (pinned
 //!   against the sequential engine);
 //! * injected losses stay visible in the accounting: retransmissions and
-//!   in-flight losses inflate the transport byte counters.
+//!   in-flight losses inflate the transport byte counters;
+//! * every payload attack × every uplink encoding is deterministic and
+//!   engine-agnostic; the finite-value screen keeps NaN/Inf payloads out
+//!   of the aggregate; median-of-means keeps a finite converging loss
+//!   under a scaling minority that measurably poisons the plain mean.
 
-use fedscalar::algo::Method;
+use fedscalar::algo::{Aggregator, Method};
 use fedscalar::config::ExperimentConfig;
 use fedscalar::coordinator::engine::run_pure_rust;
-use fedscalar::coordinator::{DistributedEngine, FaultsConfig};
+use fedscalar::coordinator::{Attack, DistributedEngine, FaultPlan, FaultsConfig};
 use fedscalar::metrics::{same_histories, RunHistory};
 use fedscalar::rng::VDistribution;
 
@@ -178,6 +182,185 @@ fn without_respawn_dead_workers_stay_excluded_and_the_run_degrades() {
     // once the pool is empty the active set is empty and eval records
     // carry NaN losses — degradation, not failure
     assert!(h.records.last().unwrap().train_loss.is_nan());
+}
+
+/// The smallest fault seed whose (pure, round-independent) Byzantine
+/// draw marks an acceptable number of the n clients — so the adversarial
+/// tests never depend on one seed's luck: the seed is *searched for*
+/// deterministically, and the search itself proves such draws exist.
+fn seed_with_adversaries(
+    base: &FaultsConfig,
+    n: usize,
+    want: std::ops::RangeInclusive<usize>,
+) -> u64 {
+    (1u64..512)
+        .find(|&s| {
+            let mut f = base.clone();
+            f.seed = s;
+            let plan = FaultPlan::new(f);
+            want.contains(&(0..n).filter(|&id| plan.is_adversary(id as u32)).count())
+        })
+        .expect("no fault seed under 512 draws the wanted adversary count")
+}
+
+#[test]
+fn adversary_sweep_is_reproducible_and_engine_agnostic() {
+    // every payload attack × a scalar-uplink method, a stateful sparse
+    // plug-in, and a quantizer — under the median-of-means combine, which
+    // keeps every history finite so the strict metric equality below
+    // stays meaningful. cross_engine is off for qsgd only because its
+    // stochastic-rounding stream is per-worker in the distributed engine
+    // (same caveat as the fault-free equality tests), not because of the
+    // adversary.
+    let methods = [
+        (Method::fedscalar(VDistribution::Rademacher, 1), true),
+        (Method::topk(16), true),
+        (Method::qsgd(8), false),
+    ];
+    let attacks = [
+        Attack::Scale,
+        Attack::SignFlip,
+        Attack::RandomLie,
+        Attack::NonFinite,
+        Attack::WrongSeed,
+    ];
+    for (method, cross_engine) in methods {
+        for attack in attacks {
+            let mut c = cfg(method.clone(), 6, 5);
+            c.faults.adversary = Some(attack);
+            c.faults.adversary_fraction = 0.4;
+            c.faults.seed = seed_with_adversaries(&c.faults, 5, 1..=2);
+            c.robust.aggregator = Aggregator::MedianOfMeans;
+            // payload lies are NOT transport faults: the sequential
+            // engine accepts this config (it has no wire to fault, but
+            // Byzantine clients exist in both engines)
+            assert!(c.faults.adversary_enabled() && !c.faults.enabled());
+            let tag = format!("{}/{}", method.name(), attack.name());
+            let d1 = run_dist(&c, 5);
+            assert_monotone_rounds(&d1, 6);
+            let d2 = run_dist(&c, 5);
+            assert!(
+                same_histories(&d1, &d2),
+                "{tag}: adversarial run not reproducible"
+            );
+            let mut ct = c.clone();
+            ct.fed.threads = 4;
+            let d4 = run_dist(&ct, 5);
+            assert!(
+                same_histories(&d1, &d4),
+                "{tag}: adversarial run depends on fed.threads"
+            );
+            let s1 = run_pure_rust(&c, 5).unwrap();
+            assert_monotone_rounds(&s1, 6);
+            if cross_engine {
+                assert!(
+                    same_histories(&s1, &d1),
+                    "{tag}: engines disagree under the adversary"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn robust_aggregators_match_across_engines_and_threads() {
+    // no adversary at all: each robust combine on honest uplinks must
+    // still be a pure serial function of the round — bit-identical
+    // between engines and across the leader's decode thread count
+    for agg in [
+        Aggregator::MedianOfMeans,
+        Aggregator::TrimmedMean,
+        Aggregator::NormClip,
+    ] {
+        for method in [Method::fedscalar(VDistribution::Rademacher, 1), Method::topk(16)] {
+            let mut c = cfg(method.clone(), 8, 5);
+            c.robust.aggregator = agg;
+            let tag = format!("{}/{}", method.name(), agg.name());
+            let seq = run_pure_rust(&c, 9).unwrap();
+            let dist = run_dist(&c, 9);
+            assert!(
+                same_histories(&seq, &dist),
+                "{tag}: engines disagree on the robust combine"
+            );
+            let mut ct = c.clone();
+            ct.fed.threads = 4;
+            let dist4 = run_dist(&ct, 9);
+            assert!(
+                same_histories(&seq, &dist4),
+                "{tag}: robust combine depends on fed.threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn median_of_means_survives_the_minority_that_poisons_the_mean() {
+    // a 1-2 client minority scaling its scalars ×200: the paper's server
+    // amplifies each lie by ‖v‖² ≈ d, so the plain mean overshoots the
+    // honest step by well over an order of magnitude every lying round
+    // and the run visibly degrades; median-of-means (5 clients → 5
+    // groups of 1) votes the liars out per coordinate and keeps a
+    // finite, converging loss from the identical lie stream
+    let mut c = cfg(Method::fedscalar(VDistribution::Rademacher, 1), 12, 5);
+    c.faults.adversary = Some(Attack::Scale);
+    c.faults.adversary_fraction = 0.4;
+    c.faults.adversary_scale = 200.0;
+    c.faults.seed = seed_with_adversaries(&c.faults, 5, 1..=2);
+    let mean_run = run_dist(&c, 4);
+    let mut cm = c.clone();
+    cm.robust.aggregator = Aggregator::MedianOfMeans;
+    let mom_run = run_dist(&cm, 4);
+
+    let mom_first = mom_run.records.first().unwrap();
+    let mom_final = mom_run.records.last().unwrap();
+    assert!(
+        mom_run.records.iter().all(|r| r.test_loss.is_finite()),
+        "median-of-means lost finiteness under the scaling minority"
+    );
+    assert!(
+        mom_final.test_loss < mom_first.test_loss,
+        "median-of-means did not converge: {} -> {}",
+        mom_first.test_loss,
+        mom_final.test_loss
+    );
+    let mean_final = mean_run.records.last().unwrap();
+    assert!(
+        !mean_final.test_loss.is_finite() || mean_final.test_loss > 2.0 * mom_final.test_loss,
+        "the mean was not measurably degraded: mean final {} vs MoM final {}",
+        mean_final.test_loss,
+        mom_final.test_loss
+    );
+}
+
+#[test]
+fn non_finite_payloads_are_screened_not_aggregated() {
+    // plain mean, no robust combine: the finite-value screen alone keeps
+    // the poison out. Had one NaN/Inf reached the aggregate, the global
+    // model — and every evaluation after it — would be non-finite. The
+    // rejected client is NACKed like a radio drop, so the stateful
+    // strategy's rollback path is exercised too (top-k), identically in
+    // both engines.
+    for method in [Method::fedscalar(VDistribution::Rademacher, 1), Method::topk(16)] {
+        let mut c = cfg(method.clone(), 8, 4);
+        c.faults.adversary = Some(Attack::NonFinite);
+        c.faults.adversary_fraction = 0.5;
+        c.faults.seed = seed_with_adversaries(&c.faults, 4, 1..=2);
+        let dist = run_dist(&c, 6);
+        assert_monotone_rounds(&dist, 8);
+        assert!(
+            dist.records
+                .iter()
+                .all(|r| r.test_loss.is_finite() && r.train_loss.is_finite()),
+            "{}: a non-finite payload reached the aggregate",
+            method.name()
+        );
+        let seq = run_pure_rust(&c, 6).unwrap();
+        assert!(
+            same_histories(&seq, &dist),
+            "{}: engines disagree on screening",
+            method.name()
+        );
+    }
 }
 
 #[test]

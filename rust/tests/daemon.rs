@@ -285,6 +285,66 @@ fn daemon_hosts_cancels_restarts_and_stays_bit_identical() {
 }
 
 #[test]
+fn daemon_bounds_its_input_reads() {
+    let dir = runs_dir("caps");
+    let daemon = Daemon::start(DaemonConfig {
+        control_addr: "127.0.0.1:0".into(),
+        http_addr: "127.0.0.1:0".into(),
+        runs_dir: dir.clone(),
+    })
+    .expect("start daemon");
+
+    // control socket: a line past the cap earns a structured refusal and
+    // a hangup — the daemon must not buffer the stream without bound
+    {
+        let mut stream = TcpStream::connect(daemon.control_addr()).expect("connect control");
+        let huge = vec![b'x'; fedscalar::daemon::control::MAX_REQUEST_LINE_BYTES + 64];
+        stream.write_all(&huge).expect("send oversized prefix");
+        stream.write_all(b"\n").expect("send newline");
+        let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+        let mut reply = String::new();
+        reader.read_line(&mut reply).expect("read refusal");
+        let reply = json::parse(&reply).expect("parse refusal");
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(false)));
+        assert!(
+            reply
+                .get("error")
+                .and_then(Json::as_str)
+                .is_some_and(|e| e.contains("exceeds")),
+            "refusal must name the cap: {}",
+            reply.to_json_string()
+        );
+        // the connection is dropped after the refusal
+        let mut rest = String::new();
+        reader.read_line(&mut rest).expect("read EOF");
+        assert!(rest.is_empty(), "connection should be closed, got {rest:?}");
+    }
+
+    // a well-formed request on a fresh connection still works
+    let mut ctl = Ctl::connect(daemon.control_addr());
+    ctl.ok(&obj(&[("cmd", Json::Str("list".into()))]));
+
+    // HTTP socket: a request head past the cap earns a 400 naming it
+    {
+        let mut stream = TcpStream::connect(daemon.http_addr()).expect("connect http");
+        let huge = vec![b'y'; fedscalar::daemon::http::MAX_REQUEST_HEAD_BYTES + 64];
+        stream.write_all(b"GET /").expect("request line start");
+        stream.write_all(&huge).expect("oversized path");
+        let mut text = String::new();
+        stream.read_to_string(&mut text).expect("read response");
+        assert!(text.starts_with("HTTP/1.0 400"), "{text}");
+        assert!(text.contains("exceeds"), "{text}");
+    }
+    // and an ordinary GET still answers
+    let (code, _) = http_get(daemon.http_addr(), "/metrics");
+    assert_eq!(code, 200);
+
+    ctl.ok(&obj(&[("cmd", Json::Str("shutdown".into()))]));
+    daemon.wait().expect("daemon wait");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn daemon_rejects_bad_submissions() {
     let dir = runs_dir("reject");
     let daemon = Daemon::start(DaemonConfig {

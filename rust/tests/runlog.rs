@@ -220,6 +220,44 @@ fn distributed_snapshot_restore_under_churn() {
     }
 }
 
+/// With the deadline ON, the straggler is NACKed whenever it is selected,
+/// which used to leave its checkpoint slot "possibly stale" across the
+/// snapshot boundary — and the leader silently skipped the snapshot. The
+/// leader now settles at each boundary: it waits (bounded) for the
+/// worker's rollback ack, which the worker sends only after writing its
+/// slot. With reliable NACK delivery (no transport faults) every rollback
+/// acks, so the journal must carry a snapshot at EVERY cadence boundary,
+/// deadline drops notwithstanding.
+#[test]
+fn distributed_snapshot_cadence_is_exact_under_nacks() {
+    let mut cfg = scenario_cfg(Method::topk(16));
+    let path = tmp("dist_cadence");
+    cfg.runlog.path = Some(path.clone());
+    let _ = run_journaled(EngineKind::Distributed, &cfg, &path);
+    let journal = Journal::parse_file(&path).unwrap();
+    assert!(
+        drops_in(&journal) > 0,
+        "the deadline scenario must record drops"
+    );
+
+    let got: Vec<u64> = std::fs::read_to_string(&path)
+        .unwrap()
+        .lines()
+        .filter_map(|l| match runlog::Event::decode(l) {
+            Ok(runlog::Event::Snapshot(s)) => Some(s.next_round),
+            _ => None,
+        })
+        .collect();
+    let want: Vec<u64> = (1..cfg.fed.rounds as u64)
+        .filter(|k| k % cfg.runlog.snapshot_every as u64 == 0)
+        .collect();
+    assert_eq!(
+        got, want,
+        "snapshot cadence must be exact when NACK rollbacks settle"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
 /// The journal alone must answer "who gated round k": the report names
 /// the deadline casualties this scenario manufactures.
 #[test]

@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# Fail if the number of `allow(missing_docs)` gates under rust/src grows
+# past the recorded baseline — doc debt is allowed to shrink (update the
+# baseline when it does), never to creep back in. The crate-level
+# `missing_docs` warning plus `cargo doc -D warnings` holds every
+# ungated module to full API docs; this script holds the set of gated
+# modules itself.
+#
+#   scripts/check_doc_debt.sh [SRC_DIR] [BASELINE]
+set -euo pipefail
+
+src="${1:-rust/src}"
+baseline="${2:-10}"
+
+python3 - "$src" "$baseline" <<'PY'
+import pathlib
+import sys
+
+src, baseline = pathlib.Path(sys.argv[1]), int(sys.argv[2])
+gated = sorted(
+    str(p)
+    for p in src.rglob("*.rs")
+    if "allow(missing_docs)" in p.read_text()
+)
+if len(gated) > baseline:
+    print(
+        f"{src}: {len(gated)} allow(missing_docs) gate(s), "
+        f"baseline is {baseline} — new public APIs must ship documented:"
+    )
+    for p in gated:
+        print(f"  - {p}")
+    sys.exit(1)
+if len(gated) < baseline:
+    print(
+        f"{src}: {len(gated)} gate(s) < baseline {baseline} — "
+        f"debt shrank; lower the baseline in scripts/check_doc_debt.sh "
+        f"and .github/workflows/ci.yml to lock it in"
+    )
+print(f"{src}: {len(gated)} allow(missing_docs) gate(s) (baseline {baseline})")
+PY
